@@ -1,0 +1,120 @@
+//! Serving example: train briefly, start the TCP scoring server, then act
+//! as a fleet of clients — batched scoring + nearest-neighbour lookups —
+//! and report latency/throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example embeddings_server
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use anyhow::Result;
+use polyglot_gpu::config::Config;
+use polyglot_gpu::coordinator::{prepare_corpus, run_training, RunOptions};
+use polyglot_gpu::runtime::Runtime;
+use polyglot_gpu::server::Server;
+use polyglot_gpu::util::rng::Rng;
+use polyglot_gpu::util::stats::Summary;
+
+fn main() -> Result<()> {
+    // quick training pass to have non-random embeddings to serve
+    let mut cfg = Config::default();
+    cfg.data.tokens_per_language = 40_000;
+    cfg.training.batch = 64;
+    cfg.training.log_every = 0;
+    cfg.server.addr = "127.0.0.1:0".into(); // ephemeral port
+    cfg.server.max_batch = 32;
+    cfg.server.max_wait_ms = 2;
+
+    let artifacts = std::path::PathBuf::from(&cfg.runtime.artifacts_dir);
+    let (vocab, params, window) = {
+        let rt = Runtime::new(&artifacts)?;
+        let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
+        let opts = RunOptions { steps: 150, quiet: true, ..RunOptions::default() };
+        let (trainer, _) = run_training(&rt, &cfg, &corpus, &opts)?;
+        (corpus.vocab, trainer.params_host()?, trainer.dims.window)
+    }; // trainer's PJRT client dropped here; the server owns its own
+
+    let server = Server::start(&cfg.server, artifacts, vocab.clone(), params)?;
+    println!("server on {}", server.addr);
+
+    // --- clients -------------------------------------------------------
+    let n_clients = 4;
+    let reqs_per_client = 200;
+    let addr = server.addr.clone();
+    let vocab_len = vocab.len();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> Result<Summary> {
+                let mut rng = Rng::new(100 + c as u64);
+                let stream = TcpStream::connect(&addr)?;
+                stream.set_nodelay(true)?;
+                let mut writer = stream.try_clone()?;
+                let mut reader = BufReader::new(stream);
+                let mut lat = Summary::new();
+                let mut line = String::new();
+                for _ in 0..reqs_per_client {
+                    let ids: Vec<String> = (0..window)
+                        .map(|_| (2 + rng.below((vocab_len - 2) as u64)).to_string())
+                        .collect();
+                    let t = Instant::now();
+                    writeln!(writer, "SCORE {}", ids.join(" "))?;
+                    line.clear();
+                    reader.read_line(&mut line)?;
+                    lat.push(t.elapsed().as_secs_f64());
+                    assert!(line.starts_with("SCORE "), "bad reply: {line}");
+                }
+                writeln!(writer, "QUIT")?;
+                Ok(lat)
+            })
+        })
+        .collect();
+
+    let mut all = Summary::new();
+    for h in handles {
+        let lat = h.join().expect("client panicked")?;
+        for &s in lat.samples() {
+            all.push(s);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = n_clients * reqs_per_client;
+
+    // one interactive NN query
+    {
+        let stream = TcpStream::connect(&server.addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        let probe = vocab.entries().next().map(|(_, w, _)| w.to_string()).unwrap();
+        writeln!(writer, "NN {probe} 3")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        println!("NN {probe} -> {}", line.trim());
+        writeln!(writer, "QUIT")?;
+    }
+
+    println!(
+        "\n{total} scored requests from {n_clients} clients in {wall:.2} s  ({:.0} req/s)",
+        total as f64 / wall
+    );
+    println!(
+        "latency: mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms",
+        all.mean() * 1e3,
+        all.median() * 1e3,
+        all.percentile(99.0) * 1e3
+    );
+    let st = server.stats();
+    let batches = st.batches.load(std::sync::atomic::Ordering::Relaxed).max(1);
+    println!(
+        "server: {} requests in {} dispatches ({:.1} req/dispatch — dynamic batching)",
+        st.requests.load(std::sync::atomic::Ordering::Relaxed),
+        batches,
+        total as f64 / batches as f64,
+    );
+    server.stop();
+    Ok(())
+}

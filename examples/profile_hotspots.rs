@@ -1,0 +1,100 @@
+//! The paper's methodology, §3, as a runnable narrative:
+//!
+//!   1. baseline the unoptimized backend          (§4.1)
+//!   2. profile → find the hot spot               (§4.2, Table 1)
+//!   3. optimize advanced indexing                (§4.3)
+//!   4. re-measure the training rate              (§4.4)
+//!   5. analyze what limits the optimized backend (§4.5)
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example profile_hotspots
+//! ```
+
+use anyhow::Result;
+use polyglot_gpu::config::{Backend, Config};
+use polyglot_gpu::coordinator::{prepare_corpus, run_training, RunOptions};
+use polyglot_gpu::devicemodel::{NvprofReport, OpStream, GT570};
+use polyglot_gpu::profiler::{OpClass, Profiler};
+use polyglot_gpu::runtime::Runtime;
+
+fn train_rate(cfg: &Config, steps: usize) -> Result<(f64, Runtime)> {
+    let rt = Runtime::new(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
+    let corpus = prepare_corpus(cfg, rt.manifest.main_model.vocab)?;
+    let opts = RunOptions { steps, quiet: true, ..RunOptions::default() };
+    let (_tr, report) = run_training(&rt, cfg, &corpus, &opts)?;
+    Ok((report.rate_mean, rt))
+}
+
+fn main() -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.training.batch = 16; // the paper's default
+    cfg.training.log_every = 0;
+
+    println!("== Step 1: baseline (paper §4.1) ==");
+    cfg.training.backend = Backend::Cpu;
+    let (cpu_rate, _) = train_rate(&cfg, 60)?;
+    cfg.training.backend = Backend::GpuNaive;
+    let (naive_rate, naive_rt) = train_rate(&cfg, 25)?;
+    println!("  cpu backend:       {cpu_rate:9.1} ex/s   (paper: 5512.6)");
+    println!("  gpu-naive backend: {naive_rate:9.1} ex/s   (paper: 1265.8)");
+    println!("  -> the unoptimized backend is {:.1}x slower than cpu", cpu_rate / naive_rate);
+
+    println!("\n== Step 2: profile the naive backend (paper §4.2, Table 1) ==");
+    let mut prof = Profiler::new();
+    for (name, calls, total) in naive_rt.dispatch_stats() {
+        if name.starts_with("scatter_row1") {
+            prof.add_measured(OpClass::AdvancedIncSubtensor, calls, total);
+        } else {
+            let spec = naive_rt.manifest.find(&name)?;
+            prof.add_artifact(&std::fs::read_to_string(&spec.file)?, calls, total);
+        }
+    }
+    println!("{}", prof.render(3));
+    let top = &prof.rows()[0];
+    println!(
+        "  -> hot spot: {} at {:.1}% (paper: GpuAdvancedIncSubtensor1 at 81.7%)",
+        top.class.theano_name(),
+        top.fraction * 100.0
+    );
+
+    println!("== Step 3: optimize advanced indexing (paper §4.3) ==");
+    println!("  (the pallas row-scatter kernel replaces per-row dispatch;");
+    println!("   run `polyglot indexing` for the 1000-row microbenchmark)");
+
+    println!("\n== Step 4: re-measure (paper §4.4) ==");
+    cfg.training.backend = Backend::GpuOpt;
+    let (opt_rate, opt_rt) = train_rate(&cfg, 150)?;
+    println!("  gpu-opt backend:   {opt_rate:9.1} ex/s   (paper: 3742)");
+    println!(
+        "  -> {:.1}x over the naive backend (paper: ~3x); {:.2}x of cpu (paper: 0.68x)",
+        opt_rate / naive_rate,
+        opt_rate / cpu_rate
+    );
+
+    println!("\n== Step 5: limits analysis (paper §4.5) ==");
+    let dims = opt_rt.manifest.main_model.clone();
+    let mut stream = OpStream::new();
+    let mut busy = std::time::Duration::ZERO;
+    let mut wall = std::time::Duration::ZERO;
+    for (name, calls, total) in opt_rt.dispatch_stats() {
+        let spec = opt_rt.manifest.find(&name)?;
+        busy += total;
+        wall += total; // training wall ≈ dispatch wall on the fused backend
+        let io: usize = 16 * dims.window * 4 + 16 * 4 + 4;
+        stream.add_artifact(
+            &std::fs::read_to_string(&spec.file)?,
+            calls,
+            (io as u64, 3),
+            Some(&[dims.vocab, dims.dim]),
+        );
+    }
+    // account for host-side time: wall = examples / rate
+    let wall = std::time::Duration::from_secs_f64(150.0 * 16.0 / opt_rate.max(1.0));
+    let rep = NvprofReport::evaluate(&GT570, &stream, wall, Some(busy));
+    println!("{}", rep.render());
+    println!(
+        "  -> compute utilization is low ({:.1}%; paper: 7.4%): the device idles\n     while the host paces tiny batches — raising batch size raises the rate\n     but slows convergence (Fig 1, `cargo bench` fig1a/fig1b).",
+        rep.compute_utilization * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Writes a tiny corpus to disk, loads it back through the corpus loader,
+//! builds a vocabulary, trains a few hundred steps on the optimized
+//! backend, and prints nearest neighbours for a few words.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use polyglot_gpu::config::Config;
+use polyglot_gpu::coordinator::{prepare_corpus, run_training, RunOptions};
+use polyglot_gpu::corpus::{generator, loader, CorpusSpec};
+use polyglot_gpu::embeddings::EmbeddingStore;
+use polyglot_gpu::runtime::Runtime;
+
+fn main() -> Result<()> {
+    // 1. A corpus. Real users point `data.corpus_path` at their text file;
+    //    here we synthesize one and round-trip it through the loader.
+    let corpus_path = std::env::temp_dir().join("polyglot-quickstart.txt");
+    let synthetic = generator::generate(&CorpusSpec {
+        languages: 2,
+        tokens_per_language: 60_000,
+        lexicon: 2_000,
+        ..CorpusSpec::default()
+    });
+    loader::write_text_file(&corpus_path, &synthetic.sentences)?;
+    println!("corpus: {} tokens -> {}", synthetic.total_tokens(), corpus_path.display());
+
+    // 2. Configuration — everything is a plain struct / TOML file.
+    let mut cfg = Config::default();
+    cfg.data.corpus_path = corpus_path.to_string_lossy().into_owned();
+    cfg.training.batch = 64;
+    cfg.training.lr = 0.1;
+    cfg.training.log_every = 100;
+
+    // 3. Runtime over the AOT artifacts (HLO text compiled via PJRT).
+    let rt = Runtime::new(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
+    println!("vocab: {} types", corpus.vocab.len());
+
+    // 4. Train.
+    let opts = RunOptions { steps: 400, ..RunOptions::default() };
+    let (trainer, report) = run_training(&rt, &cfg, &corpus, &opts)?;
+    println!(
+        "trained {} steps @ {:.0} ex/s, loss {:.3}",
+        report.steps, report.rate_mean, report.final_loss
+    );
+
+    // 5. Inspect the embeddings.
+    let store = EmbeddingStore::from_params(corpus.vocab.clone(), &trainer.params_host()?)?;
+    let probes: Vec<String> = corpus
+        .vocab
+        .entries()
+        .take(3)
+        .map(|(_, w, _)| w.to_string())
+        .collect();
+    for w in probes {
+        let ns = store.neighbors(&w, 3);
+        let pretty: Vec<String> =
+            ns.into_iter().map(|(n, s)| format!("{n} ({s:.2})")).collect();
+        println!("  {w:<14} -> {}", pretty.join(", "));
+    }
+    std::fs::remove_file(&corpus_path).ok();
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! End-to-end training driver — the repo's flagship example.
+//!
+//! Trains the Polyglot window model (V=20480, D=64, H=32 — ~1.3 M params)
+//! on a fresh 3-language synthetic corpus for several hundred steps with
+//! the optimized (pallas-scatter) backend, logging the loss curve and
+//! training rate, evaluating convergence and intrinsic embedding quality,
+//! then saving and reloading a checkpoint through the serving-side store.
+//! The recorded run lives in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_polyglot
+//! ```
+
+use anyhow::Result;
+use polyglot_gpu::config::Config;
+use polyglot_gpu::coordinator::{checkpoint, prepare_corpus, run_training, RunOptions};
+use polyglot_gpu::embeddings::EmbeddingStore;
+use polyglot_gpu::eval::bigram_neighbor_score;
+use polyglot_gpu::runtime::Runtime;
+use polyglot_gpu::util::fmt;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.data.languages = 3;
+    cfg.data.tokens_per_language = 150_000;
+    cfg.training.batch = 64;
+    cfg.training.lr = 0.12;
+    cfg.training.log_every = 0; // we print the curve ourselves
+    cfg.training.converge_threshold = 0.80;
+
+    let rt = Runtime::new(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
+    let dims = rt.manifest.main_model.clone();
+    println!(
+        "model: V={} D={} C={} H={} ({} params)",
+        dims.vocab,
+        dims.dim,
+        dims.window,
+        dims.hidden,
+        fmt::si((dims.vocab * dims.dim
+            + dims.window * dims.dim * dims.hidden
+            + 2 * dims.hidden
+            + 1) as f64)
+    );
+
+    let corpus = prepare_corpus(&cfg, dims.vocab)?;
+    println!(
+        "corpus: {} languages, {} tokens, vocab {}",
+        cfg.data.languages,
+        corpus.tokens,
+        corpus.vocab.len()
+    );
+
+    let opts = RunOptions {
+        steps: 600,
+        eval_every: 50,
+        stop_on_converge: false,
+        quiet: true,
+        ..RunOptions::default()
+    };
+    let (trainer, report) = run_training(&rt, &cfg, &corpus, &opts)?;
+
+    println!("\nloss curve (step, mean recent hinge):");
+    for (step, loss) in report.loss_curve.iter().filter(|(s, _)| s % 60 == 0) {
+        let bar = "#".repeat((loss * 40.0) as usize);
+        println!("  {step:>5}  {loss:.4}  {bar}");
+    }
+    println!(
+        "\n{} steps / {} examples in {} — rate {:.0} ex/s (σ = {:.0}), final loss {:.4}",
+        report.steps,
+        report.examples,
+        fmt::dur(report.wall),
+        report.rate_mean,
+        report.rate_std,
+        report.final_loss
+    );
+    if let Some(c) = &report.converged {
+        println!(
+            "converged (held-out hinge < {:.2}) after {} steps / {} examples / {}",
+            cfg.training.converge_threshold,
+            c.steps,
+            c.examples,
+            fmt::dur(c.wall)
+        );
+    }
+
+    // intrinsic quality: do embeddings reflect the corpus's Markov
+    // structure better than chance?
+    let params = trainer.params_host()?;
+    let score = bigram_neighbor_score(&params.e, params.dim, &corpus.sentences, 500, 7);
+    println!("bigram-neighbor score: {score:.3} (0.5 = chance)");
+
+    // checkpoint round trip + nearest neighbours through the store
+    let ckpt = std::env::temp_dir().join("polyglot-e2e.pgck");
+    checkpoint::save(&ckpt, &params)?;
+    let reloaded = checkpoint::load(&ckpt)?;
+    assert_eq!(reloaded.e, params.e, "checkpoint round-trip mismatch");
+    let store = EmbeddingStore::from_params(corpus.vocab.clone(), &reloaded)?;
+    println!("\nnearest neighbours (reloaded checkpoint):");
+    for (_, w, _) in corpus.vocab.entries().take(4) {
+        let ns: Vec<String> = store
+            .neighbors(w, 3)
+            .into_iter()
+            .map(|(n, s)| format!("{n} ({s:.2})"))
+            .collect();
+        println!("  {w:<14} -> {}", ns.join(", "));
+    }
+    std::fs::remove_file(&ckpt).ok();
+    Ok(())
+}

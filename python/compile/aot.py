@@ -1,0 +1,331 @@
+"""AOT driver: lower every L2 entry point to HLO text + write manifest.json.
+
+Run once at build time (``make artifacts``); the Rust coordinator then loads
+``artifacts/*.hlo.txt`` through PJRT and never touches Python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifact families (DESIGN.md §4):
+
+  train_step_opt_b{B}    fused SGD step, pallas rows scatter   (gpu-opt)
+  train_step_ref_b{B}    fused SGD step, native XLA scatter    (cpu)
+  train_naive_b{B}       grads-export step; the embedding update is applied
+                         per-row by the Rust coordinator        (gpu-naive)
+  train_multi_opt_b{B}_k{K}  K scanned SGD steps (transfer amortization)
+  train_small_*          tiny-model family for the Fig 1b convergence sweep
+  forward_b{B}           scoring (serving / eval)
+  loss_eval_b{B}         mean hinge loss on a held-out batch
+  scatter_opt_r{R}       microbench: R-row scatter in one call  (E3)
+  scatter_onehot_r{R}_v{BV}  MXU-variant ablation
+  scatter_row1           one-row scatter; dispatched per row to model
+                         Theano's original per-row Python implementation
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import scatter_add as SK
+
+F32, S32 = "f32", "s32"
+
+# The paper's batch-size sweep (§4.6: "a range of increasing batch sizes
+# from 16 to 512").
+BATCH_SWEEP = [16, 32, 64, 128, 256, 512]
+
+# Main model: Polyglot-like dims. V is a multiple of 512 so the one-hot
+# (MXU) kernel variant's BlockSpec tiling applies to the same table.
+MAIN = M.ModelConfig(vocab=20480, dim=64, window=5, hidden=32)
+# Small model for the convergence sweep (E7 / Fig 1b) — sized so training
+# to the error threshold at six batch sizes fits in bench time.
+SMALL = M.ModelConfig(vocab=2048, dim=16, window=5, hidden=16)
+# Microbench table dims (§4.3: "indexing 1000 rows").
+BENCH_V, BENCH_D = 10240, 64
+
+
+def to_hlo_text(lowered, return_tuple=True) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def spec(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def param_specs(cfg):
+    return [spec(n, F32, s) for n, s in cfg.param_shapes()]
+
+
+def param_structs(cfg):
+    return tuple(
+        jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.param_shapes()
+    )
+
+
+def model_meta(cfg):
+    return {"vocab": cfg.vocab, "dim": cfg.dim, "window": cfg.window,
+            "hidden": cfg.hidden}
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, arg_structs, inputs, outputs, untupled=False, **meta):
+        lowered = jax.jit(fn).lower(*arg_structs)
+        text = to_hlo_text(lowered, return_tuple=not untupled)
+        if untupled:
+            meta = dict(meta, untupled=True)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        entry.update(meta)
+        self.entries.append(entry)
+        print(f"  {name:<34} {len(text):>9} chars")
+
+    # ---- artifact families -------------------------------------------
+
+    def train_step(self, cfg, batch, impl, tag, small=False, sparse=True,
+                   name_suffix=""):
+        b, c = batch, cfg.window
+        ins = param_specs(cfg) + [
+            spec("windows", S32, (b, c)),
+            spec("corrupt", S32, (b,)),
+            spec("lr", F32, ()),
+        ]
+        outs = param_specs(cfg) + [spec("loss", F32, ())]
+        args = param_structs(cfg) + (
+            jax.ShapeDtypeStruct((b, c), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        prefix = "train_small" if small else "train_step"
+        # Perf pass (EXPERIMENTS.md §Perf #6): the sparse-update step skips
+        # the dense [V, D] gradient materialization; both lower the same
+        # scatter kernel, so `sparse=False` is kept only as the ablation.
+        step = M.sgd_train_step_sparse if sparse else M.sgd_train_step
+        self.emit(
+            f"{prefix}_{tag}_b{b}{name_suffix}",
+            lambda *a: step(a[:5], a[5], a[6], a[7], impl=impl),
+            args, ins, outs,
+            kind="train_step" if not name_suffix else "train_step_ablation",
+            backend=tag if not name_suffix else tag + name_suffix,
+            batch=b, model=model_meta(cfg), scatter_impl=impl,
+            sparse_update=sparse,
+        )
+
+    def train_naive(self, cfg, batch):
+        b, c, d = batch, cfg.window, cfg.dim
+        r = 2 * b * c
+        ins = param_specs(cfg) + [
+            spec("windows", S32, (b, c)),
+            spec("corrupt", S32, (b,)),
+            spec("lr", F32, ()),
+        ]
+        outs = [
+            spec("w1", F32, (cfg.concat, cfg.hidden)),
+            spec("b1", F32, (cfg.hidden,)),
+            spec("w2", F32, (cfg.hidden, 1)),
+            spec("b2", F32, (1,)),
+            spec("idx_all", S32, (r,)),
+            spec("delta_rows", F32, (r, d)),
+            spec("loss", F32, ()),
+        ]
+        args = param_structs(cfg) + (
+            jax.ShapeDtypeStruct((b, c), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        self.emit(
+            f"train_naive_b{b}",
+            lambda *a: M.naive_grad_step(a[:5], a[5], a[6], a[7]),
+            args, ins, outs,
+            kind="train_naive", backend="naive", batch=b, rows=r,
+            model=model_meta(cfg),
+        )
+
+    def train_multi(self, cfg, batch, k):
+        b, c = batch, cfg.window
+        ins = param_specs(cfg) + [
+            spec("windows_k", S32, (k, b, c)),
+            spec("corrupt_k", S32, (k, b)),
+            spec("lr", F32, ()),
+        ]
+        outs = param_specs(cfg) + [spec("losses", F32, (k,))]
+        args = param_structs(cfg) + (
+            jax.ShapeDtypeStruct((k, b, c), jnp.int32),
+            jax.ShapeDtypeStruct((k, b), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        self.emit(
+            f"train_multi_opt_b{b}_k{k}",
+            lambda *a: M.sgd_train_multi_sparse(a[:5], a[5], a[6], a[7], impl="rows"),
+            args, ins, outs,
+            kind="train_multi", backend="opt", batch=b, k=k,
+            model=model_meta(cfg), scatter_impl="rows",
+        )
+
+    def forward(self, cfg, batch):
+        b, c = batch, cfg.window
+        ins = param_specs(cfg) + [spec("windows", S32, (b, c))]
+        outs = [spec("scores", F32, (b,))]
+        args = param_structs(cfg) + (jax.ShapeDtypeStruct((b, c), jnp.int32),)
+        self.emit(
+            f"forward_b{b}",
+            lambda *a: M.scores(a[:5], a[5]),
+            args, ins, outs,
+            kind="forward", batch=b, model=model_meta(cfg),
+        )
+
+    def loss_eval(self, cfg, batch, small=False):
+        b, c = batch, cfg.window
+        ins = param_specs(cfg) + [
+            spec("windows", S32, (b, c)),
+            spec("corrupt", S32, (b,)),
+        ]
+        outs = [spec("loss", F32, ())]
+        args = param_structs(cfg) + (
+            jax.ShapeDtypeStruct((b, c), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        )
+        name = f"loss_eval_{'small_' if small else ''}b{b}"
+        self.emit(
+            name,
+            lambda *a: M.batch_loss(a[:5], a[5], a[6]),
+            args, ins, outs,
+            kind="loss_eval", batch=b, model=model_meta(cfg),
+        )
+
+    def scatter(self, rows, impl, block_v=None):
+        v, d = BENCH_V, BENCH_D
+        ins = [
+            spec("w", F32, (v, d)),
+            spec("idx", S32, (rows,)),
+            spec("y", F32, (rows, d)),
+        ]
+        outs = [spec("w_out", F32, (v, d))]
+        args = (
+            jax.ShapeDtypeStruct((v, d), jnp.float32),
+            jax.ShapeDtypeStruct((rows,), jnp.int32),
+            jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        )
+        if impl == "onehot":
+            name = f"scatter_onehot_r{rows}_v{block_v}"
+            fn = lambda w, i, y: (SK.scatter_add_onehot(w, i, y, block_v=block_v),)
+            meta = {"block_v": block_v}
+        else:
+            name = f"scatter_{impl}_r{rows}"
+            fn = lambda w, i, y: (SK.scatter_add(w, i, y, impl=impl),)
+            meta = {}
+        self.emit(name, fn, args, ins, outs, kind="scatter", backend=impl,
+                  rows=rows, vocab=v, dim=d, **meta)
+
+    def scatter_row1(self, cfg, name, v=None, d=None):
+        """One-row increment over a [V, D] table (per-row naive dispatch)."""
+        v = v if v is not None else cfg.vocab
+        d = d if d is not None else cfg.dim
+        ins = [
+            spec("w", F32, (v, d)),
+            spec("idx1", S32, (1,)),
+            spec("row1", F32, (1, d)),
+        ]
+        outs = [spec("w_out", F32, (v, d))]
+        args = (
+            jax.ShapeDtypeStruct((v, d), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        )
+        # Untupled root: the single output comes back as a plain array
+        # buffer, so the per-row naive loop can keep W device-resident and
+        # feed the output buffer straight into the next dispatch
+        # (execute_b) — matching Theano, which kept the shared variable on
+        # the GPU between per-row kernel launches.
+        self.emit(name, lambda w, i, y: SK.scatter_row1(w, i, y),
+                  args, ins, outs, untupled=True, kind="scatter_row1",
+                  vocab=v, dim=d)
+
+
+def build(out_dir, *, fast=False):
+    b = Builder(out_dir)
+    batches = [16, 128] if fast else BATCH_SWEEP
+
+    print("[aot] main-model train steps")
+    for bb in batches:
+        b.train_step(MAIN, bb, "rows", "opt")
+        b.train_step(MAIN, bb, "native", "ref")
+    # dense-update ablation artifact (perf-pass before/after, E8/§Perf)
+    b.train_step(MAIN, 16, "rows", "opt", sparse=False, name_suffix="_dense")
+    b.train_naive(MAIN, 16)
+    if not fast:
+        b.train_naive(MAIN, 64)
+    b.train_multi(MAIN, 16, 8)
+    if not fast:
+        b.train_multi(MAIN, 128, 8)
+
+    print("[aot] small-model (convergence sweep)")
+    for bb in batches:
+        b.train_step(SMALL, bb, "rows", "opt", small=True)
+    b.loss_eval(SMALL, 256, small=True)
+
+    print("[aot] forward / eval")
+    for bb in ([8] if fast else [1, 8, 32, 256]):
+        b.forward(MAIN, bb)
+    b.loss_eval(MAIN, 256)
+
+    print("[aot] scatter microbenches")
+    for r in ([1000] if fast else [10, 100, 1000]):
+        b.scatter(r, "rows")
+        b.scatter(r, "native")
+    if not fast:
+        b.scatter(1000, "naive")
+        for bv in [128, 256, 512, 1024]:
+            b.scatter(1000, "onehot", block_v=bv)
+    b.scatter_row1(None, "scatter_row1_bench", v=BENCH_V, d=BENCH_D)
+    b.scatter_row1(MAIN, "scatter_row1_main")
+
+    manifest = {
+        "version": 1,
+        "main_model": model_meta(MAIN),
+        "small_model": model_meta(SMALL),
+        "bench": {"vocab": BENCH_V, "dim": BENCH_D},
+        "artifacts": b.entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(b.entries)} artifacts + manifest.json -> {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced artifact set for quick iteration")
+    args = ap.parse_args()
+    build(args.out, fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the paper's compute hot spots.
+
+- scatter_add: advanced indexing (``W[I] += Y``) — Table 1's #1 hot spot.
+- lookup: the forward gather.
+- hidden: fused dense+tanh (the Elemwise fusion, Table 1's #2).
+- ref: pure-jnp oracles everything is tested against.
+"""
+
+from . import hidden, lookup, ref, scatter_add  # noqa: F401

@@ -1,0 +1,104 @@
+"""Pallas embedding gather — the forward direction of advanced indexing.
+
+``lookup(E, I) -> E[I]`` for ``E [V, D]``, ``I [R]``. The paper's hot spot is
+the *backward* scatter (scatter_add.py); the gather is included so both
+directions of Theano's advanced indexing have kernel implementations, and it
+is used by the forward-only scoring artifacts where gather is the dominant
+memory op.
+
+Two variants, symmetric with scatter_add.py:
+
+* ``lookup_rows`` — grid over the R output rows; each step dynamic-slices
+  one row of E out of the (aliased-resident) table. Sequential grid, VPU
+  row copy. Cheap O(R·D) traffic: the choice for CPU-interpret artifacts.
+* ``lookup_onehot`` — ``onehot(I, V) @ E`` blocked over V with a VMEM
+  accumulator, the MXU form for real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .scatter_add import DEFAULT_BLOCK_V
+
+
+def _rows_kernel(idx_ref, e_ref, o_ref):
+    r = pl.program_id(0)
+    i = idx_ref[r]
+    o_ref[pl.dslice(r, 1), :] = e_ref[pl.dslice(i, 1), :]
+
+
+def lookup_rows(e, idx, *, interpret=True):
+    """Row-grid gather: ``out[r] = e[idx[r]]``."""
+    r = idx.shape[0]
+    d = e.shape[1]
+    return pl.pallas_call(
+        _rows_kernel,
+        grid=(r,),
+        out_shape=jax.ShapeDtypeStruct((r, d), e.dtype),
+        interpret=interpret,
+    )(idx, e)
+
+
+def _onehot_kernel(block_v, nblocks, idx_ref, e_ref, o_ref):
+    """Accumulate ``onehot(I, block) @ E_block`` into the output across the
+    V sweep. o_ref is revisited every grid step (index map returns 0), so it
+    acts as a VMEM accumulator; step 0 initializes it."""
+    vb = pl.program_id(0)
+    v0 = vb * block_v
+    ids = idx_ref[:]
+    lanes = v0 + jax.lax.iota(jnp.int32, block_v)
+    onehot = (ids[:, None] == lanes[None, :]).astype(e_ref.dtype)
+    part = jax.lax.dot_general(
+        onehot,
+        e_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(vb == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(vb != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def lookup_onehot(e, idx, *, block_v=DEFAULT_BLOCK_V, interpret=True):
+    """Blocked one-hot-matmul gather (MXU variant)."""
+    v, d = e.shape
+    r = idx.shape[0]
+    if v % block_v != 0:
+        raise ValueError(f"V={v} not divisible by block_v={block_v}")
+    nblocks = v // block_v
+    kernel = functools.partial(_onehot_kernel, block_v, nblocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((r,), lambda vb: (0,)),
+            pl.BlockSpec((block_v, d), lambda vb: (vb, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, d), lambda vb: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), e.dtype),
+        interpret=interpret,
+    )(idx, e)
+
+
+IMPLEMENTATIONS = {
+    "rows": lookup_rows,
+    "onehot": lookup_onehot,
+    "native": lambda e, idx: jnp.take(e, idx, axis=0),
+}
+
+
+def lookup(e, idx, impl="native", **kw):
+    """Dispatch a gather by implementation name."""
+    try:
+        fn = IMPLEMENTATIONS[impl]
+    except KeyError:
+        raise ValueError(f"unknown lookup impl {impl!r}; have {sorted(IMPLEMENTATIONS)}")
+    return fn(e, idx, **kw)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the *correctness references*: deliberately simple, no pallas, no
+custom control flow. Every pallas kernel in this package is pytest-checked
+against these under hypothesis-driven shape/dtype/index sweeps
+(python/tests/test_*_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+
+def scatter_add_ref(w, idx, y):
+    """Advanced-indexing increment: ``w[idx] += y`` with duplicate indices
+    accumulating (the semantics of Theano's ``AdvancedIncSubtensor1``).
+
+    Args:
+      w:   [V, D] float array (destination).
+      idx: [R] int array, values in [0, V).
+      y:   [R, D] float array (rows to add).
+
+    Returns:
+      [V, D] array equal to ``w`` with ``y[r]`` added into row ``idx[r]``.
+    """
+    return w.at[idx].add(y)
+
+
+def lookup_ref(e, idx):
+    """Embedding gather: rows of ``e`` selected by ``idx`` ([R] -> [R, D])."""
+    return jnp.take(e, idx, axis=0)
+
+
+def hidden_ref(x, w1, b1):
+    """Fused dense+tanh hidden layer: ``tanh(x @ w1 + b1)``."""
+    return jnp.tanh(x @ w1 + b1)
+
+
+def score_ref(h, w2, b2):
+    """Scalar scoring head: ``h @ w2 + b2`` squeezed to [B]."""
+    return (h @ w2 + b2)[:, 0]
+
+
+def hinge_ref(s_pos, s_neg, margin=1.0):
+    """Pairwise ranking hinge: ``mean(max(0, margin - s_pos + s_neg))``."""
+    return jnp.mean(jnp.maximum(0.0, margin - s_pos + s_neg))

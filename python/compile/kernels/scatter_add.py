@@ -1,0 +1,192 @@
+"""Pallas implementations of *advanced indexing* — the paper's hot spot.
+
+The operation is Theano's ``AdvancedIncSubtensor1``: given a destination
+matrix ``W [V, D]``, an index vector ``I [R]`` and update rows ``Y [R, D]``,
+compute ``W[I] += Y`` where duplicate indices accumulate. In the Polyglot
+training graph this is the embedding-gradient update, and the paper measures
+it at 81.7% of total training time before optimization (Table 1).
+
+Three implementations, mirroring the paper's §4.3 journey (adapted from
+CUDA to the TPU model — see DESIGN.md §Hardware-Adaptation):
+
+* ``scatter_add_rows`` — the direct analogue of the paper's CUDA kernel
+  ("each row is indexed in parallel, and for each row, each cell in the row
+  is added in parallel"). On TPU the grid is a *sequential* hardware loop on
+  one core, so duplicate indices accumulate without the atomics CUDA needs;
+  within a grid step the row add is a [1, D] vector op on the VPU. The
+  destination is input/output-aliased so the update is in place (the paper's
+  §4.3 item 3). This is the variant the AOT train-step artifacts use.
+
+* ``scatter_add_onehot`` — the MXU re-expression: ``W += onehot(I, V)ᵀ @ Y``
+  computed block-by-block over ``V`` so the one-hot tile lives only in VMEM.
+  Duplicates accumulate because matmul sums them. This is how the kernel
+  would actually be scheduled on a real TPU for large ``R`` (contraction on
+  the systolic array instead of R serialized row updates); on the CPU
+  interpreter it is O(R·V·D) dense work, so it is exercised by tests and the
+  block-size ablation bench, not by the train-step artifacts.
+
+* ``scatter_add_naive`` — the *pre-optimization* semantics: a serialized
+  ``lax.scan`` over rows, one read-modify-write per step, no cross-row
+  parallelism. Theano's original implementation additionally paid a Python
+  dispatch + kernel launch + sync *per row*; that dispatch cost is modeled
+  on the Rust side by executing a one-row artifact per row
+  (``rust/src/coordinator/naive.rs``), for which :func:`scatter_row1` below
+  provides the artifact body.
+
+All pallas calls use ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so kernels lower to plain HLO (see aot.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default V-block width for the one-hot (MXU) variant. 512 rows of the
+# destination block keeps the VMEM working set small (see vmem_bytes below)
+# while the [R, 512] one-hot tile still fills the 128x128 systolic array.
+DEFAULT_BLOCK_V = 512
+
+
+def _rows_kernel(idx_ref, y_ref, w_ref, o_ref):
+    """One grid step = one indexed row: ``o[idx[r]] += y[r]``.
+
+    ``o_ref`` aliases ``w_ref``'s buffer (input_output_aliases), so each step
+    is an in-place read-modify-write of a single [1, D] row. Grid steps run
+    sequentially per TPU core, which makes duplicate indices safe.
+    """
+    r = pl.program_id(0)
+    i = idx_ref[r]
+    o_ref[pl.dslice(i, 1), :] += y_ref[r, :][None, :]
+
+
+def scatter_add_rows(w, idx, y, *, interpret=True):
+    """Row-parallel scatter-add (the paper's optimized kernel, TPU form).
+
+    Args mirror :func:`ref.scatter_add_ref`. The whole ``W`` stays resident
+    (VMEM on a real TPU — valid for V·D·4 ≲ 16 MiB; the train-step models in
+    this repo are sized under that) and the grid walks the R update rows.
+    """
+    r = idx.shape[0]
+    return pl.pallas_call(
+        _rows_kernel,
+        grid=(r,),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx, y, w)
+
+
+def _onehot_kernel(block_v, idx_ref, y_ref, w_ref, o_ref):
+    """One grid step = one [block_v, D] destination block.
+
+    Builds the [R, block_v] one-hot tile in registers/VMEM from the index
+    vector (iota compare — never materialized in HBM) and accumulates its
+    transpose-matmul with Y into the block. The contraction is MXU work.
+    """
+    v0 = pl.program_id(0) * block_v
+    ids = idx_ref[:]
+    lanes = v0 + jax.lax.iota(jnp.int32, block_v)
+    onehot = (ids[:, None] == lanes[None, :]).astype(y_ref.dtype)
+    o_ref[...] = w_ref[...] + jax.lax.dot_general(
+        onehot,
+        y_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def scatter_add_onehot(w, idx, y, *, block_v=DEFAULT_BLOCK_V, interpret=True):
+    """Blocked one-hot-matmul scatter-add (the MXU variant).
+
+    ``V`` must be divisible by ``block_v`` (aot.py sizes vocabularies to
+    multiples of 512; tests sweep other legal combinations).
+    """
+    v, d = w.shape
+    r = idx.shape[0]
+    if v % block_v != 0:
+        raise ValueError(f"V={v} not divisible by block_v={block_v}")
+    kernel = functools.partial(_onehot_kernel, block_v)
+    return pl.pallas_call(
+        kernel,
+        grid=(v // block_v,),
+        in_specs=[
+            pl.BlockSpec((r,), lambda vb: (0,)),
+            pl.BlockSpec((r, d), lambda vb: (0, 0)),
+            pl.BlockSpec((block_v, d), lambda vb: (vb, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_v, d), lambda vb: (vb, 0)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(idx, y, w)
+
+
+def scatter_add_naive(w, idx, y):
+    """Serialized per-row scatter: the pre-optimization semantics.
+
+    A ``lax.scan`` whose carry is the whole destination; each step does one
+    dynamic-slice read, one row add, one dynamic-update-slice write. XLA
+    cannot parallelize across scan iterations, which is exactly the
+    serialization the paper's baseline suffered from. (The *dispatch* half
+    of the baseline's cost — a Python round-trip per row — is modeled in the
+    Rust coordinator; see module docstring.)
+    """
+    d = w.shape[1]
+
+    def body(carry, t):
+        i, row = t
+        cur = jax.lax.dynamic_slice(carry, (i, 0), (1, d))
+        return jax.lax.dynamic_update_slice(carry, cur + row[None, :], (i, 0)), 0.0
+
+    out, _ = jax.lax.scan(body, w, (idx, y))
+    return out
+
+
+def scatter_row1(w, idx1, row1):
+    """Single-row increment: the artifact body for per-row naive dispatch.
+
+    ``idx1`` is shape [1] int32, ``row1`` is [1, D]. The Rust coordinator
+    calls one compiled instance of this per gradient row to model Theano's
+    original per-row Python dispatch + launch + sync (§4.3, and the 207.59 s
+    / 1000 rows baseline).
+    """
+    d = w.shape[1]
+    i = idx1[0]
+    cur = jax.lax.dynamic_slice(w, (i, 0), (1, d))
+    return jax.lax.dynamic_update_slice(w, cur + row1, (i, 0))
+
+
+#: Implementation registry used by model.py / aot.py to select the backward
+#: scatter for the embedding-lookup custom VJP.
+IMPLEMENTATIONS = {
+    "rows": scatter_add_rows,
+    "onehot": scatter_add_onehot,
+    "naive": scatter_add_naive,
+    "native": lambda w, idx, y: w.at[idx].add(y),
+}
+
+
+def scatter_add(w, idx, y, impl="rows", **kw):
+    """Dispatch a scatter-add by implementation name (see IMPLEMENTATIONS)."""
+    try:
+        fn = IMPLEMENTATIONS[impl]
+    except KeyError:
+        raise ValueError(f"unknown scatter impl {impl!r}; have {sorted(IMPLEMENTATIONS)}")
+    return fn(w, idx, y, **kw)
+
+
+def vmem_bytes(v_or_block, d, r, impl="rows", dtype_bytes=4):
+    """Analytic VMEM working-set estimate for a kernel instance (DESIGN §9).
+
+    Used by the Rust device model and EXPERIMENTS.md §Perf to reason about
+    real-TPU feasibility; interpret mode has no hardware VMEM to measure.
+    """
+    if impl == "rows":
+        # whole W resident + Y + I
+        return v_or_block * d * dtype_bytes + r * d * dtype_bytes + r * 4
+    if impl == "onehot":
+        # one W block + one-hot tile + Y + I
+        bv = v_or_block
+        return (bv * d + r * bv + r * d) * dtype_bytes + r * 4
+    raise ValueError(impl)

@@ -1,0 +1,278 @@
+"""L2: the Polyglot language model (SENNA-style window discriminator) in JAX.
+
+Architecture (Al-Rfou et al. 2013 / Collobert et al. 2011):
+
+    windows [B, C] int32  --lookup E-->  [B, C, D]  --concat-->  [B, C*D]
+    h = tanh(x @ W1 + b1)               (fused pallas kernel, kernels.hidden)
+    s = h @ W2 + b2                     -> scalar score per window
+
+Training objective: pairwise ranking hinge. For each real window w and its
+corruption w~ (center word replaced by a sampled word — sampling happens in
+the Rust coordinator, L3):
+
+    loss = mean(max(0, 1 - s(w) + s(w~)))
+
+The gradient of the embedding lookup *is* the advanced-indexing scatter-add
+the paper is about. ``embedding_lookup`` binds a jax.custom_vjp whose
+backward pass routes through a selectable kernels.scatter_add implementation,
+mirroring how Theano's graph routed it through ``AdvancedIncSubtensor1``.
+
+Everything here is build-time Python: aot.py lowers the jitted functions to
+HLO text once; the Rust coordinator executes the artifacts.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hidden as hidden_kernel
+from .kernels import scatter_add as scatter_kernel
+
+MARGIN = 1.0
+
+
+class ModelConfig(NamedTuple):
+    """Static model hyperparameters (baked into each AOT artifact)."""
+
+    vocab: int = 20000   # V — synthetic-corpus vocabulary size
+    dim: int = 64        # D — embedding width (Polyglot used 64)
+    window: int = 5      # C — context window (SENNA/Polyglot used 5)
+    hidden: int = 32     # H — hidden width (Polyglot used 32)
+
+    @property
+    def concat(self):
+        return self.window * self.dim
+
+    def param_shapes(self):
+        """Ordered (name, shape) list — the AOT artifact calling convention."""
+        return [
+            ("e", (self.vocab, self.dim)),
+            ("w1", (self.concat, self.hidden)),
+            ("b1", (self.hidden,)),
+            ("w2", (self.hidden, 1)),
+            ("b2", (1,)),
+        ]
+
+
+def init_params(key, cfg: ModelConfig):
+    """SENNA-style init: uniform embeddings, fan-in-scaled dense layers."""
+    ke, k1, k2 = jax.random.split(key, 3)
+    e = jax.random.uniform(ke, (cfg.vocab, cfg.dim), jnp.float32, -0.5, 0.5) / cfg.dim
+    w1 = jax.random.normal(k1, (cfg.concat, cfg.hidden), jnp.float32) / jnp.sqrt(cfg.concat)
+    b1 = jnp.zeros((cfg.hidden,), jnp.float32)
+    w2 = jax.random.normal(k2, (cfg.hidden, 1), jnp.float32) / jnp.sqrt(cfg.hidden)
+    b2 = jnp.zeros((1,), jnp.float32)
+    return (e, w1, b1, w2, b2)
+
+
+@functools.lru_cache(maxsize=None)
+def make_embedding_lookup(impl: str):
+    """Embedding gather whose VJP is a selectable scatter-add implementation.
+
+    impl: key into kernels.scatter_add.IMPLEMENTATIONS ("rows" = the paper's
+    optimized kernel, "native" = XLA's scatter (the CPU backend), "naive" =
+    serialized scan, "onehot" = the MXU variant).
+    """
+
+    @jax.custom_vjp
+    def lookup(e, idx):
+        return jnp.take(e, idx, axis=0)
+
+    def fwd(e, idx):
+        return lookup(e, idx), (idx, e.shape)
+
+    def bwd(res, g):
+        idx, eshape = res
+        zeros = jnp.zeros(eshape, g.dtype)
+        ge = scatter_kernel.scatter_add(zeros, idx, g, impl=impl)
+        return ge, None
+
+    lookup.defvjp(fwd, bwd)
+    return lookup
+
+
+def forward(params, windows, *, impl="rows", use_pallas_hidden=True):
+    """Score a batch of windows: [B, C] int32 -> [B] float32."""
+    e, w1, b1, w2, b2 = params
+    b, c = windows.shape
+    lookup = make_embedding_lookup(impl)
+    emb = lookup(e, windows.reshape(-1)).reshape(b, c * e.shape[1])
+    if use_pallas_hidden:
+        h = hidden_kernel.hidden(emb, w1, b1)
+    else:
+        h = jnp.tanh(emb @ w1 + b1)
+    return (h @ w2 + b2)[:, 0]
+
+
+def corrupt_windows(windows, corrupt):
+    """Replace the center column with the sampled corruption words."""
+    c = windows.shape[1]
+    return windows.at[:, c // 2].set(corrupt)
+
+
+def loss_fn(params, windows, corrupt, *, impl="rows", use_pallas_hidden=True):
+    """Pairwise ranking hinge over a batch (the model's training loss)."""
+    s_pos = forward(params, windows, impl=impl, use_pallas_hidden=use_pallas_hidden)
+    s_neg = forward(params, corrupt_windows(windows, corrupt), impl=impl,
+                    use_pallas_hidden=use_pallas_hidden)
+    return jnp.mean(jnp.maximum(0.0, MARGIN - s_pos + s_neg))
+
+
+def sgd_train_step(params, windows, corrupt, lr, *, impl="rows",
+                   use_pallas_hidden=True):
+    """One fused SGD step: returns (e', w1', b1', w2', b2', loss).
+
+    This is the body of the ``train_step_{backend}_b{B}`` artifacts. The
+    embedding gradient flows through the custom VJP, i.e. through the
+    selected scatter-add kernel — two scatter calls per step (positive and
+    corrupted windows), just as Theano's graph had two
+    AdvancedIncSubtensor1 applications per update.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, windows, corrupt, impl=impl,
+                          use_pallas_hidden=use_pallas_hidden)
+    )(params)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new, loss)
+
+
+def sgd_train_multi(params, windows_k, corrupt_k, lr, *, impl="rows"):
+    """K fused SGD steps via lax.scan (the L3 transfer-amortization lever).
+
+    windows_k: [K, B, C]; corrupt_k: [K, B]. Returns params' + losses [K].
+    One PJRT dispatch executes K updates, amortizing the host<->device
+    literal round-trip the tuple-output calling convention forces.
+    """
+
+    def body(p, t):
+        w, c = t
+        *new, loss = sgd_train_step(p, w, c, lr, impl=impl)
+        return tuple(new), loss
+
+    new, losses = jax.lax.scan(body, params, (windows_k, corrupt_k))
+    return (*new, losses)
+
+
+def naive_grad_step(params, windows, corrupt, lr, *, use_pallas_hidden=True):
+    """The *unoptimized-backend* step: everything except the embedding update.
+
+    Returns (w1', b1', w2', b2', idx_all, delta_rows, loss) where
+    ``idx_all [2*B*C] int32`` / ``delta_rows [2*B*C, D] float32`` are the
+    embedding rows' SGD deltas (-lr * dL/drow). The Rust coordinator then
+    applies ``E[idx_all] += delta_rows`` ONE ROW AT A TIME via per-row PJRT
+    dispatch of the ``scatter_row1`` artifact — modeling Theano's original
+    per-row Python implementation of AdvancedIncSubtensor1 (§4.2/§4.3).
+    """
+    e, w1, b1, w2, b2 = params
+    b, c = windows.shape
+    d = e.shape[1]
+    neg = corrupt_windows(windows, corrupt)
+    idx_pos = windows.reshape(-1)
+    idx_neg = neg.reshape(-1)
+    rows_pos = jnp.take(e, idx_pos, axis=0)
+    rows_neg = jnp.take(e, idx_neg, axis=0)
+
+    def loss_from_rows(rp, rn, w1_, b1_, w2_, b2_):
+        def score(rows):
+            x = rows.reshape(b, c * d)
+            if use_pallas_hidden:
+                h = hidden_kernel.hidden(x, w1_, b1_)
+            else:
+                h = jnp.tanh(x @ w1_ + b1_)
+            return (h @ w2_ + b2_)[:, 0]
+
+        return jnp.mean(jnp.maximum(0.0, MARGIN - score(rp) + score(rn)))
+
+    loss, grads = jax.value_and_grad(loss_from_rows, argnums=(0, 1, 2, 3, 4, 5))(
+        rows_pos, rows_neg, w1, b1, w2, b2
+    )
+    g_rp, g_rn, g_w1, g_b1, g_w2, g_b2 = grads
+    idx_all = jnp.concatenate([idx_pos, idx_neg])
+    delta_rows = -lr * jnp.concatenate([g_rp, g_rn], axis=0)
+    return (
+        w1 - lr * g_w1,
+        b1 - lr * g_b1,
+        w2 - lr * g_w2,
+        b2 - lr * g_b2,
+        idx_all,
+        delta_rows,
+        loss,
+    )
+
+
+def batch_loss(params, windows, corrupt):
+    """Evaluation-only mean hinge loss (the Fig 1b convergence criterion)."""
+    return (loss_fn(params, windows, corrupt, impl="native",
+                    use_pallas_hidden=False),)
+
+
+def scores(params, windows):
+    """Forward-only scoring (serving artifacts)."""
+    return (forward(params, windows, impl="native", use_pallas_hidden=True),)
+
+
+def sgd_train_step_sparse(params, windows, corrupt, lr, *, impl="rows",
+                          use_pallas_hidden=True):
+    """One SGD step with a *sparse* embedding update (perf pass, L2).
+
+    `sgd_train_step` differentiates through the lookup's custom VJP, which
+    materializes a dense [V, D] embedding gradient (zeros + scatter) that
+    the update then subtracts across the full table — three O(V·D) memory
+    passes per step that Theano's in-place `inc_subtensor` never paid.
+    This variant computes gradients w.r.t. the *gathered rows* and applies
+    them with one scatter-add directly into E (through the selected
+    kernel), restoring the sparse-update cost structure. Numerically
+    identical to `sgd_train_step` (untouched rows receive zero gradient);
+    asserted in python/tests/test_model.py and rust integration tests.
+
+    Same signature/outputs as `sgd_train_step`.
+    """
+    e, w1, b1, w2, b2 = params
+    b, c = windows.shape
+    d = e.shape[1]
+    neg = corrupt_windows(windows, corrupt)
+    idx_pos = windows.reshape(-1)
+    idx_neg = neg.reshape(-1)
+    rows_pos = jnp.take(e, idx_pos, axis=0)
+    rows_neg = jnp.take(e, idx_neg, axis=0)
+
+    def loss_from_rows(rp, rn, w1_, b1_, w2_, b2_):
+        def score(rows):
+            x = rows.reshape(b, c * d)
+            if use_pallas_hidden:
+                h = hidden_kernel.hidden(x, w1_, b1_)
+            else:
+                h = jnp.tanh(x @ w1_ + b1_)
+            return (h @ w2_ + b2_)[:, 0]
+
+        return jnp.mean(jnp.maximum(0.0, MARGIN - score(rp) + score(rn)))
+
+    loss, grads = jax.value_and_grad(loss_from_rows, argnums=(0, 1, 2, 3, 4, 5))(
+        rows_pos, rows_neg, w1, b1, w2, b2
+    )
+    g_rp, g_rn, g_w1, g_b1, g_w2, g_b2 = grads
+    idx_all = jnp.concatenate([idx_pos, idx_neg])
+    delta = -lr * jnp.concatenate([g_rp, g_rn], axis=0)
+    e_new = scatter_kernel.scatter_add(e, idx_all, delta, impl=impl)
+    return (
+        e_new,
+        w1 - lr * g_w1,
+        b1 - lr * g_b1,
+        w2 - lr * g_w2,
+        b2 - lr * g_b2,
+        loss,
+    )
+
+
+def sgd_train_multi_sparse(params, windows_k, corrupt_k, lr, *, impl="rows"):
+    """K scanned sparse SGD steps (the fused-dispatch perf lever)."""
+
+    def body(p, t):
+        w, c = t
+        *new, loss = sgd_train_step_sparse(p, w, c, lr, impl=impl)
+        return tuple(new), loss
+
+    new, losses = jax.lax.scan(body, params, (windows_k, corrupt_k))
+    return (*new, losses)

@@ -1,0 +1,112 @@
+"""AOT pipeline tests: artifact generation, manifest schema, HLO validity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(out), fast=True)
+    return out
+
+
+def load_manifest(out):
+    with open(os.path.join(out, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_fast_build_writes_manifest_and_files(built):
+    m = load_manifest(built)
+    assert m["version"] == 1
+    assert m["main_model"]["vocab"] == aot.MAIN.vocab
+    names = {a["name"] for a in m["artifacts"]}
+    assert "train_step_opt_b16" in names
+    assert "scatter_row1_bench" in names
+    for a in m["artifacts"]:
+        path = os.path.join(built, a["file"])
+        assert os.path.exists(path), a["name"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), a["name"]
+
+
+def test_manifest_specs_match_model_shapes(built):
+    m = load_manifest(built)
+    by_name = {a["name"]: a for a in m["artifacts"]}
+    ts = by_name["train_step_opt_b16"]
+    md = ts["model"]
+    # calling convention: 5 params + windows + corrupt + lr
+    assert [i["name"] for i in ts["inputs"]] == [
+        "e", "w1", "b1", "w2", "b2", "windows", "corrupt", "lr"]
+    assert ts["inputs"][0]["shape"] == [md["vocab"], md["dim"]]
+    assert ts["inputs"][5]["shape"] == [16, md["window"]]
+    assert ts["inputs"][7]["shape"] == []
+    assert [o["name"] for o in ts["outputs"]][-1] == "loss"
+
+
+def test_sha256_matches_file_contents(built):
+    import hashlib
+    m = load_manifest(built)
+    a = m["artifacts"][0]
+    text = open(os.path.join(built, a["file"])).read()
+    assert hashlib.sha256(text.encode()).hexdigest() == a["sha256"]
+
+
+def test_untupled_flag_only_on_scatter_row1(built):
+    m = load_manifest(built)
+    for a in m["artifacts"]:
+        if a["kind"] == "scatter_row1":
+            assert a.get("untupled") is True, a["name"]
+        else:
+            assert "untupled" not in a, a["name"]
+
+
+def test_hlo_entry_layout_matches_specs(built):
+    """The HLO text's entry layout must agree with the manifest specs."""
+    m = load_manifest(built)
+    by_name = {a["name"]: a for a in m["artifacts"]}
+    a = by_name["train_step_opt_b16"]
+    header = open(os.path.join(built, a["file"])).readline()
+    for spec in a["inputs"]:
+        dt = {"f32": "f32", "s32": "s32"}[spec["dtype"]]
+        if spec["shape"]:
+            token = f"{dt}[{','.join(str(d) for d in spec['shape'])}]"
+        else:
+            token = f"{dt}[]"
+        assert token in header, f"{token} missing from entry layout"
+
+
+def test_hlo_text_loadable_by_jax_roundtrip(built):
+    """HLO text parses back through the XLA client (the same parser the
+    rust side uses under the hood)."""
+    from jax._src.lib import xla_client as xc
+    m = load_manifest(built)
+    a = next(x for x in m["artifacts"] if x["name"] == "forward_b8")
+    text = open(os.path.join(built, a["file"])).read()
+    # parse via the HLO text importer
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None
+
+
+def test_main_vocab_is_block_multiple():
+    assert aot.MAIN.vocab % 512 == 0, "one-hot BlockSpec tiling requires it"
+    assert aot.SMALL.vocab % 512 == 0
+    assert aot.BENCH_V % 512 == 0
+
+
+def test_model_config_properties():
+    cfg = M.ModelConfig(vocab=100, dim=4, window=3, hidden=5)
+    assert cfg.concat == 12
+    names = [n for n, _ in cfg.param_shapes()]
+    assert names == ["e", "w1", "b1", "w2", "b2"]

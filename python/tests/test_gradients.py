@@ -1,0 +1,123 @@
+"""Gradient-path tests: the custom VJPs must match plain-jnp autodiff under
+hypothesis sweeps (this is where Theano's AdvancedIncSubtensor1 lived)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import hidden as HK
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hidden_vjp_matches_jnp():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(6, 10), jnp.float32)
+    w1 = jnp.asarray(rng.randn(10, 4), jnp.float32)
+    b1 = jnp.asarray(rng.randn(4), jnp.float32)
+
+    def via_kernel(x, w1, b1):
+        return jnp.sum(jnp.sin(HK.hidden(x, w1, b1)))
+
+    def via_jnp(x, w1, b1):
+        return jnp.sum(jnp.sin(jnp.tanh(x @ w1 + b1)))
+
+    g1 = jax.grad(via_kernel, argnums=(0, 1, 2))(x, w1, b1)
+    g2 = jax.grad(via_jnp, argnums=(0, 1, 2))(x, w1, b1)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 12), cd=st.integers(1, 16), h=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_hidden_vjp(b, cd, h, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(b, cd), jnp.float32)
+    w1 = jnp.asarray(rng.randn(cd, h), jnp.float32)
+    b1 = jnp.asarray(rng.randn(h), jnp.float32)
+    g1 = jax.grad(lambda *a: jnp.sum(HK.hidden(*a)), argnums=(0, 1, 2))(x, w1, b1)
+    g2 = jax.grad(lambda *a: jnp.sum(jnp.tanh(a[0] @ a[1] + a[2])), argnums=(0, 1, 2))(
+        x, w1, b1)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), impl=st.sampled_from(["rows", "naive", "native"]))
+def test_property_lookup_vjp_equals_take_grad(seed, impl):
+    """d/dE of sum(f(E[idx])) via the custom VJP == via jnp.take autodiff,
+    duplicates included."""
+    rng = np.random.RandomState(seed)
+    v, d, r = 24, 5, 14
+    e = jnp.asarray(rng.randn(v, d), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, v, r), jnp.int32)
+    lookup = M.make_embedding_lookup(impl)
+
+    def via_custom(e):
+        return jnp.sum(jnp.cos(lookup(e, idx)))
+
+    def via_take(e):
+        return jnp.sum(jnp.cos(jnp.take(e, idx, axis=0)))
+
+    np.testing.assert_allclose(
+        jax.grad(via_custom)(e), jax.grad(via_take)(e), atol=1e-4)
+
+
+def test_gradcheck_loss_fn_central_differences():
+    """End-to-end finite-difference check of loss_fn wrt every param group."""
+    cfg = M.ModelConfig(vocab=32, dim=4, window=3, hidden=4)
+    params = list(M.init_params(jax.random.PRNGKey(0), cfg))
+    rng = np.random.RandomState(1)
+    windows = jnp.asarray(rng.randint(0, cfg.vocab, (4, 3)), jnp.int32)
+    corrupt = jnp.asarray(rng.randint(0, cfg.vocab, 4), jnp.int32)
+
+    loss = lambda ps: M.loss_fn(tuple(ps), windows, corrupt, impl="rows")
+    grads = jax.grad(lambda ps: loss(ps))(params)
+    eps = 1e-3
+    for gi, (g, p) in enumerate(zip(grads, params)):
+        flat = np.asarray(p).ravel()
+        gflat = np.asarray(g).ravel()
+        for k in range(0, flat.size, max(1, flat.size // 5)):
+            # NB: jnp.asarray may alias numpy memory on CPU — build two
+            # independent arrays rather than mutating one in place.
+            plus = flat.copy()
+            plus[k] += eps
+            minus = flat.copy()
+            minus[k] -= eps
+            p_plus = params.copy()
+            p_plus[gi] = jnp.asarray(plus.reshape(p.shape))
+            p_minus = params.copy()
+            p_minus[gi] = jnp.asarray(minus.reshape(p.shape))
+            numeric = (float(loss(p_plus)) - float(loss(p_minus))) / (2 * eps)
+            assert abs(numeric - gflat[k]) < 5e-2, (
+                f"group {gi} coord {k}: numeric {numeric} vs {gflat[k]}")
+
+
+def test_lr_zero_is_identity():
+    cfg = M.ModelConfig(vocab=64, dim=4, window=5, hidden=4)
+    p = M.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.RandomState(3)
+    w = jnp.asarray(rng.randint(0, 64, (8, 5)), jnp.int32)
+    c = jnp.asarray(rng.randint(0, 64, 8), jnp.int32)
+    out = M.sgd_train_step(p, w, c, 0.0)
+    for a, b in zip(out[:5], p):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_untouched_rows_unchanged_by_step():
+    """Only window + corruption rows of E may change in one SGD step."""
+    cfg = M.ModelConfig(vocab=128, dim=4, window=3, hidden=4)
+    p = M.init_params(jax.random.PRNGKey(4), cfg)
+    w = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    c = jnp.asarray([7, 8], jnp.int32)
+    out = M.sgd_train_step(p, w, c, 0.1)
+    touched = {1, 2, 3, 4, 5, 6, 7, 8}
+    e_new = np.asarray(out[0])
+    e_old = np.asarray(p[0])
+    for row in range(128):
+        if row not in touched:
+            np.testing.assert_array_equal(e_new[row], e_old[row], err_msg=str(row))

@@ -1,0 +1,59 @@
+"""Fused dense+tanh kernel vs oracle, incl. batch-block tiling."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hidden as HK
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def mk(b, cd, h, seed=0):
+    rng = np.random.RandomState(seed)
+    return (jnp.asarray(rng.randn(b, cd), jnp.float32),
+            jnp.asarray(rng.randn(cd, h), jnp.float32),
+            jnp.asarray(rng.randn(h), jnp.float32))
+
+
+def test_basic():
+    x, w1, b1 = mk(16, 320, 32)
+    np.testing.assert_allclose(HK.hidden(x, w1, b1),
+                               ref.hidden_ref(x, w1, b1), atol=1e-5)
+
+
+@pytest.mark.parametrize("b,bb", [(64, 16), (64, 64), (128, 32), (512, 512)])
+def test_batch_blocking(b, bb):
+    x, w1, b1 = mk(b, 40, 8, seed=b + bb)
+    got = HK._hidden_pallas(x, w1, b1, block_b=bb)
+    np.testing.assert_allclose(got, ref.hidden_ref(x, w1, b1), atol=1e-5)
+
+
+def test_non_divisible_batch_falls_back():
+    x, w1, b1 = mk(17, 12, 4)
+    got = HK._hidden_pallas(x, w1, b1, block_b=8)  # 17 % 8 != 0 -> single block
+    np.testing.assert_allclose(got, ref.hidden_ref(x, w1, b1), atol=1e-5)
+
+
+def test_shape_mismatch_rejected():
+    x, w1, b1 = mk(4, 12, 4)
+    with pytest.raises(ValueError):
+        HK.hidden(x[:, :10], w1, b1)
+
+
+def test_output_bounded_by_tanh():
+    x, w1, b1 = mk(8, 20, 6, seed=9)
+    got = np.asarray(HK.hidden(100.0 * x, w1, b1))
+    assert np.all(np.abs(got) <= 1.0 + 1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 64), cd=st.integers(1, 48), h=st.integers(1, 24),
+       seed=st.integers(0, 2**31 - 1))
+def test_property(b, cd, h, seed):
+    x, w1, b1 = mk(b, cd, h, seed=seed)
+    np.testing.assert_allclose(HK.hidden(x, w1, b1),
+                               ref.hidden_ref(x, w1, b1), atol=1e-4)

@@ -1,0 +1,73 @@
+"""Gather kernels vs jnp.take oracle."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lookup as LK
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def mk(v, d, r, seed=0):
+    rng = np.random.RandomState(seed)
+    e = jnp.asarray(rng.randn(v, d), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, v, r), jnp.int32)
+    return e, idx
+
+
+@pytest.mark.parametrize("impl", ["rows", "native"])
+def test_basic(impl):
+    e, idx = mk(64, 8, 20)
+    np.testing.assert_allclose(LK.lookup(e, idx, impl=impl),
+                               ref.lookup_ref(e, idx), atol=1e-6)
+
+
+def test_onehot_blocked():
+    for bv in [8, 16, 32]:
+        e, idx = mk(64, 8, 20, seed=bv)
+        np.testing.assert_allclose(LK.lookup_onehot(e, idx, block_v=bv),
+                                   ref.lookup_ref(e, idx), atol=1e-5)
+
+
+def test_onehot_rejects_misaligned():
+    e, idx = mk(60, 8, 5)
+    with pytest.raises(ValueError):
+        LK.lookup_onehot(e, idx, block_v=32)
+
+
+def test_duplicate_and_repeated_indices():
+    e, _ = mk(32, 4, 0)
+    idx = jnp.asarray([3, 3, 3, 0, 31], jnp.int32)
+    got = LK.lookup_rows(e, idx)
+    np.testing.assert_allclose(got[0], got[1], atol=0)
+    np.testing.assert_allclose(got, ref.lookup_ref(e, idx), atol=1e-6)
+
+
+def test_unknown_impl_rejected():
+    e, idx = mk(16, 4, 3)
+    with pytest.raises(ValueError):
+        LK.lookup(e, idx, impl="texture")
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=st.integers(2, 96), d=st.integers(1, 24), r=st.integers(1, 48),
+       seed=st.integers(0, 2**31 - 1),
+       impl=st.sampled_from(["rows", "native"]))
+def test_property(v, d, r, seed, impl):
+    e, idx = mk(v, d, r, seed=seed)
+    np.testing.assert_allclose(LK.lookup(e, idx, impl=impl),
+                               ref.lookup_ref(e, idx), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(vblocks=st.integers(1, 5), bv=st.sampled_from([8, 16]),
+       d=st.integers(1, 12), r=st.integers(1, 24),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_onehot(vblocks, bv, d, r, seed):
+    e, idx = mk(vblocks * bv, d, r, seed=seed)
+    np.testing.assert_allclose(LK.lookup_onehot(e, idx, block_v=bv),
+                               ref.lookup_ref(e, idx), atol=1e-4)

@@ -1,0 +1,204 @@
+"""L2 model tests: forward/loss semantics, custom-VJP gradient routing,
+train-step agreement across scatter backends, multi-step scan, naive
+grads-export step."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import scatter_add as SK
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(vocab=128, dim=8, window=5, hidden=6)
+
+
+def mk_batch(cfg, b, seed=0):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randint(0, cfg.vocab, (b, cfg.window)), jnp.int32)
+    c = jnp.asarray(rng.randint(0, cfg.vocab, b), jnp.int32)
+    return w, c
+
+
+def params(cfg=CFG, seed=0):
+    return M.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def test_param_shapes():
+    p = params()
+    for (name, shape), arr in zip(CFG.param_shapes(), p):
+        assert arr.shape == shape, name
+        assert arr.dtype == jnp.float32
+
+
+def test_forward_shape_and_impl_invariance():
+    p = params()
+    w, _ = mk_batch(CFG, 16)
+    s_rows = M.forward(p, w, impl="rows")
+    s_native = M.forward(p, w, impl="native", use_pallas_hidden=False)
+    assert s_rows.shape == (16,)
+    np.testing.assert_allclose(s_rows, s_native, atol=1e-5)
+
+
+def test_corrupt_windows_only_center():
+    w, c = mk_batch(CFG, 8, seed=1)
+    neg = M.corrupt_windows(w, c)
+    center = CFG.window // 2
+    assert np.array_equal(np.asarray(neg[:, center]), np.asarray(c))
+    mask = np.ones(CFG.window, bool)
+    mask[center] = False
+    assert np.array_equal(np.asarray(neg[:, mask]), np.asarray(w[:, mask]))
+
+
+def test_loss_nonnegative_and_at_margin_for_tied_scores():
+    p = params()
+    w, _ = mk_batch(CFG, 8, seed=2)
+    # corrupt == original center -> s_pos == s_neg -> loss == margin
+    c = w[:, CFG.window // 2]
+    loss = M.loss_fn(p, w, c)
+    assert float(loss) == pytest.approx(M.MARGIN, abs=1e-6)
+
+
+def test_grad_routes_through_scatter_impl():
+    """The custom VJP must produce the same embedding gradient as plain
+    autodiff through jnp.take — for every scatter implementation."""
+    p = params(seed=3)
+    w, c = mk_batch(CFG, 8, seed=3)
+
+    def plain_loss(pp):
+        e, w1, b1, w2, b2 = pp
+
+        def score(win):
+            emb = jnp.take(e, win.reshape(-1), axis=0).reshape(win.shape[0], -1)
+            h = jnp.tanh(emb @ w1 + b1)
+            return (h @ w2 + b2)[:, 0]
+
+        neg = M.corrupt_windows(w, c)
+        return jnp.mean(jnp.maximum(0.0, M.MARGIN - score(w) + score(neg)))
+
+    g_plain = jax.grad(plain_loss)(p)
+    for impl in ["rows", "native", "naive"]:
+        g = jax.grad(lambda pp: M.loss_fn(pp, w, c, impl=impl,
+                                          use_pallas_hidden=False))(p)
+        for a, b_ in zip(g, g_plain):
+            np.testing.assert_allclose(a, b_, atol=1e-5)
+
+
+def test_train_step_backends_agree():
+    p = params(seed=4)
+    w, c = mk_batch(CFG, 16, seed=4)
+    out_rows = M.sgd_train_step(p, w, c, 0.05, impl="rows")
+    out_native = M.sgd_train_step(p, w, c, 0.05, impl="native",
+                                  use_pallas_hidden=False)
+    for a, b_ in zip(out_rows, out_native):
+        np.testing.assert_allclose(a, b_, atol=1e-5)
+
+
+def test_train_step_decreases_loss_on_repeated_batch():
+    p = params(seed=5)
+    w, c = mk_batch(CFG, 32, seed=5)
+    first = None
+    for _ in range(25):
+        *p, loss = M.sgd_train_step(tuple(p), w, c, 0.2)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first
+
+
+def test_multi_step_equals_sequential_steps():
+    p = params(seed=6)
+    k, b = 4, 8
+    rng = np.random.RandomState(6)
+    wk = jnp.asarray(rng.randint(0, CFG.vocab, (k, b, CFG.window)), jnp.int32)
+    ck = jnp.asarray(rng.randint(0, CFG.vocab, (k, b)), jnp.int32)
+    *p_multi, losses = M.sgd_train_multi(p, wk, ck, 0.1)
+    p_seq = p
+    seq_losses = []
+    for i in range(k):
+        *p_seq, loss = M.sgd_train_step(tuple(p_seq), wk[i], ck[i], 0.1)
+        seq_losses.append(float(loss))
+    for a, b_ in zip(p_multi, p_seq):
+        np.testing.assert_allclose(a, b_, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(losses), seq_losses, atol=1e-5)
+
+
+def test_naive_grad_step_composes_to_full_step():
+    """Dense updates from naive_grad_step + host-side row application must
+    reproduce the fused train step exactly (what gpu-naive relies on)."""
+    p = params(seed=7)
+    w, c = mk_batch(CFG, 8, seed=7)
+    lr = 0.07
+    w1n, b1n, w2n, b2n, idx_all, delta, loss_n = M.naive_grad_step(p, w, c, lr)
+    e_updated = p[0].at[idx_all].add(delta)
+
+    e_f, w1_f, b1_f, w2_f, b2_f, loss_f = M.sgd_train_step(p, w, c, lr,
+                                                           impl="native")
+    np.testing.assert_allclose(loss_n, loss_f, atol=1e-6)
+    np.testing.assert_allclose(e_updated, e_f, atol=1e-5)
+    np.testing.assert_allclose(w1n, w1_f, atol=1e-5)
+    np.testing.assert_allclose(b1n, b1_f, atol=1e-5)
+    np.testing.assert_allclose(w2n, w2_f, atol=1e-5)
+    np.testing.assert_allclose(b2n, b2_f, atol=1e-5)
+
+
+def test_naive_rows_applied_one_at_a_time():
+    """Row-at-a-time application (the per-row dispatch path) equals the
+    batched scatter, duplicates included."""
+    p = params(seed=8)
+    w, c = mk_batch(CFG, 4, seed=8)
+    _, _, _, _, idx_all, delta, _ = M.naive_grad_step(p, w, c, 0.1)
+    e_seq = p[0]
+    for r in range(idx_all.shape[0]):
+        e_seq = SK.scatter_row1(e_seq, idx_all[r : r + 1], delta[r : r + 1])
+    np.testing.assert_allclose(e_seq, p[0].at[idx_all].add(delta), atol=1e-5)
+
+
+def test_batch_loss_and_scores_signatures():
+    p = params()
+    w, c = mk_batch(CFG, 8)
+    (loss,) = M.batch_loss(p, w, c)
+    (s,) = M.scores(p, w)
+    assert loss.shape == ()
+    assert s.shape == (8,)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.sampled_from([1, 2, 8, 16]), seed=st.integers(0, 2**31 - 1),
+       lr=st.floats(1e-4, 0.5))
+def test_property_step_preserves_shapes_and_finiteness(b, seed, lr):
+    p = params(seed=seed % 1000)
+    w, c = mk_batch(CFG, b, seed=seed % 1000)
+    out = M.sgd_train_step(p, w, c, lr)
+    for (name, shape), arr in zip(CFG.param_shapes(), out[:5]):
+        assert arr.shape == shape
+        assert bool(jnp.all(jnp.isfinite(arr))), name
+    assert np.isfinite(float(out[5]))
+
+
+def test_sparse_step_equals_dense_step():
+    """The perf-pass sparse-update step must be numerically identical to
+    the dense-gradient step (all params, all backends)."""
+    p = params(seed=9)
+    w, c = mk_batch(CFG, 16, seed=9)
+    for impl in ["rows", "native"]:
+        dense = M.sgd_train_step(p, w, c, 0.07, impl=impl)
+        sparse = M.sgd_train_step_sparse(p, w, c, 0.07, impl=impl)
+        for a, b_ in zip(dense, sparse):
+            np.testing.assert_allclose(a, b_, atol=1e-5)
+
+
+def test_sparse_multi_equals_sequential_sparse():
+    p = params(seed=10)
+    k, b = 3, 8
+    rng = np.random.RandomState(10)
+    wk = jnp.asarray(rng.randint(0, CFG.vocab, (k, b, CFG.window)), jnp.int32)
+    ck = jnp.asarray(rng.randint(0, CFG.vocab, (k, b)), jnp.int32)
+    *pm, losses = M.sgd_train_multi_sparse(p, wk, ck, 0.1)
+    ps = p
+    for i in range(k):
+        *ps, _ = M.sgd_train_step_sparse(tuple(ps), wk[i], ck[i], 0.1)
+    for a, b_ in zip(pm, ps):
+        np.testing.assert_allclose(a, b_, atol=1e-5)

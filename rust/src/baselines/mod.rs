@@ -1,0 +1,8 @@
+//! Pure-Rust reference implementations used to cross-check PJRT numerics
+//! and to serve as the "pure algorithm" baselines in the benches.
+
+pub mod model_ref;
+pub mod scatter;
+
+pub use model_ref::{ModelParams, RefModel};
+pub use scatter::{scatter_add_parallel, scatter_add_serial};

@@ -1,0 +1,123 @@
+//! Host (pure-Rust) scatter-add baselines.
+//!
+//! `scatter_add_serial` is the semantic reference (row loop, like Theano's
+//! Python implementation); `scatter_add_parallel` shards the *destination*
+//! across threads so duplicate indices never race (each thread applies
+//! only the updates whose target row falls in its stripe) — the same
+//! conflict-avoidance the paper's CUDA kernel achieved with atomics.
+//! Benches compare these against the PJRT artifacts.
+
+use crate::util::threadpool::par_map;
+
+/// `w[idx[r]] += y[r]` — serial reference.
+pub fn scatter_add_serial(w: &mut [f32], d: usize, idx: &[i32], y: &[f32]) {
+    assert_eq!(y.len(), idx.len() * d);
+    assert!(w.len() % d == 0);
+    let v = w.len() / d;
+    for (r, &i) in idx.iter().enumerate() {
+        let i = i as usize;
+        assert!(i < v, "index {i} out of range {v}");
+        let dst = &mut w[i * d..(i + 1) * d];
+        let src = &y[r * d..(r + 1) * d];
+        for (a, b) in dst.iter_mut().zip(src) {
+            *a += b;
+        }
+    }
+}
+
+/// Destination-striped parallel scatter-add.
+pub fn scatter_add_parallel(w: &mut [f32], d: usize, idx: &[i32], y: &[f32], threads: usize) {
+    assert_eq!(y.len(), idx.len() * d);
+    let v = w.len() / d;
+    let threads = threads.max(1).min(v.max(1));
+    let stripe = v.div_ceil(threads);
+    // Each task owns rows [t*stripe, (t+1)*stripe) of w; share w unsafely
+    // but without overlap.
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let wp = SendPtr(w.as_mut_ptr());
+    let wp = std::sync::Arc::new(wp);
+    let idx: std::sync::Arc<Vec<i32>> = std::sync::Arc::new(idx.to_vec());
+    let y: std::sync::Arc<Vec<f32>> = std::sync::Arc::new(y.to_vec());
+    par_map(threads, threads, move |t| {
+        let lo = t * stripe;
+        let hi = ((t + 1) * stripe).min(v);
+        let base = wp.0;
+        for (r, &i) in idx.iter().enumerate() {
+            let i = i as usize;
+            if i >= lo && i < hi {
+                // SAFETY: rows [lo, hi) are exclusively owned by task t.
+                unsafe {
+                    let dst = std::slice::from_raw_parts_mut(base.add(i * d), d);
+                    for (a, b) in dst.iter_mut().zip(&y[r * d..(r + 1) * d]) {
+                        *a += b;
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+    use crate::util::rng::Rng;
+
+    fn mk(v: usize, d: usize, r: usize, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..v * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let idx: Vec<i32> = (0..r).map(|_| rng.below(v as u64) as i32).collect();
+        let y: Vec<f32> = (0..r * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        (w, idx, y)
+    }
+
+    #[test]
+    fn serial_accumulates_duplicates() {
+        let mut w = vec![0.0f32; 4 * 2];
+        let idx = vec![1, 1, 1];
+        let y = vec![1.0f32; 6];
+        scatter_add_serial(&mut w, 2, &idx, &y);
+        assert_eq!(&w[2..4], &[3.0, 3.0]);
+        assert_eq!(w.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        for threads in [1, 2, 4, 7] {
+            let (w0, idx, y) = mk(100, 8, 300, threads as u64);
+            let mut a = w0.clone();
+            let mut b = w0;
+            scatter_add_serial(&mut a, 8, &idx, &y);
+            scatter_add_parallel(&mut b, 8, &idx, &y, threads);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn property_parallel_equals_serial() {
+        forall(
+            "parallel scatter == serial",
+            20,
+            |r| (r.below(60) + 2, r.below(6) + 1, r.below(120), r.next_u64()),
+            |&(v, d, rows, seed)| {
+                let (w0, idx, y) = mk(v as usize, d as usize, rows as usize, seed);
+                let mut a = w0.clone();
+                let mut b = w0;
+                scatter_add_serial(&mut a, d as usize, &idx, &y);
+                scatter_add_parallel(&mut b, d as usize, &idx, &y, 3);
+                a.iter().zip(&b).all(|(x, y)| (x - y).abs() < 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_index_panics() {
+        let mut w = vec![0.0f32; 4];
+        scatter_add_serial(&mut w, 2, &[5], &[1.0, 1.0]);
+    }
+}

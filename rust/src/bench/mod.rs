@@ -1,0 +1,125 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `measure` runs warmup iterations, then `samples` timed iterations, and
+//! returns a `Summary` (mean/σ/min/max/percentiles) — the paper reports
+//! mean(σ), so benches print exactly that. `Bencher` collects named
+//! results and renders a report table; `cargo bench` drives it via
+//! `rust/benches/paper_benches.rs` (harness = false).
+
+use std::time::Instant;
+
+use crate::util::fmt;
+use crate::util::stats::Summary;
+
+/// Time `f` (seconds per call) over `samples` iterations after `warmup`.
+pub fn measure<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut s = Summary::new();
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// A named bench result with an optional unit transform (e.g. rows/s).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub unit: String,
+    /// Multiplier applied when reporting rates (items per call).
+    pub items_per_call: f64,
+}
+
+impl BenchResult {
+    /// Mean seconds per call.
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    /// Mean items/second (using `items_per_call`).
+    pub fn rate(&self) -> f64 {
+        self.items_per_call / self.summary.mean()
+    }
+}
+
+#[derive(Default)]
+pub struct Bencher {
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher::default()
+    }
+
+    pub fn bench<T>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        samples: usize,
+        items_per_call: f64,
+        f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        let summary = measure(warmup, samples, f);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary,
+            unit: "s".into(),
+            items_per_call,
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = fmt::Table::new(&["bench", "mean", "σ", "min", "rate"]);
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                fmt::dur(std::time::Duration::from_secs_f64(r.summary.mean())),
+                fmt::dur(std::time::Duration::from_secs_f64(r.summary.std())),
+                fmt::dur(std::time::Duration::from_secs_f64(r.summary.min())),
+                if r.items_per_call > 0.0 {
+                    format!("{}/s", fmt::si(r.rate()))
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_sane_samples() {
+        let s = measure(2, 10, || {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert_eq!(s.count(), 10);
+        assert!(s.mean() >= 190e-6, "mean {}", s.mean());
+        assert!(s.min() > 0.0);
+    }
+
+    #[test]
+    fn bencher_collects_and_renders() {
+        let mut b = Bencher::new();
+        b.bench("noop", 1, 5, 100.0, || 1 + 1);
+        assert!(b.get("noop").is_some());
+        assert!(b.get("noop").unwrap().rate() > 0.0);
+        let out = b.render();
+        assert!(out.contains("noop"));
+        assert!(out.contains("/s"));
+    }
+}

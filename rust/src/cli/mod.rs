@@ -1,0 +1,263 @@
+//! Command-line parsing (clap is unavailable offline).
+//!
+//! Grammar: `polyglot <subcommand> [--flag value] [--switch] [positional…]`.
+//! Flags may be declared as required/optional with defaults; `--set k=v`
+//! may repeat and accumulates into config overrides. `--help` renders an
+//! auto-generated usage page.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None = boolean switch; Some(default) = value flag (empty string ⇒
+    /// required).
+    pub default: Option<&'static str>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+/// Parsed invocation.
+#[derive(Clone, Debug)]
+pub struct Invocation {
+    pub command: String,
+    pub values: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub sets: Vec<(String, String)>,
+    pub positional: Vec<String>,
+}
+
+impl Invocation {
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.values.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, flag: &str) -> Result<usize> {
+        let v = self.values.get(flag).ok_or_else(|| anyhow::anyhow!("missing --{flag}"))?;
+        Ok(v.parse()?)
+    }
+
+    pub fn get_f64(&self, flag: &str) -> Result<f64> {
+        let v = self.values.get(flag).ok_or_else(|| anyhow::anyhow!("missing --{flag}"))?;
+        Ok(v.parse()?)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [flags]\n\nCOMMANDS:\n",
+            self.program, self.about, self.program);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun `<command> --help` for that command's flags.\n");
+        s
+    }
+
+    pub fn command_usage(&self, cmd: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nFLAGS:\n", self.program, cmd.name, cmd.about);
+        for f in &cmd.flags {
+            let kind = match f.default {
+                None => "switch".to_string(),
+                Some("") => "required".to_string(),
+                Some(d) => format!("default: {d}"),
+            };
+            s.push_str(&format!("  --{:<22} {} [{kind}]\n", f.name, f.help));
+        }
+        s.push_str("  --set <section.key=v>   override a config value (repeatable)\n");
+        s.push_str("  --config <path>          config file (TOML subset)\n");
+        s
+    }
+
+    /// Parse argv (excluding argv[0]). Returns Err(msg) where msg is the
+    /// help text for `--help` flows (caller prints and exits 0 on
+    /// `HelpRequested`).
+    pub fn parse(&self, args: &[String]) -> Result<Invocation, CliError> {
+        let Some(cmd_name) = args.first() else {
+            return Err(CliError::HelpRequested(self.usage()));
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(CliError::HelpRequested(self.usage()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError::Invalid(format!(
+                "unknown command {cmd_name:?}\n\n{}", self.usage())))?;
+
+        let mut inv = Invocation {
+            command: cmd.name.to_string(),
+            values: BTreeMap::new(),
+            switches: Vec::new(),
+            sets: Vec::new(),
+            positional: Vec::new(),
+        };
+        // seed defaults
+        for f in &cmd.flags {
+            if let Some(d) = f.default {
+                if !d.is_empty() {
+                    inv.values.insert(f.name.to_string(), d.to_string());
+                }
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::HelpRequested(self.command_usage(cmd)));
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                if name == "set" {
+                    i += 1;
+                    let kv = args.get(i).ok_or_else(|| {
+                        CliError::Invalid("--set requires section.key=value".into())
+                    })?;
+                    let (k, v) = kv.split_once('=').ok_or_else(|| {
+                        CliError::Invalid(format!("--set {kv:?}: expected key=value"))
+                    })?;
+                    inv.sets.push((k.to_string(), v.to_string()));
+                } else if name == "config" {
+                    i += 1;
+                    let p = args.get(i).ok_or_else(|| {
+                        CliError::Invalid("--config requires a path".into())
+                    })?;
+                    inv.values.insert("config".into(), p.clone());
+                } else {
+                    let spec = cmd.flags.iter().find(|f| f.name == name).ok_or_else(|| {
+                        CliError::Invalid(format!(
+                            "unknown flag --{name} for {}\n\n{}",
+                            cmd.name,
+                            self.command_usage(cmd)
+                        ))
+                    })?;
+                    match spec.default {
+                        None => inv.switches.push(name.to_string()),
+                        Some(_) => {
+                            i += 1;
+                            let v = args.get(i).ok_or_else(|| {
+                                CliError::Invalid(format!("--{name} requires a value"))
+                            })?;
+                            inv.values.insert(name.to_string(), v.clone());
+                        }
+                    }
+                }
+            } else {
+                inv.positional.push(a.clone());
+            }
+            i += 1;
+        }
+
+        // required flags
+        for f in &cmd.flags {
+            if f.default == Some("") && !inv.values.contains_key(f.name) {
+                return Err(CliError::Invalid(format!(
+                    "missing required flag --{} for {}", f.name, cmd.name)));
+            }
+        }
+        Ok(inv)
+    }
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    HelpRequested(String),
+    Invalid(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::HelpRequested(s) | CliError::Invalid(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+pub fn bail_unknown(cmd: &str) -> Result<()> {
+    bail!("unhandled command {cmd}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            program: "polyglot",
+            about: "test",
+            commands: vec![CommandSpec {
+                name: "train",
+                about: "train a model",
+                flags: vec![
+                    FlagSpec { name: "steps", help: "steps", default: Some("100") },
+                    FlagSpec { name: "out", help: "path", default: Some("") },
+                    FlagSpec { name: "verbose", help: "chatty", default: None },
+                ],
+            }],
+        }
+    }
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_defaults_switches() {
+        let inv = cli().parse(&argv("train --out /tmp/x --verbose --set training.lr=0.1")).unwrap();
+        assert_eq!(inv.get("steps"), Some("100"));
+        assert_eq!(inv.get("out"), Some("/tmp/x"));
+        assert!(inv.has("verbose"));
+        assert_eq!(inv.sets, vec![("training.lr".into(), "0.1".into())]);
+    }
+
+    #[test]
+    fn required_flag_enforced() {
+        assert!(matches!(cli().parse(&argv("train")), Err(CliError::Invalid(_))));
+    }
+
+    #[test]
+    fn help_flows() {
+        assert!(matches!(cli().parse(&argv("--help")), Err(CliError::HelpRequested(_))));
+        assert!(matches!(
+            cli().parse(&argv("train --help")),
+            Err(CliError::HelpRequested(_))
+        ));
+        assert!(matches!(cli().parse(&[]), Err(CliError::HelpRequested(_))));
+    }
+
+    #[test]
+    fn unknown_command_and_flag_rejected() {
+        assert!(matches!(cli().parse(&argv("serve")), Err(CliError::Invalid(_))));
+        assert!(matches!(
+            cli().parse(&argv("train --out x --bogus")),
+            Err(CliError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let inv = cli().parse(&argv("train --out x a b")).unwrap();
+        assert_eq!(inv.positional, vec!["a", "b"]);
+    }
+}

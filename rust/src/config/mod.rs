@@ -1,0 +1,351 @@
+//! Typed configuration system: TOML-subset files + `--set section.key=v`
+//! CLI overrides, validated into the structs the rest of the system uses.
+//!
+//! A config file fully determines a run (model dims are informational —
+//! they must match what aot.py baked into the artifacts; `validate`
+//! cross-checks them against the manifest at startup).
+
+pub mod toml;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use toml::Value;
+
+/// Which training backend to drive (DESIGN.md §2 "Backend naming").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Optimized-scatter artifact executed on the host — the paper's CPU.
+    Cpu,
+    /// Grads-export artifact + per-row embedding updates — the paper's
+    /// unoptimized GPU (Theano's per-row AdvancedIncSubtensor1).
+    GpuNaive,
+    /// Pallas-kernel artifact — the paper's optimized GPU.
+    GpuOpt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "cpu" => Backend::Cpu,
+            "gpu-naive" => Backend::GpuNaive,
+            "gpu-opt" => Backend::GpuOpt,
+            _ => bail!("unknown backend {s:?} (expected cpu | gpu-naive | gpu-opt)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Cpu => "cpu",
+            Backend::GpuNaive => "gpu-naive",
+            Backend::GpuOpt => "gpu-opt",
+        }
+    }
+
+    /// Artifact-name tag this backend trains with.
+    pub fn artifact_tag(&self) -> &'static str {
+        match self {
+            Backend::Cpu => "ref",
+            Backend::GpuNaive => "naive",
+            Backend::GpuOpt => "opt",
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub dim: usize,
+    pub window: usize,
+    pub hidden: usize,
+}
+
+impl Default for ModelCfg {
+    fn default() -> Self {
+        // Must match aot.py MAIN.
+        Self { vocab: 20480, dim: 64, window: 5, hidden: 32 }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainingCfg {
+    pub backend: Backend,
+    pub batch: usize,
+    pub lr: f32,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    /// Mean-hinge threshold for "converged" (the paper's `error < 0.05`
+    /// criterion, rescaled for the synthetic corpus — see DESIGN.md §10).
+    pub converge_threshold: f32,
+    /// Use the K-step fused artifact when available.
+    pub fused_steps: usize,
+}
+
+impl Default for TrainingCfg {
+    fn default() -> Self {
+        Self {
+            backend: Backend::GpuOpt,
+            batch: 16, // the paper's default batch size (§4.6)
+            lr: 0.05,
+            steps: 500,
+            seed: 0x706f6c79, // "poly"
+            log_every: 50,
+            converge_threshold: 0.35,
+            fused_steps: 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataCfg {
+    pub languages: usize,
+    pub tokens_per_language: usize,
+    pub min_count: usize,
+    pub producers: usize,
+    pub queue_depth: usize,
+    /// Optional on-disk corpus; when empty the synthetic generator is used.
+    pub corpus_path: String,
+}
+
+impl Default for DataCfg {
+    fn default() -> Self {
+        Self {
+            languages: 3,
+            tokens_per_language: 200_000,
+            min_count: 2,
+            producers: 2,
+            queue_depth: 64,
+            corpus_path: String::new(),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct RuntimeCfg {
+    pub artifacts_dir: String,
+    pub checkpoint_dir: String,
+}
+
+impl Default for RuntimeCfg {
+    fn default() -> Self {
+        Self { artifacts_dir: "artifacts".into(), checkpoint_dir: "checkpoints".into() }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerCfg {
+    pub addr: String,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+    pub threads: usize,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7878".into(), max_batch: 32, max_wait_ms: 5, threads: 4 }
+    }
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub model: ModelCfg,
+    pub training: TrainingCfg,
+    pub data: DataCfg,
+    pub runtime: RuntimeCfg,
+    pub server: ServerCfg,
+}
+
+impl Config {
+    /// Load a config file (if given), then apply `--set` overrides.
+    pub fn load(path: Option<&Path>, overrides: &[(String, String)]) -> Result<Config> {
+        let mut map = match path {
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .with_context(|| format!("reading config {}", p.display()))?;
+                toml::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", p.display()))?
+            }
+            None => BTreeMap::new(),
+        };
+        for (k, v) in overrides {
+            let val = Value::parse_scalar(v)
+                .or_else(|_| Value::parse_scalar(&format!("\"{v}\"")))
+                .map_err(|e| anyhow::anyhow!("--set {k}: {e}"))?;
+            map.insert(k.clone(), val);
+        }
+        Config::from_map(&map)
+    }
+
+    pub fn from_map(map: &BTreeMap<String, Value>) -> Result<Config> {
+        let mut cfg = Config::default();
+        for (key, val) in map {
+            cfg.apply(key, val).with_context(|| format!("config key {key:?}"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, key: &str, v: &Value) -> Result<()> {
+        let usize_of = |v: &Value| -> Result<usize> {
+            v.as_i64()
+                .and_then(|i| usize::try_from(i).ok())
+                .ok_or_else(|| anyhow::anyhow!("expected non-negative integer"))
+        };
+        match key {
+            "model.vocab" => self.model.vocab = usize_of(v)?,
+            "model.dim" => self.model.dim = usize_of(v)?,
+            "model.window" => self.model.window = usize_of(v)?,
+            "model.hidden" => self.model.hidden = usize_of(v)?,
+            "training.backend" => {
+                self.training.backend =
+                    Backend::parse(v.as_str().context("expected string")?)?
+            }
+            "training.batch" => self.training.batch = usize_of(v)?,
+            "training.lr" => {
+                self.training.lr = v.as_f64().context("expected float")? as f32
+            }
+            "training.steps" => self.training.steps = usize_of(v)?,
+            "training.seed" => {
+                self.training.seed = v.as_i64().context("expected int")? as u64
+            }
+            "training.log_every" => self.training.log_every = usize_of(v)?,
+            "training.converge_threshold" => {
+                self.training.converge_threshold =
+                    v.as_f64().context("expected float")? as f32
+            }
+            "training.fused_steps" => self.training.fused_steps = usize_of(v)?,
+            "data.languages" => self.data.languages = usize_of(v)?,
+            "data.tokens_per_language" => self.data.tokens_per_language = usize_of(v)?,
+            "data.min_count" => self.data.min_count = usize_of(v)?,
+            "data.producers" => self.data.producers = usize_of(v)?,
+            "data.queue_depth" => self.data.queue_depth = usize_of(v)?,
+            "data.corpus_path" => {
+                self.data.corpus_path = v.as_str().context("expected string")?.into()
+            }
+            "runtime.artifacts_dir" => {
+                self.runtime.artifacts_dir = v.as_str().context("expected string")?.into()
+            }
+            "runtime.checkpoint_dir" => {
+                self.runtime.checkpoint_dir = v.as_str().context("expected string")?.into()
+            }
+            "server.addr" => self.server.addr = v.as_str().context("expected string")?.into(),
+            "server.max_batch" => self.server.max_batch = usize_of(v)?,
+            "server.max_wait_ms" => {
+                self.server.max_wait_ms = v.as_i64().context("expected int")? as u64
+            }
+            "server.threads" => self.server.threads = usize_of(v)?,
+            _ => bail!("unknown config key"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.model.window % 2 == 0 || self.model.window == 0 {
+            bail!("model.window must be odd and positive (center word corruption)");
+        }
+        if self.model.vocab < 2 {
+            bail!("model.vocab must be >= 2");
+        }
+        if self.training.batch == 0 {
+            bail!("training.batch must be positive");
+        }
+        if !(self.training.lr.is_finite() && self.training.lr > 0.0) {
+            bail!("training.lr must be positive and finite");
+        }
+        if self.data.producers == 0 || self.data.queue_depth == 0 {
+            bail!("data.producers and data.queue_depth must be positive");
+        }
+        if self.training.fused_steps == 0 {
+            bail!("training.fused_steps must be >= 1");
+        }
+        if self.server.max_batch == 0 {
+            bail!("server.max_batch must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config_text() {
+        let doc = r#"
+            [model]
+            vocab = 2048
+            dim = 16
+            hidden = 16
+
+            [training]
+            backend = "cpu"
+            batch = 64
+            lr = 0.1
+            steps = 10
+
+            [data]
+            languages = 2
+            producers = 1
+
+            [server]
+            addr = "127.0.0.1:9999"
+        "#;
+        let map = toml::parse(doc).unwrap();
+        let cfg = Config::from_map(&map).unwrap();
+        assert_eq!(cfg.model.vocab, 2048);
+        assert_eq!(cfg.training.backend, Backend::Cpu);
+        assert_eq!(cfg.training.batch, 64);
+        assert_eq!(cfg.server.addr, "127.0.0.1:9999");
+        // untouched values keep defaults
+        assert_eq!(cfg.model.window, 5);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let map = toml::parse("[training]\nbatchsize = 4").unwrap();
+        assert!(Config::from_map(&map).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        for bad in [
+            "[model]\nwindow = 4",
+            "[training]\nbatch = 0",
+            "[training]\nlr = -0.5",
+            "[training]\nbackend = \"cuda\"",
+        ] {
+            let map = toml::parse(bad).unwrap();
+            assert!(Config::from_map(&map).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn overrides_apply_after_file() {
+        let cfg = Config::load(
+            None,
+            &[
+                ("training.batch".into(), "128".into()),
+                ("training.backend".into(), "\"gpu-naive\"".into()),
+                ("data.corpus_path".into(), "/tmp/x.txt".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.training.batch, 128);
+        assert_eq!(cfg.training.backend, Backend::GpuNaive);
+        assert_eq!(cfg.data.corpus_path, "/tmp/x.txt");
+    }
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in [Backend::Cpu, Backend::GpuNaive, Backend::GpuOpt] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! TOML-subset parser (the `toml` crate is unavailable offline).
+//!
+//! Supports what the project's config files use: `[section]` headers,
+//! `key = value` with integer / float / boolean / string / homogeneous
+//! array values, `#` comments, and blank lines. Produces a flat
+//! `section.key -> Value` map; `config::schema` layers types on top.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Parse a scalar literal the way a TOML value position would.
+    pub fn parse_scalar(s: &str) -> Result<Value, TomlError> {
+        let s = s.trim();
+        if s == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if s == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+            return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+        }
+        if s.starts_with('[') && s.ends_with(']') {
+            let inner = &s[1..s.len() - 1];
+            let mut items = Vec::new();
+            if !inner.trim().is_empty() {
+                for part in split_top_level(inner) {
+                    items.push(Value::parse_scalar(&part)?);
+                }
+            }
+            return Ok(Value::Arr(items));
+        }
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = s.replace('_', "").parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(TomlError { line: 0, msg: format!("cannot parse value {s:?}") })
+    }
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a document into a flat `"section.key" -> Value` map. Keys outside
+/// any section go in bare (`"key"`).
+pub fn parse(doc: &str) -> Result<BTreeMap<String, Value>, TomlError> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in doc.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') || line.len() < 3 {
+                return Err(TomlError { line: lineno + 1, msg: format!("bad section {line:?}") });
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or(TomlError {
+            line: lineno + 1,
+            msg: format!("expected key = value, got {line:?}"),
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError { line: lineno + 1, msg: "empty key".into() });
+        }
+        let val = Value::parse_scalar(&line[eq + 1..])
+            .map_err(|e| TomlError { line: lineno + 1, msg: e.msg })?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        map.insert(full, val);
+    }
+    Ok(map)
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = r#"
+            # training config
+            [model]
+            vocab = 20_480
+            dim = 64
+
+            [training]
+            lr = 0.05       # step size
+            backend = "gpu-opt"
+            batches = [16, 32, 64]
+            verbose = true
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["model.vocab"], Value::Int(20480));
+        assert_eq!(m["training.lr"], Value::Float(0.05));
+        assert_eq!(m["training.backend"], Value::Str("gpu-opt".into()));
+        assert_eq!(
+            m["training.batches"],
+            Value::Arr(vec![Value::Int(16), Value::Int(32), Value::Int(64)])
+        );
+        assert_eq!(m["training.verbose"], Value::Bool(true));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let m = parse("name = \"a#b\"").unwrap();
+        assert_eq!(m["name"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn bare_keys_before_section() {
+        let m = parse("x = 1\n[s]\ny = 2").unwrap();
+        assert_eq!(m["x"], Value::Int(1));
+        assert_eq!(m["s.y"], Value::Int(2));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken line").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("[unclosed").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Float(0.5).as_i64(), None);
+        assert_eq!(Value::parse_scalar("[]").unwrap(), Value::Arr(vec![]));
+    }
+
+    #[test]
+    fn nested_arrays_split_correctly() {
+        let v = Value::parse_scalar("[[1, 2], [3]]").unwrap();
+        let outer = v.as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,120 @@
+//! Checkpoint format: a self-describing little-endian binary container for
+//! the five parameter tensors (magic `PGCK`, version, dims, then raw f32).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::model_ref::ModelParams;
+
+const MAGIC: &[u8; 4] = b"PGCK";
+const VERSION: u32 = 1;
+
+pub fn save(path: &Path, p: &ModelParams) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    for v in [VERSION, p.vocab as u32, p.dim as u32, p.window as u32, p.hidden as u32] {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    for tensor in [&p.e, &p.w1, &p.b1, &p.w2, &p.b2] {
+        f.write_all(&(tensor.len() as u64).to_le_bytes())?;
+        for x in tensor.iter() {
+            f.write_all(&x.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<ModelParams> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a polyglot checkpoint", path.display());
+    }
+    let mut u32buf = [0u8; 4];
+    let mut read_u32 = |f: &mut dyn Read| -> Result<u32> {
+        f.read_exact(&mut u32buf)?;
+        Ok(u32::from_le_bytes(u32buf))
+    };
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("checkpoint version {version} unsupported");
+    }
+    let vocab = read_u32(&mut f)? as usize;
+    let dim = read_u32(&mut f)? as usize;
+    let window = read_u32(&mut f)? as usize;
+    let hidden = read_u32(&mut f)? as usize;
+
+    let read_tensor = |f: &mut dyn Read, expect: usize, name: &str| -> Result<Vec<f32>> {
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u64buf)?;
+        let n = u64::from_le_bytes(u64buf) as usize;
+        if n != expect {
+            bail!("tensor {name}: {n} elements, expected {expect}");
+        }
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let concat = window * dim;
+    let e = read_tensor(&mut f, vocab * dim, "e")?;
+    let w1 = read_tensor(&mut f, concat * hidden, "w1")?;
+    let b1 = read_tensor(&mut f, hidden, "b1")?;
+    let w2 = read_tensor(&mut f, hidden, "w2")?;
+    let b2 = read_tensor(&mut f, 1, "b2")?;
+    Ok(ModelParams { vocab, dim, window, hidden, e, w1, b1, w2, b2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let p = ModelParams::init(50, 4, 3, 6, 99);
+        let dir = std::env::temp_dir().join(format!("pg-ckpt-{}", std::process::id()));
+        let path = dir.join("model.pgck");
+        save(&path, &p).unwrap();
+        let q = load(&path).unwrap();
+        assert_eq!(p.vocab, q.vocab);
+        assert_eq!(p.e, q.e);
+        assert_eq!(p.w1, q.w1);
+        assert_eq!(p.b2, q.b2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let dir = std::env::temp_dir().join(format!("pg-ckpt-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.pgck");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let p = ModelParams::init(20, 2, 3, 2, 1);
+        let dir = std::env::temp_dir().join(format!("pg-ckpt-trunc-{}", std::process::id()));
+        let path = dir.join("t.pgck");
+        save(&path, &p).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

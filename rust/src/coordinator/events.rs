@@ -1,0 +1,104 @@
+//! Structured run log: JSON-lines events for training runs.
+//!
+//! Every run can stream `{"t": seconds, "event": ..., ...}` records to a
+//! file so loss curves and rate traces are machine-readable (the source
+//! of truth behind EXPERIMENTS.md's end-to-end section). One line per
+//! event; the file is append-only and crash-tolerant (each line is
+//! self-contained).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub struct EventLog {
+    out: std::io::BufWriter<std::fs::File>,
+    t0: Instant,
+}
+
+impl EventLog {
+    pub fn create(path: &Path) -> Result<EventLog> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating event log {}", path.display()))?;
+        Ok(EventLog { out: std::io::BufWriter::new(f), t0: Instant::now() })
+    }
+
+    /// Append one event. `fields` are merged into the record.
+    pub fn emit(&mut self, event: &str, fields: &[(&str, Json)]) -> Result<()> {
+        let mut m = BTreeMap::new();
+        m.insert("t".to_string(), Json::Num(self.t0.elapsed().as_secs_f64()));
+        m.insert("event".to_string(), Json::Str(event.to_string()));
+        for (k, v) in fields {
+            m.insert(k.to_string(), v.clone());
+        }
+        writeln!(self.out, "{}", Json::Obj(m).render())?;
+        self.out.flush()?;
+        Ok(())
+    }
+
+    pub fn step(&mut self, step: u64, loss: f32, rate: f64) -> Result<()> {
+        self.emit(
+            "step",
+            &[
+                ("step", Json::Num(step as f64)),
+                ("loss", Json::Num(loss as f64)),
+                ("rate", Json::Num(rate)),
+            ],
+        )
+    }
+}
+
+/// Parse an event-log file back into records (analysis / tests).
+pub fn read_events(path: &Path) -> Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading event log {}", path.display()))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).map_err(|e| anyhow::anyhow!("bad event line: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_events() {
+        let dir = std::env::temp_dir().join(format!("pg-events-{}", std::process::id()));
+        let path = dir.join("run.jsonl");
+        {
+            let mut log = EventLog::create(&path).unwrap();
+            log.emit("run_start", &[("backend", Json::Str("gpu-opt".into()))]).unwrap();
+            log.step(1, 0.98, 3500.0).unwrap();
+            log.step(2, 0.95, 3600.0).unwrap();
+            log.emit("run_end", &[("examples", Json::Num(32.0))]).unwrap();
+        }
+        let events = read_events(&path).unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].get("event").unwrap().as_str(), Some("run_start"));
+        assert_eq!(events[1].get("step").unwrap().as_i64(), Some(1));
+        assert!(events[1].get("loss").unwrap().as_f64().unwrap() < 1.0);
+        // timestamps monotone
+        let ts: Vec<f64> =
+            events.iter().map(|e| e.get("t").unwrap().as_f64().unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[1] >= w[0]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("pg-events-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"ok\":1}\nnot json\n").unwrap();
+        assert!(read_events(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,105 @@
+//! Training metrics: the paper's examples/second plus loss trajectory.
+//!
+//! `rate_summary` reports mean(σ) over per-window rates exactly the way
+//! the paper does ("mean training rate was 5512.6 examples/second
+//! (σ = 30.315)"): wall time is chunked into fixed-size step windows and
+//! each window contributes one rate sample.
+
+use std::time::Duration;
+
+use crate::util::stats::{Running, Summary};
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub steps: u64,
+    pub examples: u64,
+    pub losses: Vec<f32>,
+    pub step_time: Running,
+    /// Rate samples: one per `window` steps.
+    rate_samples: Summary,
+    window: u64,
+    win_examples: u64,
+    win_time: Duration,
+}
+
+impl Metrics {
+    /// `window` = steps per rate sample (paper-style repeated measurement).
+    pub fn new(window: u64) -> Metrics {
+        Metrics {
+            steps: 0,
+            examples: 0,
+            losses: Vec::new(),
+            step_time: Running::new(),
+            rate_samples: Summary::new(),
+            window: window.max(1),
+            win_examples: 0,
+            win_time: Duration::ZERO,
+        }
+    }
+
+    pub fn record_step(&mut self, batch: usize, loss: f32, dt: Duration) {
+        self.steps += 1;
+        self.examples += batch as u64;
+        self.losses.push(loss);
+        self.step_time.push(dt.as_secs_f64());
+        self.win_examples += batch as u64;
+        self.win_time += dt;
+        if self.steps % self.window == 0 && self.win_time > Duration::ZERO {
+            self.rate_samples
+                .push(self.win_examples as f64 / self.win_time.as_secs_f64());
+            self.win_examples = 0;
+            self.win_time = Duration::ZERO;
+        }
+    }
+
+    /// Overall examples/second.
+    pub fn rate(&self) -> f64 {
+        let t = self.step_time.mean() * self.steps as f64;
+        if t == 0.0 {
+            0.0
+        } else {
+            self.examples as f64 / t
+        }
+    }
+
+    /// Windowed rate samples (mean, σ) — the paper's reporting format.
+    pub fn rate_summary(&self) -> &Summary {
+        &self.rate_samples
+    }
+
+    /// Mean loss over the last `n` steps.
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        tail.iter().sum::<f32>() / tail.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_and_losses_accumulate() {
+        let mut m = Metrics::new(2);
+        for i in 0..6 {
+            m.record_step(16, 1.0 / (i + 1) as f32, Duration::from_millis(10));
+        }
+        assert_eq!(m.steps, 6);
+        assert_eq!(m.examples, 96);
+        // 16 examples / 10ms = 1600/s
+        assert!((m.rate() - 1600.0).abs() < 1.0, "rate {}", m.rate());
+        assert_eq!(m.rate_summary().count(), 3);
+        assert!((m.rate_summary().mean() - 1600.0).abs() < 1.0);
+        assert!(m.recent_loss(2) < 0.3);
+    }
+
+    #[test]
+    fn empty_metrics_sane() {
+        let m = Metrics::new(10);
+        assert_eq!(m.rate(), 0.0);
+        assert!(m.recent_loss(5).is_nan());
+    }
+}

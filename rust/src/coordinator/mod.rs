@@ -1,0 +1,15 @@
+//! L3 coordination: the training loop over PJRT artifacts, metrics, and
+//! checkpointing. See `trainer` for the three backend strategies — this is
+//! the paper's "system" layer, where the per-row dispatch cost of the
+//! unoptimized advanced-indexing implementation lives.
+
+pub mod checkpoint;
+pub mod events;
+pub mod metrics;
+pub mod pipeline;
+pub mod trainer;
+
+pub use events::EventLog;
+pub use metrics::Metrics;
+pub use pipeline::{prepare_corpus, run_training, PreparedCorpus, RunOptions, TrainReport};
+pub use trainer::{clone_literal, download_params, upload_params, ModelSize, Trainer};

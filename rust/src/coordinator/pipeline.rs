@@ -1,0 +1,222 @@
+//! High-level composition: config → corpus → vocab → batcher → trainer.
+//!
+//! This is the API the CLI (`polyglot train …`) and the examples drive; it
+//! wires the substrates together the way the paper's experiments need and
+//! returns the trained parameters + metrics.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::corpus::{generator, loader, CorpusSpec};
+use crate::data::{shard::split_shards, Batcher};
+use crate::eval::ConvergenceTracker;
+use crate::runtime::{lit_i32, to_scalar_f32, Runtime};
+use crate::text::Vocab;
+
+use super::trainer::{ModelSize, Trainer};
+
+/// Tokenized + id-encoded corpus with its vocabulary.
+pub struct PreparedCorpus {
+    pub vocab: Vocab,
+    pub sentences: Vec<Vec<u32>>,
+    pub tokens: usize,
+}
+
+/// Build (or load) the corpus and its vocabulary per the config. The vocab
+/// is capped at the artifact's baked vocabulary size so every id is a
+/// valid embedding row.
+pub fn prepare_corpus(cfg: &Config, artifact_vocab: usize) -> Result<PreparedCorpus> {
+    let sentences: Vec<Vec<String>> = if cfg.data.corpus_path.is_empty() {
+        let spec = CorpusSpec {
+            languages: cfg.data.languages,
+            tokens_per_language: cfg.data.tokens_per_language,
+            lexicon: (artifact_vocab / cfg.data.languages.max(1)).clamp(500, 20_000),
+            seed: cfg.training.seed,
+            threads: cfg.data.producers.max(2),
+            ..CorpusSpec::default()
+        };
+        generator::generate(&spec).sentences
+    } else {
+        loader::load_text_file(Path::new(&cfg.data.corpus_path))?
+    };
+    let vocab = Vocab::build(
+        sentences.iter().map(|s| s.as_slice()),
+        cfg.data.min_count,
+        artifact_vocab,
+    );
+    let encoded: Vec<Vec<u32>> = sentences.iter().map(|s| vocab.encode(s)).collect();
+    let tokens = encoded.iter().map(|s| s.len()).sum();
+    Ok(PreparedCorpus { vocab, sentences: encoded, tokens })
+}
+
+/// Outcome of a training run.
+pub struct TrainReport {
+    pub steps: u64,
+    pub examples: u64,
+    pub wall: std::time::Duration,
+    pub rate_mean: f64,
+    pub rate_std: f64,
+    pub final_loss: f32,
+    pub loss_curve: Vec<(u64, f32)>,
+    pub converged: Option<crate::eval::convergence::ConvergencePoint>,
+}
+
+/// Options controlling `run_training` beyond the config.
+pub struct RunOptions {
+    pub size: ModelSize,
+    pub steps: usize,
+    /// Evaluate convergence every N steps (0 = never).
+    pub eval_every: usize,
+    /// Stop at convergence (Fig 1b runs) instead of exhausting steps.
+    pub stop_on_converge: bool,
+    pub quiet: bool,
+    /// Stream JSONL run events to this path (empty = off).
+    pub event_log: String,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self { size: ModelSize::Main, steps: 500, eval_every: 0, stop_on_converge: false,
+               quiet: false, event_log: String::new() }
+    }
+}
+
+/// Drive a full training run; returns the trainer (holding final params)
+/// and the report.
+pub fn run_training<'rt>(
+    rt: &'rt Runtime,
+    cfg: &Config,
+    corpus: &PreparedCorpus,
+    opts: &RunOptions,
+) -> Result<(Trainer<'rt>, TrainReport)> {
+    let mut trainer = Trainer::new(rt, cfg, opts.size)?;
+    let dims = trainer.dims.clone();
+
+    let shards = split_shards(corpus.sentences.clone(), cfg.data.producers, cfg.training.seed);
+    let batcher = Batcher::spawn(
+        shards,
+        dims.window,
+        cfg.training.batch,
+        dims.vocab.min(corpus.vocab.len().max(3)),
+        cfg.data.queue_depth,
+        cfg.training.seed,
+    );
+
+    // held-out eval batch for convergence (small model only has the small
+    // eval artifact; main model uses loss_eval_b256)
+    let eval_exe = if opts.eval_every > 0 {
+        let name = match opts.size {
+            ModelSize::Small => "loss_eval_small_b256",
+            ModelSize::Main => "loss_eval_b256",
+        };
+        Some(rt.load(name).context("loss_eval artifact")?)
+    } else {
+        None
+    };
+    let eval_batch = batcher.next().map(|mut b| {
+        // replicate up to 256 examples for the eval artifact
+        while b.corrupt.len() < 256 {
+            let n = b.corrupt.len().min(256 - b.corrupt.len());
+            let w = b.windows[..n * b.window].to_vec();
+            let c = b.corrupt[..n].to_vec();
+            b.windows.extend(w);
+            b.corrupt.extend(c);
+        }
+        b.windows.truncate(256 * b.window);
+        b.corrupt.truncate(256);
+        b.batch = 256;
+        b
+    });
+
+    let mut tracker = ConvergenceTracker::new(cfg.training.converge_threshold);
+    let mut events = if opts.event_log.is_empty() {
+        None
+    } else {
+        let mut log = super::events::EventLog::create(Path::new(&opts.event_log))?;
+        log.emit(
+            "run_start",
+            &[
+                ("backend", crate::util::json::Json::Str(cfg.training.backend.name().into())),
+                ("batch", crate::util::json::Json::Num(cfg.training.batch as f64)),
+            ],
+        )?;
+        Some(log)
+    };
+    let mut loss_curve = Vec::new();
+    let t0 = Instant::now();
+    let fused = cfg.training.fused_steps.max(1);
+    let mut step = 0usize;
+    while step < opts.steps {
+        let loss = if fused > 1 && step + fused <= opts.steps {
+            let batches: Vec<_> = (0..fused)
+                .map(|_| batcher.next().context("batch queue closed"))
+                .collect::<Result<_>>()?;
+            let losses = trainer.step_fused(&batches)?;
+            step += fused;
+            *losses.last().unwrap()
+        } else {
+            let batch = batcher.next().context("batch queue closed")?;
+            let loss = trainer.step(&batch)?;
+            step += 1;
+            loss
+        };
+
+        if !opts.quiet && cfg.training.log_every > 0 && step % cfg.training.log_every == 0 {
+            println!(
+                "step {step:>6}  loss {loss:.4}  rate {:.0} ex/s",
+                trainer.metrics.rate()
+            );
+        }
+        if step % 10 == 0 || step == opts.steps {
+            loss_curve.push((step as u64, trainer.metrics.recent_loss(10)));
+            if let Some(log) = events.as_mut() {
+                log.step(step as u64, trainer.metrics.recent_loss(10),
+                         trainer.metrics.rate())?;
+            }
+        }
+
+        if let (Some(exe), Some(eb)) = (&eval_exe, &eval_batch) {
+            if opts.eval_every > 0 && step % opts.eval_every == 0 {
+                let w = lit_i32(&eb.windows, &[256, dims.window])?;
+                let c = lit_i32(&eb.corrupt, &[256])?;
+                let inputs: Vec<&xla::Literal> =
+                    trainer.params().iter().chain([&w, &c]).collect();
+                let l = to_scalar_f32(&exe.run(&inputs)?[0])?;
+                let hit = tracker.update(
+                    l,
+                    step as u64,
+                    trainer.metrics.examples,
+                    t0.elapsed(),
+                );
+                if hit && opts.stop_on_converge {
+                    break;
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    if let Some(log) = events.as_mut() {
+        log.emit(
+            "run_end",
+            &[("examples", crate::util::json::Json::Num(trainer.metrics.examples as f64))],
+        )?;
+    }
+    batcher.shutdown();
+
+    let rates = trainer.metrics.rate_summary();
+    let report = TrainReport {
+        steps: trainer.metrics.steps,
+        examples: trainer.metrics.examples,
+        wall,
+        // windowed mean(σ) when enough steps ran; overall rate otherwise
+        rate_mean: if rates.count() > 0 { rates.mean() } else { trainer.metrics.rate() },
+        rate_std: rates.std(),
+        final_loss: trainer.metrics.recent_loss(20),
+        loss_curve,
+        converged: tracker.converged().copied(),
+    };
+    Ok((trainer, report))
+}

@@ -1,0 +1,65 @@
+//! Plain-text corpus loader (one sentence per line) for users with real
+//! data; the quickstart example writes and reloads a tiny corpus through
+//! this path to prove it.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::text::tokenizer::tokenize_lines;
+
+/// Load and tokenize a text file: one sentence per line.
+pub fn load_text_file(path: &Path) -> Result<Vec<Vec<String>>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading corpus {}", path.display()))?;
+    let sentences = tokenize_lines(&text);
+    if sentences.is_empty() {
+        anyhow::bail!("corpus {} contains no sentences", path.display());
+    }
+    Ok(sentences)
+}
+
+/// Write sentences to a text file (inverse of `load_text_file`).
+pub fn write_text_file(path: &Path, sentences: &[Vec<String>]) -> Result<()> {
+    let mut out = String::new();
+    for s in sentences {
+        out.push_str(&s.join(" "));
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing corpus {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join(format!("polyglot-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("corpus.txt");
+        let sents = vec![
+            vec!["hello".to_string(), "world".to_string()],
+            vec!["b".to_string()],
+        ];
+        write_text_file(&p, &sents).unwrap();
+        let loaded = load_text_file(&p).unwrap();
+        assert_eq!(loaded, sents);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_text_file(Path::new("/nonexistent/corpus.txt")).is_err());
+    }
+
+    #[test]
+    fn empty_file_errors() {
+        let dir = std::env::temp_dir().join(format!("polyglot-test-empty-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("empty.txt");
+        std::fs::write(&p, "\n  \n").unwrap();
+        assert!(load_text_file(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

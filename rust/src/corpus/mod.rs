@@ -1,0 +1,18 @@
+//! Corpus substrate.
+//!
+//! The paper trains Polyglot on massive unannotated multilingual text
+//! (100+ Wikipedia languages). That data isn't available here, so
+//! `generator` synthesizes a corpus with the statistics that matter for
+//! training-rate and convergence measurements: per-language Zipfian
+//! unigram distributions over distinct synthetic lexicons, with bigram
+//! (Markov) local structure so context windows carry signal the model can
+//! actually learn (DESIGN.md §2). `loader` reads real text files for users
+//! who have their own corpus.
+
+pub mod generator;
+pub mod loader;
+pub mod zipf;
+
+pub use generator::{CorpusSpec, SyntheticCorpus};
+pub use loader::load_text_file;
+pub use zipf::Zipf;

@@ -1,0 +1,100 @@
+//! Zipf–Mandelbrot sampler.
+//!
+//! Natural-language unigram frequencies follow a Zipfian law; the synthetic
+//! corpus must too, or the vocabulary truncation and `<UNK>` rates — and
+//! with them the advanced-indexing access pattern the paper profiles —
+//! would be unrealistically uniform. Sampling uses a precomputed CDF +
+//! binary search (O(log n) per draw).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// `p(k) ∝ 1 / (k + q)^s` for ranks `k = 1..=n`.
+    pub fn new(n: usize, s: f64, q: f64) -> Zipf {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64 + q).powf(s);
+            cdf.push(acc);
+        }
+        Zipf { cdf }
+    }
+
+    /// Classic Zipf (q = 0, s ≈ 1) — the empirical fit for word frequency.
+    pub fn classic(n: usize) -> Zipf {
+        Zipf::new(n, 1.07, 2.7) // Mandelbrot parameters fit to text corpora
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw a rank in `[0, n)` (0 = most frequent).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        rng.sample_cdf(&self.cdf)
+    }
+
+    /// Probability of rank `k`.
+    pub fn pmf(&self, k: usize) -> f64 {
+        let total = *self.cdf.last().unwrap();
+        let lo = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        (self.cdf[k] - lo) / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let z = Zipf::new(100, 1.0, 0.0);
+        let sum: f64 = (0..100).map(|k| z.pmf(k)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_ordering_monotone() {
+        let z = Zipf::classic(50);
+        for k in 1..50 {
+            assert!(z.pmf(k) <= z.pmf(k - 1) + 1e-15, "rank {k}");
+        }
+    }
+
+    #[test]
+    fn empirical_matches_pmf() {
+        let z = Zipf::new(20, 1.0, 0.0);
+        let mut rng = Rng::new(123);
+        let n = 200_000;
+        let mut counts = vec![0usize; 20];
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for k in 0..20 {
+            let emp = counts[k] as f64 / n as f64;
+            assert!(
+                (emp - z.pmf(k)).abs() < 0.01,
+                "rank {k}: emp {emp:.4} vs pmf {:.4}",
+                z.pmf(k)
+            );
+        }
+    }
+
+    #[test]
+    fn head_heaviness() {
+        // top-10% of ranks should carry well over half the mass at s>=1
+        let z = Zipf::classic(1000);
+        let head: f64 = (0..100).map(|k| z.pmf(k)).sum();
+        assert!(head > 0.5, "head mass {head}");
+    }
+}

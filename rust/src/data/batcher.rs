@@ -1,0 +1,241 @@
+//! Batched example assembly behind a bounded queue.
+//!
+//! Producer threads walk their corpus shards, build `[B, C]` window +
+//! `[B]` corruption batches, and push them into a bounded channel; the
+//! trainer pops. The bound gives backpressure: if PJRT execution falls
+//! behind (e.g. the gpu-naive backend's per-row dispatch), producers block
+//! instead of ballooning memory — the same role Theano's shared-variable
+//! staging played.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::data::negative::NegativeSampler;
+use crate::data::windows::WindowIter;
+use crate::util::rng::Rng;
+
+/// One training batch, flattened for the PJRT literal layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    /// `[B * C]` window ids, row-major.
+    pub windows: Vec<i32>,
+    /// `[B]` corruption ids.
+    pub corrupt: Vec<i32>,
+    pub batch: usize,
+    pub window: usize,
+}
+
+impl Batch {
+    pub fn centers(&self) -> impl Iterator<Item = i32> + '_ {
+        let c = self.window;
+        self.windows.chunks(c).map(move |w| w[c / 2])
+    }
+}
+
+/// Bounded MPMC queue with blocking push/pop and close semantics.
+pub struct BatchQueue {
+    inner: Mutex<QueueState>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct QueueState {
+    q: VecDeque<Batch>,
+    closed: bool,
+}
+
+impl BatchQueue {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        assert!(capacity > 0);
+        Arc::new(Self {
+            inner: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        })
+    }
+
+    /// Blocking push; returns false if the queue was closed.
+    pub fn push(&self, b: Batch) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        while st.q.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.q.push_back(b);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; None once closed and drained.
+    pub fn pop(&self) -> Option<Batch> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(b) = st.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(b);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Producer-thread pipeline feeding a `BatchQueue`.
+pub struct Batcher {
+    pub queue: Arc<BatchQueue>,
+    producers: Vec<JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn `shards.len()` producer threads. Each walks its shard's
+    /// windows in order (cycling epochs) and draws corruptions from its own
+    /// seeded RNG stream, so the batch *stream* is deterministic per shard
+    /// (inter-shard interleaving depends on scheduling, as in any parallel
+    /// input pipeline).
+    pub fn spawn(
+        shards: Vec<Vec<Vec<u32>>>,
+        window: usize,
+        batch: usize,
+        vocab_len: usize,
+        queue_depth: usize,
+        seed: u64,
+    ) -> Batcher {
+        assert!(!shards.is_empty());
+        let queue = BatchQueue::new(queue_depth);
+        let mut producers = Vec::new();
+        for (i, shard) in shards.into_iter().enumerate() {
+            if shard.is_empty() {
+                continue;
+            }
+            let q = Arc::clone(&queue);
+            let sampler = NegativeSampler::uniform(vocab_len);
+            let mut rng = Rng::new(seed ^ (0xA5A5 + i as u64));
+            producers.push(
+                std::thread::Builder::new()
+                    .name(format!("producer-{i}"))
+                    .spawn(move || {
+                        let mut it = WindowIter::new(&shard, window);
+                        let mut win_buf = vec![0i32; window];
+                        loop {
+                            let mut windows = Vec::with_capacity(batch * window);
+                            let mut centers = Vec::with_capacity(batch);
+                            for _ in 0..batch {
+                                let center = it.next_window(&mut win_buf);
+                                windows.extend_from_slice(&win_buf);
+                                centers.push(center);
+                            }
+                            let mut corrupt = Vec::with_capacity(batch);
+                            sampler.sample_batch(&mut rng, &centers, &mut corrupt);
+                            if !q.push(Batch { windows, corrupt, batch, window }) {
+                                return; // queue closed
+                            }
+                        }
+                    })
+                    .expect("spawn producer"),
+            );
+        }
+        Batcher { queue, producers }
+    }
+
+    pub fn next(&self) -> Option<Batch> {
+        self.queue.pop()
+    }
+
+    pub fn shutdown(self) {
+        self.queue.close();
+        for p in self.producers {
+            let _ = p.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(tokens: usize) -> Vec<Vec<u32>> {
+        vec![(2..2 + tokens as u32).collect()]
+    }
+
+    #[test]
+    fn produces_well_formed_batches() {
+        let b = Batcher::spawn(vec![shard(100)], 5, 8, 200, 4, 1);
+        for _ in 0..10 {
+            let batch = b.next().unwrap();
+            assert_eq!(batch.windows.len(), 8 * 5);
+            assert_eq!(batch.corrupt.len(), 8);
+            for (&c, center) in batch.corrupt.iter().zip(batch.centers()) {
+                assert_ne!(c, center);
+                assert!(c >= 2);
+            }
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn backpressure_bounds_queue() {
+        let b = Batcher::spawn(vec![shard(1000)], 3, 4, 100, 2, 2);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(b.queue.len() <= 2, "queue overfilled: {}", b.queue.len());
+        b.shutdown();
+    }
+
+    #[test]
+    fn shutdown_unblocks_producers() {
+        let b = Batcher::spawn(vec![shard(1000), shard(1000)], 3, 4, 100, 1, 3);
+        let _ = b.next();
+        b.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn closed_queue_pop_drains_then_none() {
+        let q = BatchQueue::new(4);
+        q.push(Batch { windows: vec![0; 3], corrupt: vec![0], batch: 1, window: 3 });
+        q.close();
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn push_after_close_refused() {
+        let q = BatchQueue::new(1);
+        q.close();
+        assert!(!q.push(Batch { windows: vec![], corrupt: vec![], batch: 0, window: 1 }));
+    }
+
+    #[test]
+    fn multiple_producers_all_contribute() {
+        let b = Batcher::spawn(vec![shard(50), shard(50), shard(50)], 3, 4, 100, 16, 4);
+        // drain enough batches that every producer must have pushed
+        let mut n = 0;
+        for _ in 0..30 {
+            if b.next().is_some() {
+                n += 1;
+            }
+        }
+        assert_eq!(n, 30);
+        b.shutdown();
+    }
+}

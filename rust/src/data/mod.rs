@@ -1,0 +1,18 @@
+//! Data pipeline: sentences → windows → corrupted pairs → batches.
+//!
+//! Mirrors the SENNA/Polyglot training data flow: every position of every
+//! sentence yields a `C`-token context window (with `<PAD>` at sentence
+//! boundaries); the trainer pairs each window with a corruption of its
+//! center word drawn by the negative sampler. `batcher` runs producers on
+//! their own threads behind a bounded queue so example assembly overlaps
+//! PJRT execution (backpressure keeps memory bounded).
+
+pub mod batcher;
+pub mod negative;
+pub mod shard;
+pub mod windows;
+
+pub use batcher::{Batch, BatchQueue, Batcher};
+pub use negative::NegativeSampler;
+pub use shard::split_shards;
+pub use windows::{extract_windows, WindowIter};

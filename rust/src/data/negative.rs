@@ -1,0 +1,130 @@
+//! Negative (corruption) sampling.
+//!
+//! The pairwise ranking loss needs, for every real window, a corrupted
+//! center word. Polyglot/SENNA sample the replacement uniformly from the
+//! vocabulary; we also provide a frequency-proportional mode (unigram^α à
+//! la word2vec) as an ablation. Samples avoid the specials and can be
+//! forced to differ from the true center (otherwise the pair carries no
+//! gradient — s_pos == s_neg puts the example exactly at the margin).
+
+use crate::text::vocab::{Vocab, N_SPECIALS};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NegMode {
+    /// Uniform over non-special ids — the paper/SENNA scheme.
+    Uniform,
+    /// Unigram^0.75, word2vec-style (ablation).
+    Unigram,
+}
+
+#[derive(Clone, Debug)]
+pub struct NegativeSampler {
+    vocab_len: usize,
+    mode: NegMode,
+    cdf: Vec<f64>, // only for Unigram
+}
+
+impl NegativeSampler {
+    pub fn uniform(vocab_len: usize) -> Self {
+        assert!(vocab_len > N_SPECIALS + 1, "vocab too small to corrupt");
+        Self { vocab_len, mode: NegMode::Uniform, cdf: Vec::new() }
+    }
+
+    pub fn unigram(vocab: &Vocab, power: f64) -> Self {
+        let mut cdf = Vec::with_capacity(vocab.len() - N_SPECIALS);
+        let mut acc = 0.0;
+        for (_, _, count) in vocab.entries() {
+            acc += (count.max(1) as f64).powf(power);
+            cdf.push(acc);
+        }
+        assert!(!cdf.is_empty(), "vocab has no regular entries");
+        Self { vocab_len: vocab.len(), mode: NegMode::Unigram, cdf }
+    }
+
+    /// Draw a corruption id != `center`, never a special.
+    pub fn sample(&self, rng: &mut Rng, center: u32) -> u32 {
+        loop {
+            let id = match self.mode {
+                NegMode::Uniform => {
+                    (N_SPECIALS as u64 + rng.below((self.vocab_len - N_SPECIALS) as u64)) as u32
+                }
+                NegMode::Unigram => (N_SPECIALS + rng.sample_cdf(&self.cdf)) as u32,
+            };
+            if id != center {
+                return id;
+            }
+        }
+    }
+
+    /// Fill a batch of corruptions.
+    pub fn sample_batch(&self, rng: &mut Rng, centers: &[u32], out: &mut Vec<i32>) {
+        out.clear();
+        out.extend(centers.iter().map(|&c| self.sample(rng, c) as i32));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_special_never_center() {
+        let s = NegativeSampler::uniform(100);
+        let mut rng = Rng::new(1);
+        for center in [2u32, 50, 99] {
+            for _ in 0..2000 {
+                let id = s.sample(&mut rng, center);
+                assert!(id as usize >= N_SPECIALS);
+                assert!((id as usize) < 100);
+                assert_ne!(id, center);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_covers_range() {
+        let s = NegativeSampler::uniform(12);
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            seen.insert(s.sample(&mut rng, 5));
+        }
+        assert_eq!(seen.len(), 9); // ids 2..12 minus center 5
+    }
+
+    #[test]
+    fn unigram_prefers_frequent() {
+        let sents: Vec<Vec<String>> = vec![
+            std::iter::repeat("hot".to_string())
+                .take(90)
+                .chain(std::iter::repeat("cold".to_string()).take(10))
+                .collect(),
+        ];
+        let v = Vocab::build(sents.iter().map(|s| s.as_slice()), 1, 100);
+        let s = NegativeSampler::unigram(&v, 1.0);
+        let mut rng = Rng::new(3);
+        let hot = v.id("hot");
+        let hits = (0..5000).filter(|_| s.sample(&mut rng, 0) == hot).count();
+        assert!(hits > 3500, "hot sampled {hits}/5000");
+    }
+
+    #[test]
+    fn batch_matches_singles_in_length() {
+        let s = NegativeSampler::uniform(50);
+        let mut rng = Rng::new(4);
+        let centers: Vec<u32> = (2..34).collect();
+        let mut out = Vec::new();
+        s.sample_batch(&mut rng, &centers, &mut out);
+        assert_eq!(out.len(), centers.len());
+        for (&c, &n) in centers.iter().zip(&out) {
+            assert_ne!(c as i32, n);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_vocab_rejected() {
+        NegativeSampler::uniform(3);
+    }
+}

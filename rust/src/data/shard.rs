@@ -1,0 +1,87 @@
+//! Shard splitting: deal sentences across producer shards with balanced
+//! token counts, after a seeded shuffle (so each shard mixes languages).
+
+use crate::util::rng::Rng;
+
+/// Split `sentences` into `n` shards, balancing total token counts with a
+/// greedy longest-processing-time assignment over shuffled input. Every
+/// sentence lands in exactly one shard.
+pub fn split_shards(mut sentences: Vec<Vec<u32>>, n: usize, seed: u64) -> Vec<Vec<Vec<u32>>> {
+    assert!(n > 0);
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut sentences);
+    // LPT: sort descending by length, assign each to the lightest shard.
+    sentences.sort_by_key(|s| std::cmp::Reverse(s.len()));
+    let mut shards: Vec<Vec<Vec<u32>>> = (0..n).map(|_| Vec::new()).collect();
+    let mut loads = vec![0usize; n];
+    for s in sentences {
+        let i = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &l)| l)
+            .map(|(i, _)| i)
+            .unwrap();
+        loads[i] += s.len();
+        shards[i].push(s);
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    fn mk(n: usize, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0..(1 + rng.below_usize(40))).map(|_| rng.next_u32() % 100).collect()).collect()
+    }
+
+    #[test]
+    fn partition_preserves_all_sentences() {
+        let sents = mk(200, 1);
+        let shards = split_shards(sents.clone(), 7, 42);
+        let mut all: Vec<Vec<u32>> = shards.into_iter().flatten().collect();
+        let mut orig = sents;
+        all.sort();
+        orig.sort();
+        assert_eq!(all, orig);
+    }
+
+    #[test]
+    fn loads_balanced() {
+        let sents = mk(500, 2);
+        let total: usize = sents.iter().map(|s| s.len()).sum();
+        let shards = split_shards(sents, 4, 0);
+        for sh in &shards {
+            let load: usize = sh.iter().map(|s| s.len()).sum();
+            let ideal = total as f64 / 4.0;
+            assert!(
+                (load as f64 - ideal).abs() / ideal < 0.05,
+                "load {load} vs ideal {ideal}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_shard_identity_modulo_order() {
+        let sents = mk(50, 3);
+        let shards = split_shards(sents.clone(), 1, 9);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].len(), sents.len());
+    }
+
+    #[test]
+    fn property_every_shard_count_sums() {
+        forall(
+            "shard partition",
+            30,
+            |r| (r.below(150) + 1, r.below(8) + 1, r.next_u64()),
+            |&(n, k, seed)| {
+                let sents = mk(n as usize, seed);
+                let shards = split_shards(sents.clone(), k as usize, seed);
+                shards.iter().map(|s| s.len()).sum::<usize>() == sents.len()
+            },
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Context-window extraction.
+//!
+//! For window size `C` (odd), token position `t` yields
+//! `[t-C/2, …, t, …, t+C/2]` with `<PAD>` beyond sentence edges — exactly
+//! one window per token, so an `N`-token corpus yields `N` training
+//! examples (the unit of the paper's examples/second metric).
+
+use crate::text::vocab::PAD;
+
+/// Extract all windows of `sent` (already id-encoded) into `out`,
+/// flattened row-major ([n_windows * window]).
+pub fn extract_windows(sent: &[u32], window: usize, out: &mut Vec<i32>) {
+    assert!(window % 2 == 1, "window must be odd");
+    let half = window / 2;
+    for t in 0..sent.len() {
+        for off in 0..window {
+            let pos = t as isize + off as isize - half as isize;
+            let id = if pos < 0 || pos >= sent.len() as isize {
+                PAD
+            } else {
+                sent[pos as usize]
+            };
+            out.push(id as i32);
+        }
+    }
+}
+
+/// Iterator over windows of an id-encoded corpus, cycling epochs forever.
+/// Deterministic: sentence order is fixed; shuffling happens at shard
+/// construction (see `shard`).
+pub struct WindowIter<'a> {
+    sentences: &'a [Vec<u32>],
+    window: usize,
+    sent_idx: usize,
+    tok_idx: usize,
+    pub epochs: usize,
+}
+
+impl<'a> WindowIter<'a> {
+    pub fn new(sentences: &'a [Vec<u32>], window: usize) -> Self {
+        assert!(window % 2 == 1);
+        assert!(!sentences.is_empty(), "empty corpus");
+        Self { sentences, window, sent_idx: 0, tok_idx: 0, epochs: 0 }
+    }
+
+    /// Write the next window's ids into `out[..window]`; returns the center
+    /// word id.
+    pub fn next_window(&mut self, out: &mut [i32]) -> u32 {
+        debug_assert_eq!(out.len(), self.window);
+        loop {
+            let sent = &self.sentences[self.sent_idx];
+            if self.tok_idx >= sent.len() {
+                self.tok_idx = 0;
+                self.sent_idx += 1;
+                if self.sent_idx >= self.sentences.len() {
+                    self.sent_idx = 0;
+                    self.epochs += 1;
+                }
+                continue;
+            }
+            let half = self.window / 2;
+            let t = self.tok_idx as isize;
+            for off in 0..self.window {
+                let pos = t + off as isize - half as isize;
+                out[off] = if pos < 0 || pos >= sent.len() as isize {
+                    PAD as i32
+                } else {
+                    sent[pos as usize] as i32
+                };
+            }
+            let center = sent[self.tok_idx];
+            self.tok_idx += 1;
+            return center;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_at_edges() {
+        let sent = vec![10u32, 11, 12];
+        let mut out = Vec::new();
+        extract_windows(&sent, 3, &mut out);
+        assert_eq!(
+            out,
+            vec![
+                0, 10, 11, //
+                10, 11, 12, //
+                11, 12, 0
+            ]
+        );
+    }
+
+    #[test]
+    fn one_window_per_token() {
+        let sent = vec![5u32; 17];
+        let mut out = Vec::new();
+        extract_windows(&sent, 5, &mut out);
+        assert_eq!(out.len(), 17 * 5);
+    }
+
+    #[test]
+    fn iter_cycles_epochs() {
+        let sents = vec![vec![1u32, 2], vec![3u32]];
+        let mut it = WindowIter::new(&sents, 3);
+        let mut buf = [0i32; 3];
+        let centers: Vec<u32> = (0..6).map(|_| it.next_window(&mut buf)).collect();
+        assert_eq!(centers, vec![1, 2, 3, 1, 2, 3]);
+        assert_eq!(it.epochs, 1);
+    }
+
+    #[test]
+    fn iter_matches_extract() {
+        let sents = vec![vec![7u32, 8, 9, 10]];
+        let mut flat = Vec::new();
+        extract_windows(&sents[0], 5, &mut flat);
+        let mut it = WindowIter::new(&sents, 5);
+        let mut buf = [0i32; 5];
+        for w in 0..4 {
+            it.next_window(&mut buf);
+            assert_eq!(&flat[w * 5..(w + 1) * 5], &buf);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn even_window_rejected() {
+        let mut out = Vec::new();
+        extract_windows(&[1, 2, 3], 4, &mut out);
+    }
+}

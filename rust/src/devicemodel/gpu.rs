@@ -1,0 +1,122 @@
+//! Parameterized accelerator model: peak FLOPs, bandwidth, launch overhead.
+
+/// A device's first-order performance parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// Parallel ALU lanes (CUDA cores / MXU lanes).
+    pub cores: u32,
+    /// Core clock, MHz.
+    pub clock_mhz: f64,
+    /// Memory clock, MHz (effective data rate accounted in `bus_bytes`).
+    pub mem_clock_mhz: f64,
+    /// Memory bus width in bytes transferred per memory clock.
+    pub bus_bytes: f64,
+    /// FLOPs per core per cycle (FMA = 2).
+    pub flops_per_cycle: f64,
+    /// Fixed cost of one kernel launch / dispatch, seconds.
+    pub launch_overhead_s: f64,
+    /// Fixed cost of one host<->device memcpy operation, seconds (PCIe
+    /// round-trip latency for the GPU; queue hop for CPU-PJRT).
+    pub transfer_overhead_s: f64,
+}
+
+impl DeviceModel {
+    /// Peak single-precision FLOP/s.
+    pub fn peak_flops(&self) -> f64 {
+        self.cores as f64 * self.clock_mhz * 1e6 * self.flops_per_cycle
+    }
+
+    /// Peak memory bandwidth, bytes/s.
+    pub fn peak_bandwidth(&self) -> f64 {
+        self.mem_clock_mhz * 1e6 * self.bus_bytes
+    }
+
+    /// Time the device would spend *computing* `flops` at peak.
+    pub fn compute_time(&self, flops: u64) -> f64 {
+        flops as f64 / self.peak_flops()
+    }
+
+    /// Time the device would spend *moving* `bytes` at peak.
+    pub fn memory_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.peak_bandwidth()
+    }
+
+    /// Time for `n` host<->device transfers totalling `bytes` (latency +
+    /// PCIe-class bandwidth at ~1/25 of device memory bandwidth).
+    pub fn transfer_time(&self, n: u64, bytes: u64) -> f64 {
+        n as f64 * self.transfer_overhead_s
+            + bytes as f64 / (self.peak_bandwidth() / 25.0)
+    }
+
+    /// Roofline kernel time: max of compute and memory time plus launch.
+    pub fn kernel_time(&self, flops: u64, bytes: u64) -> f64 {
+        self.compute_time(flops).max(self.memory_time(bytes)) + self.launch_overhead_s
+    }
+
+    /// Arithmetic intensity (flops/byte) at which this device is balanced.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_flops() / self.peak_bandwidth()
+    }
+}
+
+/// The paper's GPU (§2: "GEForce GT 570 … 480 cores, processor clock
+/// 1464 MHz, memory clock 1900 MHz" — the GTX 570 datasheet: 320-bit
+/// GDDR5 bus, 4 transfers/clock).
+pub const GT570: DeviceModel = DeviceModel {
+    name: "GeForce GTX 570",
+    cores: 480,
+    clock_mhz: 1464.0,
+    mem_clock_mhz: 1900.0,
+    bus_bytes: 80.0, // 320-bit bus * 2 transfers per (paper's 1900 MHz) clock / 8
+    flops_per_cycle: 2.0,
+    launch_overhead_s: 8e-6,    // typical CUDA launch+sync era-2014
+    transfer_overhead_s: 1e-5,  // PCIe gen2 memcpy latency
+};
+
+/// A TPU-v4-like core, for the DESIGN.md §Hardware-Adaptation estimates
+/// (single MXU core slice: ~137 bf16 TFLOPs full chip / 2 cores ≈ 68.5;
+/// we model fp32-equivalent at half rate).
+pub const TPU_V4_CORE: DeviceModel = DeviceModel {
+    name: "TPU v4 core (model)",
+    cores: 16384, // 128x128 MXU lanes
+    clock_mhz: 1050.0,
+    mem_clock_mhz: 1200.0,
+    bus_bytes: 1000.0, // ~1.2 TB/s HBM2e
+    flops_per_cycle: 2.0,
+    launch_overhead_s: 2e-6,
+    transfer_overhead_s: 2e-6,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gt570_peaks_match_datasheet() {
+        // GTX 570: ~1405 GFLOPs SP, ~152 GB/s
+        let f = GT570.peak_flops() / 1e9;
+        let bw = GT570.peak_bandwidth() / 1e9;
+        assert!((f - 1405.4).abs() < 1.0, "{f} GFLOPs");
+        assert!((bw - 152.0).abs() < 1.0, "{bw} GB/s"); // datasheet 152 GB/s
+    }
+
+    #[test]
+    fn roofline_behaviour() {
+        // tiny kernel: launch-dominated
+        let t = GT570.kernel_time(1000, 1000);
+        assert!(t > 7e-6 && t < 1e-5);
+        // big memory-bound kernel
+        let t_mem = GT570.kernel_time(1_000_000, 4_000_000_000);
+        assert!((t_mem - 4e9 / GT570.peak_bandwidth() - 8e-6).abs() < 1e-6);
+        // big compute-bound kernel
+        let t_cmp = GT570.kernel_time(10_000_000_000_000, 4);
+        assert!(t_cmp > 6.0);
+    }
+
+    #[test]
+    fn ridge_point_sane() {
+        let r = GT570.ridge_point();
+        assert!(r > 1.0 && r < 20.0, "ridge {r}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Analytical device models — the nvprof reproduction (paper §4.5).
+//!
+//! The paper's limits analysis derives three things from nvprof output:
+//! compute utilization (7.4%), compute-to-memory-op ratio (66.72), and a
+//! benign top-kernel list. nvprof is a *metric calculator over an op
+//! stream*; we reproduce the metrics by combining (a) the measured op
+//! stream of a training run (artifact dispatch times + HLO cost totals)
+//! with (b) a parameterized GPU model instantiated with the paper's
+//! GeForce GTX 570 datasheet numbers.
+
+pub mod gpu;
+pub mod metrics;
+
+pub use gpu::{DeviceModel, GT570, TPU_V4_CORE};
+pub use metrics::{NvprofReport, OpStream};

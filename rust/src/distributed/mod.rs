@@ -1,0 +1,27 @@
+//! Downpour-style asynchronous distributed SGD — the paper's §5 future
+//! work ("use the distributed algorithms for calculating gradients …
+//! outlined by Jeffrey Dean et al. [10] … updates not being synchronized").
+//!
+//! Architecture (Dean et al. 2012, scaled to one machine):
+//!
+//! ```text
+//!   ParameterServer (sharded RwLocks over the five tensors)
+//!        ▲  push(Grads)           │ pull(snapshot, version)
+//!        │                        ▼
+//!   worker 0 … worker N-1   (each walks its own corpus shard, computes
+//!                            gradients on a *stale* parameter copy, and
+//!                            pushes without synchronization)
+//! ```
+//!
+//! Workers compute gradients with the pure-Rust model
+//! (`baselines::RefModel::grads`) — the same math the PJRT artifacts
+//! execute (cross-checked in rust/tests/integration.rs) — so the
+//! experiment isolates exactly what the paper asks about: does
+//! *asynchrony* help this model? The bench (`cargo bench -- e9`) sweeps
+//! worker counts and staleness and reports throughput + time-to-converge.
+
+pub mod psserver;
+pub mod worker;
+
+pub use psserver::ParameterServer;
+pub use worker::{run_downpour, DownpourConfig, DownpourReport};

@@ -1,0 +1,157 @@
+//! The parameter server: shared, versioned model state with unsynchronized
+//! gradient application (Downpour's "parameter server" half).
+//!
+//! Two locks split the hot paths: embedding rows (sparse, high-contention
+//! in Downpour) and the dense head. Workers pull a consistent snapshot and
+//! push `Grads` asynchronously; pushes from stale workers are applied
+//! as-is — that unsynchronized overwrite *is* the algorithm.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::baselines::model_ref::{Grads, ModelParams};
+
+pub struct ParameterServer {
+    /// Embedding matrix, row-major [V, D].
+    e: RwLock<Vec<f32>>,
+    /// Dense head (w1, b1, w2, b2) as one guarded tuple.
+    head: RwLock<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>,
+    version: AtomicU64,
+    pub vocab: usize,
+    pub dim: usize,
+    pub window: usize,
+    pub hidden: usize,
+    lr: f32,
+}
+
+impl ParameterServer {
+    pub fn new(init: ModelParams, lr: f32) -> Self {
+        Self {
+            vocab: init.vocab,
+            dim: init.dim,
+            window: init.window,
+            hidden: init.hidden,
+            e: RwLock::new(init.e),
+            head: RwLock::new((init.w1, init.b1, init.w2, init.b2)),
+            version: AtomicU64::new(0),
+            lr,
+        }
+    }
+
+    /// Monotone update counter (one per push).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Relaxed)
+    }
+
+    /// Pull a full parameter snapshot (what a worker trains against until
+    /// its next pull — the staleness window).
+    pub fn pull(&self) -> ModelParams {
+        let e = self.e.read().unwrap().clone();
+        let (w1, b1, w2, b2) = self.head.read().unwrap().clone();
+        ModelParams {
+            vocab: self.vocab,
+            dim: self.dim,
+            window: self.window,
+            hidden: self.hidden,
+            e,
+            w1,
+            b1,
+            w2,
+            b2,
+        }
+    }
+
+    /// Apply a gradient push (SGD, unsynchronized across workers).
+    pub fn push(&self, g: &Grads) {
+        let lr = self.lr;
+        {
+            let mut e = self.e.write().unwrap();
+            let d = self.dim;
+            for (id, row) in &g.e_rows {
+                let dst = &mut e[id * d..(id + 1) * d];
+                for (a, b) in dst.iter_mut().zip(row) {
+                    *a -= lr * b;
+                }
+            }
+        }
+        {
+            let mut head = self.head.write().unwrap();
+            for (w, gk) in head.0.iter_mut().zip(&g.w1) {
+                *w -= lr * gk;
+            }
+            for (w, gk) in head.1.iter_mut().zip(&g.b1) {
+                *w -= lr * gk;
+            }
+            for (w, gk) in head.2.iter_mut().zip(&g.w2) {
+                *w -= lr * gk;
+            }
+            head.3[0] -= lr * g.b2;
+        }
+        self.version.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::model_ref::RefModel;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ParameterServer, Vec<i32>, Vec<i32>) {
+        let p = ModelParams::init(64, 4, 3, 5, 1);
+        let mut rng = Rng::new(2);
+        let windows = (0..8 * 3).map(|_| rng.below(64) as i32).collect();
+        let corrupt = (0..8).map(|_| rng.below(64) as i32).collect();
+        (ParameterServer::new(p, 0.1), windows, corrupt)
+    }
+
+    #[test]
+    fn pull_push_matches_local_sgd() {
+        let (ps, windows, corrupt) = setup();
+        let mut local = ps.pull();
+        let mut m = RefModel::new(&local);
+        // local step
+        let (_, grads) = m.grads(&local, &windows, &corrupt);
+        grads.apply(&mut local, 0.1);
+        // server step
+        ps.push(&grads);
+        let remote = ps.pull();
+        assert_eq!(ps.version(), 1);
+        for (a, b) in local.e.iter().zip(&remote.e) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        for (a, b) in local.w1.iter().zip(&remote.w1) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert!((local.b2[0] - remote.b2[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn concurrent_pushes_all_land() {
+        let (ps, windows, corrupt) = setup();
+        let ps = std::sync::Arc::new(ps);
+        let base = ps.pull();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let ps = std::sync::Arc::clone(&ps);
+                let (w, c, b) = (windows.clone(), corrupt.clone(), base.clone());
+                std::thread::spawn(move || {
+                    let mut m = RefModel::new(&b);
+                    for _ in 0..25 {
+                        let snap = ps.pull();
+                        let (_, g) = m.grads(&snap, &w, &c);
+                        ps.push(&g);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(ps.version(), 100);
+        // params remain finite under races
+        let p = ps.pull();
+        assert!(p.e.iter().all(|x| x.is_finite()));
+        assert!(p.w1.iter().all(|x| x.is_finite()));
+    }
+}

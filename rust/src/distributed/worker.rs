@@ -1,0 +1,243 @@
+//! Downpour workers + the experiment driver.
+//!
+//! Each worker owns a corpus shard and loops: every `pull_every` batches it
+//! refreshes its stale parameter copy from the server; each batch it
+//! computes gradients *against the stale copy* and pushes them. A separate
+//! evaluator thread watches the server's live parameters for convergence.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::baselines::model_ref::{ModelParams, RefModel};
+use crate::data::negative::NegativeSampler;
+use crate::data::windows::WindowIter;
+use crate::eval::ConvergenceTracker;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct DownpourConfig {
+    pub workers: usize,
+    pub batch: usize,
+    pub lr: f32,
+    /// Batches between parameter pulls (1 = near-synchronous; larger =
+    /// staler workers).
+    pub pull_every: usize,
+    /// Total examples to process across all workers.
+    pub example_budget: u64,
+    pub converge_threshold: f32,
+    pub seed: u64,
+}
+
+impl Default for DownpourConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            batch: 16,
+            lr: 0.1,
+            pull_every: 4,
+            example_budget: 200_000,
+            converge_threshold: 0.6,
+            seed: 0xD0DE,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DownpourReport {
+    pub workers: usize,
+    pub examples: u64,
+    pub wall: Duration,
+    pub rate: f64,
+    pub pushes: u64,
+    pub final_loss: f32,
+    pub converged_examples: Option<u64>,
+    pub converged_wall: Option<Duration>,
+}
+
+/// Run a Downpour experiment over pre-sharded, id-encoded sentences.
+pub fn run_downpour(
+    init: ModelParams,
+    shards: Vec<Vec<Vec<u32>>>,
+    cfg: &DownpourConfig,
+) -> Result<DownpourReport> {
+    use super::psserver::ParameterServer;
+    assert_eq!(shards.len(), cfg.workers, "one shard per worker");
+    let window = init.window;
+    let vocab = init.vocab;
+
+    // Held-out eval batch built from REAL corpus windows (random-id pairs
+    // would measure nothing: the hinge on garbage-vs-garbage stays ~1).
+    let eval_batch = {
+        let shard0 = shards[0].clone();
+        let mut it = WindowIter::new(&shard0, window);
+        let mut rng = Rng::new(cfg.seed ^ 0xEEE);
+        let sampler = NegativeSampler::uniform(vocab);
+        let mut win = vec![0i32; window];
+        let mut windows = Vec::with_capacity(256 * window);
+        let mut centers = Vec::with_capacity(256);
+        for _ in 0..256 {
+            centers.push(it.next_window(&mut win));
+            windows.extend_from_slice(&win);
+        }
+        let mut corrupt = Vec::new();
+        sampler.sample_batch(&mut rng, &centers, &mut corrupt);
+        (windows, corrupt)
+    };
+
+    let ps = Arc::new(ParameterServer::new(init, cfg.lr));
+    let stop = Arc::new(AtomicBool::new(false));
+    let examples_done = Arc::new(AtomicU64::new(0));
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(wi, shard)| {
+            let ps = Arc::clone(&ps);
+            let stop = Arc::clone(&stop);
+            let examples_done = Arc::clone(&examples_done);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name(format!("downpour-{wi}"))
+                .spawn(move || {
+                    let mut params = ps.pull();
+                    let mut model = RefModel::new(&params);
+                    let mut it = WindowIter::new(&shard, window);
+                    let sampler = NegativeSampler::uniform(vocab);
+                    let mut rng = Rng::new(cfg.seed ^ (0x1234 + wi as u64));
+                    let mut win = vec![0i32; window];
+                    let mut windows = Vec::with_capacity(cfg.batch * window);
+                    let mut centers = Vec::with_capacity(cfg.batch);
+                    let mut corrupt = Vec::with_capacity(cfg.batch);
+                    let mut batches = 0usize;
+                    while !stop.load(Ordering::Relaxed) {
+                        if batches % cfg.pull_every == 0 {
+                            params = ps.pull(); // refresh stale copy
+                        }
+                        windows.clear();
+                        centers.clear();
+                        for _ in 0..cfg.batch {
+                            centers.push(it.next_window(&mut win));
+                            windows.extend_from_slice(&win);
+                        }
+                        sampler.sample_batch(&mut rng, &centers, &mut corrupt);
+                        let (_loss, grads) = model.grads(&params, &windows, &corrupt);
+                        ps.push(&grads);
+                        batches += 1;
+                        let done = examples_done
+                            .fetch_add(cfg.batch as u64, Ordering::Relaxed)
+                            + cfg.batch as u64;
+                        if done >= cfg.example_budget {
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    batches as u64
+                })
+                .expect("spawn worker")
+        })
+        .collect();
+
+    // Evaluator: track convergence of the *live* server parameters on the
+    // held-out batch.
+    let mut tracker = ConvergenceTracker::new(cfg.converge_threshold);
+    let mut final_loss = f32::NAN;
+    let mut converged_examples = None;
+    let mut converged_wall = None;
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(15));
+        let snap = ps.pull();
+        let mut m = RefModel::new(&snap);
+        let loss = m.loss(&snap, &eval_batch.0, &eval_batch.1);
+        final_loss = loss;
+        let ex = examples_done.load(Ordering::Relaxed);
+        if tracker.update(loss, 0, ex, t0.elapsed()) {
+            let c = tracker.converged().unwrap();
+            converged_examples = Some(c.examples);
+            converged_wall = Some(c.wall);
+        }
+    }
+    let mut pushes = 0u64;
+    for h in handles {
+        pushes += h.join().expect("worker panicked");
+    }
+    let wall = t0.elapsed();
+    let examples = examples_done.load(Ordering::Relaxed);
+    Ok(DownpourReport {
+        workers: cfg.workers,
+        examples,
+        wall,
+        rate: examples as f64 / wall.as_secs_f64(),
+        pushes,
+        final_loss,
+        converged_examples,
+        converged_wall,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generator, CorpusSpec};
+    use crate::data::shard::split_shards;
+    use crate::text::Vocab;
+
+    fn corpus_shards(n: usize, vocab_cap: usize) -> (Vec<Vec<Vec<u32>>>, usize) {
+        let c = generator::generate(&CorpusSpec {
+            languages: 2,
+            tokens_per_language: 12_000,
+            lexicon: 600,
+            threads: 2,
+            ..CorpusSpec::default()
+        });
+        let vocab = Vocab::build(c.sentences.iter().map(|s| s.as_slice()), 1, vocab_cap);
+        let encoded: Vec<Vec<u32>> = c.sentences.iter().map(|s| vocab.encode(s)).collect();
+        (split_shards(encoded, n, 3), vocab.len())
+    }
+
+    #[test]
+    fn single_worker_downpour_learns() {
+        let (shards, vlen) = corpus_shards(1, 1024);
+        // vocab == corpus vocab so the held-out eval draws trained rows
+        let init = ModelParams::init(vlen, 8, 5, 8, 5);
+        let cfg = DownpourConfig {
+            workers: 1,
+            lr: 0.08,
+            example_budget: 60_000,
+            converge_threshold: 0.95,
+            ..DownpourConfig::default()
+        };
+        let rep = run_downpour(init, shards, &cfg).unwrap();
+        assert!(rep.examples >= 60_000);
+        assert!(rep.final_loss < 0.95, "loss {}", rep.final_loss);
+        assert!(rep.pushes > 0);
+    }
+
+    #[test]
+    fn multi_worker_downpour_stays_finite_and_learns() {
+        let (shards, vlen) = corpus_shards(4, 1024);
+        let init = ModelParams::init(vlen, 8, 5, 8, 5);
+        let cfg = DownpourConfig {
+            workers: 4,
+            lr: 0.08,
+            pull_every: 8, // aggressively stale
+            example_budget: 80_000,
+            converge_threshold: 0.95,
+            ..DownpourConfig::default()
+        };
+        let rep = run_downpour(init, shards, &cfg).unwrap();
+        assert!(rep.final_loss.is_finite());
+        assert!(rep.final_loss < 0.95, "async training diverged: {}", rep.final_loss);
+    }
+
+    #[test]
+    #[should_panic(expected = "one shard per worker")]
+    fn shard_count_mismatch_panics() {
+        let (shards, _) = corpus_shards(2, 512);
+        let init = ModelParams::init(512, 4, 5, 4, 1);
+        let cfg = DownpourConfig { workers: 3, ..DownpourConfig::default() };
+        let _ = run_downpour(init, shards, &cfg);
+    }
+}

@@ -1,0 +1,8 @@
+//! Trained-embedding store + cosine k-NN — what Polyglot shipped (word
+//! vectors for 100+ languages) and what the serving example queries.
+
+pub mod knn;
+pub mod store;
+
+pub use knn::{cosine, top_k};
+pub use store::EmbeddingStore;

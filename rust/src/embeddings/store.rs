@@ -1,0 +1,102 @@
+//! Word-keyed view over a trained embedding matrix + vocabulary.
+
+use anyhow::{bail, Result};
+
+use crate::baselines::model_ref::ModelParams;
+use crate::text::vocab::Vocab;
+
+use super::knn::top_k;
+
+pub struct EmbeddingStore {
+    pub vocab: Vocab,
+    pub dim: usize,
+    e: Vec<f32>,
+}
+
+impl EmbeddingStore {
+    pub fn new(vocab: Vocab, e: Vec<f32>, dim: usize) -> Result<EmbeddingStore> {
+        if e.len() % dim != 0 {
+            bail!("embedding matrix not divisible by dim");
+        }
+        if vocab.len() > e.len() / dim {
+            bail!("vocab ({}) larger than embedding rows ({})", vocab.len(), e.len() / dim);
+        }
+        Ok(EmbeddingStore { vocab, dim, e })
+    }
+
+    pub fn from_params(vocab: Vocab, p: &ModelParams) -> Result<EmbeddingStore> {
+        EmbeddingStore::new(vocab, p.e.clone(), p.dim)
+    }
+
+    pub fn vector(&self, word: &str) -> &[f32] {
+        let id = self.vocab.id(word) as usize;
+        &self.e[id * self.dim..(id + 1) * self.dim]
+    }
+
+    pub fn vector_by_id(&self, id: u32) -> &[f32] {
+        let id = id as usize;
+        &self.e[id * self.dim..(id + 1) * self.dim]
+    }
+
+    pub fn matrix(&self) -> &[f32] {
+        &self.e
+    }
+
+    /// Nearest neighbours of `word` among vocabulary entries (excluding
+    /// itself and the specials).
+    pub fn neighbors(&self, word: &str, k: usize) -> Vec<(String, f32)> {
+        let id = self.vocab.id(word) as usize;
+        let q = self.vector(word);
+        // restrict scan to actual vocab rows
+        let rows = &self.e[..self.vocab.len() * self.dim];
+        top_k(rows, self.dim, q, k, &[0, 1, id])
+            .into_iter()
+            .map(|(i, s)| (self.vocab.word(i as u32).to_string(), s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> EmbeddingStore {
+        let sents: Vec<Vec<String>> = vec![
+            ["aa", "bb", "cc", "dd"].iter().map(|s| s.to_string()).collect(),
+        ];
+        let vocab = Vocab::build(sents.iter().map(|s| s.as_slice()), 1, 100);
+        // 6 rows (2 specials + 4 words), dim 2; aa==[1,0], bb==[0.95,0.05]
+        let e = vec![
+            0.0, 0.0, // PAD
+            0.0, 0.0, // UNK
+            1.0, 0.0, // first word (alphabetical tie-break: aa)
+            0.95, 0.05, // bb
+            0.0, 1.0, // cc
+            -1.0, 0.0, // dd
+        ];
+        EmbeddingStore::new(vocab, e, 2).unwrap()
+    }
+
+    #[test]
+    fn neighbors_ranked_by_cosine() {
+        let s = store();
+        let n = s.neighbors("aa", 2);
+        assert_eq!(n[0].0, "bb");
+        assert!(n[0].1 > 0.95);
+        assert_ne!(n[1].0, "aa", "self must be excluded");
+    }
+
+    #[test]
+    fn vector_lookup_unknown_is_unk_row() {
+        let s = store();
+        assert_eq!(s.vector("zzz"), s.vector_by_id(1));
+    }
+
+    #[test]
+    fn dimension_validation() {
+        let sents: Vec<Vec<String>> = vec![vec!["a".to_string()]];
+        let vocab = Vocab::build(sents.iter().map(|s| s.as_slice()), 1, 10);
+        assert!(EmbeddingStore::new(vocab.clone(), vec![0.0; 7], 2).is_err());
+        assert!(EmbeddingStore::new(vocab, vec![0.0; 2], 2).is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! Convergence detection — the paper's "time taken by the model to
+//! converge to an error less than 0.05" (§4.6, Fig 1b).
+//!
+//! "Error" here is the held-out mean hinge loss, smoothed with an EMA so a
+//! single lucky eval batch can't declare victory. The tracker records the
+//! examples/steps/wall-time at which the smoothed loss first crosses the
+//! threshold.
+
+use std::time::Duration;
+
+#[derive(Clone, Debug)]
+pub struct ConvergenceTracker {
+    pub threshold: f32,
+    alpha: f32,
+    ema: Option<f32>,
+    converged_at: Option<ConvergencePoint>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConvergencePoint {
+    pub steps: u64,
+    pub examples: u64,
+    pub wall: Duration,
+    pub loss: f32,
+}
+
+impl ConvergenceTracker {
+    pub fn new(threshold: f32) -> Self {
+        Self { threshold, alpha: 0.3, ema: None, converged_at: None }
+    }
+
+    /// Feed one held-out evaluation; returns true on the *first* crossing.
+    pub fn update(&mut self, loss: f32, steps: u64, examples: u64, wall: Duration) -> bool {
+        let ema = match self.ema {
+            None => loss,
+            Some(prev) => prev + self.alpha * (loss - prev),
+        };
+        self.ema = Some(ema);
+        if self.converged_at.is_none() && ema < self.threshold {
+            self.converged_at = Some(ConvergencePoint { steps, examples, wall, loss: ema });
+            return true;
+        }
+        false
+    }
+
+    pub fn smoothed(&self) -> Option<f32> {
+        self.ema
+    }
+
+    pub fn converged(&self) -> Option<&ConvergencePoint> {
+        self.converged_at.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_sustained_drop() {
+        let mut t = ConvergenceTracker::new(0.7);
+        let mut fired = 0;
+        for (i, loss) in [1.0f32, 0.9, 0.7, 0.45, 0.42, 0.40].iter().enumerate() {
+            if t.update(*loss, i as u64, i as u64 * 16, Duration::from_secs(i as u64)) {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 1);
+        let p = t.converged().unwrap();
+        assert!(p.steps >= 4, "converged too early at step {}", p.steps);
+    }
+
+    #[test]
+    fn single_spike_does_not_converge() {
+        let mut t = ConvergenceTracker::new(0.5);
+        // one low outlier among high losses, EMA stays above threshold
+        for (i, loss) in [1.0f32, 1.0, 0.2, 1.0, 1.0].iter().enumerate() {
+            assert!(!t.update(*loss, i as u64, 0, Duration::ZERO), "fired at {i}");
+        }
+        assert!(t.converged().is_none());
+    }
+
+    #[test]
+    fn fires_once_only() {
+        let mut t = ConvergenceTracker::new(0.9);
+        assert!(t.update(0.1, 1, 16, Duration::from_secs(1)));
+        assert!(!t.update(0.05, 2, 32, Duration::from_secs(2)));
+        assert_eq!(t.converged().unwrap().steps, 1);
+    }
+}

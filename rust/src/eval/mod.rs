@@ -1,0 +1,8 @@
+//! Evaluation: convergence tracking (Fig 1b's criterion) and an intrinsic
+//! embedding-quality probe on the synthetic corpus.
+
+pub mod convergence;
+pub mod wordsim;
+
+pub use convergence::ConvergenceTracker;
+pub use wordsim::bigram_neighbor_score;

@@ -1,0 +1,132 @@
+//! Intrinsic embedding quality on the synthetic corpus.
+//!
+//! With no human similarity benchmark for synthetic languages, we use the
+//! corpus's own generative structure: words that share Markov successor
+//! sets are distributionally similar, so a trained model should place a
+//! word's frequent *bigram successors* nearer (in context-score terms)
+//! than random words. The score is the fraction of probe words for which
+//! that holds — 0.5 = chance.
+
+use std::collections::HashMap;
+
+use crate::embeddings::knn::cosine;
+use crate::util::rng::Rng;
+
+/// Count bigram successors over id-encoded sentences.
+pub fn bigram_table(sentences: &[Vec<u32>]) -> HashMap<u32, HashMap<u32, u32>> {
+    let mut t: HashMap<u32, HashMap<u32, u32>> = HashMap::new();
+    for s in sentences {
+        for w in s.windows(2) {
+            *t.entry(w[0]).or_default().entry(w[1]).or_insert(0) += 1;
+        }
+    }
+    t
+}
+
+/// For `probes` random words with ≥3 successor types: is the embedding of
+/// the top successor closer (cosine) than a random word's embedding?
+/// Returns fraction of wins.
+pub fn bigram_neighbor_score(
+    e: &[f32],
+    dim: usize,
+    sentences: &[Vec<u32>],
+    probes: usize,
+    seed: u64,
+) -> f64 {
+    let table = bigram_table(sentences);
+    let candidates: Vec<u32> = table
+        .iter()
+        .filter(|(_, succ)| succ.len() >= 3)
+        .map(|(&w, _)| w)
+        .collect();
+    if candidates.is_empty() {
+        return 0.5;
+    }
+    let vocab = e.len() / dim;
+    let mut rng = Rng::new(seed);
+    let mut wins = 0usize;
+    let mut total = 0usize;
+    for _ in 0..probes {
+        let w = candidates[rng.below_usize(candidates.len())];
+        let succ = &table[&w];
+        let (&top, _) = succ.iter().max_by_key(|(_, &c)| c).unwrap();
+        let rand_w = rng.below(vocab as u64) as u32;
+        if top == w || rand_w == w || top as usize >= vocab {
+            continue;
+        }
+        let ew = &e[w as usize * dim..(w as usize + 1) * dim];
+        let et = &e[top as usize * dim..(top as usize + 1) * dim];
+        let er = &e[rand_w as usize * dim..(rand_w as usize + 1) * dim];
+        if cosine(ew, et) > cosine(ew, er) {
+            wins += 1;
+        }
+        total += 1;
+    }
+    if total == 0 {
+        0.5
+    } else {
+        wins as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigram_table_counts() {
+        let sents = vec![vec![1u32, 2, 3, 2, 3]];
+        let t = bigram_table(&sents);
+        assert_eq!(t[&2][&3], 2);
+        assert_eq!(t[&1][&2], 1);
+        assert_eq!(t[&3].get(&2), Some(&1));
+    }
+
+    #[test]
+    fn score_detects_planted_structure() {
+        // Embeddings where successors are identical vectors -> score ~1.
+        let dim = 4;
+        let vocab = 20;
+        let mut e = vec![0.0f32; vocab * dim];
+        let mut rng = Rng::new(1);
+        for v in 0..vocab {
+            for k in 0..dim {
+                e[v * dim + k] = rng.range_f32(-1.0, 1.0);
+            }
+        }
+        // sentence stream: even w -> w+1 dominantly (plus noise successors
+        // so each probe has >=3 successor types); plant identical vectors
+        // for each (w, w+1) pair.
+        let mut sents = Vec::new();
+        for w in (0..10u32).step_by(2) {
+            for _ in 0..20 {
+                sents.push(vec![w, w + 1]);
+            }
+            sents.push(vec![w, (w + 7) % 20]);
+            sents.push(vec![w, (w + 11) % 20]);
+            for k in 0..dim {
+                e[(w + 1) as usize * dim + k] = e[w as usize * dim + k];
+            }
+        }
+        let s = bigram_neighbor_score(&e, dim, &sents, 200, 42);
+        assert!(s > 0.8, "score {s}");
+    }
+
+    #[test]
+    fn random_embeddings_near_chance() {
+        let dim = 8;
+        let vocab = 50;
+        let mut rng = Rng::new(9);
+        let e: Vec<f32> = (0..vocab * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut sents = Vec::new();
+        for _ in 0..400 {
+            sents.push(vec![
+                rng.below(vocab as u64) as u32,
+                rng.below(vocab as u64) as u32,
+                rng.below(vocab as u64) as u32,
+            ]);
+        }
+        let s = bigram_neighbor_score(&e, dim, &sents, 300, 7);
+        assert!((s - 0.5).abs() < 0.15, "score {s}");
+    }
+}

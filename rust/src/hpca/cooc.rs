@@ -1,0 +1,107 @@
+//! Co-occurrence counting and the Hellinger transform.
+//!
+//! The context vocabulary is the `context_words` most frequent types
+//! (ids are frequency-ranked by `text::Vocab`, so context id == word id
+//! when word id < context_words). Counts are dense [V, C] — at the scales
+//! here (V ≤ ~20k, C ≤ 1k) that is ≤ 80 MB and far faster than a hashmap.
+
+/// Dense co-occurrence counts: `out[w * c_words + c]` = number of times
+/// context word `c` appears within `radius` of word `w`.
+pub fn count(
+    sentences: &[Vec<u32>],
+    vocab_len: usize,
+    context_words: usize,
+    radius: usize,
+) -> Vec<u32> {
+    let mut out = vec![0u32; vocab_len * context_words];
+    for sent in sentences {
+        for (i, &w) in sent.iter().enumerate() {
+            let w = w as usize;
+            if w >= vocab_len {
+                continue;
+            }
+            let lo = i.saturating_sub(radius);
+            let hi = (i + radius + 1).min(sent.len());
+            for (j, &c) in sent[lo..hi].iter().enumerate() {
+                if lo + j == i {
+                    continue;
+                }
+                let c = c as usize;
+                if c < context_words {
+                    out[w * context_words + c] += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Row-normalize to conditional probabilities and take the element-wise
+/// square root: `sqrt(P(c | w))`. Rows with no counts stay zero.
+pub fn hellinger_rows(counts: &[u32], context_words: usize) -> Vec<f32> {
+    let rows = counts.len() / context_words;
+    let mut out = vec![0.0f32; counts.len()];
+    for r in 0..rows {
+        let row = &counts[r * context_words..(r + 1) * context_words];
+        let total: u64 = row.iter().map(|&x| x as u64).sum();
+        if total == 0 {
+            continue;
+        }
+        let inv = 1.0 / total as f32;
+        for (o, &x) in out[r * context_words..(r + 1) * context_words]
+            .iter_mut()
+            .zip(row)
+        {
+            *o = (x as f32 * inv).sqrt();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_symmetric_window() {
+        // sentence: 2 3 4 ; radius 1
+        let sents = vec![vec![2u32, 3, 4]];
+        let c = count(&sents, 8, 8, 1);
+        assert_eq!(c[2 * 8 + 3], 1); // 2 sees 3
+        assert_eq!(c[3 * 8 + 2], 1); // 3 sees 2
+        assert_eq!(c[3 * 8 + 4], 1);
+        assert_eq!(c[2 * 8 + 4], 0); // outside radius
+        assert_eq!(c[2 * 8 + 2], 0); // never counts itself position
+    }
+
+    #[test]
+    fn context_cap_respected() {
+        let sents = vec![vec![1u32, 7, 1, 7]];
+        let c = count(&sents, 8, 4, 2); // context ids < 4 only
+        assert!(c.iter().enumerate().all(|(i, &v)| v == 0 || (i % 4) < 4));
+        assert_eq!(c[7 * 4 + 1], 3); // 7@1 sees 1@0,1@2; 7@3 sees 1@2
+        // 1 seeing 7 is dropped (7 >= context cap)
+        assert_eq!(c[1 * 4..2 * 4].iter().filter(|&&x| x > 0).count(), 1); // only ctx 1
+    }
+
+    #[test]
+    fn hellinger_rows_are_unit_l2() {
+        let sents = vec![vec![2u32, 3, 4, 3, 2, 4, 3]];
+        let c = count(&sents, 8, 8, 2);
+        let h = hellinger_rows(&c, 8);
+        for r in 0..8 {
+            let row = &h[r * 8..(r + 1) * 8];
+            let norm: f32 = row.iter().map(|x| x * x).sum();
+            if row.iter().any(|&x| x > 0.0) {
+                assert!((norm - 1.0).abs() < 1e-5, "row {r} norm {norm}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_stay_zero() {
+        let c = vec![0u32; 4 * 3];
+        let h = hellinger_rows(&c, 3);
+        assert!(h.iter().all(|&x| x == 0.0));
+    }
+}

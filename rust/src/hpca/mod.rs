@@ -1,0 +1,55 @@
+//! Hellinger-PCA word embeddings — the paper's second §5 future-work item
+//! ("Hellinger PCA can be used to learn word representations … it would be
+//! interesting to investigate whether this is amenable to good
+//! parallelization"; Lebret & Lebret 2013).
+//!
+//! Pipeline: co-occurrence counts over context windows (`cooc`) → row
+//! normalization to conditional distributions → element-wise square root
+//! (the Hellinger map — L2 distance on √p equals Hellinger distance on p)
+//! → truncated PCA via thread-parallel randomized subspace iteration
+//! (`pca`). The dense matmuls in the subspace iteration are exactly the
+//! kind of work that parallelizes well — the bench (`cargo bench -- e10`)
+//! reports wall time vs SGD training and single- vs multi-thread scaling,
+//! answering the paper's question on this substrate.
+
+pub mod cooc;
+pub mod pca;
+
+use anyhow::Result;
+
+use crate::text::Vocab;
+
+/// Configuration for Hellinger-PCA embedding training.
+#[derive(Clone, Debug)]
+pub struct HpcaConfig {
+    /// Embedding width.
+    pub dim: usize,
+    /// Context vocabulary: the `context_words` most frequent types.
+    pub context_words: usize,
+    /// Symmetric window radius for co-occurrence counting.
+    pub radius: usize,
+    /// Subspace-iteration rounds (2-4 suffice for spectra like these).
+    pub iters: usize,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for HpcaConfig {
+    fn default() -> Self {
+        Self { dim: 64, context_words: 512, radius: 2, iters: 3, threads: 4, seed: 42 }
+    }
+}
+
+/// Learn embeddings for every vocab id: returns a row-major [vocab.len(),
+/// dim] matrix.
+pub fn train_hpca(
+    sentences: &[Vec<u32>],
+    vocab: &Vocab,
+    cfg: &HpcaConfig,
+) -> Result<Vec<f32>> {
+    let counts = cooc::count(sentences, vocab.len(), cfg.context_words, cfg.radius);
+    let hell = cooc::hellinger_rows(&counts, cfg.context_words);
+    let emb = pca::project(&hell, vocab.len(), cfg.context_words, cfg.dim, cfg.iters,
+                           cfg.threads, cfg.seed)?;
+    Ok(emb)
+}

@@ -1,0 +1,247 @@
+//! Truncated PCA by randomized subspace iteration (Halko et al. 2011).
+//!
+//! For X [V, C] (V words, C context features), we want the top-`dim`
+//! right-singular directions Q [C, dim] and the embedding X·Q [V, dim].
+//! Subspace iteration: start with a random Gaussian block, repeatedly
+//! apply XᵀX with QR re-orthonormalization. The X·(XᵀX)-style products are
+//! the dominant cost and are parallelized across row blocks with the
+//! thread pool — this is the "is it amenable to good parallelization?"
+//! question the paper poses, answered in `cargo bench -- e10`.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+use crate::util::threadpool::par_map;
+
+/// Multiply `x [rows, c]` by `q [c, k]` in parallel row blocks.
+fn matmul_xq(x: &[f32], rows: usize, c: usize, q: &[f32], k: usize, threads: usize) -> Vec<f32> {
+    let block = rows.div_ceil(threads.max(1));
+    let x = std::sync::Arc::new(x.to_vec());
+    let q = std::sync::Arc::new(q.to_vec());
+    let parts = par_map(threads.max(1), threads.max(1), move |t| {
+        let lo = t * block;
+        let hi = ((t + 1) * block).min(rows);
+        let mut out = vec![0.0f32; (hi.saturating_sub(lo)) * k];
+        for r in lo..hi {
+            let xrow = &x[r * c..(r + 1) * c];
+            let orow = &mut out[(r - lo) * k..(r - lo + 1) * k];
+            for (j, xv) in xrow.iter().enumerate() {
+                if *xv == 0.0 {
+                    continue; // hellinger rows are sparse-ish
+                }
+                let qrow = &q[j * k..(j + 1) * k];
+                for (o, qv) in orow.iter_mut().zip(qrow) {
+                    *o += xv * qv;
+                }
+            }
+        }
+        out
+    });
+    let mut out = Vec::with_capacity(rows * k);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+/// `xᵀ · y` for x [rows, c], y [rows, k] -> [c, k], parallel over row
+/// blocks with per-thread accumulators.
+fn matmul_xty(
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    y: &[f32],
+    k: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let block = rows.div_ceil(threads.max(1));
+    let x = std::sync::Arc::new(x.to_vec());
+    let y = std::sync::Arc::new(y.to_vec());
+    let parts = par_map(threads.max(1), threads.max(1), move |t| {
+        let lo = t * block;
+        let hi = ((t + 1) * block).min(rows);
+        let mut acc = vec![0.0f32; c * k];
+        for r in lo..hi {
+            let xrow = &x[r * c..(r + 1) * c];
+            let yrow = &y[r * k..(r + 1) * k];
+            for (j, xv) in xrow.iter().enumerate() {
+                if *xv == 0.0 {
+                    continue;
+                }
+                let arow = &mut acc[j * k..(j + 1) * k];
+                for (a, yv) in arow.iter_mut().zip(yrow) {
+                    *a += xv * yv;
+                }
+            }
+        }
+        acc
+    });
+    let mut out = vec![0.0f32; c * k];
+    for p in parts {
+        for (o, v) in out.iter_mut().zip(&p) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// In-place modified Gram–Schmidt on the columns of `q [c, k]`.
+fn qr_orthonormalize(q: &mut [f32], c: usize, k: usize) {
+    for j in 0..k {
+        // subtract projections onto previous columns
+        for prev in 0..j {
+            let mut dot = 0.0f32;
+            for r in 0..c {
+                dot += q[r * k + j] * q[r * k + prev];
+            }
+            for r in 0..c {
+                q[r * k + j] -= dot * q[r * k + prev];
+            }
+        }
+        let mut norm = 0.0f32;
+        for r in 0..c {
+            norm += q[r * k + j] * q[r * k + j];
+        }
+        let norm = norm.sqrt();
+        if norm > 1e-12 {
+            for r in 0..c {
+                q[r * k + j] /= norm;
+            }
+        } else {
+            // degenerate column: re-seed deterministically
+            let mut rng = Rng::new(0xDEAD ^ j as u64);
+            for r in 0..c {
+                q[r * k + j] = rng.range_f32(-1.0, 1.0) / (c as f32).sqrt();
+            }
+        }
+    }
+}
+
+/// Project `x [rows, c]` onto its top-`dim` principal directions.
+/// Returns the embedding [rows, dim].
+pub fn project(
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    dim: usize,
+    iters: usize,
+    threads: usize,
+    seed: u64,
+) -> Result<Vec<f32>> {
+    if x.len() != rows * c {
+        bail!("x has {} elements, expected {rows}x{c}", x.len());
+    }
+    if dim > c {
+        bail!("dim {dim} exceeds context width {c}");
+    }
+    let mut rng = Rng::new(seed);
+    let mut q: Vec<f32> = (0..c * dim).map(|_| rng.normal() as f32).collect();
+    qr_orthonormalize(&mut q, c, dim);
+    for _ in 0..iters.max(1) {
+        let y = matmul_xq(x, rows, c, &q, dim, threads); // [rows, dim]
+        q = matmul_xty(x, rows, c, &y, dim, threads); // XᵀXQ  [c, dim]
+        qr_orthonormalize(&mut q, c, dim);
+    }
+    Ok(matmul_xq(x, rows, c, &q, dim, threads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a rank-`k` matrix with known spectrum.
+    fn low_rank(rows: usize, c: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let u: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..k * c).map(|_| rng.normal() as f32).collect();
+        let mut x = vec![0.0f32; rows * c];
+        for r in 0..rows {
+            for j in 0..c {
+                let mut acc = 0.0;
+                for t in 0..k {
+                    // decaying singular-value-ish weights
+                    acc += u[r * k + t] * v[t * c + j] * (1.0 / (1 + t) as f32);
+                }
+                x[r * c + j] = acc;
+            }
+        }
+        x
+    }
+
+    fn frob(x: &[f32]) -> f32 {
+        x.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    #[test]
+    fn qr_produces_orthonormal_columns() {
+        let (c, k) = (20, 5);
+        let mut rng = Rng::new(1);
+        let mut q: Vec<f32> = (0..c * k).map(|_| rng.normal() as f32).collect();
+        qr_orthonormalize(&mut q, c, k);
+        for a in 0..k {
+            for b in 0..k {
+                let mut dot = 0.0f32;
+                for r in 0..c {
+                    dot += q[r * k + a] * q[r * k + b];
+                }
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-4, "({a},{b}) dot {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_captures_low_rank_energy() {
+        let (rows, c, k) = (120, 40, 3);
+        let x = low_rank(rows, c, k, 2);
+        let emb = project(&x, rows, c, k, 4, 2, 7).unwrap();
+        // energy captured by the top-k projection should be ~all of ||X||
+        // (X is rank k): compare Frobenius norms.
+        let ex = frob(&x);
+        let ee = frob(&emb);
+        assert!(
+            (ee / ex) > 0.98,
+            "captured energy ratio {:.4}",
+            ee / ex
+        );
+    }
+
+    #[test]
+    fn projection_beats_random_directions_on_energy() {
+        let (rows, c) = (100, 30);
+        let x = low_rank(rows, c, 4, 3);
+        let emb = project(&x, rows, c, 2, 4, 2, 7).unwrap();
+        // random 2-dim projection captures much less of rank-4 energy
+        let mut rng = Rng::new(9);
+        let mut q: Vec<f32> = (0..c * 2).map(|_| rng.normal() as f32).collect();
+        qr_orthonormalize(&mut q, c, 2);
+        let rand_emb = matmul_xq(&x, rows, c, &q, 2, 2);
+        assert!(frob(&emb) > 1.2 * frob(&rand_emb));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        // dim == exact rank: the learned subspace is then the full row
+        // space, making row norms equal ||x_r|| for any thread count.
+        // (With dim > rank the surplus directions are FP-noise-determined
+        // and legitimately differ between runs.)
+        let (rows, c) = (60, 24);
+        let x = low_rank(rows, c, 3, 5);
+        let a = project(&x, rows, c, 3, 3, 1, 11).unwrap();
+        let b = project(&x, rows, c, 3, 3, 4, 11).unwrap();
+        // the basis of the top-k subspace is unique only up to rotation
+        // (thread count changes FP summation order), but row norms —
+        // the projection lengths — are rotation-invariant.
+        for r in 0..rows {
+            let na: f32 = a[r * 3..(r + 1) * 3].iter().map(|v| v * v).sum::<f32>().sqrt();
+            let nb: f32 = b[r * 3..(r + 1) * 3].iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((na - nb).abs() < 1e-2 * na.max(1.0), "row {r}: {na} vs {nb}");
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(project(&[0.0; 10], 3, 4, 2, 1, 1, 0).is_err());
+        assert!(project(&[0.0; 12], 3, 4, 5, 1, 1, 0).is_err());
+    }
+}

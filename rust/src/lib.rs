@@ -1,0 +1,34 @@
+//! # polyglot-gpu
+//!
+//! Reproduction of *"Exploring the power of GPU's for training Polyglot
+//! language models"* (Kulkarni, Al-Rfou', Perozzi, Skiena — 2014) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **L1** (`python/compile/kernels/`): Pallas kernels for advanced
+//!   indexing (the paper's hot spot) and the fused hidden layer.
+//! - **L2** (`python/compile/model.py`): the Polyglot window model,
+//!   AOT-lowered to HLO text artifacts.
+//! - **L3** (this crate): the coordinator — data pipeline, batching,
+//!   training loop, Theano-style profiler, GPU device model, serving.
+//!
+//! See DESIGN.md for the architecture and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod data;
+pub mod devicemodel;
+pub mod distributed;
+pub mod embeddings;
+pub mod eval;
+pub mod hpca;
+pub mod profiler;
+pub mod runtime;
+pub mod server;
+pub mod testkit;
+pub mod text;
+pub mod util;

@@ -1,0 +1,478 @@
+//! `polyglot` — the launcher CLI for the Polyglot-GPU reproduction.
+//!
+//! Subcommands map onto the paper's experiments (see DESIGN.md §6):
+//! `train` (E1/E4 regimes), `profile` (E2/Table 1), `indexing` (E3),
+//! `nvprof` (E5), `sweep` (E6/E7), plus `serve`, `gen-corpus` and `info`
+//! utilities. Run `polyglot <cmd> --help` for flags.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use polyglot_gpu::cli::{Cli, CliError, CommandSpec, FlagSpec};
+use polyglot_gpu::config::{Backend, Config};
+use polyglot_gpu::coordinator::{self, checkpoint, RunOptions};
+use polyglot_gpu::corpus::{generator, CorpusSpec};
+use polyglot_gpu::devicemodel::{NvprofReport, OpStream, GT570};
+use polyglot_gpu::profiler::{OpClass, Profiler};
+use polyglot_gpu::runtime::{lit_f32, lit_i32, Runtime};
+use polyglot_gpu::server::Server;
+use polyglot_gpu::text::Vocab;
+use polyglot_gpu::util::fmt;
+use polyglot_gpu::util::rng::Rng;
+
+fn cli() -> Cli {
+    let common = || FlagSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") };
+    Cli {
+        program: "polyglot",
+        about: "train/serve Polyglot embeddings over AOT XLA artifacts (2014 GPU-paper reproduction)",
+        commands: vec![
+            CommandSpec {
+                name: "train",
+                about: "train a model on a synthetic or file corpus",
+                flags: vec![
+                    common(),
+                    FlagSpec { name: "steps", help: "SGD steps", default: Some("500") },
+                    FlagSpec { name: "backend", help: "cpu | gpu-naive | gpu-opt", default: Some("gpu-opt") },
+                    FlagSpec { name: "batch", help: "batch size (16..512)", default: Some("16") },
+                    FlagSpec { name: "out", help: "checkpoint output path", default: Some("checkpoints/model.pgck") },
+                ],
+            },
+            CommandSpec {
+                name: "serve",
+                about: "serve scores + nearest neighbours from a checkpoint",
+                flags: vec![
+                    common(),
+                    FlagSpec { name: "checkpoint", help: "model checkpoint", default: Some("checkpoints/model.pgck") },
+                    FlagSpec { name: "vocab", help: "vocab file", default: Some("checkpoints/vocab.txt") },
+                    FlagSpec { name: "addr", help: "listen address", default: Some("127.0.0.1:7878") },
+                ],
+            },
+            CommandSpec {
+                name: "profile",
+                about: "Table-1 hot-spot profile of a training backend",
+                flags: vec![
+                    common(),
+                    FlagSpec { name: "backend", help: "backend to profile", default: Some("gpu-naive") },
+                    FlagSpec { name: "steps", help: "profiled steps", default: Some("30") },
+                ],
+            },
+            CommandSpec {
+                name: "indexing",
+                about: "advanced-indexing microbenchmark (paper §4.3)",
+                flags: vec![
+                    common(),
+                    FlagSpec { name: "rows", help: "rows to index", default: Some("1000") },
+                    FlagSpec { name: "samples", help: "bench samples", default: Some("5") },
+                ],
+            },
+            CommandSpec {
+                name: "nvprof",
+                about: "device-model metrics (compute utilization etc., §4.5)",
+                flags: vec![
+                    common(),
+                    FlagSpec { name: "batch", help: "batch size", default: Some("16") },
+                    FlagSpec { name: "steps", help: "measured steps", default: Some("200") },
+                ],
+            },
+            CommandSpec {
+                name: "sweep",
+                about: "batch-size sweep: training rate + convergence (Fig 1)",
+                flags: vec![
+                    common(),
+                    FlagSpec { name: "steps", help: "steps per batch size", default: Some("120") },
+                ],
+            },
+            CommandSpec {
+                name: "gen-corpus",
+                about: "write a synthetic multilingual corpus to a text file",
+                flags: vec![
+                    FlagSpec { name: "out", help: "output path", default: Some("") },
+                    FlagSpec { name: "languages", help: "language count", default: Some("3") },
+                    FlagSpec { name: "tokens", help: "tokens per language", default: Some("100000") },
+                ],
+            },
+            CommandSpec {
+                name: "downpour",
+                about: "Downpour-style async SGD experiment (paper §5 future work)",
+                flags: vec![
+                    FlagSpec { name: "workers", help: "worker threads", default: Some("4") },
+                    FlagSpec { name: "staleness", help: "batches between parameter pulls", default: Some("4") },
+                    FlagSpec { name: "examples", help: "total example budget", default: Some("200000") },
+                ],
+            },
+            CommandSpec {
+                name: "hpca",
+                about: "Hellinger-PCA embeddings (paper §5 future work)",
+                flags: vec![
+                    FlagSpec { name: "dim", help: "embedding width", default: Some("32") },
+                    FlagSpec { name: "context", help: "context vocabulary size", default: Some("512") },
+                    FlagSpec { name: "threads", help: "PCA threads", default: Some("4") },
+                ],
+            },
+            CommandSpec {
+                name: "info",
+                about: "list manifest artifacts",
+                flags: vec![common()],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let spec = cli();
+    let inv = match spec.parse(&args) {
+        Ok(inv) => inv,
+        Err(CliError::HelpRequested(h)) => {
+            println!("{h}");
+            return;
+        }
+        Err(CliError::Invalid(m)) => {
+            eprintln!("{m}");
+            std::process::exit(2);
+        }
+    };
+    let config_path = inv.get("config").map(PathBuf::from);
+    let result = (|| -> Result<()> {
+        let mut cfg = Config::load(config_path.as_deref(), &inv.sets)?;
+        if let Some(dir) = inv.get("artifacts") {
+            cfg.runtime.artifacts_dir = dir.to_string();
+        }
+        match inv.command.as_str() {
+            "train" => cmd_train(&inv, cfg),
+            "serve" => cmd_serve(&inv, cfg),
+            "profile" => cmd_profile(&inv, cfg),
+            "indexing" => cmd_indexing(&inv, cfg),
+            "nvprof" => cmd_nvprof(&inv, cfg),
+            "sweep" => cmd_sweep(&inv, cfg),
+            "gen-corpus" => cmd_gen_corpus(&inv),
+            "downpour" => cmd_downpour(&inv, cfg),
+            "hpca" => cmd_hpca(&inv, cfg),
+            "info" => cmd_info(cfg),
+            other => anyhow::bail!("unhandled command {other}"),
+        }
+    })();
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn runtime(cfg: &Config) -> Result<Runtime> {
+    Runtime::new(Path::new(&cfg.runtime.artifacts_dir))
+}
+
+fn cmd_train(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()> {
+    cfg.training.steps = inv.get_usize("steps")?;
+    cfg.training.backend = Backend::parse(inv.get("backend").unwrap())?;
+    cfg.training.batch = inv.get_usize("batch")?;
+    let rt = runtime(&cfg)?;
+    println!(
+        "[train] backend={} batch={} steps={} (artifacts: {})",
+        cfg.training.backend.name(),
+        cfg.training.batch,
+        cfg.training.steps,
+        cfg.runtime.artifacts_dir
+    );
+    let corpus = coordinator::prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
+    println!("[train] corpus: {} tokens, vocab {}", corpus.tokens, corpus.vocab.len());
+    let opts = RunOptions { steps: cfg.training.steps, ..RunOptions::default() };
+    let (trainer, report) = coordinator::run_training(&rt, &cfg, &corpus, &opts)?;
+    println!(
+        "[train] done: {} steps, {} examples in {} — mean rate {:.1} ex/s (σ = {:.1}), final loss {:.4}",
+        report.steps,
+        report.examples,
+        fmt::dur(report.wall),
+        report.rate_mean,
+        report.rate_std,
+        report.final_loss
+    );
+    let out = PathBuf::from(inv.get("out").unwrap());
+    let params = trainer.params_host()?;
+    checkpoint::save(&out, &params)?;
+    let vocab_path = out.with_file_name("vocab.txt");
+    std::fs::write(&vocab_path, corpus.vocab.to_text())?;
+    println!("[train] checkpoint -> {} ; vocab -> {}", out.display(), vocab_path.display());
+    Ok(())
+}
+
+fn cmd_serve(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()> {
+    cfg.server.addr = inv.get("addr").unwrap().to_string();
+    let params = checkpoint::load(Path::new(inv.get("checkpoint").unwrap()))
+        .context("load checkpoint (run `polyglot train` first)")?;
+    let vocab = Vocab::from_text(
+        &std::fs::read_to_string(inv.get("vocab").unwrap()).context("read vocab")?,
+    )?;
+    let server = Server::start(
+        &cfg.server,
+        PathBuf::from(&cfg.runtime.artifacts_dir),
+        vocab,
+        params,
+    )?;
+    println!("[serve] listening on {} (PING / SCORE / NN / QUIT)", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        let st = server.stats();
+        println!(
+            "[serve] {} requests, {} batches, mean latency {}",
+            st.requests.load(std::sync::atomic::Ordering::Relaxed),
+            st.batches.load(std::sync::atomic::Ordering::Relaxed),
+            fmt::dur(st.mean_latency()),
+        );
+    }
+}
+
+fn cmd_profile(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()> {
+    cfg.training.backend = Backend::parse(inv.get("backend").unwrap())?;
+    cfg.training.batch = 16;
+    let steps = inv.get_usize("steps")?;
+    let rt = runtime(&cfg)?;
+    let corpus = coordinator::prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
+    let opts = RunOptions { steps, quiet: true, ..RunOptions::default() };
+    let (_trainer, report) = coordinator::run_training(&rt, &cfg, &corpus, &opts)?;
+
+    let mut prof = Profiler::new();
+    for (name, calls, total) in rt.dispatch_stats() {
+        if name.starts_with("scatter_row1") {
+            // the per-row advanced-indexing dispatches — measured directly
+            prof.add_measured(OpClass::AdvancedIncSubtensor, calls, total);
+        } else {
+            let spec = rt.manifest.find(&name)?;
+            let text = std::fs::read_to_string(&spec.file)?;
+            prof.add_artifact(&text, calls, total);
+        }
+    }
+    println!(
+        "[profile] backend={} steps={} rate={:.1} ex/s",
+        cfg.training.backend.name(),
+        report.steps,
+        report.rate_mean
+    );
+    println!("\nTop hot spots (Table 1 reproduction):\n{}", prof.render(5));
+    Ok(())
+}
+
+fn cmd_indexing(inv: &polyglot_gpu::cli::Invocation, cfg: Config) -> Result<()> {
+    let rows = inv.get_usize("rows")?;
+    let samples = inv.get_usize("samples")?;
+    let rt = runtime(&cfg)?;
+    let (v, d) = (10240usize, 64usize);
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..v * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let idx: Vec<i32> = (0..rows).map(|_| rng.below(v as u64) as i32).collect();
+    let y: Vec<f32> = (0..rows * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let wl = lit_f32(&w, &[v, d])?;
+
+    // optimized: one pallas-kernel dispatch for all rows
+    let opt = rt.load(&format!("scatter_rows_r{rows}"))?;
+    let il = lit_i32(&idx, &[rows])?;
+    let yl = lit_f32(&y, &[rows, d])?;
+    let mut bench = polyglot_gpu::bench::Bencher::new();
+    bench.bench("optimized (1 kernel)", 2, samples, rows as f64, || {
+        opt.run(&[&wl, &il, &yl]).unwrap()
+    });
+
+    // naive: one dispatch per row (Theano's per-row Python loop), W
+    // device-resident like Theano's shared variable
+    let row1 = rt.load("scatter_row1_bench")?;
+    bench.bench("naive (per-row dispatch)", 1, samples.min(3), rows as f64, || {
+        let mut cur = row1.to_device(&wl).unwrap();
+        for r in 0..rows {
+            let i1 = row1.upload_i32(&idx[r..r + 1], &[1]).unwrap();
+            let r1 = row1.upload_f32(&y[r * d..(r + 1) * d], &[1, d]).unwrap();
+            cur = row1.run_b(&[&cur, &i1, &r1]).unwrap();
+        }
+        cur.to_literal_sync().unwrap()
+    });
+
+    println!("[indexing] {rows} rows over [{v}x{d}] (paper §4.3: 207.59 s -> 3.66 s)");
+    println!("{}", bench.render());
+    let naive = bench.get("naive (per-row dispatch)").unwrap().mean_s();
+    let opt_t = bench.get("optimized (1 kernel)").unwrap().mean_s();
+    println!(
+        "speedup: {:.1}x (per-call: {:.1}x)",
+        naive / opt_t,
+        (naive / rows as f64) / (opt_t / rows as f64)
+    );
+    Ok(())
+}
+
+fn cmd_nvprof(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()> {
+    cfg.training.batch = inv.get_usize("batch")?;
+    let steps = inv.get_usize("steps")?;
+    let rt = runtime(&cfg)?;
+    let corpus = coordinator::prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
+    let opts = RunOptions { steps, quiet: true, ..RunOptions::default() };
+    let (trainer, report) = coordinator::run_training(&rt, &cfg, &corpus, &opts)?;
+    let dims = trainer.dims.clone();
+
+    let mut stream = OpStream::new();
+    let mut busy = std::time::Duration::ZERO;
+    for (name, calls, total) in rt.dispatch_stats() {
+        let spec = rt.manifest.find(&name)?;
+        let text = std::fs::read_to_string(&spec.file)?;
+        busy += total;
+        // params stay device-resident on the paper's GPU; per step the
+        // memcpy ops are the batch tensors up + the loss scalar down.
+        let batch_tensors: Vec<&polyglot_gpu::runtime::TensorSpec> = spec
+            .inputs
+            .iter()
+            .filter(|t| t.shape.first() == Some(&cfg.training.batch))
+            .collect();
+        let io_bytes: usize = batch_tensors.iter().map(|t| t.bytes()).sum::<usize>() + 4;
+        let io_count = batch_tensors.len() as u64 + 1;
+        stream.add_artifact(&text, calls, (io_bytes as u64, io_count),
+                            Some(&[dims.vocab, dims.dim]));
+    }
+    let rep = NvprofReport::evaluate(&GT570, &stream, report.wall, Some(busy));
+    println!(
+        "[nvprof] batch={} steps={} rate {:.1} ex/s (paper §4.5: util 7.4%, ratio 66.72)",
+        cfg.training.batch, report.steps, report.rate_mean
+    );
+    println!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_sweep(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()> {
+    let steps = inv.get_usize("steps")?;
+    let rt = runtime(&cfg)?;
+    let corpus = coordinator::prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
+    let mut t = fmt::Table::new(&["batch", "rate (ex/s)", "σ"]);
+    for batch in rt.manifest.batches_for("train_step", Some("opt")) {
+        cfg.training.batch = batch;
+        let opts = RunOptions { steps, quiet: true, ..RunOptions::default() };
+        let (_tr, report) = coordinator::run_training(&rt, &cfg, &corpus, &opts)?;
+        t.row(&[
+            batch.to_string(),
+            format!("{:.1}", report.rate_mean),
+            format!("{:.1}", report.rate_std),
+        ]);
+    }
+    println!("[sweep] training rate vs batch size (Fig 1a):\n{}", t.render());
+    Ok(())
+}
+
+fn cmd_gen_corpus(inv: &polyglot_gpu::cli::Invocation) -> Result<()> {
+    let out = PathBuf::from(
+        inv.get("out").filter(|s| !s.is_empty()).context("--out is required")?,
+    );
+    let spec = CorpusSpec {
+        languages: inv.get_usize("languages")?,
+        tokens_per_language: inv.get_usize("tokens")?,
+        ..CorpusSpec::default()
+    };
+    let corpus = generator::generate(&spec);
+    polyglot_gpu::corpus::loader::write_text_file(&out, &corpus.sentences)?;
+    println!(
+        "[gen-corpus] {} sentences / {} tokens ({} languages) -> {}",
+        corpus.sentences.len(),
+        corpus.total_tokens(),
+        spec.languages,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_downpour(inv: &polyglot_gpu::cli::Invocation, cfg: Config) -> Result<()> {
+    use polyglot_gpu::baselines::model_ref::ModelParams;
+    use polyglot_gpu::data::shard::split_shards;
+    use polyglot_gpu::distributed::{run_downpour, DownpourConfig};
+
+    let workers = inv.get_usize("workers")?;
+    let spec = polyglot_gpu::corpus::CorpusSpec {
+        languages: cfg.data.languages,
+        tokens_per_language: cfg.data.tokens_per_language.min(100_000),
+        lexicon: 1500,
+        seed: cfg.training.seed,
+        threads: 4,
+        ..polyglot_gpu::corpus::CorpusSpec::default()
+    };
+    let corpus = polyglot_gpu::corpus::generator::generate(&spec);
+    let vocab = Vocab::build(corpus.sentences.iter().map(|s| s.as_slice()), 2, 4096);
+    let encoded: Vec<Vec<u32>> = corpus.sentences.iter().map(|s| vocab.encode(s)).collect();
+    let shards = split_shards(encoded, workers, cfg.training.seed);
+    let init = ModelParams::init(vocab.len(), 16, 5, 16, cfg.training.seed);
+    let dcfg = DownpourConfig {
+        workers,
+        pull_every: inv.get_usize("staleness")?,
+        example_budget: inv.get_usize("examples")? as u64,
+        lr: 0.08,
+        batch: cfg.training.batch.min(64),
+        converge_threshold: cfg.training.converge_threshold.max(0.5),
+        seed: cfg.training.seed,
+    };
+    let rep = run_downpour(init, shards, &dcfg)?;
+    println!(
+        "[downpour] {} workers (staleness {}): {} examples in {} — {:.0} ex/s, final loss {:.3}",
+        rep.workers,
+        dcfg.pull_every,
+        rep.examples,
+        fmt::dur(rep.wall),
+        rep.rate,
+        rep.final_loss
+    );
+    if let Some(ex) = rep.converged_examples {
+        println!("[downpour] converged after {} examples", fmt::si(ex as f64));
+    }
+    Ok(())
+}
+
+fn cmd_hpca(inv: &polyglot_gpu::cli::Invocation, cfg: Config) -> Result<()> {
+    use polyglot_gpu::eval::bigram_neighbor_score;
+    use polyglot_gpu::hpca::{train_hpca, HpcaConfig};
+
+    let spec = polyglot_gpu::corpus::CorpusSpec {
+        languages: cfg.data.languages,
+        tokens_per_language: cfg.data.tokens_per_language.min(150_000),
+        lexicon: 1500,
+        seed: cfg.training.seed,
+        threads: 4,
+        ..polyglot_gpu::corpus::CorpusSpec::default()
+    };
+    let corpus = polyglot_gpu::corpus::generator::generate(&spec);
+    let vocab = Vocab::build(corpus.sentences.iter().map(|s| s.as_slice()), 2, 8192);
+    let encoded: Vec<Vec<u32>> = corpus.sentences.iter().map(|s| vocab.encode(s)).collect();
+    let hcfg = HpcaConfig {
+        dim: inv.get_usize("dim")?,
+        context_words: inv.get_usize("context")?,
+        threads: inv.get_usize("threads")?,
+        ..HpcaConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let emb = train_hpca(&encoded, &vocab, &hcfg)?;
+    let wall = t0.elapsed();
+    let score = bigram_neighbor_score(&emb, hcfg.dim, &encoded, 500, 3);
+    println!(
+        "[hpca] dim={} context={} threads={}: {} in {} — bigram-neighbor score {:.3}",
+        hcfg.dim,
+        hcfg.context_words,
+        hcfg.threads,
+        fmt::si((vocab.len() * hcfg.dim) as f64),
+        fmt::dur(wall),
+        score
+    );
+    Ok(())
+}
+
+fn cmd_info(cfg: Config) -> Result<()> {
+    let rt = runtime(&cfg)?;
+    let m = &rt.manifest;
+    println!(
+        "main model: V={} D={} C={} H={}",
+        m.main_model.vocab, m.main_model.dim, m.main_model.window, m.main_model.hidden
+    );
+    let mut t = fmt::Table::new(&["artifact", "kind", "backend", "batch", "inputs", "outputs"]);
+    for a in &m.artifacts {
+        t.row(&[
+            a.name.clone(),
+            a.kind.clone(),
+            a.backend.clone().unwrap_or_default(),
+            a.batch.map(|b| b.to_string()).unwrap_or_default(),
+            a.inputs.len().to_string(),
+            a.outputs.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

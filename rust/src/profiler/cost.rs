@@ -1,0 +1,200 @@
+//! Per-instruction cost model + Theano op-class mapping.
+//!
+//! FLOP/byte estimates follow XLA's own HloCostAnalysis conventions:
+//! elementwise = 1 flop/element, dot = 2·M·N·K, reduce = 1 flop/element of
+//! input, data movement ops = bytes moved, control ops = free. The class
+//! names are Theano's — Table 1's rows are `GpuAdvancedIncSubtensor1`,
+//! `GpuElemwise`, `GpuAlloc` — so the reproduction prints the same labels.
+
+use std::collections::HashMap;
+
+use super::hlo::Instruction;
+
+/// Theano op classes (what Table 1 ranks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    /// scatter / the per-row update loop — `W[I] += Y`.
+    AdvancedIncSubtensor,
+    /// gather — `W[I]`.
+    AdvancedSubtensor,
+    /// elementwise arithmetic (add/mul/tanh/max/select/compare...).
+    Elemwise,
+    /// buffer materialization: broadcast/iota/constant/copy/pad.
+    Alloc,
+    /// matmul.
+    Gemm,
+    /// reductions.
+    Reduce,
+    /// reshape/transpose/slice/concat — layout movement.
+    Dimshuffle,
+    /// control flow and glue (while/call/tuple/parameter/...).
+    Control,
+}
+
+impl OpClass {
+    /// Theano's name for the class (GPU-prefixed, as in the paper).
+    pub fn theano_name(&self) -> &'static str {
+        match self {
+            OpClass::AdvancedIncSubtensor => "GpuAdvancedIncSubtensor1",
+            OpClass::AdvancedSubtensor => "GpuAdvancedSubtensor1",
+            OpClass::Elemwise => "GpuElemwise",
+            OpClass::Alloc => "GpuAlloc",
+            OpClass::Gemm => "GpuGemm",
+            OpClass::Reduce => "GpuCAReduce",
+            OpClass::Dimshuffle => "GpuDimShuffle",
+            OpClass::Control => "(control)",
+        }
+    }
+
+    pub fn all() -> [OpClass; 8] {
+        [
+            OpClass::AdvancedIncSubtensor,
+            OpClass::AdvancedSubtensor,
+            OpClass::Elemwise,
+            OpClass::Alloc,
+            OpClass::Gemm,
+            OpClass::Reduce,
+            OpClass::Dimshuffle,
+            OpClass::Control,
+        ]
+    }
+}
+
+/// Map an HLO opcode to its Theano class.
+pub fn classify(inst: &Instruction) -> OpClass {
+    match inst.opcode.as_str() {
+        "scatter" | "dynamic-update-slice" => OpClass::AdvancedIncSubtensor,
+        "gather" | "dynamic-slice" => OpClass::AdvancedSubtensor,
+        "dot" => OpClass::Gemm,
+        "reduce" | "reduce-window" => OpClass::Reduce,
+        "broadcast" | "iota" | "constant" | "copy" | "pad" => OpClass::Alloc,
+        "reshape" | "transpose" | "slice" | "concatenate" | "bitcast"
+        | "bitcast-convert" => OpClass::Dimshuffle,
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum"
+        | "tanh" | "exponential" | "log" | "negate" | "abs" | "sign" | "power"
+        | "select" | "compare" | "and" | "or" | "not" | "xor" | "convert"
+        | "clamp" | "floor" | "ceil" | "sqrt" | "rsqrt" | "remainder"
+        | "shift-left" | "shift-right-logical" | "shift-right-arithmetic"
+        | "is-finite" | "sine" | "cosine" | "atan2" => OpClass::Elemwise,
+        _ => OpClass::Control, // parameter, tuple, while, call, custom-call…
+    }
+}
+
+/// (flops, bytes) estimate for one instruction. `shapes` resolves operand
+/// result shapes by name.
+pub fn instruction_cost(
+    inst: &Instruction,
+    shapes: &HashMap<String, Vec<usize>>,
+) -> (u64, u64) {
+    let out_elems = inst.elements() as u64;
+    let out_bytes = inst.bytes() as u64;
+    let operand_bytes: u64 = inst
+        .operands
+        .iter()
+        .filter_map(|o| shapes.get(o))
+        .map(|s| s.iter().product::<usize>() as u64 * 4)
+        .sum();
+    match classify(inst) {
+        OpClass::Gemm => {
+            // flops = 2 * (product of output dims) * K, K from lhs shape
+            // minus output contribution.
+            let lhs = inst.operands.first().and_then(|o| shapes.get(o));
+            let k = match lhs {
+                Some(l) => {
+                    let lhs_elems: u64 = l.iter().product::<usize>() as u64;
+                    let m: u64 = inst.shape.first().copied().unwrap_or(1) as u64;
+                    (lhs_elems / m.max(1)).max(1)
+                }
+                None => 1,
+            };
+            (2 * out_elems * k, operand_bytes + out_bytes)
+        }
+        OpClass::Elemwise => (out_elems, operand_bytes + out_bytes),
+        OpClass::Reduce => (operand_bytes / 4, operand_bytes + out_bytes),
+        OpClass::AdvancedIncSubtensor | OpClass::AdvancedSubtensor => {
+            // data movement dominated: touched rows r/w
+            (out_elems, operand_bytes + out_bytes)
+        }
+        OpClass::Alloc | OpClass::Dimshuffle => (0, out_bytes),
+        OpClass::Control => (0, 0),
+    }
+}
+
+/// Aggregate (flops, bytes) per op class over a parsed module.
+pub fn module_cost_by_class(
+    insts: &[Instruction],
+) -> HashMap<OpClass, (u64, u64, u64)> {
+    let shapes: HashMap<String, Vec<usize>> =
+        insts.iter().map(|i| (i.name.clone(), i.shape.clone())).collect();
+    let mut out: HashMap<OpClass, (u64, u64, u64)> = HashMap::new();
+    for i in insts {
+        let class = classify(i);
+        let (f, b) = instruction_cost(i, &shapes);
+        let e = out.entry(class).or_insert((0, 0, 0));
+        e.0 += f;
+        e.1 += b;
+        e.2 += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::hlo::parse_hlo;
+
+    #[test]
+    fn classes_match_theano_mapping() {
+        let mk = |op: &str| Instruction {
+            name: "x".into(),
+            opcode: op.into(),
+            ty: "f32".into(),
+            shape: vec![2, 2],
+            operands: vec![],
+            computation: String::new(),
+            is_root: false,
+            attrs: String::new(),
+        };
+        assert_eq!(classify(&mk("scatter")), OpClass::AdvancedIncSubtensor);
+        assert_eq!(classify(&mk("dynamic-update-slice")), OpClass::AdvancedIncSubtensor);
+        assert_eq!(classify(&mk("gather")), OpClass::AdvancedSubtensor);
+        assert_eq!(classify(&mk("tanh")), OpClass::Elemwise);
+        assert_eq!(classify(&mk("broadcast")), OpClass::Alloc);
+        assert_eq!(classify(&mk("dot")), OpClass::Gemm);
+        assert_eq!(classify(&mk("while")), OpClass::Control);
+    }
+
+    #[test]
+    fn dot_flops() {
+        let text = "ENTRY e {\n  a.1 = f32[8,16]{1,0} parameter(0)\n  b.1 = f32[16,4]{1,0} parameter(1)\n  ROOT d.1 = f32[8,4]{1,0} dot(a.1, b.1), lhs_contracting_dims={1}\n}\n";
+        let (insts, idx) = parse_hlo(text);
+        let shapes: HashMap<String, Vec<usize>> =
+            insts.iter().map(|i| (i.name.clone(), i.shape.clone())).collect();
+        let (f, _) = instruction_cost(&insts[idx["d.1"]], &shapes);
+        assert_eq!(f, 2 * 8 * 4 * 16);
+    }
+
+    #[test]
+    fn real_train_step_scatter_cost_present() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/train_step_ref_b16.hlo.txt");
+        let text = std::fs::read_to_string(path).expect("make artifacts");
+        let (insts, _) = parse_hlo(&text);
+        let by_class = module_cost_by_class(&insts);
+        assert!(by_class.contains_key(&OpClass::AdvancedIncSubtensor));
+        assert!(by_class.contains_key(&OpClass::Gemm));
+        let (_, bytes, count) = by_class[&OpClass::AdvancedIncSubtensor];
+        assert!(count >= 1);
+        assert!(bytes > 0);
+    }
+
+    #[test]
+    fn theano_names() {
+        assert_eq!(
+            OpClass::AdvancedIncSubtensor.theano_name(),
+            "GpuAdvancedIncSubtensor1"
+        );
+        assert_eq!(OpClass::Elemwise.theano_name(), "GpuElemwise");
+        assert_eq!(OpClass::Alloc.theano_name(), "GpuAlloc");
+    }
+}

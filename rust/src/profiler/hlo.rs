@@ -1,0 +1,230 @@
+//! Minimal HLO-text parser: enough structure for op inventories and cost
+//! estimates (opcode, result shape, operand names, attributes).
+//!
+//! The format is what `XlaComputation::as_hlo_text()` emits (and
+//! `HloModuleProto::from_text_file` consumes):
+//!
+//! ```text
+//! computation_name {
+//!   name.1 = f32[80,64]{1,0} opcode(operand.1, operand.2), attr={...}
+//!   ROOT tuple.1 = (...) tuple(...)
+//! }
+//! ```
+
+use std::collections::HashMap;
+
+/// One parsed instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Instruction {
+    pub name: String,
+    pub opcode: String,
+    /// Result element type, e.g. "f32" ("(tuple)" for tuple-shaped).
+    pub ty: String,
+    /// Result dims (empty for scalar or tuple).
+    pub shape: Vec<usize>,
+    pub operands: Vec<String>,
+    pub computation: String,
+    pub is_root: bool,
+    /// Raw attribute text after the operand list (for e.g. dot dims).
+    pub attrs: String,
+}
+
+impl Instruction {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * 4 // all tensor types in this project are 32-bit
+    }
+}
+
+/// Parse an HLO module's instructions, keyed insertion order. Returns the
+/// instruction list and a name->index map (for operand shape lookup).
+pub fn parse_hlo(text: &str) -> (Vec<Instruction>, HashMap<String, usize>) {
+    let mut out = Vec::new();
+    let mut index = HashMap::new();
+    let mut computation = String::new();
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("HloModule") {
+            continue;
+        }
+        if line.ends_with('{') && !line.contains('=') {
+            computation = line.trim_end_matches('{').trim().to_string();
+            continue;
+        }
+        if line == "}" {
+            continue;
+        }
+        if let Some(inst) = parse_instruction(line, &computation) {
+            index.insert(inst.name.clone(), out.len());
+            out.push(inst);
+        }
+    }
+    (out, index)
+}
+
+fn parse_instruction(line: &str, computation: &str) -> Option<Instruction> {
+    let (lhs, rhs) = line.split_once(" = ")?;
+    let (is_root, name) = match lhs.strip_prefix("ROOT ") {
+        Some(n) => (true, n.trim()),
+        None => (false, lhs.trim()),
+    };
+    // rhs: "f32[80,64]{1,0} opcode(args), attrs" or "(tuple...) tuple(...)"
+    let rhs = rhs.trim();
+    let (ty, shape, rest) = if rhs.starts_with('(') {
+        // tuple shape — find matching paren
+        let close = matching_paren(rhs, 0)?;
+        ("(tuple)".to_string(), Vec::new(), rhs[close + 1..].trim())
+    } else {
+        let sp = rhs.find(' ')?;
+        let (shape_txt, rest) = rhs.split_at(sp);
+        let (ty, dims) = parse_shape(shape_txt)?;
+        (ty, dims, rest.trim())
+    };
+    let paren = rest.find('(')?;
+    let opcode = rest[..paren].trim().to_string();
+    let close = matching_paren(rest, paren)?;
+    let args = &rest[paren + 1..close];
+    let attrs = rest[close + 1..].trim_start_matches(',').trim().to_string();
+    let operands = if opcode == "constant" {
+        Vec::new() // payload is a literal value, not operand names
+    } else {
+        args
+        .split(',')
+        .map(|a| a.trim())
+        .filter(|a| !a.is_empty() && !a.starts_with("/*"))
+        .map(|a| a.trim_start_matches('%').to_string())
+        .collect()
+    };
+    Some(Instruction {
+        name: name.trim_start_matches('%').to_string(),
+        opcode,
+        ty,
+        shape,
+        operands,
+        computation: computation.to_string(),
+        is_root,
+        attrs,
+    })
+}
+
+fn matching_paren(s: &str, open: usize) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let mut depth = 0;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// `f32[80,64]{1,0}` -> ("f32", [80, 64]); `s32[]` -> ("s32", []).
+pub fn parse_shape(s: &str) -> Option<(String, Vec<usize>)> {
+    let lb = s.find('[')?;
+    let rb = s.find(']')?;
+    let ty = s[..lb].to_string();
+    let dims_txt = &s[lb + 1..rb];
+    let dims = if dims_txt.is_empty() {
+        Vec::new()
+    } else {
+        dims_txt
+            .split(',')
+            .map(|d| d.trim().parse::<usize>().ok())
+            .collect::<Option<Vec<_>>>()?
+    };
+    Some((ty, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[4]{0})->f32[4]{0}}
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.2 = f32[] parameter(1)
+  ROOT add.1 = f32[] add(Arg_0.2, Arg_1.2)
+}
+
+ENTRY main.5 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  constant.1 = f32[] constant(0)
+  reduce.2 = f32[] reduce(Arg_0.1, constant.1), dimensions={0}, to_apply=region_0.1
+  broadcast.2 = f32[4]{0} broadcast(reduce.2), dimensions={}
+  dot.1 = f32[4,4]{1,0} dot(broadcast.2, Arg_0.1), lhs_contracting_dims={}, rhs_contracting_dims={}
+  ROOT tuple.1 = (f32[4]{0}) tuple(broadcast.2)
+}
+"#;
+
+    #[test]
+    fn parses_instructions_and_shapes() {
+        let (insts, index) = parse_hlo(SAMPLE);
+        assert_eq!(insts.len(), 9);
+        let bc = &insts[index["broadcast.2"]];
+        assert_eq!(bc.opcode, "broadcast");
+        assert_eq!(bc.shape, vec![4]);
+        assert_eq!(bc.ty, "f32");
+        assert_eq!(bc.operands, vec!["reduce.2"]);
+        assert_eq!(bc.computation, "ENTRY main.5");
+    }
+
+    #[test]
+    fn root_and_tuple_handled() {
+        let (insts, index) = parse_hlo(SAMPLE);
+        let root = &insts[index["tuple.1"]];
+        assert!(root.is_root);
+        assert_eq!(root.ty, "(tuple)");
+        assert_eq!(root.opcode, "tuple");
+    }
+
+    #[test]
+    fn attrs_captured() {
+        let (insts, index) = parse_hlo(SAMPLE);
+        let red = &insts[index["reduce.2"]];
+        assert!(red.attrs.contains("to_apply=region_0.1"), "{}", red.attrs);
+        let dot = &insts[index["dot.1"]];
+        assert!(dot.attrs.contains("lhs_contracting_dims"));
+        assert_eq!(dot.shape, vec![4, 4]);
+    }
+
+    #[test]
+    fn parse_shape_variants() {
+        assert_eq!(parse_shape("f32[80,64]{1,0}"), Some(("f32".into(), vec![80, 64])));
+        assert_eq!(parse_shape("s32[]"), Some(("s32".into(), vec![])));
+        assert_eq!(parse_shape("pred[7]{0}"), Some(("pred".into(), vec![7])));
+        assert_eq!(parse_shape("notashape"), None);
+    }
+
+    #[test]
+    fn parses_real_artifact() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/train_step_ref_b16.hlo.txt");
+        let text = std::fs::read_to_string(path).expect("run `make artifacts`");
+        let (insts, _) = parse_hlo(&text);
+        assert!(insts.len() > 100, "only {} instructions", insts.len());
+        assert!(insts.iter().any(|i| i.opcode == "scatter"));
+        assert!(insts.iter().any(|i| i.opcode == "dot"));
+        // every non-parameter instruction's operands resolve
+        let names: std::collections::HashSet<_> =
+            insts.iter().map(|i| i.name.clone()).collect();
+        for i in &insts {
+            for op in &i.operands {
+                // operands can be literals in rare cases; all named ones resolve
+                if op.contains('.') && op.chars().next().is_some_and(|c| c.is_alphabetic()) {
+                    assert!(names.contains(op), "{} references unknown {op}", i.name);
+                }
+            }
+        }
+    }
+}

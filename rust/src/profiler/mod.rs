@@ -1,0 +1,23 @@
+//! Theano-profiler reproduction (paper §4.2, Table 1).
+//!
+//! Theano's profiler attributed wall time to op classes and reported the
+//! two columns of Table 1: *fraction of total time* and *time per call*.
+//! We reproduce the methodology over PJRT artifacts:
+//!
+//! 1. `hlo` parses the artifact's HLO text into an instruction inventory.
+//! 2. `cost` assigns each instruction a FLOP and byte estimate from its
+//!    shapes, and maps opcodes to Theano op classes
+//!    (`GpuAdvancedIncSubtensor1`, `GpuElemwise`, `GpuAlloc`, ...).
+//! 3. `report` combines measured per-artifact wall times (from
+//!    `Runtime::dispatch_stats`) with the per-class cost weights to emit a
+//!    Table-1-style hot-spot ranking. For the gpu-naive backend the
+//!    scatter's time needs no modeling at all — the per-row dispatches are
+//!    measured directly, exactly like Theano's per-call accounting.
+
+pub mod cost;
+pub mod hlo;
+pub mod report;
+
+pub use cost::{classify, instruction_cost, OpClass};
+pub use hlo::{parse_hlo, Instruction};
+pub use report::{HotSpotRow, Profiler};

@@ -1,0 +1,160 @@
+//! Table-1-style hot-spot report.
+//!
+//! Two attribution sources, mirroring how Theano's profiler worked:
+//!
+//! * **measured** — op classes whose time we observe directly as PJRT
+//!   dispatches (the gpu-naive backend's per-row scatter calls: one
+//!   dispatch per row, so per-call time is a true measurement, like
+//!   Theano's 4.60e-3 s/call for `GpuAdvancedIncSubtensor1`);
+//! * **modeled** — fused artifacts execute as one dispatch, so their wall
+//!   time is apportioned across op classes proportionally to the HLO cost
+//!   model (`cost::module_cost_by_class`), the same way any sampling
+//!   profiler attributes time within a fused kernel.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use super::cost::{module_cost_by_class, OpClass};
+use super::hlo::parse_hlo;
+use crate::util::fmt;
+
+#[derive(Clone, Debug)]
+pub struct HotSpotRow {
+    pub class: OpClass,
+    pub fraction: f64,
+    pub per_call: Duration,
+    pub calls: u64,
+    pub total: Duration,
+    pub measured: bool,
+}
+
+#[derive(Default)]
+pub struct Profiler {
+    acc: HashMap<OpClass, (Duration, u64, bool)>,
+}
+
+impl Profiler {
+    pub fn new() -> Profiler {
+        Profiler::default()
+    }
+
+    /// Attribute a fused artifact's measured wall time across its op
+    /// classes using the HLO cost model. `calls` = artifact dispatches.
+    pub fn add_artifact(&mut self, hlo_text: &str, calls: u64, total: Duration) {
+        let (insts, _) = parse_hlo(hlo_text);
+        let by_class = module_cost_by_class(&insts);
+        // weight: bytes + flops (both ~proportional to time on a
+        // bandwidth/compute-balanced device; control is free).
+        let weights: HashMap<OpClass, f64> = by_class
+            .iter()
+            .map(|(c, (f, b, _))| (*c, *f as f64 + *b as f64))
+            .collect();
+        let total_w: f64 = weights.values().sum();
+        if total_w == 0.0 {
+            return;
+        }
+        for (class, w) in weights {
+            let share = total.mul_f64(w / total_w);
+            let n_inst = by_class[&class].2;
+            let e = self.acc.entry(class).or_insert((Duration::ZERO, 0, false));
+            e.0 += share;
+            e.1 += calls * n_inst;
+        }
+    }
+
+    /// Record a directly measured op class (per-row dispatch loop etc.).
+    pub fn add_measured(&mut self, class: OpClass, calls: u64, total: Duration) {
+        let e = self.acc.entry(class).or_insert((Duration::ZERO, 0, true));
+        e.0 += total;
+        e.1 += calls;
+        e.2 = true;
+    }
+
+    pub fn total(&self) -> Duration {
+        self.acc.values().map(|(d, _, _)| *d).sum()
+    }
+
+    /// Rows sorted by total time descending.
+    pub fn rows(&self) -> Vec<HotSpotRow> {
+        let total = self.total().as_secs_f64().max(f64::MIN_POSITIVE);
+        let mut rows: Vec<HotSpotRow> = self
+            .acc
+            .iter()
+            .map(|(class, (d, calls, measured))| HotSpotRow {
+                class: *class,
+                fraction: d.as_secs_f64() / total,
+                per_call: if *calls == 0 { Duration::ZERO } else { *d / *calls as u32 },
+                calls: *calls,
+                total: *d,
+                measured: *measured,
+            })
+            .collect();
+        rows.sort_by(|a, b| b.total.cmp(&a.total));
+        rows
+    }
+
+    /// Render the Table-1 reproduction.
+    pub fn render(&self, top: usize) -> String {
+        let mut t = fmt::Table::new(&[
+            "Theano Function",
+            "Fraction of time spent",
+            "Time per call",
+            "calls",
+            "source",
+        ]);
+        for r in self.rows().into_iter().take(top) {
+            t.row(&[
+                r.class.theano_name().to_string(),
+                format!("{:.1}%", r.fraction * 100.0),
+                fmt::dur(r.per_call),
+                r.calls.to_string(),
+                if r.measured { "measured" } else { "modeled" }.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_class_dominates_report() {
+        let mut p = Profiler::new();
+        p.add_measured(OpClass::AdvancedIncSubtensor, 160, Duration::from_millis(820));
+        p.add_measured(OpClass::Elemwise, 10, Duration::from_millis(90));
+        p.add_measured(OpClass::Alloc, 20, Duration::from_millis(20));
+        let rows = p.rows();
+        assert_eq!(rows[0].class, OpClass::AdvancedIncSubtensor);
+        assert!((rows[0].fraction - 820.0 / 930.0).abs() < 1e-9);
+        assert_eq!(rows[0].per_call, Duration::from_micros(5125));
+        let rendered = p.render(3);
+        assert!(rendered.contains("GpuAdvancedIncSubtensor1"));
+        assert!(rendered.contains("88.2%"));
+    }
+
+    #[test]
+    fn artifact_attribution_sums_to_total() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/train_step_ref_b16.hlo.txt");
+        let text = std::fs::read_to_string(path).expect("make artifacts");
+        let mut p = Profiler::new();
+        p.add_artifact(&text, 100, Duration::from_secs(1));
+        let total = p.total();
+        assert!(
+            (total.as_secs_f64() - 1.0).abs() < 1e-6,
+            "attributed {total:?}"
+        );
+        assert!(!p.rows().is_empty());
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut p = Profiler::new();
+        p.add_measured(OpClass::Gemm, 5, Duration::from_millis(100));
+        p.add_measured(OpClass::Reduce, 5, Duration::from_millis(300));
+        let s: f64 = p.rows().iter().map(|r| r.fraction).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,174 @@
+//! A compiled PJRT executable bound to its manifest spec.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::literal::check_spec;
+use super::manifest::ArtifactSpec;
+
+/// Compiled artifact + spec. Execution validates inputs against the spec
+/// (cheap — element counts and dtypes only; set `check: false` on the hot
+/// path once a pairing is proven).
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    pub check: bool,
+    calls: std::cell::Cell<u64>,
+    total: std::cell::Cell<Duration>,
+}
+
+impl Executable {
+    pub fn compile(client: &xla::PjRtClient, spec: ArtifactSpec) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", spec.file))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {:?}", spec.name))?;
+        Ok(Executable {
+            spec,
+            exe,
+            check: true,
+            calls: std::cell::Cell::new(0),
+            total: std::cell::Cell::new(Duration::ZERO),
+        })
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    /// (aot.py lowers everything with `return_tuple=True`.)
+    pub fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {:?}: {} inputs given, spec wants {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        if self.check {
+            for (lit, spec) in inputs.iter().zip(&self.spec.inputs) {
+                check_spec(lit, spec)
+                    .with_context(|| format!("artifact {:?}", self.spec.name))?;
+            }
+        }
+        let t0 = Instant::now();
+        let out = self
+            .exe
+            .execute::<&Literal>(inputs)
+            .with_context(|| format!("executing {:?}", self.spec.name))?;
+        let tuple = if self.spec.untupled {
+            vec![out[0][0].to_literal_sync().context("fetching result literal")?]
+        } else {
+            out[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?
+                .to_tuple()
+                .context("decomposing result tuple")?
+        };
+        let dt = t0.elapsed();
+        self.calls.set(self.calls.get() + 1);
+        self.total.set(self.total.get() + dt);
+        if tuple.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {:?}: {} outputs, spec says {}",
+                self.spec.name,
+                tuple.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(tuple)
+    }
+
+    /// Execute with device-resident buffers (no host round-trip). Only
+    /// valid for `untupled` artifacts, whose single output buffer can be
+    /// fed straight back into the next dispatch — the device-resident
+    /// update loop Theano's per-row AdvancedIncSubtensor1 ran.
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        if !self.spec.untupled {
+            bail!("run_b requires an untupled artifact ({:?} is tupled)", self.spec.name);
+        }
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {:?}: {} buffers given, spec wants {}",
+                self.spec.name,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let mut out = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing (buffers) {:?}", self.spec.name))?;
+        let dt = t0.elapsed();
+        self.calls.set(self.calls.get() + 1);
+        self.total.set(self.total.get() + dt);
+        Ok(out[0].swap_remove(0))
+    }
+
+    /// Upload a literal to a device buffer on this executable's client.
+    ///
+    /// Goes through `buffer_from_host_buffer` (synchronous
+    /// `kImmutableOnlyDuringCall` copy), NOT `buffer_from_host_literal`:
+    /// TFRT-CPU's `BufferFromHostLiteral` copies *asynchronously* and the
+    /// literal may be dropped before the copy lands — a use-after-free we
+    /// hit in practice (manifests as garbage buffers / segfaults under
+    /// rapid per-row dispatch).
+    pub fn to_device(&self, lit: &Literal) -> Result<xla::PjRtBuffer> {
+        let shape = lit.array_shape().context("to_device shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let client = self.exe.client();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let v = lit.to_vec::<f32>()?;
+                client.buffer_from_host_buffer(&v, &dims, None).context("upload f32")
+            }
+            xla::ElementType::S32 => {
+                let v = lit.to_vec::<i32>()?;
+                client.buffer_from_host_buffer(&v, &dims, None).context("upload i32")
+            }
+            other => bail!("to_device: unsupported dtype {other:?}"),
+        }
+    }
+
+    /// Upload raw f32 data directly to a device buffer (no literal).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.exe
+            .client()
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload f32")
+    }
+
+    /// Upload raw i32 data directly to a device buffer (no literal).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.exe
+            .client()
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload i32")
+    }
+
+    /// Execute and also report wall time of the dispatch.
+    pub fn run_timed(&self, inputs: &[&Literal]) -> Result<(Vec<Literal>, Duration)> {
+        let t0 = Instant::now();
+        let out = self.run(inputs)?;
+        Ok((out, t0.elapsed()))
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+
+    pub fn total_time(&self) -> Duration {
+        self.total.get()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+}

@@ -1,0 +1,110 @@
+//! Literal construction/extraction helpers over the `xla` crate, checked
+//! against `TensorSpec`s from the manifest.
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::manifest::{DType, TensorSpec};
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        bail!("lit_f32: {} elements for shape {shape:?}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        bail!("lit_i32: {} elements for shape {shape:?}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract an f32 vector (any shape, flattened).
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal -> Vec<f32>")
+}
+
+pub fn to_vec_i32(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("literal -> Vec<i32>")
+}
+
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    let v = to_vec_f32(lit)?;
+    if v.len() != 1 {
+        bail!("expected scalar, got {} elements", v.len());
+    }
+    Ok(v[0])
+}
+
+/// Validate a literal against a manifest tensor spec.
+pub fn check_spec(lit: &Literal, spec: &TensorSpec) -> Result<()> {
+    let shape = lit.array_shape().context("literal shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    if dims != spec.shape {
+        bail!("tensor {:?}: shape {dims:?} != spec {:?}", spec.name, spec.shape);
+    }
+    let ty = shape.ty();
+    let ok = matches!(
+        (spec.dtype, ty),
+        (DType::F32, xla::ElementType::F32) | (DType::S32, xla::ElementType::S32)
+    );
+    if !ok {
+        bail!("tensor {:?}: dtype {ty:?} != spec {}", spec.name, spec.dtype.name());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn i32_and_scalar() {
+        let l = lit_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(to_vec_i32(&l).unwrap(), vec![7, 8]);
+        let s = scalar_f32(0.5);
+        assert_eq!(to_scalar_f32(&s).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(lit_f32(&[1.0; 5], &[2, 3]).is_err());
+        assert!(lit_i32(&[1; 7], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = TensorSpec { name: "w".into(), dtype: DType::F32, shape: vec![2, 2] };
+        let ok = lit_f32(&[0.0; 4], &[2, 2]).unwrap();
+        assert!(check_spec(&ok, &spec).is_ok());
+        let bad_shape = lit_f32(&[0.0; 4], &[4]).unwrap();
+        assert!(check_spec(&bad_shape, &spec).is_err());
+        let bad_ty = lit_i32(&[0; 4], &[2, 2]).unwrap();
+        assert!(check_spec(&bad_ty, &spec).is_err());
+    }
+}

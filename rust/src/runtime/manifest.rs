@@ -1,0 +1,273 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the Rust runtime (which loads it).
+//!
+//! Every artifact entry carries its full input/output tensor specs so the
+//! runtime can validate literals before dispatch — shape bugs surface as
+//! named errors here instead of opaque PJRT aborts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "s32" => DType::S32,
+            _ => bail!("unknown dtype {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::S32 => "s32",
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().context("spec name")?.to_string(),
+            dtype: DType::parse(j.req("dtype")?.as_str().context("spec dtype")?)?,
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("spec shape")?
+                .iter()
+                .map(|v| v.as_usize().context("shape dim"))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Model dims an artifact was baked with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub dim: usize,
+    pub window: usize,
+    pub hidden: usize,
+}
+
+impl ModelDims {
+    fn from_json(j: &Json) -> Result<ModelDims> {
+        Ok(ModelDims {
+            vocab: j.req("vocab")?.as_usize().context("vocab")?,
+            dim: j.req("dim")?.as_usize().context("dim")?,
+            window: j.req("window")?.as_usize().context("window")?,
+            hidden: j.req("hidden")?.as_usize().context("hidden")?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub backend: Option<String>,
+    pub batch: Option<usize>,
+    pub k: Option<usize>,
+    pub rows: Option<usize>,
+    pub model: Option<ModelDims>,
+    /// Root is a plain array (return_tuple=False): outputs come back as a
+    /// single array buffer usable directly with `execute_b`.
+    pub untupled: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub main_model: ModelDims,
+    pub small_model: ModelDims,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let version = j.req("version")?.as_i64().context("version")?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expected 1)");
+        }
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_arr().context("artifacts array")? {
+            let name = a.req("name")?.as_str().context("name")?.to_string();
+            let parse = || -> Result<ArtifactSpec> {
+                Ok(ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(a.req("file")?.as_str().context("file")?),
+                    kind: a.req("kind")?.as_str().context("kind")?.to_string(),
+                    backend: a.get("backend").and_then(|v| v.as_str()).map(String::from),
+                    batch: a.get("batch").and_then(|v| v.as_usize()),
+                    k: a.get("k").and_then(|v| v.as_usize()),
+                    rows: a.get("rows").and_then(|v| v.as_usize()),
+                    model: match a.get("model") {
+                        Some(m) => Some(ModelDims::from_json(m)?),
+                        None => None,
+                    },
+                    untupled: a.get("untupled").and_then(|v| v.as_bool()).unwrap_or(false),
+                    inputs: a
+                        .req("inputs")?
+                        .as_arr()
+                        .context("inputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .req("outputs")?
+                        .as_arr()
+                        .context("outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                })
+            };
+            artifacts.push(parse().with_context(|| format!("artifact {name:?}"))?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            main_model: ModelDims::from_json(j.req("main_model")?)?,
+            small_model: ModelDims::from_json(j.req("small_model")?)?,
+            artifacts,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                let have: Vec<_> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+                anyhow!("artifact {name:?} not in manifest (have: {have:?})")
+            })
+    }
+
+    /// Name of a train-step artifact for (backend tag, batch).
+    pub fn train_step_name(tag: &str, batch: usize, small: bool) -> String {
+        if small {
+            format!("train_small_{tag}_b{batch}")
+        } else if tag == "naive" {
+            format!("train_naive_b{batch}")
+        } else {
+            format!("train_step_{tag}_b{batch}")
+        }
+    }
+
+    /// All batch sizes available for a given train family.
+    pub fn batches_for(&self, kind: &str, backend: Option<&str>) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind && (backend.is_none() || a.backend.as_deref() == backend))
+            .filter_map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        assert!(m.artifacts.len() >= 30, "only {} artifacts", m.artifacts.len());
+        assert_eq!(m.main_model.window, 5);
+        assert_eq!(m.small_model.vocab, 2048);
+    }
+
+    #[test]
+    fn finds_expected_families() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for name in [
+            "train_step_opt_b16",
+            "train_step_ref_b16",
+            "train_naive_b16",
+            "train_multi_opt_b16_k8",
+            "scatter_rows_r1000",
+            "scatter_row1_main",
+            "forward_b8",
+            "loss_eval_b256",
+        ] {
+            let a = m.find(name).unwrap();
+            assert!(a.file.exists(), "{} missing", a.file.display());
+            assert!(!a.inputs.is_empty());
+            assert!(!a.outputs.is_empty());
+        }
+        assert!(m.find("nonexistent").is_err());
+    }
+
+    #[test]
+    fn train_step_specs_consistent() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = m.find("train_step_opt_b16").unwrap();
+        let md = a.model.as_ref().unwrap();
+        assert_eq!(a.inputs.len(), 8); // 5 params + windows + corrupt + lr
+        assert_eq!(a.outputs.len(), 6); // 5 params + loss
+        assert_eq!(a.inputs[0].shape, vec![md.vocab, md.dim]);
+        assert_eq!(a.inputs[5].shape, vec![16, md.window]);
+        assert_eq!(a.inputs[5].dtype, DType::S32);
+        assert_eq!(a.outputs[5].shape, Vec::<usize>::new()); // scalar loss
+    }
+
+    #[test]
+    fn batch_sweep_present() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let batches = m.batches_for("train_step", Some("opt"));
+        assert_eq!(batches, vec![16, 32, 64, 128, 256, 512]);
+    }
+
+    #[test]
+    fn train_step_name_builder() {
+        assert_eq!(Manifest::train_step_name("opt", 16, false), "train_step_opt_b16");
+        assert_eq!(Manifest::train_step_name("naive", 16, false), "train_naive_b16");
+        assert_eq!(Manifest::train_step_name("opt", 64, true), "train_small_opt_b64");
+    }
+}

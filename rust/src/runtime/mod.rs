@@ -1,0 +1,64 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`) behind a
+//! manifest-driven loader with an executable cache. This is the only
+//! module that touches PJRT; everything above it deals in `Literal`s and
+//! `TensorSpec`s. Python never runs at this layer.
+
+pub mod executable;
+pub mod literal;
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+pub use executable::Executable;
+pub use literal::{lit_f32, lit_i32, scalar_f32, to_scalar_f32, to_vec_f32, to_vec_i32};
+pub use manifest::{ArtifactSpec, DType, Manifest, ModelDims, TensorSpec};
+
+/// The runtime: one PJRT CPU client + lazily compiled artifact cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (must contain
+    /// `manifest.json`; run `make artifacts` to produce it).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: Default::default() })
+    }
+
+    /// Fetch (compiling on first use) an executable by artifact name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let exe = Rc::new(Executable::compile(&self.client, spec)?);
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of compiled executables resident.
+    pub fn loaded(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Per-executable (name, calls, total_time) accounting — feeds the
+    /// profiler's Table-1-style report.
+    pub fn dispatch_stats(&self) -> Vec<(String, u64, std::time::Duration)> {
+        self.cache
+            .borrow()
+            .values()
+            .map(|e| (e.name().to_string(), e.calls(), e.total_time()))
+            .collect()
+    }
+}

@@ -1,0 +1,103 @@
+//! Dynamic request batching for the scoring path.
+//!
+//! Concurrent SCORE requests are coalesced into one `forward_b{B}`
+//! dispatch: the executor waits up to `max_wait_ms` for up to `max_batch`
+//! requests, pads the tail of the batch with `<PAD>` windows, executes,
+//! and fans the scores back out. Classic dynamic batching — latency is
+//! bounded by the wait budget, throughput grows with concurrency.
+
+use std::path::Path;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::baselines::model_ref::ModelParams;
+use crate::config::ServerCfg;
+use crate::coordinator::upload_params;
+use crate::runtime::{lit_i32, to_vec_f32, Executable, Runtime};
+
+use super::protocol::Response;
+
+pub struct ScoreRequest {
+    pub window: Vec<i32>,
+    pub reply: Sender<Response>,
+}
+
+pub struct BatchExecutor {
+    _rt: Box<Runtime>,
+    exe: std::rc::Rc<Executable>,
+    params: Vec<xla::Literal>,
+    pub artifact_batch: usize,
+    window: usize,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl BatchExecutor {
+    pub fn new(artifacts_dir: &Path, cfg: &ServerCfg, params: ModelParams) -> Result<Self> {
+        let rt = Box::new(Runtime::new(artifacts_dir)?);
+        // pick the smallest forward artifact that covers max_batch
+        let mut batches = rt.manifest.batches_for("forward", None);
+        batches.sort_unstable();
+        let artifact_batch = batches
+            .iter()
+            .copied()
+            .find(|&b| b >= cfg.max_batch)
+            .or_else(|| batches.last().copied())
+            .context("no forward artifacts in manifest")?;
+        let name = format!("forward_b{artifact_batch}");
+        // SAFETY of lifetime: exe borrows client Rc inside rt; keep rt boxed
+        // alongside for the executor's lifetime.
+        let exe = rt.load(&name)?;
+        let window = params.window;
+        let lits = upload_params(&params)?;
+        Ok(BatchExecutor {
+            _rt: rt,
+            exe,
+            params: lits,
+            artifact_batch,
+            window,
+            max_batch: cfg.max_batch.min(artifact_batch),
+            max_wait: Duration::from_millis(cfg.max_wait_ms),
+        })
+    }
+
+    /// Collect up to `max_batch` requests (waiting at most `max_wait` after
+    /// the first), execute one padded dispatch, reply. Returns the number
+    /// of requests served (0 on idle timeout).
+    pub fn run_once(&mut self, rx: &Receiver<ScoreRequest>) -> Result<usize> {
+        // block briefly for the first request so the loop can poll stop flags
+        let first = match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => return Ok(0),
+            Err(RecvTimeoutError::Disconnected) => return Ok(0),
+        };
+        let mut reqs = vec![first];
+        let deadline = Instant::now() + self.max_wait;
+        while reqs.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => reqs.push(r),
+                Err(_) => break,
+            }
+        }
+        let n = reqs.len();
+        let b = self.artifact_batch;
+        let mut flat = vec![0i32; b * self.window]; // PAD = 0 padding
+        for (i, r) in reqs.iter().enumerate() {
+            flat[i * self.window..(i + 1) * self.window].copy_from_slice(&r.window);
+        }
+        let windows = lit_i32(&flat, &[b, self.window])?;
+        let inputs: Vec<&xla::Literal> = self.params.iter().chain([&windows]).collect();
+        let out = self.exe.run(&inputs)?;
+        let scores = to_vec_f32(&out[0])?;
+        for (i, r) in reqs.into_iter().enumerate() {
+            let _ = r.reply.send(Response::Score(scores[i]));
+        }
+        Ok(n)
+    }
+}

@@ -1,0 +1,200 @@
+//! Embedding/scoring server: the serving-path example of the runtime.
+//!
+//! A line-oriented TCP protocol (`protocol`), a dynamic batcher that
+//! coalesces concurrent score requests into one PJRT dispatch
+//! (`batcher`), and the listener/executor wiring (`Server`). PJRT handles
+//! are not `Send`, so a single *executor thread* owns the `Runtime` and
+//! the embedding store; connection handler threads parse requests and
+//! rendezvous with the executor over channels — the same
+//! single-device-owner design vLLM-style routers use per GPU worker.
+
+pub mod batcher;
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::baselines::model_ref::ModelParams;
+use crate::config::ServerCfg;
+use crate::embeddings::EmbeddingStore;
+use crate::text::Vocab;
+use crate::util::threadpool::ThreadPool;
+
+use batcher::{BatchExecutor, ScoreRequest};
+use protocol::{parse_request, Request, Response};
+
+/// Shared server statistics.
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub total_latency_us: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn mean_latency(&self) -> Duration {
+        let n = self.requests.load(Ordering::Relaxed).max(1);
+        Duration::from_micros(self.total_latency_us.load(Ordering::Relaxed) / n)
+    }
+}
+
+pub struct Server {
+    pub addr: String,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    listener_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving. The executor thread owns PJRT; handler threads come
+    /// from a pool of `cfg.threads`.
+    pub fn start(
+        cfg: &ServerCfg,
+        artifacts_dir: std::path::PathBuf,
+        vocab: Vocab,
+        params: ModelParams,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+
+        // Executor thread: owns Runtime + store, consumes score requests.
+        let (score_tx, score_rx) = mpsc::channel::<ScoreRequest>();
+        let (nn_tx, nn_rx) = mpsc::channel::<(String, usize, mpsc::Sender<Response>)>();
+        let exec_cfg = cfg.clone();
+        let exec_stats = Arc::clone(&stats);
+        let exec_stop = Arc::clone(&stop);
+        let window = params.window;
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let store = match EmbeddingStore::from_params(vocab, &params) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("executor: {e}");
+                        return;
+                    }
+                };
+                let mut exec = match BatchExecutor::new(
+                    &artifacts_dir,
+                    &exec_cfg,
+                    params,
+                ) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        eprintln!("executor: {e:#}");
+                        return;
+                    }
+                };
+                while !exec_stop.load(Ordering::Relaxed) {
+                    // NN requests are cheap; drain them first.
+                    while let Ok((word, k, reply)) = nn_rx.try_recv() {
+                        let neighbors = store.neighbors(&word, k);
+                        let _ = reply.send(Response::Neighbors(neighbors));
+                    }
+                    match exec.run_once(&score_rx) {
+                        Ok(served) => {
+                            if served > 0 {
+                                exec_stats.batches.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(e) => eprintln!("executor batch error: {e:#}"),
+                    }
+                }
+            })
+            .expect("spawn executor");
+
+        // Listener thread + handler pool.
+        let pool = ThreadPool::new(cfg.threads);
+        let l_stop = Arc::clone(&stop);
+        let l_stats = Arc::clone(&stats);
+        let listener_thread = std::thread::Builder::new()
+            .name("listener".into())
+            .spawn(move || {
+                let _pool = pool; // keep workers alive
+                loop {
+                    if l_stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let tx = score_tx.clone();
+                            let nx = nn_tx.clone();
+                            let st = Arc::clone(&l_stats);
+                            let window = window;
+                            _pool.execute(move || {
+                                let _ = handle_conn(stream, tx, nx, st, window);
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => return,
+                    }
+                }
+            })
+            .expect("spawn listener");
+
+        Ok(Server { addr, stats, stop, listener_thread: Some(listener_thread) })
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    score_tx: mpsc::Sender<ScoreRequest>,
+    nn_tx: mpsc::Sender<(String, usize, mpsc::Sender<Response>)>,
+    stats: Arc<ServerStats>,
+    window: usize,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let t0 = Instant::now();
+        let resp = match parse_request(&line, window) {
+            Err(msg) => Response::Error(msg),
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Score(window_ids)) => {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                score_tx
+                    .send(ScoreRequest { window: window_ids, reply: reply_tx })
+                    .map_err(|_| anyhow::anyhow!("executor gone"))?;
+                reply_rx.recv().unwrap_or(Response::Error("executor dropped".into()))
+            }
+            Ok(Request::Neighbors(word, k)) => {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                nn_tx
+                    .send((word, k, reply_tx))
+                    .map_err(|_| anyhow::anyhow!("executor gone"))?;
+                reply_rx.recv().unwrap_or(Response::Error("executor dropped".into()))
+            }
+            Ok(Request::Quit) => break,
+        };
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        stats
+            .total_latency_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        writeln!(writer, "{}", resp.render())?;
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Line protocol:
+//!
+//! ```text
+//! PING                     -> PONG
+//! SCORE <id> <id> ... (C)  -> SCORE <f32>
+//! NN <word> <k>            -> NN word:score word:score ...
+//! QUIT                     -> (closes)
+//! ```
+//!
+//! Scores take *ids* (clients resolve words via the vocab file the trainer
+//! writes) so the request path does no string hashing.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Score(Vec<i32>),
+    Neighbors(String, usize),
+    Quit,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Pong,
+    Score(f32),
+    Neighbors(Vec<(String, f32)>),
+    Error(String),
+}
+
+impl Response {
+    pub fn render(&self) -> String {
+        match self {
+            Response::Pong => "PONG".into(),
+            Response::Score(s) => format!("SCORE {s}"),
+            Response::Neighbors(ns) => {
+                let body: Vec<String> =
+                    ns.iter().map(|(w, s)| format!("{w}:{s:.4}")).collect();
+                format!("NN {}", body.join(" "))
+            }
+            Response::Error(e) => format!("ERR {e}"),
+        }
+    }
+}
+
+/// Parse one request line. `window` = required id count for SCORE.
+pub fn parse_request(line: &str, window: usize) -> Result<Request, String> {
+    let mut parts = line.split_whitespace();
+    match parts.next() {
+        None => Err("empty request".into()),
+        Some("PING") => Ok(Request::Ping),
+        Some("QUIT") => Ok(Request::Quit),
+        Some("SCORE") => {
+            let ids: Result<Vec<i32>, _> = parts.map(|p| p.parse::<i32>()).collect();
+            let ids = ids.map_err(|e| format!("bad id: {e}"))?;
+            if ids.len() != window {
+                return Err(format!("SCORE needs {window} ids, got {}", ids.len()));
+            }
+            if ids.iter().any(|&i| i < 0) {
+                return Err("negative id".into());
+            }
+            Ok(Request::Score(ids))
+        }
+        Some("NN") => {
+            let word = parts.next().ok_or("NN needs a word")?.to_string();
+            let k = parts
+                .next()
+                .unwrap_or("5")
+                .parse::<usize>()
+                .map_err(|e| format!("bad k: {e}"))?;
+            if k == 0 || k > 100 {
+                return Err("k must be 1..=100".into());
+            }
+            Ok(Request::Neighbors(word, k))
+        }
+        Some(cmd) => Err(format!("unknown command {cmd:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_commands() {
+        assert_eq!(parse_request("PING", 5), Ok(Request::Ping));
+        assert_eq!(parse_request("QUIT", 5), Ok(Request::Quit));
+        assert_eq!(
+            parse_request("SCORE 1 2 3 4 5", 5),
+            Ok(Request::Score(vec![1, 2, 3, 4, 5]))
+        );
+        assert_eq!(
+            parse_request("NN hello 3", 5),
+            Ok(Request::Neighbors("hello".into(), 3))
+        );
+        assert_eq!(
+            parse_request("NN hello", 5),
+            Ok(Request::Neighbors("hello".into(), 5))
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("", 5).is_err());
+        assert!(parse_request("SCORE 1 2 3", 5).is_err());
+        assert!(parse_request("SCORE 1 2 x 4 5", 5).is_err());
+        assert!(parse_request("SCORE 1 2 -3 4 5", 5).is_err());
+        assert!(parse_request("NN w 0", 5).is_err());
+        assert!(parse_request("FROB", 5).is_err());
+    }
+
+    #[test]
+    fn responses_render() {
+        assert_eq!(Response::Pong.render(), "PONG");
+        assert_eq!(Response::Score(1.5).render(), "SCORE 1.5");
+        assert_eq!(
+            Response::Neighbors(vec![("a".into(), 0.9), ("b".into(), 0.8)]).render(),
+            "NN a:0.9000 b:0.8000"
+        );
+        assert!(Response::Error("boom".into()).render().starts_with("ERR"));
+    }
+}

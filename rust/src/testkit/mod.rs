@@ -1,0 +1,208 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall` drives a property over `cases` random inputs drawn from a
+//! generator closure; on failure it re-runs a bounded shrink loop using the
+//! generator's `shrink` candidates and reports the smallest failing input
+//! with its seed, so failures are reproducible:
+//!
+//! ```no_run
+//! use polyglot_gpu::testkit::forall;
+//! forall("sum is commutative", 100, |r| (r.below(100), r.below(100)),
+//!        |&(a, b)| a + b == b + a);
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0x9e3779b97f4a7c15, max_shrink: 200 }
+    }
+}
+
+/// A value with shrink candidates (simpler alternatives to try on failure).
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+macro_rules! impl_shrink_int {
+    ($($t:ty),*) => {$(
+        impl Shrink for $t {
+            fn shrink(&self) -> Vec<Self> {
+                let mut v = Vec::new();
+                if *self != 0 { v.push(0); v.push(*self / 2); }
+                if *self > 1 { v.push(*self - 1); }
+                v
+            }
+        }
+    )*};
+}
+
+impl_shrink_int!(u8, u16, u32, u64, usize, i32, i64);
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(Vec::new());
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            // shrink one element
+            for (i, x) in self.iter().enumerate().take(4) {
+                for s in x.shrink().into_iter().take(2) {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
+    fn shrink(&self) -> Vec<Self> {
+        let (a, b, c, d) = self;
+        let mut out: Vec<Self> =
+            a.shrink().into_iter().map(|x| (x, b.clone(), c.clone(), d.clone())).collect();
+        out.extend(b.shrink().into_iter().map(|x| (a.clone(), x, c.clone(), d.clone())));
+        out.extend(c.shrink().into_iter().map(|x| (a.clone(), b.clone(), x, d.clone())));
+        out.extend(d.shrink().into_iter().map(|x| (a.clone(), b.clone(), c.clone(), x)));
+        out
+    }
+}
+
+/// Run `prop` over `cases` random inputs; panic with the (shrunk) failing
+/// input on violation.
+pub fn forall<T: Shrink>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    forall_cfg(name, Config { cases, ..Config::default() }, gen, prop)
+}
+
+pub fn forall_cfg<T: Shrink>(
+    name: &str,
+    cfg: Config,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // shrink loop: repeatedly take the first failing candidate
+            let mut best = input;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in best.shrink() {
+                    budget -= 1;
+                    if !prop(&cand) {
+                        best = cand;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed at case {case} (seed {:#x})\n  shrunk input: {best:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add commutes", 200, |r| (r.below(1000), r.below(1000)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let err = std::panic::catch_unwind(|| {
+            forall("x < 50", 500, |r| r.below(1000), |&x| x < 50);
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // shrinker should walk failures down toward the boundary
+        assert!(msg.contains("shrunk input"), "{msg}");
+        let val: u64 = msg
+            .rsplit(": ")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .expect("shrunk value parses");
+        assert!((50..200).contains(&val), "shrunk to {val}");
+    }
+
+    #[test]
+    fn vec_shrink_produces_smaller() {
+        let v = vec![5u32, 6, 7, 8];
+        let shrunk = v.shrink();
+        assert!(shrunk.iter().any(|s| s.is_empty()));
+        assert!(shrunk.iter().any(|s| s.len() == 2));
+    }
+}

@@ -1,0 +1,12 @@
+//! Text substrate: tokenization and vocabulary construction.
+//!
+//! Polyglot's pipeline tokenizes raw multilingual text and keeps the most
+//! frequent types per language; everything else maps to `<UNK>`. Sentence
+//! boundaries get `<S>`/`</S>` padding so every token has a full window
+//! (Collobert et al. 2011 §3.1).
+
+pub mod tokenizer;
+pub mod vocab;
+
+pub use tokenizer::tokenize;
+pub use vocab::{Vocab, PAD, UNK};

@@ -1,0 +1,89 @@
+//! Whitespace+punctuation tokenizer with lowercasing and digit folding.
+//!
+//! Matches the preprocessing Polyglot applied to Wikipedia text closely
+//! enough for rate/convergence experiments: split on whitespace, separate
+//! punctuation runs into their own tokens, lowercase, and fold digits to
+//! `0` (SENNA's number normalization).
+
+/// Tokenize one line of text.
+pub fn tokenize(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut cur_is_punct = false;
+    for ch in line.chars() {
+        if ch.is_whitespace() {
+            flush(&mut out, &mut cur);
+            continue;
+        }
+        let is_punct = !(ch.is_alphanumeric() || ch == '\'' || ch == '-' || ch == '_');
+        if !cur.is_empty() && is_punct != cur_is_punct {
+            flush(&mut out, &mut cur);
+        }
+        cur_is_punct = is_punct;
+        if ch.is_ascii_digit() {
+            cur.push('0'); // digit folding
+        } else {
+            for lc in ch.to_lowercase() {
+                cur.push(lc);
+            }
+        }
+    }
+    flush(&mut out, &mut cur);
+    out
+}
+
+fn flush(out: &mut Vec<String>, cur: &mut String) {
+    if !cur.is_empty() {
+        out.push(std::mem::take(cur));
+    }
+}
+
+/// Tokenize a whole document into sentences of tokens (one per line).
+pub fn tokenize_lines(text: &str) -> Vec<Vec<String>> {
+    text.lines().map(tokenize).filter(|t| !t.is_empty()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_whitespace_and_punct() {
+        assert_eq!(
+            tokenize("Hello, world!  foo-bar"),
+            vec!["hello", ",", "world", "!", "foo-bar"]
+        );
+    }
+
+    #[test]
+    fn folds_digits() {
+        assert_eq!(tokenize("In 2014 we saw 3.5x"), vec!["in", "0000", "we", "saw", "0", ".", "0x"]);
+    }
+
+    #[test]
+    fn lowercases_unicode() {
+        assert_eq!(tokenize("Größe Ünïty"), vec!["größe", "ünïty"]);
+    }
+
+    #[test]
+    fn handles_empty_and_whitespace_only() {
+        assert!(tokenize("").is_empty());
+        assert!(tokenize("   \t ").is_empty());
+    }
+
+    #[test]
+    fn punct_runs_grouped() {
+        assert_eq!(tokenize("wait... what?!"), vec!["wait", "...", "what", "?!"]);
+    }
+
+    #[test]
+    fn apostrophes_stay_in_word() {
+        assert_eq!(tokenize("don't"), vec!["don't"]);
+    }
+
+    #[test]
+    fn lines_filter_empty() {
+        let s = "a b\n\nc\n   \n";
+        assert_eq!(tokenize_lines(s), vec![vec!["a", "b"], vec!["c"]]);
+    }
+}

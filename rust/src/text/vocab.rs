@@ -1,0 +1,186 @@
+//! Frequency-ranked vocabulary with reserved specials.
+//!
+//! Id layout: `0 = <PAD>` (sentence boundary padding), `1 = <UNK>`, then
+//! types by descending frequency (ties broken lexicographically so builds
+//! are deterministic). Polyglot capped each language's vocabulary at the
+//! most frequent ~100k types; `max_size` plays that role here.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const N_SPECIALS: usize = 2;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    id_of: HashMap<String, u32>,
+    word_of: Vec<String>,
+    counts: Vec<u64>,
+}
+
+impl Vocab {
+    /// Build from token streams. Types with count < `min_count` or beyond
+    /// `max_size` total entries collapse into `<UNK>`.
+    pub fn build<'a>(
+        sentences: impl IntoIterator<Item = &'a [String]>,
+        min_count: usize,
+        max_size: usize,
+    ) -> Vocab {
+        assert!(max_size > N_SPECIALS, "max_size must exceed specials");
+        let mut freq: HashMap<String, u64> = HashMap::new();
+        for sent in sentences {
+            for tok in sent {
+                *freq.entry(tok.clone()).or_insert(0) += 1;
+            }
+        }
+        let mut types: Vec<(String, u64)> =
+            freq.into_iter().filter(|(_, c)| *c >= min_count as u64).collect();
+        types.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        types.truncate(max_size - N_SPECIALS);
+
+        let mut word_of = vec!["<PAD>".to_string(), "<UNK>".to_string()];
+        let mut counts = vec![0u64, 0u64];
+        let mut id_of = HashMap::new();
+        id_of.insert(word_of[0].clone(), PAD);
+        id_of.insert(word_of[1].clone(), UNK);
+        for (w, c) in types {
+            id_of.insert(w.clone(), word_of.len() as u32);
+            word_of.push(w);
+            counts.push(c);
+        }
+        Vocab { id_of, word_of, counts }
+    }
+
+    pub fn len(&self) -> usize {
+        self.word_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.word_of.len() == N_SPECIALS
+    }
+
+    pub fn id(&self, word: &str) -> u32 {
+        self.id_of.get(word).copied().unwrap_or(UNK)
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        self.word_of.get(id as usize).map(|s| s.as_str()).unwrap_or("<UNK>")
+    }
+
+    pub fn count(&self, id: u32) -> u64 {
+        self.counts.get(id as usize).copied().unwrap_or(0)
+    }
+
+    pub fn encode(&self, tokens: &[String]) -> Vec<u32> {
+        tokens.iter().map(|t| self.id(t)).collect()
+    }
+
+    /// Iterate (id, word, count) over non-special entries.
+    pub fn entries(&self) -> impl Iterator<Item = (u32, &str, u64)> {
+        self.word_of
+            .iter()
+            .enumerate()
+            .skip(N_SPECIALS)
+            .map(move |(i, w)| (i as u32, w.as_str(), self.counts[i]))
+    }
+
+    /// Serialize as `word\tcount` lines (id = line order), specials first.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        for (i, w) in self.word_of.iter().enumerate() {
+            s.push_str(&format!("{w}\t{}\n", self.counts[i]));
+        }
+        s
+    }
+
+    pub fn from_text(text: &str) -> anyhow::Result<Vocab> {
+        let mut word_of = Vec::new();
+        let mut counts = Vec::new();
+        let mut id_of = HashMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let (w, c) = line
+                .split_once('\t')
+                .ok_or_else(|| anyhow::anyhow!("vocab line {i} malformed"))?;
+            id_of.insert(w.to_string(), i as u32);
+            word_of.push(w.to_string());
+            counts.push(c.parse::<u64>()?);
+        }
+        if word_of.len() < N_SPECIALS || word_of[0] != "<PAD>" || word_of[1] != "<UNK>" {
+            anyhow::bail!("vocab text missing specials");
+        }
+        Ok(Vocab { id_of, word_of, counts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sents(data: &[&[&str]]) -> Vec<Vec<String>> {
+        data.iter().map(|s| s.iter().map(|w| w.to_string()).collect()).collect()
+    }
+
+    #[test]
+    fn ids_ranked_by_frequency() {
+        let s = sents(&[&["b", "a", "a", "c", "a", "b"]]);
+        let v = Vocab::build(s.iter().map(|x| x.as_slice()), 1, 100);
+        assert_eq!(v.id("a"), 2); // most frequent after specials
+        assert_eq!(v.id("b"), 3);
+        assert_eq!(v.id("c"), 4);
+        assert_eq!(v.len(), 5);
+        assert_eq!(v.count(v.id("a")), 3);
+    }
+
+    #[test]
+    fn min_count_and_max_size_collapse_to_unk() {
+        let s = sents(&[&["a", "a", "b", "b", "c", "d"]]);
+        let v = Vocab::build(s.iter().map(|x| x.as_slice()), 2, 100);
+        assert_eq!(v.id("c"), UNK);
+        let v2 = Vocab::build(s.iter().map(|x| x.as_slice()), 1, 3);
+        assert_eq!(v2.len(), 3); // PAD, UNK, one type
+        assert_eq!(v2.id("d"), UNK);
+    }
+
+    #[test]
+    fn id_word_bijection() {
+        let s = sents(&[&["x", "y", "z", "x"]]);
+        let v = Vocab::build(s.iter().map(|x| x.as_slice()), 1, 100);
+        for (id, w, _) in v.entries() {
+            assert_eq!(v.id(w), id);
+            assert_eq!(v.word(id), w);
+        }
+    }
+
+    #[test]
+    fn unknown_word_is_unk() {
+        let s = sents(&[&["a"]]);
+        let v = Vocab::build(s.iter().map(|x| x.as_slice()), 1, 10);
+        assert_eq!(v.id("never-seen"), UNK);
+        assert_eq!(v.word(9999), "<UNK>");
+    }
+
+    #[test]
+    fn text_round_trip() {
+        let s = sents(&[&["a", "b", "a"]]);
+        let v = Vocab::build(s.iter().map(|x| x.as_slice()), 1, 100);
+        let v2 = Vocab::from_text(&v.to_text()).unwrap();
+        assert_eq!(v2.len(), v.len());
+        assert_eq!(v2.id("a"), v.id("a"));
+        assert_eq!(v2.count(v2.id("a")), 2);
+    }
+
+    #[test]
+    fn from_text_rejects_garbage() {
+        assert!(Vocab::from_text("no-tab-here\n").is_err());
+        assert!(Vocab::from_text("a\t1\nb\t2\n").is_err()); // missing specials
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let s = sents(&[&["z", "y", "z", "y"]]);
+        let v1 = Vocab::build(s.iter().map(|x| x.as_slice()), 1, 100);
+        let v2 = Vocab::build(s.iter().map(|x| x.as_slice()), 1, 100);
+        assert_eq!(v1.id("y"), v2.id("y"));
+        assert_eq!(v1.id("y"), 2); // lexicographic tie-break
+    }
+}

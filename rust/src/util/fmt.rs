@@ -1,0 +1,135 @@
+//! Human-readable formatting for rates, durations and byte counts.
+
+use std::time::Duration;
+
+/// `1234567.8` -> `"1.23 M"` style SI formatting.
+pub fn si(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2} k", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Duration with adaptive units.
+pub fn dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 100.0 {
+        format!("{:.1} s", s)
+    } else if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+pub fn bytes(n: u64) -> String {
+    let x = n as f64;
+    if x >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GiB", x / (1024.0 * 1024.0 * 1024.0))
+    } else if x >= 1024.0 * 1024.0 {
+        format!("{:.2} MiB", x / (1024.0 * 1024.0))
+    } else if x >= 1024.0 {
+        format!("{:.2} KiB", x / 1024.0)
+    } else {
+        format!("{n} B")
+    }
+}
+
+/// Fixed-width table printer for bench/experiment reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_units() {
+        assert_eq!(si(1_234_567.8), "1.23 M");
+        assert_eq!(si(999.0), "999.00");
+        assert_eq!(si(5_512.6), "5.51 k");
+    }
+
+    #[test]
+    fn dur_units() {
+        assert_eq!(dur(Duration::from_secs(200)), "200.0 s");
+        assert_eq!(dur(Duration::from_millis(1500)), "1.500 s");
+        assert_eq!(dur(Duration::from_micros(4600)), "4.600 ms");
+        assert_eq!(dur(Duration::from_nanos(500)), "0.5 µs");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[3].starts_with("longer"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_width() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

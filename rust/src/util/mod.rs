@@ -1,0 +1,13 @@
+//! Shared substrates: deterministic RNG, running statistics, timers,
+//! human formatting, a minimal JSON parser, and a scoped thread pool.
+//!
+//! This environment is offline, so the usual crates (`rand`, `serde_json`,
+//! `rayon`) are re-implemented here at the scale this project needs; each
+//! submodule carries its own unit tests.
+
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

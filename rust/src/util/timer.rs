@@ -1,0 +1,147 @@
+//! Wall-clock timing helpers with named-section accumulation.
+//!
+//! `SectionTimer` is the backbone of the Theano-profiler reproduction: it
+//! attributes wall time to named sections (op classes) and reports
+//! fraction-of-total and time-per-call — Table 1's two columns.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Per-section accumulated time + call counts.
+#[derive(Clone, Debug, Default)]
+pub struct SectionStats {
+    pub total: Duration,
+    pub calls: u64,
+}
+
+impl SectionStats {
+    pub fn per_call(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.calls as u32
+        }
+    }
+}
+
+/// Accumulates wall time into named sections.
+#[derive(Debug, Default)]
+pub struct SectionTimer {
+    sections: HashMap<String, SectionStats>,
+}
+
+impl SectionTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, t0.elapsed());
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn record(&mut self, name: &str, d: Duration) {
+        let e = self.sections.entry(name.to_string()).or_default();
+        e.total += d;
+        e.calls += 1;
+    }
+
+    pub fn get(&self, name: &str) -> Option<&SectionStats> {
+        self.sections.get(name)
+    }
+
+    pub fn total(&self) -> Duration {
+        self.sections.values().map(|s| s.total).sum()
+    }
+
+    /// Sections sorted by total time descending, with fraction-of-total.
+    pub fn ranked(&self) -> Vec<(String, SectionStats, f64)> {
+        let total = self.total().as_secs_f64().max(f64::MIN_POSITIVE);
+        let mut v: Vec<_> = self
+            .sections
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone(), s.total.as_secs_f64() / total))
+            .collect();
+        v.sort_by(|a, b| b.1.total.cmp(&a.1.total));
+        v
+    }
+
+    pub fn merge(&mut self, other: &SectionTimer) {
+        for (k, s) in &other.sections {
+            let e = self.sections.entry(k.clone()).or_default();
+            e.total += s.total;
+            e.calls += s.calls;
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.sections.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::sleep;
+
+    #[test]
+    fn accumulates_and_ranks() {
+        let mut t = SectionTimer::new();
+        t.record("a", Duration::from_millis(30));
+        t.record("a", Duration::from_millis(30));
+        t.record("b", Duration::from_millis(10));
+        let ranked = t.ranked();
+        assert_eq!(ranked[0].0, "a");
+        assert_eq!(ranked[0].1.calls, 2);
+        assert_eq!(ranked[0].1.per_call(), Duration::from_millis(30));
+        assert!((ranked[0].2 - 60.0 / 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_closure_measures() {
+        let mut t = SectionTimer::new();
+        let v = t.time("s", || {
+            sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.get("s").unwrap().total >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = SectionTimer::new();
+        let mut b = SectionTimer::new();
+        a.record("x", Duration::from_millis(1));
+        b.record("x", Duration::from_millis(2));
+        b.record("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.get("x").unwrap().calls, 2);
+        assert_eq!(a.get("x").unwrap().total, Duration::from_millis(3));
+        assert_eq!(a.get("y").unwrap().total, Duration::from_millis(3));
+    }
+}

@@ -1,0 +1,235 @@
+//! End-to-end integration: PJRT artifacts vs the pure-Rust reference model.
+//!
+//! These tests require `make artifacts` to have run (they are the Rust half
+//! of the L1/L2 correctness story: python/tests proves kernels == jnp
+//! oracles; this proves artifacts == independent Rust implementation).
+
+use std::path::PathBuf;
+
+use polyglot_gpu::baselines::model_ref::{ModelParams, RefModel};
+use polyglot_gpu::config::{Backend, Config};
+use polyglot_gpu::coordinator::{ModelSize, Trainer};
+use polyglot_gpu::data::Batch;
+use polyglot_gpu::runtime::{lit_f32, lit_i32, to_scalar_f32, to_vec_f32, Runtime};
+use polyglot_gpu::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::new(&artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn random_batch(rng: &mut Rng, b: usize, c: usize, vocab: usize) -> Batch {
+    let windows = (0..b * c).map(|_| rng.below(vocab as u64) as i32).collect();
+    let corrupt = (0..b).map(|_| rng.below(vocab as u64) as i32).collect();
+    Batch { windows, corrupt, batch: b, window: c }
+}
+
+fn cfg_with(backend: Backend, batch: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.training.backend = backend;
+    cfg.training.batch = batch;
+    cfg.training.lr = 0.08;
+    cfg.runtime.artifacts_dir = artifacts_dir().to_string_lossy().into_owned();
+    cfg
+}
+
+/// Max |a-b| over two slices.
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn scatter_artifact_matches_rust_baseline() {
+    let rt = runtime();
+    let exe = rt.load("scatter_rows_r1000").unwrap();
+    let (v, d, r) = (10240usize, 64usize, 1000usize);
+    let mut rng = Rng::new(7);
+    let w: Vec<f32> = (0..v * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let idx: Vec<i32> = (0..r).map(|_| rng.below(v as u64) as i32).collect();
+    let y: Vec<f32> = (0..r * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+    let out = exe
+        .run(&[
+            &lit_f32(&w, &[v, d]).unwrap(),
+            &lit_i32(&idx, &[r]).unwrap(),
+            &lit_f32(&y, &[r, d]).unwrap(),
+        ])
+        .unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+
+    let mut expect = w;
+    polyglot_gpu::baselines::scatter::scatter_add_serial(&mut expect, d, &idx, &y);
+    assert!(max_abs_diff(&got, &expect) < 1e-4);
+}
+
+#[test]
+fn scatter_all_implementations_agree() {
+    let rt = runtime();
+    let (v, d, r) = (10240usize, 64usize, 1000usize);
+    let mut rng = Rng::new(8);
+    let w: Vec<f32> = (0..v * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let idx: Vec<i32> = (0..r).map(|_| rng.below(v as u64) as i32).collect();
+    let y: Vec<f32> = (0..r * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let wl = lit_f32(&w, &[v, d]).unwrap();
+    let il = lit_i32(&idx, &[r]).unwrap();
+    let yl = lit_f32(&y, &[r, d]).unwrap();
+
+    let reference = {
+        let out = rt.load("scatter_native_r1000").unwrap().run(&[&wl, &il, &yl]).unwrap();
+        to_vec_f32(&out[0]).unwrap()
+    };
+    for name in [
+        "scatter_rows_r1000",
+        "scatter_naive_r1000",
+        "scatter_onehot_r1000_v512",
+    ] {
+        let out = rt.load(name).unwrap().run(&[&wl, &il, &yl]).unwrap();
+        let got = to_vec_f32(&out[0]).unwrap();
+        assert!(max_abs_diff(&got, &reference) < 1e-3, "{name} disagrees");
+    }
+}
+
+#[test]
+fn forward_artifact_matches_ref_model() {
+    let rt = runtime();
+    let exe = rt.load("forward_b8").unwrap();
+    let dims = exe.spec.model.clone().unwrap();
+    let p = ModelParams::init(dims.vocab, dims.dim, dims.window, dims.hidden, 3);
+    let mut rng = Rng::new(4);
+    let batch = random_batch(&mut rng, 8, dims.window, dims.vocab);
+
+    let params = polyglot_gpu::coordinator::upload_params(&p).unwrap();
+    let windows = lit_i32(&batch.windows, &[8, dims.window]).unwrap();
+    let inputs: Vec<&xla::Literal> = params.iter().chain([&windows]).collect();
+    let out = exe.run(&inputs).unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+
+    let mut m = RefModel::new(&p);
+    let expect = m.scores(&p, &batch.windows);
+    assert!(max_abs_diff(&got, &expect) < 1e-3, "scores {got:?} vs {expect:?}");
+}
+
+#[test]
+fn loss_eval_matches_ref_model() {
+    let rt = runtime();
+    let exe = rt.load("loss_eval_b256").unwrap();
+    let dims = exe.spec.model.clone().unwrap();
+    let p = ModelParams::init(dims.vocab, dims.dim, dims.window, dims.hidden, 5);
+    let mut rng = Rng::new(6);
+    let batch = random_batch(&mut rng, 256, dims.window, dims.vocab);
+
+    let params = polyglot_gpu::coordinator::upload_params(&p).unwrap();
+    let windows = lit_i32(&batch.windows, &[256, dims.window]).unwrap();
+    let corrupt = lit_i32(&batch.corrupt, &[256]).unwrap();
+    let inputs: Vec<&xla::Literal> = params.iter().chain([&windows, &corrupt]).collect();
+    let loss = to_scalar_f32(&exe.run(&inputs).unwrap()[0]).unwrap();
+
+    let mut m = RefModel::new(&p);
+    let expect = m.loss(&p, &batch.windows, &batch.corrupt);
+    assert!((loss - expect).abs() < 1e-3, "loss {loss} vs {expect}");
+}
+
+#[test]
+fn train_step_backends_match_ref_model_and_each_other() {
+    let rt = runtime();
+    let mut rng = Rng::new(11);
+
+    // host reference
+    let dims = rt.manifest.main_model.clone();
+    let p0 = ModelParams::init(dims.vocab, dims.dim, dims.window, dims.hidden, 21);
+    let batch = random_batch(&mut rng, 16, dims.window, dims.vocab);
+    let mut p_ref = p0.clone();
+    let mut m = RefModel::new(&p_ref);
+    let loss_ref = m.train_step(&mut p_ref, &batch.windows, &batch.corrupt, 0.08);
+
+    let mut results = Vec::new();
+    for backend in [Backend::Cpu, Backend::GpuOpt, Backend::GpuNaive] {
+        let cfg = cfg_with(backend, 16);
+        let mut tr = Trainer::new(&rt, &cfg, ModelSize::Main).unwrap();
+        tr.set_params(&p0).unwrap();
+        let loss = tr.step(&batch).unwrap();
+        assert!(
+            (loss - loss_ref).abs() < 1e-3,
+            "{}: loss {loss} vs ref {loss_ref}",
+            backend.name()
+        );
+        results.push((backend, tr.params_host().unwrap()));
+    }
+
+    for (backend, p) in &results {
+        assert!(
+            max_abs_diff(&p.e, &p_ref.e) < 2e-3,
+            "{}: embeddings diverge from host reference",
+            backend.name()
+        );
+        assert!(max_abs_diff(&p.w1, &p_ref.w1) < 2e-3, "{}: w1", backend.name());
+        assert!(max_abs_diff(&p.w2, &p_ref.w2) < 2e-3, "{}: w2", backend.name());
+    }
+    // backends agree with each other even more tightly
+    let (_, pa) = &results[0];
+    for (backend, p) in &results[1..] {
+        assert!(
+            max_abs_diff(&p.e, &pa.e) < 1e-4,
+            "{} vs cpu embeddings",
+            backend.name()
+        );
+    }
+}
+
+#[test]
+fn multi_step_artifact_equals_sequential_steps() {
+    let rt = runtime();
+    let dims = rt.manifest.main_model.clone();
+    let p0 = ModelParams::init(dims.vocab, dims.dim, dims.window, dims.hidden, 31);
+    let mut rng = Rng::new(32);
+    let batches: Vec<Batch> =
+        (0..8).map(|_| random_batch(&mut rng, 16, dims.window, dims.vocab)).collect();
+
+    // fused K=8
+    let mut cfg = cfg_with(Backend::GpuOpt, 16);
+    cfg.training.fused_steps = 8;
+    let mut fused = Trainer::new(&rt, &cfg, ModelSize::Main).unwrap();
+    fused.set_params(&p0).unwrap();
+    let losses_fused = fused.step_fused(&batches).unwrap();
+
+    // sequential
+    let cfg = cfg_with(Backend::GpuOpt, 16);
+    let mut seq = Trainer::new(&rt, &cfg, ModelSize::Main).unwrap();
+    seq.set_params(&p0).unwrap();
+    let losses_seq: Vec<f32> =
+        batches.iter().map(|b| seq.step(b).unwrap()).collect();
+
+    for (a, b) in losses_fused.iter().zip(&losses_seq) {
+        assert!((a - b).abs() < 1e-4, "losses {losses_fused:?} vs {losses_seq:?}");
+    }
+    let pf = fused.params_host().unwrap();
+    let ps = seq.params_host().unwrap();
+    assert!(max_abs_diff(&pf.e, &ps.e) < 1e-4);
+}
+
+#[test]
+fn training_loss_decreases_end_to_end() {
+    let rt = runtime();
+    let mut cfg = cfg_with(Backend::GpuOpt, 64);
+    cfg.training.lr = 0.25;
+    let mut tr = Trainer::new(&rt, &cfg, ModelSize::Main).unwrap();
+    let dims = tr.dims.clone();
+    let mut rng = Rng::new(77);
+    // repeat a small pool of batches so the model can actually fit them
+    let pool: Vec<Batch> =
+        (0..4).map(|_| random_batch(&mut rng, 64, dims.window, dims.vocab)).collect();
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for i in 0..200 {
+        let loss = tr.step(&pool[i % pool.len()]).unwrap();
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(last < first * 0.8, "loss {first} -> {last}");
+    assert!(tr.metrics.rate() > 0.0);
+}

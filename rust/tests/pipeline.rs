@@ -1,0 +1,259 @@
+//! Pipeline + server integration tests: corpus → vocab → batcher → trainer
+//! composition, checkpoint/serving round trips, failure injection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+use polyglot_gpu::config::{Backend, Config};
+use polyglot_gpu::coordinator::{checkpoint, prepare_corpus, run_training, ModelSize, RunOptions, Trainer};
+use polyglot_gpu::corpus::{generator, CorpusSpec};
+use polyglot_gpu::data::Batch;
+use polyglot_gpu::embeddings::EmbeddingStore;
+use polyglot_gpu::runtime::Runtime;
+use polyglot_gpu::server::Server;
+use polyglot_gpu::text::Vocab;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.runtime.artifacts_dir = artifacts_dir().to_string_lossy().into_owned();
+    cfg.data.tokens_per_language = 15_000;
+    cfg.data.languages = 2;
+    cfg.training.log_every = 0;
+    cfg.training.batch = 32;
+    cfg
+}
+
+#[test]
+fn full_pipeline_trains_and_reports() {
+    let cfg = small_cfg();
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab).unwrap();
+    assert!(corpus.tokens >= 30_000);
+    assert!(corpus.vocab.len() > 100);
+    assert!(corpus.vocab.len() <= rt.manifest.main_model.vocab);
+
+    let opts = RunOptions { steps: 40, quiet: true, ..RunOptions::default() };
+    let (trainer, report) = run_training(&rt, &cfg, &corpus, &opts).unwrap();
+    assert_eq!(report.steps, 40);
+    assert_eq!(report.examples, 40 * 32);
+    assert!(report.rate_mean > 0.0);
+    assert!(report.final_loss.is_finite());
+    assert!(!report.loss_curve.is_empty());
+    // params came back finite
+    let p = trainer.params_host().unwrap();
+    assert!(p.e.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn convergence_eval_path_runs() {
+    let mut cfg = small_cfg();
+    cfg.training.converge_threshold = 2.0; // trivially convergable (hinge <= ~1)
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab).unwrap();
+    let opts = RunOptions {
+        steps: 30,
+        eval_every: 10,
+        stop_on_converge: true,
+        quiet: true,
+        ..RunOptions::default()
+    };
+    let (_tr, report) = run_training(&rt, &cfg, &corpus, &opts).unwrap();
+    let c = report.converged.expect("threshold 2.0 must converge instantly");
+    assert!(c.steps <= 10);
+}
+
+#[test]
+fn small_model_family_trains() {
+    let mut cfg = small_cfg();
+    cfg.training.batch = 64;
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.small_model.vocab).unwrap();
+    let opts =
+        RunOptions { steps: 20, size: ModelSize::Small, quiet: true, ..RunOptions::default() };
+    let (trainer, report) = run_training(&rt, &cfg, &corpus, &opts).unwrap();
+    assert_eq!(trainer.dims.vocab, rt.manifest.small_model.vocab);
+    assert_eq!(report.steps, 20);
+}
+
+#[test]
+fn small_model_rejects_non_opt_backends() {
+    let mut cfg = small_cfg();
+    cfg.training.backend = Backend::Cpu;
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    assert!(Trainer::new(&rt, &cfg, ModelSize::Small).is_err());
+}
+
+#[test]
+fn trainer_rejects_wrong_batch_shape() {
+    let cfg = small_cfg();
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut tr = Trainer::new(&rt, &cfg, ModelSize::Main).unwrap();
+    let bad = Batch { windows: vec![2; 8 * 5], corrupt: vec![3; 8], batch: 8, window: 5 };
+    assert!(tr.step(&bad).is_err(), "batch 8 into a batch-32 trainer must fail");
+}
+
+#[test]
+fn trainer_rejects_missing_artifact_batch() {
+    let mut cfg = small_cfg();
+    cfg.training.batch = 48; // no artifact for batch 48
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    assert!(Trainer::new(&rt, &cfg, ModelSize::Main).is_err());
+}
+
+#[test]
+fn checkpoint_resume_continues_training() {
+    let cfg = small_cfg();
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab).unwrap();
+    let opts = RunOptions { steps: 15, quiet: true, ..RunOptions::default() };
+    let (trainer, _) = run_training(&rt, &cfg, &corpus, &opts).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("pg-resume-{}", std::process::id()));
+    let ckpt = dir.join("m.pgck");
+    checkpoint::save(&ckpt, &trainer.params_host().unwrap()).unwrap();
+
+    // resume into a new trainer and keep going
+    let mut tr2 = Trainer::new(&rt, &cfg, ModelSize::Main).unwrap();
+    let restored = checkpoint::load(&ckpt).unwrap();
+    tr2.set_params(&restored).unwrap();
+    let p_before = tr2.params_host().unwrap();
+    assert_eq!(p_before.e, restored.e, "resume must restore params exactly");
+    let batch = Batch {
+        windows: vec![5; 32 * 5],
+        corrupt: vec![9; 32],
+        batch: 32,
+        window: 5,
+    };
+    let loss = tr2.step(&batch).unwrap();
+    assert!(loss.is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_artifact_file_fails_cleanly() {
+    // clone the artifacts dir into a temp dir, then break one file
+    let dir = std::env::temp_dir().join(format!("pg-broken-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for entry in std::fs::read_dir(artifacts_dir()).unwrap() {
+        let p = entry.unwrap().path();
+        if p.is_file() {
+            std::fs::copy(&p, dir.join(p.file_name().unwrap())).unwrap();
+        }
+    }
+    std::fs::write(dir.join("forward_b8.hlo.txt"), "this is not hlo").unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    // other artifacts still load...
+    assert!(rt.load("forward_b32").is_ok());
+    // ...the broken one errors instead of aborting
+    assert!(rt.load("forward_b8").is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_manifest_fails_with_hint() {
+    let dir = std::env::temp_dir().join(format!("pg-nomanifest-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = match Runtime::new(&dir) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("runtime must fail without manifest"),
+    };
+    assert!(err.contains("make artifacts"), "error should hint at make artifacts: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn server_end_to_end_round_trip() {
+    // random params are fine for protocol testing
+    let corpus = generator::generate(&CorpusSpec {
+        languages: 1,
+        tokens_per_language: 4_000,
+        lexicon: 300,
+        ..CorpusSpec::default()
+    });
+    let vocab = Vocab::build(corpus.sentences.iter().map(|s| s.as_slice()), 1, 20480);
+    let params = polyglot_gpu::baselines::model_ref::ModelParams::init(20480, 64, 5, 32, 7);
+
+    let mut cfg = small_cfg();
+    cfg.server.addr = "127.0.0.1:0".into();
+    let server = Server::start(&cfg.server, artifacts_dir(), vocab.clone(), params).unwrap();
+
+    let stream = TcpStream::connect(&server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+
+    writeln!(writer, "PING").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "PONG");
+
+    line.clear();
+    writeln!(writer, "SCORE 2 3 4 5 6").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("SCORE "), "{line}");
+    let score: f32 = line.trim().strip_prefix("SCORE ").unwrap().parse().unwrap();
+    assert!(score.is_finite());
+
+    line.clear();
+    let probe = vocab.entries().next().unwrap().1.to_string();
+    writeln!(writer, "NN {probe} 2").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("NN "), "{line}");
+
+    // malformed requests answer ERR, do not kill the connection
+    line.clear();
+    writeln!(writer, "SCORE 1 2").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR"), "{line}");
+
+    line.clear();
+    writeln!(writer, "BOGUS").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR"), "{line}");
+
+    writeln!(writer, "QUIT").unwrap();
+    server.stop();
+}
+
+#[test]
+fn embedding_store_matches_trained_params() {
+    let cfg = small_cfg();
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab).unwrap();
+    let opts = RunOptions { steps: 10, quiet: true, ..RunOptions::default() };
+    let (trainer, _) = run_training(&rt, &cfg, &corpus, &opts).unwrap();
+    let p = trainer.params_host().unwrap();
+    let store = EmbeddingStore::from_params(corpus.vocab.clone(), &p).unwrap();
+    let (_, word, _) = corpus.vocab.entries().next().unwrap();
+    let id = corpus.vocab.id(word) as usize;
+    assert_eq!(store.vector(word), &p.e[id * 64..(id + 1) * 64]);
+}
+
+#[test]
+fn event_log_streams_run_records() {
+    let cfg = small_cfg();
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab).unwrap();
+    let dir = std::env::temp_dir().join(format!("pg-evt-{}", std::process::id()));
+    let log_path = dir.join("run.jsonl");
+    let opts = RunOptions {
+        steps: 20,
+        quiet: true,
+        event_log: log_path.to_string_lossy().into_owned(),
+        ..RunOptions::default()
+    };
+    let (_tr, _report) = run_training(&rt, &cfg, &corpus, &opts).unwrap();
+    let events = polyglot_gpu::coordinator::events::read_events(&log_path).unwrap();
+    assert!(events.len() >= 4, "only {} events", events.len());
+    assert_eq!(events[0].get("event").unwrap().as_str(), Some("run_start"));
+    assert_eq!(
+        events.last().unwrap().get("event").unwrap().as_str(),
+        Some("run_end")
+    );
+    assert!(events.iter().any(|e| e.get("event").unwrap().as_str() == Some("step")));
+    std::fs::remove_dir_all(&dir).ok();
+}
