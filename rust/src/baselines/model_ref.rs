@@ -145,6 +145,24 @@ impl RefModel {
     ) -> (f32, Grads) {
         let b = corrupt.len();
         let scale = 1.0 / b as f32;
+        let (total, grads) = self.grads_scaled(p, windows, corrupt, scale);
+        (total * scale, grads)
+    }
+
+    /// Like [`RefModel::grads`] but with an explicit gradient scale and the
+    /// **unscaled** hinge total as the first return. The host trainer's
+    /// per-thread accumulators use this: each thread passes `1/B` for the
+    /// *full* batch size so partial gradients sum to the whole-batch
+    /// gradient under `grad::merge_grads`.
+    pub fn grads_scaled(
+        &mut self,
+        p: &ModelParams,
+        windows: &[i32],
+        corrupt: &[i32],
+        scale: f32,
+    ) -> (f32, Grads) {
+        let b = corrupt.len();
+        debug_assert_eq!(windows.len(), b * p.window);
         let mut neg_win = vec![0i32; p.window];
         let mut total = 0.0f32;
 
@@ -203,7 +221,7 @@ impl RefModel {
         }
 
         (
-            total * scale,
+            total,
             Grads { e_rows: g_e.into_iter().collect(), w1: g_w1, b1: g_b1, w2: g_w2, b2: g_b2 },
         )
     }
@@ -230,6 +248,14 @@ impl Grads {
                 p.e[id * d + k] -= lr * gk;
             }
         }
+        self.apply_dense(p, lr);
+    }
+
+    /// The dense-head half of `apply` (w1, b1, w2, b2). The host trainer's
+    /// parallel path applies embedding rows through the sharded scatter
+    /// engine and reuses this for the head, so changes to the update rule
+    /// stay in one place.
+    pub fn apply_dense(&self, p: &mut ModelParams, lr: f32) {
         for (w, g) in p.w1.iter_mut().zip(&self.w1) {
             *w -= lr * g;
         }

@@ -24,6 +24,10 @@ pub enum Backend {
     GpuNaive,
     /// Pallas-kernel artifact — the paper's optimized GPU.
     GpuOpt,
+    /// Pure-Rust engine (`baselines::RefModel` + the `grad` subsystem's
+    /// parallel sharded scatter-add) — needs no PJRT artifacts, so it
+    /// trains and serves anywhere the crate builds.
+    Host,
 }
 
 impl Backend {
@@ -32,7 +36,8 @@ impl Backend {
             "cpu" => Backend::Cpu,
             "gpu-naive" => Backend::GpuNaive,
             "gpu-opt" => Backend::GpuOpt,
-            _ => bail!("unknown backend {s:?} (expected cpu | gpu-naive | gpu-opt)"),
+            "host" => Backend::Host,
+            _ => bail!("unknown backend {s:?} (expected cpu | gpu-naive | gpu-opt | host)"),
         })
     }
 
@@ -41,16 +46,24 @@ impl Backend {
             Backend::Cpu => "cpu",
             Backend::GpuNaive => "gpu-naive",
             Backend::GpuOpt => "gpu-opt",
+            Backend::Host => "host",
         }
     }
 
-    /// Artifact-name tag this backend trains with.
+    /// Artifact-name tag this backend trains with. The host backend never
+    /// looks up artifacts; its tag exists only for display symmetry.
     pub fn artifact_tag(&self) -> &'static str {
         match self {
             Backend::Cpu => "ref",
             Backend::GpuNaive => "naive",
             Backend::GpuOpt => "opt",
+            Backend::Host => "host",
         }
+    }
+
+    /// Does this backend execute through PJRT artifacts?
+    pub fn needs_artifacts(&self) -> bool {
+        !matches!(self, Backend::Host)
     }
 }
 
@@ -123,6 +136,57 @@ impl Default for DataCfg {
     }
 }
 
+/// Strategy policy for the scatter-add gradient subsystem (`grad`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradMode {
+    /// Batch-size-adaptive: serial below `crossover_rows` updates,
+    /// sharded-parallel at or above (the paper's "wins only at
+    /// sufficiently large batch" shape).
+    Auto,
+    /// Always the serial reference loop.
+    Serial,
+    /// Always sharded-parallel (when more than one thread is configured).
+    Sharded,
+}
+
+impl GradMode {
+    pub fn parse(s: &str) -> Result<GradMode> {
+        Ok(match s {
+            "auto" => GradMode::Auto,
+            "serial" => GradMode::Serial,
+            "sharded" => GradMode::Sharded,
+            _ => bail!("unknown grad mode {s:?} (expected auto | serial | sharded)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GradMode::Auto => "auto",
+            GradMode::Serial => "serial",
+            GradMode::Sharded => "sharded",
+        }
+    }
+}
+
+/// `[grad]` — the parallel scatter-add gradient subsystem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GradCfg {
+    pub mode: GradMode,
+    /// Worker threads (0 = all available cores).
+    pub threads: usize,
+    /// `Auto` crossover in scatter updates (rows); a batch of B windows
+    /// of width C produces 2·B·C embedding updates.
+    pub crossover_rows: usize,
+    /// Budget of Zipf-head rows pinned to dedicated shards per batch.
+    pub hot_rows: usize,
+}
+
+impl Default for GradCfg {
+    fn default() -> Self {
+        Self { mode: GradMode::Auto, threads: 0, crossover_rows: 2048, hot_rows: 16 }
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct RuntimeCfg {
     pub artifacts_dir: String,
@@ -154,6 +218,7 @@ pub struct Config {
     pub model: ModelCfg,
     pub training: TrainingCfg,
     pub data: DataCfg,
+    pub grad: GradCfg,
     pub runtime: RuntimeCfg,
     pub server: ServerCfg,
 }
@@ -224,6 +289,12 @@ impl Config {
             "data.corpus_path" => {
                 self.data.corpus_path = v.as_str().context("expected string")?.into()
             }
+            "grad.mode" => {
+                self.grad.mode = GradMode::parse(v.as_str().context("expected string")?)?
+            }
+            "grad.threads" => self.grad.threads = usize_of(v)?,
+            "grad.crossover_rows" => self.grad.crossover_rows = usize_of(v)?,
+            "grad.hot_rows" => self.grad.hot_rows = usize_of(v)?,
             "runtime.artifacts_dir" => {
                 self.runtime.artifacts_dir = v.as_str().context("expected string")?.into()
             }
@@ -344,8 +415,43 @@ mod tests {
 
     #[test]
     fn backend_names_round_trip() {
-        for b in [Backend::Cpu, Backend::GpuNaive, Backend::GpuOpt] {
+        for b in [Backend::Cpu, Backend::GpuNaive, Backend::GpuOpt, Backend::Host] {
             assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        assert!(!Backend::Host.needs_artifacts());
+        assert!(Backend::GpuOpt.needs_artifacts());
+    }
+
+    #[test]
+    fn grad_section_parses() {
+        let doc = r#"
+            [training]
+            backend = "host"
+
+            [grad]
+            mode = "sharded"
+            threads = 8
+            crossover_rows = 512
+            hot_rows = 4
+        "#;
+        let cfg = Config::from_map(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(cfg.training.backend, Backend::Host);
+        assert_eq!(cfg.grad.mode, GradMode::Sharded);
+        assert_eq!(cfg.grad.threads, 8);
+        assert_eq!(cfg.grad.crossover_rows, 512);
+        assert_eq!(cfg.grad.hot_rows, 4);
+        // defaults when the section is absent
+        let d = Config::default();
+        assert_eq!(d.grad.mode, GradMode::Auto);
+        assert_eq!(d.grad.threads, 0);
+    }
+
+    #[test]
+    fn grad_mode_rejects_unknown() {
+        let map = toml::parse("[grad]\nmode = \"turbo\"").unwrap();
+        assert!(Config::from_map(&map).is_err());
+        for m in [GradMode::Auto, GradMode::Serial, GradMode::Sharded] {
+            assert_eq!(GradMode::parse(m.name()).unwrap(), m);
         }
     }
 }

@@ -85,9 +85,10 @@ impl Default for RunOptions {
 }
 
 /// Drive a full training run; returns the trainer (holding final params)
-/// and the report.
+/// and the report. `rt` may be `None` for the artifact-free `host`
+/// backend; artifact backends require a runtime.
 pub fn run_training<'rt>(
-    rt: &'rt Runtime,
+    rt: Option<&'rt Runtime>,
     cfg: &Config,
     corpus: &PreparedCorpus,
     opts: &RunOptions,
@@ -106,12 +107,14 @@ pub fn run_training<'rt>(
     );
 
     // held-out eval batch for convergence (small model only has the small
-    // eval artifact; main model uses loss_eval_b256)
-    let eval_exe = if opts.eval_every > 0 {
+    // eval artifact; main model uses loss_eval_b256). The host backend
+    // evaluates through its own parameters instead of an artifact.
+    let eval_exe = if opts.eval_every > 0 && cfg.training.backend.needs_artifacts() {
         let name = match opts.size {
             ModelSize::Small => "loss_eval_small_b256",
             ModelSize::Main => "loss_eval_b256",
         };
+        let rt = rt.context("convergence eval on an artifact backend needs a runtime")?;
         Some(rt.load(name).context("loss_eval artifact")?)
     } else {
         None
@@ -178,13 +181,17 @@ pub fn run_training<'rt>(
             }
         }
 
-        if let (Some(exe), Some(eb)) = (&eval_exe, &eval_batch) {
+        if let Some(eb) = &eval_batch {
             if opts.eval_every > 0 && step % opts.eval_every == 0 {
-                let w = lit_i32(&eb.windows, &[256, dims.window])?;
-                let c = lit_i32(&eb.corrupt, &[256])?;
-                let inputs: Vec<&xla::Literal> =
-                    trainer.params().iter().chain([&w, &c]).collect();
-                let l = to_scalar_f32(&exe.run(&inputs)?[0])?;
+                let l = if let Some(exe) = &eval_exe {
+                    let w = lit_i32(&eb.windows, &[256, dims.window])?;
+                    let c = lit_i32(&eb.corrupt, &[256])?;
+                    let inputs: Vec<&xla::Literal> =
+                        trainer.params().iter().chain([&w, &c]).collect();
+                    to_scalar_f32(&exe.run(&inputs)?[0])?
+                } else {
+                    trainer.eval_loss_host(&eb.windows, &eb.corrupt)?
+                };
                 let hit = tracker.update(
                     l,
                     step as u64,

@@ -1,6 +1,7 @@
-//! The training coordinator: drives PJRT artifacts over the data pipeline.
+//! The training coordinator: drives the data pipeline into one of four
+//! backend engines.
 //!
-//! Three backends (DESIGN.md §2):
+//! Three PJRT-artifact backends (DESIGN.md §2):
 //!
 //! * `cpu` — fused SGD-step artifact with XLA's native scatter
 //!   (`train_step_ref_b{B}`): the paper's CPU baseline.
@@ -13,20 +14,33 @@
 //!   `AdvancedIncSubtensor1`, whose dispatch+sync cost per row is exactly
 //!   what the paper's Table 1 measured at 81.7% of training time.
 //!
-//! Parameters live as PJRT output literals and are fed straight back into
-//! the next dispatch — they are never copied into Rust vectors on the hot
-//! path. The optimized backends can also run K scanned steps per dispatch
-//! (`train_multi_opt_*`) to amortize the tuple-literal round-trip.
+//! And one pure-Rust backend:
+//!
+//! * `host` — `baselines::RefModel` forward/backward fanned out over a
+//!   thread pool, with per-thread gradient accumulators merged by
+//!   `grad::tree_reduce` and the sparse embedding update applied through
+//!   the `grad::ScatterEngine`'s sharded scatter-add. Needs no artifacts,
+//!   so training runs anywhere the crate builds; its strategy switch
+//!   (serial below the `[grad]` crossover, sharded-parallel above) is the
+//!   host-thread analogue of the paper's batched-scatter finding.
+//!
+//! For the artifact backends, parameters live as PJRT output literals and
+//! are fed straight back into the next dispatch — never copied into Rust
+//! vectors on the hot path. The optimized backends can also run K scanned
+//! steps per dispatch (`train_multi_opt_*`) to amortize the tuple-literal
+//! round-trip.
 
 use std::rc::Rc;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
-use crate::baselines::model_ref::ModelParams;
+use crate::baselines::model_ref::{Grads, ModelParams, RefModel};
 use crate::config::{Backend, Config};
 use crate::data::Batch;
+use crate::grad::{merge_grads, tree_reduce, ScatterEngine};
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, to_scalar_f32, to_vec_f32, to_vec_i32};
 use crate::runtime::{Executable, Manifest, ModelDims, Runtime};
 
@@ -39,27 +53,75 @@ pub enum ModelSize {
     Small,
 }
 
-pub struct Trainer<'rt> {
-    rt: &'rt Runtime,
-    pub backend: Backend,
-    pub batch: usize,
-    pub lr: f32,
-    pub dims: ModelDims,
+/// PJRT-artifact execution state.
+struct PjrtEngine {
     params: Vec<Literal>, // e, w1, b1, w2, b2
     step_exe: Rc<Executable>,
     row_exe: Option<Rc<Executable>>,   // gpu-naive per-row scatter
     multi_exe: Option<Rc<Executable>>, // fused K-step artifact
+}
+
+/// Pure-Rust execution state (the `host` backend).
+struct HostEngine {
+    params: ModelParams,
+    scatter: ScatterEngine,
+}
+
+enum Engine {
+    Pjrt(PjrtEngine),
+    Host(Box<HostEngine>),
+}
+
+pub struct Trainer<'rt> {
+    rt: Option<&'rt Runtime>,
+    pub backend: Backend,
+    pub batch: usize,
+    pub lr: f32,
+    pub dims: ModelDims,
+    engine: Engine,
     pub metrics: Metrics,
 }
 
 impl<'rt> Trainer<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: &Config, size: ModelSize) -> Result<Trainer<'rt>> {
+    /// Build a trainer. `rt` may be `None` only for the `host` backend;
+    /// artifact backends require a loaded runtime.
+    pub fn new(rt: Option<&'rt Runtime>, cfg: &Config, size: ModelSize) -> Result<Trainer<'rt>> {
         let backend = cfg.training.backend;
         let batch = cfg.training.batch;
         let small = size == ModelSize::Small;
         if small && backend != Backend::GpuOpt {
             bail!("small-model artifacts exist only for the gpu-opt backend");
         }
+
+        if backend == Backend::Host {
+            let dims = ModelDims {
+                vocab: cfg.model.vocab,
+                dim: cfg.model.dim,
+                window: cfg.model.window,
+                hidden: cfg.model.hidden,
+            };
+            let params = ModelParams::init(
+                dims.vocab,
+                dims.dim,
+                dims.window,
+                dims.hidden,
+                cfg.training.seed,
+            );
+            let scatter = ScatterEngine::new(&cfg.grad);
+            return Ok(Trainer {
+                rt,
+                backend,
+                batch,
+                lr: cfg.training.lr,
+                dims,
+                engine: Engine::Host(Box::new(HostEngine { params, scatter })),
+                metrics: Metrics::new(25),
+            });
+        }
+
+        let rt = rt.with_context(|| {
+            format!("backend {} executes PJRT artifacts and needs a runtime", backend.name())
+        })?;
         let name = Manifest::train_step_name(backend.artifact_tag(), batch, small);
         let step_exe = rt.load(&name).with_context(|| {
             format!("backend {} batch {batch}: no artifact {name}", backend.name())
@@ -88,15 +150,12 @@ impl<'rt> Trainer<'rt> {
                                      cfg.training.seed);
         let params = upload_params(&host)?;
         Ok(Trainer {
-            rt,
+            rt: Some(rt),
             backend,
             batch,
             lr: cfg.training.lr,
             dims,
-            params,
-            step_exe,
-            row_exe,
-            multi_exe,
+            engine: Engine::Pjrt(PjrtEngine { params, step_exe, row_exe, multi_exe }),
             metrics: Metrics::new(25),
         })
     }
@@ -106,30 +165,54 @@ impl<'rt> Trainer<'rt> {
         if host.vocab != self.dims.vocab || host.dim != self.dims.dim {
             bail!("checkpoint dims mismatch artifact dims");
         }
-        self.params = upload_params(host)?;
+        match &mut self.engine {
+            Engine::Pjrt(p) => p.params = upload_params(host)?,
+            Engine::Host(h) => h.params = host.clone(),
+        }
         Ok(())
     }
 
     /// Copy parameters back to the host (checkpointing / serving).
     pub fn params_host(&self) -> Result<ModelParams> {
-        download_params(&self.params, &self.dims)
+        match &self.engine {
+            Engine::Pjrt(p) => download_params(&p.params, &self.dims),
+            Engine::Host(h) => Ok(h.params.clone()),
+        }
     }
 
-    /// Borrow the current parameter literals (e.g. for loss evaluation).
+    /// Borrow the current parameter literals (artifact backends; the host
+    /// backend keeps no literals and returns an empty slice — use
+    /// `params_host` / `eval_loss_host` there).
     pub fn params(&self) -> &[Literal] {
-        &self.params
+        match &self.engine {
+            Engine::Pjrt(p) => &p.params,
+            Engine::Host(_) => &[],
+        }
     }
 
-    pub fn runtime(&self) -> &Runtime {
+    pub fn runtime(&self) -> Option<&Runtime> {
         self.rt
     }
 
+    /// Held-out mean hinge loss evaluated on the host engine's parameters
+    /// without copying them (host backend only).
+    pub fn eval_loss_host(&self, windows: &[i32], corrupt: &[i32]) -> Result<f32> {
+        match &self.engine {
+            Engine::Host(h) => {
+                let mut model = RefModel::new(&h.params);
+                Ok(model.loss(&h.params, windows, corrupt))
+            }
+            Engine::Pjrt(_) => bail!("eval_loss_host requires the host backend"),
+        }
+    }
+
     /// Number of PJRT dispatches a single step costs on this backend
-    /// (1 for fused backends; 1 + rows for gpu-naive).
+    /// (1 for fused backends; 1 + rows for gpu-naive; 0 on the host).
     pub fn dispatches_per_step(&self) -> usize {
-        match self.backend {
-            Backend::GpuNaive => {
-                1 + self.step_exe.spec.rows.unwrap_or(2 * self.batch * self.dims.window)
+        match (&self.engine, self.backend) {
+            (Engine::Host(_), _) => 0,
+            (Engine::Pjrt(p), Backend::GpuNaive) => {
+                1 + p.step_exe.spec.rows.unwrap_or(2 * self.batch * self.dims.window)
             }
             _ => 1,
         }
@@ -144,64 +227,50 @@ impl<'rt> Trainer<'rt> {
             );
         }
         let t0 = Instant::now();
-        let windows = lit_i32(&batch.windows, &[batch.batch, batch.window])?;
-        let corrupt = lit_i32(&batch.corrupt, &[batch.batch])?;
-        let lr = scalar_f32(self.lr);
-
-        let loss = match self.backend {
-            Backend::Cpu | Backend::GpuOpt => {
-                let inputs: Vec<&Literal> = self
-                    .params
-                    .iter()
-                    .chain([&windows, &corrupt, &lr])
-                    .collect();
-                let mut out = self.step_exe.run(&inputs)?;
-                let loss = to_scalar_f32(&out[5])?;
-                out.truncate(5);
-                self.params = out;
-                loss
+        let lr = self.lr;
+        let loss = match &mut self.engine {
+            Engine::Host(h) => host_step(h, batch, lr)?,
+            Engine::Pjrt(p) => {
+                let windows = lit_i32(&batch.windows, &[batch.batch, batch.window])?;
+                let corrupt = lit_i32(&batch.corrupt, &[batch.batch])?;
+                let lr_lit = scalar_f32(lr);
+                match self.backend {
+                    Backend::Cpu | Backend::GpuOpt => {
+                        let inputs: Vec<&Literal> = p
+                            .params
+                            .iter()
+                            .chain([&windows, &corrupt, &lr_lit])
+                            .collect();
+                        let mut out = p.step_exe.run(&inputs)?;
+                        let loss = to_scalar_f32(&out[5])?;
+                        out.truncate(5);
+                        p.params = out;
+                        loss
+                    }
+                    Backend::GpuNaive => {
+                        naive_step(p, &self.dims, &windows, &corrupt, &lr_lit)?
+                    }
+                    Backend::Host => unreachable!("host backend uses the host engine"),
+                }
             }
-            Backend::GpuNaive => self.naive_step(&windows, &corrupt, &lr)?,
         };
         self.metrics.record_step(batch.batch, loss, t0.elapsed());
         Ok(loss)
     }
 
-    /// The unoptimized backend: fused dense update + per-row embedding
-    /// scatter via one PJRT dispatch per gradient row.
-    fn naive_step(&mut self, windows: &Literal, corrupt: &Literal, lr: &Literal) -> Result<f32> {
-        let inputs: Vec<&Literal> =
-            self.params.iter().chain([windows, corrupt, lr]).collect();
-        let out = self.step_exe.run(&inputs)?;
-        // outputs: w1', b1', w2', b2', idx_all, delta_rows, loss
-        let idx_all = to_vec_i32(&out[4])?;
-        let delta_rows = to_vec_f32(&out[5])?;
-        let loss = to_scalar_f32(&out[6])?;
-        let d = self.dims.dim;
-
-        let row_exe = self.row_exe.as_ref().expect("naive backend has row_exe");
-        // Serialized per-row dispatch — Theano's Python loop. W stays
-        // device-resident (as Theano's shared variable did); each row still
-        // pays a host->device upload of its operands, a dispatch, a sync,
-        // and a device-side copy of E — the cost structure the paper
-        // measured at 4.6 ms per call (§4.2).
-        let mut e_buf = row_exe.to_device(&self.params[0])?;
-        for (r, &i) in idx_all.iter().enumerate() {
-            let idx1 = row_exe.upload_i32(&[i], &[1])?;
-            let row1 = row_exe.upload_f32(&delta_rows[r * d..(r + 1) * d], &[1, d])?;
-            e_buf = row_exe.run_b(&[&e_buf, &idx1, &row1])?;
-        }
-        self.params[0] = e_buf.to_literal_sync().context("downloading E")?;
-        for (slot, lit) in [(1usize, 0usize), (2, 1), (3, 2), (4, 3)] {
-            self.params[slot] = clone_literal(&out[lit])?;
-        }
-        Ok(loss)
-    }
-
-    /// Run `k` batches in one fused dispatch (`train_multi` artifact).
-    /// Returns per-step losses. Requires `fused_steps > 1` at construction.
+    /// Run `k` batches in one fused dispatch (`train_multi` artifact). On
+    /// the host backend (no dispatch overhead to amortize) the batches run
+    /// as plain sequential steps. Returns per-step losses.
     pub fn step_fused(&mut self, batches: &[Batch]) -> Result<Vec<f32>> {
-        let multi = self
+        if matches!(self.engine, Engine::Host(_)) {
+            return batches.iter().map(|b| self.step(b)).collect();
+        }
+        let t0 = Instant::now();
+        let (b, c) = (self.batch, self.dims.window);
+        let Engine::Pjrt(p) = &mut self.engine else {
+            unreachable!("host handled above")
+        };
+        let multi = p
             .multi_exe
             .as_ref()
             .context("trainer built without fused_steps")?
@@ -210,8 +279,6 @@ impl<'rt> Trainer<'rt> {
         if batches.len() != k {
             bail!("step_fused needs exactly {k} batches, got {}", batches.len());
         }
-        let t0 = Instant::now();
-        let (b, c) = (self.batch, self.dims.window);
         let mut wk = Vec::with_capacity(k * b * c);
         let mut ck = Vec::with_capacity(k * b);
         for batch in batches {
@@ -225,17 +292,152 @@ impl<'rt> Trainer<'rt> {
         let corrupt = lit_i32(&ck, &[k, b])?;
         let lr = scalar_f32(self.lr);
         let inputs: Vec<&Literal> =
-            self.params.iter().chain([&windows, &corrupt, &lr]).collect();
+            p.params.iter().chain([&windows, &corrupt, &lr]).collect();
         let mut out = multi.run(&inputs)?;
         let losses = to_vec_f32(&out[5])?;
         out.truncate(5);
-        self.params = out;
+        p.params = out;
         let dt = t0.elapsed();
         for &l in &losses {
             self.metrics.record_step(b, l, dt / k as u32);
         }
         Ok(losses)
     }
+}
+
+/// The unoptimized backend: fused dense update + per-row embedding scatter
+/// via one PJRT dispatch per gradient row.
+fn naive_step(
+    p: &mut PjrtEngine,
+    dims: &ModelDims,
+    windows: &Literal,
+    corrupt: &Literal,
+    lr: &Literal,
+) -> Result<f32> {
+    let inputs: Vec<&Literal> = p.params.iter().chain([windows, corrupt, lr]).collect();
+    let out = p.step_exe.run(&inputs)?;
+    // outputs: w1', b1', w2', b2', idx_all, delta_rows, loss
+    let idx_all = to_vec_i32(&out[4])?;
+    let delta_rows = to_vec_f32(&out[5])?;
+    let loss = to_scalar_f32(&out[6])?;
+    let d = dims.dim;
+
+    let row_exe = p.row_exe.as_ref().expect("naive backend has row_exe");
+    // Serialized per-row dispatch — Theano's Python loop. W stays
+    // device-resident (as Theano's shared variable did); each row still
+    // pays a host->device upload of its operands, a dispatch, a sync,
+    // and a device-side copy of E — the cost structure the paper
+    // measured at 4.6 ms per call (§4.2).
+    let mut e_buf = row_exe.to_device(&p.params[0])?;
+    for (r, &i) in idx_all.iter().enumerate() {
+        let idx1 = row_exe.upload_i32(&[i], &[1])?;
+        let row1 = row_exe.upload_f32(&delta_rows[r * d..(r + 1) * d], &[1, d])?;
+        e_buf = row_exe.run_b(&[&e_buf, &idx1, &row1])?;
+    }
+    p.params[0] = e_buf.to_literal_sync().context("downloading E")?;
+    for (slot, lit) in [(1usize, 0usize), (2, 1), (3, 2), (4, 3)] {
+        p.params[slot] = clone_literal(&out[lit])?;
+    }
+    Ok(loss)
+}
+
+/// One SGD step on the host engine.
+///
+/// Below the `[grad]` crossover (or with one thread) this is the plain
+/// serial `RefModel::train_step`. Above it, the batch is split across the
+/// scatter engine's pool: each thread accumulates a partial gradient on
+/// its sub-batch; the sparse embedding rows of all partials then stream —
+/// duplicates and all, since the Zipf head recurs in every sub-batch —
+/// through the sharded scatter-add, and the dense head merges through
+/// `grad::tree_reduce`.
+fn host_step(h: &mut HostEngine, batch: &Batch, lr: f32) -> Result<f32> {
+    // The host engine indexes the embedding table directly, so malformed
+    // batches must surface as errors here — the artifact backends get the
+    // same protection from literal/spec shape checks.
+    let b = batch.batch;
+    let c = h.params.window;
+    if batch.windows.len() != b * c || batch.corrupt.len() != b {
+        bail!(
+            "batch buffers inconsistent: {} window ids / {} corruptions for [{b}x{c}]",
+            batch.windows.len(),
+            batch.corrupt.len()
+        );
+    }
+    let vocab = h.params.vocab as i32;
+    if let Some(&bad) = batch
+        .windows
+        .iter()
+        .chain(batch.corrupt.iter())
+        .find(|&&i| i < 0 || i >= vocab)
+    {
+        bail!("batch contains token id {bad} outside vocab 0..{vocab}");
+    }
+    let updates = 2 * b * c; // pos + neg window rows per example
+    let threads = h.scatter.threads().min(b).max(1);
+    if threads == 1 || !h.scatter.use_sharded(updates) {
+        let mut model = RefModel::new(&h.params);
+        return Ok(model.train_step(&mut h.params, &batch.windows, &batch.corrupt, lr));
+    }
+
+    let chunk = b.div_ceil(threads);
+    let ranges: Vec<(usize, usize)> = (0..threads)
+        .map(|t| (t * chunk, ((t + 1) * chunk).min(b)))
+        .filter(|(lo, hi)| lo < hi)
+        .collect();
+    let scale = 1.0 / b as f32;
+    let slots: Vec<Mutex<Option<(f32, Grads)>>> =
+        ranges.iter().map(|_| Mutex::new(None)).collect();
+    {
+        let params = &h.params;
+        let windows = &batch.windows;
+        let corrupt = &batch.corrupt;
+        let ranges = &ranges;
+        let slots = &slots;
+        h.scatter.pool().scope_run(ranges.len(), &|t| {
+            let (lo, hi) = ranges[t];
+            let mut model = RefModel::new(params);
+            let out =
+                model.grads_scaled(params, &windows[lo * c..hi * c], &corrupt[lo..hi], scale);
+            *slots[t].lock().unwrap() = Some(out);
+        });
+    }
+
+    let mut total = 0.0f32;
+    let mut partials: Vec<Grads> = Vec::with_capacity(ranges.len());
+    for s in slots {
+        let (raw, g) = s.into_inner().unwrap().expect("gradient worker produced no output");
+        total += raw;
+        partials.push(g);
+    }
+
+    // Sparse embedding update: stream every partial's rows, pre-scaled by
+    // -lr, through the sharded scatter engine. Rows are sorted per
+    // partial so the stream — and with it the f32 accumulation order — is
+    // deterministic for a fixed thread count. Note the per-thread
+    // accumulators have already collapsed the Zipf head (a row recurs at
+    // most once per partial), so the plan's hot-row dedication rightly
+    // stays dormant here — it exists for raw duplicate-heavy streams
+    // (bench E11, external ScatterEngine users); this path gets plain
+    // owner-computes parallelism over a pre-flattened load.
+    let d = h.params.dim;
+    let mut idx: Vec<i32> = Vec::new();
+    let mut y: Vec<f32> = Vec::new();
+    for g in &mut partials {
+        g.e_rows.sort_unstable_by_key(|(id, _)| *id);
+        for (id, row) in &g.e_rows {
+            idx.push(*id as i32);
+            y.extend(row.iter().map(|v| -lr * v));
+        }
+        g.e_rows.clear();
+    }
+    h.scatter.scatter_add(&mut h.params.e, d, &idx, &y);
+
+    // Dense head: tree-reduce merge of the (now rows-free) partials, then
+    // one shared-rule application.
+    let merged =
+        tree_reduce(h.scatter.pool(), partials, merge_grads).expect("at least one partial");
+    merged.apply_dense(&mut h.params, lr);
+    Ok(total * scale)
 }
 
 /// Upload host params as the artifact calling convention's five literals.
@@ -272,5 +474,131 @@ pub fn clone_literal(l: &Literal) -> Result<Literal> {
         xla::ElementType::F32 => lit_f32(&l.to_vec::<f32>()?, &dims),
         xla::ElementType::S32 => lit_i32(&l.to_vec::<i32>()?, &dims),
         other => bail!("clone_literal: unsupported dtype {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Backend, Config, GradMode};
+    use crate::util::rng::Rng;
+
+    fn host_cfg(batch: usize, threads: usize, mode: GradMode) -> Config {
+        let mut cfg = Config::default();
+        cfg.training.backend = Backend::Host;
+        cfg.training.batch = batch;
+        cfg.training.lr = 0.1;
+        cfg.model.vocab = 512;
+        cfg.model.dim = 8;
+        cfg.model.hidden = 8;
+        cfg.grad.threads = threads;
+        cfg.grad.mode = mode;
+        cfg.grad.crossover_rows = 0;
+        cfg
+    }
+
+    fn random_batch(rng: &mut Rng, b: usize, c: usize, vocab: usize) -> Batch {
+        Batch {
+            windows: (0..b * c).map(|_| rng.below(vocab as u64) as i32).collect(),
+            corrupt: (0..b).map(|_| rng.below(vocab as u64) as i32).collect(),
+            batch: b,
+            window: c,
+        }
+    }
+
+    #[test]
+    fn host_parallel_step_matches_serial_reference() {
+        for threads in [2usize, 8] {
+            let cfg = host_cfg(32, threads, GradMode::Sharded);
+            let mut tr = Trainer::new(None, &cfg, ModelSize::Main).unwrap();
+            let p0 = ModelParams::init(512, 8, 5, 8, 77);
+            tr.set_params(&p0).unwrap();
+            let mut rng = Rng::new(5);
+            let batch = random_batch(&mut rng, 32, 5, 512);
+
+            let mut p_ref = p0.clone();
+            let mut model = RefModel::new(&p_ref);
+            let loss_ref =
+                model.train_step(&mut p_ref, &batch.windows, &batch.corrupt, 0.1);
+
+            let loss = tr.step(&batch).unwrap();
+            assert!(
+                (loss - loss_ref).abs() < 1e-5,
+                "threads {threads}: loss {loss} vs {loss_ref}"
+            );
+            let p = tr.params_host().unwrap();
+            let max_e = p
+                .e
+                .iter()
+                .zip(&p_ref.e)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_e < 1e-5, "threads {threads}: embeddings diverge by {max_e}");
+            let max_w1 = p
+                .w1
+                .iter()
+                .zip(&p_ref.w1)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_w1 < 1e-5, "threads {threads}: w1 diverges by {max_w1}");
+        }
+    }
+
+    #[test]
+    fn host_training_is_deterministic_for_fixed_threads() {
+        let run = || {
+            let cfg = host_cfg(16, 4, GradMode::Sharded);
+            let mut tr = Trainer::new(None, &cfg, ModelSize::Main).unwrap();
+            let mut rng = Rng::new(9);
+            for _ in 0..10 {
+                let batch = random_batch(&mut rng, 16, 5, 512);
+                tr.step(&batch).unwrap();
+            }
+            tr.params_host().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.e, b.e);
+        assert_eq!(a.w1, b.w1);
+    }
+
+    #[test]
+    fn host_rejects_wrong_batch_shape() {
+        let cfg = host_cfg(16, 2, GradMode::Auto);
+        let mut tr = Trainer::new(None, &cfg, ModelSize::Main).unwrap();
+        let mut rng = Rng::new(2);
+        let bad = random_batch(&mut rng, 8, 5, 512);
+        assert!(tr.step(&bad).is_err());
+    }
+
+    #[test]
+    fn host_rejects_out_of_range_token_ids() {
+        // vocab is 512 in host_cfg; ids at/above it must error, not panic
+        let cfg = host_cfg(4, 2, GradMode::Auto);
+        let mut tr = Trainer::new(None, &cfg, ModelSize::Main).unwrap();
+        let bad = Batch { windows: vec![600; 4 * 5], corrupt: vec![1; 4], batch: 4, window: 5 };
+        assert!(tr.step(&bad).is_err());
+        let neg = Batch { windows: vec![1; 4 * 5], corrupt: vec![-2; 4], batch: 4, window: 5 };
+        assert!(tr.step(&neg).is_err());
+    }
+
+    #[test]
+    fn artifact_backend_without_runtime_errors() {
+        let mut cfg = Config::default();
+        cfg.training.backend = Backend::GpuOpt;
+        let err = Trainer::new(None, &cfg, ModelSize::Main).unwrap_err();
+        assert!(format!("{err:#}").contains("needs a runtime"));
+    }
+
+    #[test]
+    fn host_step_fused_runs_sequentially() {
+        let cfg = host_cfg(8, 2, GradMode::Auto);
+        let mut tr = Trainer::new(None, &cfg, ModelSize::Main).unwrap();
+        let mut rng = Rng::new(3);
+        let batches: Vec<Batch> = (0..4).map(|_| random_batch(&mut rng, 8, 5, 512)).collect();
+        let losses = tr.step_fused(&batches).unwrap();
+        assert_eq!(losses.len(), 4);
+        assert_eq!(tr.metrics.steps, 4);
+        assert_eq!(tr.dispatches_per_step(), 0);
     }
 }

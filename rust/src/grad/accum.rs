@@ -1,0 +1,136 @@
+//! Per-thread gradient accumulators and the parallel tree-reduce merge.
+//!
+//! The host training engine splits a batch across threads; each thread
+//! accumulates a partial `Grads` (sparse over embedding rows, dense for
+//! the head) on its sub-batch, and the partials are merged pairwise in
+//! parallel over the pool. The tree shape depends only on the partial
+//! count, so for a fixed (seed, thread count) the merged gradient — and
+//! therefore the whole host training run — is deterministic.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::baselines::model_ref::Grads;
+use crate::util::threadpool::ThreadPool;
+
+/// Merge two partial gradient sums (`a + b`). Dense tensors add
+/// elementwise; sparse embedding rows union with per-row vector adds.
+pub fn merge_grads(mut a: Grads, b: Grads) -> Grads {
+    debug_assert_eq!(a.w1.len(), b.w1.len());
+    for (x, y) in a.w1.iter_mut().zip(&b.w1) {
+        *x += *y;
+    }
+    for (x, y) in a.b1.iter_mut().zip(&b.b1) {
+        *x += *y;
+    }
+    for (x, y) in a.w2.iter_mut().zip(&b.w2) {
+        *x += *y;
+    }
+    a.b2 += b.b2;
+
+    let mut index: HashMap<usize, usize> =
+        a.e_rows.iter().enumerate().map(|(pos, (id, _))| (*id, pos)).collect();
+    for (id, row) in b.e_rows {
+        match index.get(&id) {
+            Some(&pos) => {
+                for (x, y) in a.e_rows[pos].1.iter_mut().zip(&row) {
+                    *x += *y;
+                }
+            }
+            None => {
+                index.insert(id, a.e_rows.len());
+                a.e_rows.push((id, row));
+            }
+        }
+    }
+    a
+}
+
+/// Pairwise parallel reduction over the pool: level k merges pairs of
+/// level k-1 survivors concurrently, odd elements carry over. Returns
+/// `None` for empty input. Deterministic for a fixed input order.
+pub fn tree_reduce<T, F>(pool: &ThreadPool, items: Vec<T>, merge: F) -> Option<T>
+where
+    T: Send,
+    F: Fn(T, T) -> T + Sync,
+{
+    let mut level: Vec<T> = items;
+    while level.len() > 1 {
+        let n = level.len();
+        let pairs = n / 2;
+        let carry = n % 2 == 1;
+        let mut src: Vec<Mutex<Option<T>>> =
+            level.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let out: Vec<Mutex<Option<T>>> = (0..pairs).map(|_| Mutex::new(None)).collect();
+        pool.scope_run(pairs, &|p| {
+            let a = src[2 * p].lock().unwrap().take().expect("pair slot a");
+            let b = src[2 * p + 1].lock().unwrap().take().expect("pair slot b");
+            *out[p].lock().unwrap() = Some(merge(a, b));
+        });
+        let mut next: Vec<T> = out
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("merge result"))
+            .collect();
+        if carry {
+            next.push(src.pop().unwrap().into_inner().unwrap().expect("carry slot"));
+        }
+        level = next;
+    }
+    level.pop()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grads(rows: &[(usize, f32)], dense: f32, width: usize) -> Grads {
+        Grads {
+            e_rows: rows.iter().map(|&(id, v)| (id, vec![v; 2])).collect(),
+            w1: vec![dense; width],
+            b1: vec![dense; 2],
+            w2: vec![dense; 2],
+            b2: dense,
+        }
+    }
+
+    #[test]
+    fn merge_unions_rows_and_adds_dense() {
+        let a = grads(&[(1, 1.0), (4, 2.0)], 0.5, 4);
+        let b = grads(&[(4, 3.0), (9, 1.5)], 0.25, 4);
+        let m = merge_grads(a, b);
+        assert_eq!(m.e_rows.len(), 3);
+        let get = |id: usize| {
+            m.e_rows.iter().find(|(i, _)| *i == id).map(|(_, v)| v[0]).unwrap()
+        };
+        assert_eq!(get(1), 1.0);
+        assert_eq!(get(4), 5.0);
+        assert_eq!(get(9), 1.5);
+        assert!(m.w1.iter().all(|&x| x == 0.75));
+        assert_eq!(m.b2, 0.75);
+    }
+
+    #[test]
+    fn tree_reduce_sums_any_size() {
+        let pool = ThreadPool::new(4);
+        for n in [0usize, 1, 2, 3, 7, 8, 13, 64] {
+            let items: Vec<u64> = (1..=n as u64).collect();
+            let got = tree_reduce(&pool, items, |a, b| a + b);
+            if n == 0 {
+                assert!(got.is_none());
+            } else {
+                assert_eq!(got.unwrap(), (n as u64) * (n as u64 + 1) / 2, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_deterministic_shape() {
+        // Merge order is a function of item count, not scheduling: string
+        // concatenation (non-commutative) must come out identical.
+        let pool = ThreadPool::new(8);
+        let mk = || (0..11).map(|i| i.to_string()).collect::<Vec<String>>();
+        let a = tree_reduce(&pool, mk(), |x, y| format!("({x}{y})")).unwrap();
+        let b = tree_reduce(&pool, mk(), |x, y| format!("({x}{y})")).unwrap();
+        assert_eq!(a, b);
+    }
+}

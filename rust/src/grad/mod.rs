@@ -1,0 +1,37 @@
+//! Parallel, sharded scatter-add gradient subsystem.
+//!
+//! The paper's headline optimization is replacing Theano's per-row
+//! `AdvancedIncSubtensor1` embedding update with one batched scatter — and
+//! its batch-size finding is that the win only materializes once a batch
+//! carries enough rows to amortize the fixed costs. This module is the
+//! host-side analogue of that story, in three pieces:
+//!
+//! * [`plan`] — a Zipf-aware shard plan: the duplicate-heavy head of the
+//!   row distribution (a few frequent words dominate the updates, exactly
+//!   the skew `corpus::zipf` synthesizes) gets **dedicated shards**, the
+//!   long tail is hashed across the rest. Every row maps to exactly one
+//!   shard, so owner-computes application needs no atomics and applies a
+//!   given row's updates in stream order — making the parallel result
+//!   **bitwise identical** to the serial reference.
+//! * [`sharded`] — the [`ScatterEngine`]: a persistent worker pool with a
+//!   batch-size-adaptive strategy switch (serial below the configured
+//!   crossover, sharded-parallel at or above it — reproducing the paper's
+//!   "wins only at sufficiently large batch" shape on host threads).
+//! * [`accum`] — per-thread gradient accumulators for the host training
+//!   engine: partial `Grads` are computed on disjoint sub-batches, the
+//!   dense head combines with a parallel pairwise [`accum::tree_reduce`]
+//!   merge over `util::threadpool`, and the sparse embedding rows of all
+//!   partials stream (duplicates included) through the sharded
+//!   scatter-add above.
+//!
+//! `coordinator::trainer` drives all three for the `host` backend;
+//! `benches/paper_benches.rs` (E11) sweeps serial vs sharded over batch ×
+//! vocab and records the measured crossover in `BENCH_scatter.json`.
+
+pub mod accum;
+pub mod plan;
+pub mod sharded;
+
+pub use accum::{merge_grads, tree_reduce};
+pub use plan::ShardPlan;
+pub use sharded::{resolve_threads, ScatterEngine};

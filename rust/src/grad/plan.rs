@@ -1,0 +1,190 @@
+//! Zipf-aware vocabulary shard plan for scatter-add.
+//!
+//! A plan partitions the *update stream* (positions `0..idx.len()`) into
+//! per-shard work lists such that all updates targeting a given
+//! destination row land in the same shard, in stream order. Two
+//! consequences:
+//!
+//! 1. Shards own disjoint destination rows — threads never race, no
+//!    atomics (the conflict-avoidance the paper's CUDA kernel bought with
+//!    `atomicAdd`).
+//! 2. Per-row update order matches the serial loop, so the sharded result
+//!    is bitwise identical to `baselines::scatter::scatter_add_serial`.
+//!
+//! Under a Zipf-skewed stream a plain `hash(row) % shards` split is
+//! pathological: the head word's updates all hash to one shard and that
+//! thread serializes most of the batch. The plan therefore pins each
+//! sufficiently-hot row to one of a reserved set of **dedicated shards**
+//! (up to half the shard count), and hashes only the long tail across the
+//! remaining shards.
+
+use std::collections::HashMap;
+
+/// A partition of scatter updates into owner shards.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Per-shard ascending lists of update positions into the idx stream.
+    pub shards: Vec<Vec<u32>>,
+    /// Rows that received dedicated-shard treatment this batch (the Zipf
+    /// head), most frequent first. Diagnostics and tests.
+    pub hot: Vec<i32>,
+}
+
+impl ShardPlan {
+    /// Build a plan for `idx` over `shards` owner shards, pinning up to
+    /// `hot_budget` frequent rows to dedicated shards.
+    pub fn build(idx: &[i32], shards: usize, hot_budget: usize) -> ShardPlan {
+        let n = shards.max(1);
+        if n == 1 {
+            return ShardPlan { shards: vec![(0..idx.len() as u32).collect()], hot: Vec::new() };
+        }
+
+        // Histogram of touched rows (sparse: touched rows <= idx.len()).
+        let mut counts: HashMap<i32, u32> = HashMap::new();
+        for &i in idx {
+            *counts.entry(i).or_insert(0) += 1;
+        }
+
+        // A row is hot once hashing it with the tail would meaningfully
+        // unbalance a shard: count >= a quarter of one shard's fair share
+        // of the stream. (The Zipf-Mandelbrot head word carries ~5-7% of
+        // a natural stream — well above this, far below a full share.)
+        let threshold = (idx.len() / (4 * n)).max(4) as u32;
+        let mut hot: Vec<(i32, u32)> = counts
+            .iter()
+            .filter(|&(_, &c)| c >= threshold)
+            .map(|(&i, &c)| (i, c))
+            .collect();
+        // Deterministic: by count descending, row id as tie-break.
+        hot.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        hot.truncate(hot_budget);
+
+        // Reserve up to half the shards exclusively for the hot head.
+        let reserved = hot.len().min(n / 2);
+        let hot_shard: HashMap<i32, usize> = if reserved == 0 {
+            HashMap::new()
+        } else {
+            hot.iter().enumerate().map(|(k, &(row, _))| (row, k % reserved)).collect()
+        };
+        let cold_shards = n - reserved;
+
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (r, &i) in idx.iter().enumerate() {
+            let s = match hot_shard.get(&i) {
+                Some(&k) => k,
+                None => reserved + (hash_row(i) as usize % cold_shards),
+            };
+            out[s].push(r as u32);
+        }
+        ShardPlan { shards: out, hot: hot.into_iter().map(|(i, _)| i).collect() }
+    }
+
+    /// Total updates covered by the plan.
+    pub fn updates(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+}
+
+fn hash_row(i: i32) -> u64 {
+    // Multiplicative (Fibonacci) hash — cheap and good enough to spread a
+    // de-skewed tail.
+    ((i as u32 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)) >> 17
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::zipf::Zipf;
+    use crate::util::rng::Rng;
+
+    fn zipf_stream(rows: usize, vocab: usize, seed: u64) -> Vec<i32> {
+        let z = Zipf::classic(vocab);
+        let mut rng = Rng::new(seed);
+        (0..rows).map(|_| z.sample(&mut rng) as i32).collect()
+    }
+
+    fn owner_of(plan: &ShardPlan, idx: &[i32]) -> HashMap<i32, usize> {
+        let mut owner = HashMap::new();
+        for (s, list) in plan.shards.iter().enumerate() {
+            for &r in list {
+                let row = idx[r as usize];
+                let prev = owner.insert(row, s);
+                if let Some(p) = prev {
+                    assert_eq!(p, s, "row {row} owned by shards {p} and {s}");
+                }
+            }
+        }
+        owner
+    }
+
+    #[test]
+    fn partition_is_exact_and_ordered() {
+        let idx = zipf_stream(5000, 300, 1);
+        let plan = ShardPlan::build(&idx, 8, 16);
+        assert_eq!(plan.shards.len(), 8);
+        assert_eq!(plan.updates(), idx.len());
+        let mut seen = vec![false; idx.len()];
+        for list in &plan.shards {
+            for w in list.windows(2) {
+                assert!(w[0] < w[1], "shard list not ascending");
+            }
+            for &r in list {
+                assert!(!seen[r as usize], "update {r} assigned twice");
+                seen[r as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        owner_of(&plan, &idx); // asserts single ownership per row
+    }
+
+    #[test]
+    fn hot_head_gets_dedicated_shards() {
+        // Zipf head: rank 0 dominates; it must be pinned, and its shard
+        // must hold no hashed tail rows.
+        let idx = zipf_stream(8000, 500, 2);
+        let plan = ShardPlan::build(&idx, 8, 8);
+        assert!(!plan.hot.is_empty(), "zipf stream produced no hot rows");
+        let owner = owner_of(&plan, &idx);
+        let reserved = plan.hot.len().min(4);
+        for row in &plan.hot {
+            assert!(owner[row] < reserved, "hot row {row} not in a dedicated shard");
+        }
+        for (&row, &s) in &owner {
+            if !plan.hot.contains(&row) {
+                assert!(s >= reserved, "cold row {row} landed in dedicated shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_under_skew() {
+        // With the head pinned, no shard should carry the majority of a
+        // heavily-skewed stream.
+        let idx = zipf_stream(20_000, 2000, 3);
+        let plan = ShardPlan::build(&idx, 8, 16);
+        let max = plan.shards.iter().map(|s| s.len()).max().unwrap();
+        assert!(
+            max < idx.len() / 2,
+            "one shard owns {max} of {} updates",
+            idx.len()
+        );
+    }
+
+    #[test]
+    fn single_shard_and_empty_stream() {
+        let plan = ShardPlan::build(&[5, 5, 7], 1, 4);
+        assert_eq!(plan.shards.len(), 1);
+        assert_eq!(plan.shards[0], vec![0, 1, 2]);
+        let empty = ShardPlan::build(&[], 4, 4);
+        assert_eq!(empty.updates(), 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let idx = zipf_stream(3000, 400, 9);
+        let a = ShardPlan::build(&idx, 6, 8);
+        let b = ShardPlan::build(&idx, 6, 8);
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.hot, b.hot);
+    }
+}

@@ -1,0 +1,176 @@
+//! The scatter engine: owner-computes parallel scatter-add with a
+//! batch-size-adaptive strategy switch.
+//!
+//! Semantics are those of the serial reference (`w[idx[r]] += y[r]` for
+//! `r` in stream order): because the plan gives every destination row a
+//! single owner shard and each shard walks its work list in stream order,
+//! the sharded result is **bitwise identical** to the serial loop — the
+//! property `tests/grad_equivalence.rs` asserts exactly.
+//!
+//! Strategy switch: below the configured crossover (update count) the
+//! engine runs the serial loop — plan construction and fan-out cost more
+//! than they save on small batches, reproducing the paper's finding that
+//! the batched scatter only wins "for sufficiently large batch sizes".
+
+use crate::config::{GradCfg, GradMode};
+use crate::util::threadpool::ThreadPool;
+
+use super::plan::ShardPlan;
+
+/// Resolve a configured thread count (0 = all available cores).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+struct SendPtr(*mut f32);
+// SAFETY: shared across pool tasks that write disjoint destination rows
+// (guaranteed by the shard plan / uniqueness checks at the call sites).
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Persistent worker pool + strategy policy for scatter-add workloads.
+pub struct ScatterEngine {
+    pool: ThreadPool,
+    threads: usize,
+    mode: GradMode,
+    crossover_rows: usize,
+    hot_rows: usize,
+}
+
+impl ScatterEngine {
+    pub fn new(cfg: &GradCfg) -> ScatterEngine {
+        let threads = resolve_threads(cfg.threads);
+        ScatterEngine {
+            pool: ThreadPool::new(threads.max(1)),
+            threads,
+            mode: cfg.mode,
+            crossover_rows: cfg.crossover_rows,
+            hot_rows: cfg.hot_rows,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The engine's pool — shared with the host trainer's gradient fan-out.
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// Would a stream of `updates` rows run sharded-parallel under the
+    /// configured policy? (Pure — tests probe the crossover through this.)
+    pub fn use_sharded(&self, updates: usize) -> bool {
+        if self.threads <= 1 {
+            return false;
+        }
+        match self.mode {
+            GradMode::Serial => false,
+            GradMode::Sharded => true,
+            GradMode::Auto => updates >= self.crossover_rows,
+        }
+    }
+
+    /// `w[idx[r]] += y[r]` for every update `r`, duplicates accumulated in
+    /// stream order. Dispatches serial or sharded per policy.
+    pub fn scatter_add(&self, w: &mut [f32], d: usize, idx: &[i32], y: &[f32]) {
+        if self.use_sharded(idx.len()) {
+            let plan = ShardPlan::build(idx, self.threads, self.hot_rows);
+            scatter_add_sharded(w, d, idx, y, &plan, &self.pool);
+        } else {
+            crate::baselines::scatter::scatter_add_serial(w, d, idx, y);
+        }
+    }
+
+}
+
+/// Owner-computes application of a prebuilt [`ShardPlan`].
+pub fn scatter_add_sharded(
+    w: &mut [f32],
+    d: usize,
+    idx: &[i32],
+    y: &[f32],
+    plan: &ShardPlan,
+    pool: &ThreadPool,
+) {
+    assert_eq!(y.len(), idx.len() * d);
+    assert!(d > 0 && w.len() % d == 0);
+    assert_eq!(plan.updates(), idx.len(), "plan does not cover the update stream");
+    let v = w.len() / d;
+    // Bounds-check the whole stream before any raw-pointer write (the
+    // serial baseline's per-row assert, hoisted for soundness).
+    for &i in idx {
+        assert!((i as usize) < v, "index {i} out of range {v}");
+    }
+    let wp = SendPtr(w.as_mut_ptr());
+    pool.scope_run(plan.shards.len(), &|t| {
+        let base = wp.0;
+        for &r in &plan.shards[t] {
+            let r = r as usize;
+            let i = idx[r] as usize;
+            // SAFETY: the plan assigns every destination row to exactly
+            // one shard, so writes from different tasks never alias; ids
+            // were bounds-checked above.
+            unsafe {
+                let dst = std::slice::from_raw_parts_mut(base.add(i * d), d);
+                let src = &y[r * d..(r + 1) * d];
+                for (a, b) in dst.iter_mut().zip(src) {
+                    *a += *b;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::scatter::scatter_add_serial;
+    use crate::util::rng::Rng;
+
+    fn cfg(mode: GradMode, threads: usize, crossover: usize) -> GradCfg {
+        GradCfg { mode, threads, crossover_rows: crossover, hot_rows: 8 }
+    }
+
+    fn inputs(v: usize, d: usize, r: usize, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..v * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let idx: Vec<i32> = (0..r).map(|_| rng.below(v as u64) as i32).collect();
+        let y: Vec<f32> = (0..r * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        (w, idx, y)
+    }
+
+    #[test]
+    fn sharded_is_bitwise_serial() {
+        let (w0, idx, y) = inputs(200, 8, 2000, 42);
+        let engine = ScatterEngine::new(&cfg(GradMode::Sharded, 4, 0));
+        let mut a = w0.clone();
+        let mut b = w0;
+        scatter_add_serial(&mut a, 8, &idx, &y);
+        engine.scatter_add(&mut b, 8, &idx, &y);
+        assert_eq!(a, b, "sharded scatter must be bitwise-identical to serial");
+    }
+
+    #[test]
+    fn auto_switches_at_crossover() {
+        let engine = ScatterEngine::new(&cfg(GradMode::Auto, 4, 1000));
+        assert!(!engine.use_sharded(999));
+        assert!(engine.use_sharded(1000));
+        let serial = ScatterEngine::new(&cfg(GradMode::Serial, 4, 0));
+        assert!(!serial.use_sharded(1 << 20));
+        let one_thread = ScatterEngine::new(&cfg(GradMode::Sharded, 1, 0));
+        assert!(!one_thread.use_sharded(1 << 20));
+    }
+
+    #[test]
+    #[should_panic]
+    fn sharded_out_of_range_panics() {
+        let engine = ScatterEngine::new(&cfg(GradMode::Sharded, 2, 0));
+        let mut w = vec![0.0f32; 8];
+        engine.scatter_add(&mut w, 2, &[9], &[1.0, 1.0]);
+    }
+}

@@ -25,6 +25,7 @@ pub mod devicemodel;
 pub mod distributed;
 pub mod embeddings;
 pub mod eval;
+pub mod grad;
 pub mod hpca;
 pub mod profiler;
 pub mod runtime;

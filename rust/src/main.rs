@@ -33,7 +33,7 @@ fn cli() -> Cli {
                 flags: vec![
                     common(),
                     FlagSpec { name: "steps", help: "SGD steps", default: Some("500") },
-                    FlagSpec { name: "backend", help: "cpu | gpu-naive | gpu-opt", default: Some("gpu-opt") },
+                    FlagSpec { name: "backend", help: "cpu | gpu-naive | gpu-opt | host", default: Some("gpu-opt") },
                     FlagSpec { name: "batch", help: "batch size (16..512)", default: Some("16") },
                     FlagSpec { name: "out", help: "checkpoint output path", default: Some("checkpoints/model.pgck") },
                 ],
@@ -167,7 +167,14 @@ fn cmd_train(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()>
     cfg.training.steps = inv.get_usize("steps")?;
     cfg.training.backend = Backend::parse(inv.get("backend").unwrap())?;
     cfg.training.batch = inv.get_usize("batch")?;
-    let rt = runtime(&cfg)?;
+    // The host backend trains without artifacts and sizes its embedding
+    // table from cfg.model, so its vocab cap must come from the config —
+    // not from whatever manifest happens to be on disk.
+    let rt = if cfg.training.backend.needs_artifacts() {
+        Some(runtime(&cfg)?)
+    } else {
+        None
+    };
     println!(
         "[train] backend={} batch={} steps={} (artifacts: {})",
         cfg.training.backend.name(),
@@ -175,10 +182,14 @@ fn cmd_train(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()>
         cfg.training.steps,
         cfg.runtime.artifacts_dir
     );
-    let corpus = coordinator::prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
+    let vocab_cap = match &rt {
+        Some(r) => r.manifest.main_model.vocab,
+        None => cfg.model.vocab,
+    };
+    let corpus = coordinator::prepare_corpus(&cfg, vocab_cap)?;
     println!("[train] corpus: {} tokens, vocab {}", corpus.tokens, corpus.vocab.len());
     let opts = RunOptions { steps: cfg.training.steps, ..RunOptions::default() };
-    let (trainer, report) = coordinator::run_training(&rt, &cfg, &corpus, &opts)?;
+    let (trainer, report) = coordinator::run_training(rt.as_ref(), &cfg, &corpus, &opts)?;
     println!(
         "[train] done: {} steps, {} examples in {} — mean rate {:.1} ex/s (σ = {:.1}), final loss {:.4}",
         report.steps,
@@ -230,7 +241,7 @@ fn cmd_profile(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<(
     let rt = runtime(&cfg)?;
     let corpus = coordinator::prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
     let opts = RunOptions { steps, quiet: true, ..RunOptions::default() };
-    let (_trainer, report) = coordinator::run_training(&rt, &cfg, &corpus, &opts)?;
+    let (_trainer, report) = coordinator::run_training(Some(&rt), &cfg, &corpus, &opts)?;
 
     let mut prof = Profiler::new();
     for (name, calls, total) in rt.dispatch_stats() {
@@ -304,7 +315,7 @@ fn cmd_nvprof(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()
     let rt = runtime(&cfg)?;
     let corpus = coordinator::prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
     let opts = RunOptions { steps, quiet: true, ..RunOptions::default() };
-    let (trainer, report) = coordinator::run_training(&rt, &cfg, &corpus, &opts)?;
+    let (trainer, report) = coordinator::run_training(Some(&rt), &cfg, &corpus, &opts)?;
     let dims = trainer.dims.clone();
 
     let mut stream = OpStream::new();
@@ -342,7 +353,7 @@ fn cmd_sweep(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()>
     for batch in rt.manifest.batches_for("train_step", Some("opt")) {
         cfg.training.batch = batch;
         let opts = RunOptions { steps, quiet: true, ..RunOptions::default() };
-        let (_tr, report) = coordinator::run_training(&rt, &cfg, &corpus, &opts)?;
+        let (_tr, report) = coordinator::run_training(Some(&rt), &cfg, &corpus, &opts)?;
         t.row(&[
             batch.to_string(),
             format!("{:.1}", report.rate_mean),

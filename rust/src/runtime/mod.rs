@@ -52,6 +52,26 @@ impl Runtime {
         self.cache.borrow().len()
     }
 
+    /// Can this build actually *execute* artifacts? `Err` carries the
+    /// probe failure, letting callers distinguish the vendored xla API
+    /// stub (whose message names the backend as unavailable) from
+    /// genuinely broken artifacts — tests skip on the former and fail
+    /// loudly on the latter.
+    pub fn check_execution(&self) -> Result<()> {
+        let first = self
+            .manifest
+            .artifacts
+            .first()
+            .context("manifest lists no artifacts")?;
+        let name = first.name.clone();
+        self.load(&name).map(|_| ())
+    }
+
+    /// Boolean convenience over [`Runtime::check_execution`].
+    pub fn can_execute(&self) -> bool {
+        self.check_execution().is_ok()
+    }
+
     /// Per-executable (name, calls, total_time) accounting — feeds the
     /// profiler's Table-1-style report.
     pub fn dispatch_stats(&self) -> Vec<(String, u64, std::time::Duration)> {

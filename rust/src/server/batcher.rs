@@ -1,10 +1,17 @@
 //! Dynamic request batching for the scoring path.
 //!
-//! Concurrent SCORE requests are coalesced into one `forward_b{B}`
-//! dispatch: the executor waits up to `max_wait_ms` for up to `max_batch`
-//! requests, pads the tail of the batch with `<PAD>` windows, executes,
-//! and fans the scores back out. Classic dynamic batching — latency is
-//! bounded by the wait budget, throughput grows with concurrency.
+//! Concurrent SCORE requests are coalesced into one dispatch: the executor
+//! waits up to `max_wait_ms` for up to `max_batch` requests, executes, and
+//! fans the scores back out. Classic dynamic batching — latency is bounded
+//! by the wait budget, throughput grows with concurrency.
+//!
+//! Two scoring engines sit behind the same batching loop:
+//!
+//! * **PJRT** — pads the batch to a `forward_b{B}` artifact and executes
+//!   it (one device dispatch per coalesced batch).
+//! * **Host** — `baselines::RefModel` scoring on the checkpoint
+//!   parameters. Selected automatically when artifacts or the PJRT
+//!   backend are unavailable, so `polyglot serve` works on any build.
 
 use std::path::Path;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -12,7 +19,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::baselines::model_ref::ModelParams;
+use crate::baselines::model_ref::{ModelParams, RefModel};
 use crate::config::ServerCfg;
 use crate::coordinator::upload_params;
 use crate::runtime::{lit_i32, to_vec_f32, Executable, Runtime};
@@ -24,10 +31,26 @@ pub struct ScoreRequest {
     pub reply: Sender<Response>,
 }
 
+enum Scorer {
+    Pjrt {
+        // SAFETY of lifetime: exe borrows client state inside rt; keep rt
+        // boxed alongside for the executor's lifetime.
+        _rt: Box<Runtime>,
+        exe: std::rc::Rc<Executable>,
+        params: Vec<xla::Literal>,
+    },
+    Host {
+        params: ModelParams,
+        /// Reusable forward-pass scratch (RefModel exists to avoid
+        /// per-call allocation; keep one for the serving hot path).
+        model: RefModel,
+    },
+}
+
 pub struct BatchExecutor {
-    _rt: Box<Runtime>,
-    exe: std::rc::Rc<Executable>,
-    params: Vec<xla::Literal>,
+    scorer: Scorer,
+    /// Batch the backing engine executes (artifact batch for PJRT; the
+    /// configured max for the host engine).
     pub artifact_batch: usize,
     window: usize,
     max_batch: usize,
@@ -36,6 +59,36 @@ pub struct BatchExecutor {
 
 impl BatchExecutor {
     pub fn new(artifacts_dir: &Path, cfg: &ServerCfg, params: ModelParams) -> Result<Self> {
+        let window = params.window;
+        match Self::try_pjrt(artifacts_dir, cfg, &params) {
+            Ok((scorer, artifact_batch)) => Ok(BatchExecutor {
+                scorer,
+                artifact_batch,
+                window,
+                max_batch: cfg.max_batch.min(artifact_batch).max(1),
+                max_wait: Duration::from_millis(cfg.max_wait_ms),
+            }),
+            Err(e) => {
+                eprintln!(
+                    "[server] PJRT scoring unavailable ({e:#}); serving with the host model"
+                );
+                let model = RefModel::new(&params);
+                Ok(BatchExecutor {
+                    scorer: Scorer::Host { params, model },
+                    artifact_batch: cfg.max_batch.max(1),
+                    window,
+                    max_batch: cfg.max_batch.max(1),
+                    max_wait: Duration::from_millis(cfg.max_wait_ms),
+                })
+            }
+        }
+    }
+
+    fn try_pjrt(
+        artifacts_dir: &Path,
+        cfg: &ServerCfg,
+        params: &ModelParams,
+    ) -> Result<(Scorer, usize)> {
         let rt = Box::new(Runtime::new(artifacts_dir)?);
         // pick the smallest forward artifact that covers max_batch
         let mut batches = rt.manifest.batches_for("forward", None);
@@ -47,25 +100,14 @@ impl BatchExecutor {
             .or_else(|| batches.last().copied())
             .context("no forward artifacts in manifest")?;
         let name = format!("forward_b{artifact_batch}");
-        // SAFETY of lifetime: exe borrows client Rc inside rt; keep rt boxed
-        // alongside for the executor's lifetime.
         let exe = rt.load(&name)?;
-        let window = params.window;
-        let lits = upload_params(&params)?;
-        Ok(BatchExecutor {
-            _rt: rt,
-            exe,
-            params: lits,
-            artifact_batch,
-            window,
-            max_batch: cfg.max_batch.min(artifact_batch),
-            max_wait: Duration::from_millis(cfg.max_wait_ms),
-        })
+        let lits = upload_params(params)?;
+        Ok((Scorer::Pjrt { _rt: rt, exe, params: lits }, artifact_batch))
     }
 
     /// Collect up to `max_batch` requests (waiting at most `max_wait` after
-    /// the first), execute one padded dispatch, reply. Returns the number
-    /// of requests served (0 on idle timeout).
+    /// the first), execute one dispatch, reply. Returns the number of
+    /// requests served (0 on idle timeout).
     pub fn run_once(&mut self, rx: &Receiver<ScoreRequest>) -> Result<usize> {
         // block briefly for the first request so the loop can poll stop flags
         let first = match rx.recv_timeout(Duration::from_millis(20)) {
@@ -74,29 +116,55 @@ impl BatchExecutor {
             Err(RecvTimeoutError::Disconnected) => return Ok(0),
         };
         let mut reqs = vec![first];
-        let deadline = Instant::now() + self.max_wait;
-        while reqs.len() < self.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => reqs.push(r),
-                Err(_) => break,
+        // Coalescing only pays when it amortizes a device dispatch; the
+        // host scorer answers per-request, so it skips the wait instead of
+        // taxing every lone request with max_wait_ms of latency.
+        if matches!(self.scorer, Scorer::Pjrt { .. }) {
+            let deadline = Instant::now() + self.max_wait;
+            while reqs.len() < self.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => reqs.push(r),
+                    Err(_) => break,
+                }
             }
         }
         let n = reqs.len();
-        let b = self.artifact_batch;
-        let mut flat = vec![0i32; b * self.window]; // PAD = 0 padding
-        for (i, r) in reqs.iter().enumerate() {
-            flat[i * self.window..(i + 1) * self.window].copy_from_slice(&r.window);
-        }
-        let windows = lit_i32(&flat, &[b, self.window])?;
-        let inputs: Vec<&xla::Literal> = self.params.iter().chain([&windows]).collect();
-        let out = self.exe.run(&inputs)?;
-        let scores = to_vec_f32(&out[0])?;
-        for (i, r) in reqs.into_iter().enumerate() {
-            let _ = r.reply.send(Response::Score(scores[i]));
+        match &mut self.scorer {
+            Scorer::Pjrt { exe, params, .. } => {
+                // XLA's gather clamps out-of-range ids, so the padded
+                // batch dispatch is safe as-is.
+                let b = self.artifact_batch;
+                let mut flat = vec![0i32; b * self.window]; // PAD = 0 padding
+                for (i, r) in reqs.iter().enumerate() {
+                    flat[i * self.window..(i + 1) * self.window].copy_from_slice(&r.window);
+                }
+                let windows = lit_i32(&flat, &[b, self.window])?;
+                let inputs: Vec<&xla::Literal> = params.iter().chain([&windows]).collect();
+                let out = exe.run(&inputs)?;
+                let scores = to_vec_f32(&out[0])?;
+                for (i, r) in reqs.into_iter().enumerate() {
+                    let _ = r.reply.send(Response::Score(scores[i]));
+                }
+            }
+            Scorer::Host { params, model } => {
+                // The host model indexes the embedding table directly, so
+                // ids must be validated here (the protocol layer only
+                // rejects negatives) — a bad request answers ERR instead
+                // of panicking the executor thread.
+                let vocab = params.vocab as i32;
+                for r in reqs {
+                    let resp = if r.window.iter().any(|&i| i < 0 || i >= vocab) {
+                        Response::Error(format!("window id out of range 0..{vocab}"))
+                    } else {
+                        Response::Score(model.scores(params, &r.window)[0])
+                    };
+                    let _ = r.reply.send(resp);
+                }
+            }
         }
         Ok(n)
     }

@@ -33,7 +33,19 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let msg = rx.lock().unwrap().recv();
                         match msg {
-                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Run(job)) => {
+                                // Panic-isolate jobs: a panicking job must
+                                // not kill the worker, or jobs still queued
+                                // behind it would never run *or* drop —
+                                // leaving scope_run's completion loop (and
+                                // par_map's collector) waiting forever.
+                                let caught = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                                if caught.is_err() {
+                                    eprintln!("[threadpool] job panicked; worker continues");
+                                }
+                            }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
@@ -49,6 +61,44 @@ impl ThreadPool {
 
     pub fn threads(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Run `f(0) … f(n-1)` on the pool and block until every task has
+    /// finished — a *scoped* fan-out: `f` may borrow from the caller's
+    /// stack, unlike `execute`, because this call does not return while
+    /// any task is live. This is the gradient subsystem's dispatch
+    /// primitive: it avoids the per-call `Arc`/`to_vec` copies `par_map`
+    /// pays for `'static` closures.
+    pub fn scope_run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        // SAFETY: the borrowed closure is lifetime-erased so it can ride
+        // the pool's 'static job channel. Soundness argument: every job
+        // either runs (and sends on `tx`) or is dropped un-run with its
+        // channel; the loop below does not return until all senders are
+        // gone or `n` completions arrived, so no job can touch `f` after
+        // this frame unwinds.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let (tx, rx) = mpsc::channel::<()>();
+        for i in 0..n {
+            let tx = tx.clone();
+            self.execute(move || {
+                f_static(i);
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        let mut done = 0usize;
+        while done < n {
+            match rx.recv() {
+                Ok(()) => done += 1,
+                Err(_) => break, // all senders gone: every job ran or unwound
+            }
+        }
+        assert!(done == n, "scope_run: a pool task panicked ({done}/{n} completed)");
     }
 }
 
@@ -119,5 +169,48 @@ mod tests {
     fn par_map_zero_items() {
         let out: Vec<usize> = par_map(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scope_run_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let input: Vec<u64> = (0..64).collect();
+        let out: Vec<Mutex<u64>> = (0..64).map(|_| Mutex::new(0)).collect();
+        pool.scope_run(64, &|i| {
+            *out[i].lock().unwrap() = input[i] * 3;
+        });
+        for (i, m) in out.iter().enumerate() {
+            assert_eq!(*m.lock().unwrap(), i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn scope_run_reports_panicked_task_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_run(8, &|i| {
+                assert!(i != 3, "boom");
+            });
+        }));
+        assert!(result.is_err(), "scope_run must report the panicked task");
+        // the pool keeps working afterwards (workers are panic-isolated)
+        let counter = AtomicUsize::new(0);
+        pool.scope_run(4, &|_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn scope_run_zero_and_reuse() {
+        let pool = ThreadPool::new(2);
+        pool.scope_run(0, &|_| panic!("must not run"));
+        let counter = AtomicUsize::new(0);
+        for _ in 0..3 {
+            pool.scope_run(10, &|_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 30);
     }
 }

@@ -1,0 +1,180 @@
+//! Property tests: the parallel sharded scatter-add subsystem is
+//! equivalent to the serial baseline.
+//!
+//! Two layers of guarantee, matching how the pieces are used:
+//!
+//! * **Raw scatter streams** (duplicate-heavy, Zipf-skewed): the
+//!   owner-computes plan applies each destination row's updates in stream
+//!   order on exactly one thread, so the result is **bitwise identical**
+//!   to `scatter_add_serial` — asserted with exact equality across thread
+//!   counts {1, 2, 8}.
+//! * **Gradient accumulate + tree-reduce merge** (the host trainer's hot
+//!   path): f32 sums re-associate across per-thread partials, so the
+//!   merged gradient matches the serial gradient within 1e-6 per
+//!   coordinate.
+
+use polyglot_gpu::baselines::model_ref::{ModelParams, RefModel};
+use polyglot_gpu::baselines::scatter::scatter_add_serial;
+use polyglot_gpu::config::{GradCfg, GradMode};
+use polyglot_gpu::corpus::Zipf;
+use polyglot_gpu::grad::{merge_grads, tree_reduce, ScatterEngine, ShardPlan};
+use polyglot_gpu::testkit::forall;
+use polyglot_gpu::util::rng::Rng;
+use polyglot_gpu::util::threadpool::ThreadPool;
+
+fn engine(threads: usize) -> ScatterEngine {
+    ScatterEngine::new(&GradCfg {
+        mode: GradMode::Sharded,
+        threads,
+        crossover_rows: 0,
+        hot_rows: 16,
+    })
+}
+
+/// A duplicate-heavy Zipf index stream plus matching update rows.
+fn zipf_updates(
+    vocab: usize,
+    d: usize,
+    rows: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let z = Zipf::classic(vocab);
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..vocab * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let idx: Vec<i32> = (0..rows).map(|_| z.sample(&mut rng) as i32).collect();
+    let y: Vec<f32> = (0..rows * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    (w, idx, y)
+}
+
+#[test]
+fn sharded_scatter_bitwise_equals_serial_across_threads() {
+    for threads in [1usize, 2, 8] {
+        let eng = engine(threads);
+        let (w0, idx, y) = zipf_updates(400, 16, 6000, threads as u64 + 100);
+        let mut serial = w0.clone();
+        let mut sharded = w0;
+        scatter_add_serial(&mut serial, 16, &idx, &y);
+        eng.scatter_add(&mut sharded, 16, &idx, &y);
+        assert_eq!(
+            serial, sharded,
+            "threads={threads}: sharded scatter not bitwise-identical"
+        );
+    }
+}
+
+#[test]
+fn property_sharded_equals_serial_on_random_shapes() {
+    // Random (vocab, dim, rows, seed) shapes, duplicate-heavy by
+    // construction (vocab << rows in many draws).
+    forall(
+        "sharded scatter == serial (bitwise)",
+        40,
+        |r| (r.below(120) + 2, r.below(12) + 1, r.below(4000), r.next_u64()),
+        |&(v, d, rows, seed)| {
+            let (v, d, rows) = (v as usize, d as usize, rows as usize);
+            let (w0, idx, y) = zipf_updates(v, d, rows, seed);
+            let mut serial = w0.clone();
+            let mut sharded = w0;
+            scatter_add_serial(&mut serial, d, &idx, &y);
+            engine(8).scatter_add(&mut sharded, d, &idx, &y);
+            serial == sharded
+        },
+    );
+}
+
+#[test]
+fn integer_index_paths_are_bitwise_stable() {
+    // The plan itself (the integer side of the subsystem) must be an
+    // exact partition: same input -> same shards, all updates covered.
+    let (_, idx, _) = zipf_updates(600, 1, 10_000, 9);
+    for threads in [2usize, 8] {
+        let a = ShardPlan::build(&idx, threads, 16);
+        let b = ShardPlan::build(&idx, threads, 16);
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.updates(), idx.len());
+        let mut seen = vec![false; idx.len()];
+        for list in &a.shards {
+            for &r in list {
+                assert!(!seen[r as usize]);
+                seen[r as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}
+
+#[test]
+fn accumulated_gradients_match_serial_within_1e6() {
+    // Split a batch into per-thread partial gradients, tree-reduce merge,
+    // and compare against the single-pass serial gradient.
+    let p = ModelParams::init(256, 8, 5, 8, 42);
+    let mut rng = Rng::new(7);
+    let b = 64usize;
+    let z = Zipf::classic(256);
+    let windows: Vec<i32> = (0..b * 5).map(|_| z.sample(&mut rng) as i32).collect();
+    let corrupt: Vec<i32> = (0..b).map(|_| rng.below(256) as i32).collect();
+
+    let mut serial_model = RefModel::new(&p);
+    let (_, g_serial) = serial_model.grads(&p, &windows, &corrupt);
+
+    for threads in [1usize, 2, 8] {
+        let pool = ThreadPool::new(threads);
+        let chunk = b.div_ceil(threads);
+        let scale = 1.0 / b as f32;
+        let mut partials = Vec::new();
+        for t in 0..threads {
+            let (lo, hi) = (t * chunk, ((t + 1) * chunk).min(b));
+            if lo >= hi {
+                continue;
+            }
+            let mut model = RefModel::new(&p);
+            let (_, g) =
+                model.grads_scaled(&p, &windows[lo * 5..hi * 5], &corrupt[lo..hi], scale);
+            partials.push(g);
+        }
+        let merged = tree_reduce(&pool, partials, merge_grads).unwrap();
+
+        for (x, y) in merged.w1.iter().zip(&g_serial.w1) {
+            assert!((x - y).abs() < 1e-6, "threads={threads}: w1 {x} vs {y}");
+        }
+        for (x, y) in merged.w2.iter().zip(&g_serial.w2) {
+            assert!((x - y).abs() < 1e-6, "threads={threads}: w2 {x} vs {y}");
+        }
+        assert!((merged.b2 - g_serial.b2).abs() < 1e-6);
+        assert_eq!(merged.e_rows.len(), g_serial.e_rows.len(), "threads={threads}");
+        for (id, row) in &g_serial.e_rows {
+            let got = merged
+                .e_rows
+                .iter()
+                .find(|(i, _)| i == id)
+                .unwrap_or_else(|| panic!("row {id} missing from merged gradient"));
+            for (x, y) in got.1.iter().zip(row) {
+                assert!((x - y).abs() < 1e-6, "threads={threads}: row {id} {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn hot_rows_never_split_across_shards() {
+    forall(
+        "each row owned by one shard",
+        25,
+        |r| (r.below(200) + 1, r.below(3000), r.next_u64()),
+        |&(v, rows, seed)| {
+            let z = Zipf::classic(v as usize);
+            let mut rng = Rng::new(seed);
+            let idx: Vec<i32> = (0..rows).map(|_| z.sample(&mut rng) as i32).collect();
+            let plan = ShardPlan::build(&idx, 8, 8);
+            let mut owner = std::collections::HashMap::new();
+            for (s, list) in plan.shards.iter().enumerate() {
+                for &r in list {
+                    if *owner.entry(idx[r as usize]).or_insert(s) != s {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
