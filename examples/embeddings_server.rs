@@ -33,9 +33,9 @@ fn main() -> Result<()> {
         let rt = Runtime::new(&artifacts)?;
         let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
         let opts = RunOptions { steps: 150, quiet: true, ..RunOptions::default() };
-        let (trainer, _) = run_training(&rt, &cfg, &corpus, &opts)?;
+        let (trainer, _) = run_training(Some(&rt), &cfg, &corpus, &opts)?;
         (corpus.vocab, trainer.params_host()?, trainer.dims.window)
-    }; // trainer's PJRT client dropped here; the server owns its own
+    }; // trainer runtime dropped here; the server owns its own
 
     let server = Server::start(&cfg.server, artifacts, vocab.clone(), params)?;
     println!("server on {}", server.addr);

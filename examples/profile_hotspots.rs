@@ -21,7 +21,7 @@ fn train_rate(cfg: &Config, steps: usize) -> Result<(f64, Runtime)> {
     let rt = Runtime::new(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
     let corpus = prepare_corpus(cfg, rt.manifest.main_model.vocab)?;
     let opts = RunOptions { steps, quiet: true, ..RunOptions::default() };
-    let (_tr, report) = run_training(&rt, cfg, &corpus, &opts)?;
+    let (_tr, report) = run_training(Some(&rt), cfg, &corpus, &opts)?;
     Ok((report.rate_mean, rt))
 }
 

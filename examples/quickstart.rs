@@ -35,14 +35,15 @@ fn main() -> Result<()> {
     cfg.training.lr = 0.1;
     cfg.training.log_every = 100;
 
-    // 3. Runtime over the AOT artifacts (HLO text compiled via PJRT).
+    // 3. Runtime over the AOT artifacts (HLO text, compiled by the
+    //    selected execution backend: PJRT or the built-in interpreter).
     let rt = Runtime::new(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
     let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab)?;
     println!("vocab: {} types", corpus.vocab.len());
 
     // 4. Train.
     let opts = RunOptions { steps: 400, ..RunOptions::default() };
-    let (trainer, report) = run_training(&rt, &cfg, &corpus, &opts)?;
+    let (trainer, report) = run_training(Some(&rt), &cfg, &corpus, &opts)?;
     println!(
         "trained {} steps @ {:.0} ex/s, loss {:.3}",
         report.steps, report.rate_mean, report.final_loss

@@ -57,7 +57,7 @@ fn main() -> Result<()> {
         quiet: true,
         ..RunOptions::default()
     };
-    let (trainer, report) = run_training(&rt, &cfg, &corpus, &opts)?;
+    let (trainer, report) = run_training(Some(&rt), &cfg, &corpus, &opts)?;
 
     println!("\nloss curve (step, mean recent hinge):");
     for (step, loss) in report.loss_curve.iter().filter(|(s, _)| s % 60 == 0) {

@@ -15,9 +15,9 @@
 //!       vocab (the grad subsystem's crossover) -> BENCH_scatter.json
 //!
 //! Pass a filter to run a subset: `cargo bench -- e3 e6`.
-//! E1–E8 execute PJRT artifacts and are skipped automatically when the
-//! build lacks a native XLA runtime (the vendored stub); E9–E11 are pure
-//! host benches and always run.
+//! E1–E8 execute artifacts on the runtime's selected backend — PJRT when
+//! a real binding is present, the pure-Rust HLO interpreter otherwise —
+//! so every experiment runs on every build. E9–E11 are pure host benches.
 //! Absolute numbers are host-CPU numbers; the reproduction targets are the
 //! paper's *shapes and ratios* (EXPERIMENTS.md records both).
 
@@ -43,13 +43,6 @@ fn base_cfg() -> Config {
     cfg
 }
 
-/// Can this build actually execute PJRT artifacts? Probes the same
-/// directory the gated benches load from.
-fn pjrt_ready() -> bool {
-    let dir = base_cfg().runtime.artifacts_dir;
-    Runtime::new(Path::new(&dir)).map(|rt| rt.can_execute()).unwrap_or(false)
-}
-
 fn measure_rate(cfg: &Config, steps: usize, size: ModelSize) -> Result<(f64, f64, Runtime)> {
     let rt = Runtime::new(Path::new(&cfg.runtime.artifacts_dir))?;
     let vocab = match size {
@@ -70,7 +63,7 @@ fn e1() -> Result<(f64, f64)> {
     cfg.training.batch = 16;
 
     cfg.training.backend = Backend::Cpu;
-    let (cpu, cpu_sd, _) = measure_rate(&cfg, 120, ModelSize::Main)?;
+    let (cpu, cpu_sd, rt) = measure_rate(&cfg, 120, ModelSize::Main)?;
     cfg.training.backend = Backend::GpuNaive;
     let (naive, naive_sd, _) = measure_rate(&cfg, 30, ModelSize::Main)?;
 
@@ -87,6 +80,18 @@ fn e1() -> Result<(f64, f64)> {
         cpu / naive,
         ok(cpu > naive)
     );
+
+    // Machine-readable record for the CI perf trajectory (nightly smoke).
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("e1_baseline_rates".to_string()));
+    root.insert("backend".to_string(), Json::Str(rt.backend_name().to_string()));
+    root.insert("cpu_ex_per_s".to_string(), Json::Num(cpu));
+    root.insert("cpu_sd".to_string(), Json::Num(cpu_sd));
+    root.insert("gpu_naive_ex_per_s".to_string(), Json::Num(naive));
+    root.insert("gpu_naive_sd".to_string(), Json::Num(naive_sd));
+    root.insert("slowdown_naive_vs_cpu".to_string(), Json::Num(cpu / naive));
+    std::fs::write("BENCH_e1.json", Json::Obj(root).render())?;
+    println!("wrote BENCH_e1.json");
     Ok((cpu, naive))
 }
 
@@ -147,7 +152,7 @@ fn e3() -> Result<()> {
                 let r1 = row1.upload_f32(&y[r * d..(r + 1) * d], &[1, d]).unwrap();
                 cur = row1.run_b(&[&cur, &i1, &r1]).unwrap();
             }
-            cur.to_literal_sync().unwrap()
+            cur.to_literal().unwrap()
         });
         let naive = b.get("naive").unwrap().mean_s();
         let opt_t = b.get("opt").unwrap().mean_s();
@@ -172,7 +177,11 @@ fn e4(cpu: f64, naive: f64) -> Result<f64> {
     cfg.training.backend = Backend::GpuOpt;
     let (opt, opt_sd, _) = measure_rate(&cfg, 150, ModelSize::Main)?;
     let mut t = Table::new(&["metric", "measured", "paper"]);
-    t.row(&["gpu-opt rate".into(), format!("{opt:.1} ex/s (σ {opt_sd:.1})"), "3742 (32.6)".into()]);
+    t.row(&[
+        "gpu-opt rate".into(),
+        format!("{opt:.1} ex/s (σ {opt_sd:.1})"),
+        "3742 (32.6)".into(),
+    ]);
     t.row(&["speedup vs gpu-naive".into(), format!("{:.1}x", opt / naive), "~3x".into()]);
     t.row(&["vs cpu".into(), format!("{:.2}x", opt / cpu), "0.68x (comparable)".into()]);
     println!("{}", t.render());
@@ -444,7 +453,8 @@ fn e9() -> Result<()> {
     let vocab = Vocab::build(corpus.sentences.iter().map(|s| s.as_slice()), 2, 4096);
     let encoded: Vec<Vec<u32>> = corpus.sentences.iter().map(|s| vocab.encode(s)).collect();
 
-    let mut t = Table::new(&["workers", "staleness", "rate (ex/s)", "examples to converge", "final loss"]);
+    let mut t =
+        Table::new(&["workers", "staleness", "rate (ex/s)", "examples to converge", "final loss"]);
     for (workers, pull_every) in [(1usize, 1usize), (2, 4), (4, 4), (4, 16)] {
         let shards = split_shards(encoded.clone(), workers, 9);
         let init = ModelParams::init(vocab.len(), 16, 5, 16, 7);
@@ -672,38 +682,41 @@ fn main() -> Result<()> {
     let want = |k: &str| args.is_empty() || args.iter().any(|a| a.eq_ignore_ascii_case(k));
 
     println!("polyglot-gpu paper benchmarks (host-CPU substrate; shapes vs paper)");
-    let pjrt = pjrt_ready();
-    if !pjrt {
-        println!(
-            "PJRT artifact execution unavailable (vendored xla stub) — skipping E1-E8; \
-             host benches E9-E11 run as usual"
-        );
+    // Informational only: a missing artifacts dir must not stop the pure
+    // host benches (E9-E11); the artifact benches will surface their own
+    // errors if actually selected.
+    match Runtime::new(Path::new(&base_cfg().runtime.artifacts_dir)) {
+        Ok(rt) => println!(
+            "artifact execution backend: {} (E1-E8 run on every build)",
+            rt.backend_name()
+        ),
+        Err(e) => println!("artifact runtime unavailable ({e:#}); E1-E8 will fail if selected"),
     }
     let (mut cpu, mut naive) = (2650.0, 225.0); // defaults if E1 filtered out
-    if want("e1") && pjrt {
+    if want("e1") {
         let r = e1()?;
         cpu = r.0;
         naive = r.1;
     }
-    if want("e2") && pjrt {
+    if want("e2") {
         e2()?;
     }
-    if want("e3") && pjrt {
+    if want("e3") {
         e3()?;
     }
-    if want("e4") && pjrt {
+    if want("e4") {
         e4(cpu, naive)?;
     }
-    if want("e5") && pjrt {
+    if want("e5") {
         e5()?;
     }
-    if want("e6") && pjrt {
+    if want("e6") {
         e6()?;
     }
-    if want("e7") && pjrt {
+    if want("e7") {
         e7()?;
     }
-    if want("e8") && pjrt {
+    if want("e8") {
         e8()?;
     }
     if want("e9") {

@@ -1,0 +1,461 @@
+//! Pure-Rust HLO interpreter backend.
+//!
+//! Parses the HLO text grammar the committed artifacts use (`parser`),
+//! evaluates the closed op set (`eval`) over `Rc`-shared row-major
+//! tensors (`value`). Numerics follow the serial host baselines
+//! bit-for-bit where the artifacts are serial (scatter-add application
+//! order is updates-row-major), which is what the golden equivalence
+//! tests assert.
+//!
+//! This is the fallback [`Backend`](super::Backend) when no real PJRT
+//! binding is present; it trades speed for total availability — every
+//! committed artifact executes on any build of this crate.
+
+pub mod eval;
+pub mod parser;
+pub mod value;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::{Backend, Buffer, Compiled};
+use crate::runtime::manifest::ArtifactSpec;
+
+use parser::Module;
+use value::{tensor_to_literal, value_from_literal, Value};
+
+#[derive(Default)]
+pub struct InterpBackend;
+
+impl InterpBackend {
+    pub fn new() -> InterpBackend {
+        InterpBackend
+    }
+}
+
+impl Backend for InterpBackend {
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn compile(&self, spec: &ArtifactSpec) -> Result<Box<dyn Compiled>> {
+        let text = std::fs::read_to_string(&spec.file)
+            .with_context(|| format!("reading HLO text {}", spec.file.display()))?;
+        let exe = InterpExecutable::from_text(&text)
+            .with_context(|| format!("parsing artifact {:?}", spec.name))?;
+        let n = exe.module.comps[exe.module.entry].n_params;
+        if n != spec.inputs.len() {
+            bail!(
+                "artifact {:?}: HLO wants {n} parameters, manifest lists {}",
+                spec.name,
+                spec.inputs.len()
+            );
+        }
+        Ok(Box::new(exe))
+    }
+}
+
+/// A parsed, ready-to-evaluate HLO module. Public so tests can drive the
+/// interpreter on inline HLO snippets without a manifest.
+pub struct InterpExecutable {
+    module: Module,
+}
+
+impl InterpExecutable {
+    pub fn from_text(text: &str) -> Result<InterpExecutable> {
+        Ok(InterpExecutable { module: parser::parse_module(text)? })
+    }
+
+    /// Execute on literal inputs; returns the decomposed outputs (tuple
+    /// elements for tupled roots, one literal otherwise).
+    pub fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let args: Vec<Value> =
+            inputs.iter().map(|l| value_from_literal(l)).collect::<Result<_>>()?;
+        let root = eval::eval_entry(&self.module, args)?;
+        match root {
+            Value::Tuple(els) => els
+                .iter()
+                .map(|v| tensor_to_literal(v.arr()?))
+                .collect::<Result<Vec<_>>>(),
+            Value::Arr(t) => Ok(vec![tensor_to_literal(&t)?]),
+        }
+    }
+}
+
+impl Compiled for InterpExecutable {
+    fn execute(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        self.run(inputs)
+    }
+
+    fn execute_buffers(&self, args: &[&Buffer]) -> Result<Buffer> {
+        let refs: Vec<&Literal> = args
+            .iter()
+            .map(|b| match b {
+                Buffer::Host(l) => Ok(l),
+                Buffer::Pjrt(_) => bail!("PJRT buffer passed to the interpreter backend"),
+            })
+            .collect::<Result<_>>()?;
+        let mut out = self.run(&refs)?;
+        if out.len() != 1 {
+            bail!("execute_buffers needs a single-output (untupled) artifact");
+        }
+        Ok(Buffer::Host(out.remove(0)))
+    }
+
+    fn upload(&self, lit: &Literal) -> Result<Buffer> {
+        Ok(Buffer::Host(lit.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{lit_f32, lit_i32};
+
+    fn run1(text: &str, inputs: &[&Literal]) -> Vec<f32> {
+        let exe = InterpExecutable::from_text(text).unwrap();
+        let out = exe.run(inputs).unwrap();
+        out[0].to_vec::<f32>().unwrap()
+    }
+
+    #[test]
+    fn elementwise_chain() {
+        let text = "HloModule m
+ENTRY e.6 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  Arg_1.2 = f32[4]{0} parameter(1)
+  add.3 = f32[4]{0} add(Arg_0.1, Arg_1.2)
+  negate.4 = f32[4]{0} negate(add.3)
+  ROOT multiply.5 = f32[4]{0} multiply(negate.4, Arg_0.1)
+}
+";
+        let a = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        let b = lit_f32(&[0.5, 0.5, 0.5, 0.5], &[4]).unwrap();
+        assert_eq!(run1(text, &[&a, &b]), vec![-1.5, -5.0, -10.5, -18.0]);
+    }
+
+    #[test]
+    fn unary_math_ops() {
+        let text = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[3]{0} parameter(0)
+  exponential.2 = f32[3]{0} exponential(Arg_0.1)
+  log.3 = f32[3]{0} log(exponential.2)
+  ROOT tanh.4 = f32[3]{0} tanh(log.3)
+}
+";
+        let a = lit_f32(&[0.0, 0.5, -1.0], &[3]).unwrap();
+        let got = run1(text, &[&a]);
+        for (g, x) in got.iter().zip([0.0f32, 0.5, -1.0]) {
+            assert!((g - x.tanh()).abs() < 1e-6, "{g} vs {}", x.tanh());
+        }
+    }
+
+    #[test]
+    fn broadcast_compare_select() {
+        let text = "HloModule m
+ENTRY e.8 {
+  Arg_0.1 = s32[4]{0} parameter(0)
+  constant.2 = s32[] constant(0)
+  broadcast.3 = s32[4]{0} broadcast(constant.2), dimensions={}
+  compare.4 = pred[4]{0} compare(Arg_0.1, broadcast.3), direction=LT
+  constant.5 = s32[] constant(100)
+  broadcast.6 = s32[4]{0} broadcast(constant.5), dimensions={}
+  select.7 = s32[4]{0} select(compare.4, broadcast.6, Arg_0.1)
+  ROOT convert.8 = f32[4]{0} convert(select.7)
+}
+";
+        let a = lit_i32(&[-1, 2, -3, 4], &[4]).unwrap();
+        assert_eq!(run1(text, &[&a]), vec![100.0, 2.0, 100.0, 4.0]);
+    }
+
+    #[test]
+    fn broadcast_along_each_axis() {
+        let text = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  broadcast.2 = f32[2,3]{1,0} broadcast(Arg_0.1), dimensions={0}
+  Arg_1.3 = f32[3]{0} parameter(1)
+  broadcast.4 = f32[2,3]{1,0} broadcast(Arg_1.3), dimensions={1}
+  ROOT add.5 = f32[2,3]{1,0} add(broadcast.2, broadcast.4)
+}
+";
+        let a = lit_f32(&[10.0, 20.0], &[2]).unwrap();
+        let b = lit_f32(&[1.0, 2.0, 3.0], &[3]).unwrap();
+        assert_eq!(run1(text, &[&a, &b]), vec![11.0, 12.0, 13.0, 21.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    fn dot_contracting_variants() {
+        // [2,3]·[3,2] with every contracting combination the artifacts use.
+        let a = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let b = lit_f32(&[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], &[3, 2]).unwrap();
+        let t10 = "HloModule m
+ENTRY e.3 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  Arg_1.2 = f32[3,2]{1,0} parameter(1)
+  ROOT dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+";
+        assert_eq!(run1(t10, &[&a, &b]), vec![4.0, 5.0, 10.0, 11.0]);
+        let t00 = "HloModule m
+ENTRY e.3 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  Arg_1.2 = f32[2,3]{1,0} parameter(1)
+  ROOT dot.3 = f32[3,3]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+}
+";
+        // aᵀ·a
+        assert_eq!(
+            run1(t00, &[&a, &a]),
+            vec![17.0, 22.0, 27.0, 22.0, 29.0, 36.0, 27.0, 36.0, 45.0]
+        );
+        let t11 = "HloModule m
+ENTRY e.3 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  Arg_1.2 = f32[2,3]{1,0} parameter(1)
+  ROOT dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+}
+";
+        // a·aᵀ
+        assert_eq!(run1(t11, &[&a, &a]), vec![14.0, 32.0, 32.0, 77.0]);
+    }
+
+    #[test]
+    fn transpose_and_reshape() {
+        let text = "HloModule m
+ENTRY e.4 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  transpose.2 = f32[3,2]{0,1} transpose(Arg_0.1), dimensions={1,0}
+  ROOT reshape.3 = f32[6]{0} reshape(transpose.2)
+}
+";
+        let a = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(run1(text, &[&a]), vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn reduce_rows_and_all() {
+        let text = "HloModule m
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY e.9 {
+  Arg_0.5 = f32[2,3]{1,0} parameter(0)
+  constant.6 = f32[] constant(0)
+  reduce.7 = f32[2]{0} reduce(Arg_0.5, constant.6), dimensions={1}, to_apply=region_0.1
+  reduce.8 = f32[] reduce(Arg_0.5, constant.6), dimensions={0,1}, to_apply=region_0.1
+  ROOT tuple.9 = (f32[2]{0}, f32[]) tuple(reduce.7, reduce.8)
+}
+";
+        let a = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let exe = InterpExecutable::from_text(text).unwrap();
+        let out = exe.run(&[&a]).unwrap();
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![6.0, 15.0]);
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![21.0]);
+    }
+
+    #[test]
+    fn iota_concat_maximum() {
+        let text = "HloModule m
+ENTRY e.6 {
+  iota.1 = s32[3]{0} iota(), iota_dimension=0
+  Arg_0.2 = s32[2]{0} parameter(0)
+  concatenate.3 = s32[5]{0} concatenate(iota.1, Arg_0.2), dimensions={0}
+  iota.4 = s32[5]{0} iota(), iota_dimension=0
+  maximum.5 = s32[5]{0} maximum(concatenate.3, iota.4)
+  ROOT convert.6 = f32[5]{0} convert(maximum.5)
+}
+";
+        let a = lit_i32(&[-7, 9], &[2]).unwrap();
+        assert_eq!(run1(text, &[&a]), vec![0.0, 1.0, 2.0, 3.0, 9.0]);
+    }
+
+    #[test]
+    fn dynamic_slice_and_update() {
+        let text = "HloModule m
+ENTRY e.7 {
+  Arg_0.1 = f32[4,2]{1,0} parameter(0)
+  Arg_1.2 = s32[] parameter(1)
+  constant.3 = s32[] constant(0)
+  dynamic-slice.4 = f32[1,2]{1,0} dynamic-slice(Arg_0.1, Arg_1.2, constant.3), dynamic_slice_sizes={1,2}
+  add.5 = f32[1,2]{1,0} add(dynamic-slice.4, dynamic-slice.4)
+  ROOT dynamic-update-slice.6 = f32[4,2]{1,0} dynamic-update-slice(Arg_0.1, add.5, Arg_1.2, constant.3)
+}
+";
+        let a = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], &[4, 2]).unwrap();
+        let i = lit_i32(&[2], &[]).unwrap();
+        assert_eq!(run1(text, &[&a, &i]), vec![1.0, 2.0, 3.0, 4.0, 10.0, 12.0, 7.0, 8.0]);
+        // Out-of-range start clamps (XLA semantics) instead of erroring.
+        let far = lit_i32(&[99], &[]).unwrap();
+        assert_eq!(run1(text, &[&a, &far]), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn gather_takes_rows_with_clamping() {
+        let text = "HloModule m
+ENTRY e.4 {
+  Arg_0.1 = f32[4,2]{1,0} parameter(0)
+  Arg_1.2 = s32[3,1]{1,0} parameter(1)
+  ROOT gather.3 = f32[3,2]{1,0} gather(Arg_0.1, Arg_1.2), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,2}
+}
+";
+        let a = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], &[4, 2]).unwrap();
+        let i = lit_i32(&[2, 0, 9], &[3, 1]).unwrap(); // 9 clamps to last row
+        assert_eq!(run1(text, &[&a, &i]), vec![5.0, 6.0, 1.0, 2.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn scatter_accumulates_duplicates_in_row_order() {
+        let text = "HloModule m
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY e.8 {
+  Arg_0.5 = f32[4,2]{1,0} parameter(0)
+  Arg_1.6 = s32[3,1]{1,0} parameter(1)
+  Arg_2.7 = f32[3,2]{1,0} parameter(2)
+  ROOT scatter.8 = f32[4,2]{1,0} scatter(Arg_0.5, Arg_1.6, Arg_2.7), update_window_dims={1}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=region_0.1
+}
+";
+        let w = lit_f32(&[0.0; 8], &[4, 2]).unwrap();
+        let i = lit_i32(&[1, 1, 3], &[3, 1]).unwrap();
+        let y = lit_f32(&[1.0, 2.0, 10.0, 20.0, 5.0, 6.0], &[3, 2]).unwrap();
+        assert_eq!(
+            run1(text, &[&w, &i, &y]),
+            vec![0.0, 0.0, 11.0, 22.0, 0.0, 0.0, 5.0, 6.0]
+        );
+    }
+
+    #[test]
+    fn scatter_overwrite_combiner_sets_column() {
+        // The train-step window scatter: set column `2` of a [4,3] s32
+        // array to the updates (combiner returns its rhs).
+        let text = "HloModule m
+region_0.1 {
+  Arg_0.2 = s32[] parameter(0)
+  ROOT Arg_1.3 = s32[] parameter(1)
+}
+
+ENTRY e.8 {
+  Arg_0.4 = s32[4,3]{1,0} parameter(0)
+  constant.5 = s32[1]{0} constant({2})
+  Arg_1.6 = s32[4]{0} parameter(1)
+  scatter.7 = s32[4,3]{1,0} scatter(Arg_0.4, constant.5, Arg_1.6), update_window_dims={0}, inserted_window_dims={1}, scatter_dims_to_operand_dims={1}, index_vector_dim=0, indices_are_sorted=true, unique_indices=true, to_apply=region_0.1
+  ROOT convert.8 = f32[4,3]{1,0} convert(scatter.7)
+}
+";
+        let a = lit_i32(&[0; 12], &[4, 3]).unwrap();
+        let u = lit_i32(&[7, 8, 9, 10], &[4]).unwrap();
+        assert_eq!(
+            run1(text, &[&a, &u]),
+            vec![0.0, 0.0, 7.0, 0.0, 0.0, 8.0, 0.0, 0.0, 9.0, 0.0, 0.0, 10.0]
+        );
+    }
+
+    #[test]
+    fn call_while_and_tuples() {
+        // Sum 0..5 with a while loop: carry = (i, acc).
+        let text = "HloModule m
+body.1 {
+  arg_tuple.2 = (s32[], s32[]) parameter(0)
+  get-tuple-element.3 = s32[] get-tuple-element(arg_tuple.2), index=0
+  constant.4 = s32[] constant(1)
+  add.5 = s32[] add(get-tuple-element.3, constant.4)
+  get-tuple-element.6 = s32[] get-tuple-element(arg_tuple.2), index=1
+  add.7 = s32[] add(get-tuple-element.6, get-tuple-element.3)
+  ROOT tuple.8 = (s32[], s32[]) tuple(add.5, add.7)
+}
+
+cond.9 {
+  arg_tuple.10 = (s32[], s32[]) parameter(0)
+  get-tuple-element.11 = s32[] get-tuple-element(arg_tuple.10), index=0
+  constant.12 = s32[] constant(5)
+  ROOT compare.13 = pred[] compare(get-tuple-element.11, constant.12), direction=LT
+}
+
+ENTRY e.20 {
+  constant.14 = s32[] constant(0)
+  tuple.15 = (s32[], s32[]) tuple(constant.14, constant.14)
+  while.16 = (s32[], s32[]) while(tuple.15), condition=cond.9, body=body.1
+  get-tuple-element.17 = s32[] get-tuple-element(while.16), index=1
+  ROOT convert.18 = f32[] convert(get-tuple-element.17)
+}
+";
+        let exe = InterpExecutable::from_text(text).unwrap();
+        let out = exe.run(&[]).unwrap();
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![10.0]);
+    }
+
+    #[test]
+    fn pred_reduce_all() {
+        let text = "HloModule m
+region_0.1 {
+  Arg_0.2 = pred[] parameter(0)
+  Arg_1.3 = pred[] parameter(1)
+  ROOT and.4 = pred[] and(Arg_0.2, Arg_1.3)
+}
+
+ENTRY e.9 {
+  Arg_0.5 = s32[2,2]{1,0} parameter(0)
+  constant.6 = s32[] constant(0)
+  broadcast.7 = s32[2,2]{1,0} broadcast(constant.6), dimensions={}
+  compare.8 = pred[2,2]{1,0} compare(Arg_0.5, broadcast.7), direction=GE
+  constant.9 = pred[] constant(true)
+  reduce.10 = pred[2]{0} reduce(compare.8, constant.9), dimensions={1}, to_apply=region_0.1
+  constant.11 = s32[] constant(1)
+  broadcast.12 = s32[2]{0} broadcast(constant.11), dimensions={}
+  constant.13 = s32[] constant(0)
+  broadcast.14 = s32[2]{0} broadcast(constant.13), dimensions={}
+  select.15 = s32[2]{0} select(reduce.10, broadcast.12, broadcast.14)
+  ROOT convert.16 = f32[2]{0} convert(select.15)
+}
+";
+        let a = lit_i32(&[1, 2, -1, 3], &[2, 2]).unwrap();
+        assert_eq!(run1(text, &[&a]), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn untupled_root_returns_single_output() {
+        let text = "HloModule m
+ENTRY e.3 {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  ROOT add.2 = f32[2]{0} add(Arg_0.1, Arg_0.1)
+}
+";
+        let exe = InterpExecutable::from_text(text).unwrap();
+        let a = lit_f32(&[1.5, 2.5], &[2]).unwrap();
+        let out = exe.run(&[&a]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn nan_propagates_through_select_pattern() {
+        // maximum/compare/select with NaN present (the _take gather guard
+        // pattern): NaN must flow where selected, not poison everything.
+        let text = "HloModule m
+ENTRY e.7 {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  constant.2 = f32[] constant(nan)
+  broadcast.3 = f32[2]{0} broadcast(constant.2), dimensions={}
+  Arg_1.4 = s32[2]{0} parameter(1)
+  constant.5 = s32[] constant(0)
+  broadcast.6 = s32[2]{0} broadcast(constant.5), dimensions={}
+  compare.7 = pred[2]{0} compare(Arg_1.4, broadcast.6), direction=GE
+  ROOT select.8 = f32[2]{0} select(compare.7, Arg_0.1, broadcast.3)
+}
+";
+        let a = lit_f32(&[7.0, 8.0], &[2]).unwrap();
+        let i = lit_i32(&[1, -1], &[2]).unwrap();
+        let got = run1(text, &[&a, &i]);
+        assert_eq!(got[0], 7.0);
+        assert!(got[1].is_nan());
+    }
+}

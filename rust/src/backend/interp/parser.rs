@@ -1,0 +1,654 @@
+//! Parser for the HLO text grammar the committed artifacts use.
+//!
+//! This is not a general HLO frontend: it covers exactly the shape of
+//! text `jax.jit(...).lower().compile()`-era AOT dumps emit — a module
+//! header, named computation blocks (`region_* { ... }`, `_take.* { ... }`,
+//! one `ENTRY`), and one SSA instruction per line:
+//!
+//! ```text
+//! [ROOT] <id> = <type> <op>(<operands>)[, attr=value]...
+//! ```
+//!
+//! Types are `f32|s32|pred` arrays with optional layout braces (ignored —
+//! the interpreter is logical row-major) or tuples thereof. Computation
+//! references (`to_apply=`, `condition=`, `body=`) and operand names are
+//! resolved to indices at parse time so evaluation never touches strings.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+use super::value::{Tensor, Ty};
+
+/// Output shape of an instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Shape {
+    Arr(Ty, Vec<usize>),
+    Tuple(usize),
+}
+
+impl Shape {
+    pub fn arr(&self) -> Result<(Ty, &[usize])> {
+        match self {
+            Shape::Arr(ty, dims) => Ok((*ty, dims)),
+            Shape::Tuple(_) => bail!("expected array shape, got tuple"),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    And,
+    Or,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Tanh,
+    Exp,
+    Log,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Gather dimension numbers (XLA semantics).
+#[derive(Clone, Debug)]
+pub struct GatherDims {
+    pub offset_dims: Vec<usize>,
+    pub collapsed_slice_dims: Vec<usize>,
+    pub start_index_map: Vec<usize>,
+    pub index_vector_dim: usize,
+    pub slice_sizes: Vec<usize>,
+}
+
+/// Scatter dimension numbers (XLA semantics).
+#[derive(Clone, Debug)]
+pub struct ScatterDims {
+    pub update_window_dims: Vec<usize>,
+    pub inserted_window_dims: Vec<usize>,
+    pub scatter_dims_to_operand_dims: Vec<usize>,
+    pub index_vector_dim: usize,
+    pub to_apply: usize,
+}
+
+#[derive(Clone, Debug)]
+pub enum Op {
+    Parameter(usize),
+    Constant(Tensor),
+    Iota { dim: usize },
+    Broadcast { dims: Vec<usize> },
+    Reshape,
+    Convert,
+    Transpose { perm: Vec<usize> },
+    Compare { dir: CmpDir },
+    Select,
+    Binary(BinOp),
+    Unary(UnOp),
+    Dot { lc: usize, rc: usize },
+    Reduce { dims: Vec<usize>, to_apply: usize },
+    Concat { dim: usize },
+    DynamicSlice { sizes: Vec<usize> },
+    DynamicUpdateSlice,
+    Gather(GatherDims),
+    Scatter(ScatterDims),
+    Call { to_apply: usize },
+    While { condition: usize, body: usize },
+    Tuple,
+    GetTupleElement { index: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub name: String,
+    pub shape: Shape,
+    pub op: Op,
+    /// Operand positions within the owning computation.
+    pub operands: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub root: usize,
+    pub n_params: usize,
+    /// For each instruction, the position of its last consumer (its own
+    /// position when unused, `usize::MAX` for the root). The evaluator
+    /// uses this to pass values by move into their final consumer, which
+    /// is what lets `dynamic-update-slice` mutate in place.
+    pub last_use: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Module {
+    pub comps: Vec<Computation>,
+    pub entry: usize,
+}
+
+/// Parse an HLO text module.
+pub fn parse_module(text: &str) -> Result<Module> {
+    let text = strip_block_comments(text);
+    if !text.contains("HloModule") {
+        bail!("not HLO text (missing HloModule header)");
+    }
+
+    // Collect (is_entry, name, body lines) blocks.
+    let mut blocks: Vec<(bool, String, Vec<&str>)> = Vec::new();
+    let mut current: Option<(bool, String, Vec<&str>)> = None;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("HloModule") {
+            continue;
+        }
+        if let Some(header) = line.strip_suffix('{') {
+            let header = header.trim();
+            if current.is_some() {
+                bail!("nested computation block at {line:?}");
+            }
+            let (entry, name) = match header.strip_prefix("ENTRY ") {
+                Some(n) => (true, n.trim()),
+                None => (false, header),
+            };
+            current = Some((entry, name.to_string(), Vec::new()));
+        } else if line == "}" {
+            blocks.push(current.take().context("unmatched `}`")?);
+        } else if let Some(b) = current.as_mut() {
+            b.2.push(line);
+        } else {
+            bail!("instruction outside a computation block: {line:?}");
+        }
+    }
+    if current.is_some() {
+        bail!("unterminated computation block");
+    }
+
+    let comp_index: HashMap<String, usize> =
+        blocks.iter().enumerate().map(|(i, b)| (b.1.clone(), i)).collect();
+    let mut entry = None;
+    let mut comps = Vec::with_capacity(blocks.len());
+    for (i, (is_entry, name, lines)) in blocks.iter().enumerate() {
+        if *is_entry {
+            if entry.is_some() {
+                bail!("multiple ENTRY computations");
+            }
+            entry = Some(i);
+        }
+        let comp = parse_computation(name, lines, &comp_index)
+            .with_context(|| format!("computation {name:?}"))?;
+        comps.push(comp);
+    }
+    Ok(Module { comps, entry: entry.context("no ENTRY computation")? })
+}
+
+fn strip_block_comments(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut rest = text;
+    while let Some(start) = rest.find("/*") {
+        out.push_str(&rest[..start]);
+        match rest[start..].find("*/") {
+            Some(end) => rest = &rest[start + end + 2..],
+            None => return out, // unterminated comment: drop the tail
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+fn parse_computation(
+    name: &str,
+    lines: &[&str],
+    comp_index: &HashMap<String, usize>,
+) -> Result<Computation> {
+    let mut instrs: Vec<Instr> = Vec::with_capacity(lines.len());
+    let mut pos_of: HashMap<String, usize> = HashMap::new();
+    let mut root = None;
+    let mut n_params = 0usize;
+    for line in lines {
+        let (is_root, instr) = parse_instruction(line, &pos_of, comp_index)
+            .with_context(|| format!("instruction {line:?}"))?;
+        let pos = instrs.len();
+        if is_root {
+            if root.is_some() {
+                bail!("multiple ROOT instructions");
+            }
+            root = Some(pos);
+        }
+        if matches!(instr.op, Op::Parameter(_)) {
+            n_params += 1;
+        }
+        pos_of.insert(instr.name.clone(), pos);
+        instrs.push(instr);
+    }
+    let root = root.context("computation has no ROOT")?;
+
+    let mut last_use: Vec<usize> = (0..instrs.len()).collect();
+    for (p, instr) in instrs.iter().enumerate() {
+        for &o in &instr.operands {
+            last_use[o] = p;
+        }
+    }
+    last_use[root] = usize::MAX;
+    Ok(Computation { name: name.to_string(), instrs, root, n_params, last_use })
+}
+
+fn parse_instruction(
+    line: &str,
+    pos_of: &HashMap<String, usize>,
+    comp_index: &HashMap<String, usize>,
+) -> Result<(bool, Instr)> {
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let (name, rest) = line.split_once(" = ").context("missing ` = `")?;
+    let (shape, rest) = parse_shape(rest.trim())?;
+    let rest = rest.trim_start();
+    let paren = rest.find('(').context("missing operand list")?;
+    let opname = rest[..paren].trim();
+    let close = matching_paren(rest, paren)?;
+    let inner = &rest[paren + 1..close];
+    let attrs = parse_attrs(rest[close + 1..].trim_start_matches(','))?;
+
+    let get = |k: &str| attr(&attrs, opname, k);
+    let dims_attr = |k: &str| parse_usize_list(attr(&attrs, opname, k)?);
+    let comp_attr = |k: &str| -> Result<usize> {
+        let v = attr(&attrs, opname, k)?;
+        comp_index.get(v).copied().ok_or_else(|| anyhow!("unknown computation {v:?}"))
+    };
+
+    // Ops whose parenthesized payload is not an operand list.
+    let (op, operands): (Op, Vec<usize>) = match opname {
+        "parameter" => (Op::Parameter(inner.trim().parse().context("parameter index")?), vec![]),
+        "constant" => {
+            let (ty, dims) = shape.arr()?;
+            (Op::Constant(parse_constant(inner.trim(), ty, dims)?), vec![])
+        }
+        "iota" => (Op::Iota { dim: get("iota_dimension")?.parse().context("iota dim")? }, vec![]),
+        _ => {
+            let operands = split_top_level(inner)
+                .into_iter()
+                .filter(|s| !s.is_empty())
+                .map(|n| {
+                    pos_of.get(n).copied().ok_or_else(|| anyhow!("unknown operand {n:?}"))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            let op = match opname {
+                "broadcast" => Op::Broadcast { dims: dims_attr("dimensions")? },
+                "reshape" => Op::Reshape,
+                "convert" => Op::Convert,
+                "transpose" => Op::Transpose { perm: dims_attr("dimensions")? },
+                "compare" => Op::Compare {
+                    dir: match get("direction")? {
+                        "EQ" => CmpDir::Eq,
+                        "NE" => CmpDir::Ne,
+                        "LT" => CmpDir::Lt,
+                        "LE" => CmpDir::Le,
+                        "GT" => CmpDir::Gt,
+                        "GE" => CmpDir::Ge,
+                        d => bail!("unknown compare direction {d:?}"),
+                    },
+                },
+                "select" => Op::Select,
+                "add" => Op::Binary(BinOp::Add),
+                "subtract" => Op::Binary(BinOp::Sub),
+                "multiply" => Op::Binary(BinOp::Mul),
+                "divide" => Op::Binary(BinOp::Div),
+                "maximum" => Op::Binary(BinOp::Max),
+                "minimum" => Op::Binary(BinOp::Min),
+                "and" => Op::Binary(BinOp::And),
+                "or" => Op::Binary(BinOp::Or),
+                "negate" => Op::Unary(UnOp::Neg),
+                "tanh" => Op::Unary(UnOp::Tanh),
+                "exponential" => Op::Unary(UnOp::Exp),
+                "log" => Op::Unary(UnOp::Log),
+                "dot" => {
+                    let lc = dims_attr("lhs_contracting_dims")?;
+                    let rc = dims_attr("rhs_contracting_dims")?;
+                    if lc.len() != 1 || rc.len() != 1 {
+                        bail!("dot: only single contracting dims supported ({lc:?}/{rc:?})");
+                    }
+                    if attrs.iter().any(|(k, _)| k.contains("batch_dims")) {
+                        bail!("dot: batch dims unsupported");
+                    }
+                    Op::Dot { lc: lc[0], rc: rc[0] }
+                }
+                "reduce" => Op::Reduce {
+                    dims: dims_attr("dimensions")?,
+                    to_apply: comp_attr("to_apply")?,
+                },
+                "concatenate" => {
+                    let d = dims_attr("dimensions")?;
+                    if d.len() != 1 {
+                        bail!("concatenate: expected one dimension, got {d:?}");
+                    }
+                    Op::Concat { dim: d[0] }
+                }
+                "dynamic-slice" => {
+                    Op::DynamicSlice { sizes: dims_attr("dynamic_slice_sizes")? }
+                }
+                "dynamic-update-slice" => Op::DynamicUpdateSlice,
+                "gather" => Op::Gather(GatherDims {
+                    offset_dims: dims_attr("offset_dims")?,
+                    collapsed_slice_dims: dims_attr("collapsed_slice_dims")?,
+                    start_index_map: dims_attr("start_index_map")?,
+                    index_vector_dim: get("index_vector_dim")?.parse()?,
+                    slice_sizes: dims_attr("slice_sizes")?,
+                }),
+                "scatter" => Op::Scatter(ScatterDims {
+                    update_window_dims: dims_attr("update_window_dims")?,
+                    inserted_window_dims: dims_attr("inserted_window_dims")?,
+                    scatter_dims_to_operand_dims: dims_attr("scatter_dims_to_operand_dims")?,
+                    index_vector_dim: get("index_vector_dim")?.parse()?,
+                    to_apply: comp_attr("to_apply")?,
+                }),
+                "call" => Op::Call { to_apply: comp_attr("to_apply")? },
+                "while" => Op::While {
+                    condition: comp_attr("condition")?,
+                    body: comp_attr("body")?,
+                },
+                "tuple" => Op::Tuple,
+                "get-tuple-element" => {
+                    Op::GetTupleElement { index: get("index")?.parse().context("gte index")? }
+                }
+                other => bail!("unsupported HLO op {other:?}"),
+            };
+            (op, operands)
+        }
+    };
+    Ok((is_root, Instr { name: name.trim().to_string(), shape, op, operands }))
+}
+
+/// Look up a required `key=value` attribute.
+fn attr<'a>(attrs: &'a [(String, String)], opname: &str, k: &str) -> Result<&'a str> {
+    attrs
+        .iter()
+        .find(|(a, _)| a == k)
+        .map(|(_, v)| v.as_str())
+        .ok_or_else(|| anyhow!("{opname}: missing attribute {k}"))
+}
+
+/// Parse one shape (array or tuple) from the front of `s`; returns the
+/// shape and the unconsumed remainder.
+fn parse_shape(s: &str) -> Result<(Shape, &str)> {
+    let s = s.trim_start();
+    if let Some(rest) = s.strip_prefix('(') {
+        // Tuple type: count member shapes (their details are never needed;
+        // member tensors carry their own dims at runtime).
+        let mut rest = rest.trim_start();
+        let mut n = 0usize;
+        loop {
+            let (_, r) = parse_array_shape(rest)?;
+            n += 1;
+            rest = r.trim_start();
+            if let Some(r) = rest.strip_prefix(',') {
+                rest = r.trim_start();
+            } else if let Some(r) = rest.strip_prefix(')') {
+                return Ok((Shape::Tuple(n), r));
+            } else {
+                bail!("malformed tuple type near {rest:?}");
+            }
+        }
+    }
+    let (shape, rest) = parse_array_shape(s)?;
+    Ok((Shape::Arr(shape.0, shape.1), rest))
+}
+
+fn parse_array_shape(s: &str) -> Result<((Ty, Vec<usize>), &str)> {
+    let open = s.find('[').with_context(|| format!("missing `[` in shape near {s:?}"))?;
+    let ty = match &s[..open] {
+        "f32" => Ty::F32,
+        "s32" => Ty::S32,
+        "pred" => Ty::Pred,
+        other => bail!("unsupported element type {other:?}"),
+    };
+    let close = s.find(']').context("missing `]` in shape")?;
+    let dims_str = &s[open + 1..close];
+    let dims: Vec<usize> = if dims_str.is_empty() {
+        Vec::new()
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().parse::<usize>().map_err(|e| anyhow!("dim {d:?}: {e}")))
+            .collect::<Result<_>>()?
+    };
+    // Skip the physical-layout annotation, e.g. `{1,0}`.
+    let mut rest = &s[close + 1..];
+    if let Some(r) = rest.strip_prefix('{') {
+        let end = r.find('}').context("unterminated layout braces")?;
+        rest = &r[end + 1..];
+    }
+    Ok(((ty, dims), rest))
+}
+
+/// Find the `)` matching the `(` at byte offset `open`.
+fn matching_paren(s: &str, open: usize) -> Result<usize> {
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices().skip(open) {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    bail!("unbalanced parentheses")
+}
+
+/// Split on commas that sit outside `{}` braces.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(s[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let tail = s[start..].trim();
+    if !tail.is_empty() || !out.is_empty() {
+        out.push(tail);
+    }
+    out
+}
+
+fn parse_attrs(s: &str) -> Result<Vec<(String, String)>> {
+    split_top_level(s)
+        .into_iter()
+        .filter(|a| !a.is_empty())
+        .map(|a| {
+            let (k, v) = a.split_once('=').with_context(|| format!("attribute {a:?}"))?;
+            Ok((k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect()
+}
+
+fn parse_usize_list(v: &str) -> Result<Vec<usize>> {
+    let inner = v
+        .strip_prefix('{')
+        .and_then(|v| v.strip_suffix('}'))
+        .with_context(|| format!("expected {{...}} list, got {v:?}"))?;
+    if inner.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().map_err(|e| anyhow!("list item {d:?}: {e}")))
+        .collect()
+}
+
+fn parse_constant(text: &str, ty: Ty, dims: &[usize]) -> Result<Tensor> {
+    let n: usize = dims.iter().product();
+    let items: Vec<&str> = match text.strip_prefix('{') {
+        Some(rest) => rest
+            .strip_suffix('}')
+            .context("unterminated constant braces")?
+            .split(',')
+            .map(str::trim)
+            .collect(),
+        None => vec![text],
+    };
+    if items.len() != n {
+        bail!("constant {text:?}: {} elements for shape {dims:?}", items.len());
+    }
+    Ok(match ty {
+        Ty::F32 => Tensor::f32(
+            items
+                .iter()
+                .map(|s| s.parse::<f32>().map_err(|e| anyhow!("f32 {s:?}: {e}")))
+                .collect::<Result<_>>()?,
+            dims.to_vec(),
+        ),
+        Ty::S32 => Tensor::i32(
+            items
+                .iter()
+                .map(|s| s.parse::<i32>().map_err(|e| anyhow!("s32 {s:?}: {e}")))
+                .collect::<Result<_>>()?,
+            dims.to_vec(),
+        ),
+        Ty::Pred => Tensor::pred(
+            items
+                .iter()
+                .map(|s| match *s {
+                    "true" => Ok(true),
+                    "false" => Ok(false),
+                    other => bail!("pred constant {other:?}"),
+                })
+                .collect::<Result<_>>()?,
+            dims.to_vec(),
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMALL: &str = "HloModule jit__lambda_, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY main.9 {
+  Arg_0.5 = f32[4]{0} parameter(0)
+  constant.6 = f32[] constant(2.5)
+  broadcast.7 = f32[4]{0} broadcast(constant.6), dimensions={}
+  add.8 = f32[4]{0} add(Arg_0.5, broadcast.7)
+  ROOT tuple.9 = (f32[4]{0}) tuple(add.8)
+}
+";
+
+    #[test]
+    fn parses_small_module() {
+        let m = parse_module(SMALL).unwrap();
+        assert_eq!(m.comps.len(), 2);
+        let entry = &m.comps[m.entry];
+        assert_eq!(entry.name, "main.9");
+        assert_eq!(entry.n_params, 1);
+        assert_eq!(entry.instrs.len(), 5);
+        assert_eq!(entry.root, 4);
+        assert!(matches!(entry.instrs[3].op, Op::Binary(BinOp::Add)));
+        assert_eq!(entry.instrs[3].operands, vec![0, 2]);
+        // Arg_0.5's last (and only) use is add.8 at position 3.
+        assert_eq!(entry.last_use[0], 3);
+        assert_eq!(entry.last_use[entry.root], usize::MAX);
+    }
+
+    #[test]
+    fn parses_tuple_types_and_comments() {
+        let text = "HloModule m
+ENTRY e.3 {
+  Arg_0.1 = s32[] parameter(0)
+  ROOT tuple.2 = (s32[], /*index=1*/s32[]) tuple(Arg_0.1, Arg_0.1)
+}
+";
+        let m = parse_module(text).unwrap();
+        let e = &m.comps[m.entry];
+        assert_eq!(e.instrs[1].shape, Shape::Tuple(2));
+        assert_eq!(e.instrs[1].operands, vec![0, 0]);
+    }
+
+    #[test]
+    fn parses_attr_heavy_ops() {
+        let text = "HloModule m
+ENTRY e.9 {
+  Arg_0.1 = f32[8,4]{1,0} parameter(0)
+  Arg_1.2 = s32[3,1]{1,0} parameter(1)
+  gather.3 = f32[3,4]{1,0} gather(Arg_0.1, Arg_1.2), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,4}
+  constant.4 = s32[1]{0} constant({2})
+  transpose.5 = f32[4,8]{0,1} transpose(Arg_0.1), dimensions={1,0}
+  iota.6 = s32[5]{0} iota(), iota_dimension=0
+  ROOT tuple.7 = (f32[3,4]{1,0}) tuple(gather.3)
+}
+";
+        let m = parse_module(text).unwrap();
+        let e = &m.comps[m.entry];
+        match &e.instrs[2].op {
+            Op::Gather(g) => {
+                assert_eq!(g.slice_sizes, vec![1, 4]);
+                assert_eq!(g.index_vector_dim, 1);
+            }
+            other => panic!("expected gather, got {other:?}"),
+        }
+        match &e.instrs[3].op {
+            Op::Constant(t) => assert_eq!(t.i().unwrap(), &[2]),
+            other => panic!("expected constant, got {other:?}"),
+        }
+        assert!(matches!(&e.instrs[4].op, Op::Transpose { perm } if perm == &vec![1, 0]));
+        assert!(matches!(e.instrs[5].op, Op::Iota { dim: 0 }));
+    }
+
+    #[test]
+    fn rejects_non_hlo_and_unknown_ops() {
+        assert!(parse_module("this is not hlo").is_err());
+        let bad = "HloModule m\nENTRY e.2 {\n  ROOT fft.1 = f32[4]{0} fft()\n}\n";
+        assert!(parse_module(bad).is_err());
+    }
+
+    #[test]
+    fn special_constants_parse() {
+        let text = "HloModule m
+ENTRY e.4 {
+  c0.1 = f32[] constant(nan)
+  c1.2 = pred[] constant(true)
+  ROOT t.3 = (f32[], pred[]) tuple(c0.1, c1.2)
+}
+";
+        let m = parse_module(text).unwrap();
+        let e = &m.comps[m.entry];
+        match &e.instrs[0].op {
+            Op::Constant(t) => assert!(t.f().unwrap()[0].is_nan()),
+            other => panic!("{other:?}"),
+        }
+        match &e.instrs[1].op {
+            Op::Constant(t) => assert!(t.p().unwrap()[0]),
+            other => panic!("{other:?}"),
+        }
+    }
+}

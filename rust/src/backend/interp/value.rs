@@ -1,0 +1,241 @@
+//! Runtime values for the HLO interpreter.
+//!
+//! Tensors are logical row-major (HLO layout annotations only describe
+//! physical placement, which a host interpreter is free to ignore).
+//! Element storage is `Rc`-shared so SSA value propagation, tuple
+//! packing/unpacking and `reshape` are O(1); mutating ops
+//! (`dynamic-update-slice`, `scatter`) go through `Rc::make_mut`, which
+//! writes in place whenever the evaluator has arranged sole ownership —
+//! the difference between O(rows·dim) and O(rows·vocab·dim) per training
+//! step for the per-row embedding-update loops.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+/// Element type of an array value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ty {
+    F32,
+    S32,
+    Pred,
+}
+
+impl Ty {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Ty::F32 => "f32",
+            Ty::S32 => "s32",
+            Ty::Pred => "pred",
+        }
+    }
+}
+
+/// Shared element storage.
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Rc<Vec<f32>>),
+    I32(Rc<Vec<i32>>),
+    Pred(Rc<Vec<bool>>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Pred(v) => v.len(),
+        }
+    }
+
+    pub fn ty(&self) -> Ty {
+        match self {
+            Data::F32(_) => Ty::F32,
+            Data::I32(_) => Ty::S32,
+            Data::Pred(_) => Ty::Pred,
+        }
+    }
+}
+
+/// A dense array value: dims + shared storage.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, dims: Vec<usize>) -> Tensor {
+        Tensor { dims, data: Data::F32(Rc::new(data)) }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: Vec<usize>) -> Tensor {
+        Tensor { dims, data: Data::I32(Rc::new(data)) }
+    }
+
+    pub fn pred(data: Vec<bool>, dims: Vec<usize>) -> Tensor {
+        Tensor { dims, data: Data::Pred(Rc::new(data)) }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn f(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {}", other.ty().name()),
+        }
+    }
+
+    pub fn i(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            other => bail!("expected s32 tensor, got {}", other.ty().name()),
+        }
+    }
+
+    pub fn p(&self) -> Result<&[bool]> {
+        match &self.data {
+            Data::Pred(v) => Ok(v),
+            other => bail!("expected pred tensor, got {}", other.ty().name()),
+        }
+    }
+
+    /// Scalar s32 extraction (dynamic-slice start operands).
+    pub fn scalar_i32(&self) -> Result<i32> {
+        let v = self.i()?;
+        if v.len() != 1 {
+            bail!("expected scalar s32, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// Scalar pred extraction (while-loop conditions).
+    pub fn scalar_pred(&self) -> Result<bool> {
+        let v = self.p()?;
+        if v.len() != 1 {
+            bail!("expected scalar pred, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+/// An SSA value: a dense array or a tuple of values.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Arr(Tensor),
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    pub fn arr(&self) -> Result<&Tensor> {
+        match self {
+            Value::Arr(t) => Ok(t),
+            Value::Tuple(_) => bail!("expected array value, got tuple"),
+        }
+    }
+
+    pub fn into_arr(self) -> Result<Tensor> {
+        match self {
+            Value::Arr(t) => Ok(t),
+            Value::Tuple(_) => bail!("expected array value, got tuple"),
+        }
+    }
+}
+
+/// Host literal → interpreter value (artifact inputs are f32/s32 only).
+pub fn value_from_literal(lit: &Literal) -> Result<Value> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("input literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    Ok(Value::Arr(match shape.ty() {
+        xla::ElementType::F32 => Tensor::f32(lit.to_vec::<f32>()?, dims),
+        xla::ElementType::S32 => Tensor::i32(lit.to_vec::<i32>()?, dims),
+        other => bail!("unsupported input dtype {other:?}"),
+    }))
+}
+
+/// Interpreter tensor → host literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => {
+            if t.dims.is_empty() {
+                return Ok(Literal::scalar(v[0]));
+            }
+            Literal::vec1(v.as_slice())
+        }
+        Data::I32(v) => {
+            if t.dims.is_empty() {
+                return Ok(Literal::scalar(v[0]));
+            }
+            Literal::vec1(v.as_slice())
+        }
+        Data::Pred(_) => bail!("pred tensors cannot leave the interpreter as literals"),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Row-major strides for `dims`.
+pub fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Advance a multi-index odometer; returns false after the last index.
+pub fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
+    for i in (0..dims.len()).rev() {
+        idx[i] += 1;
+        if idx[i] < dims[i] {
+            return true;
+        }
+        idx[i] = 0;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_are_row_major() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+        assert!(strides(&[]).is_empty());
+    }
+
+    #[test]
+    fn odometer_walks_row_major() {
+        let dims = [2usize, 2];
+        let mut idx = vec![0usize; 2];
+        let mut seen = vec![idx.clone()];
+        while next_index(&mut idx, &dims) {
+            seen.push(idx.clone());
+        }
+        assert_eq!(seen, vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let v = value_from_literal(&lit).unwrap();
+        let t = v.arr().unwrap();
+        assert_eq!(t.dims, vec![2, 2]);
+        let back = tensor_to_literal(t).unwrap();
+        assert_eq!(back.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_extractors() {
+        let t = Tensor::i32(vec![7], vec![]);
+        assert_eq!(t.scalar_i32().unwrap(), 7);
+        let p = Tensor::pred(vec![true], vec![]);
+        assert!(p.scalar_pred().unwrap());
+        assert!(Tensor::f32(vec![0.0], vec![]).scalar_i32().is_err());
+    }
+}

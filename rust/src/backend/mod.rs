@@ -1,0 +1,107 @@
+//! Execution backends: the seam between the artifact runtime and whatever
+//! actually runs HLO.
+//!
+//! A [`Backend`] turns a manifest [`ArtifactSpec`] into a [`Compiled`]
+//! executable; everything above this module (runtime, trainer, server,
+//! benches) deals only in `Literal`s and `Buffer`s and never names a
+//! concrete backend. Two implementations ship:
+//!
+//! * [`pjrt::PjrtBackend`] — the real thing: PJRT compile/execute through
+//!   the `xla` crate. With the vendored API stub its probe fails at
+//!   startup, which is how `select` knows to fall back.
+//! * [`interp::InterpBackend`] — a pure-Rust HLO text interpreter covering
+//!   the closed op set the committed artifacts use. Slower than a native
+//!   runtime, but it executes every artifact on any build, which is what
+//!   re-enables the cpu / gpu-naive / gpu-opt backends and the E1–E8
+//!   benches in this environment.
+//!
+//! Selection: `select()` probes PJRT and falls back to the interpreter;
+//! `POLYGLOT_BACKEND=pjrt|interp` forces a choice (useful for pinning CI
+//! to the interpreter or failing fast when a real PJRT build regresses).
+
+pub mod interp;
+pub mod pjrt;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::runtime::manifest::ArtifactSpec;
+
+/// A compiled artifact, ready to execute.
+pub trait Compiled {
+    /// Execute with host literals. Returns the decomposed outputs: the
+    /// tuple elements for tupled roots, a single-element vec otherwise.
+    fn execute(&self, inputs: &[&Literal]) -> Result<Vec<Literal>>;
+
+    /// Execute keeping operands and the (single, untupled) result in
+    /// backend-native buffers — the device-resident update loop.
+    fn execute_buffers(&self, args: &[&Buffer]) -> Result<Buffer>;
+
+    /// Upload a literal into a backend-native buffer.
+    fn upload(&self, lit: &Literal) -> Result<Buffer>;
+}
+
+/// An execution backend: compiles artifacts into [`Compiled`] handles.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn compile(&self, spec: &ArtifactSpec) -> Result<Box<dyn Compiled>>;
+}
+
+/// A backend-native operand buffer. For PJRT this is a device buffer; the
+/// interpreter's "device" is host memory, so it wraps a literal.
+pub enum Buffer {
+    Host(Literal),
+    Pjrt(xla::PjRtBuffer),
+}
+
+impl Buffer {
+    /// Copy the buffer back into a host literal.
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            Buffer::Host(l) => Ok(l.clone()),
+            Buffer::Pjrt(b) => b.to_literal_sync().context("downloading device buffer"),
+        }
+    }
+}
+
+/// Pick the execution backend for this process: PJRT when a real binding
+/// is present (the probe compiles a trivial module), the interpreter
+/// otherwise. `POLYGLOT_BACKEND=pjrt|interp` overrides the probe.
+pub fn select() -> Result<Box<dyn Backend>> {
+    match std::env::var("POLYGLOT_BACKEND").ok().as_deref() {
+        Some("pjrt") => {
+            let b = pjrt::PjrtBackend::probe()
+                .context("POLYGLOT_BACKEND=pjrt but the PJRT probe failed")?;
+            Ok(Box::new(b))
+        }
+        Some("interp") => Ok(Box::new(interp::InterpBackend::new())),
+        Some(other) => bail!("POLYGLOT_BACKEND={other:?} (expected pjrt | interp)"),
+        None => match pjrt::PjrtBackend::probe() {
+            Ok(b) => Ok(Box::new(b)),
+            Err(_) => Ok(Box::new(interp::InterpBackend::new())),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_falls_back_to_interpreter_under_the_stub() {
+        // The vendored xla stub cannot compile, so auto-selection must
+        // yield the interpreter (unless a future env forces pjrt).
+        if std::env::var("POLYGLOT_BACKEND").is_ok() {
+            return;
+        }
+        let b = select().unwrap();
+        assert_eq!(b.name(), "interp");
+    }
+
+    #[test]
+    fn buffer_round_trips_literals() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        let b = Buffer::Host(l);
+        assert_eq!(b.to_literal().unwrap().to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+    }
+}

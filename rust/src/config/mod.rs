@@ -25,7 +25,7 @@ pub enum Backend {
     /// Pallas-kernel artifact — the paper's optimized GPU.
     GpuOpt,
     /// Pure-Rust engine (`baselines::RefModel` + the `grad` subsystem's
-    /// parallel sharded scatter-add) — needs no PJRT artifacts, so it
+    /// parallel sharded scatter-add) — needs no compiled artifacts, so it
     /// trains and serves anywhere the crate builds.
     Host,
 }
@@ -61,7 +61,7 @@ impl Backend {
         }
     }
 
-    /// Does this backend execute through PJRT artifacts?
+    /// Does this backend execute through compiled artifacts?
     pub fn needs_artifacts(&self) -> bool {
         !matches!(self, Backend::Host)
     }

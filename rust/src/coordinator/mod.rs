@@ -1,5 +1,5 @@
-//! L3 coordination: the training loop over PJRT artifacts, metrics, and
-//! checkpointing. See `trainer` for the three backend strategies — this is
+//! L3 coordination: the training loop over compiled artifacts, metrics,
+//! and checkpointing. See `trainer` for the backend strategies — this is
 //! the paper's "system" layer, where the per-row dispatch cost of the
 //! unoptimized advanced-indexing implementation lives.
 

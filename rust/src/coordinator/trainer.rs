@@ -1,7 +1,9 @@
 //! The training coordinator: drives the data pipeline into one of four
 //! backend engines.
 //!
-//! Three PJRT-artifact backends (DESIGN.md §2):
+//! Three artifact backends (DESIGN.md §2) — all three execute through the
+//! runtime's selected execution backend (PJRT when a real binding exists,
+//! the pure-Rust HLO interpreter otherwise):
 //!
 //! * `cpu` — fused SGD-step artifact with XLA's native scatter
 //!   (`train_step_ref_b{B}`): the paper's CPU baseline.
@@ -9,12 +11,12 @@
 //!   through the Pallas row-scatter kernel (`train_step_opt_b{B}`): the
 //!   paper's optimized GPU.
 //! * `gpu-naive` — the grads-export artifact (`train_naive_b{B}`) plus
-//!   **one PJRT dispatch per gradient row** through `scatter_row1_*`:
+//!   **one dispatch per gradient row** through `scatter_row1_*`:
 //!   Theano's original per-row Python implementation of
 //!   `AdvancedIncSubtensor1`, whose dispatch+sync cost per row is exactly
 //!   what the paper's Table 1 measured at 81.7% of training time.
 //!
-//! And one pure-Rust backend:
+//! And one pure-Rust engine that bypasses artifacts entirely:
 //!
 //! * `host` — `baselines::RefModel` forward/backward fanned out over a
 //!   thread pool, with per-thread gradient accumulators merged by
@@ -24,8 +26,8 @@
 //!   (serial below the `[grad]` crossover, sharded-parallel above) is the
 //!   host-thread analogue of the paper's batched-scatter finding.
 //!
-//! For the artifact backends, parameters live as PJRT output literals and
-//! are fed straight back into the next dispatch — never copied into Rust
+//! For the artifact backends, parameters live as output literals and are
+//! fed straight back into the next dispatch — never copied into Rust
 //! vectors on the hot path. The optimized backends can also run K scanned
 //! steps per dispatch (`train_multi_opt_*`) to amortize the tuple-literal
 //! round-trip.
@@ -53,8 +55,8 @@ pub enum ModelSize {
     Small,
 }
 
-/// PJRT-artifact execution state.
-struct PjrtEngine {
+/// Artifact execution state (runs on the runtime's selected backend).
+struct ArtifactEngine {
     params: Vec<Literal>, // e, w1, b1, w2, b2
     step_exe: Rc<Executable>,
     row_exe: Option<Rc<Executable>>,   // gpu-naive per-row scatter
@@ -68,7 +70,7 @@ struct HostEngine {
 }
 
 enum Engine {
-    Pjrt(PjrtEngine),
+    Artifact(ArtifactEngine),
     Host(Box<HostEngine>),
 }
 
@@ -120,7 +122,7 @@ impl<'rt> Trainer<'rt> {
         }
 
         let rt = rt.with_context(|| {
-            format!("backend {} executes PJRT artifacts and needs a runtime", backend.name())
+            format!("backend {} executes compiled artifacts and needs a runtime", backend.name())
         })?;
         let name = Manifest::train_step_name(backend.artifact_tag(), batch, small);
         let step_exe = rt.load(&name).with_context(|| {
@@ -155,7 +157,7 @@ impl<'rt> Trainer<'rt> {
             batch,
             lr: cfg.training.lr,
             dims,
-            engine: Engine::Pjrt(PjrtEngine { params, step_exe, row_exe, multi_exe }),
+            engine: Engine::Artifact(ArtifactEngine { params, step_exe, row_exe, multi_exe }),
             metrics: Metrics::new(25),
         })
     }
@@ -166,7 +168,7 @@ impl<'rt> Trainer<'rt> {
             bail!("checkpoint dims mismatch artifact dims");
         }
         match &mut self.engine {
-            Engine::Pjrt(p) => p.params = upload_params(host)?,
+            Engine::Artifact(p) => p.params = upload_params(host)?,
             Engine::Host(h) => h.params = host.clone(),
         }
         Ok(())
@@ -175,7 +177,7 @@ impl<'rt> Trainer<'rt> {
     /// Copy parameters back to the host (checkpointing / serving).
     pub fn params_host(&self) -> Result<ModelParams> {
         match &self.engine {
-            Engine::Pjrt(p) => download_params(&p.params, &self.dims),
+            Engine::Artifact(p) => download_params(&p.params, &self.dims),
             Engine::Host(h) => Ok(h.params.clone()),
         }
     }
@@ -185,7 +187,7 @@ impl<'rt> Trainer<'rt> {
     /// `params_host` / `eval_loss_host` there).
     pub fn params(&self) -> &[Literal] {
         match &self.engine {
-            Engine::Pjrt(p) => &p.params,
+            Engine::Artifact(p) => &p.params,
             Engine::Host(_) => &[],
         }
     }
@@ -202,16 +204,16 @@ impl<'rt> Trainer<'rt> {
                 let mut model = RefModel::new(&h.params);
                 Ok(model.loss(&h.params, windows, corrupt))
             }
-            Engine::Pjrt(_) => bail!("eval_loss_host requires the host backend"),
+            Engine::Artifact(_) => bail!("eval_loss_host requires the host backend"),
         }
     }
 
-    /// Number of PJRT dispatches a single step costs on this backend
+    /// Number of artifact dispatches a single step costs on this backend
     /// (1 for fused backends; 1 + rows for gpu-naive; 0 on the host).
     pub fn dispatches_per_step(&self) -> usize {
         match (&self.engine, self.backend) {
             (Engine::Host(_), _) => 0,
-            (Engine::Pjrt(p), Backend::GpuNaive) => {
+            (Engine::Artifact(p), Backend::GpuNaive) => {
                 1 + p.step_exe.spec.rows.unwrap_or(2 * self.batch * self.dims.window)
             }
             _ => 1,
@@ -230,7 +232,7 @@ impl<'rt> Trainer<'rt> {
         let lr = self.lr;
         let loss = match &mut self.engine {
             Engine::Host(h) => host_step(h, batch, lr)?,
-            Engine::Pjrt(p) => {
+            Engine::Artifact(p) => {
                 let windows = lit_i32(&batch.windows, &[batch.batch, batch.window])?;
                 let corrupt = lit_i32(&batch.corrupt, &[batch.batch])?;
                 let lr_lit = scalar_f32(lr);
@@ -267,7 +269,7 @@ impl<'rt> Trainer<'rt> {
         }
         let t0 = Instant::now();
         let (b, c) = (self.batch, self.dims.window);
-        let Engine::Pjrt(p) = &mut self.engine else {
+        let Engine::Artifact(p) = &mut self.engine else {
             unreachable!("host handled above")
         };
         let multi = p
@@ -306,9 +308,9 @@ impl<'rt> Trainer<'rt> {
 }
 
 /// The unoptimized backend: fused dense update + per-row embedding scatter
-/// via one PJRT dispatch per gradient row.
+/// via one dispatch per gradient row.
 fn naive_step(
-    p: &mut PjrtEngine,
+    p: &mut ArtifactEngine,
     dims: &ModelDims,
     windows: &Literal,
     corrupt: &Literal,
@@ -324,17 +326,17 @@ fn naive_step(
 
     let row_exe = p.row_exe.as_ref().expect("naive backend has row_exe");
     // Serialized per-row dispatch — Theano's Python loop. W stays
-    // device-resident (as Theano's shared variable did); each row still
-    // pays a host->device upload of its operands, a dispatch, a sync,
-    // and a device-side copy of E — the cost structure the paper
-    // measured at 4.6 ms per call (§4.2).
+    // backend-resident (as Theano's shared variable did); each row still
+    // pays an upload of its operands, a dispatch, a sync, and a copy of
+    // E — the cost structure the paper measured at 4.6 ms per call
+    // (§4.2).
     let mut e_buf = row_exe.to_device(&p.params[0])?;
     for (r, &i) in idx_all.iter().enumerate() {
         let idx1 = row_exe.upload_i32(&[i], &[1])?;
         let row1 = row_exe.upload_f32(&delta_rows[r * d..(r + 1) * d], &[1, d])?;
         e_buf = row_exe.run_b(&[&e_buf, &idx1, &row1])?;
     }
-    p.params[0] = e_buf.to_literal_sync().context("downloading E")?;
+    p.params[0] = e_buf.to_literal().context("downloading E")?;
     for (slot, lit) in [(1usize, 0usize), (2, 1), (3, 2), (4, 3)] {
         p.params[slot] = clone_literal(&out[lit])?;
     }

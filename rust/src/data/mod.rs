@@ -5,7 +5,7 @@
 //! boundaries); the trainer pairs each window with a corruption of its
 //! center word drawn by the negative sampler. `batcher` runs producers on
 //! their own threads behind a bounded queue so example assembly overlaps
-//! PJRT execution (backpressure keeps memory bounded).
+//! artifact execution (backpressure keeps memory bounded).
 
 pub mod batcher;
 pub mod negative;

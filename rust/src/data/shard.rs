@@ -34,7 +34,9 @@ mod tests {
 
     fn mk(n: usize, seed: u64) -> Vec<Vec<u32>> {
         let mut rng = Rng::new(seed);
-        (0..n).map(|_| (0..(1 + rng.below_usize(40))).map(|_| rng.next_u32() % 100).collect()).collect()
+        (0..n)
+            .map(|_| (0..(1 + rng.below_usize(40))).map(|_| rng.next_u32() % 100).collect())
+            .collect()
     }
 
     #[test]

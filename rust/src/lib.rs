@@ -14,6 +14,7 @@
 //! See DESIGN.md for the architecture and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+pub mod backend;
 pub mod baselines;
 pub mod bench;
 pub mod cli;

@@ -22,7 +22,11 @@ use polyglot_gpu::util::fmt;
 use polyglot_gpu::util::rng::Rng;
 
 fn cli() -> Cli {
-    let common = || FlagSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") };
+    let common = || FlagSpec {
+        name: "artifacts",
+        help: "artifacts directory",
+        default: Some("artifacts"),
+    };
     Cli {
         program: "polyglot",
         about: "train/serve Polyglot embeddings over AOT XLA artifacts (2014 GPU-paper reproduction)",
@@ -33,9 +37,17 @@ fn cli() -> Cli {
                 flags: vec![
                     common(),
                     FlagSpec { name: "steps", help: "SGD steps", default: Some("500") },
-                    FlagSpec { name: "backend", help: "cpu | gpu-naive | gpu-opt | host", default: Some("gpu-opt") },
+                    FlagSpec {
+                        name: "backend",
+                        help: "cpu | gpu-naive | gpu-opt | host",
+                        default: Some("gpu-opt"),
+                    },
                     FlagSpec { name: "batch", help: "batch size (16..512)", default: Some("16") },
-                    FlagSpec { name: "out", help: "checkpoint output path", default: Some("checkpoints/model.pgck") },
+                    FlagSpec {
+                        name: "out",
+                        help: "checkpoint output path",
+                        default: Some("checkpoints/model.pgck"),
+                    },
                 ],
             },
             CommandSpec {
@@ -43,9 +55,21 @@ fn cli() -> Cli {
                 about: "serve scores + nearest neighbours from a checkpoint",
                 flags: vec![
                     common(),
-                    FlagSpec { name: "checkpoint", help: "model checkpoint", default: Some("checkpoints/model.pgck") },
-                    FlagSpec { name: "vocab", help: "vocab file", default: Some("checkpoints/vocab.txt") },
-                    FlagSpec { name: "addr", help: "listen address", default: Some("127.0.0.1:7878") },
+                    FlagSpec {
+                        name: "checkpoint",
+                        help: "model checkpoint",
+                        default: Some("checkpoints/model.pgck"),
+                    },
+                    FlagSpec {
+                        name: "vocab",
+                        help: "vocab file",
+                        default: Some("checkpoints/vocab.txt"),
+                    },
+                    FlagSpec {
+                        name: "addr",
+                        help: "listen address",
+                        default: Some("127.0.0.1:7878"),
+                    },
                 ],
             },
             CommandSpec {
@@ -53,7 +77,11 @@ fn cli() -> Cli {
                 about: "Table-1 hot-spot profile of a training backend",
                 flags: vec![
                     common(),
-                    FlagSpec { name: "backend", help: "backend to profile", default: Some("gpu-naive") },
+                    FlagSpec {
+                        name: "backend",
+                        help: "backend to profile",
+                        default: Some("gpu-naive"),
+                    },
                     FlagSpec { name: "steps", help: "profiled steps", default: Some("30") },
                 ],
             },
@@ -89,7 +117,11 @@ fn cli() -> Cli {
                 flags: vec![
                     FlagSpec { name: "out", help: "output path", default: Some("") },
                     FlagSpec { name: "languages", help: "language count", default: Some("3") },
-                    FlagSpec { name: "tokens", help: "tokens per language", default: Some("100000") },
+                    FlagSpec {
+                        name: "tokens",
+                        help: "tokens per language",
+                        default: Some("100000"),
+                    },
                 ],
             },
             CommandSpec {
@@ -97,8 +129,16 @@ fn cli() -> Cli {
                 about: "Downpour-style async SGD experiment (paper §5 future work)",
                 flags: vec![
                     FlagSpec { name: "workers", help: "worker threads", default: Some("4") },
-                    FlagSpec { name: "staleness", help: "batches between parameter pulls", default: Some("4") },
-                    FlagSpec { name: "examples", help: "total example budget", default: Some("200000") },
+                    FlagSpec {
+                        name: "staleness",
+                        help: "batches between parameter pulls",
+                        default: Some("4"),
+                    },
+                    FlagSpec {
+                        name: "examples",
+                        help: "total example budget",
+                        default: Some("200000"),
+                    },
                 ],
             },
             CommandSpec {
@@ -106,7 +146,11 @@ fn cli() -> Cli {
                 about: "Hellinger-PCA embeddings (paper §5 future work)",
                 flags: vec![
                     FlagSpec { name: "dim", help: "embedding width", default: Some("32") },
-                    FlagSpec { name: "context", help: "context vocabulary size", default: Some("512") },
+                    FlagSpec {
+                        name: "context",
+                        help: "context vocabulary size",
+                        default: Some("512"),
+                    },
                     FlagSpec { name: "threads", help: "PCA threads", default: Some("4") },
                 ],
             },
@@ -176,11 +220,14 @@ fn cmd_train(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()>
         None
     };
     println!(
-        "[train] backend={} batch={} steps={} (artifacts: {})",
+        "[train] backend={} batch={} steps={} (artifacts: {}{})",
         cfg.training.backend.name(),
         cfg.training.batch,
         cfg.training.steps,
-        cfg.runtime.artifacts_dir
+        cfg.runtime.artifacts_dir,
+        rt.as_ref()
+            .map(|r| format!(", executed via {}", r.backend_name()))
+            .unwrap_or_default()
     );
     let vocab_cap = match &rt {
         Some(r) => r.manifest.main_model.vocab,
@@ -294,7 +341,7 @@ fn cmd_indexing(inv: &polyglot_gpu::cli::Invocation, cfg: Config) -> Result<()> 
             let r1 = row1.upload_f32(&y[r * d..(r + 1) * d], &[1, d]).unwrap();
             cur = row1.run_b(&[&cur, &i1, &r1]).unwrap();
         }
-        cur.to_literal_sync().unwrap()
+        cur.to_literal().unwrap()
     });
 
     println!("[indexing] {rows} rows over [{v}x{d}] (paper §4.3: 207.59 s -> 3.66 s)");
@@ -469,6 +516,7 @@ fn cmd_hpca(inv: &polyglot_gpu::cli::Invocation, cfg: Config) -> Result<()> {
 fn cmd_info(cfg: Config) -> Result<()> {
     let rt = runtime(&cfg)?;
     let m = &rt.manifest;
+    println!("execution backend: {}", rt.backend_name());
     println!(
         "main model: V={} D={} C={} H={}",
         m.main_model.vocab, m.main_model.dim, m.main_model.window, m.main_model.hidden

@@ -1,11 +1,15 @@
-//! A compiled PJRT executable bound to its manifest spec.
+//! A compiled artifact bound to its manifest spec: a thin, backend-
+//! agnostic handle over [`Compiled`] that adds spec validation and
+//! dispatch accounting.
 
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
-use super::literal::check_spec;
+use crate::backend::{Backend, Buffer, Compiled};
+
+use super::literal::{check_spec, lit_f32, lit_i32};
 use super::manifest::ArtifactSpec;
 
 /// Compiled artifact + spec. Execution validates inputs against the spec
@@ -13,27 +17,20 @@ use super::manifest::ArtifactSpec;
 /// path once a pairing is proven).
 pub struct Executable {
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    compiled: Box<dyn Compiled>,
     pub check: bool,
     calls: std::cell::Cell<u64>,
     total: std::cell::Cell<Duration>,
 }
 
 impl Executable {
-    pub fn compile(client: &xla::PjRtClient, spec: ArtifactSpec) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.file
-                .to_str()
-                .with_context(|| format!("non-utf8 path {:?}", spec.file))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
+    pub fn compile(backend: &dyn Backend, spec: ArtifactSpec) -> Result<Executable> {
+        let compiled = backend
+            .compile(&spec)
             .with_context(|| format!("compiling artifact {:?}", spec.name))?;
         Ok(Executable {
             spec,
-            exe,
+            compiled,
             check: true,
             calls: std::cell::Cell::new(0),
             total: std::cell::Cell::new(Duration::ZERO),
@@ -58,19 +55,10 @@ impl Executable {
             }
         }
         let t0 = Instant::now();
-        let out = self
-            .exe
-            .execute::<&Literal>(inputs)
+        let tuple = self
+            .compiled
+            .execute(inputs)
             .with_context(|| format!("executing {:?}", self.spec.name))?;
-        let tuple = if self.spec.untupled {
-            vec![out[0][0].to_literal_sync().context("fetching result literal")?]
-        } else {
-            out[0][0]
-                .to_literal_sync()
-                .context("fetching result literal")?
-                .to_tuple()
-                .context("decomposing result tuple")?
-        };
         let dt = t0.elapsed();
         self.calls.set(self.calls.get() + 1);
         self.total.set(self.total.get() + dt);
@@ -85,11 +73,12 @@ impl Executable {
         Ok(tuple)
     }
 
-    /// Execute with device-resident buffers (no host round-trip). Only
+    /// Execute with backend-resident buffers (no host round-trip on the
+    /// PJRT backend; the interpreter's buffers are host literals). Only
     /// valid for `untupled` artifacts, whose single output buffer can be
     /// fed straight back into the next dispatch — the device-resident
     /// update loop Theano's per-row AdvancedIncSubtensor1 ran.
-    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+    pub fn run_b(&self, args: &[&Buffer]) -> Result<Buffer> {
         if !self.spec.untupled {
             bail!("run_b requires an untupled artifact ({:?} is tupled)", self.spec.name);
         }
@@ -102,55 +91,29 @@ impl Executable {
             );
         }
         let t0 = Instant::now();
-        let mut out = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(args)
+        let out = self
+            .compiled
+            .execute_buffers(args)
             .with_context(|| format!("executing (buffers) {:?}", self.spec.name))?;
         let dt = t0.elapsed();
         self.calls.set(self.calls.get() + 1);
         self.total.set(self.total.get() + dt);
-        Ok(out[0].swap_remove(0))
+        Ok(out)
     }
 
-    /// Upload a literal to a device buffer on this executable's client.
-    ///
-    /// Goes through `buffer_from_host_buffer` (synchronous
-    /// `kImmutableOnlyDuringCall` copy), NOT `buffer_from_host_literal`:
-    /// TFRT-CPU's `BufferFromHostLiteral` copies *asynchronously* and the
-    /// literal may be dropped before the copy lands — a use-after-free we
-    /// hit in practice (manifests as garbage buffers / segfaults under
-    /// rapid per-row dispatch).
-    pub fn to_device(&self, lit: &Literal) -> Result<xla::PjRtBuffer> {
-        let shape = lit.array_shape().context("to_device shape")?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let client = self.exe.client();
-        match shape.ty() {
-            xla::ElementType::F32 => {
-                let v = lit.to_vec::<f32>()?;
-                client.buffer_from_host_buffer(&v, &dims, None).context("upload f32")
-            }
-            xla::ElementType::S32 => {
-                let v = lit.to_vec::<i32>()?;
-                client.buffer_from_host_buffer(&v, &dims, None).context("upload i32")
-            }
-            other => bail!("to_device: unsupported dtype {other:?}"),
-        }
+    /// Upload a literal to a backend-native buffer for `run_b` chains.
+    pub fn to_device(&self, lit: &Literal) -> Result<Buffer> {
+        self.compiled.upload(lit)
     }
 
-    /// Upload raw f32 data directly to a device buffer (no literal).
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.exe
-            .client()
-            .buffer_from_host_buffer(data, dims, None)
-            .context("upload f32")
+    /// Upload raw f32 data directly to a backend buffer (no literal kept).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        self.compiled.upload(&lit_f32(data, dims)?)
     }
 
-    /// Upload raw i32 data directly to a device buffer (no literal).
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.exe
-            .client()
-            .buffer_from_host_buffer(data, dims, None)
-            .context("upload i32")
+    /// Upload raw i32 data directly to a backend buffer (no literal kept).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        self.compiled.upload(&lit_i32(data, dims)?)
     }
 
     /// Execute and also report wall time of the dispatch.

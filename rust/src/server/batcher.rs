@@ -7,11 +7,12 @@
 //!
 //! Two scoring engines sit behind the same batching loop:
 //!
-//! * **PJRT** — pads the batch to a `forward_b{B}` artifact and executes
-//!   it (one device dispatch per coalesced batch).
+//! * **Artifact** — pads the batch to a `forward_b{B}` artifact and
+//!   executes it (one dispatch per coalesced batch) on the runtime's
+//!   selected backend — PJRT or the HLO interpreter.
 //! * **Host** — `baselines::RefModel` scoring on the checkpoint
-//!   parameters. Selected automatically when artifacts or the PJRT
-//!   backend are unavailable, so `polyglot serve` works on any build.
+//!   parameters. Selected automatically when no artifacts directory is
+//!   present, so `polyglot serve` works even without `make artifacts`.
 
 use std::path::Path;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -32,9 +33,9 @@ pub struct ScoreRequest {
 }
 
 enum Scorer {
-    Pjrt {
-        // SAFETY of lifetime: exe borrows client state inside rt; keep rt
-        // boxed alongside for the executor's lifetime.
+    Artifact {
+        // SAFETY of lifetime: exe borrows backend state inside rt; keep
+        // rt boxed alongside for the executor's lifetime.
         _rt: Box<Runtime>,
         exe: std::rc::Rc<Executable>,
         params: Vec<xla::Literal>,
@@ -49,8 +50,8 @@ enum Scorer {
 
 pub struct BatchExecutor {
     scorer: Scorer,
-    /// Batch the backing engine executes (artifact batch for PJRT; the
-    /// configured max for the host engine).
+    /// Batch the backing engine executes (artifact batch for the artifact
+    /// scorer; the configured max for the host engine).
     pub artifact_batch: usize,
     window: usize,
     max_batch: usize,
@@ -60,7 +61,7 @@ pub struct BatchExecutor {
 impl BatchExecutor {
     pub fn new(artifacts_dir: &Path, cfg: &ServerCfg, params: ModelParams) -> Result<Self> {
         let window = params.window;
-        match Self::try_pjrt(artifacts_dir, cfg, &params) {
+        match Self::try_artifact(artifacts_dir, cfg, &params) {
             Ok((scorer, artifact_batch)) => Ok(BatchExecutor {
                 scorer,
                 artifact_batch,
@@ -70,7 +71,7 @@ impl BatchExecutor {
             }),
             Err(e) => {
                 eprintln!(
-                    "[server] PJRT scoring unavailable ({e:#}); serving with the host model"
+                    "[server] artifact scoring unavailable ({e:#}); serving with the host model"
                 );
                 let model = RefModel::new(&params);
                 Ok(BatchExecutor {
@@ -84,7 +85,7 @@ impl BatchExecutor {
         }
     }
 
-    fn try_pjrt(
+    fn try_artifact(
         artifacts_dir: &Path,
         cfg: &ServerCfg,
         params: &ModelParams,
@@ -102,7 +103,7 @@ impl BatchExecutor {
         let name = format!("forward_b{artifact_batch}");
         let exe = rt.load(&name)?;
         let lits = upload_params(params)?;
-        Ok((Scorer::Pjrt { _rt: rt, exe, params: lits }, artifact_batch))
+        Ok((Scorer::Artifact { _rt: rt, exe, params: lits }, artifact_batch))
     }
 
     /// Collect up to `max_batch` requests (waiting at most `max_wait` after
@@ -119,7 +120,7 @@ impl BatchExecutor {
         // Coalescing only pays when it amortizes a device dispatch; the
         // host scorer answers per-request, so it skips the wait instead of
         // taxing every lone request with max_wait_ms of latency.
-        if matches!(self.scorer, Scorer::Pjrt { .. }) {
+        if matches!(self.scorer, Scorer::Artifact { .. }) {
             let deadline = Instant::now() + self.max_wait;
             while reqs.len() < self.max_batch {
                 let now = Instant::now();
@@ -134,7 +135,7 @@ impl BatchExecutor {
         }
         let n = reqs.len();
         match &mut self.scorer {
-            Scorer::Pjrt { exe, params, .. } => {
+            Scorer::Artifact { exe, params, .. } => {
                 // XLA's gather clamps out-of-range ids, so the padded
                 // batch dispatch is safe as-is.
                 let b = self.artifact_batch;

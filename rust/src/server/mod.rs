@@ -1,11 +1,11 @@
 //! Embedding/scoring server: the serving-path example of the runtime.
 //!
 //! A line-oriented TCP protocol (`protocol`), a dynamic batcher that
-//! coalesces concurrent score requests into one PJRT dispatch
-//! (`batcher`), and the listener/executor wiring (`Server`). PJRT handles
-//! are not `Send`, so a single *executor thread* owns the `Runtime` and
-//! the embedding store; connection handler threads parse requests and
-//! rendezvous with the executor over channels — the same
+//! coalesces concurrent score requests into one artifact dispatch
+//! (`batcher`), and the listener/executor wiring (`Server`). Runtime
+//! handles are not `Send`, so a single *executor thread* owns the
+//! `Runtime` and the embedding store; connection handler threads parse
+//! requests and rendezvous with the executor over channels — the same
 //! single-device-owner design vLLM-style routers use per GPU worker.
 
 pub mod batcher;
@@ -51,8 +51,8 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start serving. The executor thread owns PJRT; handler threads come
-    /// from a pool of `cfg.threads`.
+    /// Start serving. The executor thread owns the runtime; handler
+    /// threads come from a pool of `cfg.threads`.
     pub fn start(
         cfg: &ServerCfg,
         artifacts_dir: std::path::PathBuf,
@@ -74,7 +74,7 @@ impl Server {
         let exec_stop = Arc::clone(&stop);
         let window = params.window;
         std::thread::Builder::new()
-            .name("pjrt-executor".into())
+            .name("artifact-executor".into())
             .spawn(move || {
                 let store = match EmbeddingStore::from_params(vocab, &params) {
                     Ok(s) => s,

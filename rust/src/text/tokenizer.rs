@@ -57,7 +57,8 @@ mod tests {
 
     #[test]
     fn folds_digits() {
-        assert_eq!(tokenize("In 2014 we saw 3.5x"), vec!["in", "0000", "we", "saw", "0", ".", "0x"]);
+        let toks = tokenize("In 2014 we saw 3.5x");
+        assert_eq!(toks, vec!["in", "0000", "we", "saw", "0", ".", "0x"]);
     }
 
     #[test]

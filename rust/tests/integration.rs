@@ -1,13 +1,10 @@
-//! End-to-end integration: PJRT artifacts vs the pure-Rust reference model.
+//! End-to-end integration: compiled artifacts vs the pure-Rust reference
+//! model.
 //!
-//! Seed-test triage (PR 1): these tests originally hard-required
-//! `make artifacts` *and* a native XLA runtime. The artifacts are now
-//! committed under `rust/artifacts/`, but this environment builds against
-//! the vendored `xla` API stub, which cannot execute HLO — so every test
-//! that compares artifact numerics gates itself on PJRT execution being
-//! available (a stale expectation, not a product bug), while the
-//! host-backend tests below exercise the same training semantics on every
-//! build.
+//! Since the Backend refactor these tests execute on every build: the
+//! runtime selects PJRT when a real binding is present and the pure-Rust
+//! HLO interpreter otherwise, so artifact numerics are asserted — never
+//! skipped — in both environments.
 
 use std::path::PathBuf;
 
@@ -22,25 +19,15 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// A runtime that can actually execute artifacts, or `None` when running
-/// against the vendored xla API stub. Artifacts are committed, so a
-/// missing manifest or an execution failure for any *other* reason is a
-/// genuinely broken pipeline and fails loudly instead of skipping.
-fn pjrt_runtime() -> Option<Runtime> {
+/// A runtime over the committed artifacts. Executes on any build (PJRT or
+/// the interpreter fallback); failure to load or compile is a genuinely
+/// broken pipeline and fails loudly.
+fn runtime() -> Runtime {
     let rt = Runtime::new(&artifacts_dir())
         .expect("committed artifacts must load (regenerate with `make artifacts`)");
-    match rt.check_execution() {
-        Ok(()) => Some(rt),
-        Err(e) => {
-            let msg = format!("{e:#}");
-            assert!(
-                msg.contains("PJRT backend unavailable"),
-                "artifact execution failed for a reason other than the vendored stub: {msg}"
-            );
-            eprintln!("skipping: PJRT artifact execution unavailable (vendored xla stub)");
-            None
-        }
-    }
+    rt.check_execution()
+        .expect("artifact execution must work on every build since the Backend refactor");
+    rt
 }
 
 fn random_batch(rng: &mut Rng, b: usize, c: usize, vocab: usize) -> Batch {
@@ -63,9 +50,14 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
 }
 
+/// Bitwise equality of two f32 slices (no tolerance at all).
+fn bitwise_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
 #[test]
 fn scatter_artifact_matches_rust_baseline() {
-    let Some(rt) = pjrt_runtime() else { return };
+    let rt = runtime();
     let exe = rt.load("scatter_rows_r1000").unwrap();
     let (v, d, r) = (10240usize, 64usize, 1000usize);
     let mut rng = Rng::new(7);
@@ -87,9 +79,61 @@ fn scatter_artifact_matches_rust_baseline() {
     assert!(max_abs_diff(&got, &expect) < 1e-4);
 }
 
+/// Golden equivalence: on the interpreter backend, the serial scatter
+/// artifacts (`scatter_native_r*` — XLA scatter op; `scatter_rows_r*` —
+/// the lowered per-row kernel loop) must reproduce
+/// `baselines::scatter::scatter_add_serial` and the grad subsystem's
+/// sharded scatter-add *bitwise*: all four apply f32 row updates in the
+/// same stream order.
+#[test]
+fn interpreter_scatter_bitwise_equals_host_baselines() {
+    use polyglot_gpu::config::GradCfg;
+    use polyglot_gpu::grad::ScatterEngine;
+
+    let rt = runtime();
+    if rt.backend_name() != "interp" {
+        // A native PJRT backend owes only tolerance-level agreement
+        // (covered above); bitwise reproduction is the interpreter's
+        // contract.
+        eprintln!("skipping bitwise check: backend is {}", rt.backend_name());
+        return;
+    }
+    let sharded = ScatterEngine::new(&GradCfg {
+        mode: GradMode::Sharded,
+        threads: 4,
+        crossover_rows: 0,
+        hot_rows: 8,
+    });
+    let (v, d) = (10240usize, 64usize);
+    let mut rng = Rng::new(41);
+    let w: Vec<f32> = (0..v * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let wl = lit_f32(&w, &[v, d]).unwrap();
+    for rows in [10usize, 100, 1000] {
+        let idx: Vec<i32> = (0..rows).map(|_| rng.below(v as u64) as i32).collect();
+        let y: Vec<f32> = (0..rows * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let il = lit_i32(&idx, &[rows]).unwrap();
+        let yl = lit_f32(&y, &[rows, d]).unwrap();
+
+        let mut serial = w.clone();
+        polyglot_gpu::baselines::scatter::scatter_add_serial(&mut serial, d, &idx, &y);
+        let mut shard = w.clone();
+        sharded.scatter_add(&mut shard, d, &idx, &y);
+        assert!(bitwise_eq(&serial, &shard), "sharded vs serial diverge (r={rows})");
+
+        for name in [format!("scatter_native_r{rows}"), format!("scatter_rows_r{rows}")] {
+            let out = rt.load(&name).unwrap().run(&[&wl, &il, &yl]).unwrap();
+            let got = to_vec_f32(&out[0]).unwrap();
+            assert!(
+                bitwise_eq(&got, &serial),
+                "{name}: interpreter output is not bitwise-equal to the serial baseline"
+            );
+        }
+    }
+}
+
 #[test]
 fn scatter_all_implementations_agree() {
-    let Some(rt) = pjrt_runtime() else { return };
+    let rt = runtime();
     let (v, d, r) = (10240usize, 64usize, 1000usize);
     let mut rng = Rng::new(8);
     let w: Vec<f32> = (0..v * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
@@ -116,7 +160,7 @@ fn scatter_all_implementations_agree() {
 
 #[test]
 fn forward_artifact_matches_ref_model() {
-    let Some(rt) = pjrt_runtime() else { return };
+    let rt = runtime();
     let exe = rt.load("forward_b8").unwrap();
     let dims = exe.spec.model.clone().unwrap();
     let p = ModelParams::init(dims.vocab, dims.dim, dims.window, dims.hidden, 3);
@@ -136,7 +180,7 @@ fn forward_artifact_matches_ref_model() {
 
 #[test]
 fn loss_eval_matches_ref_model() {
-    let Some(rt) = pjrt_runtime() else { return };
+    let rt = runtime();
     let exe = rt.load("loss_eval_b256").unwrap();
     let dims = exe.spec.model.clone().unwrap();
     let p = ModelParams::init(dims.vocab, dims.dim, dims.window, dims.hidden, 5);
@@ -156,7 +200,7 @@ fn loss_eval_matches_ref_model() {
 
 #[test]
 fn train_step_backends_match_ref_model_and_each_other() {
-    let Some(rt) = pjrt_runtime() else { return };
+    let rt = runtime();
     let mut rng = Rng::new(11);
 
     // host reference
@@ -203,7 +247,7 @@ fn train_step_backends_match_ref_model_and_each_other() {
 
 #[test]
 fn multi_step_artifact_equals_sequential_steps() {
-    let Some(rt) = pjrt_runtime() else { return };
+    let rt = runtime();
     let dims = rt.manifest.main_model.clone();
     let p0 = ModelParams::init(dims.vocab, dims.dim, dims.window, dims.hidden, 31);
     let mut rng = Rng::new(32);
@@ -261,13 +305,14 @@ fn host_backend_matches_ref_model_step() {
 
 #[test]
 fn training_loss_decreases_end_to_end() {
-    // Runs on the optimized artifact backend when PJRT is available, on
-    // the host engine otherwise — same training semantics either way.
-    let rt = pjrt_runtime();
-    let backend = if rt.is_some() { Backend::GpuOpt } else { Backend::Host };
-    let mut cfg = cfg_with(backend, 64);
+    // 200 steps of real convergence: runs on the host engine (the same
+    // training semantics as the artifact backends, asserted step-for-step
+    // above) to keep debug-mode CI time bounded; short artifact training
+    // is covered by `artifact_training_smoke` below and the pipeline
+    // tests, long-form artifact training by the nightly E1 bench.
+    let mut cfg = cfg_with(Backend::Host, 64);
     cfg.training.lr = 0.25;
-    let mut tr = Trainer::new(rt.as_ref(), &cfg, ModelSize::Main).unwrap();
+    let mut tr = Trainer::new(None, &cfg, ModelSize::Main).unwrap();
     let dims = tr.dims.clone();
     let mut rng = Rng::new(77);
     // repeat a small pool of batches so the model can actually fit them
@@ -284,4 +329,27 @@ fn training_loss_decreases_end_to_end() {
     }
     assert!(last < first * 0.8, "loss {first} -> {last}");
     assert!(tr.metrics.rate() > 0.0);
+}
+
+#[test]
+fn artifact_training_smoke() {
+    // A handful of optimizer steps through the compiled artifact path:
+    // loss stays finite, parameters stay finite, and repeating a batch
+    // moves the loss down.
+    let rt = runtime();
+    let cfg = cfg_with(Backend::GpuOpt, 16);
+    let mut tr = Trainer::new(Some(&rt), &cfg, ModelSize::Main).unwrap();
+    let dims = tr.dims.clone();
+    let mut rng = Rng::new(91);
+    let batch = random_batch(&mut rng, 16, dims.window, dims.vocab);
+    let first = tr.step(&batch).unwrap();
+    let mut last = first;
+    for _ in 0..5 {
+        last = tr.step(&batch).unwrap();
+    }
+    assert!(first.is_finite() && last.is_finite());
+    assert!(last < first, "repeated batch must reduce loss: {first} -> {last}");
+    let p = tr.params_host().unwrap();
+    assert!(p.e.iter().all(|x| x.is_finite()));
+    assert!(p.w1.iter().all(|x| x.is_finite()));
 }

@@ -1,20 +1,19 @@
 //! Pipeline + server integration tests: corpus → vocab → batcher → trainer
 //! composition, checkpoint/serving round trips, failure injection.
 //!
-//! Seed-test triage (PR 1): these tests originally unwrapped a PJRT
-//! runtime unconditionally. Artifacts are committed now, but artifact
-//! *execution* needs the native xla backend this build does not ship —
-//! so each test runs its training through the artifact backend when PJRT
-//! execution is available and falls back to the pure-Rust `host` backend
-//! (same pipeline, same semantics) otherwise. Tests that are *about*
-//! artifact execution itself skip with a note instead.
+//! Since the Backend refactor these run end-to-end through the compiled
+//! artifacts on every build — the runtime selects PJRT when a real
+//! binding is present and the pure-Rust HLO interpreter otherwise — so
+//! nothing here gates or skips on execution availability anymore.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
 
 use polyglot_gpu::config::{Backend, Config};
-use polyglot_gpu::coordinator::{checkpoint, prepare_corpus, run_training, ModelSize, RunOptions, Trainer};
+use polyglot_gpu::coordinator::{
+    checkpoint, prepare_corpus, run_training, ModelSize, RunOptions, Trainer,
+};
 use polyglot_gpu::corpus::{generator, CorpusSpec};
 use polyglot_gpu::data::Batch;
 use polyglot_gpu::embeddings::EmbeddingStore;
@@ -26,23 +25,11 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// A runtime that can execute artifacts, or `None` under the vendored xla
-/// API stub. Any other execution failure (artifacts are committed) is a
-/// broken pipeline and fails loudly instead of silently skipping.
-fn pjrt_runtime() -> Option<Runtime> {
-    let rt = Runtime::new(&artifacts_dir())
-        .expect("committed artifacts must load (regenerate with `make artifacts`)");
-    match rt.check_execution() {
-        Ok(()) => Some(rt),
-        Err(e) => {
-            let msg = format!("{e:#}");
-            assert!(
-                msg.contains("PJRT backend unavailable"),
-                "artifact execution failed for a reason other than the vendored stub: {msg}"
-            );
-            None
-        }
-    }
+/// A runtime over the committed artifacts; failures are a broken pipeline
+/// (execution itself works on every build since the Backend refactor).
+fn runtime() -> Runtime {
+    Runtime::new(&artifacts_dir())
+        .expect("committed artifacts must load (regenerate with `make artifacts`)")
 }
 
 fn small_cfg() -> Config {
@@ -55,32 +42,24 @@ fn small_cfg() -> Config {
     cfg
 }
 
-/// (runtime-if-executable, cfg with a backend that will actually run).
-fn training_env() -> (Option<Runtime>, Config) {
-    let rt = pjrt_runtime();
-    let mut cfg = small_cfg();
-    if rt.is_none() {
-        cfg.training.backend = Backend::Host;
-    }
-    (rt, cfg)
-}
-
-fn main_vocab(rt: &Option<Runtime>, cfg: &Config) -> usize {
-    rt.as_ref().map(|r| r.manifest.main_model.vocab).unwrap_or(cfg.model.vocab)
+/// (runtime, cfg) — training drives the default artifact backend.
+fn training_env() -> (Runtime, Config) {
+    (runtime(), small_cfg())
 }
 
 #[test]
 fn full_pipeline_trains_and_reports() {
     let (rt, cfg) = training_env();
-    let corpus = prepare_corpus(&cfg, main_vocab(&rt, &cfg)).unwrap();
+    let vocab_cap = rt.manifest.main_model.vocab;
+    let corpus = prepare_corpus(&cfg, vocab_cap).unwrap();
     assert!(corpus.tokens >= 30_000);
     assert!(corpus.vocab.len() > 100);
-    assert!(corpus.vocab.len() <= main_vocab(&rt, &cfg));
+    assert!(corpus.vocab.len() <= vocab_cap);
 
-    let opts = RunOptions { steps: 40, quiet: true, ..RunOptions::default() };
-    let (trainer, report) = run_training(rt.as_ref(), &cfg, &corpus, &opts).unwrap();
-    assert_eq!(report.steps, 40);
-    assert_eq!(report.examples, 40 * 32);
+    let opts = RunOptions { steps: 30, quiet: true, ..RunOptions::default() };
+    let (trainer, report) = run_training(Some(&rt), &cfg, &corpus, &opts).unwrap();
+    assert_eq!(report.steps, 30);
+    assert_eq!(report.examples, 30 * 32);
     assert!(report.rate_mean > 0.0);
     assert!(report.final_loss.is_finite());
     assert!(!report.loss_curve.is_empty());
@@ -93,7 +72,7 @@ fn full_pipeline_trains_and_reports() {
 fn convergence_eval_path_runs() {
     let (rt, mut cfg) = training_env();
     cfg.training.converge_threshold = 2.0; // trivially convergable (hinge <= ~1)
-    let corpus = prepare_corpus(&cfg, main_vocab(&rt, &cfg)).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab).unwrap();
     let opts = RunOptions {
         steps: 30,
         eval_every: 10,
@@ -101,7 +80,7 @@ fn convergence_eval_path_runs() {
         quiet: true,
         ..RunOptions::default()
     };
-    let (_tr, report) = run_training(rt.as_ref(), &cfg, &corpus, &opts).unwrap();
+    let (_tr, report) = run_training(Some(&rt), &cfg, &corpus, &opts).unwrap();
     let c = report.converged.expect("threshold 2.0 must converge instantly");
     assert!(c.steps <= 10);
 }
@@ -109,10 +88,7 @@ fn convergence_eval_path_runs() {
 #[test]
 fn small_model_family_trains() {
     // The small-model family exists only as gpu-opt artifacts.
-    let Some(rt) = pjrt_runtime() else {
-        eprintln!("skipping: small-model artifacts need PJRT execution");
-        return;
-    };
+    let rt = runtime();
     let mut cfg = small_cfg();
     cfg.training.batch = 64;
     let corpus = prepare_corpus(&cfg, rt.manifest.small_model.vocab).unwrap();
@@ -136,19 +112,14 @@ fn small_model_rejects_non_opt_backends() {
 #[test]
 fn trainer_rejects_wrong_batch_shape() {
     let (rt, cfg) = training_env();
-    let mut tr = Trainer::new(rt.as_ref(), &cfg, ModelSize::Main).unwrap();
+    let mut tr = Trainer::new(Some(&rt), &cfg, ModelSize::Main).unwrap();
     let bad = Batch { windows: vec![2; 8 * 5], corrupt: vec![3; 8], batch: 8, window: 5 };
     assert!(tr.step(&bad).is_err(), "batch 8 into a batch-32 trainer must fail");
 }
 
 #[test]
 fn trainer_rejects_missing_artifact_batch() {
-    // Artifact-batch coverage is a PJRT-backend property (the host
-    // backend accepts any batch size).
-    let Some(rt) = pjrt_runtime() else {
-        eprintln!("skipping: artifact-batch validation needs PJRT execution");
-        return;
-    };
+    let rt = runtime();
     let mut cfg = small_cfg();
     cfg.training.batch = 48; // no artifact for batch 48
     assert!(Trainer::new(Some(&rt), &cfg, ModelSize::Main).is_err());
@@ -157,16 +128,16 @@ fn trainer_rejects_missing_artifact_batch() {
 #[test]
 fn checkpoint_resume_continues_training() {
     let (rt, cfg) = training_env();
-    let corpus = prepare_corpus(&cfg, main_vocab(&rt, &cfg)).unwrap();
-    let opts = RunOptions { steps: 15, quiet: true, ..RunOptions::default() };
-    let (trainer, _) = run_training(rt.as_ref(), &cfg, &corpus, &opts).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab).unwrap();
+    let opts = RunOptions { steps: 10, quiet: true, ..RunOptions::default() };
+    let (trainer, _) = run_training(Some(&rt), &cfg, &corpus, &opts).unwrap();
 
     let dir = std::env::temp_dir().join(format!("pg-resume-{}", std::process::id()));
     let ckpt = dir.join("m.pgck");
     checkpoint::save(&ckpt, &trainer.params_host().unwrap()).unwrap();
 
     // resume into a new trainer and keep going
-    let mut tr2 = Trainer::new(rt.as_ref(), &cfg, ModelSize::Main).unwrap();
+    let mut tr2 = Trainer::new(Some(&rt), &cfg, ModelSize::Main).unwrap();
     let restored = checkpoint::load(&ckpt).unwrap();
     tr2.set_params(&restored).unwrap();
     let p_before = tr2.params_host().unwrap();
@@ -184,10 +155,6 @@ fn checkpoint_resume_continues_training() {
 
 #[test]
 fn corrupted_artifact_file_fails_cleanly() {
-    if pjrt_runtime().is_none() {
-        eprintln!("skipping: artifact compilation needs PJRT execution");
-        return;
-    }
     // clone the artifacts dir into a temp dir, then break one file
     let dir = std::env::temp_dir().join(format!("pg-broken-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
@@ -220,8 +187,8 @@ fn missing_manifest_fails_with_hint() {
 
 #[test]
 fn server_end_to_end_round_trip() {
-    // random params are fine for protocol testing; scoring falls back to
-    // the host model automatically when PJRT execution is unavailable
+    // random params are fine for protocol testing; scoring runs through
+    // the forward artifact on the runtime's selected backend
     let corpus = generator::generate(&CorpusSpec {
         languages: 1,
         tokens_per_language: 4_000,
@@ -275,9 +242,9 @@ fn server_end_to_end_round_trip() {
 #[test]
 fn embedding_store_matches_trained_params() {
     let (rt, cfg) = training_env();
-    let corpus = prepare_corpus(&cfg, main_vocab(&rt, &cfg)).unwrap();
-    let opts = RunOptions { steps: 10, quiet: true, ..RunOptions::default() };
-    let (trainer, _) = run_training(rt.as_ref(), &cfg, &corpus, &opts).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab).unwrap();
+    let opts = RunOptions { steps: 8, quiet: true, ..RunOptions::default() };
+    let (trainer, _) = run_training(Some(&rt), &cfg, &corpus, &opts).unwrap();
     let p = trainer.params_host().unwrap();
     let store = EmbeddingStore::from_params(corpus.vocab.clone(), &p).unwrap();
     let (_, word, _) = corpus.vocab.entries().next().unwrap();
@@ -288,7 +255,7 @@ fn embedding_store_matches_trained_params() {
 #[test]
 fn event_log_streams_run_records() {
     let (rt, cfg) = training_env();
-    let corpus = prepare_corpus(&cfg, main_vocab(&rt, &cfg)).unwrap();
+    let corpus = prepare_corpus(&cfg, rt.manifest.main_model.vocab).unwrap();
     let dir = std::env::temp_dir().join(format!("pg-evt-{}", std::process::id()));
     let log_path = dir.join("run.jsonl");
     let opts = RunOptions {
@@ -297,7 +264,7 @@ fn event_log_streams_run_records() {
         event_log: log_path.to_string_lossy().into_owned(),
         ..RunOptions::default()
     };
-    let (_tr, _report) = run_training(rt.as_ref(), &cfg, &corpus, &opts).unwrap();
+    let (_tr, _report) = run_training(Some(&rt), &cfg, &corpus, &opts).unwrap();
     let events = polyglot_gpu::coordinator::events::read_events(&log_path).unwrap();
     assert!(events.len() >= 4, "only {} events", events.len());
     assert_eq!(events[0].get("event").unwrap().as_str(), Some("run_start"));
@@ -307,4 +274,16 @@ fn event_log_streams_run_records() {
     );
     assert!(events.iter().any(|e| e.get("event").unwrap().as_str() == Some("step")));
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn host_backend_still_trains_without_a_runtime() {
+    // The artifact-free path must keep working: host backend, rt = None.
+    let mut cfg = small_cfg();
+    cfg.training.backend = Backend::Host;
+    let corpus = prepare_corpus(&cfg, cfg.model.vocab).unwrap();
+    let opts = RunOptions { steps: 10, quiet: true, ..RunOptions::default() };
+    let (trainer, report) = run_training(None, &cfg, &corpus, &opts).unwrap();
+    assert_eq!(report.steps, 10);
+    assert!(trainer.params_host().unwrap().e.iter().all(|x| x.is_finite()));
 }
