@@ -14,11 +14,16 @@ use anyhow::Result;
 use polyglot_gpu::config::{Backend, Config};
 use polyglot_gpu::coordinator::{prepare_corpus, run_training, RunOptions};
 use polyglot_gpu::devicemodel::{NvprofReport, OpStream, GT570};
-use polyglot_gpu::profiler::{OpClass, Profiler};
+use polyglot_gpu::profiler::{classify_plan_op, OpClass, Profiler};
 use polyglot_gpu::runtime::Runtime;
 
-fn train_rate(cfg: &Config, steps: usize) -> Result<(f64, Runtime)> {
+fn train_rate(cfg: &Config, steps: usize, profile_ops: bool) -> Result<(f64, Runtime)> {
     let rt = Runtime::new(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
+    if profile_ops {
+        // Interpreter backend: time every compiled-plan kernel (fused
+        // elementwise chains, dot, scatter, ...) during training.
+        rt.set_op_profiling(true);
+    }
     let corpus = prepare_corpus(cfg, rt.manifest.main_model.vocab)?;
     let opts = RunOptions { steps, quiet: true, ..RunOptions::default() };
     let (_tr, report) = run_training(Some(&rt), cfg, &corpus, &opts)?;
@@ -32,9 +37,9 @@ fn main() -> Result<()> {
 
     println!("== Step 1: baseline (paper §4.1) ==");
     cfg.training.backend = Backend::Cpu;
-    let (cpu_rate, _) = train_rate(&cfg, 60)?;
+    let (cpu_rate, _) = train_rate(&cfg, 60, false)?;
     cfg.training.backend = Backend::GpuNaive;
-    let (naive_rate, naive_rt) = train_rate(&cfg, 25)?;
+    let (naive_rate, naive_rt) = train_rate(&cfg, 25, false)?;
     println!("  cpu backend:       {cpu_rate:9.1} ex/s   (paper: 5512.6)");
     println!("  gpu-naive backend: {naive_rate:9.1} ex/s   (paper: 1265.8)");
     println!("  -> the unoptimized backend is {:.1}x slower than cpu", cpu_rate / naive_rate);
@@ -63,13 +68,30 @@ fn main() -> Result<()> {
 
     println!("\n== Step 4: re-measure (paper §4.4) ==");
     cfg.training.backend = Backend::GpuOpt;
-    let (opt_rate, opt_rt) = train_rate(&cfg, 150)?;
+    // Rate measured with profiling OFF so the paper-comparison figures
+    // are not biased by per-step instrumentation overhead.
+    let (opt_rate, opt_rt) = train_rate(&cfg, 150, false)?;
     println!("  gpu-opt backend:   {opt_rate:9.1} ex/s   (paper: 3742)");
     println!(
         "  -> {:.1}x over the naive backend (paper: ~3x); {:.2}x of cpu (paper: 0.68x)",
         opt_rate / naive_rate,
         opt_rate / cpu_rate
     );
+
+    // Separate short instrumented run: on the interpreter backend the
+    // compiled plan times each kernel it runs, so the hot-spot table
+    // below is *measured* per fused kernel / heavy op, not modeled from
+    // HLO instruction counts.
+    let (_, prof_rt) = train_rate(&cfg, 40, true)?;
+    let plan_ops = prof_rt.plan_op_stats();
+    if !plan_ops.is_empty() {
+        println!("\n  measured per-plan-op costs (compiled interpreter plan, 40 steps):");
+        let mut pprof = Profiler::new();
+        for (label, calls, total) in &plan_ops {
+            pprof.add_measured(classify_plan_op(label), *calls, *total);
+        }
+        println!("{}", pprof.render(5));
+    }
 
     println!("\n== Step 5: limits analysis (paper §4.5) ==");
     let dims = opt_rt.manifest.main_model.clone();

@@ -13,6 +13,8 @@
 //!   E10 §5  Hellinger PCA (host-only)
 //!   E11 host scatter-add: serial vs sharded-parallel sweep over batch ×
 //!       vocab (the grad subsystem's crossover) -> BENCH_scatter.json
+//!   E12 interpreter engines: tree-walk vs compiled plan (fusion), 1 vs
+//!       N threads, over committed artifacts -> BENCH_interp.json
 //!
 //! Pass a filter to run a subset: `cargo bench -- e3 e6`.
 //! E1–E8 execute artifacts on the runtime's selected backend — PJRT when
@@ -669,6 +671,84 @@ fn e11() -> Result<()> {
     Ok(())
 }
 
+// --- E12: interpreter engines — tree-walk vs compiled plan ------------------
+
+fn e12() -> Result<()> {
+    use polyglot_gpu::backend::interp::InterpExecutable;
+    use polyglot_gpu::grad::resolve_threads;
+    use polyglot_gpu::testkit::synth_artifact_inputs;
+
+    let threads = resolve_threads(0);
+    println!(
+        "\n=== E12 — interpreter engines: tree-walk vs compiled plan ({threads} threads) ==="
+    );
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let mut rng = Rng::new(0xe12);
+
+    let threaded_col = format!("plan ({threads} thr)");
+    let mut t = Table::new(&[
+        "artifact",
+        "tree-walk",
+        "plan (1 thr)",
+        threaded_col.as_str(),
+        "plan/tree",
+        "threaded/1-thr",
+    ]);
+    let mut sweep: Vec<Json> = Vec::new();
+    let mut train_step_win = false;
+    for name in
+        ["train_step_ref_b16", "train_step_ref_b512", "loss_eval_b256", "scatter_native_r1000"]
+    {
+        let inputs = synth_artifact_inputs(rt.manifest.find(name)?, &mut rng)?;
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        let text = std::fs::read_to_string(&rt.manifest.find(name)?.file)?;
+        let tree = InterpExecutable::from_text_threads(&text, 1)?;
+        let plan1 = InterpExecutable::from_text_threads(&text, 1)?;
+        let plan_n = InterpExecutable::from_text_threads(&text, threads)?;
+
+        let mut b = Bencher::new();
+        let samples = if name.contains("b512") { 5 } else { 8 };
+        b.bench("tree", 1, samples, 1.0, || tree.run_treewalk(&refs).unwrap());
+        b.bench("plan1", 1, samples, 1.0, || plan1.run(&refs).unwrap());
+        b.bench("planN", 1, samples, 1.0, || plan_n.run(&refs).unwrap());
+        let tree_s = b.get("tree").unwrap().mean_s();
+        let plan1_s = b.get("plan1").unwrap().mean_s();
+        let plan_n_s = b.get("planN").unwrap().mean_s();
+        t.row(&[
+            name.to_string(),
+            fmt::dur(Duration::from_secs_f64(tree_s)),
+            fmt::dur(Duration::from_secs_f64(plan1_s)),
+            fmt::dur(Duration::from_secs_f64(plan_n_s)),
+            format!("{:.2}x", tree_s / plan1_s),
+            format!("{:.2}x", plan1_s / plan_n_s),
+        ]);
+        if name.starts_with("train_step") && plan_n_s < tree_s {
+            train_step_win = true;
+        }
+        let mut m = BTreeMap::new();
+        m.insert("artifact".to_string(), Json::Str(name.to_string()));
+        m.insert("treewalk_s".to_string(), Json::Num(tree_s));
+        m.insert("plan1_s".to_string(), Json::Num(plan1_s));
+        m.insert("planN_s".to_string(), Json::Num(plan_n_s));
+        m.insert("plan_speedup".to_string(), Json::Num(tree_s / plan1_s));
+        m.insert("thread_speedup".to_string(), Json::Num(plan1_s / plan_n_s));
+        sweep.push(Json::Obj(m));
+    }
+    println!("{}", t.render());
+    println!(
+        "shape check: fused+threaded plan beats the tree-walker on a train-step artifact {}",
+        ok(train_step_win)
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("interp_engines".to_string()));
+    root.insert("threads".to_string(), Json::Num(threads as f64));
+    root.insert("sweep".to_string(), Json::Arr(sweep));
+    std::fs::write("BENCH_interp.json", Json::Obj(root).render())?;
+    println!("wrote BENCH_interp.json");
+    Ok(())
+}
+
 fn ok(cond: bool) -> &'static str {
     if cond {
         "[ok]"
@@ -727,6 +807,9 @@ fn main() -> Result<()> {
     }
     if want("e11") || want("scatter") {
         e11()?;
+    }
+    if want("e12") || want("interp") {
+        e12()?;
     }
     println!("\nall selected benches complete.");
     Ok(())

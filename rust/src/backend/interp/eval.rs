@@ -1,25 +1,34 @@
-//! Evaluator for parsed HLO modules.
+//! Tree-walking reference evaluator for parsed HLO modules.
 //!
-//! Straightforward SSA walk with one deliberate mechanism: operands are
-//! passed **by move into their last consumer** (`Computation::last_use`),
-//! so by the time `dynamic-update-slice` or `scatter` sees its operand the
-//! `Rc` storage is usually uniquely owned and `Rc::make_mut` mutates in
-//! place. The per-row embedding-update loops in the train-step artifacts
-//! update a `[vocab, dim]` table once per row; without this they would
-//! copy the whole table per row (O(rows·vocab·dim) per step), with it
-//! they write `dim` floats (O(rows·dim)).
+//! This is the interpreter's *semantic reference*: a straightforward SSA
+//! walk whose per-op behavior defines what the compiled plan
+//! ([`super::plan`]) must reproduce — the golden tests assert the two
+//! engines agree bitwise. Heavy ops (`dot`, `reduce`, `gather`,
+//! `scatter`, slicing, data movement) live in [`super::kernels`] and are
+//! shared with the plan executor (always called serially from here);
+//! this module keeps the walk itself plus the whole-tensor elementwise
+//! ops the fuser decomposes into scalar bytecode.
+//!
+//! One deliberate mechanism survives from the original evaluator:
+//! operands are passed **by move into their last consumer**
+//! (`Computation::last_use`), so by the time `dynamic-update-slice` or
+//! `scatter` sees its operand the `Arc` storage is usually uniquely
+//! owned and `Arc::make_mut` mutates in place. The per-row
+//! embedding-update loops in the train-step artifacts update a
+//! `[vocab, dim]` table once per row; without this they would copy the
+//! whole table per row (O(rows·vocab·dim) per step), with it they write
+//! `dim` floats (O(rows·dim)).
 //!
 //! Numeric policy: f32 arithmetic in source order. `reduce` accumulates
 //! row-major from the init value; `scatter` applies updates row-major
 //! over the updates array — the same order as the serial host baselines,
 //! which is what makes the scatter artifacts bitwise-reproducible.
 
-use std::rc::Rc;
-
 use anyhow::{bail, Context, Result};
 
-use super::parser::{BinOp, CmpDir, Instr, Module, Op, Shape, UnOp};
-use super::value::{next_index, strides, Data, Tensor, Ty, Value};
+use super::kernels::{self, Par};
+use super::parser::{BinOp, CmpDir, Instr, Module, Op};
+use super::value::{Data, Tensor, Value};
 
 /// Evaluate the module's ENTRY computation on `args` (indexed by
 /// parameter number). Returns the root value.
@@ -27,7 +36,7 @@ pub fn eval_entry(m: &Module, args: Vec<Value>) -> Result<Value> {
     eval_comp(m, m.entry, args)
 }
 
-fn eval_comp(m: &Module, ci: usize, args: Vec<Value>) -> Result<Value> {
+pub(crate) fn eval_comp(m: &Module, ci: usize, args: Vec<Value>) -> Result<Value> {
     let comp = &m.comps[ci];
     if args.len() != comp.n_params {
         bail!(
@@ -72,17 +81,55 @@ fn resolve_operands(
 fn eval_op(
     m: &Module,
     instr: &Instr,
-    mut vals: Vec<Value>,
+    vals: Vec<Value>,
     args: &mut [Option<Value>],
 ) -> Result<Value> {
+    let recurse = |ci: usize, a: Vec<Value>| eval_comp(m, ci, a);
+    exec_instr(m, instr, vals, args, Par::serial(), &recurse, &recurse)
+}
+
+/// Sub-computation evaluation callback: how `exec_instr` re-enters the
+/// owning engine for `call`/`while` bodies and combiner computations.
+pub(crate) type Recurse<'a> = &'a dyn Fn(usize, Vec<Value>) -> Result<Value>;
+
+/// Single-instruction dispatch shared by both engines: the tree-walker
+/// calls it serially with itself as both callbacks; the plan executor
+/// passes its thread budget, a timed `recurse` for control flow, and an
+/// *untimed* `combine` so per-element combiner evaluation is not
+/// double-counted under the already-timed reduce/scatter step.
+pub(crate) fn exec_instr(
+    m: &Module,
+    instr: &Instr,
+    mut vals: Vec<Value>,
+    args: &mut [Option<Value>],
+    par: Par,
+    recurse: Recurse,
+    combine: Recurse,
+) -> Result<Value> {
+    let generic = |ci: usize, a: f32, b: f32| -> Result<f32> {
+        let out = combine(
+            ci,
+            vec![
+                Value::Arr(Tensor::f32(vec![a], vec![])),
+                Value::Arr(Tensor::f32(vec![b], vec![])),
+            ],
+        )?;
+        Ok(out.arr()?.f()?[0])
+    };
     Ok(match &instr.op {
         Op::Parameter(i) => args
             .get_mut(*i)
             .and_then(Option::take)
             .with_context(|| format!("missing argument {i}"))?,
         Op::Constant(t) => Value::Arr(t.clone()),
-        Op::Iota { dim } => Value::Arr(iota(&instr.shape, *dim)?),
-        Op::Broadcast { dims } => Value::Arr(broadcast(&instr.shape, vals[0].arr()?, dims)?),
+        Op::Iota { dim } => {
+            let (ty, dims) = instr.shape.arr()?;
+            Value::Arr(kernels::iota(ty, dims, *dim)?)
+        }
+        Op::Broadcast { dims } => {
+            let (_, out_dims) = instr.shape.arr()?;
+            Value::Arr(kernels::broadcast(out_dims, vals[0].arr()?, dims)?)
+        }
         Op::Reshape => {
             let (_, out_dims) = instr.shape.arr()?;
             let mut t = vals.remove(0).into_arr()?;
@@ -92,47 +139,63 @@ fn eval_op(
             t.dims = out_dims.to_vec();
             Value::Arr(t)
         }
-        Op::Convert => Value::Arr(convert(&instr.shape, vals[0].arr()?)?),
-        Op::Transpose { perm } => Value::Arr(transpose(vals[0].arr()?, perm)?),
+        Op::Convert => {
+            let (ty, _) = instr.shape.arr()?;
+            Value::Arr(convert(ty, vals[0].arr()?)?)
+        }
+        Op::Transpose { perm } => Value::Arr(kernels::transpose(vals[0].arr()?, perm)?),
         Op::Compare { dir } => Value::Arr(compare(*dir, vals[0].arr()?, vals[1].arr()?)?),
         Op::Select => Value::Arr(select(vals[0].arr()?, vals[1].arr()?, vals[2].arr()?)?),
         Op::Binary(op) => Value::Arr(binary(*op, vals[0].arr()?, vals[1].arr()?)?),
         Op::Unary(op) => Value::Arr(unary(*op, vals[0].arr()?)?),
-        Op::Dot { lc, rc } => Value::Arr(dot(vals[0].arr()?, vals[1].arr()?, *lc, *rc)?),
-        Op::Reduce { dims, to_apply } => {
-            Value::Arr(reduce(m, vals[0].arr()?, vals[1].arr()?, dims, *to_apply)?)
+        Op::Dot { lc, rc } => {
+            Value::Arr(kernels::dot(vals[0].arr()?, vals[1].arr()?, *lc, *rc, par)?)
         }
+        Op::Reduce { dims, to_apply } => Value::Arr(kernels::reduce(
+            m,
+            vals[0].arr()?,
+            vals[1].arr()?,
+            dims,
+            *to_apply,
+            &generic,
+            par,
+        )?),
         Op::Concat { dim } => {
-            let parts: Vec<&Tensor> =
-                vals.iter().map(|v| v.arr()).collect::<Result<_>>()?;
-            Value::Arr(concat(&instr.shape, &parts, *dim)?)
+            let (_, out_dims) = instr.shape.arr()?;
+            let parts: Vec<&Tensor> = vals.iter().map(|v| v.arr()).collect::<Result<_>>()?;
+            Value::Arr(kernels::concat(out_dims, &parts, *dim)?)
         }
         Op::DynamicSlice { sizes } => {
             let starts = scalar_starts(&vals[1..])?;
-            Value::Arr(dynamic_slice(vals[0].arr()?, &starts, sizes)?)
+            Value::Arr(kernels::dynamic_slice(vals[0].arr()?, &starts, sizes)?)
         }
         Op::DynamicUpdateSlice => {
             let starts = scalar_starts(&vals[2..])?;
-            let upd = vals[1].arr()?.clone();
-            let base = vals.swap_remove(0).into_arr()?;
-            Value::Arr(dynamic_update_slice(base, &upd, &starts)?)
+            // Base and update both by move: no storage clone remains on
+            // the per-row train-step path.
+            let base = vals.remove(0).into_arr()?;
+            let upd = vals.remove(0).into_arr()?;
+            Value::Arr(kernels::dynamic_update_slice(base, &upd, &starts)?)
         }
-        Op::Gather(g) => Value::Arr(gather(&instr.shape, vals[0].arr()?, vals[1].arr()?, g)?),
+        Op::Gather(g) => {
+            let (_, out_dims) = instr.shape.arr()?;
+            Value::Arr(kernels::gather(out_dims, vals[0].arr()?, vals[1].arr()?, g, par)?)
+        }
         Op::Scatter(s) => {
-            let indices = vals[1].arr()?.clone();
-            let updates = vals[2].arr()?.clone();
-            let base = vals.swap_remove(0).into_arr()?;
-            Value::Arr(scatter(m, base, &indices, &updates, s)?)
+            let base = vals.remove(0).into_arr()?;
+            let indices = vals.remove(0).into_arr()?;
+            let updates = vals.remove(0).into_arr()?;
+            Value::Arr(kernels::scatter(m, base, &indices, &updates, s, &generic, par)?)
         }
-        Op::Call { to_apply } => eval_comp(m, *to_apply, vals)?,
+        Op::Call { to_apply } => recurse(*to_apply, vals)?,
         Op::While { condition, body } => {
             let mut carry = vals.remove(0);
             loop {
-                let c = eval_comp(m, *condition, vec![carry.clone()])?;
+                let c = recurse(*condition, vec![carry.clone()])?;
                 if !c.arr()?.scalar_pred()? {
                     break;
                 }
-                carry = eval_comp(m, *body, vec![carry])?;
+                carry = recurse(*body, vec![carry])?;
             }
             carry
         }
@@ -147,108 +210,46 @@ fn eval_op(
     })
 }
 
-fn scalar_starts(vals: &[Value]) -> Result<Vec<i64>> {
+pub(crate) fn scalar_starts(vals: &[Value]) -> Result<Vec<i64>> {
     vals.iter().map(|v| Ok(v.arr()?.scalar_i32()? as i64)).collect()
 }
 
-// ---------------------------------------------------------------- simple ops
+// ------------------------------------------------- whole-tensor elementwise
 
-fn iota(shape: &Shape, dim: usize) -> Result<Tensor> {
-    let (ty, dims) = shape.arr()?;
-    let n: usize = dims.iter().product();
-    let st = strides(dims);
-    let coord = |flat: usize| (flat / st[dim]) % dims[dim];
-    Ok(match ty {
-        Ty::S32 => Tensor::i32((0..n).map(|f| coord(f) as i32).collect(), dims.to_vec()),
-        Ty::F32 => Tensor::f32((0..n).map(|f| coord(f) as f32).collect(), dims.to_vec()),
-        Ty::Pred => bail!("iota over pred"),
-    })
+// Scalar cast semantics — the single source of truth for `convert` in
+// both the whole-tensor path and the fused bytecode.
+pub(crate) fn cast_i32_f32(v: i32) -> f32 {
+    v as f32
+}
+pub(crate) fn cast_f32_i32(v: f32) -> i32 {
+    v as i32
+}
+pub(crate) fn cast_pred_f32(b: bool) -> f32 {
+    if b {
+        1.0
+    } else {
+        0.0
+    }
+}
+pub(crate) fn cast_pred_i32(b: bool) -> i32 {
+    i32::from(b)
 }
 
-fn broadcast(shape: &Shape, src: &Tensor, map: &[usize]) -> Result<Tensor> {
-    let (_, out_dims) = shape.arr()?;
-    if map.len() != src.dims.len() {
-        bail!("broadcast dims {:?} for operand rank {}", map, src.dims.len());
-    }
-    fn bc<T: Copy>(src: &[T], src_dims: &[usize], map: &[usize], out_dims: &[usize]) -> Vec<T> {
-        let n: usize = out_dims.iter().product();
-        if src.len() == 1 {
-            return vec![src[0]; n];
-        }
-        let sst = strides(src_dims);
-        let mut out = Vec::with_capacity(n);
-        let mut idx = vec![0usize; out_dims.len()];
-        if n == 0 {
-            return out;
-        }
-        loop {
-            let mut s = 0usize;
-            for (j, &od) in map.iter().enumerate() {
-                s += idx[od] * sst[j];
-            }
-            out.push(src[s]);
-            if !next_index(&mut idx, out_dims) {
-                break;
-            }
-        }
-        out
-    }
-    let dims = out_dims.to_vec();
-    Ok(match &src.data {
-        Data::F32(v) => Tensor::f32(bc(v.as_slice(), &src.dims, map, out_dims), dims),
-        Data::I32(v) => Tensor::i32(bc(v.as_slice(), &src.dims, map, out_dims), dims),
-        Data::Pred(v) => Tensor::pred(bc(v.as_slice(), &src.dims, map, out_dims), dims),
-    })
-}
-
-fn convert(shape: &Shape, src: &Tensor) -> Result<Tensor> {
-    let (ty, dims) = shape.arr()?;
-    let dims = dims.to_vec();
+pub(crate) fn convert(ty: super::value::Ty, src: &Tensor) -> Result<Tensor> {
+    use super::value::Ty;
+    let dims = src.dims.clone();
     Ok(match (ty, &src.data) {
         (Ty::F32, Data::Pred(v)) => {
-            Tensor::f32(v.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(), dims)
+            Tensor::f32(v.iter().map(|&b| cast_pred_f32(b)).collect(), dims)
         }
-        (Ty::F32, Data::I32(v)) => Tensor::f32(v.iter().map(|&x| x as f32).collect(), dims),
+        (Ty::F32, Data::I32(v)) => Tensor::f32(v.iter().map(|&x| cast_i32_f32(x)).collect(), dims),
         (Ty::F32, Data::F32(v)) => Tensor::f32(v.to_vec(), dims),
-        (Ty::S32, Data::F32(v)) => Tensor::i32(v.iter().map(|&x| x as i32).collect(), dims),
+        (Ty::S32, Data::F32(v)) => Tensor::i32(v.iter().map(|&x| cast_f32_i32(x)).collect(), dims),
         (Ty::S32, Data::Pred(v)) => {
-            Tensor::i32(v.iter().map(|&b| i32::from(b)).collect(), dims)
+            Tensor::i32(v.iter().map(|&b| cast_pred_i32(b)).collect(), dims)
         }
         (Ty::S32, Data::I32(v)) => Tensor::i32(v.to_vec(), dims),
         (Ty::Pred, _) => bail!("convert to pred unsupported"),
-    })
-}
-
-fn transpose(src: &Tensor, perm: &[usize]) -> Result<Tensor> {
-    if perm.len() != src.dims.len() {
-        bail!("transpose perm {:?} for rank {}", perm, src.dims.len());
-    }
-    let out_dims: Vec<usize> = perm.iter().map(|&p| src.dims[p]).collect();
-    fn tr<T: Copy>(src: &[T], src_dims: &[usize], perm: &[usize], out_dims: &[usize]) -> Vec<T> {
-        let sst = strides(src_dims);
-        let n: usize = out_dims.iter().product();
-        let mut out = Vec::with_capacity(n);
-        let mut idx = vec![0usize; out_dims.len()];
-        if n == 0 {
-            return out;
-        }
-        loop {
-            let mut s = 0usize;
-            for (i, &p) in perm.iter().enumerate() {
-                s += idx[i] * sst[p];
-            }
-            out.push(src[s]);
-            if !next_index(&mut idx, out_dims) {
-                break;
-            }
-        }
-        out
-    }
-    let d = out_dims.clone();
-    Ok(match &src.data {
-        Data::F32(v) => Tensor::f32(tr(v.as_slice(), &src.dims, perm, &out_dims), d),
-        Data::I32(v) => Tensor::i32(tr(v.as_slice(), &src.dims, perm, &out_dims), d),
-        Data::Pred(v) => Tensor::pred(tr(v.as_slice(), &src.dims, perm, &out_dims), d),
     })
 }
 
@@ -259,20 +260,24 @@ fn same_dims(a: &Tensor, b: &Tensor) -> Result<()> {
     Ok(())
 }
 
-fn compare(dir: CmpDir, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+/// Scalar comparison semantics — the single source of truth for
+/// `compare` in both the whole-tensor path and the fused bytecode.
+pub(crate) fn cmp_of<T: PartialOrd + Copy>(dir: CmpDir) -> fn(T, T) -> bool {
+    match dir {
+        CmpDir::Eq => |x, y| x == y,
+        CmpDir::Ne => |x, y| x != y,
+        CmpDir::Lt => |x, y| x < y,
+        CmpDir::Le => |x, y| x <= y,
+        CmpDir::Gt => |x, y| x > y,
+        CmpDir::Ge => |x, y| x >= y,
+    }
+}
+
+pub(crate) fn compare(dir: CmpDir, a: &Tensor, b: &Tensor) -> Result<Tensor> {
     same_dims(a, b)?;
-    fn cmp<T: PartialOrd + PartialEq + Copy>(dir: CmpDir, a: &[T], b: &[T]) -> Vec<bool> {
-        a.iter()
-            .zip(b)
-            .map(|(&x, &y)| match dir {
-                CmpDir::Eq => x == y,
-                CmpDir::Ne => x != y,
-                CmpDir::Lt => x < y,
-                CmpDir::Le => x <= y,
-                CmpDir::Gt => x > y,
-                CmpDir::Ge => x >= y,
-            })
-            .collect()
+    fn cmp<T: PartialOrd + Copy>(dir: CmpDir, a: &[T], b: &[T]) -> Vec<bool> {
+        let f = cmp_of::<T>(dir);
+        a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect()
     }
     let out = match (&a.data, &b.data) {
         (Data::F32(x), Data::F32(y)) => cmp(dir, x.as_slice(), y.as_slice()),
@@ -282,7 +287,7 @@ fn compare(dir: CmpDir, a: &Tensor, b: &Tensor) -> Result<Tensor> {
     Ok(Tensor::pred(out, a.dims.clone()))
 }
 
-fn select(pred: &Tensor, on_true: &Tensor, on_false: &Tensor) -> Result<Tensor> {
+pub(crate) fn select(pred: &Tensor, on_true: &Tensor, on_false: &Tensor) -> Result<Tensor> {
     same_dims(pred, on_true)?;
     same_dims(on_true, on_false)?;
     let p = pred.p()?;
@@ -300,594 +305,84 @@ fn select(pred: &Tensor, on_true: &Tensor, on_false: &Tensor) -> Result<Tensor> 
     })
 }
 
-fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+/// Scalar semantics of an f32 binary op — the single source of truth the
+/// whole-tensor path *and* the fused bytecode compose.
+pub(crate) fn bin_f32(op: BinOp) -> Result<fn(f32, f32) -> f32> {
+    Ok(match op {
+        BinOp::Add => |a, b| a + b,
+        BinOp::Sub => |a, b| a - b,
+        BinOp::Mul => |a, b| a * b,
+        BinOp::Div => |a, b| a / b,
+        BinOp::Max => f32::max,
+        BinOp::Min => f32::min,
+        BinOp::And | BinOp::Or => bail!("logical op on f32"),
+    })
+}
+
+/// Scalar semantics of an s32 binary op (wrapping; divide-by-zero is 0).
+pub(crate) fn bin_i32(op: BinOp) -> Result<fn(i32, i32) -> i32> {
+    Ok(match op {
+        BinOp::Add => i32::wrapping_add,
+        BinOp::Sub => i32::wrapping_sub,
+        BinOp::Mul => i32::wrapping_mul,
+        BinOp::Div => |a, b| if b == 0 { 0 } else { a.wrapping_div(b) },
+        BinOp::Max => i32::max,
+        BinOp::Min => i32::min,
+        BinOp::And | BinOp::Or => bail!("logical op on s32"),
+    })
+}
+
+/// Scalar semantics of a pred binary op.
+pub(crate) fn bin_pred(op: BinOp) -> Result<fn(bool, bool) -> bool> {
+    Ok(match op {
+        BinOp::And => |a, b| a && b,
+        BinOp::Or => |a, b| a || b,
+        _ => bail!("arithmetic op on pred"),
+    })
+}
+
+/// Scalar semantics of an f32 unary op.
+pub(crate) fn un_f32(op: super::parser::UnOp) -> fn(f32) -> f32 {
+    use super::parser::UnOp;
+    match op {
+        UnOp::Neg => |v| -v,
+        UnOp::Tanh => f32::tanh,
+        UnOp::Exp => f32::exp,
+        UnOp::Log => f32::ln,
+    }
+}
+
+pub(crate) fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor> {
     same_dims(a, b)?;
     let dims = a.dims.clone();
     Ok(match (&a.data, &b.data) {
         (Data::F32(x), Data::F32(y)) => {
-            let f: fn(f32, f32) -> f32 = match op {
-                BinOp::Add => |a, b| a + b,
-                BinOp::Sub => |a, b| a - b,
-                BinOp::Mul => |a, b| a * b,
-                BinOp::Div => |a, b| a / b,
-                BinOp::Max => f32::max,
-                BinOp::Min => f32::min,
-                BinOp::And | BinOp::Or => bail!("logical op on f32"),
-            };
+            let f = bin_f32(op)?;
             Tensor::f32(x.iter().zip(y.iter()).map(|(&a, &b)| f(a, b)).collect(), dims)
         }
         (Data::I32(x), Data::I32(y)) => {
-            let f: fn(i32, i32) -> i32 = match op {
-                BinOp::Add => i32::wrapping_add,
-                BinOp::Sub => i32::wrapping_sub,
-                BinOp::Mul => i32::wrapping_mul,
-                BinOp::Div => |a, b| if b == 0 { 0 } else { a.wrapping_div(b) },
-                BinOp::Max => i32::max,
-                BinOp::Min => i32::min,
-                BinOp::And | BinOp::Or => bail!("logical op on s32"),
-            };
+            let f = bin_i32(op)?;
             Tensor::i32(x.iter().zip(y.iter()).map(|(&a, &b)| f(a, b)).collect(), dims)
         }
         (Data::Pred(x), Data::Pred(y)) => {
-            let f: fn(bool, bool) -> bool = match op {
-                BinOp::And => |a, b| a && b,
-                BinOp::Or => |a, b| a || b,
-                _ => bail!("arithmetic op on pred"),
-            };
+            let f = bin_pred(op)?;
             Tensor::pred(x.iter().zip(y.iter()).map(|(&a, &b)| f(a, b)).collect(), dims)
         }
         _ => bail!("binary dtype mismatch"),
     })
 }
 
-fn unary(op: UnOp, a: &Tensor) -> Result<Tensor> {
+pub(crate) fn unary(op: super::parser::UnOp, a: &Tensor) -> Result<Tensor> {
+    use super::parser::UnOp;
     let dims = a.dims.clone();
     Ok(match (&a.data, op) {
         (Data::F32(x), _) => {
-            let f: fn(f32) -> f32 = match op {
-                UnOp::Neg => |v| -v,
-                UnOp::Tanh => f32::tanh,
-                UnOp::Exp => f32::exp,
-                UnOp::Log => f32::ln,
-            };
+            let f = un_f32(op);
             Tensor::f32(x.iter().map(|&v| f(v)).collect(), dims)
         }
         (Data::I32(x), UnOp::Neg) => {
             Tensor::i32(x.iter().map(|&v| v.wrapping_neg()).collect(), dims)
         }
         _ => bail!("unary {op:?} on {}", a.data.ty().name()),
-    })
-}
-
-fn dot(a: &Tensor, b: &Tensor, lc: usize, rc: usize) -> Result<Tensor> {
-    if a.dims.len() != 2 || b.dims.len() != 2 {
-        bail!("dot: only rank-2 operands supported ({:?} x {:?})", a.dims, b.dims);
-    }
-    let k = a.dims[lc];
-    if b.dims[rc] != k {
-        bail!("dot: contracting {k} vs {}", b.dims[rc]);
-    }
-    let m = a.dims[1 - lc];
-    let n = b.dims[1 - rc];
-    let af = a.f()?;
-    let bf = b.f()?;
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        let row = &mut out[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let av = if lc == 1 { af[i * k + kk] } else { af[kk * m + i] };
-            if rc == 0 {
-                let brow = &bf[kk * n..(kk + 1) * n];
-                for (o, &bv) in row.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            } else {
-                for (j, o) in row.iter_mut().enumerate() {
-                    *o += av * bf[j * k + kk];
-                }
-            }
-        }
-    }
-    Ok(Tensor::f32(out, vec![m, n]))
-}
-
-fn concat(shape: &Shape, parts: &[&Tensor], dim: usize) -> Result<Tensor> {
-    let (_, out_dims) = shape.arr()?;
-    let inner: usize = out_dims[dim + 1..].iter().product();
-    let outer: usize = out_dims[..dim].iter().product();
-    fn cat<'a, T: Copy>(
-        slices: &[(&'a [T], usize)],
-        outer: usize,
-        inner: usize,
-    ) -> Vec<T> {
-        let total: usize = slices.iter().map(|(s, _)| s.len()).sum();
-        let mut out = Vec::with_capacity(total);
-        for o in 0..outer {
-            for (s, dim_len) in slices {
-                let chunk = dim_len * inner;
-                out.extend_from_slice(&s[o * chunk..(o + 1) * chunk]);
-            }
-        }
-        out
-    }
-    let dims = out_dims.to_vec();
-    Ok(match &parts[0].data {
-        Data::F32(_) => {
-            let slices: Vec<(&[f32], usize)> =
-                parts.iter().map(|t| Ok((t.f()?, t.dims[dim]))).collect::<Result<_>>()?;
-            Tensor::f32(cat(&slices, outer, inner), dims)
-        }
-        Data::I32(_) => {
-            let slices: Vec<(&[i32], usize)> =
-                parts.iter().map(|t| Ok((t.i()?, t.dims[dim]))).collect::<Result<_>>()?;
-            Tensor::i32(cat(&slices, outer, inner), dims)
-        }
-        Data::Pred(_) => {
-            let slices: Vec<(&[bool], usize)> =
-                parts.iter().map(|t| Ok((t.p()?, t.dims[dim]))).collect::<Result<_>>()?;
-            Tensor::pred(cat(&slices, outer, inner), dims)
-        }
-    })
-}
-
-// ------------------------------------------------------------ slicing ops
-
-fn clamp_start(start: i64, dim: usize, size: usize) -> usize {
-    start.clamp(0, (dim - size) as i64) as usize
-}
-
-fn dynamic_slice(src: &Tensor, starts: &[i64], sizes: &[usize]) -> Result<Tensor> {
-    if starts.len() != src.dims.len() || sizes.len() != src.dims.len() {
-        bail!("dynamic-slice rank mismatch");
-    }
-    let s0: Vec<usize> = starts
-        .iter()
-        .zip(&src.dims)
-        .zip(sizes)
-        .map(|((&st, &d), &sz)| {
-            if sz > d {
-                bail!("slice size {sz} > dim {d}");
-            }
-            Ok(clamp_start(st, d, sz))
-        })
-        .collect::<Result<_>>()?;
-    // Fast path: full-width trailing dims make the slice contiguous.
-    let contiguous = !src.dims.is_empty() && src.dims[1..] == sizes[1..];
-    fn slice_t<T: Copy>(
-        src: &[T],
-        src_dims: &[usize],
-        start: &[usize],
-        sizes: &[usize],
-        contiguous: bool,
-    ) -> Vec<T> {
-        if contiguous {
-            let inner: usize = src_dims[1..].iter().product();
-            return src[start[0] * inner..(start[0] + sizes[0]) * inner].to_vec();
-        }
-        let sst = strides(src_dims);
-        let n: usize = sizes.iter().product();
-        let mut out = Vec::with_capacity(n);
-        let mut idx = vec![0usize; sizes.len()];
-        if n == 0 {
-            return out;
-        }
-        loop {
-            let flat: usize =
-                idx.iter().zip(start).zip(&sst).map(|((&i, &s), &st)| (i + s) * st).sum();
-            out.push(src[flat]);
-            if !next_index(&mut idx, sizes) {
-                break;
-            }
-        }
-        out
-    }
-    let dims = sizes.to_vec();
-    let c = contiguous;
-    Ok(match &src.data {
-        Data::F32(v) => Tensor::f32(slice_t(v.as_slice(), &src.dims, &s0, sizes, c), dims),
-        Data::I32(v) => Tensor::i32(slice_t(v.as_slice(), &src.dims, &s0, sizes, c), dims),
-        Data::Pred(v) => Tensor::pred(slice_t(v.as_slice(), &src.dims, &s0, sizes, c), dims),
-    })
-}
-
-fn dynamic_update_slice(mut base: Tensor, upd: &Tensor, starts: &[i64]) -> Result<Tensor> {
-    if starts.len() != base.dims.len() || upd.dims.len() != base.dims.len() {
-        bail!("dynamic-update-slice rank mismatch");
-    }
-    let s0: Vec<usize> = starts
-        .iter()
-        .zip(&base.dims)
-        .zip(&upd.dims)
-        .map(|((&st, &d), &u)| {
-            if u > d {
-                bail!("update dim {u} > operand dim {d}");
-            }
-            Ok(clamp_start(st, d, u))
-        })
-        .collect::<Result<_>>()?;
-    let contiguous = !base.dims.is_empty() && base.dims[1..] == upd.dims[1..];
-    fn write_t<T: Copy>(
-        dst: &mut [T],
-        dst_dims: &[usize],
-        upd: &[T],
-        upd_dims: &[usize],
-        start: &[usize],
-        contiguous: bool,
-    ) {
-        if contiguous {
-            let inner: usize = dst_dims[1..].iter().product();
-            let off = start[0] * inner;
-            dst[off..off + upd.len()].copy_from_slice(upd);
-            return;
-        }
-        let dst_st = strides(dst_dims);
-        let mut idx = vec![0usize; upd_dims.len()];
-        if upd.is_empty() {
-            return;
-        }
-        let mut u = 0usize;
-        loop {
-            let flat: usize =
-                idx.iter().zip(start).zip(&dst_st).map(|((&i, &s), &st)| (i + s) * st).sum();
-            dst[flat] = upd[u];
-            u += 1;
-            if !next_index(&mut idx, upd_dims) {
-                break;
-            }
-        }
-    }
-    let bd = base.dims.clone();
-    let ud = &upd.dims;
-    match (&mut base.data, &upd.data) {
-        (Data::F32(dst), Data::F32(u)) => {
-            write_t(Rc::make_mut(dst).as_mut_slice(), &bd, u.as_slice(), ud, &s0, contiguous)
-        }
-        (Data::I32(dst), Data::I32(u)) => {
-            write_t(Rc::make_mut(dst).as_mut_slice(), &bd, u.as_slice(), ud, &s0, contiguous)
-        }
-        (Data::Pred(dst), Data::Pred(u)) => {
-            write_t(Rc::make_mut(dst).as_mut_slice(), &bd, u.as_slice(), ud, &s0, contiguous)
-        }
-        _ => bail!("dynamic-update-slice dtype mismatch"),
-    }
-    Ok(base)
-}
-
-// -------------------------------------------------------- gather / scatter
-
-/// Read an s32 index from `indices` at batch coords `batch`, component
-/// `j` along `index_vector_dim` (which may equal the rank, meaning the
-/// index vectors are implicit scalars).
-fn read_index(indices: &Tensor, batch: &[usize], ivd: usize, j: usize) -> Result<i64> {
-    let st = strides(&indices.dims);
-    let mut flat = 0usize;
-    let mut b = 0usize;
-    for d in 0..indices.dims.len() {
-        let c = if d == ivd { j } else { let c = batch[b]; b += 1; c };
-        flat += c * st[d];
-    }
-    Ok(indices.i()?[flat] as i64)
-}
-
-fn gather(
-    shape: &Shape,
-    operand: &Tensor,
-    indices: &Tensor,
-    g: &super::parser::GatherDims,
-) -> Result<Tensor> {
-    let (_, out_dims) = shape.arr()?;
-    let od = &operand.dims;
-    let batch_out_dims: Vec<usize> =
-        (0..out_dims.len()).filter(|d| !g.offset_dims.contains(d)).collect();
-    let operand_offset_dims: Vec<usize> =
-        (0..od.len()).filter(|d| !g.collapsed_slice_dims.contains(d)).collect();
-    if operand_offset_dims.len() != g.offset_dims.len() {
-        bail!("gather: offset dims mismatch");
-    }
-    if g.slice_sizes.len() != od.len() {
-        bail!("gather: slice_sizes rank mismatch");
-    }
-    for (d, (&sz, &dim)) in g.slice_sizes.iter().zip(od).enumerate() {
-        if sz > dim {
-            bail!("gather: slice size {sz} > operand dim {dim} (dim {d})");
-        }
-    }
-    let ost = strides(od);
-    let n: usize = out_dims.iter().product();
-    fn run<T: Copy>(
-        src: &[T],
-        n: usize,
-        out_dims: &[usize],
-        mut at: impl FnMut(&[usize]) -> Result<usize>,
-    ) -> Result<Vec<T>> {
-        let mut out = Vec::with_capacity(n);
-        let mut idx = vec![0usize; out_dims.len()];
-        if n == 0 {
-            return Ok(out);
-        }
-        loop {
-            out.push(src[at(&idx)?]);
-            if !next_index(&mut idx, out_dims) {
-                break;
-            }
-        }
-        Ok(out)
-    }
-    let mut batch = vec![0usize; batch_out_dims.len()];
-    let mut at = |idx: &[usize]| -> Result<usize> {
-        for (b, &d) in batch_out_dims.iter().enumerate() {
-            batch[b] = idx[d];
-        }
-        let mut flat = 0usize;
-        // Clamped slice starts along the mapped operand dims.
-        for (j, &om) in g.start_index_map.iter().enumerate() {
-            let raw = read_index(indices, &batch, g.index_vector_dim, j)?;
-            flat += clamp_start(raw, od[om], g.slice_sizes[om]) * ost[om];
-        }
-        // Offsets within the slice along the non-collapsed dims.
-        for (k, &odim) in operand_offset_dims.iter().enumerate() {
-            flat += idx[g.offset_dims[k]] * ost[odim];
-        }
-        Ok(flat)
-    };
-    let dims = out_dims.to_vec();
-    Ok(match &operand.data {
-        Data::F32(v) => Tensor::f32(run(v.as_slice(), n, out_dims, &mut at)?, dims),
-        Data::I32(v) => Tensor::i32(run(v.as_slice(), n, out_dims, &mut at)?, dims),
-        Data::Pred(v) => Tensor::pred(run(v.as_slice(), n, out_dims, &mut at)?, dims),
-    })
-}
-
-/// How a two-parameter computation combines (lhs = accumulated/original,
-/// rhs = incoming). The artifacts only ever use `add` (accumulate) and
-/// `return rhs` (overwrite); anything else falls back to full evaluation.
-enum Combiner {
-    Bin(BinOp),
-    First,
-    Second,
-    Generic(usize),
-}
-
-fn classify_combiner(m: &Module, ci: usize) -> Combiner {
-    let comp = &m.comps[ci];
-    let root = &comp.instrs[comp.root];
-    let param_no = |pos: usize| match comp.instrs[pos].op {
-        Op::Parameter(i) => Some(i),
-        _ => None,
-    };
-    match &root.op {
-        Op::Parameter(0) => Combiner::First,
-        Op::Parameter(1) => Combiner::Second,
-        Op::Binary(b)
-            if matches!(
-                b,
-                BinOp::Add | BinOp::Mul | BinOp::Max | BinOp::Min | BinOp::And | BinOp::Or
-            ) && root.operands.len() == 2
-                && param_no(root.operands[0]) == Some(0)
-                && param_no(root.operands[1]) == Some(1)
-                && comp.instrs.len() == 3 =>
-        {
-            Combiner::Bin(*b)
-        }
-        _ => Combiner::Generic(ci),
-    }
-}
-
-fn scatter(
-    m: &Module,
-    mut base: Tensor,
-    indices: &Tensor,
-    updates: &Tensor,
-    s: &super::parser::ScatterDims,
-) -> Result<Tensor> {
-    let od = base.dims.clone();
-    let ud = updates.dims.clone();
-    let batch_upd_dims: Vec<usize> =
-        (0..ud.len()).filter(|d| !s.update_window_dims.contains(d)).collect();
-    let operand_window_dims: Vec<usize> =
-        (0..od.len()).filter(|d| !s.inserted_window_dims.contains(d)).collect();
-    if operand_window_dims.len() != s.update_window_dims.len() {
-        bail!("scatter: window dims mismatch");
-    }
-    let ost = strides(&od);
-    let combiner = classify_combiner(m, s.to_apply);
-    let mut batch = vec![0usize; batch_upd_dims.len()];
-    let n: usize = ud.iter().product();
-
-    // Destination flat index for one update element, or None when the
-    // write lands out of bounds (XLA drops such updates).
-    let mut dest = |idx: &[usize]| -> Result<Option<usize>> {
-        for (b, &d) in batch_upd_dims.iter().enumerate() {
-            batch[b] = idx[d];
-        }
-        let mut coord = vec![0i64; od.len()];
-        for (j, &sd) in s.scatter_dims_to_operand_dims.iter().enumerate() {
-            coord[sd] = read_index(indices, &batch, s.index_vector_dim, j)?;
-        }
-        for (k, &owd) in operand_window_dims.iter().enumerate() {
-            coord[owd] += idx[s.update_window_dims[k]] as i64;
-        }
-        let mut flat = 0usize;
-        for (d, &c) in coord.iter().enumerate() {
-            if c < 0 || c as usize >= od[d] {
-                return Ok(None);
-            }
-            flat += c as usize * ost[d];
-        }
-        Ok(Some(flat))
-    };
-
-    match (&mut base.data, &updates.data) {
-        (Data::F32(dst), Data::F32(upd)) => {
-            let dst = Rc::make_mut(dst);
-            let mut idx = vec![0usize; ud.len()];
-            let mut u = 0usize;
-            if n > 0 {
-                loop {
-                    if let Some(flat) = dest(&idx)? {
-                        match &combiner {
-                            Combiner::Bin(BinOp::Add) => dst[flat] += upd[u],
-                            Combiner::Bin(BinOp::Mul) => dst[flat] *= upd[u],
-                            Combiner::Bin(BinOp::Max) => dst[flat] = dst[flat].max(upd[u]),
-                            Combiner::Bin(BinOp::Min) => dst[flat] = dst[flat].min(upd[u]),
-                            Combiner::Second => dst[flat] = upd[u],
-                            Combiner::First => {}
-                            Combiner::Bin(_) | Combiner::Generic(_) => {
-                                dst[flat] =
-                                    combine_generic_f32(m, &combiner, dst[flat], upd[u])?
-                            }
-                        }
-                    }
-                    u += 1;
-                    if !next_index(&mut idx, &ud) {
-                        break;
-                    }
-                }
-            }
-        }
-        (Data::I32(dst), Data::I32(upd)) => {
-            let dst = Rc::make_mut(dst);
-            let mut idx = vec![0usize; ud.len()];
-            let mut u = 0usize;
-            if n > 0 {
-                loop {
-                    if let Some(flat) = dest(&idx)? {
-                        match &combiner {
-                            Combiner::Bin(BinOp::Add) => {
-                                dst[flat] = dst[flat].wrapping_add(upd[u])
-                            }
-                            Combiner::Second => dst[flat] = upd[u],
-                            Combiner::First => {}
-                            _ => bail!("unsupported s32 scatter combiner"),
-                        }
-                    }
-                    u += 1;
-                    if !next_index(&mut idx, &ud) {
-                        break;
-                    }
-                }
-            }
-        }
-        _ => bail!("scatter dtype mismatch"),
-    }
-    Ok(base)
-}
-
-fn combine_generic_f32(m: &Module, c: &Combiner, a: f32, b: f32) -> Result<f32> {
-    let Combiner::Generic(ci) = c else { bail!("not a generic combiner") };
-    let out = eval_comp(
-        m,
-        *ci,
-        vec![
-            Value::Arr(Tensor::f32(vec![a], vec![])),
-            Value::Arr(Tensor::f32(vec![b], vec![])),
-        ],
-    )?;
-    Ok(out.arr()?.f()?[0])
-}
-
-// ---------------------------------------------------------------- reduce
-
-fn reduce(
-    m: &Module,
-    src: &Tensor,
-    init: &Tensor,
-    rdims: &[usize],
-    to_apply: usize,
-) -> Result<Tensor> {
-    let out_dims: Vec<usize> = src
-        .dims
-        .iter()
-        .enumerate()
-        .filter(|(d, _)| !rdims.contains(d))
-        .map(|(_, &s)| s)
-        .collect();
-    let out_st = strides(&out_dims);
-    // Per-source-dim stride into the output (0 for reduced dims).
-    let mut map = vec![0usize; src.dims.len()];
-    let mut o = 0usize;
-    for d in 0..src.dims.len() {
-        if !rdims.contains(&d) {
-            map[d] = out_st[o];
-            o += 1;
-        }
-    }
-    let n_out: usize = out_dims.iter().product();
-    let combiner = classify_combiner(m, to_apply);
-
-    fn run<T: Copy>(
-        src: &[T],
-        src_dims: &[usize],
-        map: &[usize],
-        init: T,
-        n_out: usize,
-        mut f: impl FnMut(T, T) -> Result<T>,
-    ) -> Result<Vec<T>> {
-        let mut out = vec![init; n_out];
-        let mut idx = vec![0usize; src_dims.len()];
-        if src.is_empty() {
-            return Ok(out);
-        }
-        let mut s = 0usize;
-        loop {
-            let dst: usize = idx.iter().zip(map).map(|(&i, &m)| i * m).sum();
-            out[dst] = f(out[dst], src[s])?;
-            s += 1;
-            if !next_index(&mut idx, src_dims) {
-                break;
-            }
-        }
-        Ok(out)
-    }
-
-    Ok(match (&src.data, &init.data) {
-        (Data::F32(v), Data::F32(i0)) => {
-            let data = match &combiner {
-                Combiner::Bin(BinOp::Add) => {
-                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a + b))?
-                }
-                Combiner::Bin(BinOp::Mul) => {
-                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a * b))?
-                }
-                Combiner::Bin(BinOp::Max) => {
-                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a.max(b)))?
-                }
-                Combiner::Bin(BinOp::Min) => {
-                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a.min(b)))?
-                }
-                c => run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| {
-                    combine_generic_f32(m, c, a, b)
-                })?,
-            };
-            Tensor::f32(data, out_dims)
-        }
-        (Data::I32(v), Data::I32(i0)) => {
-            let data = match &combiner {
-                Combiner::Bin(BinOp::Add) => {
-                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a.wrapping_add(b)))?
-                }
-                Combiner::Bin(BinOp::Max) => {
-                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a.max(b)))?
-                }
-                Combiner::Bin(BinOp::Min) => {
-                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a.min(b)))?
-                }
-                _ => bail!("unsupported s32 reduce combiner"),
-            };
-            Tensor::i32(data, out_dims)
-        }
-        (Data::Pred(v), Data::Pred(i0)) => {
-            let data = match &combiner {
-                Combiner::Bin(BinOp::And) => {
-                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a && b))?
-                }
-                Combiner::Bin(BinOp::Or) => {
-                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a || b))?
-                }
-                _ => bail!("unsupported pred reduce combiner"),
-            };
-            Tensor::pred(data, out_dims)
-        }
-        _ => bail!("reduce init dtype mismatch"),
     })
 }

@@ -1,0 +1,678 @@
+//! Elementwise fusion: chains of `add`/`multiply`/`compare`/`select`/
+//! `convert`/... collapse into one loop kernel.
+//!
+//! The tree-walker materializes a full tensor per SSA value, so a chain
+//! of N elementwise ops makes N passes over memory with N allocations.
+//! The plan compiler instead lowers each maximal single-consumer chain
+//! into a small postfix **expression bytecode** ([`EInstr`]), executed
+//! block-by-block ([`BLOCK`] elements at a time): inputs are read once,
+//! intermediates live in a recycled per-block stack that stays in cache,
+//! and exactly one output tensor is written.
+//!
+//! Scalar semantics come from [`super::eval`]'s op tables (`bin_f32`,
+//! `un_f32`, ...), so a fused chain is **bitwise identical** to the
+//! unfused walk — elementwise ops are order-free per element and both
+//! paths apply the very same `fn(f32, f32) -> f32`.
+//!
+//! `broadcast`-of-scalar participates as a leaf ([`EInstr::Splat`]): the
+//! scalar is read once and splatted per block, which removes the
+//! materialized `[n]`-sized constant planes the artifacts are full of.
+
+use anyhow::{bail, Result};
+
+use super::eval::{bin_f32, bin_i32, bin_pred, un_f32};
+use super::parser::{BinOp, CmpDir, Computation, Op, Shape, UnOp};
+use super::value::{Data, Tensor, Ty};
+
+/// Elements processed per block: big enough to amortize dispatch, small
+/// enough that a whole stack of lanes stays in L1/L2.
+pub const BLOCK: usize = 1024;
+
+/// One postfix bytecode instruction of a fused kernel.
+#[derive(Clone, Debug)]
+pub enum EInstr {
+    /// Push a block of external input `k`.
+    Load(u16),
+    /// Push external scalar input `k`, splatted across the block.
+    Splat(u16),
+    /// Pop rhs, pop lhs, push the elementwise binary result.
+    Bin(BinOp),
+    /// Pop rhs, pop lhs, push the elementwise comparison (pred).
+    Cmp(CmpDir),
+    /// Pop on_false, pop on_true, pop pred, push the selection.
+    Sel,
+    /// Apply a unary op to the top of stack in place.
+    Un(UnOp),
+    /// Pop a lane, push it converted to the given type.
+    Cvt(Ty),
+}
+
+/// A compiled elementwise chain: one pass over memory instead of one
+/// materialized tensor per fused instruction.
+pub struct FusedKernel {
+    pub prog: Vec<EInstr>,
+    pub n_inputs: usize,
+    pub out_ty: Ty,
+    /// HLO opcodes folded into this kernel, postfix order (diagnostics
+    /// and fuser tests).
+    pub ops: Vec<&'static str>,
+}
+
+// ------------------------------------------------------------ fusability
+
+/// Is this op an elementwise candidate (same-shape, one output element
+/// per input element)?
+pub fn is_elementwise(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::Binary(_) | Op::Unary(_) | Op::Compare { .. } | Op::Select | Op::Convert
+    )
+}
+
+fn arr_of(shape: &Shape) -> Option<(Ty, &[usize])> {
+    match shape {
+        Shape::Arr(ty, dims) => Some((*ty, dims)),
+        Shape::Tuple(_) => None,
+    }
+}
+
+/// Can instruction `i` be a member (interior or root) of a fused chain?
+/// Checks the static op/type/shape legality the bytecode relies on, so
+/// kernel compilation cannot fail on a node this accepts.
+pub fn fusable_node(comp: &Computation, i: usize) -> bool {
+    let ins = &comp.instrs[i];
+    if !is_elementwise(&ins.op) {
+        return false;
+    }
+    let Some((ty, dims)) = arr_of(&ins.shape) else { return false };
+    let opnd = |j: usize| -> Option<(Ty, &[usize])> {
+        let o = *ins.operands.get(j)?;
+        arr_of(&comp.instrs[o].shape)
+    };
+    match &ins.op {
+        Op::Binary(b) => {
+            let (Some((ta, da)), Some((tb, db))) = (opnd(0), opnd(1)) else { return false };
+            if ta != tb || ta != ty || da != dims || db != dims {
+                return false;
+            }
+            match ta {
+                Ty::F32 => bin_f32(*b).is_ok(),
+                Ty::S32 => bin_i32(*b).is_ok(),
+                Ty::Pred => bin_pred(*b).is_ok(),
+            }
+        }
+        Op::Unary(u) => {
+            let Some((ta, da)) = opnd(0) else { return false };
+            if ta != ty || da != dims {
+                return false;
+            }
+            matches!((ta, u), (Ty::F32, _) | (Ty::S32, UnOp::Neg))
+        }
+        Op::Compare { .. } => {
+            let (Some((ta, da)), Some((tb, db))) = (opnd(0), opnd(1)) else { return false };
+            ta == tb && ta != Ty::Pred && da == dims && db == dims && ty == Ty::Pred
+        }
+        Op::Select => {
+            let (Some((tp, dp)), Some((tt, dt)), Some((tf, df))) =
+                (opnd(0), opnd(1), opnd(2))
+            else {
+                return false;
+            };
+            tp == Ty::Pred && tt == tf && tt == ty && dp == dims && dt == dims && df == dims
+        }
+        Op::Convert => {
+            let Some((_, da)) = opnd(0) else { return false };
+            ty != Ty::Pred && da == dims
+        }
+        _ => false,
+    }
+}
+
+/// Is instruction `i` a broadcast of a scalar (fusable as a `Splat`
+/// leaf)? The consumer-side dims check lives in the plan compiler.
+pub fn splat_node(comp: &Computation, i: usize) -> bool {
+    let ins = &comp.instrs[i];
+    let Op::Broadcast { .. } = &ins.op else { return false };
+    let Some((ty, _)) = arr_of(&ins.shape) else { return false };
+    let Some(&o) = ins.operands.first() else { return false };
+    match arr_of(&comp.instrs[o].shape) {
+        Some((oty, odims)) => oty == ty && odims.iter().product::<usize>() == 1,
+        None => false,
+    }
+}
+
+// --------------------------------------------------------------- compile
+
+/// Compile the fused chain rooted at `root` (whose transitive operands
+/// marked `inlined` fold into the kernel). Returns the kernel plus the
+/// positions of the external operands, in `Load`/`Splat` input order.
+pub fn compile(
+    comp: &Computation,
+    root: usize,
+    inlined: &[bool],
+) -> Result<(FusedKernel, Vec<usize>)> {
+    let mut prog = Vec::new();
+    let mut ops = Vec::new();
+    let mut ext: Vec<usize> = Vec::new();
+    let mut tys: Vec<Ty> = Vec::new();
+    emit(comp, root, inlined, &mut prog, &mut ops, &mut ext, &mut tys)?;
+    if tys.len() != 1 {
+        bail!("fused kernel left {} lanes on the stack", tys.len());
+    }
+    let (out_ty, _) = comp.instrs[root].shape.arr()?;
+    if tys[0] != out_ty {
+        bail!("fused kernel yields {:?}, root declares {:?}", tys[0], out_ty);
+    }
+    Ok((FusedKernel { prog, n_inputs: ext.len(), out_ty, ops }, ext))
+}
+
+fn ext_index(ext: &mut Vec<usize>, o: usize) -> u16 {
+    match ext.iter().position(|&x| x == o) {
+        Some(p) => p as u16,
+        None => {
+            ext.push(o);
+            (ext.len() - 1) as u16
+        }
+    }
+}
+
+fn emit(
+    comp: &Computation,
+    i: usize,
+    inlined: &[bool],
+    prog: &mut Vec<EInstr>,
+    ops: &mut Vec<&'static str>,
+    ext: &mut Vec<usize>,
+    tys: &mut Vec<Ty>,
+) -> Result<()> {
+    let ins = &comp.instrs[i];
+    let (out_ty, _) = ins.shape.arr()?;
+    // Splat leaf: push the scalar *operand* of the inlined broadcast.
+    if let Op::Broadcast { .. } = &ins.op {
+        let o = ins.operands[0];
+        let (sty, _) = comp.instrs[o].shape.arr()?;
+        if sty != out_ty {
+            bail!("fused splat type mismatch");
+        }
+        prog.push(EInstr::Splat(ext_index(ext, o)));
+        tys.push(sty);
+        ops.push("broadcast");
+        return Ok(());
+    }
+    // Elementwise node: operands first (recursing into inlined ones),
+    // then the op itself.
+    for &o in &ins.operands {
+        if inlined[o] {
+            emit(comp, o, inlined, prog, ops, ext, tys)?;
+        } else {
+            let (oty, _) = comp.instrs[o].shape.arr()?;
+            prog.push(EInstr::Load(ext_index(ext, o)));
+            tys.push(oty);
+        }
+    }
+    let pop = |tys: &mut Vec<Ty>| tys.pop().ok_or_else(|| anyhow::anyhow!("stack underflow"));
+    match &ins.op {
+        Op::Binary(b) => {
+            let tb = pop(tys)?;
+            let ta = pop(tys)?;
+            if ta != tb {
+                bail!("fused binary dtype mismatch");
+            }
+            match ta {
+                Ty::F32 => {
+                    bin_f32(*b)?;
+                }
+                Ty::S32 => {
+                    bin_i32(*b)?;
+                }
+                Ty::Pred => {
+                    bin_pred(*b)?;
+                }
+            }
+            prog.push(EInstr::Bin(*b));
+            tys.push(ta);
+            ops.push(bin_name(*b));
+        }
+        Op::Unary(u) => {
+            let ta = pop(tys)?;
+            if !matches!((ta, u), (Ty::F32, _) | (Ty::S32, UnOp::Neg)) {
+                bail!("fused unary {u:?} on {}", ta.name());
+            }
+            prog.push(EInstr::Un(*u));
+            tys.push(ta);
+            ops.push(un_name(*u));
+        }
+        Op::Compare { dir } => {
+            let tb = pop(tys)?;
+            let ta = pop(tys)?;
+            if ta != tb || ta == Ty::Pred {
+                bail!("fused compare dtype mismatch");
+            }
+            prog.push(EInstr::Cmp(*dir));
+            tys.push(Ty::Pred);
+            ops.push("compare");
+        }
+        Op::Select => {
+            let tf = pop(tys)?;
+            let tt = pop(tys)?;
+            let tp = pop(tys)?;
+            if tp != Ty::Pred || tt != tf {
+                bail!("fused select dtype mismatch");
+            }
+            prog.push(EInstr::Sel);
+            tys.push(tt);
+            ops.push("select");
+        }
+        Op::Convert => {
+            let _ = pop(tys)?;
+            if out_ty == Ty::Pred {
+                bail!("fused convert to pred");
+            }
+            prog.push(EInstr::Cvt(out_ty));
+            tys.push(out_ty);
+            ops.push("convert");
+        }
+        other => bail!("op {other:?} is not fusable"),
+    }
+    Ok(())
+}
+
+fn bin_name(b: BinOp) -> &'static str {
+    match b {
+        BinOp::Add => "add",
+        BinOp::Sub => "subtract",
+        BinOp::Mul => "multiply",
+        BinOp::Div => "divide",
+        BinOp::Max => "maximum",
+        BinOp::Min => "minimum",
+        BinOp::And => "and",
+        BinOp::Or => "or",
+    }
+}
+
+fn un_name(u: UnOp) -> &'static str {
+    match u {
+        UnOp::Neg => "negate",
+        UnOp::Tanh => "tanh",
+        UnOp::Exp => "exponential",
+        UnOp::Log => "log",
+    }
+}
+
+// --------------------------------------------------------------- execute
+
+/// One lane of the per-block evaluation stack.
+enum Lane {
+    F(Vec<f32>),
+    I(Vec<i32>),
+    P(Vec<bool>),
+}
+
+/// Recycled lane buffers: after warm-up, block evaluation allocates
+/// nothing.
+#[derive(Default)]
+struct LanePool {
+    f: Vec<Vec<f32>>,
+    i: Vec<Vec<i32>>,
+    p: Vec<Vec<bool>>,
+}
+
+impl LanePool {
+    fn take_f(&mut self) -> Vec<f32> {
+        self.f.pop().unwrap_or_default()
+    }
+    fn take_i(&mut self) -> Vec<i32> {
+        self.i.pop().unwrap_or_default()
+    }
+    fn take_p(&mut self) -> Vec<bool> {
+        self.p.pop().unwrap_or_default()
+    }
+    fn put(&mut self, lane: Lane) {
+        match lane {
+            Lane::F(v) => self.f.push(v),
+            Lane::I(v) => self.i.push(v),
+            Lane::P(v) => self.p.push(v),
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Scalar {
+    F(f32),
+    I(i32),
+    P(bool),
+}
+
+/// Execute a fused kernel over `inputs`, producing the `out_dims` tensor.
+pub fn run_fused(k: &FusedKernel, inputs: &[&Tensor], out_dims: &[usize]) -> Result<Tensor> {
+    let n: usize = out_dims.iter().product();
+    if inputs.len() != k.n_inputs {
+        bail!("fused kernel wants {} inputs, got {}", k.n_inputs, inputs.len());
+    }
+    // Pre-read splat scalars and validate input sizes.
+    let mut splat = vec![false; k.n_inputs];
+    for e in &k.prog {
+        if let EInstr::Splat(i) = e {
+            splat[*i as usize] = true;
+        }
+    }
+    let mut scalars: Vec<Option<Scalar>> = vec![None; k.n_inputs];
+    for (i, t) in inputs.iter().enumerate() {
+        let want = if splat[i] { 1 } else { n };
+        if t.elements() != want {
+            bail!("fused input {i}: {} elements, want {want}", t.elements());
+        }
+        if splat[i] {
+            scalars[i] = Some(match &t.data {
+                Data::F32(v) => Scalar::F(v[0]),
+                Data::I32(v) => Scalar::I(v[0]),
+                Data::Pred(v) => Scalar::P(v[0]),
+            });
+        }
+    }
+
+    let mut pool = LanePool::default();
+    let mut stack: Vec<Lane> = Vec::new();
+    let mut out_f: Vec<f32> = Vec::new();
+    let mut out_i: Vec<i32> = Vec::new();
+    let mut out_p: Vec<bool> = Vec::new();
+    match k.out_ty {
+        Ty::F32 => out_f.reserve_exact(n),
+        Ty::S32 => out_i.reserve_exact(n),
+        Ty::Pred => out_p.reserve_exact(n),
+    }
+
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + BLOCK).min(n);
+        for e in &k.prog {
+            step(e, inputs, &scalars, lo, hi, &mut stack, &mut pool)?;
+        }
+        let r = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: empty result stack"))?;
+        if !stack.is_empty() {
+            bail!("fused: {} stray lanes after block", stack.len());
+        }
+        match (&r, k.out_ty) {
+            (Lane::F(v), Ty::F32) => out_f.extend_from_slice(v),
+            (Lane::I(v), Ty::S32) => out_i.extend_from_slice(v),
+            (Lane::P(v), Ty::Pred) => out_p.extend_from_slice(v),
+            _ => bail!("fused: result lane type mismatch"),
+        }
+        pool.put(r);
+        lo = hi;
+    }
+
+    Ok(match k.out_ty {
+        Ty::F32 => Tensor::f32(out_f, out_dims.to_vec()),
+        Ty::S32 => Tensor::i32(out_i, out_dims.to_vec()),
+        Ty::Pred => Tensor::pred(out_p, out_dims.to_vec()),
+    })
+}
+
+fn step(
+    e: &EInstr,
+    inputs: &[&Tensor],
+    scalars: &[Option<Scalar>],
+    lo: usize,
+    hi: usize,
+    stack: &mut Vec<Lane>,
+    pool: &mut LanePool,
+) -> Result<()> {
+    let len = hi - lo;
+    match e {
+        EInstr::Load(i) => {
+            let lane = match &inputs[*i as usize].data {
+                Data::F32(v) => {
+                    let mut b = pool.take_f();
+                    b.clear();
+                    b.extend_from_slice(&v[lo..hi]);
+                    Lane::F(b)
+                }
+                Data::I32(v) => {
+                    let mut b = pool.take_i();
+                    b.clear();
+                    b.extend_from_slice(&v[lo..hi]);
+                    Lane::I(b)
+                }
+                Data::Pred(v) => {
+                    let mut b = pool.take_p();
+                    b.clear();
+                    b.extend_from_slice(&v[lo..hi]);
+                    Lane::P(b)
+                }
+            };
+            stack.push(lane);
+        }
+        EInstr::Splat(i) => {
+            let lane = match scalars[*i as usize] {
+                Some(Scalar::F(x)) => {
+                    let mut b = pool.take_f();
+                    b.clear();
+                    b.resize(len, x);
+                    Lane::F(b)
+                }
+                Some(Scalar::I(x)) => {
+                    let mut b = pool.take_i();
+                    b.clear();
+                    b.resize(len, x);
+                    Lane::I(b)
+                }
+                Some(Scalar::P(x)) => {
+                    let mut b = pool.take_p();
+                    b.clear();
+                    b.resize(len, x);
+                    Lane::P(b)
+                }
+                None => bail!("fused: splat input {i} missing scalar"),
+            };
+            stack.push(lane);
+        }
+        EInstr::Bin(op) => {
+            let b = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: bin underflow"))?;
+            let a = stack.last_mut().ok_or_else(|| anyhow::anyhow!("fused: bin underflow"))?;
+            match (a, &b) {
+                (Lane::F(x), Lane::F(y)) => {
+                    let f = bin_f32(*op)?;
+                    for (xa, &yb) in x.iter_mut().zip(y.iter()) {
+                        *xa = f(*xa, yb);
+                    }
+                }
+                (Lane::I(x), Lane::I(y)) => {
+                    let f = bin_i32(*op)?;
+                    for (xa, &yb) in x.iter_mut().zip(y.iter()) {
+                        *xa = f(*xa, yb);
+                    }
+                }
+                (Lane::P(x), Lane::P(y)) => {
+                    let f = bin_pred(*op)?;
+                    for (xa, &yb) in x.iter_mut().zip(y.iter()) {
+                        *xa = f(*xa, yb);
+                    }
+                }
+                _ => bail!("fused: bin lane type mismatch"),
+            }
+            pool.put(b);
+        }
+        EInstr::Cmp(dir) => {
+            let b = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: cmp underflow"))?;
+            let a = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: cmp underflow"))?;
+            let mut out = pool.take_p();
+            out.clear();
+            fn cmp<T: PartialOrd + Copy>(dir: CmpDir, a: &[T], b: &[T], out: &mut Vec<bool>) {
+                let f = super::eval::cmp_of::<T>(dir);
+                out.extend(a.iter().zip(b).map(|(&x, &y)| f(x, y)));
+            }
+            match (&a, &b) {
+                (Lane::F(x), Lane::F(y)) => cmp(*dir, x, y, &mut out),
+                (Lane::I(x), Lane::I(y)) => cmp(*dir, x, y, &mut out),
+                _ => bail!("fused: cmp lane type mismatch"),
+            }
+            stack.push(Lane::P(out));
+            pool.put(a);
+            pool.put(b);
+        }
+        EInstr::Sel => {
+            let f = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: sel underflow"))?;
+            let mut t = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: sel underflow"))?;
+            let p = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: sel underflow"))?;
+            let Lane::P(pv) = &p else { bail!("fused: sel pred lane") };
+            match (&mut t, &f) {
+                (Lane::F(tv), Lane::F(fv)) => {
+                    for ((tx, &fx), &c) in tv.iter_mut().zip(fv.iter()).zip(pv.iter()) {
+                        if !c {
+                            *tx = fx;
+                        }
+                    }
+                }
+                (Lane::I(tv), Lane::I(fv)) => {
+                    for ((tx, &fx), &c) in tv.iter_mut().zip(fv.iter()).zip(pv.iter()) {
+                        if !c {
+                            *tx = fx;
+                        }
+                    }
+                }
+                (Lane::P(tv), Lane::P(fv)) => {
+                    for ((tx, &fx), &c) in tv.iter_mut().zip(fv.iter()).zip(pv.iter()) {
+                        if !c {
+                            *tx = fx;
+                        }
+                    }
+                }
+                _ => bail!("fused: sel lane type mismatch"),
+            }
+            stack.push(t);
+            pool.put(p);
+            pool.put(f);
+        }
+        EInstr::Un(op) => {
+            let a = stack.last_mut().ok_or_else(|| anyhow::anyhow!("fused: un underflow"))?;
+            match (a, op) {
+                (Lane::F(x), _) => {
+                    let f = un_f32(*op);
+                    for v in x.iter_mut() {
+                        *v = f(*v);
+                    }
+                }
+                (Lane::I(x), UnOp::Neg) => {
+                    for v in x.iter_mut() {
+                        *v = v.wrapping_neg();
+                    }
+                }
+                _ => bail!("fused: unary lane type mismatch"),
+            }
+        }
+        EInstr::Cvt(ty) => {
+            use super::eval::{cast_f32_i32, cast_i32_f32, cast_pred_f32, cast_pred_i32};
+            let a = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: cvt underflow"))?;
+            let lane = match (a, ty) {
+                (Lane::F(x), Ty::F32) => Lane::F(x),
+                (Lane::I(x), Ty::S32) => Lane::I(x),
+                (a, Ty::F32) => {
+                    let mut out = pool.take_f();
+                    out.clear();
+                    match &a {
+                        Lane::I(x) => out.extend(x.iter().map(|&v| cast_i32_f32(v))),
+                        Lane::P(x) => out.extend(x.iter().map(|&b| cast_pred_f32(b))),
+                        Lane::F(_) => unreachable!(),
+                    }
+                    pool.put(a);
+                    Lane::F(out)
+                }
+                (a, Ty::S32) => {
+                    let mut out = pool.take_i();
+                    out.clear();
+                    match &a {
+                        Lane::F(x) => out.extend(x.iter().map(|&v| cast_f32_i32(v))),
+                        Lane::P(x) => out.extend(x.iter().map(|&b| cast_pred_i32(b))),
+                        Lane::I(_) => unreachable!(),
+                    }
+                    pool.put(a);
+                    Lane::I(out)
+                }
+                (_, Ty::Pred) => bail!("fused: convert to pred"),
+            };
+            stack.push(lane);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32s(n: usize, seed: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.37 + seed).sin()).collect()
+    }
+
+    #[test]
+    fn hand_built_kernel_matches_scalar_reference_across_blocks() {
+        // out = (-(a + b)) * a, over more than one block.
+        let n = BLOCK * 2 + 177;
+        let a = f32s(n, 0.1);
+        let b = f32s(n, 2.5);
+        let k = FusedKernel {
+            prog: vec![
+                EInstr::Load(0),
+                EInstr::Load(1),
+                EInstr::Bin(BinOp::Add),
+                EInstr::Un(UnOp::Neg),
+                EInstr::Load(0),
+                EInstr::Bin(BinOp::Mul),
+            ],
+            n_inputs: 2,
+            out_ty: Ty::F32,
+            ops: vec!["add", "negate", "multiply"],
+        };
+        let ta = Tensor::f32(a.clone(), vec![n]);
+        let tb = Tensor::f32(b.clone(), vec![n]);
+        let out = run_fused(&k, &[&ta, &tb], &[n]).unwrap();
+        for ((&o, &x), &y) in out.f().unwrap().iter().zip(&a).zip(&b) {
+            assert_eq!(o, -(x + y) * x);
+        }
+    }
+
+    #[test]
+    fn splat_compare_select_convert_chain() {
+        // out_f32 = convert_s32(select(i < 0, splat(100), i))
+        let n = BLOCK + 5;
+        let iv: Vec<i32> = (0..n as i32).map(|i| i - 600).collect();
+        let k = FusedKernel {
+            prog: vec![
+                EInstr::Load(0),
+                EInstr::Splat(1),
+                EInstr::Cmp(CmpDir::Lt),
+                EInstr::Splat(2),
+                EInstr::Load(0),
+                EInstr::Sel,
+                EInstr::Cvt(Ty::F32),
+            ],
+            n_inputs: 3,
+            out_ty: Ty::F32,
+            ops: vec!["compare", "select", "convert"],
+        };
+        let ti = Tensor::i32(iv.clone(), vec![n]);
+        let zero = Tensor::i32(vec![0], vec![]);
+        let hundred = Tensor::i32(vec![100], vec![]);
+        let out = run_fused(&k, &[&ti, &zero, &hundred], &[n]).unwrap();
+        for (&o, &i) in out.f().unwrap().iter().zip(&iv) {
+            let want = if i < 0 { 100.0 } else { i as f32 };
+            assert_eq!(o, want);
+        }
+    }
+
+    #[test]
+    fn input_size_validation() {
+        let k = FusedKernel {
+            prog: vec![EInstr::Load(0), EInstr::Un(UnOp::Neg)],
+            n_inputs: 1,
+            out_ty: Ty::F32,
+            ops: vec!["negate"],
+        };
+        let wrong = Tensor::f32(vec![1.0, 2.0], vec![2]);
+        assert!(run_fused(&k, &[&wrong], &[3]).is_err());
+        let empty = Tensor::f32(vec![], vec![0]);
+        let out = run_fused(&k, &[&empty], &[0]).unwrap();
+        assert_eq!(out.elements(), 0);
+    }
+}

@@ -1,0 +1,1032 @@
+//! Heavy-op kernels for the HLO interpreter: `dot`, `reduce`, `gather`,
+//! `scatter`, plus the data-movement ops (`broadcast`, `transpose`,
+//! `concatenate`, dynamic slicing, `iota`).
+//!
+//! Both execution engines share these implementations — the tree-walking
+//! reference evaluator ([`super::eval`]) calls them with [`Par::serial`],
+//! the compiled-plan executor ([`super::plan`]) with the executable's
+//! thread budget — so the two engines are the *same numerics* by
+//! construction.
+//!
+//! Threading policy: a kernel fans out over
+//! [`ThreadPool::scope_run`](crate::util::threadpool::ThreadPool::scope_run)
+//! only when (a) the executable was given more than one thread
+//! (`POLYGLOT_INTERP_THREADS`), and (b) the op's work crosses a fixed
+//! size threshold — small dispatches stay serial, the same
+//! "wins only at sufficient batch size" switch the `grad` subsystem uses.
+//! Every parallel path is **bitwise identical** to its serial path:
+//!
+//! * `dot` splits *output rows* across threads; each output element's
+//!   k-loop runs in the same order either way.
+//! * `reduce` parallelizes only trailing-dimension reductions, where each
+//!   output element folds a contiguous input run — same fold order.
+//! * `gather` is pure reads into disjoint output rows.
+//! * `scatter` (the canonical embedding-update form) routes through the
+//!   Zipf-aware [`ShardPlan`](crate::grad::ShardPlan): owner-computes,
+//!   stream-order per destination row — the exact contract
+//!   `baselines::scatter::scatter_add_serial` defines and
+//!   `tests/grad_equivalence.rs` already proves for the grad subsystem.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::baselines::scatter::scatter_add_serial;
+use crate::grad::sharded::scatter_add_sharded;
+use crate::grad::ShardPlan;
+use crate::util::threadpool::ThreadPool;
+
+use super::parser::{BinOp, GatherDims, Module, Op, ScatterDims};
+use super::value::{next_index, strides, Data, Tensor, Ty};
+
+/// Scalar-combiner evaluation callback for `Combiner::Generic`: the
+/// engine that owns the call evaluates computation `ci` on two f32
+/// scalars. Keeps kernels engine-agnostic.
+pub type GenericCombine<'a> = &'a dyn Fn(usize, f32, f32) -> Result<f32>;
+
+/// Thread budget for one kernel dispatch.
+#[derive(Clone, Copy)]
+pub struct Par<'a> {
+    pub threads: usize,
+    pub pool: Option<&'a ThreadPool>,
+}
+
+impl Par<'_> {
+    /// Single-threaded execution (the reference evaluator's mode).
+    pub fn serial() -> Par<'static> {
+        Par { threads: 1, pool: None }
+    }
+
+    /// The pool, iff parallel execution is allowed and `work` crosses the
+    /// kernel's threshold.
+    fn grab(&self, work: usize, min_work: usize) -> Option<&ThreadPool> {
+        if self.threads > 1 && work >= min_work {
+            self.pool
+        } else {
+            None
+        }
+    }
+}
+
+// Work thresholds below which fan-out costs more than it saves (measured
+// against `scope_run`'s ~10µs dispatch floor on small hosts).
+const DOT_PAR_MIN_FLOPS: usize = 1 << 18;
+const REDUCE_PAR_MIN_ELEMS: usize = 1 << 16;
+const GATHER_PAR_MIN_ELEMS: usize = 1 << 15;
+const SCATTER_PAR_MIN_ROWS: usize = 512;
+
+/// A raw pointer that may cross into pool tasks. SAFETY: every use below
+/// hands each task a *disjoint* destination range.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+// ---------------------------------------------------------------- simple ops
+
+pub fn iota(ty: Ty, dims: &[usize], dim: usize) -> Result<Tensor> {
+    let n: usize = dims.iter().product();
+    let st = strides(dims);
+    let coord = |flat: usize| (flat / st[dim]) % dims[dim];
+    Ok(match ty {
+        Ty::S32 => Tensor::i32((0..n).map(|f| coord(f) as i32).collect(), dims.to_vec()),
+        Ty::F32 => Tensor::f32((0..n).map(|f| coord(f) as f32).collect(), dims.to_vec()),
+        Ty::Pred => bail!("iota over pred"),
+    })
+}
+
+pub fn broadcast(out_dims: &[usize], src: &Tensor, map: &[usize]) -> Result<Tensor> {
+    if map.len() != src.dims.len() {
+        bail!("broadcast dims {:?} for operand rank {}", map, src.dims.len());
+    }
+    fn bc<T: Copy>(src: &[T], src_dims: &[usize], map: &[usize], out_dims: &[usize]) -> Vec<T> {
+        let n: usize = out_dims.iter().product();
+        if src.len() == 1 {
+            return vec![src[0]; n];
+        }
+        let sst = strides(src_dims);
+        let mut out = Vec::with_capacity(n);
+        let mut idx = vec![0usize; out_dims.len()];
+        if n == 0 {
+            return out;
+        }
+        loop {
+            let mut s = 0usize;
+            for (j, &od) in map.iter().enumerate() {
+                s += idx[od] * sst[j];
+            }
+            out.push(src[s]);
+            if !next_index(&mut idx, out_dims) {
+                break;
+            }
+        }
+        out
+    }
+    let dims = out_dims.to_vec();
+    Ok(match &src.data {
+        Data::F32(v) => Tensor::f32(bc(v.as_slice(), &src.dims, map, out_dims), dims),
+        Data::I32(v) => Tensor::i32(bc(v.as_slice(), &src.dims, map, out_dims), dims),
+        Data::Pred(v) => Tensor::pred(bc(v.as_slice(), &src.dims, map, out_dims), dims),
+    })
+}
+
+pub fn transpose(src: &Tensor, perm: &[usize]) -> Result<Tensor> {
+    if perm.len() != src.dims.len() {
+        bail!("transpose perm {:?} for rank {}", perm, src.dims.len());
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| src.dims[p]).collect();
+    fn tr<T: Copy>(src: &[T], src_dims: &[usize], perm: &[usize], out_dims: &[usize]) -> Vec<T> {
+        let sst = strides(src_dims);
+        let n: usize = out_dims.iter().product();
+        let mut out = Vec::with_capacity(n);
+        let mut idx = vec![0usize; out_dims.len()];
+        if n == 0 {
+            return out;
+        }
+        loop {
+            let mut s = 0usize;
+            for (i, &p) in perm.iter().enumerate() {
+                s += idx[i] * sst[p];
+            }
+            out.push(src[s]);
+            if !next_index(&mut idx, out_dims) {
+                break;
+            }
+        }
+        out
+    }
+    let d = out_dims.clone();
+    Ok(match &src.data {
+        Data::F32(v) => Tensor::f32(tr(v.as_slice(), &src.dims, perm, &out_dims), d),
+        Data::I32(v) => Tensor::i32(tr(v.as_slice(), &src.dims, perm, &out_dims), d),
+        Data::Pred(v) => Tensor::pred(tr(v.as_slice(), &src.dims, perm, &out_dims), d),
+    })
+}
+
+pub fn concat(out_dims: &[usize], parts: &[&Tensor], dim: usize) -> Result<Tensor> {
+    let inner: usize = out_dims[dim + 1..].iter().product();
+    let outer: usize = out_dims[..dim].iter().product();
+    fn cat<'a, T: Copy>(slices: &[(&'a [T], usize)], outer: usize, inner: usize) -> Vec<T> {
+        let total: usize = slices.iter().map(|(s, _)| s.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for o in 0..outer {
+            for (s, dim_len) in slices {
+                let chunk = dim_len * inner;
+                out.extend_from_slice(&s[o * chunk..(o + 1) * chunk]);
+            }
+        }
+        out
+    }
+    let dims = out_dims.to_vec();
+    Ok(match &parts[0].data {
+        Data::F32(_) => {
+            let slices: Vec<(&[f32], usize)> =
+                parts.iter().map(|t| Ok((t.f()?, t.dims[dim]))).collect::<Result<_>>()?;
+            Tensor::f32(cat(&slices, outer, inner), dims)
+        }
+        Data::I32(_) => {
+            let slices: Vec<(&[i32], usize)> =
+                parts.iter().map(|t| Ok((t.i()?, t.dims[dim]))).collect::<Result<_>>()?;
+            Tensor::i32(cat(&slices, outer, inner), dims)
+        }
+        Data::Pred(_) => {
+            let slices: Vec<(&[bool], usize)> =
+                parts.iter().map(|t| Ok((t.p()?, t.dims[dim]))).collect::<Result<_>>()?;
+            Tensor::pred(cat(&slices, outer, inner), dims)
+        }
+    })
+}
+
+// ------------------------------------------------------------ slicing ops
+
+pub fn clamp_start(start: i64, dim: usize, size: usize) -> usize {
+    start.clamp(0, (dim - size) as i64) as usize
+}
+
+pub fn dynamic_slice(src: &Tensor, starts: &[i64], sizes: &[usize]) -> Result<Tensor> {
+    if starts.len() != src.dims.len() || sizes.len() != src.dims.len() {
+        bail!("dynamic-slice rank mismatch");
+    }
+    let s0: Vec<usize> = starts
+        .iter()
+        .zip(&src.dims)
+        .zip(sizes)
+        .map(|((&st, &d), &sz)| {
+            if sz > d {
+                bail!("slice size {sz} > dim {d}");
+            }
+            Ok(clamp_start(st, d, sz))
+        })
+        .collect::<Result<_>>()?;
+    // Fast path: full-width trailing dims make the slice contiguous.
+    let contiguous = !src.dims.is_empty() && src.dims[1..] == sizes[1..];
+    fn slice_t<T: Copy>(
+        src: &[T],
+        src_dims: &[usize],
+        start: &[usize],
+        sizes: &[usize],
+        contiguous: bool,
+    ) -> Vec<T> {
+        if contiguous {
+            let inner: usize = src_dims[1..].iter().product();
+            return src[start[0] * inner..(start[0] + sizes[0]) * inner].to_vec();
+        }
+        let sst = strides(src_dims);
+        let n: usize = sizes.iter().product();
+        let mut out = Vec::with_capacity(n);
+        let mut idx = vec![0usize; sizes.len()];
+        if n == 0 {
+            return out;
+        }
+        loop {
+            let flat: usize =
+                idx.iter().zip(start).zip(&sst).map(|((&i, &s), &st)| (i + s) * st).sum();
+            out.push(src[flat]);
+            if !next_index(&mut idx, sizes) {
+                break;
+            }
+        }
+        out
+    }
+    let dims = sizes.to_vec();
+    let c = contiguous;
+    Ok(match &src.data {
+        Data::F32(v) => Tensor::f32(slice_t(v.as_slice(), &src.dims, &s0, sizes, c), dims),
+        Data::I32(v) => Tensor::i32(slice_t(v.as_slice(), &src.dims, &s0, sizes, c), dims),
+        Data::Pred(v) => Tensor::pred(slice_t(v.as_slice(), &src.dims, &s0, sizes, c), dims),
+    })
+}
+
+pub fn dynamic_update_slice(mut base: Tensor, upd: &Tensor, starts: &[i64]) -> Result<Tensor> {
+    if starts.len() != base.dims.len() || upd.dims.len() != base.dims.len() {
+        bail!("dynamic-update-slice rank mismatch");
+    }
+    let s0: Vec<usize> = starts
+        .iter()
+        .zip(&base.dims)
+        .zip(&upd.dims)
+        .map(|((&st, &d), &u)| {
+            if u > d {
+                bail!("update dim {u} > operand dim {d}");
+            }
+            Ok(clamp_start(st, d, u))
+        })
+        .collect::<Result<_>>()?;
+    let contiguous = !base.dims.is_empty() && base.dims[1..] == upd.dims[1..];
+    fn write_t<T: Copy>(
+        dst: &mut [T],
+        dst_dims: &[usize],
+        upd: &[T],
+        upd_dims: &[usize],
+        start: &[usize],
+        contiguous: bool,
+    ) {
+        if contiguous {
+            let inner: usize = dst_dims[1..].iter().product();
+            let off = start[0] * inner;
+            dst[off..off + upd.len()].copy_from_slice(upd);
+            return;
+        }
+        let dst_st = strides(dst_dims);
+        let mut idx = vec![0usize; upd_dims.len()];
+        if upd.is_empty() {
+            return;
+        }
+        let mut u = 0usize;
+        loop {
+            let flat: usize =
+                idx.iter().zip(start).zip(&dst_st).map(|((&i, &s), &st)| (i + s) * st).sum();
+            dst[flat] = upd[u];
+            u += 1;
+            if !next_index(&mut idx, upd_dims) {
+                break;
+            }
+        }
+    }
+    let bd = base.dims.clone();
+    let ud = &upd.dims;
+    match (&mut base.data, &upd.data) {
+        (Data::F32(dst), Data::F32(u)) => {
+            write_t(Arc::make_mut(dst).as_mut_slice(), &bd, u.as_slice(), ud, &s0, contiguous)
+        }
+        (Data::I32(dst), Data::I32(u)) => {
+            write_t(Arc::make_mut(dst).as_mut_slice(), &bd, u.as_slice(), ud, &s0, contiguous)
+        }
+        (Data::Pred(dst), Data::Pred(u)) => {
+            write_t(Arc::make_mut(dst).as_mut_slice(), &bd, u.as_slice(), ud, &s0, contiguous)
+        }
+        _ => bail!("dynamic-update-slice dtype mismatch"),
+    }
+    Ok(base)
+}
+
+// ------------------------------------------------------------------- dot
+
+/// Rank-2 matmul with one contracting dim per side. Output rows split
+/// across threads above the flop threshold; per-element accumulation
+/// order is the k-loop either way, so parallel == serial bitwise.
+pub fn dot(a: &Tensor, b: &Tensor, lc: usize, rc: usize, par: Par) -> Result<Tensor> {
+    if a.dims.len() != 2 || b.dims.len() != 2 {
+        bail!("dot: only rank-2 operands supported ({:?} x {:?})", a.dims, b.dims);
+    }
+    let k = a.dims[lc];
+    if b.dims[rc] != k {
+        bail!("dot: contracting {k} vs {}", b.dims[rc]);
+    }
+    let m = a.dims[1 - lc];
+    let n = b.dims[1 - rc];
+    let af = a.f()?;
+    let bf = b.f()?;
+    let mut out = vec![0f32; m * n];
+    let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    if let Some(pool) = par.grab(flops, DOT_PAR_MIN_FLOPS) {
+        let t = par.threads.min(m).max(1);
+        if t > 1 {
+            let chunk = m.div_ceil(t);
+            let wp = SendPtr(out.as_mut_ptr());
+            pool.scope_run(t, &|ti| {
+                let lo = ti * chunk;
+                let hi = ((ti + 1) * chunk).min(m);
+                if lo >= hi {
+                    return;
+                }
+                // SAFETY: output rows [lo, hi) belong to task ti alone.
+                let dst =
+                    unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo * n), (hi - lo) * n) };
+                dot_rows(af, bf, lc, rc, (m, n, k), lo, hi, dst);
+            });
+            return Ok(Tensor::f32(out, vec![m, n]));
+        }
+    }
+    dot_rows(af, bf, lc, rc, (m, n, k), 0, m, &mut out);
+    Ok(Tensor::f32(out, vec![m, n]))
+}
+
+/// Output rows [lo, hi) of the matmul into `out` (length (hi-lo)·n).
+#[allow(clippy::too_many_arguments)]
+fn dot_rows(
+    af: &[f32],
+    bf: &[f32],
+    lc: usize,
+    rc: usize,
+    (m, n, k): (usize, usize, usize),
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    for i in lo..hi {
+        let row = &mut out[(i - lo) * n..(i - lo + 1) * n];
+        for kk in 0..k {
+            let av = if lc == 1 { af[i * k + kk] } else { af[kk * m + i] };
+            if rc == 0 {
+                let brow = &bf[kk * n..(kk + 1) * n];
+                for (o, &bv) in row.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            } else {
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o += av * bf[j * k + kk];
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- gather / scatter
+
+/// Read an s32 index from `indices` at batch coords `batch`, component
+/// `j` along `index_vector_dim` (which may equal the rank, meaning the
+/// index vectors are implicit scalars).
+pub fn read_index(indices: &Tensor, batch: &[usize], ivd: usize, j: usize) -> Result<i64> {
+    let st = strides(&indices.dims);
+    let mut flat = 0usize;
+    let mut b = 0usize;
+    for d in 0..indices.dims.len() {
+        let c = if d == ivd {
+            j
+        } else {
+            let c = batch[b];
+            b += 1;
+            c
+        };
+        flat += c * st[d];
+    }
+    Ok(indices.i()?[flat] as i64)
+}
+
+/// One scalar index per row, laid out linearly: `[rows]` or `[rows, 1]`
+/// with `index_vector_dim == 1`. This is the shape every committed
+/// embedding-table artifact uses for both gather and scatter.
+fn linear_row_indices<'t>(indices: &'t Tensor, ivd: usize, rows: usize) -> Option<&'t [i32]> {
+    let linear = (indices.dims == [rows] || indices.dims == [rows, 1]) && ivd == 1;
+    if !linear {
+        return None;
+    }
+    match &indices.data {
+        Data::I32(v) => Some(v.as_slice()),
+        _ => None,
+    }
+}
+
+pub fn gather(
+    out_dims: &[usize],
+    operand: &Tensor,
+    indices: &Tensor,
+    g: &GatherDims,
+    par: Par,
+) -> Result<Tensor> {
+    let od = &operand.dims;
+    let batch_out_dims: Vec<usize> =
+        (0..out_dims.len()).filter(|d| !g.offset_dims.contains(d)).collect();
+    let operand_offset_dims: Vec<usize> =
+        (0..od.len()).filter(|d| !g.collapsed_slice_dims.contains(d)).collect();
+    if operand_offset_dims.len() != g.offset_dims.len() {
+        bail!("gather: offset dims mismatch");
+    }
+    if g.slice_sizes.len() != od.len() {
+        bail!("gather: slice_sizes rank mismatch");
+    }
+    for (d, (&sz, &dim)) in g.slice_sizes.iter().zip(od).enumerate() {
+        if sz > dim {
+            bail!("gather: slice size {sz} > operand dim {dim} (dim {d})");
+        }
+    }
+
+    // Row-take fast path: out[r] = operand[clamp(ix[r])], full-width rows.
+    if od.len() == 2
+        && out_dims.len() == 2
+        && g.offset_dims == [1]
+        && g.collapsed_slice_dims == [0]
+        && g.start_index_map == [0]
+        && g.slice_sizes == [1, od[1]]
+        && out_dims[1] == od[1]
+    {
+        if let (Data::F32(src), Some(ix)) =
+            (&operand.data, linear_row_indices(indices, g.index_vector_dim, out_dims[0]))
+        {
+            let (v, d) = (od[0], od[1]);
+            let rows = out_dims[0];
+            let src = src.as_slice();
+            let mut out = vec![0f32; rows * d];
+            let take = |lo: usize, hi: usize, dst: &mut [f32]| {
+                for r in lo..hi {
+                    let row = clamp_start(ix[r] as i64, v, 1);
+                    dst[(r - lo) * d..(r - lo + 1) * d]
+                        .copy_from_slice(&src[row * d..(row + 1) * d]);
+                }
+            };
+            if let Some(pool) = par.grab(rows * d, GATHER_PAR_MIN_ELEMS) {
+                let t = par.threads.min(rows).max(1);
+                if t > 1 {
+                    let chunk = rows.div_ceil(t);
+                    let wp = SendPtr(out.as_mut_ptr());
+                    pool.scope_run(t, &|ti| {
+                        let lo = ti * chunk;
+                        let hi = ((ti + 1) * chunk).min(rows);
+                        if lo >= hi {
+                            return;
+                        }
+                        // SAFETY: rows [lo, hi) of out are task-exclusive.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(wp.0.add(lo * d), (hi - lo) * d)
+                        };
+                        take(lo, hi, dst);
+                    });
+                    return Ok(Tensor::f32(out, out_dims.to_vec()));
+                }
+            }
+            take(0, rows, &mut out);
+            return Ok(Tensor::f32(out, out_dims.to_vec()));
+        }
+    }
+
+    // General odometer path.
+    let ost = strides(od);
+    let n: usize = out_dims.iter().product();
+    fn run<T: Copy>(
+        src: &[T],
+        n: usize,
+        out_dims: &[usize],
+        mut at: impl FnMut(&[usize]) -> Result<usize>,
+    ) -> Result<Vec<T>> {
+        let mut out = Vec::with_capacity(n);
+        let mut idx = vec![0usize; out_dims.len()];
+        if n == 0 {
+            return Ok(out);
+        }
+        loop {
+            out.push(src[at(&idx)?]);
+            if !next_index(&mut idx, out_dims) {
+                break;
+            }
+        }
+        Ok(out)
+    }
+    let mut batch = vec![0usize; batch_out_dims.len()];
+    let mut at = |idx: &[usize]| -> Result<usize> {
+        for (b, &d) in batch_out_dims.iter().enumerate() {
+            batch[b] = idx[d];
+        }
+        let mut flat = 0usize;
+        // Clamped slice starts along the mapped operand dims.
+        for (j, &om) in g.start_index_map.iter().enumerate() {
+            let raw = read_index(indices, &batch, g.index_vector_dim, j)?;
+            flat += clamp_start(raw, od[om], g.slice_sizes[om]) * ost[om];
+        }
+        // Offsets within the slice along the non-collapsed dims.
+        for (k, &odim) in operand_offset_dims.iter().enumerate() {
+            flat += idx[g.offset_dims[k]] * ost[odim];
+        }
+        Ok(flat)
+    };
+    let dims = out_dims.to_vec();
+    Ok(match &operand.data {
+        Data::F32(v) => Tensor::f32(run(v.as_slice(), n, out_dims, &mut at)?, dims),
+        Data::I32(v) => Tensor::i32(run(v.as_slice(), n, out_dims, &mut at)?, dims),
+        Data::Pred(v) => Tensor::pred(run(v.as_slice(), n, out_dims, &mut at)?, dims),
+    })
+}
+
+// ---------------------------------------------------------------- combiner
+
+/// How a two-parameter computation combines (lhs = accumulated/original,
+/// rhs = incoming). The artifacts only ever use `add` (accumulate) and
+/// `return rhs` (overwrite); anything else falls back to full evaluation.
+pub enum Combiner {
+    Bin(BinOp),
+    First,
+    Second,
+    Generic(usize),
+}
+
+pub fn classify_combiner(m: &Module, ci: usize) -> Combiner {
+    let comp = &m.comps[ci];
+    let root = &comp.instrs[comp.root];
+    let param_no = |pos: usize| match comp.instrs[pos].op {
+        Op::Parameter(i) => Some(i),
+        _ => None,
+    };
+    match &root.op {
+        Op::Parameter(0) => Combiner::First,
+        Op::Parameter(1) => Combiner::Second,
+        Op::Binary(b)
+            if matches!(
+                b,
+                BinOp::Add | BinOp::Mul | BinOp::Max | BinOp::Min | BinOp::And | BinOp::Or
+            ) && root.operands.len() == 2
+                && param_no(root.operands[0]) == Some(0)
+                && param_no(root.operands[1]) == Some(1)
+                && comp.instrs.len() == 3 =>
+        {
+            Combiner::Bin(*b)
+        }
+        _ => Combiner::Generic(ci),
+    }
+}
+
+// ---------------------------------------------------------------- scatter
+
+pub fn scatter(
+    m: &Module,
+    mut base: Tensor,
+    indices: &Tensor,
+    updates: &Tensor,
+    s: &ScatterDims,
+    generic: GenericCombine,
+    par: Par,
+) -> Result<Tensor> {
+    let od = base.dims.clone();
+    let ud = updates.dims.clone();
+    let combiner = classify_combiner(m, s.to_apply);
+
+    // Embedding-update fast path: `w[ix[r]] += y[r]` over full-width
+    // rows with an add combiner — the grad subsystem's exact workload.
+    // In-range indices required (the general path *drops* out-of-range
+    // updates, the sharded engine asserts, so OOB streams fall through).
+    if od.len() == 2
+        && ud.len() == 2
+        && ud[1] == od[1]
+        && s.update_window_dims == [1]
+        && s.inserted_window_dims == [0]
+        && s.scatter_dims_to_operand_dims == [0]
+        && matches!(combiner, Combiner::Bin(BinOp::Add))
+    {
+        if matches!(base.data, Data::F32(_)) {
+            if let (Data::F32(y), Some(ix)) =
+                (&updates.data, linear_row_indices(indices, s.index_vector_dim, ud[0]))
+            {
+                let (v, d, rows) = (od[0], od[1], ud[0]);
+                if ix.iter().all(|&i| i >= 0 && (i as usize) < v) {
+                    let y = y.as_slice();
+                    let Data::F32(dst_arc) = &mut base.data else { unreachable!() };
+                    let dst = Arc::make_mut(dst_arc).as_mut_slice();
+                    match par.grab(rows, SCATTER_PAR_MIN_ROWS) {
+                        Some(pool) => {
+                            let plan = ShardPlan::build(ix, par.threads, 16);
+                            scatter_add_sharded(dst, d, ix, y, &plan, pool);
+                        }
+                        None => scatter_add_serial(dst, d, ix, y),
+                    }
+                    return Ok(base);
+                }
+            }
+        }
+    }
+
+    // General path (all dtypes, window shapes, combiners).
+    let batch_upd_dims: Vec<usize> =
+        (0..ud.len()).filter(|d| !s.update_window_dims.contains(d)).collect();
+    let operand_window_dims: Vec<usize> =
+        (0..od.len()).filter(|d| !s.inserted_window_dims.contains(d)).collect();
+    if operand_window_dims.len() != s.update_window_dims.len() {
+        bail!("scatter: window dims mismatch");
+    }
+    let ost = strides(&od);
+    let mut batch = vec![0usize; batch_upd_dims.len()];
+    let n: usize = ud.iter().product();
+
+    // Destination flat index for one update element, or None when the
+    // write lands out of bounds (XLA drops such updates).
+    let mut coord = vec![0i64; od.len()];
+    let mut dest = |idx: &[usize]| -> Result<Option<usize>> {
+        for (b, &d) in batch_upd_dims.iter().enumerate() {
+            batch[b] = idx[d];
+        }
+        coord.iter_mut().for_each(|c| *c = 0);
+        for (j, &sd) in s.scatter_dims_to_operand_dims.iter().enumerate() {
+            coord[sd] = read_index(indices, &batch, s.index_vector_dim, j)?;
+        }
+        for (k, &owd) in operand_window_dims.iter().enumerate() {
+            coord[owd] += idx[s.update_window_dims[k]] as i64;
+        }
+        let mut flat = 0usize;
+        for (d, &c) in coord.iter().enumerate() {
+            if c < 0 || c as usize >= od[d] {
+                return Ok(None);
+            }
+            flat += c as usize * ost[d];
+        }
+        Ok(Some(flat))
+    };
+
+    match (&mut base.data, &updates.data) {
+        (Data::F32(dst), Data::F32(upd)) => {
+            let dst = Arc::make_mut(dst);
+            let mut idx = vec![0usize; ud.len()];
+            let mut u = 0usize;
+            if n > 0 {
+                loop {
+                    if let Some(flat) = dest(&idx)? {
+                        match &combiner {
+                            Combiner::Bin(BinOp::Add) => dst[flat] += upd[u],
+                            Combiner::Bin(BinOp::Mul) => dst[flat] *= upd[u],
+                            Combiner::Bin(BinOp::Max) => dst[flat] = dst[flat].max(upd[u]),
+                            Combiner::Bin(BinOp::Min) => dst[flat] = dst[flat].min(upd[u]),
+                            Combiner::Second => dst[flat] = upd[u],
+                            Combiner::First => {}
+                            Combiner::Bin(_) => bail!("unsupported f32 scatter combiner"),
+                            Combiner::Generic(ci) => {
+                                dst[flat] = generic(*ci, dst[flat], upd[u])?
+                            }
+                        }
+                    }
+                    u += 1;
+                    if !next_index(&mut idx, &ud) {
+                        break;
+                    }
+                }
+            }
+        }
+        (Data::I32(dst), Data::I32(upd)) => {
+            let dst = Arc::make_mut(dst);
+            let mut idx = vec![0usize; ud.len()];
+            let mut u = 0usize;
+            if n > 0 {
+                loop {
+                    if let Some(flat) = dest(&idx)? {
+                        match &combiner {
+                            Combiner::Bin(BinOp::Add) => {
+                                dst[flat] = dst[flat].wrapping_add(upd[u])
+                            }
+                            Combiner::Second => dst[flat] = upd[u],
+                            Combiner::First => {}
+                            _ => bail!("unsupported s32 scatter combiner"),
+                        }
+                    }
+                    u += 1;
+                    if !next_index(&mut idx, &ud) {
+                        break;
+                    }
+                }
+            }
+        }
+        _ => bail!("scatter dtype mismatch"),
+    }
+    Ok(base)
+}
+
+// ---------------------------------------------------------------- reduce
+
+pub fn reduce(
+    m: &Module,
+    src: &Tensor,
+    init: &Tensor,
+    rdims: &[usize],
+    to_apply: usize,
+    generic: GenericCombine,
+    par: Par,
+) -> Result<Tensor> {
+    let out_dims: Vec<usize> = src
+        .dims
+        .iter()
+        .enumerate()
+        .filter(|(d, _)| !rdims.contains(d))
+        .map(|(_, &s)| s)
+        .collect();
+    let combiner = classify_combiner(m, to_apply);
+
+    // Trailing-dims fast path: the reduced dims are exactly the last
+    // `rdims.len()` dims, so each output element folds one contiguous
+    // input run — same fold order as the odometer walk, parallelizable
+    // over output elements without reassociation.
+    let split = src.dims.len().saturating_sub(rdims.len());
+    let trailing = rdims.len() <= src.dims.len() && {
+        let mut sorted = rdims.to_vec();
+        sorted.sort_unstable();
+        sorted.iter().copied().eq(split..src.dims.len())
+    };
+    if trailing {
+        let outer: usize = src.dims[..split].iter().product();
+        let inner: usize = src.dims[split..].iter().product();
+        match (&src.data, &init.data) {
+            (Data::F32(v), Data::F32(i0)) => {
+                let f: Option<fn(f32, f32) -> f32> = match &combiner {
+                    Combiner::Bin(BinOp::Add) => Some(|a, b| a + b),
+                    Combiner::Bin(BinOp::Mul) => Some(|a, b| a * b),
+                    Combiner::Bin(BinOp::Max) => Some(f32::max),
+                    Combiner::Bin(BinOp::Min) => Some(f32::min),
+                    _ => None,
+                };
+                if let Some(f) = f {
+                    let data = fold_trailing(v.as_slice(), outer, inner, i0[0], f, par);
+                    return Ok(Tensor::f32(data, out_dims));
+                }
+            }
+            (Data::I32(v), Data::I32(i0)) => {
+                let f: Option<fn(i32, i32) -> i32> = match &combiner {
+                    Combiner::Bin(BinOp::Add) => Some(i32::wrapping_add),
+                    Combiner::Bin(BinOp::Max) => Some(i32::max),
+                    Combiner::Bin(BinOp::Min) => Some(i32::min),
+                    _ => None,
+                };
+                if let Some(f) = f {
+                    let data = fold_trailing(v.as_slice(), outer, inner, i0[0], f, par);
+                    return Ok(Tensor::i32(data, out_dims));
+                }
+            }
+            (Data::Pred(v), Data::Pred(i0)) => {
+                let f: Option<fn(bool, bool) -> bool> = match &combiner {
+                    Combiner::Bin(BinOp::And) => Some(|a, b| a && b),
+                    Combiner::Bin(BinOp::Or) => Some(|a, b| a || b),
+                    _ => None,
+                };
+                if let Some(f) = f {
+                    let data = fold_trailing(v.as_slice(), outer, inner, i0[0], f, par);
+                    return Ok(Tensor::pred(data, out_dims));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // General odometer path (arbitrary reduce dims / generic combiners).
+    let out_st = strides(&out_dims);
+    // Per-source-dim stride into the output (0 for reduced dims).
+    let mut map = vec![0usize; src.dims.len()];
+    let mut o = 0usize;
+    for d in 0..src.dims.len() {
+        if !rdims.contains(&d) {
+            map[d] = out_st[o];
+            o += 1;
+        }
+    }
+    let n_out: usize = out_dims.iter().product();
+
+    fn run<T: Copy>(
+        src: &[T],
+        src_dims: &[usize],
+        map: &[usize],
+        init: T,
+        n_out: usize,
+        mut f: impl FnMut(T, T) -> Result<T>,
+    ) -> Result<Vec<T>> {
+        let mut out = vec![init; n_out];
+        let mut idx = vec![0usize; src_dims.len()];
+        if src.is_empty() {
+            return Ok(out);
+        }
+        let mut s = 0usize;
+        loop {
+            let dst: usize = idx.iter().zip(map).map(|(&i, &m)| i * m).sum();
+            out[dst] = f(out[dst], src[s])?;
+            s += 1;
+            if !next_index(&mut idx, src_dims) {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    Ok(match (&src.data, &init.data) {
+        (Data::F32(v), Data::F32(i0)) => {
+            let data = match &combiner {
+                Combiner::Bin(BinOp::Add) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a + b))?
+                }
+                Combiner::Bin(BinOp::Mul) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a * b))?
+                }
+                Combiner::Bin(BinOp::Max) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a.max(b)))?
+                }
+                Combiner::Bin(BinOp::Min) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a.min(b)))?
+                }
+                Combiner::Generic(ci) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| generic(*ci, a, b))?
+                }
+                _ => bail!("unsupported f32 reduce combiner"),
+            };
+            Tensor::f32(data, out_dims)
+        }
+        (Data::I32(v), Data::I32(i0)) => {
+            let data = match &combiner {
+                Combiner::Bin(BinOp::Add) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| {
+                        Ok(a.wrapping_add(b))
+                    })?
+                }
+                Combiner::Bin(BinOp::Max) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a.max(b)))?
+                }
+                Combiner::Bin(BinOp::Min) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a.min(b)))?
+                }
+                _ => bail!("unsupported s32 reduce combiner"),
+            };
+            Tensor::i32(data, out_dims)
+        }
+        (Data::Pred(v), Data::Pred(i0)) => {
+            let data = match &combiner {
+                Combiner::Bin(BinOp::And) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a && b))?
+                }
+                Combiner::Bin(BinOp::Or) => {
+                    run(v.as_slice(), &src.dims, &map, i0[0], n_out, |a, b| Ok(a || b))?
+                }
+                _ => bail!("unsupported pred reduce combiner"),
+            };
+            Tensor::pred(data, out_dims)
+        }
+        _ => bail!("reduce init dtype mismatch"),
+    })
+}
+
+/// Fold contiguous runs of `inner` elements into `outer` outputs, output
+/// ranges split across threads above the threshold.
+fn fold_trailing<T: Copy + Send + Sync>(
+    src: &[T],
+    outer: usize,
+    inner: usize,
+    init: T,
+    f: fn(T, T) -> T,
+    par: Par,
+) -> Vec<T> {
+    let mut out = vec![init; outer];
+    let fold = |lo: usize, hi: usize, dst: &mut [T]| {
+        for o in lo..hi {
+            let mut acc = init;
+            for &x in &src[o * inner..(o + 1) * inner] {
+                acc = f(acc, x);
+            }
+            dst[o - lo] = acc;
+        }
+    };
+    if let Some(pool) = par.grab(src.len(), REDUCE_PAR_MIN_ELEMS) {
+        let t = par.threads.min(outer).max(1);
+        if t > 1 {
+            let chunk = outer.div_ceil(t);
+            let wp = SendPtr(out.as_mut_ptr());
+            pool.scope_run(t, &|ti| {
+                let lo = ti * chunk;
+                let hi = ((ti + 1) * chunk).min(outer);
+                if lo >= hi {
+                    return;
+                }
+                // SAFETY: out[lo..hi] is task-exclusive.
+                let dst = unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo) };
+                fold(lo, hi, dst);
+            });
+            return out;
+        }
+    }
+    fold(0, outer, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn par_over(pool: &ThreadPool) -> Par<'_> {
+        Par { threads: pool.threads(), pool: Some(pool) }
+    }
+
+    #[test]
+    fn parallel_dot_bitwise_equals_serial() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (64usize, 48usize, 40usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let ta = Tensor::f32(a, vec![m, k]);
+        let tb = Tensor::f32(b, vec![k, n]);
+        let serial = dot(&ta, &tb, 1, 0, Par::serial()).unwrap();
+        let pool = ThreadPool::new(4);
+        // Force the threshold by ensuring the work is above it.
+        assert!(2 * m * n * k < DOT_PAR_MIN_FLOPS, "keep this case under the gate");
+        let gated = dot(&ta, &tb, 1, 0, par_over(&pool)).unwrap();
+        assert_eq!(serial.f().unwrap(), gated.f().unwrap());
+        // And a case over the gate, all contracting variants.
+        let (m2, k2, n2) = (128usize, 96usize, 64usize);
+        let a2: Vec<f32> = (0..m2 * k2).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b2: Vec<f32> = (0..k2 * n2).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        assert!(2 * m2 * n2 * k2 >= DOT_PAR_MIN_FLOPS);
+        for (lc, rc, ad, bd) in [
+            (1usize, 0usize, vec![m2, k2], vec![k2, n2]),
+            (0, 0, vec![k2, m2], vec![k2, n2]),
+            (1, 1, vec![m2, k2], vec![n2, k2]),
+            (0, 1, vec![k2, m2], vec![n2, k2]),
+        ] {
+            let ta = Tensor::f32(a2.clone(), ad);
+            let tb = Tensor::f32(b2.clone(), bd);
+            let s = dot(&ta, &tb, lc, rc, Par::serial()).unwrap();
+            let p = dot(&ta, &tb, lc, rc, par_over(&pool)).unwrap();
+            assert_eq!(s.f().unwrap(), p.f().unwrap(), "lc={lc} rc={rc}");
+        }
+    }
+
+    #[test]
+    fn trailing_reduce_matches_odometer_and_parallel() {
+        let mut rng = Rng::new(3);
+        let (rows, cols) = (512usize, 160usize);
+        let v: Vec<f32> = (0..rows * cols).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let outer_fold = fold_trailing(&v, rows, cols, 0.0f32, |a, b| a + b, Par::serial());
+        let pool = ThreadPool::new(8);
+        let par_fold = fold_trailing(&v, rows, cols, 0.0f32, |a, b| a + b, par_over(&pool));
+        assert_eq!(outer_fold, par_fold, "parallel trailing reduce must be bitwise");
+        // Reference: sequential accumulate per row.
+        for (o, want) in outer_fold.iter().zip(v.chunks(cols).map(|c| {
+            let mut acc = 0.0f32;
+            for &x in c {
+                acc += x;
+            }
+            acc
+        })) {
+            assert_eq!(*o, want);
+        }
+    }
+
+    #[test]
+    fn row_gather_fast_path_matches_general() {
+        let mut rng = Rng::new(7);
+        let (v, d, rows) = (300usize, 24usize, 2048usize);
+        let w: Vec<f32> = (0..v * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let operand = Tensor::f32(w, vec![v, d]);
+        let ix: Vec<i32> = (0..rows).map(|_| rng.below(v as u64 + 40) as i32 - 20).collect();
+        let g = GatherDims {
+            offset_dims: vec![1],
+            collapsed_slice_dims: vec![0],
+            start_index_map: vec![0],
+            index_vector_dim: 1,
+            slice_sizes: vec![1, d],
+        };
+        let out_dims = [rows, d];
+        // [rows, 1] indices take the fast path; compare its parallel and
+        // serial variants, then both against a hand-rolled reference
+        // (clamped row copies, including the negative/overflow ids).
+        let indices = Tensor::i32(ix.clone(), vec![rows, 1]);
+        let pool = ThreadPool::new(4);
+        let fast = gather(&out_dims, &operand, &indices, &g, par_over(&pool)).unwrap();
+        let serial = gather(&out_dims, &operand, &indices, &g, Par::serial()).unwrap();
+        assert_eq!(fast.f().unwrap(), serial.f().unwrap());
+        let w = operand.f().unwrap();
+        for (r, &i) in ix.iter().enumerate() {
+            let row = (i as i64).clamp(0, v as i64 - 1) as usize;
+            assert_eq!(
+                &fast.f().unwrap()[r * d..(r + 1) * d],
+                &w[row * d..(row + 1) * d],
+                "row {r}"
+            );
+        }
+    }
+}

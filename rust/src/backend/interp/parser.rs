@@ -131,6 +131,15 @@ pub struct Computation {
     /// uses this to pass values by move into their final consumer, which
     /// is what lets `dynamic-update-slice` mutate in place.
     pub last_use: Vec<usize>,
+    /// For each instruction, how many operand references consume it (the
+    /// root counts one extra use for the computation's return). The plan
+    /// compiler fuses an instruction into its consumer only when this is
+    /// exactly 1.
+    pub uses: Vec<u32>,
+    /// For each instruction, the position of one consumer (the last one;
+    /// meaningful for fusion only when `uses == 1`). `usize::MAX` when
+    /// unused.
+    pub consumer: Vec<usize>,
 }
 
 #[derive(Clone, Debug)]
@@ -236,13 +245,18 @@ fn parse_computation(
     let root = root.context("computation has no ROOT")?;
 
     let mut last_use: Vec<usize> = (0..instrs.len()).collect();
+    let mut uses = vec![0u32; instrs.len()];
+    let mut consumer = vec![usize::MAX; instrs.len()];
     for (p, instr) in instrs.iter().enumerate() {
         for &o in &instr.operands {
             last_use[o] = p;
+            uses[o] += 1;
+            consumer[o] = p;
         }
     }
     last_use[root] = usize::MAX;
-    Ok(Computation { name: name.to_string(), instrs, root, n_params, last_use })
+    uses[root] += 1; // the computation's return consumes the root
+    Ok(Computation { name: name.to_string(), instrs, root, n_params, last_use, uses, consumer })
 }
 
 fn parse_instruction(
@@ -578,6 +592,12 @@ ENTRY main.9 {
         // Arg_0.5's last (and only) use is add.8 at position 3.
         assert_eq!(entry.last_use[0], 3);
         assert_eq!(entry.last_use[entry.root], usize::MAX);
+        // Use counts: every value here is consumed exactly once, and the
+        // root's return reference is counted.
+        assert_eq!(entry.uses, vec![1, 1, 1, 1, 1]);
+        assert_eq!(entry.consumer[0], 3);
+        assert_eq!(entry.consumer[3], 4);
+        assert_eq!(entry.consumer[entry.root], usize::MAX);
     }
 
     #[test]

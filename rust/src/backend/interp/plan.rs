@@ -1,0 +1,519 @@
+//! Compile-time lowering for the HLO interpreter: parsed [`Module`] →
+//! executable [`Plan`].
+//!
+//! The tree-walking evaluator decides everything per instruction, per
+//! run: which operands can move, whether a chain could have fused,
+//! whether an op is worth threading. This pass runs **once at
+//! `Backend::compile` time** and bakes those decisions into a flat,
+//! scheduled step list per computation:
+//!
+//! * **Fusion** — every maximal single-consumer chain of elementwise /
+//!   compare / select / convert ops (plus `broadcast`-of-scalar leaves)
+//!   becomes one [`FusedKernel`] step ([`super::fusion`]): interior
+//!   values never get a slot, never materialize.
+//! * **Exact liveness** — non-fused values live in a slot arena
+//!   (`n_slots` ≤ instruction count); each step's operand list carries a
+//!   precomputed *move* flag set at the slot's last read. A moved value
+//!   reaches mutating ops (`dynamic-update-slice`, `scatter`) uniquely
+//!   owned, so `Arc::make_mut` updates in place — the same O(rows·dim)
+//!   guarantee the old `last_use` heuristic gave, now decided at compile
+//!   time and shared with the fused schedule.
+//! * **Threaded kernels** — `Single` steps dispatch into
+//!   [`super::kernels`] with the executable's thread budget; the
+//!   reference evaluator calls the same kernels serially.
+//!
+//! [`Exec`] is the matching executor; with [`StepStats`] attached it
+//! records per-plan-op wall time (fused chains measured as one kernel),
+//! which is what `profile_hotspots` reports instead of raw HLO counts.
+
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::eval;
+use super::fusion::{self, FusedKernel};
+use super::kernels::Par;
+use super::parser::{Computation, Module, Op, Shape};
+use super::value::{Tensor, Value};
+
+/// What a scheduled step executes.
+pub enum Kind {
+    /// The single instruction at `Step::instr`.
+    Single,
+    /// A fused elementwise chain rooted at `Step::instr`.
+    Fused(FusedKernel),
+}
+
+/// One scheduled step of a compiled computation.
+pub struct Step {
+    /// Position of the defining instruction in the computation.
+    pub instr: usize,
+    pub kind: Kind,
+    /// Destination slot.
+    pub out: usize,
+    /// Operand slots; `true` means this step is the slot's last reader
+    /// and takes the value by move (unique ownership for in-place ops).
+    pub args: Vec<(usize, bool)>,
+    pub label: OpLabel,
+}
+
+/// A compiled computation: flat schedule over a slot arena.
+pub struct CompPlan {
+    pub n_params: usize,
+    pub n_slots: usize,
+    /// Slot holding the computation's root value.
+    pub root: usize,
+    pub steps: Vec<Step>,
+}
+
+/// A compiled module.
+pub struct Plan {
+    pub comps: Vec<CompPlan>,
+    pub entry: usize,
+}
+
+/// Coarse op classes for per-plan-op accounting (what the profiler
+/// reports for interpreter runs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpLabel {
+    Fused,
+    Elemwise,
+    Dot,
+    Reduce,
+    Gather,
+    Scatter,
+    DynSlice,
+    UpdateSlice,
+    Alloc,
+    Shape,
+    Control,
+}
+
+pub const N_LABELS: usize = 11;
+
+impl OpLabel {
+    pub fn all() -> [OpLabel; N_LABELS] {
+        [
+            OpLabel::Fused,
+            OpLabel::Elemwise,
+            OpLabel::Dot,
+            OpLabel::Reduce,
+            OpLabel::Gather,
+            OpLabel::Scatter,
+            OpLabel::DynSlice,
+            OpLabel::UpdateSlice,
+            OpLabel::Alloc,
+            OpLabel::Shape,
+            OpLabel::Control,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpLabel::Fused => "fused",
+            OpLabel::Elemwise => "elemwise",
+            OpLabel::Dot => "dot",
+            OpLabel::Reduce => "reduce",
+            OpLabel::Gather => "gather",
+            OpLabel::Scatter => "scatter",
+            OpLabel::DynSlice => "dynamic-slice",
+            OpLabel::UpdateSlice => "dynamic-update-slice",
+            OpLabel::Alloc => "alloc",
+            OpLabel::Shape => "shape",
+            OpLabel::Control => "control",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+fn label_of(op: &Op) -> OpLabel {
+    match op {
+        Op::Binary(_) | Op::Unary(_) | Op::Compare { .. } | Op::Select | Op::Convert => {
+            OpLabel::Elemwise
+        }
+        Op::Dot { .. } => OpLabel::Dot,
+        Op::Reduce { .. } => OpLabel::Reduce,
+        Op::Gather(_) => OpLabel::Gather,
+        Op::Scatter(_) => OpLabel::Scatter,
+        Op::DynamicSlice { .. } => OpLabel::DynSlice,
+        Op::DynamicUpdateSlice => OpLabel::UpdateSlice,
+        Op::Constant(_) | Op::Broadcast { .. } | Op::Iota { .. } => OpLabel::Alloc,
+        Op::Reshape | Op::Transpose { .. } | Op::Concat { .. } => OpLabel::Shape,
+        Op::Parameter(_)
+        | Op::Call { .. }
+        | Op::While { .. }
+        | Op::Tuple
+        | Op::GetTupleElement { .. } => OpLabel::Control,
+    }
+}
+
+// ----------------------------------------------------------------- compile
+
+/// Lower a parsed module. `fuse: false` keeps one step per instruction
+/// (the planned-but-unfused configuration the equivalence tests and E12
+/// compare against).
+pub fn compile(m: &Module, fuse: bool) -> Result<Plan> {
+    let comps = m
+        .comps
+        .iter()
+        .map(|c| compile_comp(c, fuse).with_context(|| format!("planning {:?}", c.name)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Plan { comps, entry: m.entry })
+}
+
+fn compile_comp(comp: &Computation, fuse: bool) -> Result<CompPlan> {
+    let n = comp.instrs.len();
+
+    // 1. Decide the inline set: a value folds into its consumer when it
+    //    is elementwise-fusable (or a scalar broadcast), has exactly one
+    //    consumer, that consumer is itself fusable, and both share an
+    //    index space. Multi-use values, reshapes, dots, reductions — any
+    //    non-elementwise consumer — are chain boundaries.
+    let mut inlined = vec![false; n];
+    if fuse {
+        let fusable: Vec<bool> = (0..n).map(|i| fusion::fusable_node(comp, i)).collect();
+        for i in 0..n {
+            if comp.uses[i] != 1 || i == comp.root {
+                continue;
+            }
+            let c = comp.consumer[i];
+            if c == usize::MAX || !fusable[c] {
+                continue;
+            }
+            let (Shape::Arr(_, di), Shape::Arr(_, dc)) =
+                (&comp.instrs[i].shape, &comp.instrs[c].shape)
+            else {
+                continue;
+            };
+            if di != dc {
+                continue;
+            }
+            if fusable[i] || fusion::splat_node(comp, i) {
+                inlined[i] = true;
+            }
+        }
+    }
+
+    // 2. Slot arena: one slot per materialized (non-inlined) value.
+    let mut slot_of = vec![usize::MAX; n];
+    let mut n_slots = 0usize;
+    for i in 0..n {
+        if !inlined[i] {
+            slot_of[i] = n_slots;
+            n_slots += 1;
+        }
+    }
+
+    // 3. Emit the schedule.
+    let mut steps: Vec<Step> = Vec::with_capacity(n_slots);
+    for i in 0..n {
+        if inlined[i] {
+            continue;
+        }
+        let ins = &comp.instrs[i];
+        let fused_root = ins.operands.iter().any(|&o| inlined[o]);
+        let (kind, ext, label) = if fused_root {
+            let (kernel, ext) = fusion::compile(comp, i, &inlined)
+                .with_context(|| format!("fusing chain rooted at {}", ins.name))?;
+            (Kind::Fused(kernel), ext, OpLabel::Fused)
+        } else {
+            (Kind::Single, ins.operands.clone(), label_of(&ins.op))
+        };
+        let args: Vec<(usize, bool)> = ext.iter().map(|&o| (slot_of[o], false)).collect();
+        steps.push(Step { instr: i, kind, out: slot_of[i], args, label });
+    }
+
+    // 4. Exact liveness over the schedule: flag each slot's last read as
+    //    a move (unless the same step reads it again later, or it is the
+    //    root, which outlives every step).
+    let root = slot_of[comp.root];
+    let mut last_read = vec![usize::MAX; n_slots];
+    for (s, step) in steps.iter().enumerate() {
+        for &(a, _) in &step.args {
+            last_read[a] = s;
+        }
+    }
+    for (s, step) in steps.iter_mut().enumerate() {
+        for j in 0..step.args.len() {
+            let a = step.args[j].0;
+            let read_again_here = step.args[j + 1..].iter().any(|&(b, _)| b == a);
+            step.args[j].1 = last_read[a] == s && a != root && !read_again_here;
+        }
+    }
+
+    Ok(CompPlan { n_params: comp.n_params, n_slots, root, steps })
+}
+
+// ------------------------------------------------------------------- stats
+
+/// Per-plan-op wall-time accounting (calls + total per [`OpLabel`]).
+/// Control steps (parameter/tuple/call/while) are not timed — their cost
+/// is the inner steps, which are.
+#[derive(Default)]
+pub struct StepStats {
+    calls: [Cell<u64>; N_LABELS],
+    total: [Cell<Duration>; N_LABELS],
+}
+
+impl StepStats {
+    /// `(label, calls, total)` rows for labels that ran, ordered by
+    /// total time descending.
+    pub fn rows(&self) -> Vec<(&'static str, u64, Duration)> {
+        let mut rows: Vec<(&'static str, u64, Duration)> = OpLabel::all()
+            .into_iter()
+            .filter(|l| self.calls[l.index()].get() > 0)
+            .map(|l| (l.name(), self.calls[l.index()].get(), self.total[l.index()].get()))
+            .collect();
+        rows.sort_by(|a, b| b.2.cmp(&a.2));
+        rows
+    }
+}
+
+// ---------------------------------------------------------------- execute
+
+/// Executor for a compiled plan. Borrowed per `run` call; `par` carries
+/// the executable's thread budget into the kernels.
+pub struct Exec<'a> {
+    pub m: &'a Module,
+    pub plan: &'a Plan,
+    pub par: Par<'a>,
+    pub stats: Option<&'a StepStats>,
+}
+
+impl Exec<'_> {
+    pub fn eval_entry(&self, args: Vec<Value>) -> Result<Value> {
+        self.eval_comp(self.plan.entry, args)
+    }
+
+    pub fn eval_comp(&self, ci: usize, args: Vec<Value>) -> Result<Value> {
+        let cp = &self.plan.comps[ci];
+        let comp = &self.m.comps[ci];
+        if args.len() != cp.n_params {
+            bail!(
+                "computation {:?}: {} arguments for {} parameters",
+                comp.name,
+                args.len(),
+                cp.n_params
+            );
+        }
+        let mut args: Vec<Option<Value>> = args.into_iter().map(Some).collect();
+        let mut slots: Vec<Option<Value>> = Vec::new();
+        slots.resize_with(cp.n_slots, || None);
+        for step in &cp.steps {
+            let mut vals = Vec::with_capacity(step.args.len());
+            for &(s, mv) in &step.args {
+                let v = if mv { slots[s].take() } else { slots[s].clone() };
+                vals.push(v.with_context(|| {
+                    format!("operand slot {s} of {} not live", comp.instrs[step.instr].name)
+                })?);
+            }
+            let timed = self.stats.filter(|_| step.label != OpLabel::Control);
+            let t0 = timed.map(|_| Instant::now());
+            let v = self
+                .exec_step(ci, step, vals, &mut args)
+                .with_context(|| format!("{} (in {})", comp.instrs[step.instr].name, comp.name))?;
+            if let (Some(st), Some(t0)) = (timed, t0) {
+                let k = step.label.index();
+                st.calls[k].set(st.calls[k].get() + 1);
+                st.total[k].set(st.total[k].get() + t0.elapsed());
+            }
+            slots[step.out] = Some(v);
+        }
+        slots[cp.root].take().context("root value missing")
+    }
+
+    fn exec_step(
+        &self,
+        ci: usize,
+        step: &Step,
+        vals: Vec<Value>,
+        args: &mut [Option<Value>],
+    ) -> Result<Value> {
+        let ins = &self.m.comps[ci].instrs[step.instr];
+        match &step.kind {
+            Kind::Fused(kernel) => {
+                let (_, out_dims) = ins.shape.arr()?;
+                let inputs: Vec<&Tensor> = vals.iter().map(|v| v.arr()).collect::<Result<_>>()?;
+                Ok(Value::Arr(fusion::run_fused(kernel, &inputs, out_dims)?))
+            }
+            Kind::Single => {
+                // Per-op dispatch is shared with the tree-walker
+                // (`eval::exec_instr`); this executor contributes the
+                // thread budget and the plan-driven recursion. Combiner
+                // computations run *untimed* so their per-element cost is
+                // not double-counted under the already-timed
+                // reduce/scatter step.
+                let recurse = |sci: usize, a: Vec<Value>| self.eval_comp(sci, a);
+                let untimed = Exec { m: self.m, plan: self.plan, par: self.par, stats: None };
+                let combine = move |sci: usize, a: Vec<Value>| untimed.eval_comp(sci, a);
+                eval::exec_instr(self.m, ins, vals, args, self.par, &recurse, &combine)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::interp::parser::parse_module;
+
+    fn entry_plan(text: &str, fuse: bool) -> (Module, Plan) {
+        let m = parse_module(text).unwrap();
+        let p = compile(&m, fuse).unwrap();
+        (m, p)
+    }
+
+    fn fused_steps(p: &Plan) -> Vec<&FusedKernel> {
+        p.comps[p.entry]
+            .steps
+            .iter()
+            .filter_map(|s| match &s.kind {
+                Kind::Fused(k) => Some(k),
+                Kind::Single => None,
+            })
+            .collect()
+    }
+
+    const CHAIN: &str = "HloModule m
+ENTRY e.6 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  Arg_1.2 = f32[4]{0} parameter(1)
+  add.3 = f32[4]{0} add(Arg_0.1, Arg_1.2)
+  negate.4 = f32[4]{0} negate(add.3)
+  ROOT multiply.5 = f32[4]{0} multiply(negate.4, Arg_0.1)
+}
+";
+
+    #[test]
+    fn chain_fuses_into_one_kernel() {
+        let (_, p) = entry_plan(CHAIN, true);
+        let fused = fused_steps(&p);
+        assert_eq!(fused.len(), 1, "add->negate->multiply must fuse");
+        assert_eq!(fused[0].ops, vec!["add", "negate", "multiply"]);
+        // 2 params + 1 fused step; interior values got no slots.
+        assert_eq!(p.comps[p.entry].steps.len(), 3);
+        assert_eq!(p.comps[p.entry].n_slots, 3);
+    }
+
+    #[test]
+    fn fusion_off_keeps_one_step_per_instruction() {
+        let (m, p) = entry_plan(CHAIN, false);
+        assert!(fused_steps(&p).is_empty());
+        assert_eq!(p.comps[p.entry].steps.len(), m.comps[m.entry].instrs.len());
+    }
+
+    #[test]
+    fn reshape_is_a_chain_boundary() {
+        let text = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  negate.2 = f32[4]{0} negate(Arg_0.1)
+  reshape.3 = f32[2,2]{1,0} reshape(negate.2)
+  ROOT exponential.4 = f32[2,2]{1,0} exponential(reshape.3)
+}
+";
+        let (_, p) = entry_plan(text, true);
+        // negate's consumer is reshape (not fusable), reshape's consumer
+        // is elementwise but reshape itself cannot be a chain member:
+        // nothing fuses.
+        assert!(fused_steps(&p).is_empty());
+    }
+
+    #[test]
+    fn multi_use_is_a_chain_boundary() {
+        let text = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  negate.2 = f32[4]{0} negate(Arg_0.1)
+  add.3 = f32[4]{0} add(negate.2, negate.2)
+  ROOT multiply.4 = f32[4]{0} multiply(add.3, negate.2)
+}
+";
+        let (_, p) = entry_plan(text, true);
+        // negate.2 has three uses -> materialized; add.3 has one use and
+        // an elementwise consumer -> fused into multiply.
+        let fused = fused_steps(&p);
+        assert_eq!(fused.len(), 1);
+        assert_eq!(fused[0].ops, vec!["add", "multiply"]);
+    }
+
+    #[test]
+    fn dot_is_a_chain_boundary_and_scalar_broadcast_fuses() {
+        let text = "HloModule m
+ENTRY e.8 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  negate.2 = f32[2,2]{1,0} negate(Arg_0.1)
+  dot.3 = f32[2,2]{1,0} dot(negate.2, Arg_0.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.4 = f32[] constant(2.5)
+  broadcast.5 = f32[2,2]{1,0} broadcast(constant.4), dimensions={}
+  ROOT add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)
+}
+";
+        let (m, p) = entry_plan(text, true);
+        // negate.2 feeds dot -> boundary. broadcast.5 is a scalar splat
+        // feeding add -> fuses; the scalar constant stays materialized.
+        let fused = fused_steps(&p);
+        assert_eq!(fused.len(), 1);
+        assert_eq!(fused[0].ops, vec!["broadcast", "add"]);
+        // dot executes as a Single step.
+        let cp = &p.comps[p.entry];
+        let dot_steps = cp
+            .steps
+            .iter()
+            .filter(|s| matches!(m.comps[m.entry].instrs[s.instr].op, Op::Dot { .. }))
+            .count();
+        assert_eq!(dot_steps, 1);
+    }
+
+    #[test]
+    fn broadcast_of_vector_does_not_fuse() {
+        let text = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[3]{0} parameter(0)
+  broadcast.2 = f32[2,3]{1,0} broadcast(Arg_0.1), dimensions={1}
+  Arg_1.3 = f32[2,3]{1,0} parameter(1)
+  ROOT add.4 = f32[2,3]{1,0} add(broadcast.2, Arg_1.3)
+}
+";
+        let (_, p) = entry_plan(text, true);
+        assert!(fused_steps(&p).is_empty(), "non-scalar broadcast must not splat");
+    }
+
+    #[test]
+    fn moves_planned_at_last_read_and_root_pinned() {
+        let (_, p) = entry_plan(CHAIN, false);
+        let cp = &p.comps[p.entry];
+        // multiply.5 (root) reads negate.4 (last use -> move) and
+        // Arg_0.1 (last use -> move).
+        let mul = cp.steps.last().unwrap();
+        assert!(mul.args.iter().all(|&(_, mv)| mv));
+        // add.3 reads Arg_0.1 which multiply reads later -> not movable.
+        let add = &cp.steps[2];
+        assert_eq!(add.args[0], (0, false));
+        assert_eq!(add.args[1], (1, true));
+        // No step may move the root slot.
+        for s in &cp.steps {
+            for &(a, mv) in &s.args {
+                assert!(!(mv && a == cp.root), "root slot moved");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_operands_move_only_once() {
+        let text = "HloModule m
+ENTRY e.3 {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  ROOT add.2 = f32[2]{0} add(Arg_0.1, Arg_0.1)
+}
+";
+        let (_, p) = entry_plan(text, true);
+        let add = p.comps[p.entry].steps.last().unwrap();
+        assert_eq!(add.args[0].1, false, "first read of a duplicated slot must clone");
+        assert_eq!(add.args[1].1, true, "second read is the true last use");
+    }
+}

@@ -2,14 +2,17 @@
 //!
 //! Tensors are logical row-major (HLO layout annotations only describe
 //! physical placement, which a host interpreter is free to ignore).
-//! Element storage is `Rc`-shared so SSA value propagation, tuple
+//! Element storage is `Arc`-shared so SSA value propagation, tuple
 //! packing/unpacking and `reshape` are O(1); mutating ops
-//! (`dynamic-update-slice`, `scatter`) go through `Rc::make_mut`, which
-//! writes in place whenever the evaluator has arranged sole ownership —
-//! the difference between O(rows·dim) and O(rows·vocab·dim) per training
-//! step for the per-row embedding-update loops.
+//! (`dynamic-update-slice`, `scatter`) go through `Arc::make_mut`, which
+//! writes in place whenever the execution plan has arranged sole
+//! ownership — the difference between O(rows·dim) and O(rows·vocab·dim)
+//! per training step for the per-row embedding-update loops. `Arc`
+//! (rather than `Rc`) makes the storage `Send`, which is what lets the
+//! threaded kernels in [`super::kernels`] hand slices of a buffer to the
+//! shared thread pool.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 use xla::Literal;
@@ -35,9 +38,9 @@ impl Ty {
 /// Shared element storage.
 #[derive(Clone, Debug)]
 pub enum Data {
-    F32(Rc<Vec<f32>>),
-    I32(Rc<Vec<i32>>),
-    Pred(Rc<Vec<bool>>),
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
+    Pred(Arc<Vec<bool>>),
 }
 
 impl Data {
@@ -67,15 +70,15 @@ pub struct Tensor {
 
 impl Tensor {
     pub fn f32(data: Vec<f32>, dims: Vec<usize>) -> Tensor {
-        Tensor { dims, data: Data::F32(Rc::new(data)) }
+        Tensor { dims, data: Data::F32(Arc::new(data)) }
     }
 
     pub fn i32(data: Vec<i32>, dims: Vec<usize>) -> Tensor {
-        Tensor { dims, data: Data::I32(Rc::new(data)) }
+        Tensor { dims, data: Data::I32(Arc::new(data)) }
     }
 
     pub fn pred(data: Vec<bool>, dims: Vec<usize>) -> Tensor {
-        Tensor { dims, data: Data::Pred(Rc::new(data)) }
+        Tensor { dims, data: Data::Pred(Arc::new(data)) }
     }
 
     pub fn elements(&self) -> usize {

@@ -39,6 +39,18 @@ pub trait Compiled {
 
     /// Upload a literal into a backend-native buffer.
     fn upload(&self, lit: &Literal) -> Result<Buffer>;
+
+    /// Toggle per-op wall-time accounting, for backends that can
+    /// attribute execution below the dispatch level (the interpreter's
+    /// compiled plan). Default: unsupported, no-op.
+    fn set_op_profiling(&self, _on: bool) {}
+
+    /// Per-op `(label, calls, total)` rows accumulated while op
+    /// profiling was on. Backends without sub-dispatch visibility (PJRT)
+    /// return an empty vec.
+    fn op_stats(&self) -> Vec<(String, u64, std::time::Duration)> {
+        Vec::new()
+    }
 }
 
 /// An execution backend: compiles artifacts into [`Compiled`] handles.

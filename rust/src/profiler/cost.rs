@@ -80,6 +80,24 @@ pub fn classify(inst: &Instruction) -> OpClass {
     }
 }
 
+/// Map an interpreter plan-op label (`Runtime::plan_op_stats`) to its
+/// Theano class. Unlike [`classify`], these rows are *measured* — the
+/// compiled-plan executor timed each kernel, fused elementwise chains
+/// included — so the profiler can report them like the per-row dispatch
+/// loop instead of modeling them from HLO counts.
+pub fn classify_plan_op(label: &str) -> OpClass {
+    match label {
+        "scatter" | "dynamic-update-slice" => OpClass::AdvancedIncSubtensor,
+        "gather" | "dynamic-slice" => OpClass::AdvancedSubtensor,
+        "dot" => OpClass::Gemm,
+        "reduce" => OpClass::Reduce,
+        "fused" | "elemwise" => OpClass::Elemwise,
+        "alloc" => OpClass::Alloc,
+        "shape" => OpClass::Dimshuffle,
+        _ => OpClass::Control,
+    }
+}
+
 /// (flops, bytes) estimate for one instruction. `shapes` resolves operand
 /// result shapes by name.
 pub fn instruction_cost(
@@ -162,6 +180,20 @@ mod tests {
         assert_eq!(classify(&mk("broadcast")), OpClass::Alloc);
         assert_eq!(classify(&mk("dot")), OpClass::Gemm);
         assert_eq!(classify(&mk("while")), OpClass::Control);
+    }
+
+    #[test]
+    fn plan_op_labels_map_to_theano_classes() {
+        assert_eq!(classify_plan_op("scatter"), OpClass::AdvancedIncSubtensor);
+        assert_eq!(classify_plan_op("dynamic-update-slice"), OpClass::AdvancedIncSubtensor);
+        assert_eq!(classify_plan_op("gather"), OpClass::AdvancedSubtensor);
+        assert_eq!(classify_plan_op("fused"), OpClass::Elemwise);
+        assert_eq!(classify_plan_op("elemwise"), OpClass::Elemwise);
+        assert_eq!(classify_plan_op("dot"), OpClass::Gemm);
+        assert_eq!(classify_plan_op("reduce"), OpClass::Reduce);
+        assert_eq!(classify_plan_op("alloc"), OpClass::Alloc);
+        assert_eq!(classify_plan_op("shape"), OpClass::Dimshuffle);
+        assert_eq!(classify_plan_op("control"), OpClass::Control);
     }
 
     #[test]

@@ -134,4 +134,17 @@ impl Executable {
     pub fn name(&self) -> &str {
         &self.spec.name
     }
+
+    /// Toggle the backend's per-op accounting (no-op on backends without
+    /// sub-dispatch visibility).
+    pub fn set_op_profiling(&self, on: bool) {
+        self.compiled.set_op_profiling(on);
+    }
+
+    /// Per-op `(label, calls, total)` rows the backend attributed inside
+    /// this executable's dispatches (empty unless op profiling ran on a
+    /// supporting backend — see `Runtime::set_op_profiling`).
+    pub fn op_stats(&self) -> Vec<(String, u64, Duration)> {
+        self.compiled.op_stats()
+    }
 }

@@ -35,6 +35,7 @@ pub struct Runtime {
     backend: Box<dyn Backend>,
     pub manifest: Manifest,
     cache: std::cell::RefCell<HashMap<String, CacheEntry>>,
+    profile_ops: std::cell::Cell<bool>,
 }
 
 impl Runtime {
@@ -49,7 +50,12 @@ impl Runtime {
     /// Create a runtime over an explicit backend (tests, forced setups).
     pub fn with_backend(artifacts_dir: &Path, backend: Box<dyn Backend>) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
-        Ok(Runtime { backend, manifest, cache: Default::default() })
+        Ok(Runtime {
+            backend,
+            manifest,
+            cache: Default::default(),
+            profile_ops: std::cell::Cell::new(false),
+        })
     }
 
     /// Name of the execution backend this runtime compiles through.
@@ -70,6 +76,9 @@ impl Runtime {
             }
         }
         let exe = Rc::new(Executable::compile(self.backend.as_ref(), spec)?);
+        if self.profile_ops.get() {
+            exe.set_op_profiling(true);
+        }
         self.cache
             .borrow_mut()
             .insert(name.to_string(), CacheEntry { fingerprint, exe: Rc::clone(&exe) });
@@ -108,6 +117,34 @@ impl Runtime {
             .values()
             .map(|e| (e.exe.name().to_string(), e.exe.calls(), e.exe.total_time()))
             .collect()
+    }
+
+    /// Turn per-plan-op accounting on/off for every compiled executable,
+    /// current and future (only backends with sub-dispatch visibility —
+    /// the interpreter — record anything).
+    pub fn set_op_profiling(&self, on: bool) {
+        self.profile_ops.set(on);
+        for e in self.cache.borrow().values() {
+            e.exe.set_op_profiling(on);
+        }
+    }
+
+    /// Per-plan-op `(label, calls, total)` rows aggregated across every
+    /// compiled executable — what `profile_hotspots` reports as
+    /// fused-kernel costs instead of raw HLO counts.
+    pub fn plan_op_stats(&self) -> Vec<(String, u64, std::time::Duration)> {
+        let mut acc: HashMap<String, (u64, std::time::Duration)> = HashMap::new();
+        for e in self.cache.borrow().values() {
+            for (label, calls, total) in e.exe.op_stats() {
+                let entry = acc.entry(label).or_default();
+                entry.0 += calls;
+                entry.1 += total;
+            }
+        }
+        let mut rows: Vec<(String, u64, std::time::Duration)> =
+            acc.into_iter().map(|(l, (c, d))| (l, c, d)).collect();
+        rows.sort_by(|a, b| b.2.cmp(&a.2));
+        rows
     }
 }
 

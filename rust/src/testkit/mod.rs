@@ -123,6 +123,39 @@ impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
     }
 }
 
+/// Synthesize literals matching an artifact's manifest input spec:
+/// uniform small f32 planes, s32 row ids below 1000 (valid for every
+/// index-consuming artifact — both model vocabs exceed it), and 0.05 for
+/// f32 scalars (learning rates). Shared by the interpreter golden tests
+/// (`tests/interp_equivalence.rs`) and the E12 bench so both drive the
+/// same input distribution.
+pub fn synth_artifact_inputs(
+    spec: &crate::runtime::ArtifactSpec,
+    rng: &mut Rng,
+) -> anyhow::Result<Vec<xla::Literal>> {
+    use crate::runtime::{lit_f32, lit_i32, scalar_f32, DType};
+    spec.inputs
+        .iter()
+        .map(|t| {
+            let n: usize = t.shape.iter().product();
+            Ok(match t.dtype {
+                DType::F32 => {
+                    if t.shape.is_empty() {
+                        scalar_f32(0.05)
+                    } else {
+                        let v: Vec<f32> = (0..n).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+                        lit_f32(&v, &t.shape)?
+                    }
+                }
+                DType::S32 => {
+                    let v: Vec<i32> = (0..n).map(|_| rng.below(1000) as i32).collect();
+                    lit_i32(&v, &t.shape)?
+                }
+            })
+        })
+        .collect()
+}
+
 /// Run `prop` over `cases` random inputs; panic with the (shrunk) failing
 /// input on violation.
 pub fn forall<T: Shrink>(
