@@ -14,7 +14,7 @@ use anyhow::Result;
 use polyglot_gpu::config::{Backend, Config};
 use polyglot_gpu::coordinator::{prepare_corpus, run_training, RunOptions};
 use polyglot_gpu::devicemodel::{NvprofReport, OpStream, GT570};
-use polyglot_gpu::profiler::{classify_plan_op, OpClass, Profiler};
+use polyglot_gpu::profiler::{classify_plan_op, is_fused_plan_op, OpClass, Profiler};
 use polyglot_gpu::runtime::Runtime;
 
 fn train_rate(cfg: &Config, steps: usize, profile_ops: bool) -> Result<(f64, Runtime)> {
@@ -91,6 +91,32 @@ fn main() -> Result<()> {
             pprof.add_measured(classify_plan_op(label), *calls, *total);
         }
         println!("{}", pprof.render(5));
+        // How much of the measured interpreter time ran inside fused
+        // kernels (chains + reduce prologues + dot/gather epilogues)?
+        let total: std::time::Duration = plan_ops.iter().map(|(_, _, d)| *d).sum();
+        let fused: std::time::Duration = plan_ops
+            .iter()
+            .filter(|(l, _, _)| is_fused_plan_op(l))
+            .map(|(_, _, d)| *d)
+            .sum();
+        if !total.is_zero() {
+            println!(
+                "  fused-kernel time share: {:.1}% of measured plan time",
+                fused.as_secs_f64() / total.as_secs_f64() * 100.0
+            );
+        }
+        // Per-artifact fusion coverage: what fraction of each compiled
+        // plan's compute steps the fuser absorbed.
+        let cov = prof_rt.fusion_coverage();
+        if !cov.is_empty() {
+            println!("  fusion coverage per artifact (fused steps / compute steps):");
+            for (name, fused, total) in cov {
+                println!(
+                    "    {name:<28} {fused:>3}/{total:<3} ({:.0}%)",
+                    if total > 0 { fused as f64 / total as f64 * 100.0 } else { 0.0 }
+                );
+            }
+        }
     }
 
     println!("\n== Step 5: limits analysis (paper §4.5) ==");

@@ -674,6 +674,7 @@ fn e11() -> Result<()> {
 // --- E12: interpreter engines — tree-walk vs compiled plan ------------------
 
 fn e12() -> Result<()> {
+    use polyglot_gpu::backend::interp::plan::FuseMode;
     use polyglot_gpu::backend::interp::InterpExecutable;
     use polyglot_gpu::grad::resolve_threads;
     use polyglot_gpu::testkit::synth_artifact_inputs;
@@ -685,53 +686,94 @@ fn e12() -> Result<()> {
     let rt = Runtime::new(Path::new("artifacts"))?;
     let mut rng = Rng::new(0xe12);
 
-    let threaded_col = format!("plan ({threads} thr)");
+    let threaded_col = format!("full ({threads} thr)");
     let mut t = Table::new(&[
         "artifact",
         "tree-walk",
-        "plan (1 thr)",
+        "unfused",
+        "full (1 thr)",
         threaded_col.as_str(),
+        "fused/unfused",
         "plan/tree",
-        "threaded/1-thr",
+        "coverage",
+        "plan steps",
     ]);
     let mut sweep: Vec<Json> = Vec::new();
     let mut train_step_win = false;
-    for name in
-        ["train_step_ref_b16", "train_step_ref_b512", "loss_eval_b256", "scatter_native_r1000"]
-    {
+    let mut consumer_win = true;
+    for name in [
+        "train_step_ref_b16",
+        "train_step_ref_b512",
+        "loss_eval_b256",
+        "forward_b256",
+        "scatter_native_r1000",
+    ] {
         let inputs = synth_artifact_inputs(rt.manifest.find(name)?, &mut rng)?;
         let refs: Vec<&xla::Literal> = inputs.iter().collect();
         let text = std::fs::read_to_string(&rt.manifest.find(name)?.file)?;
         let tree = InterpExecutable::from_text_threads(&text, 1)?;
-        let plan1 = InterpExecutable::from_text_threads(&text, 1)?;
-        let plan_n = InterpExecutable::from_text_threads(&text, threads)?;
+        let unfused = InterpExecutable::from_text_mode(&text, 1, FuseMode::Off)?;
+        let plan1 = InterpExecutable::from_text_mode(&text, 1, FuseMode::Full)?;
+        let plan_n = InterpExecutable::from_text_mode(&text, threads, FuseMode::Full)?;
+
+        // Two distinct metrics: `coverage` = fused fraction of the Full
+        // plan's compute steps; `plan_steps_full/off` = schedule lengths
+        // (how many materialized steps consumer fusion deleted).
+        let (fused_steps, compute_steps) = plan1.fusion_summary();
+        let coverage = if compute_steps > 0 {
+            fused_steps as f64 / compute_steps as f64
+        } else {
+            0.0
+        };
+        let plan_steps_full = plan1.plan_step_count();
+        let plan_steps_off = unfused.plan_step_count();
 
         let mut b = Bencher::new();
         let samples = if name.contains("b512") { 5 } else { 8 };
         b.bench("tree", 1, samples, 1.0, || tree.run_treewalk(&refs).unwrap());
+        b.bench("unfused", 1, samples, 1.0, || unfused.run(&refs).unwrap());
         b.bench("plan1", 1, samples, 1.0, || plan1.run(&refs).unwrap());
         b.bench("planN", 1, samples, 1.0, || plan_n.run(&refs).unwrap());
         let tree_s = b.get("tree").unwrap().mean_s();
+        let unfused_s = b.get("unfused").unwrap().mean_s();
         let plan1_s = b.get("plan1").unwrap().mean_s();
         let plan_n_s = b.get("planN").unwrap().mean_s();
         t.row(&[
             name.to_string(),
             fmt::dur(Duration::from_secs_f64(tree_s)),
+            fmt::dur(Duration::from_secs_f64(unfused_s)),
             fmt::dur(Duration::from_secs_f64(plan1_s)),
             fmt::dur(Duration::from_secs_f64(plan_n_s)),
+            format!("{:.2}x", unfused_s / plan1_s),
             format!("{:.2}x", tree_s / plan1_s),
-            format!("{:.2}x", plan1_s / plan_n_s),
+            format!("{fused_steps}/{compute_steps} ({:.0}%)", coverage * 100.0),
+            format!("{plan_steps_full} of {plan_steps_off}"),
         ]);
         if name.starts_with("train_step") && plan_n_s < tree_s {
             train_step_win = true;
         }
+        // Consumer-fusion acceptance: the forward/loss artifacts must
+        // run faster fused than unfused AND schedule fewer steps
+        // (intermediates actually eliminated, not just relabeled).
+        if (name.starts_with("loss_eval") || name.starts_with("forward"))
+            && !(plan1_s < unfused_s && plan_steps_full < plan_steps_off)
+        {
+            consumer_win = false;
+        }
         let mut m = BTreeMap::new();
         m.insert("artifact".to_string(), Json::Str(name.to_string()));
         m.insert("treewalk_s".to_string(), Json::Num(tree_s));
+        m.insert("unfused_s".to_string(), Json::Num(unfused_s));
         m.insert("plan1_s".to_string(), Json::Num(plan1_s));
         m.insert("planN_s".to_string(), Json::Num(plan_n_s));
         m.insert("plan_speedup".to_string(), Json::Num(tree_s / plan1_s));
+        m.insert("fusion_speedup".to_string(), Json::Num(unfused_s / plan1_s));
         m.insert("thread_speedup".to_string(), Json::Num(plan1_s / plan_n_s));
+        m.insert("fusion_coverage".to_string(), Json::Num(coverage));
+        m.insert("fused_steps".to_string(), Json::Num(fused_steps as f64));
+        m.insert("compute_steps".to_string(), Json::Num(compute_steps as f64));
+        m.insert("plan_steps_full".to_string(), Json::Num(plan_steps_full as f64));
+        m.insert("plan_steps_off".to_string(), Json::Num(plan_steps_off as f64));
         sweep.push(Json::Obj(m));
     }
     println!("{}", t.render());
@@ -739,14 +781,64 @@ fn e12() -> Result<()> {
         "shape check: fused+threaded plan beats the tree-walker on a train-step artifact {}",
         ok(train_step_win)
     );
+    println!(
+        "shape check: consumer fusion wins wall-time AND deletes steps on loss_eval/forward {}",
+        ok(consumer_win)
+    );
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("interp_engines".to_string()));
     root.insert("threads".to_string(), Json::Num(threads as f64));
     root.insert("sweep".to_string(), Json::Arr(sweep));
-    std::fs::write("BENCH_interp.json", Json::Obj(root).render())?;
+    let root = Json::Obj(root);
+    std::fs::write("BENCH_interp.json", root.render())?;
     println!("wrote BENCH_interp.json");
+    print_interp_ref_delta(&root);
     Ok(())
+}
+
+/// Print the per-artifact delta of this E12 run against the committed
+/// reference snapshot (`BENCH_interp.ref.json`), so the nightly smoke
+/// surfaces perf drift in its log without needing artifact downloads.
+fn print_interp_ref_delta(current: &Json) {
+    let Ok(text) = std::fs::read_to_string("BENCH_interp.ref.json") else {
+        println!("(no BENCH_interp.ref.json in the working dir; delta vs reference skipped)");
+        return;
+    };
+    let Ok(reference) = Json::parse(&text) else {
+        println!("(BENCH_interp.ref.json unparseable; delta vs reference skipped)");
+        return;
+    };
+    if reference.get("provisional").and_then(|v| v.as_bool()) == Some(true) {
+        println!(
+            "reference snapshot is marked provisional (seed estimate); \
+             refresh it from a real nightly run"
+        );
+    }
+    let row = |j: &Json, name: &str, key: &str| -> Option<f64> {
+        j.get("sweep")?.as_arr()?.iter().find_map(|e| {
+            if e.get("artifact")?.as_str()? == name {
+                e.get(key)?.as_f64()
+            } else {
+                None
+            }
+        })
+    };
+    println!("delta vs committed BENCH_interp.ref.json (negative = faster now):");
+    let Some(cur_sweep) = current.get("sweep").and_then(|s| s.as_arr()) else { return };
+    for e in cur_sweep {
+        let Some(name) = e.get("artifact").and_then(|v| v.as_str()) else { continue };
+        for key in ["plan1_s", "planN_s"] {
+            let (Some(now), Some(then)) =
+                (e.get(key).and_then(|v| v.as_f64()), row(&reference, name, key))
+            else {
+                continue;
+            };
+            if then > 0.0 {
+                println!("  {name:<24} {key:<8} {:+.1}%", (now - then) / then * 100.0);
+            }
+        }
+    }
 }
 
 fn ok(cond: bool) -> &'static str {

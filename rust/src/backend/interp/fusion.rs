@@ -14,13 +14,30 @@
 //! unfused walk — elementwise ops are order-free per element and both
 //! paths apply the very same `fn(f32, f32) -> f32`.
 //!
-//! `broadcast`-of-scalar participates as a leaf ([`EInstr::Splat`]): the
-//! scalar is read once and splatted per block, which removes the
-//! materialized `[n]`-sized constant planes the artifacts are full of.
+//! Broadcasts participate as leaves instead of materializing planes:
+//! `broadcast`-of-scalar pushes one pre-read value per block
+//! ([`EInstr::Splat`]); for rank-2 chains a row-vector broadcast along
+//! the trailing dim ([`EInstr::Tile`], the bias-add pattern) and a
+//! column-vector broadcast along the leading dim ([`EInstr::Rep`], the
+//! per-row validity mask pattern) read their small source in place with
+//! modular index math, valid at *any* block offset.
+//!
+//! **Consumer-side fusion** builds on the same bytecode through
+//! [`FusedCtx`]: a prepared, `Sync` evaluation context whose
+//! [`FusedCtx::eval_block`] computes an arbitrary element range, with one
+//! kernel input optionally supplied as a *hot block* ([`BlockSlice`]) by
+//! the calling kernel — how `dot`/`gather` stream their freshly-computed
+//! rows through an epilogue chain and how `reduce` folds a prologue
+//! chain per block without ever materializing its input
+//! ([`super::kernels`]). The same mechanism powers **in-place fused
+//! outputs** ([`run_fused_in_place`]): a dying same-shape input buffer is
+//! re-presented as the hot block while the finished block overwrites it
+//! — safe because block `[lo, hi)` is written only after every read of
+//! `[lo, hi)`, and later blocks never read earlier elements.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::eval::{bin_f32, bin_i32, bin_pred, un_f32};
+use super::eval::{self, bin_f32, bin_i32, bin_pred, un_f32};
 use super::parser::{BinOp, CmpDir, Computation, Op, Shape, UnOp};
 use super::value::{Data, Tensor, Ty};
 
@@ -35,6 +52,12 @@ pub enum EInstr {
     Load(u16),
     /// Push external scalar input `k`, splatted across the block.
     Splat(u16),
+    /// Push external row-vector input `k` (length [`FusedKernel::inner`])
+    /// tiled along the trailing dim: element `i` reads `src[i % inner]`.
+    Tile(u16),
+    /// Push external column-vector input `k` repeated along the trailing
+    /// dim: element `i` reads `src[i / inner]`.
+    Rep(u16),
     /// Pop rhs, pop lhs, push the elementwise binary result.
     Bin(BinOp),
     /// Pop rhs, pop lhs, push the elementwise comparison (pred).
@@ -53,6 +76,9 @@ pub struct FusedKernel {
     pub prog: Vec<EInstr>,
     pub n_inputs: usize,
     pub out_ty: Ty,
+    /// Trailing-dim length of the (rank-2) chain shape — the period for
+    /// `Tile`/`Rep` leaves. 0 when the chain has no such leaf.
+    pub inner: usize,
     /// HLO opcodes folded into this kernel, postfix order (diagnostics
     /// and fuser tests).
     pub ops: Vec<&'static str>,
@@ -141,21 +167,72 @@ pub fn splat_node(comp: &Computation, i: usize) -> bool {
     }
 }
 
+/// Is instruction `i` a rank-2 broadcast of a row vector along the
+/// trailing dim (`dimensions={1}`, the bias-add pattern — fusable as a
+/// `Tile` leaf)?
+pub fn tile_node(comp: &Computation, i: usize) -> bool {
+    let ins = &comp.instrs[i];
+    let Op::Broadcast { dims: map } = &ins.op else { return false };
+    let Some((ty, od)) = arr_of(&ins.shape) else { return false };
+    let Some(&o) = ins.operands.first() else { return false };
+    let Some((oty, sd)) = arr_of(&comp.instrs[o].shape) else { return false };
+    oty == ty
+        && od.len() == 2
+        && sd.len() == 1
+        && map.len() == 1
+        && map[0] == 1
+        && sd[0] == od[1]
+}
+
+/// Is instruction `i` a rank-2 broadcast of a column vector along the
+/// leading dim (`dimensions={0}`, the per-row mask pattern — fusable as
+/// a `Rep` leaf)?
+pub fn rep_node(comp: &Computation, i: usize) -> bool {
+    let ins = &comp.instrs[i];
+    let Op::Broadcast { dims: map } = &ins.op else { return false };
+    let Some((ty, od)) = arr_of(&ins.shape) else { return false };
+    let Some(&o) = ins.operands.first() else { return false };
+    let Some((oty, sd)) = arr_of(&comp.instrs[o].shape) else { return false };
+    oty == ty
+        && od.len() == 2
+        && sd.len() == 1
+        && map.len() == 1
+        && map[0] == 0
+        && sd[0] == od[0]
+}
+
 // --------------------------------------------------------------- compile
 
 /// Compile the fused chain rooted at `root` (whose transitive operands
 /// marked `inlined` fold into the kernel). Returns the kernel plus the
-/// positions of the external operands, in `Load`/`Splat` input order.
+/// positions of the external operands, in kernel-input order.
+///
+/// `hot` names an inlined *producer* node (`dot`/`gather`) whose value
+/// the executing kernel supplies per block: recursion stops there and a
+/// plain `Load` of that external input is emitted.
 pub fn compile(
     comp: &Computation,
     root: usize,
     inlined: &[bool],
+    hot: Option<usize>,
 ) -> Result<(FusedKernel, Vec<usize>)> {
     let mut prog = Vec::new();
     let mut ops = Vec::new();
     let mut ext: Vec<usize> = Vec::new();
     let mut tys: Vec<Ty> = Vec::new();
-    emit(comp, root, inlined, &mut prog, &mut ops, &mut ext, &mut tys)?;
+    let (_, root_dims) = comp.instrs[root].shape.arr()?;
+    let inner = if root_dims.len() == 2 { root_dims[1] } else { 0 };
+    let mut cc = Emitter {
+        comp,
+        inlined,
+        hot,
+        inner,
+        prog: &mut prog,
+        ops: &mut ops,
+        ext: &mut ext,
+        tys: &mut tys,
+    };
+    cc.emit(root)?;
     if tys.len() != 1 {
         bail!("fused kernel left {} lanes on the stack", tys.len());
     }
@@ -163,118 +240,151 @@ pub fn compile(
     if tys[0] != out_ty {
         bail!("fused kernel yields {:?}, root declares {:?}", tys[0], out_ty);
     }
-    Ok((FusedKernel { prog, n_inputs: ext.len(), out_ty, ops }, ext))
+    let uses_inner = prog.iter().any(|e| matches!(e, EInstr::Tile(_) | EInstr::Rep(_)));
+    let k = FusedKernel {
+        prog,
+        n_inputs: ext.len(),
+        out_ty,
+        inner: if uses_inner { inner } else { 0 },
+        ops,
+    };
+    Ok((k, ext))
 }
 
-fn ext_index(ext: &mut Vec<usize>, o: usize) -> u16 {
-    match ext.iter().position(|&x| x == o) {
-        Some(p) => p as u16,
-        None => {
-            ext.push(o);
-            (ext.len() - 1) as u16
-        }
-    }
+struct Emitter<'a> {
+    comp: &'a Computation,
+    inlined: &'a [bool],
+    hot: Option<usize>,
+    inner: usize,
+    prog: &'a mut Vec<EInstr>,
+    ops: &'a mut Vec<&'static str>,
+    ext: &'a mut Vec<usize>,
+    tys: &'a mut Vec<Ty>,
 }
 
-fn emit(
-    comp: &Computation,
-    i: usize,
-    inlined: &[bool],
-    prog: &mut Vec<EInstr>,
-    ops: &mut Vec<&'static str>,
-    ext: &mut Vec<usize>,
-    tys: &mut Vec<Ty>,
-) -> Result<()> {
-    let ins = &comp.instrs[i];
-    let (out_ty, _) = ins.shape.arr()?;
-    // Splat leaf: push the scalar *operand* of the inlined broadcast.
-    if let Op::Broadcast { .. } = &ins.op {
-        let o = ins.operands[0];
-        let (sty, _) = comp.instrs[o].shape.arr()?;
-        if sty != out_ty {
-            bail!("fused splat type mismatch");
-        }
-        prog.push(EInstr::Splat(ext_index(ext, o)));
-        tys.push(sty);
-        ops.push("broadcast");
-        return Ok(());
-    }
-    // Elementwise node: operands first (recursing into inlined ones),
-    // then the op itself.
-    for &o in &ins.operands {
-        if inlined[o] {
-            emit(comp, o, inlined, prog, ops, ext, tys)?;
-        } else {
-            let (oty, _) = comp.instrs[o].shape.arr()?;
-            prog.push(EInstr::Load(ext_index(ext, o)));
-            tys.push(oty);
+impl Emitter<'_> {
+    fn ext_index(&mut self, o: usize) -> u16 {
+        match self.ext.iter().position(|&x| x == o) {
+            Some(p) => p as u16,
+            None => {
+                self.ext.push(o);
+                (self.ext.len() - 1) as u16
+            }
         }
     }
-    let pop = |tys: &mut Vec<Ty>| tys.pop().ok_or_else(|| anyhow::anyhow!("stack underflow"));
-    match &ins.op {
-        Op::Binary(b) => {
-            let tb = pop(tys)?;
-            let ta = pop(tys)?;
-            if ta != tb {
-                bail!("fused binary dtype mismatch");
+
+    fn emit(&mut self, i: usize) -> Result<()> {
+        let ins = &self.comp.instrs[i];
+        let (out_ty, _) = ins.shape.arr()?;
+        // Hot producer leaf: its block is supplied by the executing
+        // kernel; emit a plain load of the external input.
+        if self.hot == Some(i) {
+            let k = self.ext_index(i);
+            self.prog.push(EInstr::Load(k));
+            self.tys.push(out_ty);
+            return Ok(());
+        }
+        // Broadcast leaf: push the broadcast's *operand* as a splat /
+        // tile / rep read.
+        if let Op::Broadcast { .. } = &ins.op {
+            let o = ins.operands[0];
+            let (sty, sdims) = self.comp.instrs[o].shape.arr()?;
+            if sty != out_ty {
+                bail!("fused broadcast type mismatch");
             }
-            match ta {
-                Ty::F32 => {
-                    bin_f32(*b)?;
+            let k = self.ext_index(o);
+            if sdims.iter().product::<usize>() == 1 {
+                self.prog.push(EInstr::Splat(k));
+            } else if tile_node(self.comp, i) && self.inner > 0 {
+                self.prog.push(EInstr::Tile(k));
+            } else if rep_node(self.comp, i) && self.inner > 0 {
+                self.prog.push(EInstr::Rep(k));
+            } else {
+                bail!("broadcast {} is not a fusable leaf", ins.name);
+            }
+            self.tys.push(sty);
+            self.ops.push("broadcast");
+            return Ok(());
+        }
+        // Elementwise node: operands first (recursing into inlined ones),
+        // then the op itself.
+        for &o in &ins.operands {
+            if self.inlined[o] {
+                self.emit(o)?;
+            } else {
+                let (oty, _) = self.comp.instrs[o].shape.arr()?;
+                let k = self.ext_index(o);
+                self.prog.push(EInstr::Load(k));
+                self.tys.push(oty);
+            }
+        }
+        let pop =
+            |tys: &mut Vec<Ty>| tys.pop().ok_or_else(|| anyhow!("stack underflow"));
+        match &ins.op {
+            Op::Binary(b) => {
+                let tb = pop(self.tys)?;
+                let ta = pop(self.tys)?;
+                if ta != tb {
+                    bail!("fused binary dtype mismatch");
                 }
-                Ty::S32 => {
-                    bin_i32(*b)?;
+                match ta {
+                    Ty::F32 => {
+                        bin_f32(*b)?;
+                    }
+                    Ty::S32 => {
+                        bin_i32(*b)?;
+                    }
+                    Ty::Pred => {
+                        bin_pred(*b)?;
+                    }
                 }
-                Ty::Pred => {
-                    bin_pred(*b)?;
+                self.prog.push(EInstr::Bin(*b));
+                self.tys.push(ta);
+                self.ops.push(bin_name(*b));
+            }
+            Op::Unary(u) => {
+                let ta = pop(self.tys)?;
+                if !matches!((ta, u), (Ty::F32, _) | (Ty::S32, UnOp::Neg)) {
+                    bail!("fused unary {u:?} on {}", ta.name());
                 }
+                self.prog.push(EInstr::Un(*u));
+                self.tys.push(ta);
+                self.ops.push(un_name(*u));
             }
-            prog.push(EInstr::Bin(*b));
-            tys.push(ta);
-            ops.push(bin_name(*b));
-        }
-        Op::Unary(u) => {
-            let ta = pop(tys)?;
-            if !matches!((ta, u), (Ty::F32, _) | (Ty::S32, UnOp::Neg)) {
-                bail!("fused unary {u:?} on {}", ta.name());
+            Op::Compare { dir } => {
+                let tb = pop(self.tys)?;
+                let ta = pop(self.tys)?;
+                if ta != tb || ta == Ty::Pred {
+                    bail!("fused compare dtype mismatch");
+                }
+                self.prog.push(EInstr::Cmp(*dir));
+                self.tys.push(Ty::Pred);
+                self.ops.push("compare");
             }
-            prog.push(EInstr::Un(*u));
-            tys.push(ta);
-            ops.push(un_name(*u));
-        }
-        Op::Compare { dir } => {
-            let tb = pop(tys)?;
-            let ta = pop(tys)?;
-            if ta != tb || ta == Ty::Pred {
-                bail!("fused compare dtype mismatch");
+            Op::Select => {
+                let tf = pop(self.tys)?;
+                let tt = pop(self.tys)?;
+                let tp = pop(self.tys)?;
+                if tp != Ty::Pred || tt != tf {
+                    bail!("fused select dtype mismatch");
+                }
+                self.prog.push(EInstr::Sel);
+                self.tys.push(tt);
+                self.ops.push("select");
             }
-            prog.push(EInstr::Cmp(*dir));
-            tys.push(Ty::Pred);
-            ops.push("compare");
-        }
-        Op::Select => {
-            let tf = pop(tys)?;
-            let tt = pop(tys)?;
-            let tp = pop(tys)?;
-            if tp != Ty::Pred || tt != tf {
-                bail!("fused select dtype mismatch");
+            Op::Convert => {
+                let _ = pop(self.tys)?;
+                if out_ty == Ty::Pred {
+                    bail!("fused convert to pred");
+                }
+                self.prog.push(EInstr::Cvt(out_ty));
+                self.tys.push(out_ty);
+                self.ops.push("convert");
             }
-            prog.push(EInstr::Sel);
-            tys.push(tt);
-            ops.push("select");
+            other => bail!("op {other:?} is not fusable"),
         }
-        Op::Convert => {
-            let _ = pop(tys)?;
-            if out_ty == Ty::Pred {
-                bail!("fused convert to pred");
-            }
-            prog.push(EInstr::Cvt(out_ty));
-            tys.push(out_ty);
-            ops.push("convert");
-        }
-        other => bail!("op {other:?} is not fusable"),
+        Ok(())
     }
-    Ok(())
 }
 
 fn bin_name(b: BinOp) -> &'static str {
@@ -302,22 +412,62 @@ fn un_name(u: UnOp) -> &'static str {
 // --------------------------------------------------------------- execute
 
 /// One lane of the per-block evaluation stack.
-enum Lane {
+pub enum Lane {
     F(Vec<f32>),
     I(Vec<i32>),
     P(Vec<bool>),
 }
 
+impl Lane {
+    pub fn len(&self) -> usize {
+        match self {
+            Lane::F(v) => v.len(),
+            Lane::I(v) => v.len(),
+            Lane::P(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A borrowed block of values, indexed relative to the block start —
+/// how calling kernels hand a fused chain its *hot* input (freshly
+/// computed dot/gather rows, or the buffer being overwritten in place).
+#[derive(Clone, Copy)]
+pub enum BlockSlice<'a> {
+    F(&'a [f32]),
+    I(&'a [i32]),
+    P(&'a [bool]),
+}
+
+impl BlockSlice<'_> {
+    fn len(&self) -> usize {
+        match self {
+            BlockSlice::F(v) => v.len(),
+            BlockSlice::I(v) => v.len(),
+            BlockSlice::P(v) => v.len(),
+        }
+    }
+}
+
 /// Recycled lane buffers: after warm-up, block evaluation allocates
-/// nothing.
+/// nothing. One scratch set serves a whole kernel invocation (or one
+/// worker thread of it) across every block.
 #[derive(Default)]
-struct LanePool {
+pub struct Scratch {
     f: Vec<Vec<f32>>,
     i: Vec<Vec<i32>>,
     p: Vec<Vec<bool>>,
+    stack: Vec<Lane>,
 }
 
-impl LanePool {
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
     fn take_f(&mut self) -> Vec<f32> {
         self.f.pop().unwrap_or_default()
     }
@@ -327,7 +477,9 @@ impl LanePool {
     fn take_p(&mut self) -> Vec<bool> {
         self.p.pop().unwrap_or_default()
     }
-    fn put(&mut self, lane: Lane) {
+
+    /// Return a finished lane's buffer to the pool.
+    pub fn recycle(&mut self, lane: Lane) {
         match lane {
             Lane::F(v) => self.f.push(v),
             Lane::I(v) => self.i.push(v),
@@ -343,258 +495,658 @@ enum Scalar {
     P(bool),
 }
 
+/// How a kernel input is referenced by the bytecode (derived from the
+/// program at context build time; drives size validation).
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Role {
+    Unused,
+    Load,
+    Splat,
+    Tile,
+    Rep,
+}
+
+/// A prepared fused-kernel evaluation: validated inputs, pre-read splat
+/// scalars, optional hot input. Holds only shared references — safe to
+/// share across pool threads, each with its own [`Scratch`].
+pub struct FusedCtx<'k, 't> {
+    k: &'k FusedKernel,
+    inputs: Vec<Option<&'t Tensor>>,
+    scalars: Vec<Option<Scalar>>,
+    hot: Option<u16>,
+    n: usize,
+}
+
+impl<'k, 't> FusedCtx<'k, 't> {
+    /// Validate `inputs` (one per kernel input; `None` only at the `hot`
+    /// position) against the kernel's roles for a virtual element count
+    /// of `n`.
+    pub fn new(
+        k: &'k FusedKernel,
+        inputs: Vec<Option<&'t Tensor>>,
+        n: usize,
+        hot: Option<u16>,
+    ) -> Result<FusedCtx<'k, 't>> {
+        if inputs.len() != k.n_inputs {
+            bail!("fused kernel wants {} inputs, got {}", k.n_inputs, inputs.len());
+        }
+        let mut roles = vec![Role::Unused; k.n_inputs];
+        let mut set = |i: u16, r: Role| -> Result<()> {
+            let slot = &mut roles[i as usize];
+            if *slot != Role::Unused && *slot != r {
+                bail!("fused input {i} used as both {:?} and {r:?}", *slot);
+            }
+            *slot = r;
+            Ok(())
+        };
+        for e in &k.prog {
+            match e {
+                EInstr::Load(i) => set(*i, Role::Load)?,
+                EInstr::Splat(i) => set(*i, Role::Splat)?,
+                EInstr::Tile(i) => set(*i, Role::Tile)?,
+                EInstr::Rep(i) => set(*i, Role::Rep)?,
+                _ => {}
+            }
+        }
+        let mut scalars: Vec<Option<Scalar>> = vec![None; k.n_inputs];
+        for (i, t) in inputs.iter().enumerate() {
+            if hot == Some(i as u16) {
+                if roles[i] != Role::Load {
+                    bail!("fused hot input {i} must be a plain load");
+                }
+                continue;
+            }
+            let Some(t) = t else { bail!("fused input {i} missing") };
+            let want = match roles[i] {
+                Role::Unused => continue,
+                Role::Load => n,
+                Role::Splat => 1,
+                Role::Tile => {
+                    if k.inner == 0 {
+                        bail!("fused tile input without an inner period");
+                    }
+                    k.inner
+                }
+                Role::Rep => {
+                    if k.inner == 0 || n % k.inner != 0 {
+                        bail!("fused rep input without a whole inner period");
+                    }
+                    n / k.inner
+                }
+            };
+            if t.elements() != want {
+                bail!("fused input {i}: {} elements, want {want}", t.elements());
+            }
+            if roles[i] == Role::Splat {
+                scalars[i] = Some(match &t.data {
+                    Data::F32(v) => Scalar::F(v[0]),
+                    Data::I32(v) => Scalar::I(v[0]),
+                    Data::Pred(v) => Scalar::P(v[0]),
+                });
+            }
+        }
+        Ok(FusedCtx { k, inputs, scalars, hot, n })
+    }
+
+    pub fn out_ty(&self) -> Ty {
+        self.k.out_ty
+    }
+
+    pub fn elements(&self) -> usize {
+        self.n
+    }
+
+    /// Evaluate elements `[lo, hi)` of the chain, reading the hot input
+    /// (if any) from `hot` (indexed relative to `lo`). The result lane
+    /// holds `hi - lo` elements; recycle it via [`Scratch::recycle`].
+    pub fn eval_block(
+        &self,
+        lo: usize,
+        hi: usize,
+        hot: Option<BlockSlice>,
+        s: &mut Scratch,
+    ) -> Result<Lane> {
+        if hi > self.n || lo > hi {
+            bail!("fused block [{lo}, {hi}) out of range 0..{}", self.n);
+        }
+        if let Some(b) = &hot {
+            if self.hot.is_none() {
+                bail!("fused: hot block passed to a kernel without a hot input");
+            }
+            if b.len() != hi - lo {
+                bail!("fused: hot block has {} elements, want {}", b.len(), hi - lo);
+            }
+        } else if self.hot.is_some() {
+            bail!("fused: kernel expects a hot block");
+        }
+        for e in &self.k.prog {
+            self.step(e, lo, hi, hot, s)?;
+        }
+        let r = s.stack.pop().ok_or_else(|| anyhow!("fused: empty result stack"))?;
+        if !s.stack.is_empty() {
+            bail!("fused: {} stray lanes after block", s.stack.len());
+        }
+        Ok(r)
+    }
+
+    fn input(&self, i: u16) -> Result<&'t Tensor> {
+        self.inputs[i as usize]
+            .ok_or_else(|| anyhow!("fused: input {i} has no tensor backing"))
+    }
+
+    fn step(
+        &self,
+        e: &EInstr,
+        lo: usize,
+        hi: usize,
+        hot: Option<BlockSlice>,
+        s: &mut Scratch,
+    ) -> Result<()> {
+        let len = hi - lo;
+        match e {
+            EInstr::Load(i) => {
+                if self.hot == Some(*i) {
+                    let lane = match hot.expect("checked in eval_block") {
+                        BlockSlice::F(v) => {
+                            let mut b = s.take_f();
+                            b.clear();
+                            b.extend_from_slice(v);
+                            Lane::F(b)
+                        }
+                        BlockSlice::I(v) => {
+                            let mut b = s.take_i();
+                            b.clear();
+                            b.extend_from_slice(v);
+                            Lane::I(b)
+                        }
+                        BlockSlice::P(v) => {
+                            let mut b = s.take_p();
+                            b.clear();
+                            b.extend_from_slice(v);
+                            Lane::P(b)
+                        }
+                    };
+                    s.stack.push(lane);
+                    return Ok(());
+                }
+                let lane = match &self.input(*i)?.data {
+                    Data::F32(v) => {
+                        let mut b = s.take_f();
+                        b.clear();
+                        b.extend_from_slice(&v[lo..hi]);
+                        Lane::F(b)
+                    }
+                    Data::I32(v) => {
+                        let mut b = s.take_i();
+                        b.clear();
+                        b.extend_from_slice(&v[lo..hi]);
+                        Lane::I(b)
+                    }
+                    Data::Pred(v) => {
+                        let mut b = s.take_p();
+                        b.clear();
+                        b.extend_from_slice(&v[lo..hi]);
+                        Lane::P(b)
+                    }
+                };
+                s.stack.push(lane);
+            }
+            EInstr::Splat(i) => {
+                let lane = match self.scalars[*i as usize] {
+                    Some(Scalar::F(x)) => {
+                        let mut b = s.take_f();
+                        b.clear();
+                        b.resize(len, x);
+                        Lane::F(b)
+                    }
+                    Some(Scalar::I(x)) => {
+                        let mut b = s.take_i();
+                        b.clear();
+                        b.resize(len, x);
+                        Lane::I(b)
+                    }
+                    Some(Scalar::P(x)) => {
+                        let mut b = s.take_p();
+                        b.clear();
+                        b.resize(len, x);
+                        Lane::P(b)
+                    }
+                    None => bail!("fused: splat input {i} missing scalar"),
+                };
+                s.stack.push(lane);
+            }
+            EInstr::Tile(i) => {
+                let inner = self.k.inner;
+                let lane = match &self.input(*i)?.data {
+                    Data::F32(v) => {
+                        let mut b = s.take_f();
+                        fill_tile(v, lo, len, inner, &mut b);
+                        Lane::F(b)
+                    }
+                    Data::I32(v) => {
+                        let mut b = s.take_i();
+                        fill_tile(v, lo, len, inner, &mut b);
+                        Lane::I(b)
+                    }
+                    Data::Pred(v) => {
+                        let mut b = s.take_p();
+                        fill_tile(v, lo, len, inner, &mut b);
+                        Lane::P(b)
+                    }
+                };
+                s.stack.push(lane);
+            }
+            EInstr::Rep(i) => {
+                let inner = self.k.inner;
+                let lane = match &self.input(*i)?.data {
+                    Data::F32(v) => {
+                        let mut b = s.take_f();
+                        fill_rep(v, lo, hi, inner, &mut b);
+                        Lane::F(b)
+                    }
+                    Data::I32(v) => {
+                        let mut b = s.take_i();
+                        fill_rep(v, lo, hi, inner, &mut b);
+                        Lane::I(b)
+                    }
+                    Data::Pred(v) => {
+                        let mut b = s.take_p();
+                        fill_rep(v, lo, hi, inner, &mut b);
+                        Lane::P(b)
+                    }
+                };
+                s.stack.push(lane);
+            }
+            EInstr::Bin(op) => {
+                let b = s.stack.pop().ok_or_else(|| anyhow!("fused: bin underflow"))?;
+                let a =
+                    s.stack.last_mut().ok_or_else(|| anyhow!("fused: bin underflow"))?;
+                match (a, &b) {
+                    (Lane::F(x), Lane::F(y)) => {
+                        let f = bin_f32(*op)?;
+                        for (xa, &yb) in x.iter_mut().zip(y.iter()) {
+                            *xa = f(*xa, yb);
+                        }
+                    }
+                    (Lane::I(x), Lane::I(y)) => {
+                        let f = bin_i32(*op)?;
+                        for (xa, &yb) in x.iter_mut().zip(y.iter()) {
+                            *xa = f(*xa, yb);
+                        }
+                    }
+                    (Lane::P(x), Lane::P(y)) => {
+                        let f = bin_pred(*op)?;
+                        for (xa, &yb) in x.iter_mut().zip(y.iter()) {
+                            *xa = f(*xa, yb);
+                        }
+                    }
+                    _ => bail!("fused: bin lane type mismatch"),
+                }
+                s.recycle(b);
+            }
+            EInstr::Cmp(dir) => {
+                let b = s.stack.pop().ok_or_else(|| anyhow!("fused: cmp underflow"))?;
+                let a = s.stack.pop().ok_or_else(|| anyhow!("fused: cmp underflow"))?;
+                let mut out = s.take_p();
+                out.clear();
+                fn cmp<T: PartialOrd + Copy>(
+                    dir: CmpDir,
+                    a: &[T],
+                    b: &[T],
+                    out: &mut Vec<bool>,
+                ) {
+                    let f = eval::cmp_of::<T>(dir);
+                    out.extend(a.iter().zip(b).map(|(&x, &y)| f(x, y)));
+                }
+                match (&a, &b) {
+                    (Lane::F(x), Lane::F(y)) => cmp(*dir, x, y, &mut out),
+                    (Lane::I(x), Lane::I(y)) => cmp(*dir, x, y, &mut out),
+                    _ => bail!("fused: cmp lane type mismatch"),
+                }
+                s.stack.push(Lane::P(out));
+                s.recycle(a);
+                s.recycle(b);
+            }
+            EInstr::Sel => {
+                let f = s.stack.pop().ok_or_else(|| anyhow!("fused: sel underflow"))?;
+                let mut t = s.stack.pop().ok_or_else(|| anyhow!("fused: sel underflow"))?;
+                let p = s.stack.pop().ok_or_else(|| anyhow!("fused: sel underflow"))?;
+                let Lane::P(pv) = &p else { bail!("fused: sel pred lane") };
+                match (&mut t, &f) {
+                    (Lane::F(tv), Lane::F(fv)) => {
+                        for ((tx, &fx), &c) in tv.iter_mut().zip(fv.iter()).zip(pv.iter()) {
+                            if !c {
+                                *tx = fx;
+                            }
+                        }
+                    }
+                    (Lane::I(tv), Lane::I(fv)) => {
+                        for ((tx, &fx), &c) in tv.iter_mut().zip(fv.iter()).zip(pv.iter()) {
+                            if !c {
+                                *tx = fx;
+                            }
+                        }
+                    }
+                    (Lane::P(tv), Lane::P(fv)) => {
+                        for ((tx, &fx), &c) in tv.iter_mut().zip(fv.iter()).zip(pv.iter()) {
+                            if !c {
+                                *tx = fx;
+                            }
+                        }
+                    }
+                    _ => bail!("fused: sel lane type mismatch"),
+                }
+                s.stack.push(t);
+                s.recycle(p);
+                s.recycle(f);
+            }
+            EInstr::Un(op) => {
+                let a =
+                    s.stack.last_mut().ok_or_else(|| anyhow!("fused: un underflow"))?;
+                match (a, op) {
+                    (Lane::F(x), _) => {
+                        let f = un_f32(*op);
+                        for v in x.iter_mut() {
+                            *v = f(*v);
+                        }
+                    }
+                    (Lane::I(x), UnOp::Neg) => {
+                        for v in x.iter_mut() {
+                            *v = v.wrapping_neg();
+                        }
+                    }
+                    _ => bail!("fused: unary lane type mismatch"),
+                }
+            }
+            EInstr::Cvt(ty) => {
+                use super::eval::{cast_f32_i32, cast_i32_f32, cast_pred_f32, cast_pred_i32};
+                let a = s.stack.pop().ok_or_else(|| anyhow!("fused: cvt underflow"))?;
+                let lane = match (a, ty) {
+                    (Lane::F(x), Ty::F32) => Lane::F(x),
+                    (Lane::I(x), Ty::S32) => Lane::I(x),
+                    (a, Ty::F32) => {
+                        let mut out = s.take_f();
+                        out.clear();
+                        match &a {
+                            Lane::I(x) => out.extend(x.iter().map(|&v| cast_i32_f32(v))),
+                            Lane::P(x) => out.extend(x.iter().map(|&b| cast_pred_f32(b))),
+                            Lane::F(_) => unreachable!(),
+                        }
+                        s.recycle(a);
+                        Lane::F(out)
+                    }
+                    (a, Ty::S32) => {
+                        let mut out = s.take_i();
+                        out.clear();
+                        match &a {
+                            Lane::F(x) => out.extend(x.iter().map(|&v| cast_f32_i32(v))),
+                            Lane::P(x) => out.extend(x.iter().map(|&b| cast_pred_i32(b))),
+                            Lane::I(_) => unreachable!(),
+                        }
+                        s.recycle(a);
+                        Lane::I(out)
+                    }
+                    (_, Ty::Pred) => bail!("fused: convert to pred"),
+                };
+                s.stack.push(lane);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `out[t] = src[(lo + t) % inner]` for `t in 0..len`, filled in
+/// contiguous runs.
+fn fill_tile<T: Copy>(src: &[T], lo: usize, len: usize, inner: usize, out: &mut Vec<T>) {
+    out.clear();
+    let mut cur = lo % inner;
+    let mut filled = 0usize;
+    while filled < len {
+        let take = (inner - cur).min(len - filled);
+        out.extend_from_slice(&src[cur..cur + take]);
+        filled += take;
+        cur = (cur + take) % inner;
+    }
+}
+
+/// `out[t] = src[(lo + t) / inner]` for `lo + t in [lo, hi)`, filled in
+/// per-row runs.
+fn fill_rep<T: Copy>(src: &[T], lo: usize, hi: usize, inner: usize, out: &mut Vec<T>) {
+    out.clear();
+    let mut pos = lo;
+    while pos < hi {
+        let r = pos / inner;
+        let run_end = ((r + 1) * inner).min(hi);
+        out.resize(out.len() + (run_end - pos), src[r]);
+        pos = run_end;
+    }
+}
+
+// ---------------------------------------------------- whole-tensor drivers
+
 /// Execute a fused kernel over `inputs`, producing the `out_dims` tensor.
 pub fn run_fused(k: &FusedKernel, inputs: &[&Tensor], out_dims: &[usize]) -> Result<Tensor> {
     let n: usize = out_dims.iter().product();
-    if inputs.len() != k.n_inputs {
-        bail!("fused kernel wants {} inputs, got {}", k.n_inputs, inputs.len());
+    if let Some(t) = fast_single_op(k, inputs, out_dims)? {
+        return Ok(t);
     }
-    // Pre-read splat scalars and validate input sizes.
-    let mut splat = vec![false; k.n_inputs];
-    for e in &k.prog {
-        if let EInstr::Splat(i) = e {
-            splat[*i as usize] = true;
-        }
-    }
-    let mut scalars: Vec<Option<Scalar>> = vec![None; k.n_inputs];
-    for (i, t) in inputs.iter().enumerate() {
-        let want = if splat[i] { 1 } else { n };
-        if t.elements() != want {
-            bail!("fused input {i}: {} elements, want {want}", t.elements());
-        }
-        if splat[i] {
-            scalars[i] = Some(match &t.data {
-                Data::F32(v) => Scalar::F(v[0]),
-                Data::I32(v) => Scalar::I(v[0]),
-                Data::Pred(v) => Scalar::P(v[0]),
-            });
-        }
-    }
-
-    let mut pool = LanePool::default();
-    let mut stack: Vec<Lane> = Vec::new();
-    let mut out_f: Vec<f32> = Vec::new();
-    let mut out_i: Vec<i32> = Vec::new();
-    let mut out_p: Vec<bool> = Vec::new();
-    match k.out_ty {
-        Ty::F32 => out_f.reserve_exact(n),
-        Ty::S32 => out_i.reserve_exact(n),
-        Ty::Pred => out_p.reserve_exact(n),
-    }
-
+    let ctx = FusedCtx::new(k, inputs.iter().map(|t| Some(*t)).collect(), n, None)?;
+    let mut s = Scratch::new();
+    let mut sink = OutSink::new(k.out_ty, n);
     let mut lo = 0usize;
     while lo < n {
         let hi = (lo + BLOCK).min(n);
-        for e in &k.prog {
-            step(e, inputs, &scalars, lo, hi, &mut stack, &mut pool)?;
-        }
-        let r = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: empty result stack"))?;
-        if !stack.is_empty() {
-            bail!("fused: {} stray lanes after block", stack.len());
-        }
-        match (&r, k.out_ty) {
-            (Lane::F(v), Ty::F32) => out_f.extend_from_slice(v),
-            (Lane::I(v), Ty::S32) => out_i.extend_from_slice(v),
-            (Lane::P(v), Ty::Pred) => out_p.extend_from_slice(v),
-            _ => bail!("fused: result lane type mismatch"),
-        }
-        pool.put(r);
+        let lane = ctx.eval_block(lo, hi, None, &mut s)?;
+        sink.push(&lane)?;
+        s.recycle(lane);
         lo = hi;
     }
-
-    Ok(match k.out_ty {
-        Ty::F32 => Tensor::f32(out_f, out_dims.to_vec()),
-        Ty::S32 => Tensor::i32(out_i, out_dims.to_vec()),
-        Ty::Pred => Tensor::pred(out_p, out_dims.to_vec()),
-    })
+    sink.finish(out_dims)
 }
 
-fn step(
-    e: &EInstr,
-    inputs: &[&Tensor],
-    scalars: &[Option<Scalar>],
-    lo: usize,
-    hi: usize,
-    stack: &mut Vec<Lane>,
-    pool: &mut LanePool,
-) -> Result<()> {
-    let len = hi - lo;
-    match e {
-        EInstr::Load(i) => {
-            let lane = match &inputs[*i as usize].data {
-                Data::F32(v) => {
-                    let mut b = pool.take_f();
-                    b.clear();
-                    b.extend_from_slice(&v[lo..hi]);
-                    Lane::F(b)
-                }
-                Data::I32(v) => {
-                    let mut b = pool.take_i();
-                    b.clear();
-                    b.extend_from_slice(&v[lo..hi]);
-                    Lane::I(b)
-                }
-                Data::Pred(v) => {
-                    let mut b = pool.take_p();
-                    b.clear();
-                    b.extend_from_slice(&v[lo..hi]);
-                    Lane::P(b)
-                }
-            };
-            stack.push(lane);
-        }
-        EInstr::Splat(i) => {
-            let lane = match scalars[*i as usize] {
-                Some(Scalar::F(x)) => {
-                    let mut b = pool.take_f();
-                    b.clear();
-                    b.resize(len, x);
-                    Lane::F(b)
-                }
-                Some(Scalar::I(x)) => {
-                    let mut b = pool.take_i();
-                    b.clear();
-                    b.resize(len, x);
-                    Lane::I(b)
-                }
-                Some(Scalar::P(x)) => {
-                    let mut b = pool.take_p();
-                    b.clear();
-                    b.resize(len, x);
-                    Lane::P(b)
-                }
-                None => bail!("fused: splat input {i} missing scalar"),
-            };
-            stack.push(lane);
-        }
-        EInstr::Bin(op) => {
-            let b = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: bin underflow"))?;
-            let a = stack.last_mut().ok_or_else(|| anyhow::anyhow!("fused: bin underflow"))?;
-            match (a, &b) {
-                (Lane::F(x), Lane::F(y)) => {
-                    let f = bin_f32(*op)?;
-                    for (xa, &yb) in x.iter_mut().zip(y.iter()) {
-                        *xa = f(*xa, yb);
-                    }
-                }
-                (Lane::I(x), Lane::I(y)) => {
-                    let f = bin_i32(*op)?;
-                    for (xa, &yb) in x.iter_mut().zip(y.iter()) {
-                        *xa = f(*xa, yb);
-                    }
-                }
-                (Lane::P(x), Lane::P(y)) => {
-                    let f = bin_pred(*op)?;
-                    for (xa, &yb) in x.iter_mut().zip(y.iter()) {
-                        *xa = f(*xa, yb);
-                    }
-                }
-                _ => bail!("fused: bin lane type mismatch"),
+/// Does this tensor own its storage uniquely (safe to overwrite)?
+pub fn unique_storage(t: &Tensor) -> bool {
+    match &t.data {
+        Data::F32(a) => std::sync::Arc::strong_count(a) == 1,
+        Data::I32(a) => std::sync::Arc::strong_count(a) == 1,
+        Data::Pred(a) => std::sync::Arc::strong_count(a) == 1,
+    }
+}
+
+/// Execute a fused kernel writing the output **into** `reuse` — a dying,
+/// uniquely-owned input (kernel position `pos`, `inputs[pos]` must be
+/// `None`) whose element count and dtype match the output. Each block is
+/// read before it is overwritten and later blocks never read earlier
+/// elements, so the result is bitwise identical to [`run_fused`].
+pub fn run_fused_in_place(
+    k: &FusedKernel,
+    inputs: Vec<Option<&Tensor>>,
+    pos: u16,
+    reuse: Tensor,
+    out_dims: &[usize],
+) -> Result<Tensor> {
+    let n: usize = out_dims.iter().product();
+    if reuse.elements() != n || reuse.data.ty() != k.out_ty {
+        bail!("fused in-place reuse: size or dtype mismatch");
+    }
+    let ctx = FusedCtx::new(k, inputs, n, Some(pos))?;
+    let mut s = Scratch::new();
+    match reuse.data {
+        Data::F32(arc) => {
+            let mut buf = std::sync::Arc::try_unwrap(arc)
+                .map_err(|_| anyhow!("fused in-place reuse of shared storage"))?;
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + BLOCK).min(n);
+                let lane = ctx.eval_block(lo, hi, Some(BlockSlice::F(&buf[lo..hi])), &mut s)?;
+                let Lane::F(v) = &lane else { bail!("fused in-place: lane type") };
+                buf[lo..hi].copy_from_slice(v);
+                s.recycle(lane);
+                lo = hi;
             }
-            pool.put(b);
+            Ok(Tensor::f32(buf, out_dims.to_vec()))
         }
-        EInstr::Cmp(dir) => {
-            let b = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: cmp underflow"))?;
-            let a = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: cmp underflow"))?;
-            let mut out = pool.take_p();
-            out.clear();
-            fn cmp<T: PartialOrd + Copy>(dir: CmpDir, a: &[T], b: &[T], out: &mut Vec<bool>) {
-                let f = super::eval::cmp_of::<T>(dir);
-                out.extend(a.iter().zip(b).map(|(&x, &y)| f(x, y)));
+        Data::I32(arc) => {
+            let mut buf = std::sync::Arc::try_unwrap(arc)
+                .map_err(|_| anyhow!("fused in-place reuse of shared storage"))?;
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + BLOCK).min(n);
+                let lane = ctx.eval_block(lo, hi, Some(BlockSlice::I(&buf[lo..hi])), &mut s)?;
+                let Lane::I(v) = &lane else { bail!("fused in-place: lane type") };
+                buf[lo..hi].copy_from_slice(v);
+                s.recycle(lane);
+                lo = hi;
             }
-            match (&a, &b) {
-                (Lane::F(x), Lane::F(y)) => cmp(*dir, x, y, &mut out),
-                (Lane::I(x), Lane::I(y)) => cmp(*dir, x, y, &mut out),
-                _ => bail!("fused: cmp lane type mismatch"),
-            }
-            stack.push(Lane::P(out));
-            pool.put(a);
-            pool.put(b);
+            Ok(Tensor::i32(buf, out_dims.to_vec()))
         }
-        EInstr::Sel => {
-            let f = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: sel underflow"))?;
-            let mut t = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: sel underflow"))?;
-            let p = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: sel underflow"))?;
-            let Lane::P(pv) = &p else { bail!("fused: sel pred lane") };
-            match (&mut t, &f) {
-                (Lane::F(tv), Lane::F(fv)) => {
-                    for ((tx, &fx), &c) in tv.iter_mut().zip(fv.iter()).zip(pv.iter()) {
-                        if !c {
-                            *tx = fx;
-                        }
-                    }
-                }
-                (Lane::I(tv), Lane::I(fv)) => {
-                    for ((tx, &fx), &c) in tv.iter_mut().zip(fv.iter()).zip(pv.iter()) {
-                        if !c {
-                            *tx = fx;
-                        }
-                    }
-                }
-                (Lane::P(tv), Lane::P(fv)) => {
-                    for ((tx, &fx), &c) in tv.iter_mut().zip(fv.iter()).zip(pv.iter()) {
-                        if !c {
-                            *tx = fx;
-                        }
-                    }
-                }
-                _ => bail!("fused: sel lane type mismatch"),
+        Data::Pred(arc) => {
+            let mut buf = std::sync::Arc::try_unwrap(arc)
+                .map_err(|_| anyhow!("fused in-place reuse of shared storage"))?;
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + BLOCK).min(n);
+                let lane = ctx.eval_block(lo, hi, Some(BlockSlice::P(&buf[lo..hi])), &mut s)?;
+                let Lane::P(v) = &lane else { bail!("fused in-place: lane type") };
+                buf[lo..hi].copy_from_slice(v);
+                s.recycle(lane);
+                lo = hi;
             }
-            stack.push(t);
-            pool.put(p);
-            pool.put(f);
-        }
-        EInstr::Un(op) => {
-            let a = stack.last_mut().ok_or_else(|| anyhow::anyhow!("fused: un underflow"))?;
-            match (a, op) {
-                (Lane::F(x), _) => {
-                    let f = un_f32(*op);
-                    for v in x.iter_mut() {
-                        *v = f(*v);
-                    }
-                }
-                (Lane::I(x), UnOp::Neg) => {
-                    for v in x.iter_mut() {
-                        *v = v.wrapping_neg();
-                    }
-                }
-                _ => bail!("fused: unary lane type mismatch"),
-            }
-        }
-        EInstr::Cvt(ty) => {
-            use super::eval::{cast_f32_i32, cast_i32_f32, cast_pred_f32, cast_pred_i32};
-            let a = stack.pop().ok_or_else(|| anyhow::anyhow!("fused: cvt underflow"))?;
-            let lane = match (a, ty) {
-                (Lane::F(x), Ty::F32) => Lane::F(x),
-                (Lane::I(x), Ty::S32) => Lane::I(x),
-                (a, Ty::F32) => {
-                    let mut out = pool.take_f();
-                    out.clear();
-                    match &a {
-                        Lane::I(x) => out.extend(x.iter().map(|&v| cast_i32_f32(v))),
-                        Lane::P(x) => out.extend(x.iter().map(|&b| cast_pred_f32(b))),
-                        Lane::F(_) => unreachable!(),
-                    }
-                    pool.put(a);
-                    Lane::F(out)
-                }
-                (a, Ty::S32) => {
-                    let mut out = pool.take_i();
-                    out.clear();
-                    match &a {
-                        Lane::F(x) => out.extend(x.iter().map(|&v| cast_f32_i32(v))),
-                        Lane::P(x) => out.extend(x.iter().map(|&b| cast_pred_i32(b))),
-                        Lane::I(_) => unreachable!(),
-                    }
-                    pool.put(a);
-                    Lane::I(out)
-                }
-                (_, Ty::Pred) => bail!("fused: convert to pred"),
-            };
-            stack.push(lane);
+            Ok(Tensor::pred(buf, out_dims.to_vec()))
         }
     }
-    Ok(())
+}
+
+/// Typed output accumulator for blocked execution.
+pub struct OutSink {
+    ty: Ty,
+    f: Vec<f32>,
+    i: Vec<i32>,
+    p: Vec<bool>,
+}
+
+impl OutSink {
+    pub fn new(ty: Ty, n: usize) -> OutSink {
+        let mut s = OutSink { ty, f: Vec::new(), i: Vec::new(), p: Vec::new() };
+        match ty {
+            Ty::F32 => s.f.reserve_exact(n),
+            Ty::S32 => s.i.reserve_exact(n),
+            Ty::Pred => s.p.reserve_exact(n),
+        }
+        s
+    }
+
+    pub fn push(&mut self, lane: &Lane) -> Result<()> {
+        match (lane, self.ty) {
+            (Lane::F(v), Ty::F32) => self.f.extend_from_slice(v),
+            (Lane::I(v), Ty::S32) => self.i.extend_from_slice(v),
+            (Lane::P(v), Ty::Pred) => self.p.extend_from_slice(v),
+            _ => bail!("fused: result lane type mismatch"),
+        }
+        Ok(())
+    }
+
+    pub fn finish(self, out_dims: &[usize]) -> Result<Tensor> {
+        Ok(match self.ty {
+            Ty::F32 => Tensor::f32(self.f, out_dims.to_vec()),
+            Ty::S32 => Tensor::i32(self.i, out_dims.to_vec()),
+            Ty::Pred => Tensor::pred(self.p, out_dims.to_vec()),
+        })
+    }
+}
+
+/// Whole-tensor fast path for one-op kernels (a single fused instruction
+/// over direct loads / one splat): skips the block loop and lane copies
+/// entirely. Returns `Ok(None)` when the program shape doesn't match —
+/// the generic path then handles it (including its error reporting).
+fn fast_single_op(
+    k: &FusedKernel,
+    inputs: &[&Tensor],
+    out_dims: &[usize],
+) -> Result<Option<Tensor>> {
+    if inputs.len() != k.n_inputs {
+        return Ok(None);
+    }
+    let n: usize = out_dims.iter().product();
+    // Any size precondition miss falls through to the generic path,
+    // which owns the error reporting.
+    let load = |i: &u16| inputs.get(*i as usize).copied().filter(|t| t.elements() == n);
+    let reshaped = |mut t: Tensor| {
+        t.dims = out_dims.to_vec();
+        t
+    };
+    match k.prog.as_slice() {
+        [EInstr::Load(a), EInstr::Un(u)] => {
+            let Some(ta) = load(a) else { return Ok(None) };
+            Ok(Some(reshaped(eval::unary(*u, ta)?)))
+        }
+        [EInstr::Load(a), EInstr::Load(b), EInstr::Bin(op)] => {
+            let (Some(ta), Some(tb)) = (load(a), load(b)) else { return Ok(None) };
+            Ok(Some(reshaped(eval::binary(*op, ta, tb)?)))
+        }
+        [EInstr::Load(a), EInstr::Splat(sc), EInstr::Bin(op)] => {
+            let (Some(ta), Some(ts)) = (load(a), inputs.get(*sc as usize).copied()) else {
+                return Ok(None);
+            };
+            scalar_bin(*op, ta, ts, false, out_dims)
+        }
+        [EInstr::Splat(sc), EInstr::Load(a), EInstr::Bin(op)] => {
+            let (Some(ta), Some(ts)) = (load(a), inputs.get(*sc as usize).copied()) else {
+                return Ok(None);
+            };
+            scalar_bin(*op, ta, ts, true, out_dims)
+        }
+        _ => Ok(None),
+    }
+}
+
+/// `f(x, s)` (or `f(s, x)` when `scalar_first`) over a whole tensor —
+/// the same scalar functions the bytecode applies, in the same operand
+/// order, so results are bitwise identical to the blocked path.
+fn scalar_bin(
+    op: BinOp,
+    x: &Tensor,
+    scalar: &Tensor,
+    scalar_first: bool,
+    out_dims: &[usize],
+) -> Result<Option<Tensor>> {
+    if scalar.elements() != 1 {
+        return Ok(None);
+    }
+    let dims = out_dims.to_vec();
+    Ok(Some(match (&x.data, &scalar.data) {
+        (Data::F32(v), Data::F32(sv)) => {
+            let f = bin_f32(op)?;
+            let s = sv[0];
+            let out: Vec<f32> = if scalar_first {
+                v.iter().map(|&a| f(s, a)).collect()
+            } else {
+                v.iter().map(|&a| f(a, s)).collect()
+            };
+            Tensor::f32(out, dims)
+        }
+        (Data::I32(v), Data::I32(sv)) => {
+            let f = bin_i32(op)?;
+            let s = sv[0];
+            let out: Vec<i32> = if scalar_first {
+                v.iter().map(|&a| f(s, a)).collect()
+            } else {
+                v.iter().map(|&a| f(a, s)).collect()
+            };
+            Tensor::i32(out, dims)
+        }
+        (Data::Pred(v), Data::Pred(sv)) => {
+            let f = bin_pred(op)?;
+            let s = sv[0];
+            let out: Vec<bool> = if scalar_first {
+                v.iter().map(|&a| f(s, a)).collect()
+            } else {
+                v.iter().map(|&a| f(a, s)).collect()
+            };
+            Tensor::pred(out, dims)
+        }
+        _ => return Ok(None),
+    }))
 }
 
 #[cfg(test)]
@@ -605,14 +1157,18 @@ mod tests {
         (0..n).map(|i| (i as f32 * 0.37 + seed).sin()).collect()
     }
 
+    fn kernel(prog: Vec<EInstr>, n_inputs: usize, out_ty: Ty, inner: usize) -> FusedKernel {
+        FusedKernel { prog, n_inputs, out_ty, inner, ops: vec![] }
+    }
+
     #[test]
     fn hand_built_kernel_matches_scalar_reference_across_blocks() {
         // out = (-(a + b)) * a, over more than one block.
         let n = BLOCK * 2 + 177;
         let a = f32s(n, 0.1);
         let b = f32s(n, 2.5);
-        let k = FusedKernel {
-            prog: vec![
+        let k = kernel(
+            vec![
                 EInstr::Load(0),
                 EInstr::Load(1),
                 EInstr::Bin(BinOp::Add),
@@ -620,10 +1176,10 @@ mod tests {
                 EInstr::Load(0),
                 EInstr::Bin(BinOp::Mul),
             ],
-            n_inputs: 2,
-            out_ty: Ty::F32,
-            ops: vec!["add", "negate", "multiply"],
-        };
+            2,
+            Ty::F32,
+            0,
+        );
         let ta = Tensor::f32(a.clone(), vec![n]);
         let tb = Tensor::f32(b.clone(), vec![n]);
         let out = run_fused(&k, &[&ta, &tb], &[n]).unwrap();
@@ -637,8 +1193,8 @@ mod tests {
         // out_f32 = convert_s32(select(i < 0, splat(100), i))
         let n = BLOCK + 5;
         let iv: Vec<i32> = (0..n as i32).map(|i| i - 600).collect();
-        let k = FusedKernel {
-            prog: vec![
+        let k = kernel(
+            vec![
                 EInstr::Load(0),
                 EInstr::Splat(1),
                 EInstr::Cmp(CmpDir::Lt),
@@ -647,10 +1203,10 @@ mod tests {
                 EInstr::Sel,
                 EInstr::Cvt(Ty::F32),
             ],
-            n_inputs: 3,
-            out_ty: Ty::F32,
-            ops: vec!["compare", "select", "convert"],
-        };
+            3,
+            Ty::F32,
+            0,
+        );
         let ti = Tensor::i32(iv.clone(), vec![n]);
         let zero = Tensor::i32(vec![0], vec![]);
         let hundred = Tensor::i32(vec![100], vec![]);
@@ -663,16 +1219,161 @@ mod tests {
 
     #[test]
     fn input_size_validation() {
-        let k = FusedKernel {
-            prog: vec![EInstr::Load(0), EInstr::Un(UnOp::Neg)],
-            n_inputs: 1,
-            out_ty: Ty::F32,
-            ops: vec!["negate"],
-        };
+        let k = kernel(vec![EInstr::Load(0), EInstr::Un(UnOp::Neg)], 1, Ty::F32, 0);
         let wrong = Tensor::f32(vec![1.0, 2.0], vec![2]);
         assert!(run_fused(&k, &[&wrong], &[3]).is_err());
         let empty = Tensor::f32(vec![], vec![0]);
         let out = run_fused(&k, &[&empty], &[0]).unwrap();
         assert_eq!(out.elements(), 0);
+    }
+
+    #[test]
+    fn tile_and_rep_leaves_match_broadcast_semantics() {
+        // out[r, j] = (x[r, j] + bias[j]) * mask_as_f32... keep it f32:
+        // out = x + tile(bias) + rep(col)
+        let (m, inner) = (7usize, 5usize);
+        let n = m * inner;
+        let x = f32s(n, 0.3);
+        let bias = f32s(inner, 1.1);
+        let col = f32s(m, 2.2);
+        let k = kernel(
+            vec![
+                EInstr::Load(0),
+                EInstr::Tile(1),
+                EInstr::Bin(BinOp::Add),
+                EInstr::Rep(2),
+                EInstr::Bin(BinOp::Add),
+            ],
+            3,
+            Ty::F32,
+            inner,
+        );
+        let tx = Tensor::f32(x.clone(), vec![m, inner]);
+        let tb = Tensor::f32(bias.clone(), vec![inner]);
+        let tc = Tensor::f32(col.clone(), vec![m]);
+        let out = run_fused(&k, &[&tx, &tb, &tc], &[m, inner]).unwrap();
+        for r in 0..m {
+            for j in 0..inner {
+                assert_eq!(out.f().unwrap()[r * inner + j], x[r * inner + j] + bias[j] + col[r]);
+            }
+        }
+        // The modular index math must hold at arbitrary (non-row-aligned)
+        // block offsets too: evaluate an unaligned sub-range directly.
+        let ctx = FusedCtx::new(&k, vec![Some(&tx), Some(&tb), Some(&tc)], n, None).unwrap();
+        let mut s = Scratch::new();
+        let (lo, hi) = (3usize, n - 2);
+        let lane = ctx.eval_block(lo, hi, None, &mut s).unwrap();
+        let Lane::F(v) = &lane else { panic!("lane type") };
+        for (t, &got) in v.iter().enumerate() {
+            let i = lo + t;
+            assert_eq!(got, x[i] + bias[i % inner] + col[i / inner]);
+        }
+    }
+
+    #[test]
+    fn hot_block_feeds_the_marked_input() {
+        // out = hot + c, where the hot input is supplied per block.
+        let n = 10usize;
+        let c = f32s(n, 0.9);
+        let k = kernel(
+            vec![EInstr::Load(0), EInstr::Load(1), EInstr::Bin(BinOp::Add)],
+            2,
+            Ty::F32,
+            0,
+        );
+        let tc = Tensor::f32(c.clone(), vec![n]);
+        let ctx = FusedCtx::new(&k, vec![None, Some(&tc)], n, Some(0)).unwrap();
+        let mut s = Scratch::new();
+        let hot: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        let lane = ctx.eval_block(2, 6, Some(BlockSlice::F(&hot)), &mut s).unwrap();
+        let Lane::F(v) = &lane else { panic!("lane type") };
+        for t in 0..4 {
+            assert_eq!(v[t], hot[t] + c[2 + t]);
+        }
+        // A missing hot block is an error, not a silent misread.
+        assert!(ctx.eval_block(2, 6, None, &mut s).is_err());
+    }
+
+    #[test]
+    fn in_place_reuse_is_bitwise_equal_to_allocating() {
+        // out = -(x) * y with x's buffer reused; compare vs run_fused.
+        let n = BLOCK + 33;
+        let x = f32s(n, 0.2);
+        let y = f32s(n, 4.4);
+        let k = kernel(
+            vec![
+                EInstr::Load(0),
+                EInstr::Un(UnOp::Neg),
+                EInstr::Load(1),
+                EInstr::Bin(BinOp::Mul),
+            ],
+            2,
+            Ty::F32,
+            0,
+        );
+        let tx = Tensor::f32(x.clone(), vec![n]);
+        let ty_ = Tensor::f32(y.clone(), vec![n]);
+        let want = run_fused(&k, &[&tx, &ty_], &[n]).unwrap();
+        let reuse = Tensor::f32(x, vec![n]);
+        let got = run_fused_in_place(&k, vec![None, Some(&ty_)], 0, reuse, &[n]).unwrap();
+        assert_eq!(got.f().unwrap(), want.f().unwrap());
+    }
+
+    #[test]
+    fn in_place_refuses_shared_storage() {
+        let k = kernel(vec![EInstr::Load(0), EInstr::Un(UnOp::Neg)], 1, Ty::F32, 0);
+        let t = Tensor::f32(vec![1.0, 2.0], vec![2]);
+        let alias = t.clone(); // shares the Arc
+        assert!(!unique_storage(&t));
+        assert!(run_fused_in_place(&k, vec![None], 0, t, &[2]).is_err());
+        drop(alias);
+    }
+
+    #[test]
+    fn fast_paths_match_blocked_execution() {
+        let n = BLOCK + 7;
+        let a = f32s(n, 0.5);
+        let b = f32s(n, 1.5);
+        let ta = Tensor::f32(a.clone(), vec![n]);
+        let tb = Tensor::f32(b.clone(), vec![n]);
+        let s = Tensor::f32(vec![2.5], vec![]);
+        // unary
+        let k1 = kernel(vec![EInstr::Load(0), EInstr::Un(UnOp::Tanh)], 1, Ty::F32, 0);
+        let out = run_fused(&k1, &[&ta], &[n]).unwrap();
+        for (&o, &x) in out.f().unwrap().iter().zip(&a) {
+            assert_eq!(o, x.tanh());
+        }
+        // binary
+        let k2 = kernel(
+            vec![EInstr::Load(0), EInstr::Load(1), EInstr::Bin(BinOp::Sub)],
+            2,
+            Ty::F32,
+            0,
+        );
+        let out = run_fused(&k2, &[&ta, &tb], &[n]).unwrap();
+        for ((&o, &x), &y) in out.f().unwrap().iter().zip(&a).zip(&b) {
+            assert_eq!(o, x - y);
+        }
+        // scalar on either side of a non-commutative op
+        let k3 = kernel(
+            vec![EInstr::Load(0), EInstr::Splat(1), EInstr::Bin(BinOp::Div)],
+            2,
+            Ty::F32,
+            0,
+        );
+        let out = run_fused(&k3, &[&ta, &s], &[n]).unwrap();
+        for (&o, &x) in out.f().unwrap().iter().zip(&a) {
+            assert_eq!(o, x / 2.5);
+        }
+        let k4 = kernel(
+            vec![EInstr::Splat(1), EInstr::Load(0), EInstr::Bin(BinOp::Div)],
+            2,
+            Ty::F32,
+            0,
+        );
+        let out = run_fused(&k4, &[&ta, &s], &[n]).unwrap();
+        for (&o, &x) in out.f().unwrap().iter().zip(&a) {
+            assert_eq!(o, 2.5 / x);
+        }
     }
 }

@@ -27,7 +27,7 @@
 //!   `baselines::scatter::scatter_add_serial` defines and
 //!   `tests/grad_equivalence.rs` already proves for the grad subsystem.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -36,6 +36,7 @@ use crate::grad::sharded::scatter_add_sharded;
 use crate::grad::ShardPlan;
 use crate::util::threadpool::ThreadPool;
 
+use super::fusion::{BlockSlice, FusedCtx, Lane, OutSink, Scratch, BLOCK};
 use super::parser::{BinOp, GatherDims, Module, Op, ScatterDims};
 use super::value::{next_index, strides, Data, Tensor, Ty};
 
@@ -467,13 +468,8 @@ pub fn gather(
             let rows = out_dims[0];
             let src = src.as_slice();
             let mut out = vec![0f32; rows * d];
-            let take = |lo: usize, hi: usize, dst: &mut [f32]| {
-                for r in lo..hi {
-                    let row = clamp_start(ix[r] as i64, v, 1);
-                    dst[(r - lo) * d..(r - lo + 1) * d]
-                        .copy_from_slice(&src[row * d..(row + 1) * d]);
-                }
-            };
+            let take =
+                |lo: usize, hi: usize, dst: &mut [f32]| take_rows(src, v, d, ix, lo, hi, dst);
             if let Some(pool) = par.grab(rows * d, GATHER_PAR_MIN_ELEMS) {
                 let t = par.threads.min(rows).max(1);
                 if t > 1 {
@@ -544,6 +540,380 @@ pub fn gather(
         Data::I32(v) => Tensor::i32(run(v.as_slice(), n, out_dims, &mut at)?, dims),
         Data::Pred(v) => Tensor::pred(run(v.as_slice(), n, out_dims, &mut at)?, dims),
     })
+}
+
+/// Copy clamped rows `[lo, hi)` of the row-take gather into `dst`
+/// (length `(hi-lo)·d`) — shared by the plain fast path and the fused
+/// epilogue path.
+fn take_rows(src: &[f32], v: usize, d: usize, ix: &[i32], lo: usize, hi: usize, dst: &mut [f32]) {
+    for r in lo..hi {
+        let row = clamp_start(ix[r] as i64, v, 1);
+        dst[(r - lo) * d..(r - lo + 1) * d].copy_from_slice(&src[row * d..(row + 1) * d]);
+    }
+}
+
+// ------------------------------------------------------- consumer fusion
+
+/// Rank-2 matmul whose output rows stream through a fused epilogue chain
+/// (`ctx`, hot input = the dot's output block) while they are still hot —
+/// the bias-add/tanh pattern never materializes the raw dot result.
+/// Row blocks split across threads exactly like [`dot`]; per-element
+/// accumulation and epilogue order are block-independent, so parallel ==
+/// serial bitwise.
+pub fn dot_fused(
+    a: &Tensor,
+    b: &Tensor,
+    lc: usize,
+    rc: usize,
+    ctx: &FusedCtx,
+    out_dims: &[usize],
+    par: Par,
+) -> Result<Tensor> {
+    if a.dims.len() != 2 || b.dims.len() != 2 {
+        bail!("fused dot: only rank-2 operands supported ({:?} x {:?})", a.dims, b.dims);
+    }
+    let k = a.dims[lc];
+    if b.dims[rc] != k {
+        bail!("fused dot: contracting {k} vs {}", b.dims[rc]);
+    }
+    let m = a.dims[1 - lc];
+    let n = b.dims[1 - rc];
+    if out_dims.len() != 2 || out_dims[0] != m || out_dims[1] != n {
+        bail!("fused dot: epilogue shape {:?} vs dot [{m}, {n}]", out_dims);
+    }
+    let af = a.f()?;
+    let bf = b.f()?;
+    let total = m * n;
+    if ctx.out_ty() == Ty::F32 {
+        let mut out = vec![0f32; total];
+        let flops = 2usize.saturating_mul(total).saturating_mul(k);
+        if let Some(pool) = par.grab(flops, DOT_PAR_MIN_FLOPS) {
+            let t = par.threads.min(m).max(1);
+            if t > 1 {
+                let chunk = m.div_ceil(t);
+                let wp = SendPtr(out.as_mut_ptr());
+                let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+                pool.scope_run(t, &|ti| {
+                    let lo = ti * chunk;
+                    let hi = ((ti + 1) * chunk).min(m);
+                    if lo >= hi {
+                        return;
+                    }
+                    // SAFETY: output rows [lo, hi) belong to task ti alone.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(wp.0.add(lo * n), (hi - lo) * n)
+                    };
+                    if let Err(e) = dot_epilogue_rows(af, bf, lc, rc, (m, n, k), ctx, lo, hi, dst)
+                    {
+                        let mut g = err.lock().unwrap();
+                        if g.is_none() {
+                            *g = Some(e);
+                        }
+                    }
+                });
+                if let Some(e) = err.into_inner().unwrap() {
+                    return Err(e);
+                }
+                return Ok(Tensor::f32(out, out_dims.to_vec()));
+            }
+        }
+        dot_epilogue_rows(af, bf, lc, rc, (m, n, k), ctx, 0, m, &mut out)?;
+        return Ok(Tensor::f32(out, out_dims.to_vec()));
+    }
+    // Non-f32 epilogue output (convert chains): serial blocked pass.
+    let mut sink = OutSink::new(ctx.out_ty(), total);
+    let mut scratch = Scratch::new();
+    let rows_per_block = (BLOCK / n.max(1)).max(1);
+    let mut buf = vec![0f32; rows_per_block * n];
+    let mut r0 = 0usize;
+    while r0 < m {
+        let r1 = (r0 + rows_per_block).min(m);
+        let len = (r1 - r0) * n;
+        buf[..len].fill(0.0);
+        dot_rows(af, bf, lc, rc, (m, n, k), r0, r1, &mut buf[..len]);
+        let lane =
+            ctx.eval_block(r0 * n, r1 * n, Some(BlockSlice::F(&buf[..len])), &mut scratch)?;
+        sink.push(&lane)?;
+        scratch.recycle(lane);
+        r0 = r1;
+    }
+    sink.finish(out_dims)
+}
+
+/// Rows `[lo, hi)`: matmul a block of output rows into a scratch buffer,
+/// run the epilogue on it while hot, write the finished block to `dst`.
+#[allow(clippy::too_many_arguments)]
+fn dot_epilogue_rows(
+    af: &[f32],
+    bf: &[f32],
+    lc: usize,
+    rc: usize,
+    (m, n, k): (usize, usize, usize),
+    ctx: &FusedCtx,
+    lo: usize,
+    hi: usize,
+    dst: &mut [f32],
+) -> Result<()> {
+    let rows_per_block = (BLOCK / n.max(1)).max(1);
+    let mut scratch = Scratch::new();
+    let mut buf = vec![0f32; rows_per_block * n];
+    let mut r0 = lo;
+    while r0 < hi {
+        let r1 = (r0 + rows_per_block).min(hi);
+        let len = (r1 - r0) * n;
+        buf[..len].fill(0.0);
+        dot_rows(af, bf, lc, rc, (m, n, k), r0, r1, &mut buf[..len]);
+        let lane =
+            ctx.eval_block(r0 * n, r1 * n, Some(BlockSlice::F(&buf[..len])), &mut scratch)?;
+        let Lane::F(v) = &lane else { bail!("fused dot epilogue: lane type mismatch") };
+        dst[(r0 - lo) * n..(r1 - lo) * n].copy_from_slice(v);
+        scratch.recycle(lane);
+        r0 = r1;
+    }
+    Ok(())
+}
+
+/// Row-take gather (`out[r] = operand[clamp(ix[r])]`) whose gathered
+/// rows stream through a fused epilogue chain without materializing the
+/// raw gather output — the `_take` guard pattern (validity mask select,
+/// NaN splat) runs on cache-hot rows.
+pub fn gather_rows_fused(
+    operand: &Tensor,
+    indices: &Tensor,
+    ctx: &FusedCtx,
+    out_dims: &[usize],
+    par: Par,
+) -> Result<Tensor> {
+    if out_dims.len() != 2 || operand.dims.len() != 2 || operand.dims[1] != out_dims[1] {
+        bail!("fused gather: not the row-take pattern ({:?} -> {:?})", operand.dims, out_dims);
+    }
+    let (rows, d) = (out_dims[0], out_dims[1]);
+    let v = operand.dims[0];
+    let src = operand.f()?;
+    let Some(ix) = linear_row_indices(indices, 1, rows) else {
+        bail!("fused gather: indices are not linear row ids");
+    };
+    let total = rows * d;
+    if ctx.out_ty() == Ty::F32 {
+        let mut out = vec![0f32; total];
+        if let Some(pool) = par.grab(total, GATHER_PAR_MIN_ELEMS) {
+            let t = par.threads.min(rows).max(1);
+            if t > 1 {
+                let chunk = rows.div_ceil(t);
+                let wp = SendPtr(out.as_mut_ptr());
+                let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+                pool.scope_run(t, &|ti| {
+                    let lo = ti * chunk;
+                    let hi = ((ti + 1) * chunk).min(rows);
+                    if lo >= hi {
+                        return;
+                    }
+                    // SAFETY: rows [lo, hi) of out are task-exclusive.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(wp.0.add(lo * d), (hi - lo) * d)
+                    };
+                    if let Err(e) = gather_epilogue_rows(src, v, d, ix, ctx, lo, hi, dst) {
+                        let mut g = err.lock().unwrap();
+                        if g.is_none() {
+                            *g = Some(e);
+                        }
+                    }
+                });
+                if let Some(e) = err.into_inner().unwrap() {
+                    return Err(e);
+                }
+                return Ok(Tensor::f32(out, out_dims.to_vec()));
+            }
+        }
+        gather_epilogue_rows(src, v, d, ix, ctx, 0, rows, &mut out)?;
+        return Ok(Tensor::f32(out, out_dims.to_vec()));
+    }
+    let mut sink = OutSink::new(ctx.out_ty(), total);
+    let mut scratch = Scratch::new();
+    let rows_per_block = (BLOCK / d.max(1)).max(1);
+    let mut buf = vec![0f32; rows_per_block * d];
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let r1 = (r0 + rows_per_block).min(rows);
+        let len = (r1 - r0) * d;
+        take_rows(src, v, d, ix, r0, r1, &mut buf[..len]);
+        let lane =
+            ctx.eval_block(r0 * d, r1 * d, Some(BlockSlice::F(&buf[..len])), &mut scratch)?;
+        sink.push(&lane)?;
+        scratch.recycle(lane);
+        r0 = r1;
+    }
+    sink.finish(out_dims)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gather_epilogue_rows(
+    src: &[f32],
+    v: usize,
+    d: usize,
+    ix: &[i32],
+    ctx: &FusedCtx,
+    lo: usize,
+    hi: usize,
+    dst: &mut [f32],
+) -> Result<()> {
+    let rows_per_block = (BLOCK / d.max(1)).max(1);
+    let mut scratch = Scratch::new();
+    let mut buf = vec![0f32; rows_per_block * d];
+    let mut r0 = lo;
+    while r0 < hi {
+        let r1 = (r0 + rows_per_block).min(hi);
+        let len = (r1 - r0) * d;
+        take_rows(src, v, d, ix, r0, r1, &mut buf[..len]);
+        let lane =
+            ctx.eval_block(r0 * d, r1 * d, Some(BlockSlice::F(&buf[..len])), &mut scratch)?;
+        let Lane::F(vv) = &lane else { bail!("fused gather epilogue: lane type mismatch") };
+        dst[(r0 - lo) * d..(r1 - lo) * d].copy_from_slice(vv);
+        scratch.recycle(lane);
+        r0 = r1;
+    }
+    Ok(())
+}
+
+/// Trailing-dims reduce whose input is a fused prologue chain evaluated
+/// per block inside the fold loop — the reduce-of-elementwise pattern
+/// (hinge-loss max/sub chains, validity-mask `and` reductions) never
+/// materializes its input. Fold order per output element is identical to
+/// [`reduce`]'s trailing fast path, serial or threaded.
+#[allow(clippy::too_many_arguments)]
+pub fn reduce_fused(
+    ctx: &FusedCtx,
+    src_ty: Ty,
+    bin: BinOp,
+    outer: usize,
+    inner: usize,
+    init: &Tensor,
+    out_dims: &[usize],
+    par: Par,
+) -> Result<Tensor> {
+    if init.elements() != 1 {
+        bail!("fused reduce: non-scalar init");
+    }
+    match (src_ty, &init.data) {
+        (Ty::F32, Data::F32(i0)) => {
+            let f: fn(f32, f32) -> f32 = match bin {
+                BinOp::Add => |a, b| a + b,
+                BinOp::Mul => |a, b| a * b,
+                BinOp::Max => f32::max,
+                BinOp::Min => f32::min,
+                _ => bail!("unsupported fused f32 reduce combiner"),
+            };
+            let data = fold_fused(ctx, outer, inner, i0[0], f, lane_f, par)?;
+            Ok(Tensor::f32(data, out_dims.to_vec()))
+        }
+        (Ty::S32, Data::I32(i0)) => {
+            let f: fn(i32, i32) -> i32 = match bin {
+                BinOp::Add => i32::wrapping_add,
+                BinOp::Max => i32::max,
+                BinOp::Min => i32::min,
+                _ => bail!("unsupported fused s32 reduce combiner"),
+            };
+            let data = fold_fused(ctx, outer, inner, i0[0], f, lane_i, par)?;
+            Ok(Tensor::i32(data, out_dims.to_vec()))
+        }
+        (Ty::Pred, Data::Pred(i0)) => {
+            let f: fn(bool, bool) -> bool = match bin {
+                BinOp::And => |a, b| a && b,
+                BinOp::Or => |a, b| a || b,
+                _ => bail!("unsupported fused pred reduce combiner"),
+            };
+            let data = fold_fused(ctx, outer, inner, i0[0], f, lane_p, par)?;
+            Ok(Tensor::pred(data, out_dims.to_vec()))
+        }
+        _ => bail!("fused reduce: init dtype mismatch"),
+    }
+}
+
+fn lane_f(l: &Lane) -> Result<&[f32]> {
+    match l {
+        Lane::F(v) => Ok(v),
+        _ => bail!("fused reduce: lane type mismatch"),
+    }
+}
+fn lane_i(l: &Lane) -> Result<&[i32]> {
+    match l {
+        Lane::I(v) => Ok(v),
+        _ => bail!("fused reduce: lane type mismatch"),
+    }
+}
+fn lane_p(l: &Lane) -> Result<&[bool]> {
+    match l {
+        Lane::P(v) => Ok(v),
+        _ => bail!("fused reduce: lane type mismatch"),
+    }
+}
+
+/// Fold contiguous prologue-evaluated runs of `inner` elements into
+/// `outer` outputs; output ranges split across threads above the
+/// threshold, each with its own scratch, same per-output fold order.
+fn fold_fused<T: Copy + Send + Sync>(
+    ctx: &FusedCtx,
+    outer: usize,
+    inner: usize,
+    init: T,
+    f: fn(T, T) -> T,
+    get: fn(&Lane) -> Result<&[T]>,
+    par: Par,
+) -> Result<Vec<T>> {
+    if inner == 0 || outer == 0 {
+        return Ok(vec![init; outer]);
+    }
+    let fold_range = |lo: usize, hi: usize, dst: &mut [T]| -> Result<()> {
+        let mut scratch = Scratch::new();
+        let ob = (BLOCK / inner).max(1);
+        let mut o0 = lo;
+        while o0 < hi {
+            let o1 = (o0 + ob).min(hi);
+            let lane = ctx.eval_block(o0 * inner, o1 * inner, None, &mut scratch)?;
+            let vals = get(&lane)?;
+            for o in o0..o1 {
+                let run = &vals[(o - o0) * inner..(o - o0 + 1) * inner];
+                let mut acc = init;
+                for &x in run {
+                    acc = f(acc, x);
+                }
+                dst[o - lo] = acc;
+            }
+            scratch.recycle(lane);
+            o0 = o1;
+        }
+        Ok(())
+    };
+    let mut out = vec![init; outer];
+    if let Some(pool) = par.grab(outer * inner, REDUCE_PAR_MIN_ELEMS) {
+        let t = par.threads.min(outer).max(1);
+        if t > 1 {
+            let chunk = outer.div_ceil(t);
+            let wp = SendPtr(out.as_mut_ptr());
+            let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+            pool.scope_run(t, &|ti| {
+                let lo = ti * chunk;
+                let hi = ((ti + 1) * chunk).min(outer);
+                if lo >= hi {
+                    return;
+                }
+                // SAFETY: out[lo..hi) is task-exclusive.
+                let dst = unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo) };
+                if let Err(e) = fold_range(lo, hi, dst) {
+                    let mut g = err.lock().unwrap();
+                    if g.is_none() {
+                        *g = Some(e);
+                    }
+                }
+            });
+            if let Some(e) = err.into_inner().unwrap() {
+                return Err(e);
+            }
+            return Ok(out);
+        }
+    }
+    fold_range(0, outer, &mut out)?;
+    Ok(out)
 }
 
 // ---------------------------------------------------------------- combiner
@@ -994,6 +1364,121 @@ mod tests {
         })) {
             assert_eq!(*o, want);
         }
+    }
+
+    use super::super::fusion::{EInstr, FusedKernel};
+    use super::super::parser::UnOp;
+
+    fn epi_kernel(prog: Vec<EInstr>, n_inputs: usize, inner: usize) -> FusedKernel {
+        FusedKernel { prog, n_inputs, out_ty: Ty::F32, inner, ops: vec![] }
+    }
+
+    #[test]
+    fn dot_fused_epilogue_matches_unfused_and_parallel_is_bitwise() {
+        // tanh(dot(a, b) + tile(bias)) vs the materialized sequence.
+        let mut rng = Rng::new(21);
+        let (m, k, n) = (96usize, 64usize, 48usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let ta = Tensor::f32(a, vec![m, k]);
+        let tb = Tensor::f32(b, vec![k, n]);
+        let tbias = Tensor::f32(bias.clone(), vec![n]);
+        let kern = epi_kernel(
+            vec![
+                EInstr::Load(0),
+                EInstr::Tile(1),
+                EInstr::Bin(BinOp::Add),
+                EInstr::Un(UnOp::Tanh),
+            ],
+            2,
+            n,
+        );
+        let raw = dot(&ta, &tb, 1, 0, Par::serial()).unwrap();
+        let want: Vec<f32> = raw
+            .f()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| (x + bias[i % n]).tanh())
+            .collect();
+        let ctx = FusedCtx::new(&kern, vec![None, Some(&tbias)], m * n, Some(0)).unwrap();
+        let serial = dot_fused(&ta, &tb, 1, 0, &ctx, &[m, n], Par::serial()).unwrap();
+        assert_eq!(serial.f().unwrap(), &want[..]);
+        assert!(2 * m * n * k >= DOT_PAR_MIN_FLOPS, "case must cross the parallel gate");
+        let pool = ThreadPool::new(4);
+        let par = dot_fused(&ta, &tb, 1, 0, &ctx, &[m, n], par_over(&pool)).unwrap();
+        assert_eq!(par.f().unwrap(), serial.f().unwrap(), "parallel must be bitwise");
+    }
+
+    #[test]
+    fn gather_rows_fused_epilogue_matches_unfused() {
+        let mut rng = Rng::new(31);
+        let (v, d, rows) = (200usize, 32usize, 1500usize);
+        let w: Vec<f32> = (0..v * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let operand = Tensor::f32(w.clone(), vec![v, d]);
+        let ix: Vec<i32> = (0..rows).map(|_| rng.below(v as u64) as i32).collect();
+        let indices = Tensor::i32(ix.clone(), vec![rows, 1]);
+        // negate(gathered rows) — simplest epilogue.
+        let kern = epi_kernel(vec![EInstr::Load(0), EInstr::Un(UnOp::Neg)], 1, d);
+        let ctx = FusedCtx::new(&kern, vec![None], rows * d, Some(0)).unwrap();
+        let serial = gather_rows_fused(&operand, &indices, &ctx, &[rows, d], Par::serial())
+            .unwrap();
+        for (r, &i) in ix.iter().enumerate() {
+            let row = (i as i64).clamp(0, v as i64 - 1) as usize;
+            for j in 0..d {
+                assert_eq!(serial.f().unwrap()[r * d + j], -w[row * d + j]);
+            }
+        }
+        assert!(rows * d >= GATHER_PAR_MIN_ELEMS);
+        let pool = ThreadPool::new(4);
+        let par = gather_rows_fused(&operand, &indices, &ctx, &[rows, d], par_over(&pool))
+            .unwrap();
+        assert_eq!(par.f().unwrap(), serial.f().unwrap(), "parallel must be bitwise");
+    }
+
+    #[test]
+    fn reduce_fused_prologue_matches_materialized_fold() {
+        let mut rng = Rng::new(41);
+        let (outer, inner) = (700usize, 128usize);
+        let x: Vec<f32> = (0..outer * inner).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+        let tx = Tensor::f32(x.clone(), vec![outer, inner]);
+        let init = Tensor::f32(vec![0.0], vec![]);
+        // reduce-add of exp(x) — the softmax denominator pattern.
+        let kern = epi_kernel(vec![EInstr::Load(0), EInstr::Un(UnOp::Exp)], 1, 0);
+        let ctx = FusedCtx::new(&kern, vec![Some(&tx)], outer * inner, None).unwrap();
+        let serial = reduce_fused(
+            &ctx,
+            Ty::F32,
+            BinOp::Add,
+            outer,
+            inner,
+            &init,
+            &[outer],
+            Par::serial(),
+        )
+        .unwrap();
+        for (o, got) in serial.f().unwrap().iter().enumerate() {
+            let mut acc = 0.0f32;
+            for j in 0..inner {
+                acc += x[o * inner + j].exp();
+            }
+            assert_eq!(*got, acc, "row {o}");
+        }
+        assert!(outer * inner >= REDUCE_PAR_MIN_ELEMS);
+        let pool = ThreadPool::new(8);
+        let par = reduce_fused(
+            &ctx,
+            Ty::F32,
+            BinOp::Add,
+            outer,
+            inner,
+            &init,
+            &[outer],
+            par_over(&pool),
+        )
+        .unwrap();
+        assert_eq!(par.f().unwrap(), serial.f().unwrap(), "parallel must be bitwise");
     }
 
     #[test]

@@ -65,6 +65,30 @@ fn env_profile() -> bool {
     )
 }
 
+/// `POLYGLOT_INTERP_FUSE=off|chains|full` pins the fusion level so a
+/// fusion regression can be bisected (`off` = one step per instruction,
+/// `chains` = elementwise chains only, `full` = consumer-side fusion —
+/// the default).
+fn env_fuse_mode() -> plan::FuseMode {
+    let Ok(raw) = std::env::var("POLYGLOT_INTERP_FUSE") else {
+        return plan::FuseMode::Full;
+    };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" => plan::FuseMode::Off,
+        "chains" => plan::FuseMode::Chains,
+        "" | "full" => plan::FuseMode::Full,
+        other => {
+            // A typo must not silently re-enable the thing being
+            // bisected; warn and take the safest reading.
+            eprintln!(
+                "[interp] POLYGLOT_INTERP_FUSE={other:?} unrecognized \
+                 (expected off|chains|full); compiling with fusion OFF"
+            );
+            plan::FuseMode::Off
+        }
+    }
+}
+
 #[derive(Default)]
 pub struct InterpBackend {
     /// Explicit thread budget; `None` resolves `POLYGLOT_INTERP_THREADS`
@@ -131,12 +155,24 @@ impl InterpExecutable {
         Self::from_text_cfg(text, threads, true)
     }
 
-    /// Full control: thread budget + fusion toggle (`fuse: false` keeps
-    /// one planned step per instruction — the equivalence tests' and
-    /// E12's "unfused" configuration).
+    /// Thread budget + fusion toggle (`fuse: false` keeps one planned
+    /// step per instruction — the equivalence tests' and E12's "unfused"
+    /// configuration; `true` compiles at the environment's fusion level,
+    /// `POLYGLOT_INTERP_FUSE`, default full).
     pub fn from_text_cfg(text: &str, threads: usize, fuse: bool) -> Result<InterpExecutable> {
+        let mode = if fuse { env_fuse_mode() } else { plan::FuseMode::Off };
+        Self::from_text_mode(text, threads, mode)
+    }
+
+    /// Full control: thread budget + explicit [`plan::FuseMode`]
+    /// (benches and tests that must not depend on the env knob).
+    pub fn from_text_mode(
+        text: &str,
+        threads: usize,
+        mode: plan::FuseMode,
+    ) -> Result<InterpExecutable> {
         let module = parser::parse_module(text)?;
-        let plan = plan::compile(&module, fuse)?;
+        let plan = plan::compile(&module, mode)?;
         Ok(InterpExecutable {
             module,
             plan,
@@ -191,6 +227,18 @@ impl InterpExecutable {
         self.stats.rows()
     }
 
+    /// `(fused, total)` non-control plan steps — `fused / total` is the
+    /// fusion coverage E12 and `profile_hotspots` report.
+    pub fn fusion_summary(&self) -> (u64, u64) {
+        self.plan.fusion_summary()
+    }
+
+    /// Total scheduled plan steps (the step-count acceptance metric:
+    /// consumer fusion shrinks this).
+    pub fn plan_step_count(&self) -> usize {
+        self.plan.step_count()
+    }
+
     pub fn set_profiling(&self, on: bool) {
         self.profile.set(on);
     }
@@ -236,6 +284,10 @@ impl Compiled for InterpExecutable {
     fn op_stats(&self) -> Vec<(String, u64, Duration)> {
         self.plan_op_stats().into_iter().map(|(l, c, d)| (l.to_string(), c, d)).collect()
     }
+
+    fn fusion_summary(&self) -> Option<(u64, u64)> {
+        Some(InterpExecutable::fusion_summary(self))
+    }
 }
 
 #[cfg(test)]
@@ -243,36 +295,44 @@ mod tests {
     use super::*;
     use crate::runtime::{lit_f32, lit_i32};
 
-    /// Run `text` through every engine configuration — compiled plan
-    /// (fused) at 1, 2 and 8 threads, compiled-unfused, and the
-    /// tree-walking reference — asserting all outputs are bitwise
-    /// identical, then return the fused single-thread outputs.
+    /// Run `text` through every engine configuration — compiled plan at
+    /// every fusion level and 1/2/8 threads, plus the tree-walking
+    /// reference — asserting all outputs are bitwise identical, then
+    /// return the fully-fused single-thread outputs.
     fn run_all(text: &str, inputs: &[&Literal]) -> Vec<Literal> {
+        use super::plan::FuseMode;
         let reference = InterpExecutable::from_text_threads(text, 1)
             .unwrap()
             .run_treewalk(inputs)
             .unwrap();
         let mut fused1 = None;
-        for (threads, fuse) in [(1usize, true), (2, true), (8, true), (1, false)] {
-            let exe = InterpExecutable::from_text_cfg(text, threads, fuse).unwrap();
+        for (threads, mode) in [
+            (1usize, FuseMode::Full),
+            (2, FuseMode::Full),
+            (8, FuseMode::Full),
+            (1, FuseMode::Chains),
+            (8, FuseMode::Chains),
+            (1, FuseMode::Off),
+        ] {
+            let exe = InterpExecutable::from_text_mode(text, threads, mode).unwrap();
             let got = exe.run(inputs).unwrap();
-            assert_eq!(got.len(), reference.len(), "t={threads} fuse={fuse}");
+            assert_eq!(got.len(), reference.len(), "t={threads} mode={mode:?}");
             for (g, w) in got.iter().zip(&reference) {
                 if let Ok(gf) = g.to_vec::<f32>() {
                     assert_eq!(
                         gf,
                         w.to_vec::<f32>().unwrap(),
-                        "plan (t={threads}, fuse={fuse}) diverged from tree-walk"
+                        "plan (t={threads}, mode={mode:?}) diverged from tree-walk"
                     );
                 } else {
                     assert_eq!(
                         g.to_vec::<i32>().unwrap(),
                         w.to_vec::<i32>().unwrap(),
-                        "plan (t={threads}, fuse={fuse}) diverged from tree-walk"
+                        "plan (t={threads}, mode={mode:?}) diverged from tree-walk"
                     );
                 }
             }
-            if threads == 1 && fuse {
+            if threads == 1 && mode == FuseMode::Full {
                 fused1 = Some(got);
             }
         }
@@ -629,6 +689,160 @@ ENTRY e.7 {
         let got = tw.run_treewalk(&[&a, &i]).unwrap()[0].to_vec::<f32>().unwrap();
         assert_eq!(got[0], 7.0);
         assert!(got[1].is_nan());
+    }
+
+    #[test]
+    fn reduce_of_elementwise_matches_reference() {
+        // Softmax-denominator shape: reduce-sum of exp(x) over the
+        // trailing dim, fused into the fold loop at FuseMode::Full.
+        let text = "HloModule m
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY e.9 {
+  Arg_0.5 = f32[3,4]{1,0} parameter(0)
+  exponential.6 = f32[3,4]{1,0} exponential(Arg_0.5)
+  constant.7 = f32[] constant(0)
+  ROOT reduce.8 = f32[3]{0} reduce(exponential.6, constant.7), dimensions={1}, to_apply=region_0.1
+}
+";
+        let x: Vec<f32> = (0..12).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        let a = lit_f32(&x, &[3, 4]).unwrap();
+        let got = run_all(text, &[&a]);
+        for (r, o) in got[0].to_vec::<f32>().unwrap().into_iter().enumerate() {
+            let mut want = 0.0f32;
+            for j in 0..4 {
+                want += x[r * 4 + j].exp();
+            }
+            assert_eq!(o, want, "row {r}");
+        }
+    }
+
+    #[test]
+    fn dot_epilogue_bias_tanh_matches_reference() {
+        // The forward hidden layer: tanh(x·w + tile(bias)), epilogue
+        // streamed per dot output-row block at FuseMode::Full.
+        let text = "HloModule m
+ENTRY e.8 {
+  Arg_0.1 = f32[4,3]{1,0} parameter(0)
+  Arg_1.2 = f32[3,2]{1,0} parameter(1)
+  dot.3 = f32[4,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  Arg_2.4 = f32[2]{0} parameter(2)
+  broadcast.5 = f32[4,2]{1,0} broadcast(Arg_2.4), dimensions={1}
+  add.6 = f32[4,2]{1,0} add(dot.3, broadcast.5)
+  ROOT tanh.7 = f32[4,2]{1,0} tanh(add.6)
+}
+";
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.7).sin()).collect();
+        let w: Vec<f32> = (0..6).map(|i| (i as f32 * 0.3).cos()).collect();
+        let bias = [0.25f32, -0.75];
+        let la = lit_f32(&x, &[4, 3]).unwrap();
+        let lb = lit_f32(&w, &[3, 2]).unwrap();
+        let lc = lit_f32(&bias, &[2]).unwrap();
+        let got = run_all(text, &[&la, &lb, &lc]);
+        let out = got[0].to_vec::<f32>().unwrap();
+        for r in 0..4 {
+            for c in 0..2 {
+                let mut acc = 0.0f32;
+                for k in 0..3 {
+                    acc += x[r * 3 + k] * w[k * 2 + c];
+                }
+                assert_eq!(out[r * 2 + c], (acc + bias[c]).tanh(), "[{r},{c}]");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_epilogue_mask_select_matches_reference() {
+        // The _take pattern in miniature: gathered rows stream through
+        // select(rep(mask), rows, splat(sentinel)) without materializing
+        // the gather output. A finite sentinel keeps bitwise asserts
+        // usable (the NaN variant is covered by
+        // nan_propagates_through_select_pattern).
+        let text = "HloModule m
+region_0.1 {
+  Arg_0.2 = pred[] parameter(0)
+  Arg_1.3 = pred[] parameter(1)
+  ROOT and.4 = pred[] and(Arg_0.2, Arg_1.3)
+}
+
+ENTRY e.14 {
+  Arg_1.2 = s32[3,1]{1,0} parameter(1)
+  constant.3 = s32[] constant(0)
+  broadcast.4 = s32[3,1]{1,0} broadcast(constant.3), dimensions={}
+  compare.5 = pred[3,1]{1,0} compare(Arg_1.2, broadcast.4), direction=GE
+  constant.6 = s32[] constant(5)
+  broadcast.7 = s32[3,1]{1,0} broadcast(constant.6), dimensions={}
+  compare.8 = pred[3,1]{1,0} compare(Arg_1.2, broadcast.7), direction=LE
+  and.9 = pred[3,1]{1,0} and(compare.5, compare.8)
+  constant.10 = pred[] constant(true)
+  reduce.11 = pred[3]{0} reduce(and.9, constant.10), dimensions={1}, to_apply=region_0.1
+  broadcast.12 = pred[3,4]{1,0} broadcast(reduce.11), dimensions={0}
+  Arg_0.1 = f32[6,4]{1,0} parameter(0)
+  gather.13 = f32[3,4]{1,0} gather(Arg_0.1, Arg_1.2), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,4}
+  constant.15 = f32[] constant(-999)
+  broadcast.16 = f32[3,4]{1,0} broadcast(constant.15), dimensions={}
+  ROOT select.17 = f32[3,4]{1,0} select(broadcast.12, gather.13, broadcast.16)
+}
+";
+        let w: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let lw = lit_f32(&w, &[6, 4]).unwrap();
+        let ix = [2i32, -1, 9]; // -1 and 9 fail the mask; 9 clamps in the gather
+        let li = lit_i32(&ix, &[3, 1]).unwrap();
+        let got = run_all(text, &[&lw, &li]);
+        let out = got[0].to_vec::<f32>().unwrap();
+        // row 0: valid id 2 -> w[2]; rows 1/2: masked -> sentinel.
+        assert_eq!(&out[0..4], &w[8..12]);
+        assert!(out[4..12].iter().all(|&v| v == -999.0));
+    }
+
+    #[test]
+    fn in_place_fused_output_matches_reference() {
+        // multiply(negate(add(a, b)), b): the chain's output reuses a's
+        // dying buffer at FuseMode::Full; numerics must not change.
+        let text = "HloModule m
+ENTRY e.6 {
+  Arg_0.1 = f32[8]{0} parameter(0)
+  Arg_1.2 = f32[8]{0} parameter(1)
+  add.3 = f32[8]{0} add(Arg_0.1, Arg_1.2)
+  negate.4 = f32[8]{0} negate(add.3)
+  ROOT multiply.5 = f32[8]{0} multiply(negate.4, Arg_1.2)
+}
+";
+        let a: Vec<f32> = (0..8).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..8).map(|i| 1.0 - i as f32 * 0.25).collect();
+        let la = lit_f32(&a, &[8]).unwrap();
+        let lb = lit_f32(&b, &[8]).unwrap();
+        let got = run_all(text, &[&la, &lb]);
+        for ((&o, &x), &y) in
+            got[0].to_vec::<f32>().unwrap().iter().zip(&a).zip(&b)
+        {
+            assert_eq!(o, -(x + y) * y);
+        }
+    }
+
+    #[test]
+    fn fusion_summary_reports_coverage() {
+        let text = "HloModule m
+ENTRY e.6 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  Arg_1.2 = f32[4]{0} parameter(1)
+  add.3 = f32[4]{0} add(Arg_0.1, Arg_1.2)
+  negate.4 = f32[4]{0} negate(add.3)
+  ROOT multiply.5 = f32[4]{0} multiply(negate.4, Arg_0.1)
+}
+";
+        let fused = InterpExecutable::from_text_mode(text, 1, plan::FuseMode::Full).unwrap();
+        let (f, t) = fused.fusion_summary();
+        assert_eq!((f, t), (1, 1), "params are control; the one compute step is fused");
+        let unfused = InterpExecutable::from_text_mode(text, 1, plan::FuseMode::Off).unwrap();
+        let (f0, t0) = unfused.fusion_summary();
+        assert_eq!(f0, 0);
+        assert_eq!(t0, 3, "add, negate, multiply stay separate steps");
+        assert!(fused.plan_step_count() < unfused.plan_step_count());
     }
 
     #[test]

@@ -51,6 +51,13 @@ pub trait Compiled {
     fn op_stats(&self) -> Vec<(String, u64, std::time::Duration)> {
         Vec::new()
     }
+
+    /// `(fused, total)` non-control steps of the compiled plan, when the
+    /// backend plans one (the interpreter). `fused / total` is the
+    /// artifact's fusion coverage; `None` for opaque backends (PJRT).
+    fn fusion_summary(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// An execution backend: compiles artifacts into [`Compiled`] handles.

@@ -88,14 +88,24 @@ pub fn classify(inst: &Instruction) -> OpClass {
 pub fn classify_plan_op(label: &str) -> OpClass {
     match label {
         "scatter" | "dynamic-update-slice" => OpClass::AdvancedIncSubtensor,
-        "gather" | "dynamic-slice" => OpClass::AdvancedSubtensor,
-        "dot" => OpClass::Gemm,
-        "reduce" => OpClass::Reduce,
+        // A fused gather is still gather-shaped work: the epilogue rides
+        // the row streaming for free. Same reasoning for fused dot /
+        // reduce below.
+        "gather" | "fused-gather" | "dynamic-slice" => OpClass::AdvancedSubtensor,
+        "dot" | "fused-dot" => OpClass::Gemm,
+        "reduce" | "fused-reduce" => OpClass::Reduce,
         "fused" | "elemwise" => OpClass::Elemwise,
         "alloc" => OpClass::Alloc,
         "shape" => OpClass::Dimshuffle,
         _ => OpClass::Control,
     }
+}
+
+/// Is this plan-op label one of the interpreter's fused kernels (chain,
+/// reduce prologue, dot/gather epilogue)? Used to report the measured
+/// fused-kernel time share.
+pub fn is_fused_plan_op(label: &str) -> bool {
+    matches!(label, "fused" | "fused-reduce" | "fused-dot" | "fused-gather")
 }
 
 /// (flops, bytes) estimate for one instruction. `shapes` resolves operand
@@ -187,13 +197,21 @@ mod tests {
         assert_eq!(classify_plan_op("scatter"), OpClass::AdvancedIncSubtensor);
         assert_eq!(classify_plan_op("dynamic-update-slice"), OpClass::AdvancedIncSubtensor);
         assert_eq!(classify_plan_op("gather"), OpClass::AdvancedSubtensor);
+        assert_eq!(classify_plan_op("fused-gather"), OpClass::AdvancedSubtensor);
         assert_eq!(classify_plan_op("fused"), OpClass::Elemwise);
         assert_eq!(classify_plan_op("elemwise"), OpClass::Elemwise);
         assert_eq!(classify_plan_op("dot"), OpClass::Gemm);
+        assert_eq!(classify_plan_op("fused-dot"), OpClass::Gemm);
         assert_eq!(classify_plan_op("reduce"), OpClass::Reduce);
+        assert_eq!(classify_plan_op("fused-reduce"), OpClass::Reduce);
         assert_eq!(classify_plan_op("alloc"), OpClass::Alloc);
         assert_eq!(classify_plan_op("shape"), OpClass::Dimshuffle);
         assert_eq!(classify_plan_op("control"), OpClass::Control);
+        for l in ["fused", "fused-reduce", "fused-dot", "fused-gather"] {
+            assert!(is_fused_plan_op(l), "{l}");
+        }
+        assert!(!is_fused_plan_op("dot"));
+        assert!(!is_fused_plan_op("elemwise"));
     }
 
     #[test]

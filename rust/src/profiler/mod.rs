@@ -18,6 +18,6 @@ pub mod cost;
 pub mod hlo;
 pub mod report;
 
-pub use cost::{classify, classify_plan_op, instruction_cost, OpClass};
+pub use cost::{classify, classify_plan_op, instruction_cost, is_fused_plan_op, OpClass};
 pub use hlo::{parse_hlo, Instruction};
 pub use report::{HotSpotRow, Profiler};

@@ -147,4 +147,10 @@ impl Executable {
     pub fn op_stats(&self) -> Vec<(String, u64, Duration)> {
         self.compiled.op_stats()
     }
+
+    /// `(fused, total)` non-control plan steps, when the backend compiles
+    /// a plan (the interpreter); `None` on opaque backends.
+    pub fn fusion_summary(&self) -> Option<(u64, u64)> {
+        self.compiled.fusion_summary()
+    }
 }

@@ -146,6 +146,23 @@ impl Runtime {
         rows.sort_by(|a, b| b.2.cmp(&a.2));
         rows
     }
+
+    /// Per-artifact `(name, fused, total)` plan-step counts for every
+    /// compiled executable whose backend exposes a plan (the
+    /// interpreter) — `fused / total` is that artifact's fusion
+    /// coverage. Sorted by name for stable reporting.
+    pub fn fusion_coverage(&self) -> Vec<(String, u64, u64)> {
+        let mut rows: Vec<(String, u64, u64)> = self
+            .cache
+            .borrow()
+            .values()
+            .filter_map(|e| {
+                e.exe.fusion_summary().map(|(f, t)| (e.exe.name().to_string(), f, t))
+            })
+            .collect();
+        rows.sort();
+        rows
+    }
 }
 
 /// FNV-1a over (len, mtime, contents) — cheap relative to compilation and

@@ -16,6 +16,7 @@
 
 use std::path::PathBuf;
 
+use polyglot_gpu::backend::interp::plan::FuseMode;
 use polyglot_gpu::backend::interp::InterpExecutable;
 use polyglot_gpu::baselines::scatter::scatter_add_serial;
 use polyglot_gpu::corpus::Zipf;
@@ -23,6 +24,20 @@ use polyglot_gpu::runtime::{lit_f32, lit_i32, Manifest};
 use polyglot_gpu::testkit::synth_artifact_inputs;
 use polyglot_gpu::util::rng::Rng;
 use xla::Literal;
+
+/// The full engine matrix the acceptance contract names:
+/// {fused(full), fused(chains), unfused} × threads {1, 2, 8}.
+const CONFIGS: [(usize, FuseMode); 9] = [
+    (1, FuseMode::Full),
+    (2, FuseMode::Full),
+    (8, FuseMode::Full),
+    (1, FuseMode::Chains),
+    (2, FuseMode::Chains),
+    (8, FuseMode::Chains),
+    (1, FuseMode::Off),
+    (2, FuseMode::Off),
+    (8, FuseMode::Off),
+];
 
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -69,15 +84,13 @@ fn scatter_artifacts_bitwise_across_threads_and_fusion() {
             let ref_w = reference[0].to_vec::<f32>().unwrap();
             assert_eq!(ref_w, golden, "{name}: tree-walk vs host serial baseline");
 
-            for (threads, fuse) in
-                [(1usize, true), (2, true), (8, true), (1, false), (8, false)]
-            {
-                let exe = InterpExecutable::from_text_cfg(&text, threads, fuse).unwrap();
+            for (threads, mode) in CONFIGS {
+                let exe = InterpExecutable::from_text_mode(&text, threads, mode).unwrap();
                 let got = exe.run(&[&wl, &il, &yl]).unwrap();
                 let got_w = got[0].to_vec::<f32>().unwrap();
                 assert_eq!(
                     got_w, ref_w,
-                    "{name}: plan (threads={threads}, fuse={fuse}) not bitwise-identical"
+                    "{name}: plan (threads={threads}, mode={mode:?}) not bitwise-identical"
                 );
             }
         }
@@ -87,15 +100,17 @@ fn scatter_artifacts_bitwise_across_threads_and_fusion() {
 #[test]
 fn train_step_artifacts_match_treewalk_across_threads() {
     let manifest = Manifest::load(&artifacts_dir()).unwrap();
-    for name in ["train_step_ref_b16", "train_step_ref_b512", "loss_eval_b256"] {
+    for name in
+        ["train_step_ref_b16", "train_step_ref_b512", "loss_eval_b256", "forward_b256"]
+    {
         let mut rng = Rng::new(0xfeed + name.len() as u64);
         let inputs = synth_artifact_inputs(manifest.find(name).unwrap(), &mut rng).unwrap();
         let refs: Vec<&Literal> = inputs.iter().collect();
         let text = artifact_text(&manifest, name);
         let reference =
             InterpExecutable::from_text_threads(&text, 1).unwrap().run_treewalk(&refs).unwrap();
-        for (threads, fuse) in [(1usize, true), (2, true), (8, true), (1, false)] {
-            let exe = InterpExecutable::from_text_cfg(&text, threads, fuse).unwrap();
+        for (threads, mode) in CONFIGS {
+            let exe = InterpExecutable::from_text_mode(&text, threads, mode).unwrap();
             let got = exe.run(&refs).unwrap();
             assert_eq!(got.len(), reference.len(), "{name}: output arity");
             for (o, (g, w)) in got.iter().zip(&reference).enumerate() {
@@ -105,11 +120,40 @@ fn train_step_artifacts_match_treewalk_across_threads() {
                 for (j, (x, y)) in gv.iter().zip(&wv).enumerate() {
                     assert!(
                         (x - y).abs() <= 1e-6,
-                        "{name} (threads={threads}, fuse={fuse}) output {o}[{j}]: {x} vs {y}"
+                        "{name} (threads={threads}, mode={mode:?}) output {o}[{j}]: {x} vs {y}"
                     );
                 }
             }
         }
+    }
+}
+
+#[test]
+fn consumer_fusion_eliminates_steps_on_forward_and_loss_artifacts() {
+    // The acceptance metric behind E12's `fusion_coverage`: at Full the
+    // plan schedules strictly fewer steps than Chains on the artifacts
+    // with reduce-of-elementwise / dot-epilogue / gather-epilogue
+    // patterns, and the new step kinds actually fire (fusions can't
+    // silently stop).
+    let manifest = Manifest::load(&artifacts_dir()).unwrap();
+    for name in ["loss_eval_b256", "forward_b256"] {
+        let text = artifact_text(&manifest, name);
+        let chains = InterpExecutable::from_text_mode(&text, 1, FuseMode::Chains).unwrap();
+        let full = InterpExecutable::from_text_mode(&text, 1, FuseMode::Full).unwrap();
+        assert!(
+            full.plan_step_count() < chains.plan_step_count(),
+            "{name}: consumer fusion must eliminate previously-materialized steps \
+             ({} vs {})",
+            full.plan_step_count(),
+            chains.plan_step_count()
+        );
+        let (fused_full, total) = full.fusion_summary();
+        let (fused_chains, _) = chains.fusion_summary();
+        assert!(fused_full > 0 && total > 0, "{name}: no fused steps at Full");
+        assert!(
+            fused_full >= fused_chains,
+            "{name}: Full coverage regressed below Chains"
+        );
     }
 }
 
