@@ -8,16 +8,25 @@
 //! scheduled step list per computation:
 //!
 //! * **Fusion** — every maximal single-consumer chain of elementwise /
-//!   compare / select / convert ops (plus `broadcast`-of-scalar leaves)
+//!   compare / select / convert ops (plus `broadcast` leaves: scalar
+//!   splats, and at [`FuseMode::Full`] row/column vector broadcasts)
 //!   becomes one [`FusedKernel`] step ([`super::fusion`]): interior
 //!   values never get a slot, never materialize.
+//! * **Consumer-side fusion** ([`FuseMode::Full`]) — the chain around a
+//!   heavy op folds *into* that op's loop: a trailing-dims `reduce`
+//!   whose single-use input is a fusable chain evaluates the chain per
+//!   block inside the fold ([`Kind::FusedReduce`]); a single-use rank-2
+//!   `dot` or row-take `gather` feeding a chain streams its output rows
+//!   through the chain while hot ([`Kind::FusedDot`],
+//!   [`Kind::FusedGather`]). The producing/consumed intermediate is
+//!   never materialized.
 //! * **Exact liveness** — non-fused values live in a slot arena
 //!   (`n_slots` ≤ instruction count); each step's operand list carries a
 //!   precomputed *move* flag set at the slot's last read. A moved value
 //!   reaches mutating ops (`dynamic-update-slice`, `scatter`) uniquely
-//!   owned, so `Arc::make_mut` updates in place — the same O(rows·dim)
-//!   guarantee the old `last_use` heuristic gave, now decided at compile
-//!   time and shared with the fused schedule.
+//!   owned, so `Arc::make_mut` updates in place — and a fused chain
+//!   whose output matches a dying input reuses that buffer outright
+//!   (`Step::in_place`, [`super::fusion::run_fused_in_place`]).
 //! * **Threaded kernels** — `Single` steps dispatch into
 //!   [`super::kernels`] with the executable's thread budget; the
 //!   reference evaluator calls the same kernels serially.
@@ -29,13 +38,25 @@
 use std::cell::Cell;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::eval;
-use super::fusion::{self, FusedKernel};
-use super::kernels::Par;
-use super::parser::{Computation, Module, Op, Shape};
-use super::value::{Tensor, Value};
+use super::fusion::{self, EInstr, FusedKernel};
+use super::kernels::{self, Combiner, Par};
+use super::parser::{BinOp, Computation, GatherDims, Module, Op, Shape};
+use super::value::{Tensor, Ty, Value};
+
+/// How aggressively `compile` fuses. The `POLYGLOT_INTERP_FUSE` knob
+/// maps onto this so fusion regressions can be bisected:
+/// `off` = one step per instruction, `chains` = elementwise chains with
+/// scalar-splat leaves (the pre-consumer-fusion behavior), `full` =
+/// everything (default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FuseMode {
+    Off,
+    Chains,
+    Full,
+}
 
 /// What a scheduled step executes.
 pub enum Kind {
@@ -43,11 +64,23 @@ pub enum Kind {
     Single,
     /// A fused elementwise chain rooted at `Step::instr`.
     Fused(FusedKernel),
+    /// A trailing-dims reduce folding its fused input chain per block —
+    /// the chain's output is never materialized. `outer`/`inner` are the
+    /// fold geometry of the virtual input; `ty`/`bin` the validated
+    /// element type and combiner.
+    FusedReduce { kernel: FusedKernel, ty: Ty, bin: BinOp, outer: usize, inner: usize },
+    /// An elementwise chain whose `hot` kernel input is produced by a
+    /// rank-2 dot, streamed per output-row block.
+    FusedDot { kernel: FusedKernel, hot: u16, lc: usize, rc: usize },
+    /// An elementwise chain whose `hot` kernel input is produced by a
+    /// row-take gather, streamed per gathered-row block.
+    FusedGather { kernel: FusedKernel, hot: u16 },
 }
 
 /// One scheduled step of a compiled computation.
 pub struct Step {
-    /// Position of the defining instruction in the computation.
+    /// Position of the defining instruction in the computation (for
+    /// consumer fusions: the chain root / the reduce).
     pub instr: usize,
     pub kind: Kind,
     /// Destination slot.
@@ -55,6 +88,9 @@ pub struct Step {
     /// Operand slots; `true` means this step is the slot's last reader
     /// and takes the value by move (unique ownership for in-place ops).
     pub args: Vec<(usize, bool)>,
+    /// For `Kind::Fused`: the arg index whose dying buffer the kernel
+    /// may overwrite instead of allocating the output.
+    pub in_place: Option<usize>,
     pub label: OpLabel,
 }
 
@@ -73,11 +109,40 @@ pub struct Plan {
     pub entry: usize,
 }
 
+impl Plan {
+    /// `(fused, total)` non-control step counts across every
+    /// computation — the numerator counts all fused step kinds. The
+    /// ratio is E12's `fusion_coverage`.
+    pub fn fusion_summary(&self) -> (u64, u64) {
+        let (mut fused, mut total) = (0u64, 0u64);
+        for cp in &self.comps {
+            for s in &cp.steps {
+                if s.label == OpLabel::Control {
+                    continue;
+                }
+                total += 1;
+                if !matches!(s.kind, Kind::Single) {
+                    fused += 1;
+                }
+            }
+        }
+        (fused, total)
+    }
+
+    /// Total scheduled steps (all computations, control included).
+    pub fn step_count(&self) -> usize {
+        self.comps.iter().map(|c| c.steps.len()).sum()
+    }
+}
+
 /// Coarse op classes for per-plan-op accounting (what the profiler
 /// reports for interpreter runs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OpLabel {
     Fused,
+    FusedReduce,
+    FusedDot,
+    FusedGather,
     Elemwise,
     Dot,
     Reduce,
@@ -90,12 +155,15 @@ pub enum OpLabel {
     Control,
 }
 
-pub const N_LABELS: usize = 11;
+pub const N_LABELS: usize = 14;
 
 impl OpLabel {
     pub fn all() -> [OpLabel; N_LABELS] {
         [
             OpLabel::Fused,
+            OpLabel::FusedReduce,
+            OpLabel::FusedDot,
+            OpLabel::FusedGather,
             OpLabel::Elemwise,
             OpLabel::Dot,
             OpLabel::Reduce,
@@ -112,6 +180,9 @@ impl OpLabel {
     pub fn name(self) -> &'static str {
         match self {
             OpLabel::Fused => "fused",
+            OpLabel::FusedReduce => "fused-reduce",
+            OpLabel::FusedDot => "fused-dot",
+            OpLabel::FusedGather => "fused-gather",
             OpLabel::Elemwise => "elemwise",
             OpLabel::Dot => "dot",
             OpLabel::Reduce => "reduce",
@@ -153,29 +224,73 @@ fn label_of(op: &Op) -> OpLabel {
 
 // ----------------------------------------------------------------- compile
 
-/// Lower a parsed module. `fuse: false` keeps one step per instruction
-/// (the planned-but-unfused configuration the equivalence tests and E12
-/// compare against).
-pub fn compile(m: &Module, fuse: bool) -> Result<Plan> {
+/// Lower a parsed module at the given fusion level. [`FuseMode::Off`]
+/// keeps one step per instruction (the planned-but-unfused configuration
+/// the equivalence tests and E12 compare against).
+pub fn compile(m: &Module, mode: FuseMode) -> Result<Plan> {
     let comps = m
         .comps
         .iter()
-        .map(|c| compile_comp(c, fuse).with_context(|| format!("planning {:?}", c.name)))
+        .map(|c| compile_comp(m, c, mode).with_context(|| format!("planning {:?}", c.name)))
         .collect::<Result<Vec<_>>>()?;
     Ok(Plan { comps, entry: m.entry })
 }
 
-fn compile_comp(comp: &Computation, fuse: bool) -> Result<CompPlan> {
+/// Can the trailing fast-path fold handle this dtype/combiner pair
+/// (mirrors `kernels::reduce`'s and `kernels::reduce_fused`'s tables)?
+fn fold_supported(ty: Ty, b: BinOp) -> bool {
+    matches!(
+        (ty, b),
+        (Ty::F32, BinOp::Add | BinOp::Mul | BinOp::Max | BinOp::Min)
+            | (Ty::S32, BinOp::Add | BinOp::Max | BinOp::Min)
+            | (Ty::Pred, BinOp::And | BinOp::Or)
+    )
+}
+
+/// Is instruction `p` the row-take gather the fast path (and thus the
+/// fused-gather kernel) handles: f32 `[v, d]` operand, one s32 row id
+/// per output row, full-width rows?
+fn gather_row_take(comp: &Computation, p: usize, g: &GatherDims) -> bool {
+    let ins = &comp.instrs[p];
+    let Shape::Arr(Ty::F32, out) = &ins.shape else { return false };
+    if out.len() != 2 || ins.operands.len() != 2 {
+        return false;
+    }
+    let Shape::Arr(Ty::F32, od) = &comp.instrs[ins.operands[0]].shape else { return false };
+    let Shape::Arr(Ty::S32, id) = &comp.instrs[ins.operands[1]].shape else { return false };
+    od.len() == 2
+        && g.offset_dims.as_slice() == [1]
+        && g.collapsed_slice_dims.as_slice() == [0]
+        && g.start_index_map.as_slice() == [0]
+        && g.index_vector_dim == 1
+        && g.slice_sizes.as_slice() == [1, od[1]]
+        && out[1] == od[1]
+        && ((id.len() == 1 && id[0] == out[0])
+            || (id.len() == 2 && id[0] == out[0] && id[1] == 1))
+}
+
+fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPlan> {
     let n = comp.instrs.len();
+    let fuse = mode != FuseMode::Off;
+    let full = mode == FuseMode::Full;
 
     // 1. Decide the inline set: a value folds into its consumer when it
-    //    is elementwise-fusable (or a scalar broadcast), has exactly one
-    //    consumer, that consumer is itself fusable, and both share an
-    //    index space. Multi-use values, reshapes, dots, reductions — any
+    //    is elementwise-fusable (or a fusable broadcast leaf), has
+    //    exactly one consumer, that consumer is itself fusable, and both
+    //    share an index space. Multi-use values, reshapes — any
     //    non-elementwise consumer — are chain boundaries.
     let mut inlined = vec![false; n];
+    // Chain root -> the dot/gather producer folded into its kernel.
+    let mut producer_of_root = vec![usize::MAX; n];
+    // Reduce steps whose input chain evaluates inside the fold loop.
+    let mut reduce_prologue = vec![false; n];
     if fuse {
         let fusable: Vec<bool> = (0..n).map(|i| fusion::fusable_node(comp, i)).collect();
+        let leaf_ok = |i: usize| {
+            fusable[i]
+                || fusion::splat_node(comp, i)
+                || (full && (fusion::tile_node(comp, i) || fusion::rep_node(comp, i)))
+        };
         for i in 0..n {
             if comp.uses[i] != 1 || i == comp.root {
                 continue;
@@ -192,8 +307,97 @@ fn compile_comp(comp: &Computation, fuse: bool) -> Result<CompPlan> {
             if di != dc {
                 continue;
             }
-            if fusable[i] || fusion::splat_node(comp, i) {
+            if leaf_ok(i) {
                 inlined[i] = true;
+            }
+        }
+
+        // 1b. Reduce-of-elementwise: a trailing-dims reduce with a
+        //     supported binary combiner absorbs its single-use fusable
+        //     input — the chain becomes the fold loop's prologue.
+        if full {
+            for r in 0..n {
+                let Op::Reduce { dims: rdims, to_apply } = &comp.instrs[r].op else {
+                    continue;
+                };
+                let &[x, init] = comp.instrs[r].operands.as_slice() else { continue };
+                if x == init || comp.uses[x] != 1 || x == comp.root || inlined[x] {
+                    continue;
+                }
+                if !leaf_ok(x) {
+                    continue;
+                }
+                let Shape::Arr(xty, xdims) = &comp.instrs[x].shape else { continue };
+                let nr = rdims.len();
+                if nr == 0 || nr > xdims.len() {
+                    continue;
+                }
+                let split = xdims.len() - nr;
+                let mut sorted = rdims.clone();
+                sorted.sort_unstable();
+                if !sorted.iter().copied().eq(split..xdims.len()) {
+                    continue;
+                }
+                let Combiner::Bin(b) = kernels::classify_combiner(m, *to_apply) else {
+                    continue;
+                };
+                if !fold_supported(*xty, b) {
+                    continue;
+                }
+                let Shape::Arr(ity, idims) = &comp.instrs[init].shape else { continue };
+                if ity != xty || idims.iter().product::<usize>() != 1 {
+                    continue;
+                }
+                inlined[x] = true;
+                reduce_prologue[r] = true;
+            }
+        }
+
+        // 1c. Producer folding: a single-use rank-2 f32 dot or row-take
+        //     gather whose consumer chain ends at an elementwise root
+        //     (not a reduce prologue) becomes that kernel's hot input.
+        //     One producer per chain root.
+        if full {
+            for p in 0..n {
+                if inlined[p] || comp.uses[p] != 1 || p == comp.root {
+                    continue;
+                }
+                let c = comp.consumer[p];
+                if c == usize::MAX || !fusable[c] {
+                    continue;
+                }
+                let (Shape::Arr(pty, pdims), Shape::Arr(_, cdims)) =
+                    (&comp.instrs[p].shape, &comp.instrs[c].shape)
+                else {
+                    continue;
+                };
+                if pdims != cdims || *pty != Ty::F32 || pdims.len() != 2 {
+                    continue;
+                }
+                let eligible = match &comp.instrs[p].op {
+                    Op::Dot { .. } => {
+                        let ops = &comp.instrs[p].operands;
+                        ops.len() == 2
+                            && ops.iter().all(|&o| {
+                                matches!(&comp.instrs[o].shape,
+                                         Shape::Arr(Ty::F32, d) if d.len() == 2)
+                            })
+                    }
+                    Op::Gather(g) => gather_row_take(comp, p, g),
+                    _ => false,
+                };
+                if !eligible {
+                    continue;
+                }
+                let mut root = c;
+                while inlined[root] {
+                    root = comp.consumer[root];
+                }
+                if !fusable[root] || producer_of_root[root] != usize::MAX {
+                    continue;
+                }
+                inlined[p] = true;
+                producer_of_root[root] = p;
             }
         }
     }
@@ -215,21 +419,78 @@ fn compile_comp(comp: &Computation, fuse: bool) -> Result<CompPlan> {
             continue;
         }
         let ins = &comp.instrs[i];
-        let fused_root = ins.operands.iter().any(|&o| inlined[o]);
-        let (kind, ext, label) = if fused_root {
-            let (kernel, ext) = fusion::compile(comp, i, &inlined)
+        let has_inlined = ins.operands.iter().any(|&o| inlined[o]);
+        let (kind, args, label) = if reduce_prologue[i] {
+            let Op::Reduce { dims: rdims, to_apply } = &ins.op else {
+                bail!("planned reduce prologue on non-reduce {}", ins.name);
+            };
+            let x = ins.operands[0];
+            let init = ins.operands[1];
+            let (kernel, ext) = fusion::compile(comp, x, &inlined, None)
+                .with_context(|| format!("fusing reduce prologue of {}", ins.name))?;
+            let (xty, xdims) = comp.instrs[x].shape.arr()?;
+            let split = xdims.len() - rdims.len();
+            let outer: usize = xdims[..split].iter().product();
+            let inner: usize = xdims[split..].iter().product();
+            let Combiner::Bin(bin) = kernels::classify_combiner(m, *to_apply) else {
+                bail!("planned reduce prologue with non-binary combiner");
+            };
+            let mut args: Vec<(usize, bool)> =
+                ext.iter().map(|&o| (slot_of[o], false)).collect();
+            args.push((slot_of[init], false));
+            (
+                Kind::FusedReduce { kernel, ty: xty, bin, outer, inner },
+                args,
+                OpLabel::FusedReduce,
+            )
+        } else if has_inlined {
+            let p = producer_of_root[i];
+            let hot_node = if p == usize::MAX { None } else { Some(p) };
+            let (kernel, ext) = fusion::compile(comp, i, &inlined, hot_node)
                 .with_context(|| format!("fusing chain rooted at {}", ins.name))?;
-            (Kind::Fused(kernel), ext, OpLabel::Fused)
+            if let Some(p) = hot_node {
+                let hot = ext
+                    .iter()
+                    .position(|&o| o == p)
+                    .context("producer missing from fused kernel inputs")?
+                    as u16;
+                let mut args: Vec<(usize, bool)> = ext
+                    .iter()
+                    .filter(|&&o| o != p)
+                    .map(|&o| (slot_of[o], false))
+                    .collect();
+                let pins = &comp.instrs[p];
+                for &o in &pins.operands {
+                    args.push((slot_of[o], false));
+                }
+                let (kind, label) = match &pins.op {
+                    Op::Dot { lc, rc } => (
+                        Kind::FusedDot { kernel, hot, lc: *lc, rc: *rc },
+                        OpLabel::FusedDot,
+                    ),
+                    Op::Gather(_) => (Kind::FusedGather { kernel, hot }, OpLabel::FusedGather),
+                    other => bail!("unsupported fused producer {other:?}"),
+                };
+                (kind, args, label)
+            } else {
+                let args: Vec<(usize, bool)> =
+                    ext.iter().map(|&o| (slot_of[o], false)).collect();
+                (Kind::Fused(kernel), args, OpLabel::Fused)
+            }
         } else {
-            (Kind::Single, ins.operands.clone(), label_of(&ins.op))
+            let args: Vec<(usize, bool)> =
+                ins.operands.iter().map(|&o| (slot_of[o], false)).collect();
+            (Kind::Single, args, label_of(&ins.op))
         };
-        let args: Vec<(usize, bool)> = ext.iter().map(|&o| (slot_of[o], false)).collect();
-        steps.push(Step { instr: i, kind, out: slot_of[i], args, label });
+        steps.push(Step { instr: i, kind, out: slot_of[i], args, in_place: None, label });
     }
 
     // 4. Exact liveness over the schedule: flag each slot's last read as
     //    a move (unless the same step reads it again later, or it is the
-    //    root, which outlives every step).
+    //    root, which outlives every step). Fusion has already deleted
+    //    steps at this point, so flags land on the *surviving* schedule —
+    //    a slot whose old last reader was inlined gets its move at the
+    //    fused step that absorbed the read.
     let root = slot_of[comp.root];
     let mut last_read = vec![usize::MAX; n_slots];
     for (s, step) in steps.iter().enumerate() {
@@ -242,6 +503,51 @@ fn compile_comp(comp: &Computation, fuse: bool) -> Result<CompPlan> {
             let a = step.args[j].0;
             let read_again_here = step.args[j + 1..].iter().any(|&(b, _)| b == a);
             step.args[j].1 = last_read[a] == s && a != root && !read_again_here;
+        }
+    }
+
+    // 5. In-place fused outputs: a plain fused chain whose output dtype
+    //    and element count match a dying Load input reuses that buffer
+    //    (each block is read before it is overwritten). Decided after
+    //    liveness so only genuinely-last reads qualify.
+    let instr_of_slot: Vec<usize> = {
+        let mut v = vec![usize::MAX; n_slots];
+        for i in 0..n {
+            if !inlined[i] {
+                v[slot_of[i]] = i;
+            }
+        }
+        v
+    };
+    for step in steps.iter_mut() {
+        let Kind::Fused(kernel) = &step.kind else { continue };
+        let Ok((oty, odims)) = comp.instrs[step.instr].shape.arr() else { continue };
+        let n_out: usize = odims.iter().product();
+        if step.args.len() != kernel.n_inputs {
+            continue;
+        }
+        let mut load_only = vec![true; kernel.n_inputs];
+        let mut loaded = vec![false; kernel.n_inputs];
+        for e in &kernel.prog {
+            match e {
+                EInstr::Load(k) => loaded[*k as usize] = true,
+                EInstr::Splat(k) | EInstr::Tile(k) | EInstr::Rep(k) => {
+                    load_only[*k as usize] = false
+                }
+                _ => {}
+            }
+        }
+        for (j, &(slot, mv)) in step.args.iter().enumerate() {
+            if !mv || !loaded[j] || !load_only[j] {
+                continue;
+            }
+            let Ok((sty, sdims)) = comp.instrs[instr_of_slot[slot]].shape.arr() else {
+                continue;
+            };
+            if sty == oty && sdims.iter().product::<usize>() == n_out {
+                step.in_place = Some(j);
+                break;
+            }
         }
     }
 
@@ -330,15 +636,78 @@ impl Exec<'_> {
         &self,
         ci: usize,
         step: &Step,
-        vals: Vec<Value>,
+        mut vals: Vec<Value>,
         args: &mut [Option<Value>],
     ) -> Result<Value> {
         let ins = &self.m.comps[ci].instrs[step.instr];
         match &step.kind {
             Kind::Fused(kernel) => {
                 let (_, out_dims) = ins.shape.arr()?;
-                let inputs: Vec<&Tensor> = vals.iter().map(|v| v.arr()).collect::<Result<_>>()?;
+                if let Some(j) = step.in_place {
+                    // The planner flagged arg j as this slot's last read,
+                    // so the value arrived by move; reuse its buffer when
+                    // nothing else still shares the storage.
+                    let reuse =
+                        std::mem::replace(&mut vals[j], Value::Tuple(Vec::new())).into_arr()?;
+                    if fusion::unique_storage(&reuse) {
+                        let inputs: Vec<Option<&Tensor>> = vals
+                            .iter()
+                            .enumerate()
+                            .map(|(i, v)| if i == j { Ok(None) } else { v.arr().map(Some) })
+                            .collect::<Result<_>>()?;
+                        return Ok(Value::Arr(fusion::run_fused_in_place(
+                            kernel, inputs, j as u16, reuse, out_dims,
+                        )?));
+                    }
+                    // An alias survived (e.g. through a reshape move):
+                    // allocate as usual, reading the moved value.
+                    let mut inputs: Vec<&Tensor> = Vec::with_capacity(vals.len());
+                    for (i, v) in vals.iter().enumerate() {
+                        inputs.push(if i == j { &reuse } else { v.arr()? });
+                    }
+                    return Ok(Value::Arr(fusion::run_fused(kernel, &inputs, out_dims)?));
+                }
+                let inputs: Vec<&Tensor> =
+                    vals.iter().map(|v| v.arr()).collect::<Result<_>>()?;
                 Ok(Value::Arr(fusion::run_fused(kernel, &inputs, out_dims)?))
+            }
+            Kind::FusedReduce { kernel, ty, bin, outer, inner } => {
+                let (_, out_dims) = ins.shape.arr()?;
+                let n_ext = kernel.n_inputs;
+                if vals.len() != n_ext + 1 {
+                    bail!("fused reduce: {} operands for {} inputs + init", vals.len(), n_ext);
+                }
+                let init = vals.last().ok_or_else(|| anyhow!("fused reduce init"))?.arr()?;
+                let inputs: Vec<Option<&Tensor>> =
+                    vals[..n_ext].iter().map(|v| v.arr().map(Some)).collect::<Result<_>>()?;
+                let ctx = fusion::FusedCtx::new(kernel, inputs, outer * inner, None)?;
+                Ok(Value::Arr(kernels::reduce_fused(
+                    &ctx, *ty, *bin, *outer, *inner, init, out_dims, self.par,
+                )?))
+            }
+            Kind::FusedDot { kernel, hot, lc, rc } => {
+                let (_, out_dims) = ins.shape.arr()?;
+                let n_other = kernel.n_inputs - 1;
+                if vals.len() != n_other + 2 {
+                    bail!("fused dot: {} operands for {} inputs", vals.len(), n_other + 2);
+                }
+                let a = vals[n_other].arr()?;
+                let b = vals[n_other + 1].arr()?;
+                let ctx = hot_ctx(kernel, &vals[..n_other], *hot, out_dims)?;
+                Ok(Value::Arr(kernels::dot_fused(a, b, *lc, *rc, &ctx, out_dims, self.par)?))
+            }
+            Kind::FusedGather { kernel, hot } => {
+                let (_, out_dims) = ins.shape.arr()?;
+                let n_other = kernel.n_inputs - 1;
+                if vals.len() != n_other + 2 {
+                    bail!("fused gather: {} operands for {} inputs", vals.len(), n_other + 2);
+                }
+                let operand = vals[n_other].arr()?;
+                let indices = vals[n_other + 1].arr()?;
+                let ctx = hot_ctx(kernel, &vals[..n_other], *hot, out_dims)?;
+                Ok(Value::Arr(kernels::gather_rows_fused(
+                    operand, indices, &ctx, out_dims, self.par,
+                )?))
             }
             Kind::Single => {
                 // Per-op dispatch is shared with the tree-walker
@@ -356,14 +725,37 @@ impl Exec<'_> {
     }
 }
 
+/// Build the epilogue evaluation context for a producer-fused step: the
+/// `hot` kernel input has no tensor backing (the kernel streams it), the
+/// rest are the step's leading operand values in kernel-input order.
+fn hot_ctx<'k, 't>(
+    kernel: &'k FusedKernel,
+    others: &'t [Value],
+    hot: u16,
+    out_dims: &[usize],
+) -> Result<fusion::FusedCtx<'k, 't>> {
+    let mut inputs: Vec<Option<&Tensor>> = Vec::with_capacity(kernel.n_inputs);
+    let mut it = others.iter();
+    for i in 0..kernel.n_inputs {
+        if i == hot as usize {
+            inputs.push(None);
+        } else {
+            let v = it.next().ok_or_else(|| anyhow!("fused producer: missing input"))?;
+            inputs.push(Some(v.arr()?));
+        }
+    }
+    let n: usize = out_dims.iter().product();
+    fusion::FusedCtx::new(kernel, inputs, n, Some(hot))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::interp::parser::parse_module;
 
-    fn entry_plan(text: &str, fuse: bool) -> (Module, Plan) {
+    fn entry_plan(text: &str, mode: FuseMode) -> (Module, Plan) {
         let m = parse_module(text).unwrap();
-        let p = compile(&m, fuse).unwrap();
+        let p = compile(&m, mode).unwrap();
         (m, p)
     }
 
@@ -373,9 +765,54 @@ mod tests {
             .iter()
             .filter_map(|s| match &s.kind {
                 Kind::Fused(k) => Some(k),
-                Kind::Single => None,
+                _ => None,
             })
             .collect()
+    }
+
+    /// Structural soundness of a compiled schedule: every read hits a
+    /// live slot, every slot is moved at most once and only at its last
+    /// read, the root is never moved and stays live to the end. This is
+    /// the regression net for fusion-deleted steps corrupting liveness.
+    fn assert_plan_invariants(p: &Plan) {
+        for (ci, cp) in p.comps.iter().enumerate() {
+            let mut live = vec![false; cp.n_slots];
+            let mut moved = vec![false; cp.n_slots];
+            for (si, step) in cp.steps.iter().enumerate() {
+                for &(s, mv) in &step.args {
+                    assert!(live[s], "comp {ci} step {si}: slot {s} read while dead");
+                    assert!(!moved[s], "comp {ci} step {si}: slot {s} read after move");
+                    if mv {
+                        assert_ne!(s, cp.root, "comp {ci} step {si}: root slot moved");
+                        moved[s] = true;
+                    }
+                }
+                live[step.out] = true;
+                moved[step.out] = false;
+            }
+            assert!(live[cp.root], "comp {ci}: root slot never defined");
+            assert!(!moved[cp.root], "comp {ci}: root slot moved");
+            // Exactly one move per read slot (double-free / kept-alive
+            // check): the last read of every non-root slot carries the
+            // move flag.
+            let mut mv_count = vec![0usize; cp.n_slots];
+            let mut last_reader = vec![usize::MAX; cp.n_slots];
+            for (si, step) in cp.steps.iter().enumerate() {
+                for &(s, mv) in &step.args {
+                    last_reader[s] = si;
+                    if mv {
+                        mv_count[s] += 1;
+                    }
+                }
+            }
+            for s in 0..cp.n_slots {
+                if s == cp.root || last_reader[s] == usize::MAX {
+                    assert_eq!(mv_count[s], 0, "comp {ci}: unread/root slot {s} moved");
+                } else {
+                    assert_eq!(mv_count[s], 1, "comp {ci}: slot {s} moved {} times", mv_count[s]);
+                }
+            }
+        }
     }
 
     const CHAIN: &str = "HloModule m
@@ -390,20 +827,22 @@ ENTRY e.6 {
 
     #[test]
     fn chain_fuses_into_one_kernel() {
-        let (_, p) = entry_plan(CHAIN, true);
+        let (_, p) = entry_plan(CHAIN, FuseMode::Full);
         let fused = fused_steps(&p);
         assert_eq!(fused.len(), 1, "add->negate->multiply must fuse");
         assert_eq!(fused[0].ops, vec!["add", "negate", "multiply"]);
         // 2 params + 1 fused step; interior values got no slots.
         assert_eq!(p.comps[p.entry].steps.len(), 3);
         assert_eq!(p.comps[p.entry].n_slots, 3);
+        assert_plan_invariants(&p);
     }
 
     #[test]
     fn fusion_off_keeps_one_step_per_instruction() {
-        let (m, p) = entry_plan(CHAIN, false);
+        let (m, p) = entry_plan(CHAIN, FuseMode::Off);
         assert!(fused_steps(&p).is_empty());
         assert_eq!(p.comps[p.entry].steps.len(), m.comps[m.entry].instrs.len());
+        assert_plan_invariants(&p);
     }
 
     #[test]
@@ -416,7 +855,7 @@ ENTRY e.5 {
   ROOT exponential.4 = f32[2,2]{1,0} exponential(reshape.3)
 }
 ";
-        let (_, p) = entry_plan(text, true);
+        let (_, p) = entry_plan(text, FuseMode::Full);
         // negate's consumer is reshape (not fusable), reshape's consumer
         // is elementwise but reshape itself cannot be a chain member:
         // nothing fuses.
@@ -433,7 +872,7 @@ ENTRY e.5 {
   ROOT multiply.4 = f32[4]{0} multiply(add.3, negate.2)
 }
 ";
-        let (_, p) = entry_plan(text, true);
+        let (_, p) = entry_plan(text, FuseMode::Full);
         // negate.2 has three uses -> materialized; add.3 has one use and
         // an elementwise consumer -> fused into multiply.
         let fused = fused_steps(&p);
@@ -442,7 +881,7 @@ ENTRY e.5 {
     }
 
     #[test]
-    fn dot_is_a_chain_boundary_and_scalar_broadcast_fuses() {
+    fn dot_without_epilogue_is_a_boundary_and_scalar_broadcast_fuses() {
         let text = "HloModule m
 ENTRY e.8 {
   Arg_0.1 = f32[2,2]{1,0} parameter(0)
@@ -453,13 +892,14 @@ ENTRY e.8 {
   ROOT add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)
 }
 ";
-        let (m, p) = entry_plan(text, true);
-        // negate.2 feeds dot -> boundary. broadcast.5 is a scalar splat
-        // feeding add -> fuses; the scalar constant stays materialized.
+        // negate.2 feeds the dot's *input* -> boundary (producer fusion
+        // folds a dot into its consumer, never a chain into a dot).
+        // Under Chains the dot stays a Single step and broadcast.5
+        // (scalar splat) fuses into add.
+        let (m, p) = entry_plan(text, FuseMode::Chains);
         let fused = fused_steps(&p);
         assert_eq!(fused.len(), 1);
         assert_eq!(fused[0].ops, vec!["broadcast", "add"]);
-        // dot executes as a Single step.
         let cp = &p.comps[p.entry];
         let dot_steps = cp
             .steps
@@ -467,10 +907,19 @@ ENTRY e.8 {
             .filter(|s| matches!(m.comps[m.entry].instrs[s.instr].op, Op::Dot { .. }))
             .count();
         assert_eq!(dot_steps, 1);
+        // Under Full the same dot is single-use into a fusable root: it
+        // becomes the hot producer of a FusedDot step instead.
+        let (_, p) = entry_plan(text, FuseMode::Full);
+        let cp = &p.comps[p.entry];
+        assert!(cp
+            .steps
+            .iter()
+            .any(|s| matches!(s.kind, Kind::FusedDot { .. })));
+        assert_plan_invariants(&p);
     }
 
     #[test]
-    fn broadcast_of_vector_does_not_fuse() {
+    fn broadcast_of_vector_fuses_only_at_full() {
         let text = "HloModule m
 ENTRY e.5 {
   Arg_0.1 = f32[3]{0} parameter(0)
@@ -479,13 +928,168 @@ ENTRY e.5 {
   ROOT add.4 = f32[2,3]{1,0} add(broadcast.2, Arg_1.3)
 }
 ";
-        let (_, p) = entry_plan(text, true);
-        assert!(fused_steps(&p).is_empty(), "non-scalar broadcast must not splat");
+        let (_, p) = entry_plan(text, FuseMode::Chains);
+        assert!(fused_steps(&p).is_empty(), "chains mode must not tile vector broadcasts");
+        let (_, p) = entry_plan(text, FuseMode::Full);
+        let fused = fused_steps(&p);
+        assert_eq!(fused.len(), 1, "full mode tiles the row-vector broadcast");
+        assert_eq!(fused[0].ops, vec!["broadcast", "add"]);
+        assert_eq!(fused[0].inner, 3);
+        assert_plan_invariants(&p);
+    }
+
+    #[test]
+    fn reduce_of_elementwise_folds_the_chain_into_the_loop() {
+        let text = "HloModule m
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY e.9 {
+  Arg_0.5 = f32[4,8]{1,0} parameter(0)
+  exponential.6 = f32[4,8]{1,0} exponential(Arg_0.5)
+  constant.7 = f32[] constant(0)
+  ROOT reduce.8 = f32[4]{0} reduce(exponential.6, constant.7), dimensions={1}, to_apply=region_0.1
+}
+";
+        let (_, p) = entry_plan(text, FuseMode::Full);
+        let cp = &p.comps[p.entry];
+        let fr = cp
+            .steps
+            .iter()
+            .find_map(|s| match &s.kind {
+                Kind::FusedReduce { kernel, bin, outer, inner, .. } => {
+                    Some((kernel, *bin, *outer, *inner))
+                }
+                _ => None,
+            })
+            .expect("reduce must absorb its exp chain");
+        assert_eq!(fr.0.ops, vec!["exponential"]);
+        assert_eq!((fr.1, fr.2, fr.3), (BinOp::Add, 4, 8));
+        // exp got no slot: param + constant + reduce = 3 steps.
+        assert_eq!(cp.steps.len(), 3);
+        // Chains mode keeps the reduce unfused.
+        let (_, p) = entry_plan(text, FuseMode::Chains);
+        assert!(!p.comps[p.entry]
+            .steps
+            .iter()
+            .any(|s| matches!(s.kind, Kind::FusedReduce { .. })));
+        assert_plan_invariants(&p);
+    }
+
+    #[test]
+    fn non_trailing_reduce_keeps_its_input_materialized() {
+        let text = "HloModule m
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY e.9 {
+  Arg_0.5 = f32[4,8]{1,0} parameter(0)
+  exponential.6 = f32[4,8]{1,0} exponential(Arg_0.5)
+  constant.7 = f32[] constant(0)
+  ROOT reduce.8 = f32[8]{0} reduce(exponential.6, constant.7), dimensions={0}, to_apply=region_0.1
+}
+";
+        let (_, p) = entry_plan(text, FuseMode::Full);
+        assert!(
+            !p.comps[p.entry].steps.iter().any(|s| matches!(s.kind, Kind::FusedReduce { .. })),
+            "a leading-dim reduce must not fuse its input"
+        );
+    }
+
+    #[test]
+    fn dot_epilogue_covers_bias_add_tanh() {
+        let text = "HloModule m
+ENTRY e.8 {
+  Arg_0.1 = f32[4,3]{1,0} parameter(0)
+  Arg_1.2 = f32[3,5]{1,0} parameter(1)
+  dot.3 = f32[4,5]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  Arg_2.4 = f32[5]{0} parameter(2)
+  broadcast.5 = f32[4,5]{1,0} broadcast(Arg_2.4), dimensions={1}
+  add.6 = f32[4,5]{1,0} add(dot.3, broadcast.5)
+  ROOT tanh.7 = f32[4,5]{1,0} tanh(add.6)
+}
+";
+        let (_, p) = entry_plan(text, FuseMode::Full);
+        let cp = &p.comps[p.entry];
+        let step = cp
+            .steps
+            .iter()
+            .find(|s| matches!(s.kind, Kind::FusedDot { .. }))
+            .expect("the forward hidden layer must fuse into one dot step");
+        let Kind::FusedDot { kernel, hot, lc, rc } = &step.kind else { unreachable!() };
+        assert_eq!(kernel.ops, vec!["broadcast", "add", "tanh"]);
+        assert_eq!((*lc, *rc), (1, 0));
+        assert_eq!(*hot, 0, "the dot output is the first kernel input");
+        assert_eq!(kernel.inner, 5, "bias tile period is the output width");
+        // args: bias slot then the dot's two operand slots.
+        assert_eq!(step.args.len(), 3);
+        // 3 params + 1 fused-dot step; dot/broadcast/add got no slots.
+        assert_eq!(cp.steps.len(), 4);
+        assert_plan_invariants(&p);
+    }
+
+    #[test]
+    fn gather_epilogue_streams_rows_through_the_chain() {
+        let text = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[6,4]{1,0} parameter(0)
+  Arg_1.2 = s32[3,1]{1,0} parameter(1)
+  gather.3 = f32[3,4]{1,0} gather(Arg_0.1, Arg_1.2), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,4}
+  ROOT negate.4 = f32[3,4]{1,0} negate(gather.3)
+}
+";
+        let (_, p) = entry_plan(text, FuseMode::Full);
+        let cp = &p.comps[p.entry];
+        let step = cp
+            .steps
+            .iter()
+            .find(|s| matches!(s.kind, Kind::FusedGather { .. }))
+            .expect("row-take gather must fuse into its consumer");
+        let Kind::FusedGather { kernel, hot } = &step.kind else { unreachable!() };
+        assert_eq!(kernel.ops, vec!["negate"]);
+        assert_eq!(*hot, 0);
+        assert_eq!(step.args.len(), 2, "operand + indices slots");
+        assert_plan_invariants(&p);
+    }
+
+    #[test]
+    fn in_place_reuse_planned_for_dying_same_shape_input() {
+        let text = "HloModule m
+ENTRY e.6 {
+  Arg_0.1 = f32[8]{0} parameter(0)
+  Arg_1.2 = f32[8]{0} parameter(1)
+  add.3 = f32[8]{0} add(Arg_0.1, Arg_1.2)
+  negate.4 = f32[8]{0} negate(add.3)
+  ROOT multiply.5 = f32[8]{0} multiply(negate.4, Arg_1.2)
+}
+";
+        let (_, p) = entry_plan(text, FuseMode::Full);
+        let cp = &p.comps[p.entry];
+        let step = cp.steps.last().unwrap();
+        assert!(matches!(step.kind, Kind::Fused(_)));
+        // Both args die here; the first qualifying one is reused.
+        assert_eq!(step.in_place, Some(0));
+        assert_plan_invariants(&p);
+        // The root's own slot must never be the reuse target: a chain
+        // whose only dying input is the root slot plans no reuse.
+        let (_, p) = entry_plan(CHAIN, FuseMode::Full);
+        for s in &p.comps[p.entry].steps {
+            if let Some(j) = s.in_place {
+                assert!(s.args[j].1, "in_place must point at a moved arg");
+                assert_ne!(s.args[j].0, p.comps[p.entry].root);
+            }
+        }
     }
 
     #[test]
     fn moves_planned_at_last_read_and_root_pinned() {
-        let (_, p) = entry_plan(CHAIN, false);
+        let (_, p) = entry_plan(CHAIN, FuseMode::Off);
         let cp = &p.comps[p.entry];
         // multiply.5 (root) reads negate.4 (last use -> move) and
         // Arg_0.1 (last use -> move).
@@ -511,9 +1115,63 @@ ENTRY e.3 {
   ROOT add.2 = f32[2]{0} add(Arg_0.1, Arg_0.1)
 }
 ";
-        let (_, p) = entry_plan(text, true);
+        let (_, p) = entry_plan(text, FuseMode::Full);
         let add = p.comps[p.entry].steps.last().unwrap();
         assert_eq!(add.args[0].1, false, "first read of a duplicated slot must clone");
         assert_eq!(add.args[1].1, true, "second read is the true last use");
+    }
+
+    #[test]
+    fn committed_artifacts_plan_cleanly_with_fewer_steps_at_full() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        for name in [
+            "loss_eval_b256.hlo.txt",
+            "forward_b256.hlo.txt",
+            "train_step_ref_b16.hlo.txt",
+            "scatter_native_r1000.hlo.txt",
+        ] {
+            let text = std::fs::read_to_string(dir.join(name)).expect("make artifacts");
+            let m = parse_module(&text).unwrap();
+            let off = compile(&m, FuseMode::Off).unwrap();
+            let chains = compile(&m, FuseMode::Chains).unwrap();
+            let full = compile(&m, FuseMode::Full).unwrap();
+            assert_plan_invariants(&off);
+            assert_plan_invariants(&chains);
+            assert_plan_invariants(&full);
+            assert!(
+                full.step_count() <= chains.step_count()
+                    && chains.step_count() <= off.step_count(),
+                "{name}: step counts must shrink monotonically with fusion level"
+            );
+            let (fused_full, _) = full.fusion_summary();
+            let (fused_chains, _) = chains.fusion_summary();
+            assert!(fused_full > 0, "{name}: full mode must fuse something");
+            if name.starts_with("loss_eval") || name.starts_with("forward") {
+                assert!(
+                    full.step_count() < chains.step_count(),
+                    "{name}: consumer fusion must delete at least one materialized step"
+                );
+                assert!(fused_full >= fused_chains);
+            }
+        }
+    }
+
+    #[test]
+    fn loss_eval_plans_the_advertised_consumer_fusions() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let text = std::fs::read_to_string(dir.join("loss_eval_b256.hlo.txt"))
+            .expect("make artifacts");
+        let m = parse_module(&text).unwrap();
+        let p = compile(&m, FuseMode::Full).unwrap();
+        let count = |f: &dyn Fn(&Kind) -> bool| {
+            p.comps.iter().flat_map(|c| &c.steps).filter(|s| f(&s.kind)).count()
+        };
+        // The hinge-loss tail (subtract/add/maximum -> reduce-sum) and
+        // the _take validity reductions (compare/and -> reduce-and).
+        assert!(count(&|k| matches!(k, Kind::FusedReduce { .. })) >= 2);
+        // The forward hidden layers: dot -> +bias -> tanh.
+        assert!(count(&|k| matches!(k, Kind::FusedDot { .. })) >= 1);
+        // The _take embedding fetch: gather -> select(mask, ., nan).
+        assert!(count(&|k| matches!(k, Kind::FusedGather { .. })) >= 1);
     }
 }
