@@ -117,6 +117,17 @@ fn main() -> Result<()> {
                 );
             }
         }
+        // Plan-scheduler accounting (aggregated across pool workers, so
+        // steps that ran off the dispatching thread are fully counted):
+        // busy-vs-wall overlap and the measured critical path — the
+        // wall-time floor any step schedule can reach.
+        let sched = prof_rt.sched_reports();
+        if !sched.is_empty() {
+            println!("  plan-scheduler overlap per artifact:");
+            for (name, report) in sched {
+                println!("    {name:<28} {report}");
+            }
+        }
     }
 
     println!("\n== Step 5: limits analysis (paper §4.5) ==");

@@ -508,7 +508,11 @@ enum Role {
 
 /// A prepared fused-kernel evaluation: validated inputs, pre-read splat
 /// scalars, optional hot input. Holds only shared references — safe to
-/// share across pool threads, each with its own [`Scratch`].
+/// share across pool threads, each with its own [`Scratch`]. This `Sync`
+/// bound is load-bearing twice over: row-blocked kernels share one ctx
+/// across `scope_run` tasks, and the plan scheduler ([`super::sched`])
+/// additionally runs whole fused steps *on* pool workers, so a ctx may
+/// be built and consumed entirely off the dispatching thread.
 pub struct FusedCtx<'k, 't> {
     k: &'k FusedKernel,
     inputs: Vec<Option<&'t Tensor>>,
@@ -516,6 +520,14 @@ pub struct FusedCtx<'k, 't> {
     hot: Option<u16>,
     n: usize,
 }
+
+// Compile-time proof of the sharing contract above: a ctx crossing onto
+// scheduler/pool worker threads must stay `Sync` (and `Send`, for the
+// build-off-thread case) no matter what fields grow here later.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<FusedCtx<'static, 'static>>();
+};
 
 impl<'k, 't> FusedCtx<'k, 't> {
     /// Validate `inputs` (one per kernel input; `None` only at the `hot`

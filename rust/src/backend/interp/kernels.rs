@@ -14,6 +14,11 @@
 //! (`POLYGLOT_INTERP_THREADS`), and (b) the op's work crosses a fixed
 //! size threshold — small dispatches stay serial, the same
 //! "wins only at sufficient batch size" switch the `grad` subsystem uses.
+//! The pool is the executable's single **persistent parked pool**, shared
+//! with the plan-level step scheduler ([`super::sched`]): `scope_run`'s
+//! joining caller *helps* drain the queue instead of blocking, so a
+//! kernel fanning out row blocks from inside a scheduled step never
+//! oversubscribes — total runners stay at the thread budget.
 //! Every parallel path is **bitwise identical** to its serial path:
 //!
 //! * `dot` splits *output rows* across threads; each output element's
@@ -70,7 +75,8 @@ impl Par<'_> {
 }
 
 // Work thresholds below which fan-out costs more than it saves (measured
-// against `scope_run`'s ~10µs dispatch floor on small hosts).
+// against `scope_run`'s dispatch floor on small hosts; the parked pool
+// keeps that floor in the few-µs range since workers never respawn).
 const DOT_PAR_MIN_FLOPS: usize = 1 << 18;
 const REDUCE_PAR_MIN_ELEMS: usize = 1 << 16;
 const GATHER_PAR_MIN_ELEMS: usize = 1 << 15;

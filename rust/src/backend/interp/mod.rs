@@ -9,9 +9,13 @@
 //! the shared kernel library (`kernels`) — `dot` / `reduce` / `gather` /
 //! `scatter` with row-blocked parallel paths over the crate thread pool,
 //! gated by `POLYGLOT_INTERP_THREADS` and per-op size thresholds.
-//! Execution replays the cached plan; the original tree-walking
-//! evaluator (`eval`) survives as the semantic reference the golden
-//! tests compare against.
+//! Execution replays the cached plan — serially for dependency chains,
+//! or through the plan-level parallel scheduler (`sched`, gated by
+//! `POLYGLOT_INTERP_SCHED`, default on) when a computation's step
+//! dependency graph exposes concurrency: independent steps fan out over
+//! the same persistent worker pool the kernels block rows on. The
+//! original tree-walking evaluator (`eval`) survives as the semantic
+//! reference the golden tests compare against.
 //!
 //! Numerics follow the serial host baselines bit-for-bit where the
 //! artifacts are serial (scatter-add application order is
@@ -30,6 +34,7 @@ pub mod fusion;
 pub mod kernels;
 pub mod parser;
 pub mod plan;
+pub mod sched;
 pub mod value;
 
 use std::cell::{Cell, OnceCell};
@@ -63,6 +68,30 @@ fn env_profile() -> bool {
         std::env::var("POLYGLOT_INTERP_PROFILE").ok().as_deref(),
         Some("1") | Some("true")
     )
+}
+
+/// `POLYGLOT_INTERP_SCHED=on|off` toggles the plan-level parallel
+/// scheduler (default **on**; it only engages when the thread budget
+/// exceeds 1 and a computation's dependency graph has width ≥ 2).
+/// Mirrors the fusion knob so a scheduling regression can be bisected
+/// independently of fusion and thread count.
+fn env_sched() -> bool {
+    let Ok(raw) = std::env::var("POLYGLOT_INTERP_SCHED") else {
+        return true;
+    };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" => false,
+        "" | "on" | "1" => true,
+        other => {
+            // Same policy as the fusion knob: a typo must not silently
+            // re-enable the thing being bisected.
+            eprintln!(
+                "[interp] POLYGLOT_INTERP_SCHED={other:?} unrecognized \
+                 (expected on|off); scheduler OFF"
+            );
+            false
+        }
+    }
 }
 
 /// `POLYGLOT_INTERP_FUSE=off|chains|full` pins the fusion level so a
@@ -138,8 +167,15 @@ pub struct InterpExecutable {
     plan: plan::Plan,
     threads: usize,
     /// Worker pool, spawned lazily on the first dispatch that actually
-    /// crosses a kernel's parallel threshold.
+    /// crosses a kernel's parallel threshold (or schedules steps). Sized
+    /// `threads - 1`: scoped joins *help* run queued work, so the
+    /// dispatching thread is the remaining runner — total concurrency
+    /// stays exactly `threads` even when step scheduling and kernel row
+    /// blocking nest on the same pool.
     pool: OnceCell<ThreadPool>,
+    /// Step dependency graphs (one per computation), present iff the
+    /// plan-level scheduler is enabled for this executable.
+    sched: Option<sched::SchedPlan>,
     profile: Cell<bool>,
     stats: plan::StepStats,
 }
@@ -164,20 +200,37 @@ impl InterpExecutable {
         Self::from_text_mode(text, threads, mode)
     }
 
-    /// Full control: thread budget + explicit [`plan::FuseMode`]
-    /// (benches and tests that must not depend on the env knob).
+    /// Thread budget + explicit [`plan::FuseMode`] (benches and tests
+    /// that must not depend on the fusion env knob). The scheduler still
+    /// follows `POLYGLOT_INTERP_SCHED` — that is what lets CI's
+    /// determinism matrix drive the equivalence suite through both
+    /// executors; pin it with [`InterpExecutable::from_text_sched`].
     pub fn from_text_mode(
         text: &str,
         threads: usize,
         mode: plan::FuseMode,
     ) -> Result<InterpExecutable> {
+        Self::from_text_sched(text, threads, mode, env_sched())
+    }
+
+    /// Full control: thread budget + fusion mode + scheduler toggle,
+    /// independent of every env knob (the E12 `sched_off` leg and the
+    /// scheduler stress tests).
+    pub fn from_text_sched(
+        text: &str,
+        threads: usize,
+        mode: plan::FuseMode,
+        sched: bool,
+    ) -> Result<InterpExecutable> {
         let module = parser::parse_module(text)?;
         let plan = plan::compile(&module, mode)?;
+        let sched = sched.then(|| sched::SchedPlan::build(&plan));
         Ok(InterpExecutable {
             module,
             plan,
             threads: threads.max(1),
             pool: OnceCell::new(),
+            sched,
             profile: Cell::new(env_profile()),
             stats: plan::StepStats::default(),
         })
@@ -191,7 +244,9 @@ impl InterpExecutable {
         if self.threads > 1 {
             Par {
                 threads: self.threads,
-                pool: Some(self.pool.get_or_init(|| ThreadPool::new(self.threads))),
+                // threads - 1 workers + the helping dispatcher = threads
+                // concurrent runners; nested fan-outs only enqueue.
+                pool: Some(self.pool.get_or_init(|| ThreadPool::new(self.threads - 1))),
             }
         } else {
             Par::serial()
@@ -209,6 +264,7 @@ impl InterpExecutable {
             plan: &self.plan,
             par: self.par(),
             stats: self.profile.get().then_some(&self.stats),
+            sched: self.sched.as_ref(),
         };
         decompose(exec.eval_entry(args)?)
     }
@@ -241,6 +297,30 @@ impl InterpExecutable {
 
     pub fn set_profiling(&self, on: bool) {
         self.profile.set(on);
+    }
+
+    /// Is the plan-level scheduler enabled (and does any computation's
+    /// graph actually expose step concurrency)?
+    pub fn sched_enabled(&self) -> bool {
+        self.sched.as_ref().is_some_and(|s| s.any_parallel())
+    }
+
+    /// `(width, depth)` of the entry computation's step graph when the
+    /// scheduler is enabled — width bounds usable step concurrency.
+    pub fn sched_shape(&self) -> Option<(usize, usize)> {
+        let s = self.sched.as_ref()?;
+        let g = &s.graphs[self.plan.entry];
+        Some((g.width, g.depth))
+    }
+
+    /// Scheduler run report (wall vs busy overlap, ready-to-start wait,
+    /// measured critical path) — populated by profiled scheduled runs.
+    pub fn sched_report(&self) -> Option<String> {
+        let s = self.sched.as_ref()?;
+        let g = &s.graphs[self.plan.entry];
+        s.stats
+            .report()
+            .map(|r| format!("{r} | entry graph width {}, depth {}", g.width, g.depth))
     }
 }
 
@@ -288,6 +368,10 @@ impl Compiled for InterpExecutable {
     fn fusion_summary(&self) -> Option<(u64, u64)> {
         Some(InterpExecutable::fusion_summary(self))
     }
+
+    fn sched_report(&self) -> Option<String> {
+        InterpExecutable::sched_report(self)
+    }
 }
 
 #[cfg(test)]
@@ -296,9 +380,9 @@ mod tests {
     use crate::runtime::{lit_f32, lit_i32};
 
     /// Run `text` through every engine configuration — compiled plan at
-    /// every fusion level and 1/2/8 threads, plus the tree-walking
-    /// reference — asserting all outputs are bitwise identical, then
-    /// return the fully-fused single-thread outputs.
+    /// every fusion level, 1/2/8 threads, scheduler on and off, plus the
+    /// tree-walking reference — asserting all outputs are bitwise
+    /// identical, then return the fully-fused single-thread outputs.
     fn run_all(text: &str, inputs: &[&Literal]) -> Vec<Literal> {
         use super::plan::FuseMode;
         let reference = InterpExecutable::from_text_threads(text, 1)
@@ -306,15 +390,17 @@ mod tests {
             .run_treewalk(inputs)
             .unwrap();
         let mut fused1 = None;
-        for (threads, mode) in [
-            (1usize, FuseMode::Full),
-            (2, FuseMode::Full),
-            (8, FuseMode::Full),
-            (1, FuseMode::Chains),
-            (8, FuseMode::Chains),
-            (1, FuseMode::Off),
+        for (threads, mode, sched) in [
+            (1usize, FuseMode::Full, true),
+            (2, FuseMode::Full, true),
+            (8, FuseMode::Full, true),
+            (8, FuseMode::Full, false),
+            (1, FuseMode::Chains, true),
+            (8, FuseMode::Chains, true),
+            (1, FuseMode::Off, true),
+            (8, FuseMode::Off, false),
         ] {
-            let exe = InterpExecutable::from_text_mode(text, threads, mode).unwrap();
+            let exe = InterpExecutable::from_text_sched(text, threads, mode, sched).unwrap();
             let got = exe.run(inputs).unwrap();
             assert_eq!(got.len(), reference.len(), "t={threads} mode={mode:?}");
             for (g, w) in got.iter().zip(&reference) {
@@ -867,5 +953,43 @@ ENTRY e.4 {
         let dot = stats.iter().find(|(l, _, _)| *l == "dot").expect("dot row");
         assert_eq!(dot.1, 2, "two profiled dispatches");
         assert!(stats.iter().any(|(l, _, _)| *l == "elemwise"));
+    }
+
+    #[test]
+    fn scheduler_engages_on_wide_graphs_and_reports() {
+        // Two independent unary branches -> graph width 2: the
+        // scheduler must engage at threads > 1, produce the serial
+        // executor's exact outputs, and (once profiled) report overlap
+        // and the measured critical path.
+        let text = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[64]{0} parameter(0)
+  negate.2 = f32[64]{0} negate(Arg_0.1)
+  exponential.3 = f32[64]{0} exponential(Arg_0.1)
+  ROOT add.4 = f32[64]{0} add(negate.2, exponential.3)
+}
+";
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).sin()).collect();
+        let a = lit_f32(&x, &[64]).unwrap();
+        let on =
+            InterpExecutable::from_text_sched(text, 4, plan::FuseMode::Off, true).unwrap();
+        let off =
+            InterpExecutable::from_text_sched(text, 4, plan::FuseMode::Off, false).unwrap();
+        assert!(on.sched_enabled());
+        let (w, d) = on.sched_shape().unwrap();
+        assert!(w >= 2 && d >= 2, "width {w}, depth {d}");
+        assert!(!off.sched_enabled() && off.sched_report().is_none());
+
+        let want = off.run(&[&a]).unwrap()[0].to_vec::<f32>().unwrap();
+        for _ in 0..16 {
+            let got = on.run(&[&a]).unwrap()[0].to_vec::<f32>().unwrap();
+            assert_eq!(got, want, "scheduled run diverged from serial");
+        }
+        assert!(on.sched_report().is_none(), "no report before profiling");
+        on.set_profiling(true);
+        on.run(&[&a]).unwrap();
+        let report = on.sched_report().expect("profiled scheduled run must report");
+        assert!(report.contains("critical path"), "{report}");
+        assert!(report.contains("width 2"), "{report}");
     }
 }

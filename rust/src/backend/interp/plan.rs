@@ -35,12 +35,13 @@
 //! records per-plan-op wall time (fused chains measured as one kernel),
 //! which is what `profile_hotspots` reports instead of raw HLO counts.
 
-use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::eval;
+use super::sched;
 use super::fusion::{self, EInstr, FusedKernel};
 use super::kernels::{self, Combiner, Par};
 use super::parser::{BinOp, Computation, GatherDims, Module, Op, Shape};
@@ -559,20 +560,38 @@ fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPl
 /// Per-plan-op wall-time accounting (calls + total per [`OpLabel`]).
 /// Control steps (parameter/tuple/call/while) are not timed — their cost
 /// is the inner steps, which are.
+///
+/// Counters are atomic so scheduler runs aggregate across pool workers:
+/// a fused kernel timed on whichever thread ran its step lands in the
+/// same accumulators as the serial path — `profile_hotspots` no longer
+/// under-reports hot steps that ran off the spawning thread.
 #[derive(Default)]
 pub struct StepStats {
-    calls: [Cell<u64>; N_LABELS],
-    total: [Cell<Duration>; N_LABELS],
+    calls: [AtomicU64; N_LABELS],
+    nanos: [AtomicU64; N_LABELS],
 }
 
 impl StepStats {
+    /// Record one timed step dispatch (any thread).
+    pub fn record(&self, label: OpLabel, elapsed: Duration) {
+        let k = label.index();
+        self.calls[k].fetch_add(1, Ordering::Relaxed);
+        self.nanos[k].fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
     /// `(label, calls, total)` rows for labels that ran, ordered by
     /// total time descending.
     pub fn rows(&self) -> Vec<(&'static str, u64, Duration)> {
         let mut rows: Vec<(&'static str, u64, Duration)> = OpLabel::all()
             .into_iter()
-            .filter(|l| self.calls[l.index()].get() > 0)
-            .map(|l| (l.name(), self.calls[l.index()].get(), self.total[l.index()].get()))
+            .filter(|l| self.calls[l.index()].load(Ordering::Relaxed) > 0)
+            .map(|l| {
+                (
+                    l.name(),
+                    self.calls[l.index()].load(Ordering::Relaxed),
+                    Duration::from_nanos(self.nanos[l.index()].load(Ordering::Relaxed)),
+                )
+            })
             .collect();
         rows.sort_by(|a, b| b.2.cmp(&a.2));
         rows
@@ -582,12 +601,15 @@ impl StepStats {
 // ---------------------------------------------------------------- execute
 
 /// Executor for a compiled plan. Borrowed per `run` call; `par` carries
-/// the executable's thread budget into the kernels.
+/// the executable's thread budget into the kernels; `sched` (when set,
+/// and when `par` has a pool) routes computations whose dependency
+/// graph exposes real step concurrency through the parallel scheduler.
 pub struct Exec<'a> {
     pub m: &'a Module,
     pub plan: &'a Plan,
     pub par: Par<'a>,
     pub stats: Option<&'a StepStats>,
+    pub sched: Option<&'a sched::SchedPlan>,
 }
 
 impl Exec<'_> {
@@ -606,6 +628,14 @@ impl Exec<'_> {
                 cp.n_params
             );
         }
+        if let (Some(sp), Some(pool)) = (self.sched, self.par.pool) {
+            let g = &sp.graphs[ci];
+            if g.parallel {
+                return sched::run_comp(self, ci, g, pool, args);
+            }
+            // Serial chains fall through to the inline loop below: no
+            // queueing, no slot locks, zero scheduling overhead.
+        }
         let mut args: Vec<Option<Value>> = args.into_iter().map(Some).collect();
         let mut slots: Vec<Option<Value>> = Vec::new();
         slots.resize_with(cp.n_slots, || None);
@@ -623,16 +653,14 @@ impl Exec<'_> {
                 .exec_step(ci, step, vals, &mut args)
                 .with_context(|| format!("{} (in {})", comp.instrs[step.instr].name, comp.name))?;
             if let (Some(st), Some(t0)) = (timed, t0) {
-                let k = step.label.index();
-                st.calls[k].set(st.calls[k].get() + 1);
-                st.total[k].set(st.total[k].get() + t0.elapsed());
+                st.record(step.label, t0.elapsed());
             }
             slots[step.out] = Some(v);
         }
         slots[cp.root].take().context("root value missing")
     }
 
-    fn exec_step(
+    pub(super) fn exec_step(
         &self,
         ci: usize,
         step: &Step,
@@ -717,7 +745,13 @@ impl Exec<'_> {
                 // not double-counted under the already-timed
                 // reduce/scatter step.
                 let recurse = |sci: usize, a: Vec<Value>| self.eval_comp(sci, a);
-                let untimed = Exec { m: self.m, plan: self.plan, par: self.par, stats: None };
+                let untimed = Exec {
+                    m: self.m,
+                    plan: self.plan,
+                    par: self.par,
+                    stats: None,
+                    sched: self.sched,
+                };
                 let combine = move |sci: usize, a: Vec<Value>| untimed.eval_comp(sci, a);
                 eval::exec_instr(self.m, ins, vals, args, self.par, &recurse, &combine)
             }
@@ -1173,5 +1207,148 @@ ENTRY e.3 {
         assert!(count(&|k| matches!(k, Kind::FusedDot { .. })) >= 1);
         // The _take embedding fetch: gather -> select(mask, ., nan).
         assert!(count(&|k| matches!(k, Kind::FusedGather { .. })) >= 1);
+    }
+
+    // ------------------------------------------------ dependency graph
+
+    use crate::backend::interp::sched::StepGraph;
+
+    /// Structural soundness of a step graph against its schedule: edges
+    /// only point forward (the schedule is a valid topological order),
+    /// predecessor counts match the edge lists, and every non-root step
+    /// has at least one predecessor.
+    fn assert_graph_invariants(cp: &CompPlan, g: &StepGraph) {
+        assert_eq!(g.succs.len(), cp.steps.len());
+        let mut preds = vec![0u32; cp.steps.len()];
+        for (s, succs) in g.succs.iter().enumerate() {
+            for &t in succs {
+                assert!((t as usize) > s, "edge {s}->{t} points backward");
+                preds[t as usize] += 1;
+            }
+        }
+        assert_eq!(preds, g.n_preds, "pred counts disagree with edge lists");
+        for (s, &p) in g.n_preds.iter().enumerate() {
+            assert_eq!(p == 0, g.roots.contains(&s), "root set wrong at step {s}");
+        }
+    }
+
+    #[test]
+    fn step_graph_orders_every_reader_before_the_mover() {
+        // CHAIN at Off: Arg_0.1's slot is read by add.3 (shared read)
+        // and later *moved* by multiply.5. The shared reader must be
+        // ordered before the mover or a scheduled multiply could observe
+        // (and mutate via in-place paths) storage add still reads.
+        let (_, p) = entry_plan(CHAIN, FuseMode::Off);
+        let cp = &p.comps[p.entry];
+        let g = StepGraph::build(cp);
+        assert_graph_invariants(cp, &g);
+        // Steps: p0, p1, add, negate, multiply.
+        let (add, mul) = (2usize, 4usize);
+        assert!(cp.steps[mul].args.iter().any(|&(a, mv)| a == 0 && mv));
+        assert!(
+            g.succs[add].contains(&(mul as u32)),
+            "move-into-last-consumer needs reader->mover edge (add->multiply)"
+        );
+        // multiply waits on negate (value), Arg_0.1's producer (value)
+        // and add (move ordering).
+        assert_eq!(g.n_preds[mul], 3);
+    }
+
+    #[test]
+    fn step_graph_orders_in_place_update_after_reads() {
+        // dynamic-update-slice takes its operand by move and mutates it
+        // through Arc::make_mut; the earlier dynamic-slice read of the
+        // same slot must be a graph predecessor so the scheduler cannot
+        // overlap the read with the in-place write.
+        let text = "HloModule m
+ENTRY e.7 {
+  Arg_0.1 = f32[4,2]{1,0} parameter(0)
+  Arg_1.2 = s32[] parameter(1)
+  constant.3 = s32[] constant(0)
+  dynamic-slice.4 = f32[1,2]{1,0} dynamic-slice(Arg_0.1, Arg_1.2, constant.3), dynamic_slice_sizes={1,2}
+  add.5 = f32[1,2]{1,0} add(dynamic-slice.4, dynamic-slice.4)
+  ROOT dynamic-update-slice.6 = f32[4,2]{1,0} dynamic-update-slice(Arg_0.1, add.5, Arg_1.2, constant.3)
+}
+";
+        let (m, p) = entry_plan(text, FuseMode::Off);
+        let cp = &p.comps[p.entry];
+        let g = StepGraph::build(cp);
+        assert_graph_invariants(cp, &g);
+        let comp = &m.comps[m.entry];
+        let find = |want: fn(&Op) -> bool| {
+            cp.steps.iter().position(|s| want(&comp.instrs[s.instr].op)).unwrap()
+        };
+        let ds = find(|o| matches!(o, Op::DynamicSlice { .. }));
+        let dus = find(|o| matches!(o, Op::DynamicUpdateSlice));
+        // The DUS moves the weight slot the dynamic-slice merely read.
+        let wslot = cp.steps[dus].args[0].0;
+        assert!(cp.steps[dus].args.iter().any(|&(a, mv)| a == wslot && mv));
+        assert!(cp.steps[ds].args.iter().any(|&(a, mv)| a == wslot && !mv));
+        assert!(
+            g.succs[ds].contains(&(dus as u32)),
+            "in-place write must be ordered after the shared read"
+        );
+    }
+
+    #[test]
+    fn step_graph_pins_root_and_classifies_width() {
+        // A straight chain is serial: the root-producing step is the
+        // unique sink and no level holds two compute steps.
+        let (_, p) = entry_plan(CHAIN, FuseMode::Off);
+        let cp = &p.comps[p.entry];
+        let g = StepGraph::build(cp);
+        let root_step = cp.steps.iter().position(|s| s.out == cp.root).unwrap();
+        assert!(g.succs[root_step].is_empty(), "root step must be a sink");
+        assert!(!g.parallel, "a pure chain must fall back to inline execution");
+        assert_eq!(g.width, 1);
+
+        // A diamond (two independent unary ops joined) is parallel.
+        let diamond = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  negate.2 = f32[4]{0} negate(Arg_0.1)
+  exponential.3 = f32[4]{0} exponential(Arg_0.1)
+  ROOT add.4 = f32[4]{0} add(negate.2, exponential.3)
+}
+";
+        let (_, p) = entry_plan(diamond, FuseMode::Off);
+        let cp = &p.comps[p.entry];
+        let g = StepGraph::build(cp);
+        assert_graph_invariants(cp, &g);
+        assert_eq!(g.width, 2, "negate and exponential are independent");
+        assert!(g.parallel);
+        let root_step = cp.steps.iter().position(|s| s.out == cp.root).unwrap();
+        assert!(g.succs[root_step].is_empty());
+        assert_eq!(g.n_preds[root_step], 2 + 1, "two values + one move-ordering edge");
+    }
+
+    #[test]
+    fn artifact_graphs_are_sound_and_train_step_is_wide() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        for name in [
+            "loss_eval_b256.hlo.txt",
+            "forward_b256.hlo.txt",
+            "train_step_ref_b16.hlo.txt",
+            "scatter_native_r1000.hlo.txt",
+        ] {
+            let text = std::fs::read_to_string(dir.join(name)).expect("make artifacts");
+            let m = parse_module(&text).unwrap();
+            for mode in [FuseMode::Off, FuseMode::Chains, FuseMode::Full] {
+                let p = compile(&m, mode).unwrap();
+                for cp in &p.comps {
+                    let g = StepGraph::build(cp);
+                    assert_graph_invariants(cp, &g);
+                }
+            }
+        }
+        // The tentpole's premise: the train-step entry graph exposes real
+        // step concurrency (independent per-layer grads, mask chains).
+        let text =
+            std::fs::read_to_string(dir.join("train_step_ref_b16.hlo.txt")).unwrap();
+        let m = parse_module(&text).unwrap();
+        let p = compile(&m, FuseMode::Full).unwrap();
+        let g = StepGraph::build(&p.comps[p.entry]);
+        assert!(g.parallel, "train_step entry must schedule in parallel");
+        assert!(g.width >= 2 && g.depth >= 2);
     }
 }

@@ -1,0 +1,372 @@
+//! Plan-level parallel scheduler: execute independent plan steps
+//! concurrently instead of replaying the schedule serially.
+//!
+//! At `Backend::compile` time [`SchedPlan::build`] derives each
+//! computation's **step dependency graph** from the plan's exact slot
+//! liveness — the same reads/moves the serial executor replays:
+//!
+//! * **value edge** — the step producing a slot precedes every step that
+//!   reads it;
+//! * **move edge** — every non-moving reader of a slot precedes the
+//!   slot's *moving* reader (the planner flags exactly one move per read
+//!   slot). This both pins in-place mutation (`Step::in_place`, DUS /
+//!   scatter `Arc::make_mut`) after all shared reads and guarantees the
+//!   clones those readers took are dropped before the mover checks
+//!   uniqueness;
+//! * **parameter steps** have no inputs and seed the ready set.
+//!
+//! Execution fans the ready set out over the executable's persistent
+//! [`ThreadPool`] via [`ThreadPool::scope_dyn`]: a finished step
+//! decrements its successors' pending counts and runs one newly-ready
+//! successor *inline* (serial chains never re-enter the queue), spawning
+//! the rest. Kernel-internal row blocking issues nested `scope_run`
+//! fan-outs against the **same** pool — safe, because scoped joins help
+//! (see `util::threadpool`) — so step-level and kernel-level parallelism
+//! share one fixed set of threads and never oversubscribe.
+//!
+//! Computations whose graph has no two concurrently-runnable steps
+//! (`width < 2`, e.g. while-loop bodies that are one long chain) are
+//! marked `parallel: false` and keep the serial in-line loop — zero
+//! scheduling overhead on serial chains.
+//!
+//! **Determinism:** scheduling order never changes any step's inputs or
+//! kernel geometry, every conflicting pair of steps is ordered by an
+//! edge, and no kernel reassociates across its split — so outputs are
+//! bitwise identical to the serial executor at every thread count, with
+//! the scheduler on or off (`POLYGLOT_INTERP_SCHED` bisects it).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::parser::Op;
+use super::plan::{CompPlan, Exec, OpLabel, Plan};
+use super::value::Value;
+use crate::util::threadpool::ThreadPool;
+
+/// Step dependency graph of one compiled computation.
+pub struct StepGraph {
+    /// `succs[s]` = steps that must wait for step `s` (deduplicated).
+    pub succs: Vec<Vec<u32>>,
+    /// Number of distinct predecessors per step.
+    pub n_preds: Vec<u32>,
+    /// Steps with no predecessors (the initial ready set).
+    pub roots: Vec<usize>,
+    /// Maximum number of steps on one level of the longest-path
+    /// layering — an upper bound on usable step concurrency.
+    pub width: usize,
+    /// Longest dependency chain length (levels).
+    pub depth: usize,
+    /// Worth scheduling: some level holds ≥ 2 steps.
+    pub parallel: bool,
+}
+
+impl StepGraph {
+    /// Build the graph from a compiled computation's schedule.
+    pub fn build(cp: &CompPlan) -> StepGraph {
+        let n = cp.steps.len();
+        // Producer of each slot (slots are written exactly once).
+        let mut producer = vec![usize::MAX; cp.n_slots];
+        for (s, step) in cp.steps.iter().enumerate() {
+            producer[step.out] = s;
+        }
+        // Readers per slot, in schedule order, and the moving reader.
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        let mut readers: Vec<Vec<u32>> = vec![Vec::new(); cp.n_slots];
+        let mut mover: Vec<usize> = vec![usize::MAX; cp.n_slots];
+        for (s, step) in cp.steps.iter().enumerate() {
+            for &(a, mv) in &step.args {
+                let p = producer[a];
+                if p != usize::MAX && p != s {
+                    edges.push((p as u32, s as u32));
+                }
+                readers[a].push(s as u32);
+                if mv {
+                    mover[a] = s;
+                }
+            }
+        }
+        for (a, m) in mover.iter().enumerate() {
+            if *m == usize::MAX {
+                continue;
+            }
+            for &r in &readers[a] {
+                if r as usize != *m {
+                    edges.push((r, *m as u32));
+                }
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+
+        let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut n_preds = vec![0u32; n];
+        for &(from, to) in &edges {
+            succs[from as usize].push(to);
+            n_preds[to as usize] += 1;
+        }
+        let roots: Vec<usize> =
+            (0..n).filter(|&s| n_preds[s] == 0).collect();
+
+        // Longest-path layering (the schedule is already topological:
+        // every edge goes forward).
+        let mut level = vec![0u32; n];
+        for &(from, to) in &edges {
+            level[to as usize] = level[to as usize].max(level[from as usize] + 1);
+        }
+        let depth = level.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
+        // Width over *compute* steps only: parameter/tuple bookkeeping is
+        // near-free, so a long chain hanging off several parameters is
+        // still serial for scheduling purposes.
+        let mut occupancy = vec![0usize; depth];
+        for (s, &l) in level.iter().enumerate() {
+            if cp.steps[s].label != OpLabel::Control {
+                occupancy[l as usize] += 1;
+            }
+        }
+        let width = occupancy.iter().copied().max().unwrap_or(0);
+        // Scheduling a 3-step computation buys nothing; the dispatch
+        // cost only amortizes when real concurrency exists.
+        let parallel = width >= 2 && n >= 4;
+        StepGraph { succs, n_preds, roots, width, depth, parallel }
+    }
+}
+
+/// Compile-time scheduler state for a whole plan: one graph per
+/// computation plus run accounting.
+pub struct SchedPlan {
+    pub graphs: Vec<StepGraph>,
+    pub stats: SchedStats,
+}
+
+impl SchedPlan {
+    pub fn build(plan: &Plan) -> SchedPlan {
+        SchedPlan {
+            graphs: plan.comps.iter().map(StepGraph::build).collect(),
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// Does any computation actually schedule in parallel?
+    pub fn any_parallel(&self) -> bool {
+        self.graphs.iter().any(|g| g.parallel)
+    }
+}
+
+/// Cross-thread scheduler accounting (populated while profiling is on,
+/// except `runs`, which always counts scheduled computation executions).
+/// `wait` is ready-to-start latency summed over steps; `busy` the summed
+/// step run time; `critical` the longest dependency chain weighted by
+/// the measured step times — the lower bound any schedule can reach.
+#[derive(Default)]
+pub struct SchedStats {
+    pub runs: AtomicU64,
+    pub steps: AtomicU64,
+    pub wall_nanos: AtomicU64,
+    pub busy_nanos: AtomicU64,
+    pub wait_nanos: AtomicU64,
+    pub critical_nanos: AtomicU64,
+}
+
+impl SchedStats {
+    /// Human-readable per-executable report, `None` before any profiled
+    /// scheduled run.
+    pub fn report(&self) -> Option<String> {
+        let runs = self.runs.load(Ordering::Relaxed);
+        let steps = self.steps.load(Ordering::Relaxed);
+        if runs == 0 || steps == 0 {
+            return None;
+        }
+        let wall = Duration::from_nanos(self.wall_nanos.load(Ordering::Relaxed));
+        let busy = Duration::from_nanos(self.busy_nanos.load(Ordering::Relaxed));
+        let wait = Duration::from_nanos(self.wait_nanos.load(Ordering::Relaxed));
+        let critical = Duration::from_nanos(self.critical_nanos.load(Ordering::Relaxed));
+        let util = busy.as_secs_f64() / wall.as_secs_f64().max(f64::MIN_POSITIVE);
+        Some(format!(
+            "sched: {runs} runs, {steps} steps | wall {wall:.2?}, busy {busy:.2?} \
+             (x{util:.2} overlap), wait {wait:.2?} | critical path {critical:.2?}"
+        ))
+    }
+}
+
+/// Per-step timing collected during one profiled scheduled run, all
+/// nanoseconds relative to the run's start.
+struct StepTimes {
+    ready: Vec<AtomicU64>,
+    start: Vec<AtomicU64>,
+    run: Vec<AtomicU64>,
+}
+
+impl StepTimes {
+    fn new(n: usize) -> StepTimes {
+        StepTimes {
+            ready: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            start: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            run: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// Execute computation `ci` by scheduling its ready steps over the pool.
+/// Semantics identical to `Exec::eval_comp`'s serial loop.
+pub fn run_comp(
+    exec: &Exec<'_>,
+    ci: usize,
+    g: &StepGraph,
+    pool: &ThreadPool,
+    args: Vec<Value>,
+) -> Result<Value> {
+    let cp = &exec.plan.comps[ci];
+    let comp = &exec.m.comps[ci];
+    let n = cp.steps.len();
+
+    let slots: Vec<Mutex<Option<Value>>> = (0..cp.n_slots).map(|_| Mutex::new(None)).collect();
+    let params: Vec<Mutex<Option<Value>>> = args.into_iter().map(|v| Mutex::new(Some(v))).collect();
+    let pending: Vec<AtomicU32> = g.n_preds.iter().map(|&p| AtomicU32::new(p)).collect();
+    let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let aborted = AtomicBool::new(false);
+    let profiled = exec.stats.map(|st| (st, StepTimes::new(n), Instant::now()));
+    let t0 = Instant::now();
+
+    pool.scope_dyn(&g.roots, &|task, sp| {
+        // Continuation inlining: after finishing a step, run one
+        // newly-released successor on this thread and enqueue the rest —
+        // a serial chain stays on one thread with no queue round-trips.
+        let mut next = Some(task);
+        while let Some(s) = next.take() {
+            if aborted.load(Ordering::Relaxed) {
+                return;
+            }
+            let step = &cp.steps[s];
+            let timed = profiled
+                .as_ref()
+                .filter(|_| step.label != OpLabel::Control)
+                .map(|(st, times, base)| (*st, times, base.elapsed()));
+            if let Err(e) = run_step(exec, ci, s, &slots, &params) {
+                // First error wins; stop releasing successors so the
+                // outstanding set drains instead of cascading failures.
+                aborted.store(true, Ordering::Relaxed);
+                let mut slot = error.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e.context(format!(
+                        "{} (in {})",
+                        comp.instrs[step.instr].name, comp.name
+                    )));
+                }
+                return;
+            }
+            if let Some((st, times, started)) = timed {
+                let elapsed = profiled.as_ref().unwrap().2.elapsed() - started;
+                st.record(step.label, elapsed);
+                times.start[s].store(started.as_nanos() as u64, Ordering::Relaxed);
+                times.run[s].store(elapsed.as_nanos() as u64, Ordering::Relaxed);
+            }
+            let released = profiled.as_ref().map(|(_, _, base)| base.elapsed());
+            for &t in &g.succs[s] {
+                let t = t as usize;
+                if pending[t].fetch_sub(1, Ordering::AcqRel) == 1 {
+                    if let Some((_, times, _)) = &profiled {
+                        times.ready[t].store(
+                            released.unwrap_or_default().as_nanos() as u64,
+                            Ordering::Relaxed,
+                        );
+                    }
+                    if next.is_none() {
+                        next = Some(t);
+                    } else {
+                        sp.spawn(t);
+                    }
+                }
+            }
+        }
+    });
+
+    if let Some(e) = error.into_inner().unwrap() {
+        return Err(e);
+    }
+    if let Some(sched) = exec.sched {
+        let st = &sched.stats;
+        st.runs.fetch_add(1, Ordering::Relaxed);
+        if let Some((_, times, _)) = &profiled {
+            st.steps.fetch_add(n as u64, Ordering::Relaxed);
+            st.wall_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let mut busy = 0u64;
+            let mut wait = 0u64;
+            for s in 0..n {
+                busy += times.run[s].load(Ordering::Relaxed);
+                wait += times.start[s]
+                    .load(Ordering::Relaxed)
+                    .saturating_sub(times.ready[s].load(Ordering::Relaxed));
+            }
+            st.busy_nanos.fetch_add(busy, Ordering::Relaxed);
+            st.wait_nanos.fetch_add(wait, Ordering::Relaxed);
+            st.critical_nanos.fetch_add(critical_path(g, times), Ordering::Relaxed);
+        }
+    }
+    slots[cp.root]
+        .lock()
+        .unwrap()
+        .take()
+        .context("root value missing")
+}
+
+/// Longest dependency chain weighted by the measured per-step run times
+/// (nanoseconds) — the wall-time floor for this run under any schedule.
+fn critical_path(g: &StepGraph, times: &StepTimes) -> u64 {
+    let n = g.succs.len();
+    let mut finish = vec![0u64; n];
+    let mut best = 0u64;
+    for s in 0..n {
+        // Steps are indexed in (topological) schedule order.
+        let f = finish[s] + times.run[s].load(Ordering::Relaxed);
+        best = best.max(f);
+        for &t in &g.succs[s] {
+            let t = t as usize;
+            finish[t] = finish[t].max(f);
+        }
+    }
+    best
+}
+
+/// Execute one step against the shared slot table, mirroring the serial
+/// loop's move/clone discipline: the moving reader takes the value out,
+/// others clone the `Arc`-backed tensor (cheap).
+fn run_step(
+    exec: &Exec<'_>,
+    ci: usize,
+    s: usize,
+    slots: &[Mutex<Option<Value>>],
+    params: &[Mutex<Option<Value>>],
+) -> Result<()> {
+    let cp = &exec.plan.comps[ci];
+    let comp = &exec.m.comps[ci];
+    let step = &cp.steps[s];
+
+    // Parameter steps read the (otherwise untouched) argument table;
+    // intercepting them here keeps `exec_step`'s `args` slice empty so
+    // no lock is held across a kernel.
+    if let Op::Parameter(k) = &comp.instrs[step.instr].op {
+        let v = params
+            .get(*k)
+            .and_then(|m| m.lock().unwrap().take())
+            .with_context(|| format!("missing argument {k}"))?;
+        *slots[step.out].lock().unwrap() = Some(v);
+        return Ok(());
+    }
+
+    let mut vals = Vec::with_capacity(step.args.len());
+    for &(a, mv) in &step.args {
+        let mut slot = slots[a].lock().unwrap();
+        let v = if mv { slot.take() } else { slot.clone() };
+        drop(slot);
+        vals.push(v.with_context(|| {
+            format!("operand slot {a} of {} not live", comp.instrs[step.instr].name)
+        })?);
+    }
+    let mut no_args: [Option<Value>; 0] = [];
+    let v = exec.exec_step(ci, step, vals, &mut no_args)?;
+    *slots[step.out].lock().unwrap() = Some(v);
+    Ok(())
+}

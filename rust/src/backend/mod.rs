@@ -58,6 +58,14 @@ pub trait Compiled {
     fn fusion_summary(&self) -> Option<(u64, u64)> {
         None
     }
+
+    /// Plan-scheduler run report — step overlap, ready-to-start wait and
+    /// the measured critical path — when the backend schedules plan
+    /// steps (the interpreter) and op profiling captured at least one
+    /// scheduled run. `None` for opaque backends or unprofiled runs.
+    fn sched_report(&self) -> Option<String> {
+        None
+    }
 }
 
 /// An execution backend: compiles artifacts into [`Compiled`] handles.

@@ -1,0 +1,300 @@
+//! `bench_check` — the CI perf-regression gate over E12's JSON output.
+//!
+//! Compares a freshly benched `BENCH_interp.json` against the committed
+//! reference snapshot `BENCH_interp.ref.json`:
+//!
+//! * **wall time**: `planN_s` per artifact may not regress more than
+//!   `--tolerance` (default 25%). Timings are noisy on shared runners, so
+//!   only the sched-on threaded leg — the number the scheduler PR is
+//!   accountable for — gates; the other columns are reported as context.
+//!   While the reference is marked `"provisional": true` (authored
+//!   estimate, not a runner measurement) wall-time deltas are advisory
+//!   only and never fail the gate.
+//! * **step counts**: `plan_steps_full` / `plan_steps_off` must match the
+//!   reference **exactly**. These are deterministic planner facts — any
+//!   drift means fusion or planning changed and the reference (and the
+//!   PR description) must say so.
+//!
+//! `--refresh` rewrites the reference from the current JSON instead of
+//! comparing: drops the `provisional` flag, records the runner's core
+//! count, and keeps a note naming the refresh source. CI runs this on a
+//! manual `workflow_dispatch` so the first real nightly measurement can
+//! be committed as the durable baseline.
+//!
+//! ```text
+//! bench_check [--current BENCH_interp.json] [--reference BENCH_interp.ref.json]
+//!             [--tolerance 0.25] [--refresh]
+//! ```
+//!
+//! Exit status: 0 = gate passed (or refresh written), 1 = regression,
+//! 2 = bad invocation / unreadable input.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use polyglot_gpu::util::json::Json;
+
+struct Args {
+    current: String,
+    reference: String,
+    tolerance: f64,
+    refresh: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        current: "BENCH_interp.json".to_string(),
+        reference: "BENCH_interp.ref.json".to_string(),
+        tolerance: 0.25,
+        refresh: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut take = |name: &str| it.next().ok_or(format!("{name} wants a value"));
+        match a.as_str() {
+            "--current" => args.current = take("--current")?,
+            "--reference" => args.reference = take("--reference")?,
+            "--tolerance" => {
+                let v = take("--tolerance")?;
+                args.tolerance =
+                    v.parse().map_err(|_| format!("--tolerance {v:?} is not a number"))?;
+            }
+            "--refresh" => args.refresh = true,
+            "--help" | "-h" => {
+                return Err("usage: bench_check [--current F] [--reference F] \
+                            [--tolerance 0.25] [--refresh]"
+                    .to_string())
+            }
+            other => return Err(format!("unknown argument {other:?} (see --help)")),
+        }
+    }
+    Ok(args)
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+/// `sweep[artifact == name][key]`, if present.
+fn row<'j>(j: &'j Json, name: &str, key: &str) -> Option<&'j Json> {
+    j.get("sweep")?.as_arr()?.iter().find_map(|e| {
+        if e.get("artifact")?.as_str()? == name {
+            e.get(key)
+        } else {
+            None
+        }
+    })
+}
+
+fn artifact_names(j: &Json) -> Vec<String> {
+    j.get("sweep")
+        .and_then(|s| s.as_arr())
+        .map(|a| {
+            a.iter()
+                .filter_map(|e| e.get("artifact").and_then(|v| v.as_str()))
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Rewrite the reference from the current run: measured numbers, no
+/// `provisional` flag, runner core count recorded for context (perf
+/// deltas across differently-sized runners are expected, not regressions).
+fn refresh(current: &Json, reference_path: &str) -> Result<(), String> {
+    let Json::Obj(cur) = current else {
+        return Err("current bench JSON is not an object".to_string());
+    };
+    let mut out: BTreeMap<String, Json> = cur.clone();
+    out.remove("provisional");
+    if !out.contains_key("cores") {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        out.insert("cores".to_string(), Json::Num(cores as f64));
+    }
+    out.insert(
+        "note".to_string(),
+        Json::Str(
+            "Reference snapshot refreshed by bench_check --refresh from a real \
+             bench-smoke run. Step counts are exact planner facts; timings gate \
+             planN_s within the tolerance bench_check enforces."
+                .to_string(),
+        ),
+    );
+    let mut text = Json::Obj(out).render();
+    text.push('\n');
+    std::fs::write(reference_path, text)
+        .map_err(|e| format!("cannot write {reference_path}: {e}"))?;
+    println!("refreshed {reference_path} from current run (provisional flag dropped)");
+    Ok(())
+}
+
+fn check(current: &Json, reference: &Json, tolerance: f64) -> u32 {
+    let provisional =
+        reference.get("provisional").and_then(|v| v.as_bool()) == Some(true);
+    if provisional {
+        println!(
+            "reference is provisional (authored estimate): wall-time deltas are \
+             advisory; only step counts gate"
+        );
+    }
+    let mut failures = 0u32;
+    let ref_names = artifact_names(reference);
+    let cur_names = artifact_names(current);
+    for name in &ref_names {
+        if !cur_names.contains(name) {
+            println!("FAIL {name}: present in reference but missing from current run");
+            failures += 1;
+            continue;
+        }
+        // Deterministic planner facts: exact match, provisional or not.
+        for key in ["plan_steps_full", "plan_steps_off"] {
+            let then = row(reference, name, key).and_then(|v| v.as_i64());
+            let now = row(current, name, key).and_then(|v| v.as_i64());
+            match (then, now) {
+                (Some(t), Some(n)) if t != n => {
+                    println!(
+                        "FAIL {name}: {key} changed {t} -> {n} (plans must match the \
+                         reference exactly; refresh the snapshot if intentional)"
+                    );
+                    failures += 1;
+                }
+                (Some(_), None) => {
+                    println!("FAIL {name}: {key} missing from current run");
+                    failures += 1;
+                }
+                _ => {}
+            }
+        }
+        // Wall time: planN_s gates, the rest is printed as context.
+        for key in ["planN_s", "plan1_s", "sched_off_s", "treewalk_s"] {
+            let (Some(then), Some(now)) = (
+                row(reference, name, key).and_then(|v| v.as_f64()),
+                row(current, name, key).and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            if then <= 0.0 {
+                continue;
+            }
+            let delta = (now - then) / then;
+            let gated = key == "planN_s" && !provisional;
+            if gated && delta > tolerance {
+                println!(
+                    "FAIL {name}: {key} regressed {:+.1}% (tolerance {:.0}%): \
+                     {then:.6}s -> {now:.6}s",
+                    delta * 100.0,
+                    tolerance * 100.0
+                );
+                failures += 1;
+            } else {
+                println!("  ok {name:<24} {key:<12} {:+7.1}%", delta * 100.0);
+            }
+        }
+    }
+    for name in &cur_names {
+        if !ref_names.contains(name) {
+            println!(
+                "note: {name} benched but absent from the reference (refresh to track it)"
+            );
+        }
+    }
+    failures
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let current = match load(&args.current) {
+        Ok(j) => j,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.refresh {
+        return match refresh(&current, &args.reference) {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(msg) => {
+                eprintln!("{msg}");
+                ExitCode::from(2)
+            }
+        };
+    }
+    let reference = match load(&args.reference) {
+        Ok(j) => j,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let failures = check(&current, &reference, args.tolerance);
+    if failures > 0 {
+        eprintln!("bench_check: {failures} failure(s)");
+        ExitCode::FAILURE
+    } else {
+        println!("bench_check: gate passed");
+        ExitCode::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep_doc(steps_full: i64, plan_n_s: f64, provisional: bool) -> Json {
+        let mut e = BTreeMap::new();
+        e.insert("artifact".into(), Json::Str("a1".into()));
+        e.insert("planN_s".into(), Json::Num(plan_n_s));
+        e.insert("plan_steps_full".into(), Json::Num(steps_full as f64));
+        e.insert("plan_steps_off".into(), Json::Num(10.0));
+        let mut m = BTreeMap::new();
+        m.insert("sweep".into(), Json::Arr(vec![Json::Obj(e)]));
+        if provisional {
+            m.insert("provisional".into(), Json::Bool(true));
+        }
+        Json::Obj(m)
+    }
+
+    #[test]
+    fn passes_within_tolerance() {
+        let reference = sweep_doc(8, 0.010, false);
+        let current = sweep_doc(8, 0.012, false); // +20% < 25%
+        assert_eq!(check(&current, &reference, 0.25), 0);
+    }
+
+    #[test]
+    fn fails_on_wall_time_regression() {
+        let reference = sweep_doc(8, 0.010, false);
+        let current = sweep_doc(8, 0.014, false); // +40%
+        assert_eq!(check(&current, &reference, 0.25), 1);
+    }
+
+    #[test]
+    fn provisional_reference_never_gates_wall_time() {
+        let reference = sweep_doc(8, 0.001, true);
+        let current = sweep_doc(8, 1.0, true); // 1000x "regression", advisory
+        assert_eq!(check(&current, &reference, 0.25), 0);
+    }
+
+    #[test]
+    fn step_counts_gate_even_when_provisional() {
+        let reference = sweep_doc(8, 0.010, true);
+        let current = sweep_doc(9, 0.010, true);
+        assert_eq!(check(&current, &reference, 0.25), 1);
+    }
+
+    #[test]
+    fn missing_artifact_fails() {
+        let reference = sweep_doc(8, 0.010, false);
+        let mut m = BTreeMap::new();
+        m.insert("sweep".into(), Json::Arr(vec![]));
+        assert!(check(&Json::Obj(m), &reference, 0.25) >= 1);
+    }
+}

@@ -153,4 +153,10 @@ impl Executable {
     pub fn fusion_summary(&self) -> Option<(u64, u64)> {
         self.compiled.fusion_summary()
     }
+
+    /// Plan-scheduler report (overlap / wait / critical path), when the
+    /// backend scheduled steps under op profiling; `None` otherwise.
+    pub fn sched_report(&self) -> Option<String> {
+        self.compiled.sched_report()
+    }
 }

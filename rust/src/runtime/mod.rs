@@ -147,6 +147,22 @@ impl Runtime {
         rows
     }
 
+    /// Per-artifact `(name, report)` plan-scheduler run reports for
+    /// every compiled executable that scheduled steps under op
+    /// profiling — step overlap, ready-to-start wait, and the measured
+    /// critical path (the wall-time floor any schedule can reach).
+    /// Sorted by name for stable reporting.
+    pub fn sched_reports(&self) -> Vec<(String, String)> {
+        let mut rows: Vec<(String, String)> = self
+            .cache
+            .borrow()
+            .values()
+            .filter_map(|e| e.exe.sched_report().map(|r| (e.exe.name().to_string(), r)))
+            .collect();
+        rows.sort();
+        rows
+    }
+
     /// Per-artifact `(name, fused, total)` plan-step counts for every
     /// compiled executable whose backend exposes a plan (the
     /// interpreter) — `fused / total` is that artifact's fusion

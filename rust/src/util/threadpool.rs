@@ -1,62 +1,107 @@
-//! Fixed-size thread pool (rayon/tokio are unavailable offline).
+//! Persistent parked worker pool (rayon/tokio are unavailable offline).
 //!
 //! Used by the corpus generator (per-shard synthesis), the data pipeline's
-//! producer threads, and the TCP server's connection handlers.
+//! producer threads, the TCP server's connection handlers, the gradient
+//! subsystem's sharded scatter, and — since the plan-level scheduler — the
+//! HLO interpreter, where *step-level* parallelism (independent plan steps)
+//! and *kernel-internal* row blocking share this one pool.
+//!
+//! Design: one shared FIFO injector queue under a mutex, workers park on a
+//! condvar when it drains. Joins **help**: a thread waiting for its own
+//! scoped tasks pops and runs queued jobs (its own or anyone else's)
+//! instead of blocking. That is the permit discipline that lets nested
+//! fan-outs share the pool without oversubscribing — a worker executing a
+//! plan step whose kernel fans out again never spawns a thread and never
+//! deadlocks, because every waiter drains the queue while it waits and
+//! every queued task eventually runs on one of the fixed `threads + 1`
+//! participating threads (workers + the joining caller).
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-enum Msg {
-    Run(Job),
-    Shutdown,
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
 }
 
-/// A fixed pool of worker threads consuming a shared queue.
+struct Inner {
+    state: Mutex<PoolState>,
+    /// Workers park here when the queue is empty.
+    work_cv: Condvar,
+}
+
+/// A fixed pool of parked worker threads consuming a shared queue.
+/// `&ThreadPool` is `Sync`: kernels and the plan scheduler share one
+/// instance across worker threads.
 pub struct ThreadPool {
-    tx: mpsc::Sender<Msg>,
+    inner: Arc<Inner>,
     workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Run a job with worker-grade panic isolation: a panicking job must not
+/// kill its thread (or a helping caller), or jobs queued behind it would
+/// never run and scoped joins would wait forever.
+fn run_isolated(job: Job) {
+    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+        eprintln!("[threadpool] job panicked; worker continues");
+    }
 }
 
 impl ThreadPool {
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
+        let inner = Arc::new(Inner {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
         let workers = (0..threads)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let inner = Arc::clone(&inner);
                 thread::Builder::new()
                     .name(format!("pool-{i}"))
                     .spawn(move || loop {
-                        let msg = rx.lock().unwrap().recv();
-                        match msg {
-                            Ok(Msg::Run(job)) => {
-                                // Panic-isolate jobs: a panicking job must
-                                // not kill the worker, or jobs still queued
-                                // behind it would never run *or* drop —
-                                // leaving scope_run's completion loop (and
-                                // par_map's collector) waiting forever.
-                                let caught = std::panic::catch_unwind(
-                                    std::panic::AssertUnwindSafe(job),
-                                );
-                                if caught.is_err() {
-                                    eprintln!("[threadpool] job panicked; worker continues");
+                        let job = {
+                            let mut st = inner.state.lock().unwrap();
+                            loop {
+                                if let Some(j) = st.queue.pop_front() {
+                                    break Some(j);
                                 }
+                                if st.shutdown {
+                                    break None;
+                                }
+                                st = inner.work_cv.wait(st).unwrap();
                             }
-                            Ok(Msg::Shutdown) | Err(_) => break,
+                        };
+                        match job {
+                            Some(j) => run_isolated(j),
+                            None => break,
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        Self { tx, workers }
+        Self { inner, workers }
     }
 
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx.send(Msg::Run(Box::new(job))).expect("pool closed");
+        self.push(Box::new(job));
+    }
+
+    fn push(&self, job: Job) {
+        let mut st = self.inner.state.lock().unwrap();
+        assert!(!st.shutdown, "pool closed");
+        st.queue.push_back(job);
+        drop(st);
+        self.inner.work_cv.notify_one();
+    }
+
+    /// Steal one queued job, if any — the helping-join primitive.
+    fn try_pop(&self) -> Option<Job> {
+        self.inner.state.lock().unwrap().queue.pop_front()
     }
 
     pub fn threads(&self) -> usize {
@@ -66,47 +111,185 @@ impl ThreadPool {
     /// Run `f(0) … f(n-1)` on the pool and block until every task has
     /// finished — a *scoped* fan-out: `f` may borrow from the caller's
     /// stack, unlike `execute`, because this call does not return while
-    /// any task is live. This is the gradient subsystem's dispatch
-    /// primitive: it avoids the per-call `Arc`/`to_vec` copies `par_map`
-    /// pays for `'static` closures.
+    /// any task is live. This is the kernel/grad dispatch primitive: it
+    /// avoids the per-call `Arc`/`to_vec` copies `par_map` pays for
+    /// `'static` closures. The caller does not idle at the join: it pops
+    /// and runs queued jobs (its own tasks, or anyone else's) until its
+    /// scope drains — which is what makes *nested* scope_run calls from
+    /// pool workers safe to issue against the same pool.
     pub fn scope_run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
         if n == 0 {
             return;
         }
+        if n == 1 {
+            f(0); // serial chain: zero dispatch overhead
+            return;
+        }
         // SAFETY: the borrowed closure is lifetime-erased so it can ride
-        // the pool's 'static job channel. Soundness argument: every job
-        // either runs (and sends on `tx`) or is dropped un-run with its
-        // channel; the loop below does not return until all senders are
-        // gone or `n` completions arrived, so no job can touch `f` after
-        // this frame unwinds.
+        // the pool's 'static job queue. Soundness: every enqueued task
+        // bumps `done` after `f` returns or unwinds, and this frame does
+        // not return until `done == n`, so no task can touch `f` after
+        // the frame is gone. Jobs are never dropped un-run while a scope
+        // is live (Drop needs `&mut self`, scoped calls hold `&self`).
         let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
         };
-        let (tx, rx) = mpsc::channel::<()>();
+        let scope = Arc::new(ScopeSync::default());
         for i in 0..n {
-            let tx = tx.clone();
-            self.execute(move || {
-                f_static(i);
-                let _ = tx.send(());
-            });
+            let scope = Arc::clone(&scope);
+            self.push(Box::new(move || {
+                let caught =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f_static(i)));
+                if caught.is_err() {
+                    scope.panicked.store(true, Ordering::SeqCst);
+                }
+                scope.complete();
+            }));
         }
-        drop(tx);
-        let mut done = 0usize;
-        while done < n {
-            match rx.recv() {
-                Ok(()) => done += 1,
-                Err(_) => break, // all senders gone: every job ran or unwound
+        self.help_until(&scope, n);
+        assert!(
+            !scope.panicked.load(Ordering::SeqCst),
+            "scope_run: a pool task panicked"
+        );
+    }
+
+    /// Dynamic scoped task set: seed tasks may [`Spawner::spawn`] more
+    /// tasks; returns when every spawned task has completed. Same borrow
+    /// contract and helping join as [`ThreadPool::scope_run`] — this is
+    /// the plan scheduler's driver: ready steps are seeded, each finished
+    /// step spawns the successors it released.
+    pub fn scope_dyn(&self, seed: &[usize], f: &(dyn Fn(usize, &Spawner) + Sync)) {
+        if seed.is_empty() {
+            return;
+        }
+        // SAFETY: as in scope_run — no task outlives this frame because
+        // the helping loop below only returns at `done == spawned`, and
+        // both counters are owned by the Arc'd scope.
+        let f_static: &'static (dyn Fn(usize, &Spawner) + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize, &Spawner) + Sync),
+                &'static (dyn Fn(usize, &Spawner) + Sync),
+            >(f)
+        };
+        let scope = Arc::new(DynScope {
+            sync: ScopeSync::default(),
+            spawned: Mutex::new(0),
+        });
+        let spawner = Spawner { pool: self, scope: &scope, f: f_static };
+        for &t in seed {
+            spawner.spawn(t);
+        }
+        // Help until everything spawned (including tasks spawned by
+        // tasks) has completed. `spawned` only grows from live tasks, and
+        // a task increments it *before* its own completion is counted, so
+        // observing done == spawned with no live tasks is a fixed point.
+        loop {
+            if let Some(job) = self.try_pop() {
+                run_isolated(job);
+                continue;
+            }
+            let done = self.scope_wait(&scope.sync, || *scope.spawned.lock().unwrap());
+            if done {
+                break;
             }
         }
-        assert!(done == n, "scope_run: a pool task panicked ({done}/{n} completed)");
+        assert!(
+            !scope.sync.panicked.load(Ordering::SeqCst),
+            "scope_dyn: a pool task panicked"
+        );
+    }
+
+    /// Help-run queued jobs until `scope.done == n`.
+    fn help_until(&self, scope: &ScopeSync, n: usize) {
+        loop {
+            if let Some(job) = self.try_pop() {
+                run_isolated(job);
+                continue;
+            }
+            if self.scope_wait(scope, || n) {
+                break;
+            }
+        }
+    }
+
+    /// One park-or-finish round: returns true when the scope is drained,
+    /// otherwise sleeps until a completion arrives (then returns false so
+    /// the caller re-checks the queue and helps again).
+    fn scope_wait(&self, scope: &ScopeSync, target: impl Fn() -> usize) -> bool {
+        let mut done = scope.done.lock().unwrap();
+        if *done >= target() {
+            return true;
+        }
+        done = scope.cv.wait(done).unwrap();
+        *done >= target()
+    }
+}
+
+/// Join-side state of a scoped fan-out: completion count + wakeup.
+#[derive(Default)]
+struct ScopeSync {
+    done: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl ScopeSync {
+    fn complete(&self) {
+        let mut d = self.done.lock().unwrap();
+        *d += 1;
+        drop(d);
+        // Every completion wakes the joiner so it can resume helping —
+        // a completed task may have spawned work the joiner should run.
+        self.cv.notify_all();
+    }
+}
+
+struct DynScope {
+    sync: ScopeSync,
+    /// Total tasks ever spawned into this scope (target for `done`).
+    spawned: Mutex<usize>,
+}
+
+/// Capability to add tasks to a live [`ThreadPool::scope_dyn`] scope.
+pub struct Spawner<'a> {
+    pool: &'a ThreadPool,
+    scope: &'a Arc<DynScope>,
+    f: &'static (dyn Fn(usize, &Spawner) + Sync),
+}
+
+/// SAFETY: `&ThreadPool` is only dereferenced while the owning scope is
+/// live (scope_dyn does not return before every task completes).
+struct PoolPtr(*const ThreadPool);
+unsafe impl Send for PoolPtr {}
+
+impl Spawner<'_> {
+    /// Enqueue `task` into the scope. May be called from inside any task
+    /// of the same scope (that is the point).
+    pub fn spawn(&self, task: usize) {
+        *self.scope.spawned.lock().unwrap() += 1;
+        let scope = Arc::clone(self.scope);
+        let f = self.f;
+        let pp = PoolPtr(self.pool as *const ThreadPool);
+        self.pool.push(Box::new(move || {
+            let pool = unsafe { &*pp.0 };
+            let spawner = Spawner { pool, scope: &scope, f };
+            let caught =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task, &spawner)));
+            if caught.is_err() {
+                scope.sync.panicked.store(true, Ordering::SeqCst);
+            }
+            scope.sync.complete();
+        }));
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Msg::Shutdown);
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
         }
+        self.inner.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -155,7 +338,7 @@ mod tests {
                     c.fetch_add(1, Ordering::SeqCst);
                 });
             }
-        } // drop joins
+        } // drop drains the queue, then joins
         assert_eq!(counter.load(Ordering::SeqCst), 100);
     }
 
@@ -212,5 +395,65 @@ mod tests {
             });
         }
         assert_eq!(counter.load(Ordering::SeqCst), 30);
+    }
+
+    #[test]
+    fn nested_scope_run_shares_the_pool_without_deadlock() {
+        // The scheduler's shape: outer tasks (plan steps) each fan out an
+        // inner scope (kernel row blocks) against the SAME pool. With a
+        // blocking join this deadlocks as soon as every worker holds an
+        // outer task; with helping joins it must complete — on a pool
+        // deliberately smaller than the outer width.
+        let pool = ThreadPool::new(2);
+        let counter = AtomicUsize::new(0);
+        pool.scope_run(8, &|_| {
+            pool.scope_run(4, &|_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn scope_dyn_runs_spawned_chains() {
+        // Seed one task per chain; each task spawns its successor until
+        // the chain reaches the target length: 4 chains x depth 25.
+        let pool = ThreadPool::new(3);
+        let counter = AtomicUsize::new(0);
+        pool.scope_dyn(&[0, 100, 200, 300], &|task, sp| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            if task % 100 < 24 {
+                sp.spawn(task + 1);
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_dyn_reports_panicked_task() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_dyn(&[0, 1, 2, 3], &|task, _| {
+                assert!(task != 2, "boom");
+            });
+        }));
+        assert!(result.is_err(), "scope_dyn must report the panicked task");
+        let counter = AtomicUsize::new(0);
+        pool.scope_dyn(&[0], &|_, _| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scope_dyn_empty_seed_is_a_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scope_dyn(&[], &|_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn pool_is_sync() {
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<ThreadPool>();
     }
 }

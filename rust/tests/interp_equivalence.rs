@@ -5,8 +5,8 @@
 //! reproduce it on the committed artifacts:
 //!
 //! * **Scatter artifacts** (`scatter_native_r*`, `scatter_rows_r*`):
-//!   bitwise identical across fused/unfused and threads {1, 2, 8}, and
-//!   bitwise identical to the *host* serial baseline
+//!   bitwise identical across fused/unfused, threads {1, 2, 8} and step
+//!   scheduler on/off, and bitwise identical to the *host* serial baseline
 //!   (`baselines::scatter::scatter_add_serial`) — the same contract the
 //!   `grad` subsystem proves in `tests/grad_equivalence.rs`, now holding
 //!   through the interpreter's parallel scatter path too.
@@ -26,17 +26,23 @@ use polyglot_gpu::util::rng::Rng;
 use xla::Literal;
 
 /// The full engine matrix the acceptance contract names:
-/// {fused(full), fused(chains), unfused} × threads {1, 2, 8}.
-const CONFIGS: [(usize, FuseMode); 9] = [
-    (1, FuseMode::Full),
-    (2, FuseMode::Full),
-    (8, FuseMode::Full),
-    (1, FuseMode::Chains),
-    (2, FuseMode::Chains),
-    (8, FuseMode::Chains),
-    (1, FuseMode::Off),
-    (2, FuseMode::Off),
-    (8, FuseMode::Off),
+/// {fused(full), fused(chains), unfused} × threads {1, 2, 8} × step
+/// scheduler {on, off}. The scheduler legs pin `sched` explicitly via
+/// `from_text_sched`, so this matrix holds regardless of the
+/// `POLYGLOT_INTERP_SCHED` env CI additionally sweeps.
+const CONFIGS: [(usize, FuseMode, bool); 12] = [
+    (1, FuseMode::Full, true),
+    (2, FuseMode::Full, true),
+    (8, FuseMode::Full, true),
+    (2, FuseMode::Full, false),
+    (8, FuseMode::Full, false),
+    (1, FuseMode::Chains, true),
+    (2, FuseMode::Chains, true),
+    (8, FuseMode::Chains, true),
+    (8, FuseMode::Chains, false),
+    (1, FuseMode::Off, true),
+    (2, FuseMode::Off, false),
+    (8, FuseMode::Off, true),
 ];
 
 fn artifacts_dir() -> PathBuf {
@@ -84,13 +90,15 @@ fn scatter_artifacts_bitwise_across_threads_and_fusion() {
             let ref_w = reference[0].to_vec::<f32>().unwrap();
             assert_eq!(ref_w, golden, "{name}: tree-walk vs host serial baseline");
 
-            for (threads, mode) in CONFIGS {
-                let exe = InterpExecutable::from_text_mode(&text, threads, mode).unwrap();
+            for (threads, mode, sched) in CONFIGS {
+                let exe =
+                    InterpExecutable::from_text_sched(&text, threads, mode, sched).unwrap();
                 let got = exe.run(&[&wl, &il, &yl]).unwrap();
                 let got_w = got[0].to_vec::<f32>().unwrap();
                 assert_eq!(
                     got_w, ref_w,
-                    "{name}: plan (threads={threads}, mode={mode:?}) not bitwise-identical"
+                    "{name}: plan (threads={threads}, mode={mode:?}, sched={sched}) \
+                     not bitwise-identical"
                 );
             }
         }
@@ -109,8 +117,8 @@ fn train_step_artifacts_match_treewalk_across_threads() {
         let text = artifact_text(&manifest, name);
         let reference =
             InterpExecutable::from_text_threads(&text, 1).unwrap().run_treewalk(&refs).unwrap();
-        for (threads, mode) in CONFIGS {
-            let exe = InterpExecutable::from_text_mode(&text, threads, mode).unwrap();
+        for (threads, mode, sched) in CONFIGS {
+            let exe = InterpExecutable::from_text_sched(&text, threads, mode, sched).unwrap();
             let got = exe.run(&refs).unwrap();
             assert_eq!(got.len(), reference.len(), "{name}: output arity");
             for (o, (g, w)) in got.iter().zip(&reference).enumerate() {
@@ -120,7 +128,8 @@ fn train_step_artifacts_match_treewalk_across_threads() {
                 for (j, (x, y)) in gv.iter().zip(&wv).enumerate() {
                     assert!(
                         (x - y).abs() <= 1e-6,
-                        "{name} (threads={threads}, mode={mode:?}) output {o}[{j}]: {x} vs {y}"
+                        "{name} (threads={threads}, mode={mode:?}, sched={sched}) \
+                         output {o}[{j}]: {x} vs {y}"
                     );
                 }
             }

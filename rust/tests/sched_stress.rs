@@ -1,0 +1,96 @@
+//! Scheduler stress: every committed artifact, repeatedly, at full
+//! parallelism.
+//!
+//! The plan-level step scheduler's contract is *bitwise determinism*: it
+//! may reorder step issue but never changes any step's inputs or any
+//! kernel's geometry, so the scheduled threaded run must reproduce the
+//! single-threaded tree-walk exactly — not within a tolerance. Repeated
+//! runs shake out ordering races: with 8 threads and wide graphs the
+//! actual interleaving differs run to run, and any missing dependency
+//! edge (a mover racing a reader, an in-place write racing a consumer)
+//! shows up as a flaky byte diff here long before it corrupts training.
+
+use std::path::PathBuf;
+
+use polyglot_gpu::backend::interp::plan::FuseMode;
+use polyglot_gpu::backend::interp::InterpExecutable;
+use polyglot_gpu::runtime::Manifest;
+use polyglot_gpu::testkit::synth_artifact_inputs;
+use polyglot_gpu::util::rng::Rng;
+use xla::{ElementType, Literal};
+
+const THREADS: usize = 8;
+const RUNS: usize = 8;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Bitwise equality for array literals of either dtype; f32 compares by
+/// bit pattern so `-0.0 != 0.0` and NaN payloads count as differences.
+fn assert_bitwise(got: &Literal, want: &Literal, what: &str) {
+    let (gs, ws) = (got.array_shape().unwrap(), want.array_shape().unwrap());
+    assert_eq!(gs, ws, "{what}: shape");
+    match gs.ty() {
+        ElementType::F32 => {
+            let g: Vec<u32> =
+                got.to_vec::<f32>().unwrap().iter().map(|x| x.to_bits()).collect();
+            let w: Vec<u32> =
+                want.to_vec::<f32>().unwrap().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(g, w, "{what}: f32 bits");
+        }
+        _ => {
+            assert_eq!(
+                got.to_vec::<i32>().unwrap(),
+                want.to_vec::<i32>().unwrap(),
+                "{what}: i32"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_artifact_is_bitwise_stable_under_the_scheduler() {
+    let manifest = Manifest::load(&artifacts_dir()).unwrap();
+    assert!(
+        manifest.artifacts.len() >= 42,
+        "stress floor: expected the full committed artifact set, found {}",
+        manifest.artifacts.len()
+    );
+    let mut scheduled_wide = 0usize;
+    for spec in &manifest.artifacts {
+        let text = std::fs::read_to_string(&spec.file)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", spec.file.display()));
+        let mut rng = Rng::new(0x5c4ed ^ spec.name.len() as u64);
+        let inputs = synth_artifact_inputs(spec, &mut rng).unwrap();
+        let refs: Vec<&Literal> = inputs.iter().collect();
+
+        let reference = InterpExecutable::from_text_threads(&text, 1)
+            .unwrap()
+            .run_treewalk(&refs)
+            .unwrap_or_else(|e| panic!("{}: tree-walk failed: {e:#}", spec.name));
+
+        let exe =
+            InterpExecutable::from_text_sched(&text, THREADS, FuseMode::Full, true).unwrap();
+        if exe.sched_enabled() {
+            scheduled_wide += 1;
+        }
+        for run in 0..RUNS {
+            let got = exe
+                .run(&refs)
+                .unwrap_or_else(|e| panic!("{} run {run}: scheduled run failed: {e:#}", spec.name));
+            assert_eq!(got.len(), reference.len(), "{}: output arity", spec.name);
+            for (o, (g, w)) in got.iter().zip(&reference).enumerate() {
+                assert_bitwise(g, w, &format!("{} run {run} output {o}", spec.name));
+            }
+        }
+    }
+    // The training/eval graphs are wide; if none of the committed
+    // artifacts engaged the scheduler this "stress" test silently became
+    // a serial no-op — fail loudly instead.
+    assert!(
+        scheduled_wide >= 4,
+        "only {scheduled_wide} artifacts engaged the step scheduler; \
+         stress coverage collapsed"
+    );
+}
