@@ -128,6 +128,17 @@ fn main() -> Result<()> {
                 println!("    {name:<28} {report}");
             }
         }
+        // Static-verifier verdicts (POLYGLOT_INTERP_VERIFY; debug builds
+        // default on): proof that each compiled plan passed the bytecode
+        // typing, liveness, and race-freedom checks before running.
+        let verified = prof_rt.verify_reports();
+        if !verified.is_empty() {
+            println!("  plan-verifier verdict per artifact:");
+            for (name, report) in verified {
+                let first = report.lines().next().unwrap_or(&report);
+                println!("    {name:<28} {first}");
+            }
+        }
     }
 
     println!("\n== Step 5: limits analysis (paper §4.5) ==");

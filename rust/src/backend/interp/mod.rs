@@ -13,9 +13,14 @@
 //! or through the plan-level parallel scheduler (`sched`, gated by
 //! `POLYGLOT_INTERP_SCHED`, default on) when a computation's step
 //! dependency graph exposes concurrency: independent steps fan out over
-//! the same persistent worker pool the kernels block rows on. The
-//! original tree-walking evaluator (`eval`) survives as the semantic
-//! reference the golden tests compare against.
+//! the same persistent worker pool the kernels block rows on. Between
+//! compile and execute sits an independent static checker (`verify`,
+//! gated by `POLYGLOT_INTERP_VERIFY`, default on in debug builds): it
+//! re-derives shape/dtype/lane-width for every fused bytecode
+//! instruction, replays the liveness schedule symbolically, and audits
+//! the step graphs for ordering races — a plan that fails never reaches
+//! an executor. The original tree-walking evaluator (`eval`) survives
+//! as the semantic reference the golden tests compare against.
 //!
 //! Numerics follow the serial host baselines bit-for-bit where the
 //! artifacts are serial (scatter-add application order is
@@ -36,6 +41,7 @@ pub mod parser;
 pub mod plan;
 pub mod sched;
 pub mod value;
+pub mod verify;
 
 use std::cell::{Cell, OnceCell};
 use std::time::Duration;
@@ -51,72 +57,6 @@ use crate::runtime::manifest::ArtifactSpec;
 use kernels::Par;
 use parser::Module;
 use value::{tensor_to_literal, value_from_literal, Value};
-
-/// Interpreter thread budget: explicit override, else the
-/// `POLYGLOT_INTERP_THREADS` env knob (0 or unset = all cores).
-fn env_threads() -> usize {
-    let requested = std::env::var("POLYGLOT_INTERP_THREADS")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .unwrap_or(0);
-    crate::grad::resolve_threads(requested)
-}
-
-/// `POLYGLOT_INTERP_PROFILE=1` turns per-plan-op timing on at compile.
-fn env_profile() -> bool {
-    matches!(
-        std::env::var("POLYGLOT_INTERP_PROFILE").ok().as_deref(),
-        Some("1") | Some("true")
-    )
-}
-
-/// `POLYGLOT_INTERP_SCHED=on|off` toggles the plan-level parallel
-/// scheduler (default **on**; it only engages when the thread budget
-/// exceeds 1 and a computation's dependency graph has width ≥ 2).
-/// Mirrors the fusion knob so a scheduling regression can be bisected
-/// independently of fusion and thread count.
-fn env_sched() -> bool {
-    let Ok(raw) = std::env::var("POLYGLOT_INTERP_SCHED") else {
-        return true;
-    };
-    match raw.trim().to_ascii_lowercase().as_str() {
-        "off" | "0" => false,
-        "" | "on" | "1" => true,
-        other => {
-            // Same policy as the fusion knob: a typo must not silently
-            // re-enable the thing being bisected.
-            eprintln!(
-                "[interp] POLYGLOT_INTERP_SCHED={other:?} unrecognized \
-                 (expected on|off); scheduler OFF"
-            );
-            false
-        }
-    }
-}
-
-/// `POLYGLOT_INTERP_FUSE=off|chains|full` pins the fusion level so a
-/// fusion regression can be bisected (`off` = one step per instruction,
-/// `chains` = elementwise chains only, `full` = consumer-side fusion —
-/// the default).
-fn env_fuse_mode() -> plan::FuseMode {
-    let Ok(raw) = std::env::var("POLYGLOT_INTERP_FUSE") else {
-        return plan::FuseMode::Full;
-    };
-    match raw.trim().to_ascii_lowercase().as_str() {
-        "off" | "0" => plan::FuseMode::Off,
-        "chains" => plan::FuseMode::Chains,
-        "" | "full" => plan::FuseMode::Full,
-        other => {
-            // A typo must not silently re-enable the thing being
-            // bisected; warn and take the safest reading.
-            eprintln!(
-                "[interp] POLYGLOT_INTERP_FUSE={other:?} unrecognized \
-                 (expected off|chains|full); compiling with fusion OFF"
-            );
-            plan::FuseMode::Off
-        }
-    }
-}
 
 #[derive(Default)]
 pub struct InterpBackend {
@@ -145,7 +85,7 @@ impl Backend for InterpBackend {
     fn compile(&self, spec: &ArtifactSpec) -> Result<Box<dyn Compiled>> {
         let text = std::fs::read_to_string(&spec.file)
             .with_context(|| format!("reading HLO text {}", spec.file.display()))?;
-        let threads = self.threads.unwrap_or_else(env_threads);
+        let threads = self.threads.unwrap_or_else(crate::util::env::threads);
         let exe = InterpExecutable::from_text_threads(&text, threads)
             .with_context(|| format!("parsing artifact {:?}", spec.name))?;
         let n = exe.module.comps[exe.module.entry].n_params;
@@ -176,6 +116,11 @@ pub struct InterpExecutable {
     /// Step dependency graphs (one per computation), present iff the
     /// plan-level scheduler is enabled for this executable.
     sched: Option<sched::SchedPlan>,
+    /// Static-verifier verdict for the compiled plan, present iff
+    /// `POLYGLOT_INTERP_VERIFY` (or the pinned [`verify::VerifyMode`])
+    /// was not `off` at compile. A verdict with errors never gets here —
+    /// compilation fails instead.
+    verify: Option<verify::Verdict>,
     profile: Cell<bool>,
     stats: plan::StepStats,
 }
@@ -183,7 +128,7 @@ pub struct InterpExecutable {
 impl InterpExecutable {
     /// Compile with the environment's thread budget and fusion on.
     pub fn from_text(text: &str) -> Result<InterpExecutable> {
-        Self::from_text_cfg(text, env_threads(), true)
+        Self::from_text_cfg(text, crate::util::env::threads(), true)
     }
 
     /// Compile with an explicit thread budget (fusion on).
@@ -196,7 +141,7 @@ impl InterpExecutable {
     /// configuration; `true` compiles at the environment's fusion level,
     /// `POLYGLOT_INTERP_FUSE`, default full).
     pub fn from_text_cfg(text: &str, threads: usize, fuse: bool) -> Result<InterpExecutable> {
-        let mode = if fuse { env_fuse_mode() } else { plan::FuseMode::Off };
+        let mode = if fuse { crate::util::env::fuse_mode() } else { plan::FuseMode::Off };
         Self::from_text_mode(text, threads, mode)
     }
 
@@ -210,28 +155,55 @@ impl InterpExecutable {
         threads: usize,
         mode: plan::FuseMode,
     ) -> Result<InterpExecutable> {
-        Self::from_text_sched(text, threads, mode, env_sched())
+        Self::from_text_sched(text, threads, mode, crate::util::env::sched())
     }
 
-    /// Full control: thread budget + fusion mode + scheduler toggle,
-    /// independent of every env knob (the E12 `sched_off` leg and the
-    /// scheduler stress tests).
+    /// Thread budget + fusion mode + scheduler toggle. The static plan
+    /// verifier still follows `POLYGLOT_INTERP_VERIFY` — pin it with
+    /// [`InterpExecutable::from_text_verify`].
     pub fn from_text_sched(
         text: &str,
         threads: usize,
         mode: plan::FuseMode,
         sched: bool,
     ) -> Result<InterpExecutable> {
+        Self::from_text_verify(text, threads, mode, sched, crate::util::env::verify_mode())
+    }
+
+    /// Full control: thread budget + fusion mode + scheduler toggle +
+    /// verifier mode, independent of every env knob (the E12 `sched_off`
+    /// leg, the scheduler stress tests, and `plan_lint`'s sweep).
+    ///
+    /// When `vmode` is not [`verify::VerifyMode::Off`], the compiled
+    /// plan (and its step graphs, when the scheduler is on) run through
+    /// the three-pass static checker in [`verify`]; a verdict with
+    /// errors — or, under `Strict`, warnings — fails compilation with
+    /// the full finding report.
+    pub fn from_text_verify(
+        text: &str,
+        threads: usize,
+        mode: plan::FuseMode,
+        sched: bool,
+        vmode: verify::VerifyMode,
+    ) -> Result<InterpExecutable> {
         let module = parser::parse_module(text)?;
         let plan = plan::compile(&module, mode)?;
         let sched = sched.then(|| sched::SchedPlan::build(&plan));
+        let verify = if vmode.enabled() {
+            let verdict = verify::verify(&module, &plan, sched.as_ref());
+            verdict.gate(vmode)?;
+            Some(verdict)
+        } else {
+            None
+        };
         Ok(InterpExecutable {
             module,
             plan,
             threads: threads.max(1),
             pool: OnceCell::new(),
             sched,
-            profile: Cell::new(env_profile()),
+            verify,
+            profile: Cell::new(crate::util::env::profile()),
             stats: plan::StepStats::default(),
         })
     }
@@ -322,6 +294,19 @@ impl InterpExecutable {
             .report()
             .map(|r| format!("{r} | entry graph width {}, depth {}", g.width, g.depth))
     }
+
+    /// The static verifier's verdict for this plan, when verification
+    /// ran at compile (always clean of errors — errors fail `from_text*`
+    /// instead of producing an executable).
+    pub fn verify_verdict(&self) -> Option<&verify::Verdict> {
+        self.verify.as_ref()
+    }
+
+    /// One-line verifier summary (plus any warnings) for profiler /
+    /// report surfaces; `None` when verification was off at compile.
+    pub fn verify_report(&self) -> Option<String> {
+        self.verify.as_ref().map(verify::Verdict::report)
+    }
 }
 
 fn decompose(root: Value) -> Result<Vec<Literal>> {
@@ -371,6 +356,10 @@ impl Compiled for InterpExecutable {
 
     fn sched_report(&self) -> Option<String> {
         InterpExecutable::sched_report(self)
+    }
+
+    fn verify_report(&self) -> Option<String> {
+        InterpExecutable::verify_report(self)
     }
 }
 
@@ -953,6 +942,42 @@ ENTRY e.4 {
         let dot = stats.iter().find(|(l, _, _)| *l == "dot").expect("dot row");
         assert_eq!(dot.1, 2, "two profiled dispatches");
         assert!(stats.iter().any(|(l, _, _)| *l == "elemwise"));
+    }
+
+    #[test]
+    fn strict_verification_passes_and_reports_on_a_clean_module() {
+        let text = "HloModule m
+ENTRY e.6 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  Arg_1.2 = f32[4]{0} parameter(1)
+  add.3 = f32[4]{0} add(Arg_0.1, Arg_1.2)
+  negate.4 = f32[4]{0} negate(add.3)
+  ROOT multiply.5 = f32[4]{0} multiply(negate.4, Arg_0.1)
+}
+";
+        for mode in [plan::FuseMode::Off, plan::FuseMode::Chains, plan::FuseMode::Full] {
+            let exe = InterpExecutable::from_text_verify(
+                text,
+                1,
+                mode,
+                true,
+                verify::VerifyMode::Strict,
+            )
+            .unwrap();
+            let report = exe.verify_report().expect("verification ran at compile");
+            assert!(report.contains("0 errors"), "{report}");
+            let verdict = exe.verify_verdict().unwrap();
+            assert!(verdict.ok() && verdict.warnings() == 0, "{report}");
+        }
+        let off = InterpExecutable::from_text_verify(
+            text,
+            1,
+            plan::FuseMode::Full,
+            true,
+            verify::VerifyMode::Off,
+        )
+        .unwrap();
+        assert!(off.verify_report().is_none(), "off means no verdict is kept");
     }
 
     #[test]

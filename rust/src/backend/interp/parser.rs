@@ -448,16 +448,22 @@ fn parse_array_shape(s: &str) -> Result<((Ty, Vec<usize>), &str)> {
     Ok(((ty, dims), rest))
 }
 
-/// Find the `)` matching the `(` at byte offset `open`.
+/// Find the `)` matching the `(` at byte offset `open`. `open` is a byte
+/// offset (from `str::find`), so the scan slices rather than counting
+/// chars — `.char_indices().skip(open)` would mis-skip on any multibyte
+/// text before the paren and underflow `depth` on the orphaned `)`.
 fn matching_paren(s: &str, open: usize) -> Result<usize> {
     let mut depth = 0usize;
-    for (i, c) in s.char_indices().skip(open) {
+    for (i, c) in s[open..].char_indices() {
         match c {
             '(' => depth += 1,
             ')' => {
+                if depth == 0 {
+                    bail!("unbalanced parentheses");
+                }
                 depth -= 1;
                 if depth == 0 {
-                    return Ok(i);
+                    return Ok(open + i);
                 }
             }
             _ => {}
@@ -649,6 +655,98 @@ ENTRY e.9 {
         assert!(parse_module("this is not hlo").is_err());
         let bad = "HloModule m\nENTRY e.2 {\n  ROOT fft.1 = f32[4]{0} fft()\n}\n";
         assert!(parse_module(bad).is_err());
+    }
+
+    /// Wrap one entry-block instruction line in a valid module skeleton.
+    fn entry_with(line: &str) -> String {
+        format!("HloModule m\nENTRY e.9 {{\n  Arg_0.1 = f32[4]{{0}} parameter(0)\n  {line}\n  ROOT negate.8 = f32[4]{{0}} negate(Arg_0.1)\n}}\n")
+    }
+
+    #[test]
+    fn malformed_modules_error_cleanly() {
+        // Whole-module structural defects: every case must come back as
+        // an `Err`, never a panic.
+        let modules: &[(&str, String)] = &[
+            ("not hlo at all", "ENTRY e {\n}\n".to_string()),
+            (
+                "truncated computation (no closing brace)",
+                "HloModule m\nENTRY e.2 {\n  ROOT c.1 = f32[] constant(1)\n".to_string(),
+            ),
+            ("unmatched closing brace", "HloModule m\n}\n".to_string()),
+            (
+                "instruction outside any block",
+                "HloModule m\nc.1 = f32[] constant(1)\n".to_string(),
+            ),
+            (
+                "nested computation block",
+                "HloModule m\nENTRY e.2 {\ninner {\n}\n}\n".to_string(),
+            ),
+            (
+                "no ENTRY computation",
+                "HloModule m\nr.1 {\n  ROOT c.1 = f32[] constant(1)\n}\n".to_string(),
+            ),
+            (
+                "two ENTRY computations",
+                "HloModule m\nENTRY a.1 {\n  ROOT c.1 = f32[] constant(1)\n}\nENTRY b.2 {\n  ROOT c.2 = f32[] constant(1)\n}\n"
+                    .to_string(),
+            ),
+            (
+                "no ROOT instruction",
+                "HloModule m\nENTRY e.2 {\n  c.1 = f32[] constant(1)\n}\n".to_string(),
+            ),
+            (
+                "two ROOT instructions",
+                "HloModule m\nENTRY e.3 {\n  ROOT c.1 = f32[] constant(1)\n  ROOT c.2 = f32[] constant(2)\n}\n"
+                    .to_string(),
+            ),
+        ];
+        for (what, text) in modules {
+            assert!(parse_module(text).is_err(), "{what}: accepted\n{text}");
+        }
+
+        // Per-instruction defects, table-driven inside a valid skeleton.
+        let lines: &[(&str, &str)] = &[
+            ("missing ` = `", "oops.2 f32[4]{0} negate(Arg_0.1)"),
+            ("missing operand list", "neg.2 = f32[4]{0} negate"),
+            ("unbalanced parentheses", "add.2 = f32[4]{0} add(Arg_0.1, Arg_0.1"),
+            ("multibyte op name", "neg.2 = f32[4]{0} neg\u{e0}te(Arg_0.1)"),
+            ("unknown op", "fft.2 = f32[4]{0} fft(Arg_0.1)"),
+            ("unknown operand", "neg.2 = f32[4]{0} negate(Arg_9.9)"),
+            ("unsupported element type", "neg.2 = f64[4]{0} negate(Arg_0.1)"),
+            ("non-numeric dim", "neg.2 = f32[x]{0} negate(Arg_0.1)"),
+            ("missing `[` in shape", "neg.2 = f32 negate(Arg_0.1)"),
+            ("unterminated shape", "neg.2 = f32[4 negate(Arg_0.1)"),
+            ("unterminated layout braces", "neg.2 = f32[4]{0 negate(Arg_0.1)"),
+            ("bad tuple type", "t.2 = (f32[4]{0}, ) tuple(Arg_0.1)"),
+            ("unterminated tuple type", "t.2 = (f32[4]{0} tuple(Arg_0.1)"),
+            ("broadcast without dimensions", "b.2 = f32[4]{0} broadcast(Arg_0.1)"),
+            ("attribute without `=`", "b.2 = f32[4]{0} broadcast(Arg_0.1), dimensions"),
+            ("dimensions not a brace list", "b.2 = f32[4]{0} broadcast(Arg_0.1), dimensions=0"),
+            ("bad compare direction", "c.2 = pred[4]{0} compare(Arg_0.1, Arg_0.1), direction=XX"),
+            (
+                "dot with multiple contracting dims",
+                "d.2 = f32[] dot(Arg_0.1, Arg_0.1), lhs_contracting_dims={0,1}, rhs_contracting_dims={0,1}",
+            ),
+            (
+                "concatenate with two dims",
+                "c.2 = f32[8]{0} concatenate(Arg_0.1, Arg_0.1), dimensions={0,1}",
+            ),
+            (
+                "reduce with unknown computation",
+                "r.2 = f32[] reduce(Arg_0.1, Arg_0.1), dimensions={0}, to_apply=region_9.9",
+            ),
+            ("non-numeric parameter index", "p.2 = f32[4]{0} parameter(x)"),
+            ("gte with garbage index", "g.2 = f32[4]{0} get-tuple-element(Arg_0.1), index=no"),
+            ("iota without dimension", "i.2 = s32[4]{0} iota()"),
+            ("constant element-count mismatch", "c.2 = f32[3]{0} constant({1, 2})"),
+            ("unterminated constant braces", "c.2 = f32[2]{0} constant({1, 2"),
+            ("garbage pred constant", "c.2 = pred[] constant(maybe)"),
+            ("garbage f32 constant", "c.2 = f32[] constant(one)"),
+        ];
+        for (what, line) in lines {
+            let text = entry_with(line);
+            assert!(parse_module(&text).is_err(), "{what}: accepted\n{text}");
+        }
     }
 
     #[test]

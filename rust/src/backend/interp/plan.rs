@@ -880,6 +880,24 @@ ENTRY e.6 {
     }
 
     #[test]
+    fn static_verifier_agrees_with_plan_invariants() {
+        // The verifier re-derives the same liveness facts
+        // assert_plan_invariants checks (plus typing and ordering) from
+        // the module semantics alone — on a clean plan the two
+        // independent audits must both come back empty.
+        use crate::backend::interp::sched::SchedPlan;
+        use crate::backend::interp::verify::{verify, VerifyMode};
+        for mode in [FuseMode::Off, FuseMode::Chains, FuseMode::Full] {
+            let (m, p) = entry_plan(CHAIN, mode);
+            assert_plan_invariants(&p);
+            let sp = SchedPlan::build(&p);
+            let v = verify(&m, &p, Some(&sp));
+            assert!(v.findings.is_empty(), "{mode:?}: {}", v.report());
+            v.gate(VerifyMode::Strict).unwrap();
+        }
+    }
+
+    #[test]
     fn reshape_is_a_chain_boundary() {
         let text = "HloModule m
 ENTRY e.5 {

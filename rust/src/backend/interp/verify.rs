@@ -1,0 +1,1840 @@
+//! Independent static verifier for compiled plans.
+//!
+//! The compile-then-execute pipeline rests on three invariants that the
+//! planner *establishes* but nothing *proves* per plan: fused postfix
+//! bytecode is well-typed against the slot arena, the move/liveness
+//! flags are sound, and the scheduler's step graph orders every
+//! conflicting slot access. The equivalence tests sample these; this
+//! module checks them exhaustively for one concrete plan, before it
+//! ever executes.
+//!
+//! Three passes over each [`CompPlan`]:
+//!
+//! 1. **Shape/dtype abstract interpretation** — every step's output
+//!    spec is re-derived from the module's declared instruction shapes
+//!    and checked against its operand slots; fused kernels get their
+//!    bytecode abstractly interpreted (stack discipline, lane types,
+//!    input roles and sizes, `Tile`/`Rep` period validity at any block
+//!    offset) and consumer fusions get their geometry (reduce fold
+//!    split, dot contraction arithmetic, gather row-take shape)
+//!    recomputed from the HLO.
+//! 2. **Liveness soundness** — the schedule is replayed symbolically
+//!    with the serial executor's exact move semantics: no read after
+//!    move, no double move, no overwrite of a live slot, every
+//!    `in_place` target dies at its step, and the root slot is never
+//!    moved and is live at the end.
+//! 3. **Happens-before race audit** — the [`StepGraph`]'s transitive
+//!    closure is computed and every conflicting pair of steps
+//!    (producer→reader, shared-reader→mover — the in-place aliasing
+//!    case) must be connected by an ordering path, so a missing edge is
+//!    a compile-time error instead of a nondeterministic flake.
+//!
+//! The verifier is deliberately written against the *semantics* — op
+//! legality tables, fold support, combiner classification and kernel
+//! role/size rules are re-derived here, not imported from the planner —
+//! so it stays a true second opinion: a planner bug and its mirror in a
+//! shared helper cannot cancel out.
+//!
+//! Wiring: `POLYGLOT_INTERP_VERIFY=on|off|strict`
+//! ([`crate::util::env::verify_mode`]) gates compilation in
+//! `backend::interp`; the `plan_lint` binary sweeps every committed
+//! artifact across the fuse×sched matrix as a CI gate.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::fusion::{EInstr, FusedKernel};
+use super::parser::{BinOp, Computation, Module, Op, Shape, UnOp};
+use super::plan::{CompPlan, Kind, Plan, Step};
+use super::sched::{SchedPlan, StepGraph};
+use super::value::Ty;
+
+/// How much the verifier gates compilation (the
+/// `POLYGLOT_INTERP_VERIFY` knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VerifyMode {
+    /// Skip verification entirely.
+    Off,
+    /// Verify; reject the plan on errors.
+    On,
+    /// Verify; reject the plan on errors *or* warnings (the CI gate).
+    Strict,
+}
+
+impl VerifyMode {
+    pub fn enabled(self) -> bool {
+        self != VerifyMode::Off
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// One verifier diagnostic, anchored to the offending step/slot.
+#[derive(Debug)]
+pub struct Finding {
+    pub severity: Severity,
+    /// Computation name (from the module).
+    pub comp: String,
+    pub step: Option<usize>,
+    pub slot: Option<usize>,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        };
+        write!(f, "{sev}[{}", self.comp)?;
+        if let Some(s) = self.step {
+            write!(f, " step {s}")?;
+        }
+        if let Some(x) = self.slot {
+            write!(f, " slot {x}")?;
+        }
+        write!(f, "]: {}", self.message)
+    }
+}
+
+/// The verifier's verdict on one plan.
+#[derive(Debug, Default)]
+pub struct Verdict {
+    pub findings: Vec<Finding>,
+    /// Steps examined across every computation.
+    pub steps: usize,
+    /// Conflicting-access step pairs whose ordering pass 3 checked.
+    pub pairs: usize,
+}
+
+impl Verdict {
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// Free of errors (warnings allowed).
+    pub fn ok(&self) -> bool {
+        self.errors() == 0
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "verify: {} steps, {} ordered pairs checked, {} errors, {} warnings",
+            self.steps,
+            self.pairs,
+            self.errors(),
+            self.warnings()
+        )
+    }
+
+    /// Summary plus one line per finding.
+    pub fn report(&self) -> String {
+        let mut out = self.summary();
+        for f in &self.findings {
+            out.push('\n');
+            out.push_str(&format!("  {f}"));
+        }
+        out
+    }
+
+    /// Apply a [`VerifyMode`] gate: `Err` when the mode rejects this
+    /// verdict.
+    pub fn gate(&self, mode: VerifyMode) -> Result<()> {
+        let reject = match mode {
+            VerifyMode::Off => false,
+            VerifyMode::On => self.errors() > 0,
+            VerifyMode::Strict => self.errors() > 0 || self.warnings() > 0,
+        };
+        if reject {
+            bail!("plan verifier rejected the plan:\n{}", self.report());
+        }
+        Ok(())
+    }
+}
+
+/// Verify a compiled plan (and, when given, its scheduler graphs)
+/// against the parsed module it was compiled from.
+pub fn verify(m: &Module, plan: &Plan, sched: Option<&SchedPlan>) -> Verdict {
+    let mut ck = Checker::default();
+    let mut steps = 0usize;
+    if plan.comps.len() != m.comps.len() {
+        ck.error(
+            "<module>",
+            None,
+            None,
+            format!(
+                "plan has {} computations, module has {}",
+                plan.comps.len(),
+                m.comps.len()
+            ),
+        );
+        return ck.into_verdict(steps);
+    }
+    if plan.entry != m.entry || plan.entry >= plan.comps.len() {
+        ck.error(
+            "<module>",
+            None,
+            None,
+            format!("plan entry {} disagrees with module entry {}", plan.entry, m.entry),
+        );
+    }
+    if let Some(sp) = sched {
+        if sp.graphs.len() != plan.comps.len() {
+            ck.error(
+                "<module>",
+                None,
+                None,
+                format!(
+                    "scheduler has {} graphs for {} computations",
+                    sp.graphs.len(),
+                    plan.comps.len()
+                ),
+            );
+        }
+    }
+    for (ci, (comp, cp)) in m.comps.iter().zip(&plan.comps).enumerate() {
+        steps += cp.steps.len();
+        let cname = comp.name.as_str();
+        if cp.n_params != comp.n_params {
+            ck.error(
+                cname,
+                None,
+                None,
+                format!("plan declares {} parameters, computation has {}", cp.n_params, comp.n_params),
+            );
+        }
+        if cp.root >= cp.n_slots {
+            ck.error(cname, None, Some(cp.root), "root slot out of range".into());
+            continue;
+        }
+        let specs = slot_specs(&mut ck, cname, comp, cp);
+        check_shapes(&mut ck, m, comp, cp, &specs);
+        check_liveness(&mut ck, comp, cp, &specs);
+        if let Some(sp) = sched {
+            if let Some(g) = sp.graphs.get(ci) {
+                check_ordering(&mut ck, cname, cp, g);
+            }
+        }
+    }
+    ck.into_verdict(steps)
+}
+
+// -------------------------------------------------------------- accumulator
+
+#[derive(Default)]
+struct Checker {
+    findings: Vec<Finding>,
+    pairs: usize,
+}
+
+impl Checker {
+    fn push(&mut self, sev: Severity, comp: &str, step: Option<usize>, slot: Option<usize>, message: String) {
+        self.findings.push(Finding { severity: sev, comp: comp.to_string(), step, slot, message });
+    }
+
+    fn error(&mut self, comp: &str, step: Option<usize>, slot: Option<usize>, message: String) {
+        self.push(Severity::Error, comp, step, slot, message);
+    }
+
+    fn warn(&mut self, comp: &str, step: Option<usize>, slot: Option<usize>, message: String) {
+        self.push(Severity::Warning, comp, step, slot, message);
+    }
+
+    fn into_verdict(self, steps: usize) -> Verdict {
+        Verdict { findings: self.findings, steps, pairs: self.pairs }
+    }
+}
+
+// --------------------------------------------------- semantics (re-derived)
+
+/// Is this binary op defined on this element type? Mirrors the
+/// executor's scalar tables (`eval::bin_f32`/`bin_i32`/`bin_pred`) —
+/// re-derived here, not imported, so the verifier stays independent.
+fn bin_ok(ty: Ty, b: BinOp) -> bool {
+    match ty {
+        Ty::F32 | Ty::S32 => !matches!(b, BinOp::And | BinOp::Or),
+        Ty::Pred => matches!(b, BinOp::And | BinOp::Or),
+    }
+}
+
+/// Is this unary op defined on this element type (`eval::unary`)?
+fn un_ok(ty: Ty, u: UnOp) -> bool {
+    matches!((ty, u), (Ty::F32, _) | (Ty::S32, UnOp::Neg))
+}
+
+/// Can the blocked fold fast path handle this dtype/combiner pair
+/// (mirrors `kernels::reduce_fused`'s accumulator table)?
+fn fold_ok(ty: Ty, b: BinOp) -> bool {
+    matches!(
+        (ty, b),
+        (Ty::F32, BinOp::Add | BinOp::Mul | BinOp::Max | BinOp::Min)
+            | (Ty::S32, BinOp::Add | BinOp::Max | BinOp::Min)
+            | (Ty::Pred, BinOp::And | BinOp::Or)
+    )
+}
+
+/// Does computation `ci` fold exactly `want` — root `want(param 0,
+/// param 1)` in that operand order? Re-derived from the HLO rather than
+/// calling the planner's combiner classifier.
+fn combiner_matches(m: &Module, ci: usize, want: BinOp) -> std::result::Result<(), String> {
+    let Some(c) = m.comps.get(ci) else {
+        return Err(format!("combiner computation index {ci} out of range"));
+    };
+    if c.n_params != 2 {
+        return Err(format!("combiner {:?} takes {} parameters, want 2", c.name, c.n_params));
+    }
+    let root = &c.instrs[c.root];
+    let Op::Binary(b) = root.op else {
+        return Err(format!("combiner {:?} root is not a binary op", c.name));
+    };
+    if b != want {
+        return Err(format!("combiner {:?} folds {b:?}, step claims {want:?}", c.name));
+    }
+    let [p, q] = root.operands[..] else {
+        return Err(format!("combiner {:?} root has {} operands", c.name, root.operands.len()));
+    };
+    let ok = matches!(c.instrs[p].op, Op::Parameter(0))
+        && matches!(c.instrs[q].op, Op::Parameter(1));
+    if !ok {
+        return Err(format!("combiner {:?} root operands are not (param 0, param 1)", c.name));
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------- slot spec table
+
+/// Which instruction (and thus declared shape) each slot holds. Flags
+/// double definitions, out-of-range instr/slot indices and slots no
+/// step ever defines.
+type SlotSpec<'a> = Option<(usize, &'a Shape)>;
+
+fn slot_specs<'a>(
+    ck: &mut Checker,
+    cname: &str,
+    comp: &'a Computation,
+    cp: &CompPlan,
+) -> Vec<SlotSpec<'a>> {
+    let mut specs: Vec<SlotSpec<'a>> = vec![None; cp.n_slots];
+    for (si, step) in cp.steps.iter().enumerate() {
+        let Some(ins) = comp.instrs.get(step.instr) else {
+            ck.error(
+                cname,
+                Some(si),
+                None,
+                format!("instruction index {} out of range ({} instrs)", step.instr, comp.instrs.len()),
+            );
+            continue;
+        };
+        if step.out >= cp.n_slots {
+            ck.error(cname, Some(si), Some(step.out), "output slot out of range".into());
+            continue;
+        }
+        if let Some((prev, _)) = specs[step.out] {
+            ck.error(
+                cname,
+                Some(si),
+                Some(step.out),
+                format!("slot defined twice (already holds instr {prev})"),
+            );
+            continue;
+        }
+        specs[step.out] = Some((step.instr, &ins.shape));
+    }
+    match specs[cp.root] {
+        Some((i, _)) if i == comp.root => {}
+        Some((i, _)) => ck.error(
+            cname,
+            None,
+            Some(cp.root),
+            format!("root slot holds instr {i}, computation root is {}", comp.root),
+        ),
+        None => ck.error(cname, None, Some(cp.root), "root slot is never defined".into()),
+    }
+    for (s, spec) in specs.iter().enumerate() {
+        if spec.is_none() && s != cp.root {
+            ck.warn(cname, None, Some(s), "slot is never defined by any step".into());
+        }
+    }
+    specs
+}
+
+fn arr_spec<'a>(specs: &[SlotSpec<'a>], slot: usize) -> Option<(Ty, &'a [usize])> {
+    match specs.get(slot)?.as_ref()? {
+        (_, Shape::Arr(ty, dims)) => Some((*ty, dims)),
+        (_, Shape::Tuple(_)) => None,
+    }
+}
+
+// ---------------------------------------------------------- pass 1: shapes
+
+fn check_shapes(ck: &mut Checker, m: &Module, comp: &Computation, cp: &CompPlan, specs: &[SlotSpec]) {
+    let cname = comp.name.as_str();
+    for (si, step) in cp.steps.iter().enumerate() {
+        let Some(ins) = comp.instrs.get(step.instr) else { continue };
+        if step.in_place.is_some() && !matches!(step.kind, Kind::Fused(_)) {
+            ck.error(cname, Some(si), None, "in_place set on a non-fused step".into());
+        }
+        match &step.kind {
+            Kind::Single => check_single(ck, m, comp, cp, si, step, ins, specs),
+            Kind::Fused(kernel) => check_fused(ck, comp, cp, si, step, ins, kernel, specs),
+            Kind::FusedReduce { kernel, ty, bin, outer, inner } => {
+                check_fused_reduce(ck, m, comp, si, step, ins, kernel, *ty, *bin, *outer, *inner, specs)
+            }
+            Kind::FusedDot { kernel, hot, lc, rc } => {
+                check_fused_dot(ck, comp, si, step, ins, kernel, *hot, *lc, *rc, specs)
+            }
+            Kind::FusedGather { kernel, hot } => {
+                check_fused_gather(ck, comp, si, step, ins, kernel, *hot, specs)
+            }
+        }
+    }
+}
+
+/// Operand shapes straight from the module (the semantics), once the
+/// arg slots have been checked to agree with them.
+fn operand_arr<'a>(comp: &'a Computation, ins: &super::parser::Instr, j: usize) -> Option<(Ty, &'a [usize])> {
+    let o = *ins.operands.get(j)?;
+    match &comp.instrs.get(o)?.shape {
+        Shape::Arr(ty, dims) => Some((*ty, dims)),
+        Shape::Tuple(_) => None,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_single(
+    ck: &mut Checker,
+    m: &Module,
+    comp: &Computation,
+    cp: &CompPlan,
+    si: usize,
+    step: &Step,
+    ins: &super::parser::Instr,
+    specs: &[SlotSpec],
+) {
+    let cname = comp.name.as_str();
+    // Arg slots must carry exactly the operands' declared shapes, in
+    // operand order (single steps take no inlined operands).
+    if step.args.len() != ins.operands.len() {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("{} args for {} operands of {:?}", step.args.len(), ins.operands.len(), ins.name),
+        );
+        return;
+    }
+    for (j, &(a, _)) in step.args.iter().enumerate() {
+        let Some(&o) = ins.operands.get(j) else { continue };
+        let Some(want) = comp.instrs.get(o).map(|x| &x.shape) else { continue };
+        match specs.get(a).and_then(|s| s.as_ref()) {
+            Some((_, got)) if *got == want => {}
+            Some((_, got)) => ck.error(
+                cname,
+                Some(si),
+                Some(a),
+                format!("arg {j} slot holds {got:?}, operand {:?} declares {want:?}", ins.name),
+            ),
+            None => ck.error(cname, Some(si), Some(a), format!("arg {j} reads an undefined slot")),
+        }
+    }
+
+    let out_arr = match &ins.shape {
+        Shape::Arr(ty, dims) => Some((*ty, dims.as_slice())),
+        Shape::Tuple(_) => None,
+    };
+    let opnd = |j: usize| operand_arr(comp, ins, j);
+    let scalar_s32 = |j: usize| matches!(opnd(j), Some((Ty::S32, d)) if d.iter().product::<usize>() == 1);
+
+    match &ins.op {
+        Op::Parameter(k) => {
+            if *k >= cp.n_params {
+                ck.error(cname, Some(si), None, format!("parameter({k}) but computation takes {}", cp.n_params));
+            }
+        }
+        Op::Binary(b) => {
+            let Some((oty, od)) = out_arr else { return };
+            if !bin_ok(oty, *b) {
+                ck.error(cname, Some(si), None, format!("{b:?} is not defined on {}", oty.name()));
+            }
+            for j in 0..2 {
+                match opnd(j) {
+                    Some((ty, d)) if ty == oty && d == od => {}
+                    _ => ck.error(cname, Some(si), None, format!("binary operand {j} shape disagrees with output")),
+                }
+            }
+        }
+        Op::Unary(u) => {
+            let Some((oty, od)) = out_arr else { return };
+            if !un_ok(oty, *u) {
+                ck.error(cname, Some(si), None, format!("{u:?} is not defined on {}", oty.name()));
+            }
+            match opnd(0) {
+                Some((ty, d)) if ty == oty && d == od => {}
+                _ => ck.error(cname, Some(si), None, "unary operand shape disagrees with output".into()),
+            }
+        }
+        Op::Compare { .. } => {
+            let Some((oty, od)) = out_arr else { return };
+            if oty != Ty::Pred {
+                ck.error(cname, Some(si), None, "compare output is not pred".into());
+            }
+            match (opnd(0), opnd(1)) {
+                (Some((ta, da)), Some((tb, db))) if ta == tb && da == od && db == od => {}
+                _ => ck.error(cname, Some(si), None, "compare operand shapes disagree".into()),
+            }
+        }
+        Op::Select => {
+            let Some((oty, od)) = out_arr else { return };
+            let ok = matches!(opnd(0), Some((Ty::Pred, d)) if d == od)
+                && matches!(opnd(1), Some((t, d)) if t == oty && d == od)
+                && matches!(opnd(2), Some((t, d)) if t == oty && d == od);
+            if !ok {
+                ck.error(cname, Some(si), None, "select operand shapes disagree".into());
+            }
+        }
+        Op::Convert => {
+            let Some((oty, od)) = out_arr else { return };
+            if oty == Ty::Pred {
+                ck.error(cname, Some(si), None, "convert to pred is unsupported".into());
+            }
+            match opnd(0) {
+                Some((_, d)) if d == od => {}
+                _ => ck.error(cname, Some(si), None, "convert operand dims disagree with output".into()),
+            }
+        }
+        Op::Dot { lc, rc } => {
+            let Some((oty, od)) = out_arr else { return };
+            let (Some((ta, da)), Some((tb, db))) = (opnd(0), opnd(1)) else {
+                ck.error(cname, Some(si), None, "dot operands are not arrays".into());
+                return;
+            };
+            if da.len() == 2 && db.len() == 2 && ta == Ty::F32 && tb == Ty::F32 && oty == Ty::F32 {
+                if *lc >= 2 || *rc >= 2 {
+                    ck.error(cname, Some(si), None, format!("dot contracting dims ({lc},{rc}) out of range"));
+                    return;
+                }
+                if da[*lc] != db[*rc] {
+                    ck.error(
+                        cname,
+                        Some(si),
+                        None,
+                        format!("dot contraction mismatch: lhs dim {lc}={}, rhs dim {rc}={}", da[*lc], db[*rc]),
+                    );
+                }
+                if od != [da[1 - *lc], db[1 - *rc]] {
+                    ck.error(
+                        cname,
+                        Some(si),
+                        None,
+                        format!("dot output {od:?}, want [{}, {}]", da[1 - *lc], db[1 - *rc]),
+                    );
+                }
+            } else {
+                ck.warn(cname, Some(si), None, "dot outside the rank-2 f32 path is not statically checked".into());
+            }
+        }
+        Op::Reduce { dims: rdims, to_apply } => {
+            let Some((oty, od)) = out_arr else { return };
+            let (Some((xty, xd)), Some((ity, idd))) = (opnd(0), opnd(1)) else {
+                ck.error(cname, Some(si), None, "reduce operands are not arrays".into());
+                return;
+            };
+            if ity != xty || oty != xty {
+                ck.error(cname, Some(si), None, "reduce input/init/output dtypes disagree".into());
+            }
+            if idd.iter().product::<usize>() != 1 {
+                ck.error(cname, Some(si), None, "reduce init is not a scalar".into());
+            }
+            let mut seen = vec![false; xd.len()];
+            let mut bad = false;
+            for &r in rdims {
+                if r >= xd.len() || seen[r] {
+                    bad = true;
+                } else {
+                    seen[r] = true;
+                }
+            }
+            if bad {
+                ck.error(cname, Some(si), None, format!("reduce dims {rdims:?} invalid for rank {}", xd.len()));
+            } else {
+                let keep: Vec<usize> =
+                    xd.iter().enumerate().filter(|(k, _)| !seen[*k]).map(|(_, &d)| d).collect();
+                if keep != od {
+                    ck.error(cname, Some(si), None, format!("reduce output {od:?}, want {keep:?}"));
+                }
+            }
+            match m.comps.get(*to_apply) {
+                Some(c) if c.n_params == 2 => {}
+                Some(c) => ck.error(cname, Some(si), None, format!("reduce combiner takes {} params, want 2", c.n_params)),
+                None => ck.error(cname, Some(si), None, format!("reduce combiner index {to_apply} out of range")),
+            }
+        }
+        Op::Broadcast { dims: map } => {
+            let Some((oty, od)) = out_arr else { return };
+            let Some((sty, sd)) = opnd(0) else {
+                ck.error(cname, Some(si), None, "broadcast operand is not an array".into());
+                return;
+            };
+            if sty != oty {
+                ck.error(cname, Some(si), None, "broadcast changes dtype".into());
+            }
+            if map.len() != sd.len() {
+                ck.error(cname, Some(si), None, format!("broadcast map {map:?} for source rank {}", sd.len()));
+                return;
+            }
+            for (k, &mk) in map.iter().enumerate() {
+                if mk >= od.len() {
+                    ck.error(cname, Some(si), None, format!("broadcast maps dim {k} to {mk}, output rank {}", od.len()));
+                } else if sd[k] != od[mk] {
+                    ck.error(
+                        cname,
+                        Some(si),
+                        None,
+                        format!("broadcast source dim {k}={} but output dim {mk}={}", sd[k], od[mk]),
+                    );
+                }
+            }
+            if !map.windows(2).all(|w| w[0] < w[1]) {
+                ck.warn(cname, Some(si), None, format!("non-monotonic broadcast map {map:?}"));
+            }
+        }
+        Op::Reshape => {
+            let Some((oty, od)) = out_arr else { return };
+            match opnd(0) {
+                Some((ty, d)) if ty == oty && d.iter().product::<usize>() == od.iter().product() => {}
+                _ => ck.error(cname, Some(si), None, "reshape changes dtype or element count".into()),
+            }
+        }
+        Op::Transpose { perm } => {
+            let Some((oty, od)) = out_arr else { return };
+            let Some((sty, sd)) = opnd(0) else { return };
+            let mut seen = vec![false; sd.len()];
+            let valid = perm.len() == sd.len()
+                && perm.iter().all(|&p| p < sd.len() && !std::mem::replace(&mut seen[p], true));
+            if !valid || sty != oty || od.len() != sd.len() {
+                ck.error(cname, Some(si), None, format!("transpose perm {perm:?} invalid for {sd:?} -> {od:?}"));
+            } else if (0..od.len()).any(|i| od[i] != sd[perm[i]]) {
+                ck.error(cname, Some(si), None, format!("transpose output {od:?} disagrees with perm {perm:?} of {sd:?}"));
+            }
+        }
+        Op::Concat { dim } => {
+            let Some((oty, od)) = out_arr else { return };
+            if *dim >= od.len() {
+                ck.error(cname, Some(si), None, format!("concat dim {dim} out of range for rank {}", od.len()));
+                return;
+            }
+            let mut total = 0usize;
+            for j in 0..ins.operands.len() {
+                match opnd(j) {
+                    Some((ty, d))
+                        if ty == oty
+                            && d.len() == od.len()
+                            && d.iter().enumerate().all(|(k, &v)| k == *dim || v == od[k]) =>
+                    {
+                        total += d[*dim];
+                    }
+                    _ => {
+                        ck.error(cname, Some(si), None, format!("concat operand {j} shape disagrees"));
+                        return;
+                    }
+                }
+            }
+            if total != od[*dim] {
+                ck.error(cname, Some(si), None, format!("concat dim {dim} sums to {total}, output has {}", od[*dim]));
+            }
+        }
+        Op::DynamicSlice { sizes } => {
+            let Some((oty, od)) = out_arr else { return };
+            let Some((sty, sd)) = opnd(0) else { return };
+            if sty != oty || sizes.len() != sd.len() || od != sizes.as_slice() {
+                ck.error(cname, Some(si), None, format!("dynamic-slice sizes {sizes:?} disagree with {sd:?} -> {od:?}"));
+            }
+            if sizes.iter().zip(sd).any(|(&w, &d)| w > d) {
+                ck.error(cname, Some(si), None, "dynamic-slice window exceeds operand".into());
+            }
+            if ins.operands.len() != 1 + sd.len() || !(1..ins.operands.len()).all(scalar_s32) {
+                ck.error(cname, Some(si), None, "dynamic-slice needs one scalar s32 index per dim".into());
+            }
+        }
+        Op::DynamicUpdateSlice => {
+            let Some((oty, od)) = out_arr else { return };
+            match opnd(0) {
+                Some((ty, d)) if ty == oty && d == od => {}
+                _ => ck.error(cname, Some(si), None, "dynamic-update-slice output shape disagrees with operand".into()),
+            }
+            match opnd(1) {
+                Some((ty, d))
+                    if ty == oty && d.len() == od.len() && d.iter().zip(od).all(|(&u, &o)| u <= o) => {}
+                _ => ck.error(cname, Some(si), None, "dynamic-update-slice update shape invalid".into()),
+            }
+            if ins.operands.len() != 2 + od.len() || !(2..ins.operands.len()).all(scalar_s32) {
+                ck.error(cname, Some(si), None, "dynamic-update-slice needs one scalar s32 index per dim".into());
+            }
+        }
+        Op::Gather(g) => {
+            if ins.operands.len() != 2 {
+                ck.error(cname, Some(si), None, format!("gather takes 2 operands, got {}", ins.operands.len()));
+                return;
+            }
+            match opnd(0) {
+                Some((_, d)) if g.slice_sizes.len() == d.len() => {}
+                Some(_) => ck.error(cname, Some(si), None, "gather slice_sizes rank disagrees with operand".into()),
+                None => ck.error(cname, Some(si), None, "gather operand is not an array".into()),
+            }
+        }
+        Op::Scatter(sd) => {
+            match (out_arr, opnd(0)) {
+                (Some((oty, od)), Some((ty, d))) if ty == oty && d == od => {}
+                _ => ck.error(cname, Some(si), None, "scatter output shape disagrees with operand".into()),
+            }
+            if ins.operands.len() != 3 {
+                ck.error(cname, Some(si), None, format!("scatter takes 3 operands, got {}", ins.operands.len()));
+            }
+            match m.comps.get(sd.to_apply) {
+                Some(c) if c.n_params == 2 => {}
+                Some(c) => ck.error(cname, Some(si), None, format!("scatter combiner takes {} params, want 2", c.n_params)),
+                None => ck.error(cname, Some(si), None, format!("scatter combiner index {} out of range", sd.to_apply)),
+            }
+        }
+        Op::Iota { dim } => {
+            if let Some((_, od)) = out_arr {
+                if *dim >= od.len() {
+                    ck.error(cname, Some(si), None, format!("iota dim {dim} out of range for rank {}", od.len()));
+                }
+            }
+        }
+        Op::Constant(t) => {
+            match out_arr {
+                Some((oty, od)) if t.data.ty() == oty && t.dims == od => {}
+                _ => ck.error(cname, Some(si), None, "constant literal disagrees with declared shape".into()),
+            }
+        }
+        Op::Call { to_apply } => match m.comps.get(*to_apply) {
+            Some(c) => {
+                if ins.operands.len() != c.n_params {
+                    ck.error(
+                        cname,
+                        Some(si),
+                        None,
+                        format!("call passes {} args, {:?} takes {}", ins.operands.len(), c.name, c.n_params),
+                    );
+                }
+                if c.instrs[c.root].shape != ins.shape {
+                    ck.error(cname, Some(si), None, format!("call output disagrees with {:?} root shape", c.name));
+                }
+            }
+            None => ck.error(cname, Some(si), None, format!("call target {to_apply} out of range")),
+        },
+        Op::While { condition, body } => {
+            if ins.operands.len() != 1 {
+                ck.error(cname, Some(si), None, "while takes one operand".into());
+            }
+            match m.comps.get(*condition) {
+                Some(c) => {
+                    if c.n_params != 1 {
+                        ck.error(cname, Some(si), None, "while condition must take 1 parameter".into());
+                    }
+                    match &c.instrs[c.root].shape {
+                        Shape::Arr(Ty::Pred, d) if d.iter().product::<usize>() == 1 => {}
+                        _ => ck.error(cname, Some(si), None, "while condition root is not a scalar pred".into()),
+                    }
+                }
+                None => ck.error(cname, Some(si), None, format!("while condition {condition} out of range")),
+            }
+            match m.comps.get(*body) {
+                Some(c) => {
+                    if c.n_params != 1 {
+                        ck.error(cname, Some(si), None, "while body must take 1 parameter".into());
+                    }
+                    if c.instrs[c.root].shape != ins.shape {
+                        ck.error(cname, Some(si), None, "while body root shape disagrees with output".into());
+                    }
+                }
+                None => ck.error(cname, Some(si), None, format!("while body {body} out of range")),
+            }
+        }
+        Op::Tuple => {
+            if ins.shape != Shape::Tuple(ins.operands.len()) {
+                ck.error(cname, Some(si), None, format!("tuple of {} operands declares {:?}", ins.operands.len(), ins.shape));
+            }
+        }
+        Op::GetTupleElement { index } => {
+            match ins.operands.first().and_then(|&o| comp.instrs.get(o)).map(|x| &x.shape) {
+                Some(Shape::Tuple(k)) if index < k => {}
+                Some(Shape::Tuple(k)) => {
+                    ck.error(cname, Some(si), None, format!("get-tuple-element index {index} out of a {k}-tuple"))
+                }
+                _ => ck.error(cname, Some(si), None, "get-tuple-element of a non-tuple".into()),
+            }
+        }
+    }
+}
+
+// -------------------------------------------------- pass 1: fused bytecode
+
+/// What the abstract interpreter knows about one kernel input.
+#[derive(Clone, Copy)]
+struct KInput {
+    ty: Ty,
+    elements: usize,
+}
+
+/// How the bytecode references a kernel input (re-derived from the
+/// program; mirrors the runtime `FusedCtx` role rules).
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum KRole {
+    Unused,
+    Load,
+    Splat,
+    Tile,
+    Rep,
+}
+
+impl KRole {
+    fn name(self) -> &'static str {
+        match self {
+            KRole::Unused => "unused",
+            KRole::Load => "load",
+            KRole::Splat => "splat",
+            KRole::Tile => "tile",
+            KRole::Rep => "rep",
+        }
+    }
+}
+
+/// Abstractly interpret a fused kernel's bytecode: stack discipline,
+/// lane types against the executor's legality tables, input roles and
+/// role-dependent sizes for a virtual element count `n` with trailing
+/// dimension `trailing` (block-offset validity: `Tile`/`Rep` need the
+/// kernel period to equal the chain's trailing dim or their modular
+/// index math is wrong at some offset). Returns the derived roles for
+/// the caller's in-place audit.
+#[allow(clippy::too_many_arguments)]
+fn check_kernel(
+    ck: &mut Checker,
+    cname: &str,
+    si: usize,
+    k: &FusedKernel,
+    inputs: &[Option<KInput>],
+    slots: &[Option<usize>],
+    hot: Option<u16>,
+    hot_ty: Ty,
+    n: usize,
+    trailing: usize,
+    declared_out: Ty,
+) -> Vec<KRole> {
+    debug_assert_eq!(inputs.len(), k.n_inputs);
+    let mut roles = vec![KRole::Unused; k.n_inputs];
+    let mut stack: Vec<Ty> = Vec::new();
+    let slot_of = |i: usize| slots.get(i).copied().flatten();
+    for (pc, e) in k.prog.iter().enumerate() {
+        // Input-referencing instructions: bind the role, push the lane.
+        if let EInstr::Load(i) | EInstr::Splat(i) | EInstr::Tile(i) | EInstr::Rep(i) = e {
+            let idx = *i as usize;
+            if idx >= k.n_inputs {
+                ck.error(
+                    cname,
+                    Some(si),
+                    None,
+                    format!("bytecode pc {pc} references input {idx}, kernel has {}", k.n_inputs),
+                );
+                return roles;
+            }
+            let role = match e {
+                EInstr::Load(_) => KRole::Load,
+                EInstr::Splat(_) => KRole::Splat,
+                EInstr::Tile(_) => KRole::Tile,
+                _ => KRole::Rep,
+            };
+            if roles[idx] != KRole::Unused && roles[idx] != role {
+                ck.error(
+                    cname,
+                    Some(si),
+                    slot_of(idx),
+                    format!("kernel input {idx} used as both {} and {}", roles[idx].name(), role.name()),
+                );
+            }
+            roles[idx] = role;
+            let ty = match &inputs[idx] {
+                Some(ki) => ki.ty,
+                None => hot_ty,
+            };
+            stack.push(ty);
+            continue;
+        }
+        let mut pop = |ck: &mut Checker| -> Option<Ty> {
+            let t = stack.pop();
+            if t.is_none() {
+                ck.error(cname, Some(si), None, format!("bytecode stack underflow at pc {pc}"));
+            }
+            t
+        };
+        match e {
+            EInstr::Bin(b) => {
+                let (Some(tb), Some(ta)) = (pop(ck), pop(ck)) else { return roles };
+                if ta != tb {
+                    ck.error(cname, Some(si), None, format!("pc {pc}: {b:?} on {} vs {}", ta.name(), tb.name()));
+                } else if !bin_ok(ta, *b) {
+                    ck.error(cname, Some(si), None, format!("pc {pc}: {b:?} is not defined on {}", ta.name()));
+                }
+                stack.push(ta);
+            }
+            EInstr::Cmp(_) => {
+                let (Some(tb), Some(ta)) = (pop(ck), pop(ck)) else { return roles };
+                if ta != tb || ta == Ty::Pred {
+                    ck.error(cname, Some(si), None, format!("pc {pc}: compare on {} vs {}", ta.name(), tb.name()));
+                }
+                stack.push(Ty::Pred);
+            }
+            EInstr::Sel => {
+                let (Some(tf), Some(tt), Some(tp)) = (pop(ck), pop(ck), pop(ck)) else { return roles };
+                if tp != Ty::Pred || tt != tf {
+                    ck.error(cname, Some(si), None, format!("pc {pc}: select({}, {}, {})", tp.name(), tt.name(), tf.name()));
+                }
+                stack.push(tt);
+            }
+            EInstr::Un(u) => {
+                let Some(ta) = pop(ck) else { return roles };
+                if !un_ok(ta, *u) {
+                    ck.error(cname, Some(si), None, format!("pc {pc}: {u:?} is not defined on {}", ta.name()));
+                }
+                stack.push(ta);
+            }
+            EInstr::Cvt(ty) => {
+                let Some(_) = pop(ck) else { return roles };
+                if *ty == Ty::Pred {
+                    ck.error(cname, Some(si), None, format!("pc {pc}: convert to pred is unsupported"));
+                }
+                stack.push(*ty);
+            }
+            EInstr::Load(_) | EInstr::Splat(_) | EInstr::Tile(_) | EInstr::Rep(_) => unreachable!(),
+        }
+    }
+    if stack.len() != 1 {
+        ck.error(cname, Some(si), None, format!("bytecode leaves {} lanes on the stack, want 1", stack.len()));
+    } else if stack[0] != k.out_ty {
+        ck.error(cname, Some(si), None, format!("bytecode yields {}, kernel declares {}", stack[0].name(), k.out_ty.name()));
+    }
+    if k.out_ty != declared_out {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("kernel output dtype {} disagrees with declared {}", k.out_ty.name(), declared_out.name()),
+        );
+    }
+
+    // Role-dependent input sizes (the runtime's FusedCtx contract), plus
+    // the block-offset validity of the Tile/Rep period: it must be the
+    // chain's trailing dimension or `src[(lo+t) % inner]` reads the
+    // wrong element at some block offset.
+    let periodic = roles.iter().any(|r| matches!(r, KRole::Tile | KRole::Rep));
+    if periodic && k.inner != trailing {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("kernel period {} disagrees with the chain's trailing dim {trailing}", k.inner),
+        );
+    }
+    if !periodic && k.inner != 0 {
+        ck.warn(cname, Some(si), None, format!("kernel declares period {} but uses no tile/rep leaf", k.inner));
+    }
+    for (idx, role) in roles.iter().enumerate() {
+        if hot == Some(idx as u16) {
+            if *role != KRole::Load {
+                ck.error(cname, Some(si), None, format!("hot input {idx} must be a plain load, is {}", role.name()));
+            }
+            continue;
+        }
+        let Some(ki) = &inputs[idx] else {
+            ck.error(cname, Some(si), slot_of(idx), format!("kernel input {idx} has no tensor backing"));
+            continue;
+        };
+        let want = match role {
+            KRole::Unused => {
+                ck.warn(cname, Some(si), slot_of(idx), format!("kernel input {idx} is never referenced"));
+                continue;
+            }
+            KRole::Load => n,
+            KRole::Splat => 1,
+            KRole::Tile => {
+                if k.inner == 0 {
+                    ck.error(cname, Some(si), slot_of(idx), "tile leaf without a period".into());
+                    continue;
+                }
+                k.inner
+            }
+            KRole::Rep => {
+                if k.inner == 0 || n % k.inner != 0 {
+                    ck.error(cname, Some(si), slot_of(idx), "rep leaf without a whole period".into());
+                    continue;
+                }
+                n / k.inner
+            }
+        };
+        if ki.elements != want {
+            ck.error(
+                cname,
+                Some(si),
+                slot_of(idx),
+                format!("kernel input {idx} ({}) holds {} elements, want {want}", role.name(), ki.elements),
+            );
+        }
+    }
+    roles
+}
+
+/// Kernel inputs for a plain fused chain: arg `j` backs kernel input
+/// `j`. Returns `None` (after flagging) when a slot is unusable.
+fn gather_inputs(
+    ck: &mut Checker,
+    cname: &str,
+    si: usize,
+    specs: &[SlotSpec],
+    args: &[(usize, bool)],
+) -> Option<(Vec<Option<KInput>>, Vec<Option<usize>>)> {
+    let mut inputs = Vec::with_capacity(args.len());
+    let mut slots = Vec::with_capacity(args.len());
+    for &(a, _) in args {
+        let Some((ty, dims)) = arr_spec(specs, a) else {
+            ck.error(cname, Some(si), Some(a), "kernel input slot is undefined or a tuple".into());
+            return None;
+        };
+        inputs.push(Some(KInput { ty, elements: dims.iter().product() }));
+        slots.push(Some(a));
+    }
+    Some((inputs, slots))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_fused(
+    ck: &mut Checker,
+    comp: &Computation,
+    cp: &CompPlan,
+    si: usize,
+    step: &Step,
+    ins: &super::parser::Instr,
+    kernel: &FusedKernel,
+    specs: &[SlotSpec],
+) {
+    let cname = comp.name.as_str();
+    let Shape::Arr(oty, od) = &ins.shape else {
+        ck.error(cname, Some(si), None, "fused step output is a tuple".into());
+        return;
+    };
+    if step.args.len() != kernel.n_inputs {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("{} args for a {}-input kernel", step.args.len(), kernel.n_inputs),
+        );
+        return;
+    }
+    let n: usize = od.iter().product();
+    let trailing = if od.len() == 2 { od[1] } else { 0 };
+    let Some((inputs, slots)) = gather_inputs(ck, cname, si, specs, &step.args) else { return };
+    let roles = check_kernel(ck, cname, si, kernel, &inputs, &slots, None, *oty, n, trailing, *oty);
+
+    // In-place output reuse: the target must be this step's dying, pure
+    // Load input with the output's dtype and element count — and never
+    // the root slot (the root outlives every step).
+    if let Some(j) = step.in_place {
+        if j >= step.args.len() {
+            ck.error(cname, Some(si), None, format!("in_place target {j} out of range"));
+            return;
+        }
+        let (slot, mv) = step.args[j];
+        if !mv {
+            ck.error(cname, Some(si), Some(slot), format!("in_place target arg {j} is not taken by move"));
+        }
+        if slot == cp.root {
+            ck.error(cname, Some(si), Some(slot), "in_place target is the root slot".into());
+        }
+        if roles.get(j) != Some(&KRole::Load) {
+            ck.error(
+                cname,
+                Some(si),
+                Some(slot),
+                format!("in_place target arg {j} is not a pure load input"),
+            );
+        }
+        if let Some(Some(ki)) = inputs.get(j) {
+            if ki.ty != *oty || ki.elements != n {
+                ck.error(
+                    cname,
+                    Some(si),
+                    Some(slot),
+                    format!("in_place reuse of {} x{} for {} x{n} output", ki.ty.name(), ki.elements, oty.name()),
+                );
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_fused_reduce(
+    ck: &mut Checker,
+    m: &Module,
+    comp: &Computation,
+    si: usize,
+    step: &Step,
+    ins: &super::parser::Instr,
+    kernel: &FusedKernel,
+    ty: Ty,
+    bin: BinOp,
+    outer: usize,
+    inner: usize,
+    specs: &[SlotSpec],
+) {
+    let cname = comp.name.as_str();
+    let Op::Reduce { dims: rdims, to_apply } = &ins.op else {
+        ck.error(cname, Some(si), None, format!("fused-reduce step on non-reduce {:?}", ins.name));
+        return;
+    };
+    let Shape::Arr(oty, od) = &ins.shape else {
+        ck.error(cname, Some(si), None, "reduce output is a tuple".into());
+        return;
+    };
+    let (Some((xty, xd)), Some((ity, idd))) = (operand_arr(comp, ins, 0), operand_arr(comp, ins, 1))
+    else {
+        ck.error(cname, Some(si), None, "reduce operands are not arrays".into());
+        return;
+    };
+    if ty != xty || *oty != xty || ity != xty {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("fused-reduce dtypes disagree: step {}, input {}, init {}, output {}",
+                ty.name(), xty.name(), ity.name(), oty.name()),
+        );
+    }
+    if idd.iter().product::<usize>() != 1 {
+        ck.error(cname, Some(si), None, "fused-reduce init is not a scalar".into());
+    }
+    // Geometry: the reduce must fold exactly the trailing dims of the
+    // (virtual) input; outer/inner are the split products.
+    let nr = rdims.len();
+    if nr == 0 || nr > xd.len() {
+        ck.error(cname, Some(si), None, format!("fused-reduce over dims {rdims:?} of rank {}", xd.len()));
+        return;
+    }
+    let split = xd.len() - nr;
+    let mut sorted = rdims.clone();
+    sorted.sort_unstable();
+    if !sorted.iter().copied().eq(split..xd.len()) {
+        ck.error(cname, Some(si), None, format!("fused-reduce dims {rdims:?} are not the trailing dims"));
+    }
+    let want_outer: usize = xd[..split].iter().product();
+    let want_inner: usize = xd[split..].iter().product();
+    if outer != want_outer || inner != want_inner {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("fused-reduce geometry {outer}x{inner}, input {xd:?} wants {want_outer}x{want_inner}"),
+        );
+    }
+    if od.as_slice() != &xd[..split] {
+        ck.error(cname, Some(si), None, format!("fused-reduce output {od:?}, want {:?}", &xd[..split]));
+    }
+    if !fold_ok(xty, bin) {
+        ck.error(cname, Some(si), None, format!("{bin:?} fold is unsupported on {}", xty.name()));
+    }
+    if let Err(e) = combiner_matches(m, *to_apply, bin) {
+        ck.error(cname, Some(si), None, e);
+    }
+    if step.args.len() != kernel.n_inputs + 1 {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("{} args for a {}-input kernel plus init", step.args.len(), kernel.n_inputs),
+        );
+        return;
+    }
+    // Last arg is the init scalar; the rest back the prologue chain over
+    // the virtual input of outer*inner elements.
+    let (init_slot, _) = step.args[kernel.n_inputs];
+    match arr_spec(specs, init_slot) {
+        Some((t, d)) if t == xty && d.iter().product::<usize>() == 1 => {}
+        _ => ck.error(cname, Some(si), Some(init_slot), "init slot is not a scalar of the fold dtype".into()),
+    }
+    let n = want_outer * want_inner;
+    let trailing = if xd.len() == 2 { xd[1] } else { 0 };
+    let Some((inputs, slots)) = gather_inputs(ck, cname, si, specs, &step.args[..kernel.n_inputs])
+    else {
+        return;
+    };
+    check_kernel(ck, cname, si, kernel, &inputs, &slots, None, xty, n, trailing, xty);
+}
+
+/// Kernel inputs for a producer fusion (`FusedDot`/`FusedGather`): the
+/// hot input has no slot; kernel input `k != hot` is backed by arg
+/// `k - (k > hot)`.
+#[allow(clippy::too_many_arguments)]
+fn producer_inputs(
+    ck: &mut Checker,
+    cname: &str,
+    si: usize,
+    specs: &[SlotSpec],
+    args: &[(usize, bool)],
+    n_inputs: usize,
+    hot: usize,
+) -> Option<(Vec<Option<KInput>>, Vec<Option<usize>>)> {
+    let mut inputs = Vec::with_capacity(n_inputs);
+    let mut slots = Vec::with_capacity(n_inputs);
+    for k in 0..n_inputs {
+        if k == hot {
+            inputs.push(None);
+            slots.push(None);
+            continue;
+        }
+        let (a, _) = args[k - usize::from(k > hot)];
+        let Some((ty, dims)) = arr_spec(specs, a) else {
+            ck.error(cname, Some(si), Some(a), "kernel input slot is undefined or a tuple".into());
+            return None;
+        };
+        inputs.push(Some(KInput { ty, elements: dims.iter().product() }));
+        slots.push(Some(a));
+    }
+    Some((inputs, slots))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_fused_dot(
+    ck: &mut Checker,
+    comp: &Computation,
+    si: usize,
+    step: &Step,
+    ins: &super::parser::Instr,
+    kernel: &FusedKernel,
+    hot: u16,
+    lc: usize,
+    rc: usize,
+    specs: &[SlotSpec],
+) {
+    let cname = comp.name.as_str();
+    let Shape::Arr(oty, od) = &ins.shape else {
+        ck.error(cname, Some(si), None, "fused-dot output is a tuple".into());
+        return;
+    };
+    if kernel.n_inputs == 0 || (hot as usize) >= kernel.n_inputs {
+        ck.error(cname, Some(si), None, format!("hot input {hot} out of range for {} inputs", kernel.n_inputs));
+        return;
+    }
+    let n_other = kernel.n_inputs - 1;
+    if step.args.len() != n_other + 2 {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("{} args, want {} epilogue inputs + 2 dot operands", step.args.len(), n_other),
+        );
+        return;
+    }
+    // The streamed producer: a rank-2 f32 x rank-2 f32 contraction whose
+    // output shape is the chain shape.
+    let (a_slot, _) = step.args[n_other];
+    let (b_slot, _) = step.args[n_other + 1];
+    let (Some((ta, da)), Some((tb, db))) = (arr_spec(specs, a_slot), arr_spec(specs, b_slot)) else {
+        ck.error(cname, Some(si), None, "dot operand slots are undefined or tuples".into());
+        return;
+    };
+    if ta != Ty::F32 || tb != Ty::F32 || da.len() != 2 || db.len() != 2 {
+        ck.error(cname, Some(si), None, "fused dot needs rank-2 f32 operands".into());
+        return;
+    }
+    if lc >= 2 || rc >= 2 {
+        ck.error(cname, Some(si), None, format!("dot contracting dims ({lc},{rc}) out of range"));
+        return;
+    }
+    if da[lc] != db[rc] {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("dot contraction mismatch: lhs dim {lc}={}, rhs dim {rc}={}", da[lc], db[rc]),
+        );
+    }
+    if od.len() != 2 || od.as_slice() != [da[1 - lc], db[1 - rc]] {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("fused-dot chain output {od:?}, dot produces [{}, {}]", da[1 - lc], db[1 - rc]),
+        );
+    }
+    let n: usize = od.iter().product();
+    let trailing = if od.len() == 2 { od[1] } else { 0 };
+    let Some((inputs, slots)) =
+        producer_inputs(ck, cname, si, specs, &step.args, kernel.n_inputs, hot as usize)
+    else {
+        return;
+    };
+    check_kernel(ck, cname, si, kernel, &inputs, &slots, Some(hot), Ty::F32, n, trailing, *oty);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_fused_gather(
+    ck: &mut Checker,
+    comp: &Computation,
+    si: usize,
+    step: &Step,
+    ins: &super::parser::Instr,
+    kernel: &FusedKernel,
+    hot: u16,
+    specs: &[SlotSpec],
+) {
+    let cname = comp.name.as_str();
+    let Shape::Arr(oty, od) = &ins.shape else {
+        ck.error(cname, Some(si), None, "fused-gather output is a tuple".into());
+        return;
+    };
+    if kernel.n_inputs == 0 || (hot as usize) >= kernel.n_inputs {
+        ck.error(cname, Some(si), None, format!("hot input {hot} out of range for {} inputs", kernel.n_inputs));
+        return;
+    }
+    let n_other = kernel.n_inputs - 1;
+    if step.args.len() != n_other + 2 {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("{} args, want {} epilogue inputs + operand + indices", step.args.len(), n_other),
+        );
+        return;
+    }
+    // The streamed producer: a row-take gather — f32 [v, d] table, one
+    // s32 row id per output row, full-width rows.
+    let (t_slot, _) = step.args[n_other];
+    let (i_slot, _) = step.args[n_other + 1];
+    let (Some((tt, td)), Some((ti, id))) = (arr_spec(specs, t_slot), arr_spec(specs, i_slot)) else {
+        ck.error(cname, Some(si), None, "gather operand slots are undefined or tuples".into());
+        return;
+    };
+    if tt != Ty::F32 || td.len() != 2 {
+        ck.error(cname, Some(si), Some(t_slot), "fused gather table must be a rank-2 f32 array".into());
+        return;
+    }
+    let rows = match (ti, id) {
+        (Ty::S32, [r]) => Some(*r),
+        (Ty::S32, [r, 1]) => Some(*r),
+        _ => None,
+    };
+    let Some(rows) = rows else {
+        ck.error(cname, Some(si), Some(i_slot), "fused gather indices must be s32 [r] or [r,1]".into());
+        return;
+    };
+    if od.len() != 2 || od.as_slice() != [rows, td[1]] {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("fused-gather chain output {od:?}, gather produces [{rows}, {}]", td[1]),
+        );
+    }
+    let n: usize = od.iter().product();
+    let trailing = if od.len() == 2 { od[1] } else { 0 };
+    let Some((inputs, slots)) =
+        producer_inputs(ck, cname, si, specs, &step.args, kernel.n_inputs, hot as usize)
+    else {
+        return;
+    };
+    check_kernel(ck, cname, si, kernel, &inputs, &slots, Some(hot), Ty::F32, n, trailing, *oty);
+}
+
+// -------------------------------------------------------- pass 2: liveness
+
+/// Replay the schedule with the serial executor's exact move semantics
+/// (args read in order; a move kills the slot mid-step, so a duplicate
+/// operand whose *first* occurrence moves is caught the same way the
+/// executor would fail it).
+fn check_liveness(ck: &mut Checker, comp: &Computation, cp: &CompPlan, specs: &[SlotSpec]) {
+    let cname = comp.name.as_str();
+    let ns = cp.n_slots;
+    let mut live = vec![false; ns];
+    let mut moved_at: Vec<Option<usize>> = vec![None; ns];
+    let mut read = vec![false; ns];
+    for (si, step) in cp.steps.iter().enumerate() {
+        for &(a, mv) in &step.args {
+            if a >= ns {
+                ck.error(cname, Some(si), Some(a), "reads a slot out of range".into());
+                continue;
+            }
+            if !live[a] {
+                match moved_at[a] {
+                    Some(ms) => ck.error(
+                        cname,
+                        Some(si),
+                        Some(a),
+                        format!("read after move (slot was moved at step {ms})"),
+                    ),
+                    None => ck.error(cname, Some(si), Some(a), "read while dead (no live value)".into()),
+                }
+            }
+            read[a] = true;
+            if mv {
+                if a == cp.root {
+                    ck.error(cname, Some(si), Some(a), "root slot taken by move".into());
+                }
+                if let Some(ms) = moved_at[a] {
+                    ck.error(cname, Some(si), Some(a), format!("double move (first moved at step {ms})"));
+                }
+                moved_at[a] = Some(si);
+                live[a] = false;
+            }
+        }
+        if step.out < ns {
+            if live[step.out] {
+                ck.error(cname, Some(si), Some(step.out), "overwrites a live slot".into());
+            }
+            live[step.out] = true;
+            moved_at[step.out] = None;
+        }
+    }
+    if cp.root < ns && !live[cp.root] {
+        let msg = match moved_at[cp.root] {
+            Some(ms) => format!("root slot is not live at the end (moved at step {ms})"),
+            None => "root slot is not live at the end".into(),
+        };
+        ck.error(cname, None, Some(cp.root), msg);
+    }
+    for s in 0..ns {
+        if s == cp.root || !live[s] {
+            continue;
+        }
+        if read[s] {
+            ck.warn(
+                cname,
+                None,
+                Some(s),
+                "slot still live at the end: its last read is not flagged as a move (value leaks)".into(),
+            );
+        } else {
+            // Never read: legitimate when the module itself never
+            // consumes the value — an unused parameter, or an
+            // instruction the source leaves dead (XLA routinely emits
+            // unused get-tuple-elements around while loops; the plan
+            // mirrors source-dead code faithfully). A slot the module
+            // *does* consume that no step reads means a read was lost
+            // somewhere in planning.
+            let benign = specs.get(s).and_then(|sp| sp.as_ref()).is_some_and(|&(i, _)| {
+                matches!(comp.instrs.get(i).map(|x| &x.op), Some(Op::Parameter(_)))
+                    || comp.uses.get(i).is_some_and(|&u| u == 0)
+            });
+            if !benign {
+                ck.warn(
+                    cname,
+                    None,
+                    Some(s),
+                    "slot is written but never read, yet the module consumes it (lost read)".into(),
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------ pass 3: happens-before
+
+/// Audit a step graph against its schedule: structural integrity, then
+/// the transitive closure over every conflicting slot access. Runs on
+/// serial (`parallel: false`) graphs too — they cost nothing extra and
+/// a broken graph is a latent bug either way.
+fn check_ordering(ck: &mut Checker, cname: &str, cp: &CompPlan, g: &StepGraph) {
+    let n = cp.steps.len();
+    if g.succs.len() != n || g.n_preds.len() != n {
+        ck.error(
+            cname,
+            None,
+            None,
+            format!("graph has {} nodes / {} pred counts for {n} steps", g.succs.len(), g.n_preds.len()),
+        );
+        return;
+    }
+    let mut sound = true;
+    for (s, succ) in g.succs.iter().enumerate() {
+        for &t in succ {
+            let t = t as usize;
+            if t >= n {
+                ck.error(cname, Some(s), None, format!("edge to step {t} out of range"));
+                return;
+            }
+            if t <= s {
+                ck.error(cname, Some(s), None, format!("edge {s}->{t} is not forward (schedule not topological)"));
+                sound = false;
+            }
+        }
+    }
+    let mut preds = vec![0u32; n];
+    for succ in &g.succs {
+        for &t in succ {
+            preds[t as usize] += 1;
+        }
+    }
+    for (s, (&want, &got)) in preds.iter().zip(&g.n_preds).enumerate() {
+        if want != got {
+            ck.error(
+                cname,
+                Some(s),
+                None,
+                format!("declared {got} predecessors, edge lists give {want}"),
+            );
+            sound = false;
+        }
+    }
+    let mut roots = g.roots.clone();
+    roots.sort_unstable();
+    let want_roots: Vec<usize> = (0..n).filter(|&s| g.n_preds[s] == 0).collect();
+    if roots != want_roots {
+        ck.error(cname, None, None, "root set disagrees with predecessor counts".into());
+        sound = false;
+    }
+    if !sound {
+        return;
+    }
+
+    // Transitive closure as one bitset row per step, filled back to
+    // front: row(s) = union over successors t of row(t) | {t}. Edges
+    // only point forward, so every needed row is already final.
+    let words = n.div_ceil(64);
+    let mut reach = vec![0u64; n * words];
+    for s in (0..n).rev() {
+        let (head, tail) = reach.split_at_mut((s + 1) * words);
+        let row_s = &mut head[s * words..];
+        for &t in &g.succs[s] {
+            let t = t as usize;
+            let off = (t - s - 1) * words;
+            let row_t = &tail[off..off + words];
+            for (w, &bits) in row_t.iter().enumerate() {
+                row_s[w] |= bits;
+            }
+            row_s[t / 64] |= 1u64 << (t % 64);
+        }
+    }
+    let reaches = |s: usize, t: usize| reach[s * words + t / 64] >> (t % 64) & 1 == 1;
+
+    // Conflicting accesses per slot: the producing write vs every read,
+    // and every shared read vs the move (which hands the buffer to
+    // in-place mutation). Each pair needs an ordering path.
+    let mut producer = vec![usize::MAX; cp.n_slots];
+    let mut readers: Vec<Vec<usize>> = vec![Vec::new(); cp.n_slots];
+    let mut mover = vec![usize::MAX; cp.n_slots];
+    for (s, step) in cp.steps.iter().enumerate() {
+        if step.out < cp.n_slots {
+            producer[step.out] = s;
+        }
+        for &(a, mv) in &step.args {
+            if a >= cp.n_slots {
+                continue;
+            }
+            readers[a].push(s);
+            if mv {
+                mover[a] = s;
+            }
+        }
+    }
+    for a in 0..cp.n_slots {
+        let p = producer[a];
+        let m = mover[a];
+        for &r in &readers[a] {
+            if p != usize::MAX && p != r {
+                ck.pairs += 1;
+                if !(p < r && reaches(p, r)) {
+                    ck.error(
+                        cname,
+                        Some(r),
+                        Some(a),
+                        format!("write/read race: no ordering path from producer step {p} to reader step {r}"),
+                    );
+                }
+            }
+            if m != usize::MAX && m != r {
+                ck.pairs += 1;
+                if !(r < m && reaches(r, m)) {
+                    ck.error(
+                        cname,
+                        Some(m),
+                        Some(a),
+                        format!("read/move race: no ordering path from reader step {r} to moving step {m}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::interp::parser::parse_module;
+    use crate::backend::interp::plan::{compile, FuseMode};
+
+    const CHAIN: &str = "HloModule m
+ENTRY e.6 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  Arg_1.2 = f32[4]{0} parameter(1)
+  add.3 = f32[4]{0} add(Arg_0.1, Arg_1.2)
+  negate.4 = f32[4]{0} negate(add.3)
+  ROOT multiply.5 = f32[4]{0} multiply(negate.4, Arg_0.1)
+}
+";
+
+    const CONSUMER: &str = "HloModule m
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY e.12 {
+  Arg_0.5 = f32[4,3]{1,0} parameter(0)
+  Arg_1.6 = f32[3,5]{1,0} parameter(1)
+  dot.7 = f32[4,5]{1,0} dot(Arg_0.5, Arg_1.6), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  Arg_2.8 = f32[5]{0} parameter(2)
+  broadcast.9 = f32[4,5]{1,0} broadcast(Arg_2.8), dimensions={1}
+  add.10 = f32[4,5]{1,0} add(dot.7, broadcast.9)
+  constant.11 = f32[] constant(0)
+  ROOT reduce.12 = f32[4]{0} reduce(add.10, constant.11), dimensions={1}, to_apply=region_0.1
+}
+";
+
+    const GATHER: &str = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[6,4]{1,0} parameter(0)
+  Arg_1.2 = s32[3,1]{1,0} parameter(1)
+  gather.3 = f32[3,4]{1,0} gather(Arg_0.1, Arg_1.2), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,4}
+  ROOT negate.4 = f32[3,4]{1,0} negate(gather.3)
+}
+";
+
+    fn checked(text: &str, mode: FuseMode) -> (Module, Plan, Verdict) {
+        let m = parse_module(text).unwrap();
+        let p = compile(&m, mode).unwrap();
+        let sp = SchedPlan::build(&p);
+        let v = verify(&m, &p, Some(&sp));
+        (m, p, v)
+    }
+
+    #[test]
+    fn clean_plans_verify_clean_at_every_fuse_mode() {
+        for text in [CHAIN, CONSUMER, GATHER] {
+            for mode in [FuseMode::Off, FuseMode::Chains, FuseMode::Full] {
+                let (_, _, v) = checked(text, mode);
+                assert!(v.findings.is_empty(), "{mode:?}: {}", v.report());
+                assert!(v.ok());
+                v.gate(VerifyMode::Strict).unwrap();
+                assert!(v.steps > 0);
+            }
+        }
+        // The consumer-fusion plan at Full exercises pass 3 on a graph
+        // with real conflicting pairs.
+        let (_, _, v) = checked(CONSUMER, FuseMode::Full);
+        assert!(v.pairs > 0, "race audit must check conflicting pairs");
+    }
+
+    #[test]
+    fn flipped_move_flags_are_caught_both_ways() {
+        // Spurious move: add's read of Arg_0.1 (slot 0) is NOT the last
+        // read — multiply reads it later. Forcing the flag makes that
+        // later read a read-after-move.
+        let m = parse_module(CHAIN).unwrap();
+        let mut p = compile(&m, FuseMode::Off).unwrap();
+        let cp = &mut p.comps[0];
+        assert_eq!(cp.steps[2].args[0], (0, false));
+        cp.steps[2].args[0].1 = true;
+        let v = verify(&m, &p, None);
+        assert!(!v.ok());
+        let f = v.findings.iter().find(|f| f.severity == Severity::Error).unwrap();
+        assert!(f.message.contains("read after move"), "{f}");
+        assert_eq!(f.slot, Some(0));
+        assert_eq!(f.step, Some(4));
+
+        // Dropped move: clearing the true last read leaks the value.
+        let mut p = compile(&m, FuseMode::Off).unwrap();
+        let cp = &mut p.comps[0];
+        assert_eq!(cp.steps[2].args[1], (1, true));
+        cp.steps[2].args[1].1 = false;
+        let v = verify(&m, &p, None);
+        assert!(v.ok(), "a leak is a warning, not an error");
+        assert!(v.warnings() > 0);
+        assert!(v.gate(VerifyMode::Strict).is_err());
+        let f = &v.findings[0];
+        assert!(f.message.contains("leak"), "{f}");
+        assert_eq!(f.slot, Some(1));
+    }
+
+    #[test]
+    fn corrupted_bytecode_operand_is_caught() {
+        let m = parse_module(CHAIN).unwrap();
+        let mut p = compile(&m, FuseMode::Full).unwrap();
+        let step = p.comps[0]
+            .steps
+            .iter_mut()
+            .find(|s| matches!(s.kind, Kind::Fused(_)))
+            .expect("chain must fuse");
+        let Kind::Fused(kernel) = &mut step.kind else { unreachable!() };
+        let EInstr::Load(i) = &mut kernel.prog[0] else { panic!("first instr must load") };
+        *i = 9;
+        let v = verify(&m, &p, None);
+        assert!(!v.ok());
+        let f = v.findings.iter().find(|f| f.severity == Severity::Error).unwrap();
+        assert!(f.message.contains("references input 9"), "{f}");
+        assert!(f.step.is_some());
+    }
+
+    #[test]
+    fn dropped_graph_edge_is_caught_as_a_race() {
+        // A diamond: negate and exponential both read the parameter
+        // slot; exponential's read is the last (the mover). The
+        // negate->exponential reader->mover edge is the ONLY ordering
+        // between them — in a straight chain the edge would be
+        // transitively implied and dropping it would be harmless.
+        let diamond = "HloModule m
+ENTRY e.5 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  negate.2 = f32[4]{0} negate(Arg_0.1)
+  exponential.3 = f32[4]{0} exponential(Arg_0.1)
+  ROOT add.4 = f32[4]{0} add(negate.2, exponential.3)
+}
+";
+        let m = parse_module(diamond).unwrap();
+        let p = compile(&m, FuseMode::Off).unwrap();
+        let cp = &p.comps[0];
+        assert!(cp.steps[2].args.iter().any(|&(a, mv)| a == 0 && mv), "exp must move slot 0");
+        // Remove the edge and patch the predecessor count so the graph
+        // stays structurally consistent: only the transitive-closure
+        // audit can notice.
+        let mut sp = SchedPlan::build(&p);
+        let g = &mut sp.graphs[0];
+        let pos = g.succs[1].iter().position(|&t| t == 2).expect("negate->exp edge");
+        g.succs[1].remove(pos);
+        g.n_preds[2] -= 1;
+        let v = verify(&m, &p, Some(&sp));
+        assert!(!v.ok());
+        let f = v.findings.iter().find(|f| f.severity == Severity::Error).unwrap();
+        assert!(f.message.contains("read/move race"), "{f}");
+        assert_eq!(f.slot, Some(0));
+        assert_eq!(f.step, Some(2));
+
+        // Dropping it *without* patching the count is caught earlier,
+        // by graph integrity.
+        let mut sp = SchedPlan::build(&p);
+        let g = &mut sp.graphs[0];
+        let pos = g.succs[1].iter().position(|&t| t == 2).unwrap();
+        g.succs[1].remove(pos);
+        let v = verify(&m, &p, Some(&sp));
+        assert!(!v.ok());
+        assert!(v.findings.iter().any(|f| f.message.contains("predecessors")), "{}", v.report());
+    }
+
+    #[test]
+    fn retargeted_in_place_is_caught() {
+        let text = "HloModule m
+ENTRY e.6 {
+  Arg_0.1 = f32[8]{0} parameter(0)
+  Arg_1.2 = f32[8]{0} parameter(1)
+  add.3 = f32[8]{0} add(Arg_0.1, Arg_1.2)
+  negate.4 = f32[8]{0} negate(add.3)
+  ROOT multiply.5 = f32[8]{0} multiply(negate.4, Arg_1.2)
+}
+";
+        let m = parse_module(text).unwrap();
+        let mut p = compile(&m, FuseMode::Full).unwrap();
+        {
+            let step = p.comps[0].steps.last_mut().unwrap();
+            assert_eq!(step.in_place, Some(0), "planner must pick the dying first input");
+            // Point the reuse at an arg index that does not exist.
+            step.in_place = Some(7);
+        }
+        let v = verify(&m, &p, None);
+        assert!(!v.ok());
+        assert!(v.findings.iter().any(|f| f.message.contains("in_place target 7")), "{}", v.report());
+
+        // Retarget at a live (non-moved) arg: the kernel would overwrite
+        // storage another step still reads.
+        let mut p = compile(&m, FuseMode::Full).unwrap();
+        {
+            let step = p.comps[0].steps.last_mut().unwrap();
+            let j = step.in_place.unwrap();
+            step.args[j].1 = false;
+            // Keep liveness itself clean for this case: some other step
+            // is irrelevant, we only watch the in-place diagnostics.
+        }
+        let v = verify(&m, &p, None);
+        assert!(!v.ok());
+        assert!(
+            v.findings.iter().any(|f| f.message.contains("not taken by move")),
+            "{}",
+            v.report()
+        );
+    }
+
+    #[test]
+    fn root_slot_move_is_caught() {
+        let m = parse_module(CHAIN).unwrap();
+        let mut p = compile(&m, FuseMode::Off).unwrap();
+        let root = p.comps[0].root;
+        // Forge a move of the root by retargeting multiply's moved arg.
+        let cp = &mut p.comps[0];
+        let last = cp.steps.len() - 1;
+        cp.steps[last].args[0] = (root, true);
+        let v = verify(&m, &p, None);
+        assert!(!v.ok());
+        assert!(v.findings.iter().any(|f| f.message.contains("root slot")), "{}", v.report());
+    }
+
+    #[test]
+    fn kernel_type_violation_is_caught() {
+        // Rewrite a fused Add into And: f32 lanes don't support it.
+        let m = parse_module(CHAIN).unwrap();
+        let mut p = compile(&m, FuseMode::Full).unwrap();
+        let step = p.comps[0]
+            .steps
+            .iter_mut()
+            .find(|s| matches!(s.kind, Kind::Fused(_)))
+            .unwrap();
+        let Kind::Fused(kernel) = &mut step.kind else { unreachable!() };
+        let bin = kernel
+            .prog
+            .iter_mut()
+            .find(|e| matches!(e, EInstr::Bin(BinOp::Add)))
+            .expect("chain contains an add");
+        *bin = EInstr::Bin(BinOp::And);
+        let v = verify(&m, &p, None);
+        assert!(!v.ok());
+        assert!(
+            v.findings.iter().any(|f| f.message.contains("And") && f.message.contains("f32")),
+            "{}",
+            v.report()
+        );
+    }
+
+    #[test]
+    fn verdict_reporting_names_step_and_slot() {
+        let f = Finding {
+            severity: Severity::Error,
+            comp: "e.6".into(),
+            step: Some(3),
+            slot: Some(1),
+            message: "read after move".into(),
+        };
+        assert_eq!(f.to_string(), "error[e.6 step 3 slot 1]: read after move");
+        let v = Verdict { findings: vec![f], steps: 5, pairs: 2 };
+        assert!(!v.ok());
+        assert!(v.report().contains("1 errors"));
+        assert!(v.gate(VerifyMode::Off).is_ok());
+        assert!(v.gate(VerifyMode::On).is_err());
+    }
+}

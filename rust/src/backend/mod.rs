@@ -22,7 +22,7 @@
 pub mod interp;
 pub mod pjrt;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use xla::Literal;
 
 use crate::runtime::manifest::ArtifactSpec;
@@ -66,6 +66,14 @@ pub trait Compiled {
     fn sched_report(&self) -> Option<String> {
         None
     }
+
+    /// Static plan-verifier verdict summary (pass counts plus any
+    /// warnings), when the backend verified the compiled plan (the
+    /// interpreter under `POLYGLOT_INTERP_VERIFY`). `None` for opaque
+    /// backends or when verification was off at compile.
+    fn verify_report(&self) -> Option<String> {
+        None
+    }
 }
 
 /// An execution backend: compiles artifacts into [`Compiled`] handles.
@@ -95,14 +103,14 @@ impl Buffer {
 /// is present (the probe compiles a trivial module), the interpreter
 /// otherwise. `POLYGLOT_BACKEND=pjrt|interp` overrides the probe.
 pub fn select() -> Result<Box<dyn Backend>> {
-    match std::env::var("POLYGLOT_BACKEND").ok().as_deref() {
-        Some("pjrt") => {
+    use crate::util::env::BackendPin;
+    match crate::util::env::backend_pin()? {
+        Some(BackendPin::Pjrt) => {
             let b = pjrt::PjrtBackend::probe()
                 .context("POLYGLOT_BACKEND=pjrt but the PJRT probe failed")?;
             Ok(Box::new(b))
         }
-        Some("interp") => Ok(Box::new(interp::InterpBackend::new())),
-        Some(other) => bail!("POLYGLOT_BACKEND={other:?} (expected pjrt | interp)"),
+        Some(BackendPin::Interp) => Ok(Box::new(interp::InterpBackend::new())),
         None => match pjrt::PjrtBackend::probe() {
             Ok(b) => Ok(Box::new(b)),
             Err(_) => Ok(Box::new(interp::InterpBackend::new())),

@@ -1,0 +1,224 @@
+//! `plan_lint` — the CI correctness gate over the static plan verifier.
+//!
+//! Sweeps every committed HLO artifact through the full compile matrix —
+//! {off, chains, full} fusion × scheduler {on, off} — and runs each
+//! compiled plan through the three-pass checker in
+//! `backend::interp::verify` (bytecode abstract interpretation, liveness
+//! soundness, happens-before race audit). Any error fails the gate; with
+//! `--strict` (the CI configuration) warnings fail it too, so the
+//! committed artifact set is provably clean, not just clean-enough.
+//!
+//! ```text
+//! plan_lint [DIR] [--strict] [--json PLAN_LINT.json]
+//! ```
+//!
+//! `DIR` defaults to `artifacts` (run from `rust/`, as CI does). The JSON
+//! report mirrors the console table — one row per (artifact, fuse, sched)
+//! configuration with its step/pair counts and every finding — and is
+//! uploaded by the `plan-lint` CI job next to the bench JSON.
+//!
+//! Exit status: 0 = all plans verified clean, 1 = at least one finding
+//! failed the gate, 2 = bad invocation / unreadable artifacts.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use polyglot_gpu::backend::interp::parser;
+use polyglot_gpu::backend::interp::plan::{self, FuseMode};
+use polyglot_gpu::backend::interp::sched::SchedPlan;
+use polyglot_gpu::backend::interp::verify::{verify, VerifyMode};
+use polyglot_gpu::util::json::Json;
+
+struct Args {
+    dir: String,
+    strict: bool,
+    json: Option<String>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args { dir: "artifacts".to_string(), strict: false, json: None };
+    let mut dir_set = false;
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--strict" => args.strict = true,
+            "--json" => {
+                args.json = Some(it.next().ok_or("--json wants a path".to_string())?)
+            }
+            "--help" | "-h" => {
+                return Err(
+                    "usage: plan_lint [DIR] [--strict] [--json PLAN_LINT.json]".to_string()
+                )
+            }
+            other if other.starts_with('-') => {
+                return Err(format!("unknown argument {other:?} (see --help)"))
+            }
+            other => {
+                if dir_set {
+                    return Err(format!("second positional argument {other:?}"));
+                }
+                args.dir = other.to_string();
+                dir_set = true;
+            }
+        }
+    }
+    Ok(args)
+}
+
+fn artifact_files(dir: &str) -> Result<Vec<std::path::PathBuf>, String> {
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read artifact dir {dir}: {e}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.file_name().is_some_and(|n| n.to_string_lossy().ends_with(".hlo.txt")))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no *.hlo.txt artifacts under {dir}"));
+    }
+    Ok(files)
+}
+
+fn fuse_name(mode: FuseMode) -> &'static str {
+    match mode {
+        FuseMode::Off => "off",
+        FuseMode::Chains => "chains",
+        FuseMode::Full => "full",
+    }
+}
+
+struct Row {
+    artifact: String,
+    fuse: &'static str,
+    sched: bool,
+    steps: usize,
+    pairs: usize,
+    errors: usize,
+    warnings: usize,
+    findings: Vec<String>,
+}
+
+fn lint(files: &[std::path::PathBuf], strict: bool) -> Result<(Vec<Row>, u32), String> {
+    let gate = if strict { VerifyMode::Strict } else { VerifyMode::On };
+    let mut rows = Vec::new();
+    let mut failures = 0u32;
+    for path in files {
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().trim_end_matches(".hlo.txt").to_string())
+            .unwrap_or_default();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let module = parser::parse_module(&text)
+            .map_err(|e| format!("{name}: parse failed: {e}"))?;
+        for mode in [FuseMode::Off, FuseMode::Chains, FuseMode::Full] {
+            let compiled = plan::compile(&module, mode)
+                .map_err(|e| format!("{name} [{}]: plan failed: {e}", fuse_name(mode)))?;
+            for sched in [true, false] {
+                let sp = sched.then(|| SchedPlan::build(&compiled));
+                let v = verify(&module, &compiled, sp.as_ref());
+                let pass = v.gate(gate).is_ok();
+                if !pass {
+                    failures += 1;
+                }
+                let tag = format!(
+                    "{name} [fuse={} sched={}]",
+                    fuse_name(mode),
+                    if sched { "on" } else { "off" }
+                );
+                if pass {
+                    println!("  ok   {tag:<48} {}", v.summary());
+                } else {
+                    println!("  FAIL {tag}");
+                    for line in v.report().lines() {
+                        println!("       {line}");
+                    }
+                }
+                rows.push(Row {
+                    artifact: name.clone(),
+                    fuse: fuse_name(mode),
+                    sched,
+                    steps: v.steps,
+                    pairs: v.pairs,
+                    errors: v.errors(),
+                    warnings: v.warnings(),
+                    findings: v.findings.iter().map(|f| f.to_string()).collect(),
+                });
+            }
+        }
+    }
+    Ok((rows, failures))
+}
+
+fn report_json(rows: &[Row], strict: bool, failures: u32) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("artifact".to_string(), Json::Str(r.artifact.clone()));
+            m.insert("fuse".to_string(), Json::Str(r.fuse.to_string()));
+            m.insert("sched".to_string(), Json::Bool(r.sched));
+            m.insert("steps".to_string(), Json::Num(r.steps as f64));
+            m.insert("ordered_pairs".to_string(), Json::Num(r.pairs as f64));
+            m.insert("errors".to_string(), Json::Num(r.errors as f64));
+            m.insert("warnings".to_string(), Json::Num(r.warnings as f64));
+            m.insert(
+                "findings".to_string(),
+                Json::Arr(r.findings.iter().cloned().map(Json::Str).collect()),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("tool".to_string(), Json::Str("plan_lint".to_string()));
+    top.insert("strict".to_string(), Json::Bool(strict));
+    top.insert("configs".to_string(), Json::Num(rows.len() as f64));
+    top.insert("failures".to_string(), Json::Num(failures as f64));
+    top.insert("results".to_string(), Json::Arr(results));
+    Json::Obj(top)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let files = match artifact_files(&args.dir) {
+        Ok(f) => f,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    println!(
+        "plan_lint: {} artifacts x {{off,chains,full}} x sched {{on,off}}{}",
+        files.len(),
+        if args.strict { " (strict: warnings gate)" } else { "" }
+    );
+    let (rows, failures) = match lint(&files, args.strict) {
+        Ok(r) => r,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(path) = &args.json {
+        let mut text = report_json(&rows, args.strict, failures).render();
+        text.push('\n');
+        if let Err(e) = std::fs::write(path, text) {
+            eprintln!("cannot write {path}: {e}");
+            return ExitCode::from(2);
+        }
+        println!("report written to {path}");
+    }
+    if failures > 0 {
+        eprintln!("plan_lint: {failures} configuration(s) failed verification");
+        ExitCode::FAILURE
+    } else {
+        println!("plan_lint: all {} configurations verified clean", rows.len());
+        ExitCode::SUCCESS
+    }
+}

@@ -14,6 +14,15 @@
 //! See DESIGN.md for the architecture and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+// Unsafe is denied crate-wide rather than forbidden: exactly four modules
+// carry a reviewed `#![allow(unsafe_code)]` carve-out for disjoint-range
+// parallel writes and scoped-lifetime erasure over the crate thread pool
+// (util::threadpool, backend::interp::kernels, grad::sharded,
+// baselines::scatter — each unsafe block documents its SAFETY argument).
+// Everything else, the verifier and planner included, is safe Rust; a new
+// `unsafe` outside those files is a compile error, not a review note.
+#![deny(unsafe_code)]
+
 pub mod backend;
 pub mod baselines;
 pub mod bench;

@@ -159,4 +159,10 @@ impl Executable {
     pub fn sched_report(&self) -> Option<String> {
         self.compiled.sched_report()
     }
+
+    /// Static plan-verifier verdict summary, when the backend verified
+    /// the compiled plan at compile time; `None` otherwise.
+    pub fn verify_report(&self) -> Option<String> {
+        self.compiled.verify_report()
+    }
 }

@@ -163,6 +163,22 @@ impl Runtime {
         rows
     }
 
+    /// Per-artifact `(name, report)` static-verifier verdicts for every
+    /// compiled executable whose backend ran the plan verifier at
+    /// compile (`POLYGLOT_INTERP_VERIFY`) — pass counts plus any
+    /// warnings; errors never get this far, they fail compilation.
+    /// Sorted by name for stable reporting.
+    pub fn verify_reports(&self) -> Vec<(String, String)> {
+        let mut rows: Vec<(String, String)> = self
+            .cache
+            .borrow()
+            .values()
+            .filter_map(|e| e.exe.verify_report().map(|r| (e.exe.name().to_string(), r)))
+            .collect();
+        rows.sort();
+        rows
+    }
+
     /// Per-artifact `(name, fused, total)` plan-step counts for every
     /// compiled executable whose backend exposes a plan (the
     /// interpreter) — `fused / total` is that artifact's fusion

@@ -1,0 +1,276 @@
+//! One home for every `POLYGLOT_*` environment knob.
+//!
+//! Before this module each subsystem parsed its own variable with its
+//! own tolerance for typos: the scheduler warned and disabled itself,
+//! the profiler silently ignored garbage, the thread knob silently fell
+//! back to all cores. Centralizing the parsing gives every knob the
+//! same contract:
+//!
+//! * unset → the documented default;
+//! * a recognized value → that value;
+//! * anything else → a warning on stderr **and the safest reading for
+//!   that knob** (never the value being bisected back on), so a typo in
+//!   a CI matrix or a shell session is loud instead of wrong.
+//!
+//! Each knob has a pure `parse_*` function (unit-tested without touching
+//! the process environment) and a thin `*()` reader used by the
+//! subsystems. The knobs:
+//!
+//! | variable                  | values              | default      | typo fallback |
+//! |---------------------------|---------------------|--------------|---------------|
+//! | `POLYGLOT_INTERP_FUSE`    | `off\|chains\|full` | `full`       | `off`         |
+//! | `POLYGLOT_INTERP_SCHED`   | `on\|off`           | `on`         | `off`         |
+//! | `POLYGLOT_INTERP_THREADS` | `0\|1\|2\|…`        | `0` (cores)  | `0` (cores)   |
+//! | `POLYGLOT_INTERP_PROFILE` | `on\|off`           | `off`        | `off`         |
+//! | `POLYGLOT_INTERP_VERIFY`  | `on\|off\|strict`   | `on` (debug builds), `off` (release) | `on` |
+//! | `POLYGLOT_BACKEND`        | `pjrt\|interp`      | probe        | hard error    |
+//!
+//! `POLYGLOT_BACKEND` is the one knob where a typo is a hard error
+//! rather than a fallback: the caller asked for a *specific* backend and
+//! silently probing a different one would defeat the pin.
+
+use anyhow::{bail, Result};
+
+use crate::backend::interp::plan::FuseMode;
+use crate::backend::interp::verify::VerifyMode;
+
+/// Variable names, so call sites and error messages never drift.
+pub const FUSE: &str = "POLYGLOT_INTERP_FUSE";
+pub const SCHED: &str = "POLYGLOT_INTERP_SCHED";
+pub const THREADS: &str = "POLYGLOT_INTERP_THREADS";
+pub const PROFILE: &str = "POLYGLOT_INTERP_PROFILE";
+pub const VERIFY: &str = "POLYGLOT_INTERP_VERIFY";
+pub const BACKEND: &str = "POLYGLOT_BACKEND";
+
+fn var(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+fn warn(name: &str, raw: &str, expected: &str, took: &str) {
+    eprintln!("[env] {name}={raw:?} unrecognized (expected {expected}); {took}");
+}
+
+/// `POLYGLOT_INTERP_FUSE=off|chains|full` pins the fusion level so a
+/// fusion regression can be bisected (`off` = one step per instruction,
+/// `chains` = elementwise chains only, `full` = consumer-side fusion —
+/// the default). A typo must not silently re-enable the thing being
+/// bisected, so unrecognized values compile with fusion OFF.
+pub fn fuse_mode() -> FuseMode {
+    parse_fuse_mode(var(FUSE).as_deref())
+}
+
+pub fn parse_fuse_mode(raw: Option<&str>) -> FuseMode {
+    let Some(raw) = raw else { return FuseMode::Full };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" => FuseMode::Off,
+        "chains" => FuseMode::Chains,
+        "" | "full" => FuseMode::Full,
+        other => {
+            warn(FUSE, other, "off|chains|full", "compiling with fusion OFF");
+            FuseMode::Off
+        }
+    }
+}
+
+/// `POLYGLOT_INTERP_SCHED=on|off` toggles the plan-level parallel
+/// scheduler (default **on**; it only engages when the thread budget
+/// exceeds 1 and a computation's dependency graph has width ≥ 2).
+/// Same typo policy as the fusion knob: unrecognized → scheduler OFF.
+pub fn sched() -> bool {
+    parse_sched(var(SCHED).as_deref())
+}
+
+pub fn parse_sched(raw: Option<&str>) -> bool {
+    let Some(raw) = raw else { return true };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" => false,
+        "" | "on" | "1" => true,
+        other => {
+            warn(SCHED, other, "on|off", "scheduler OFF");
+            false
+        }
+    }
+}
+
+/// Interpreter thread budget: `POLYGLOT_INTERP_THREADS` (0 or unset =
+/// all cores). Non-numeric values warn and take the all-cores default.
+pub fn threads() -> usize {
+    crate::grad::resolve_threads(parse_threads(var(THREADS).as_deref()))
+}
+
+pub fn parse_threads(raw: Option<&str>) -> usize {
+    let Some(raw) = raw else { return 0 };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return 0;
+    }
+    match trimmed.parse::<usize>() {
+        Ok(n) => n,
+        Err(_) => {
+            warn(THREADS, trimmed, "a thread count (0 = all cores)", "using all cores");
+            0
+        }
+    }
+}
+
+/// `POLYGLOT_INTERP_PROFILE=on` turns per-plan-op timing on at compile.
+pub fn profile() -> bool {
+    parse_profile(var(PROFILE).as_deref())
+}
+
+pub fn parse_profile(raw: Option<&str>) -> bool {
+    let Some(raw) = raw else { return false };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" => true,
+        "" | "0" | "false" | "off" => false,
+        other => {
+            warn(PROFILE, other, "on|off", "profiling OFF");
+            false
+        }
+    }
+}
+
+/// `POLYGLOT_INTERP_VERIFY=on|off|strict` gates the static plan
+/// verifier (`backend::interp::verify`). Debug builds default **on** —
+/// every test compile gets the three verification passes — release
+/// builds default off to keep compile latency out of serving paths.
+/// `strict` also fails compilation on warnings (the CI `plan_lint`
+/// gate). Unlike the bisection knobs, the safe fallback for a typo is
+/// to verify *more*, not less: unrecognized values verify ON.
+pub fn verify_mode() -> VerifyMode {
+    parse_verify_mode(var(VERIFY).as_deref())
+}
+
+pub fn parse_verify_mode(raw: Option<&str>) -> VerifyMode {
+    let default = if cfg!(debug_assertions) { VerifyMode::On } else { VerifyMode::Off };
+    let Some(raw) = raw else { return default };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" => VerifyMode::Off,
+        "on" | "1" | "true" => VerifyMode::On,
+        "strict" => VerifyMode::Strict,
+        "" => default,
+        other => {
+            warn(VERIFY, other, "on|off|strict", "verifier ON");
+            VerifyMode::On
+        }
+    }
+}
+
+/// The backend pin: `POLYGLOT_BACKEND=pjrt|interp`. `None` means "no
+/// pin — probe". Unrecognized values are a hard error (see module doc).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendPin {
+    Pjrt,
+    Interp,
+}
+
+pub fn backend_pin() -> Result<Option<BackendPin>> {
+    parse_backend_pin(var(BACKEND).as_deref())
+}
+
+pub fn parse_backend_pin(raw: Option<&str>) -> Result<Option<BackendPin>> {
+    let Some(raw) = raw else { return Ok(None) };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "pjrt" => Ok(Some(BackendPin::Pjrt)),
+        "interp" => Ok(Some(BackendPin::Interp)),
+        other => bail!("{BACKEND}={other:?} (expected pjrt | interp)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuse_mode_accepts_documented_values() {
+        assert_eq!(parse_fuse_mode(None), FuseMode::Full);
+        assert_eq!(parse_fuse_mode(Some("")), FuseMode::Full);
+        assert_eq!(parse_fuse_mode(Some("full")), FuseMode::Full);
+        assert_eq!(parse_fuse_mode(Some(" FULL ")), FuseMode::Full);
+        assert_eq!(parse_fuse_mode(Some("chains")), FuseMode::Chains);
+        assert_eq!(parse_fuse_mode(Some("off")), FuseMode::Off);
+        assert_eq!(parse_fuse_mode(Some("0")), FuseMode::Off);
+    }
+
+    #[test]
+    fn fuse_mode_typo_disables_fusion() {
+        // A typo must not silently re-enable the thing being bisected.
+        assert_eq!(parse_fuse_mode(Some("fulll")), FuseMode::Off);
+        assert_eq!(parse_fuse_mode(Some("yes")), FuseMode::Off);
+    }
+
+    #[test]
+    fn sched_accepts_documented_values() {
+        assert!(parse_sched(None));
+        assert!(parse_sched(Some("")));
+        assert!(parse_sched(Some("on")));
+        assert!(parse_sched(Some("1")));
+        assert!(!parse_sched(Some("off")));
+        assert!(!parse_sched(Some("0")));
+        assert!(!parse_sched(Some(" OFF ")));
+    }
+
+    #[test]
+    fn sched_typo_disables_scheduler() {
+        assert!(!parse_sched(Some("onn")));
+        assert!(!parse_sched(Some("enabled")));
+    }
+
+    #[test]
+    fn threads_parses_counts_and_falls_back_on_garbage() {
+        assert_eq!(parse_threads(None), 0);
+        assert_eq!(parse_threads(Some("")), 0);
+        assert_eq!(parse_threads(Some("0")), 0);
+        assert_eq!(parse_threads(Some(" 8 ")), 8);
+        assert_eq!(parse_threads(Some("many")), 0);
+        assert_eq!(parse_threads(Some("-2")), 0);
+    }
+
+    #[test]
+    fn profile_accepts_documented_values() {
+        assert!(!parse_profile(None));
+        assert!(!parse_profile(Some("")));
+        assert!(!parse_profile(Some("off")));
+        assert!(parse_profile(Some("1")));
+        assert!(parse_profile(Some("true")));
+        assert!(parse_profile(Some("on")));
+        assert!(!parse_profile(Some("yes")), "garbage must not enable profiling");
+    }
+
+    #[test]
+    fn verify_mode_defaults_follow_build_profile() {
+        let default = parse_verify_mode(None);
+        if cfg!(debug_assertions) {
+            assert_eq!(default, VerifyMode::On);
+        } else {
+            assert_eq!(default, VerifyMode::Off);
+        }
+        assert_eq!(parse_verify_mode(Some("")), default);
+    }
+
+    #[test]
+    fn verify_mode_accepts_documented_values() {
+        assert_eq!(parse_verify_mode(Some("off")), VerifyMode::Off);
+        assert_eq!(parse_verify_mode(Some("0")), VerifyMode::Off);
+        assert_eq!(parse_verify_mode(Some("on")), VerifyMode::On);
+        assert_eq!(parse_verify_mode(Some("1")), VerifyMode::On);
+        assert_eq!(parse_verify_mode(Some("STRICT")), VerifyMode::Strict);
+    }
+
+    #[test]
+    fn verify_mode_typo_fails_safe_to_on() {
+        // Opposite polarity from the bisection knobs: when in doubt,
+        // check more.
+        assert_eq!(parse_verify_mode(Some("strct")), VerifyMode::On);
+    }
+
+    #[test]
+    fn backend_pin_parses_or_errors() {
+        assert_eq!(parse_backend_pin(None).unwrap(), None);
+        assert_eq!(parse_backend_pin(Some("pjrt")).unwrap(), Some(BackendPin::Pjrt));
+        assert_eq!(parse_backend_pin(Some("interp")).unwrap(), Some(BackendPin::Interp));
+        let err = parse_backend_pin(Some("cuda")).unwrap_err().to_string();
+        assert!(err.contains("POLYGLOT_BACKEND"), "{err}");
+        assert!(err.contains("pjrt | interp"), "{err}");
+    }
+}

@@ -1,10 +1,12 @@
 //! Shared substrates: deterministic RNG, running statistics, timers,
-//! human formatting, a minimal JSON parser, and a scoped thread pool.
+//! human formatting, a minimal JSON parser, a scoped thread pool, and
+//! the env-knob parsers.
 //!
 //! This environment is offline, so the usual crates (`rand`, `serde_json`,
 //! `rayon`) are re-implemented here at the scale this project needs; each
 //! submodule carries its own unit tests.
 
+pub mod env;
 pub mod fmt;
 pub mod json;
 pub mod rng;

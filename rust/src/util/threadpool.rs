@@ -16,6 +16,12 @@
 //! every queued task eventually runs on one of the fixed `threads + 1`
 //! participating threads (workers + the joining caller).
 
+// Crate-root carve-out (`#![deny(unsafe_code)]` in lib.rs): the scoped
+// lifetime erasure and the pool back-pointer below are the crate's
+// rayon-replacement primitives; each unsafe block documents its SAFETY
+// argument.
+#![allow(unsafe_code)]
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
