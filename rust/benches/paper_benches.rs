@@ -14,7 +14,8 @@
 //!   E11 host scatter-add: serial vs sharded-parallel sweep over batch ×
 //!       vocab (the grad subsystem's crossover) -> BENCH_scatter.json
 //!   E12 interpreter engines: tree-walk vs compiled plan (fusion), 1 vs
-//!       N threads, over committed artifacts -> BENCH_interp.json
+//!       N threads, SIMD lanes + packed dot on vs off, over committed
+//!       artifacts -> BENCH_interp.json
 //!
 //! Pass a filter to run a subset: `cargo bench -- e3 e6`.
 //! E1–E8 execute artifacts on the runtime's selected backend — PJRT when
@@ -678,6 +679,7 @@ fn e12() -> Result<()> {
     use polyglot_gpu::backend::interp::InterpExecutable;
     use polyglot_gpu::grad::resolve_threads;
     use polyglot_gpu::testkit::synth_artifact_inputs;
+    use polyglot_gpu::util::env;
 
     let threads = resolve_threads(0);
     println!(
@@ -694,9 +696,11 @@ fn e12() -> Result<()> {
         "full (1 thr)",
         threaded_col.as_str(),
         "sched off",
+        "simd off",
         "fused/unfused",
         "plan/tree",
         "sched gain",
+        "simd gain",
         "coverage",
         "plan steps",
     ]);
@@ -704,6 +708,7 @@ fn e12() -> Result<()> {
     let mut train_step_win = false;
     let mut consumer_win = true;
     let mut sched_win = true;
+    let mut simd_win = false;
     for name in [
         "train_step_ref_b16",
         "train_step_ref_b512",
@@ -722,6 +727,17 @@ fn e12() -> Result<()> {
         // blocking stays on in both — the delta is plan-level overlap).
         let plan_n = InterpExecutable::from_text_sched(&text, threads, FuseMode::Full, true)?;
         let plan_n_off = InterpExecutable::from_text_sched(&text, threads, FuseMode::Full, false)?;
+        // The SIMD pair is the lane-width A/B: same fused plan, same
+        // thread budget and scheduler, scalar (lanes=1) kernels and the
+        // unpacked dot vs the lanes=8 bytecode and panel-packed dot.
+        let plan_n_scalar = InterpExecutable::from_text_simd(
+            &text,
+            threads,
+            FuseMode::Full,
+            true,
+            env::verify_mode(),
+            false,
+        )?;
 
         // Two distinct metrics: `coverage` = fused fraction of the Full
         // plan's compute steps; `plan_steps_full/off` = schedule lengths
@@ -742,11 +758,13 @@ fn e12() -> Result<()> {
         b.bench("plan1", 1, samples, 1.0, || plan1.run(&refs).unwrap());
         b.bench("planN", 1, samples, 1.0, || plan_n.run(&refs).unwrap());
         b.bench("planN_off", 1, samples, 1.0, || plan_n_off.run(&refs).unwrap());
+        b.bench("planN_scalar", 1, samples, 1.0, || plan_n_scalar.run(&refs).unwrap());
         let tree_s = b.get("tree").unwrap().mean_s();
         let unfused_s = b.get("unfused").unwrap().mean_s();
         let plan1_s = b.get("plan1").unwrap().mean_s();
         let plan_n_s = b.get("planN").unwrap().mean_s();
         let sched_off_s = b.get("planN_off").unwrap().mean_s();
+        let simd_off_s = b.get("planN_scalar").unwrap().mean_s();
         t.row(&[
             name.to_string(),
             fmt::dur(Duration::from_secs_f64(tree_s)),
@@ -754,9 +772,11 @@ fn e12() -> Result<()> {
             fmt::dur(Duration::from_secs_f64(plan1_s)),
             fmt::dur(Duration::from_secs_f64(plan_n_s)),
             fmt::dur(Duration::from_secs_f64(sched_off_s)),
+            fmt::dur(Duration::from_secs_f64(simd_off_s)),
             format!("{:.2}x", unfused_s / plan1_s),
             format!("{:.2}x", tree_s / plan1_s),
             format!("{:.2}x", sched_off_s / plan_n_s),
+            format!("{:.2}x", simd_off_s / plan_n_s),
             format!("{fused_steps}/{compute_steps} ({:.0}%)", coverage * 100.0),
             format!("{plan_steps_full} of {plan_steps_off}"),
         ]);
@@ -779,6 +799,13 @@ fn e12() -> Result<()> {
         {
             consumer_win = false;
         }
+        // SIMD acceptance: on at least one dot/reduce-heavy artifact the
+        // lanes=8 bytecode + packed dot must beat the scalar build at
+        // the full thread budget (scatter artifacts are exempt — their
+        // serial-identical path is deliberately untouched by SIMD).
+        if !name.starts_with("scatter") && plan_n_s < simd_off_s {
+            simd_win = true;
+        }
         let mut m = BTreeMap::new();
         m.insert("artifact".to_string(), Json::Str(name.to_string()));
         m.insert("treewalk_s".to_string(), Json::Num(tree_s));
@@ -786,10 +813,12 @@ fn e12() -> Result<()> {
         m.insert("plan1_s".to_string(), Json::Num(plan1_s));
         m.insert("planN_s".to_string(), Json::Num(plan_n_s));
         m.insert("sched_off_s".to_string(), Json::Num(sched_off_s));
+        m.insert("simd_off_s".to_string(), Json::Num(simd_off_s));
         m.insert("plan_speedup".to_string(), Json::Num(tree_s / plan1_s));
         m.insert("fusion_speedup".to_string(), Json::Num(unfused_s / plan1_s));
         m.insert("thread_speedup".to_string(), Json::Num(plan1_s / plan_n_s));
         m.insert("sched_speedup".to_string(), Json::Num(sched_off_s / plan_n_s));
+        m.insert("simd_speedup".to_string(), Json::Num(simd_off_s / plan_n_s));
         m.insert("fusion_coverage".to_string(), Json::Num(coverage));
         m.insert("fused_steps".to_string(), Json::Num(fused_steps as f64));
         m.insert("compute_steps".to_string(), Json::Num(compute_steps as f64));
@@ -811,12 +840,69 @@ fn e12() -> Result<()> {
          at {threads} threads {}",
         ok(sched_win || threads < 8)
     );
+    println!(
+        "shape check: SIMD lanes + packed dot beat the scalar build on a compute \
+         artifact at {threads} threads {}",
+        ok(simd_win)
+    );
+
+    // Packed-dot microbench: a single dot -> bias -> tanh layer, large
+    // enough that the panel packer streams cache-sized RHS panels, timed
+    // with the lanes=8 packed kernel vs the scalar unpacked one at the
+    // same thread budget. GFLOP/s counts the dot's 2*m*k*n only (the
+    // epilogue is noise at this size), so the two builds are comparable.
+    let (dm, dk, dn) = (256usize, 512usize, 256usize);
+    let dot_text = format!(
+        "HloModule dotbench\nENTRY e.8 {{\n  \
+         Arg_0.1 = f32[{dm},{dk}]{{1,0}} parameter(0)\n  \
+         Arg_1.2 = f32[{dk},{dn}]{{1,0}} parameter(1)\n  \
+         dot.3 = f32[{dm},{dn}]{{1,0}} dot(Arg_0.1, Arg_1.2), \
+         lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n  \
+         Arg_2.4 = f32[{dn}]{{0}} parameter(2)\n  \
+         broadcast.5 = f32[{dm},{dn}]{{1,0}} broadcast(Arg_2.4), dimensions={{1}}\n  \
+         add.6 = f32[{dm},{dn}]{{1,0}} add(dot.3, broadcast.5)\n  \
+         ROOT tanh.7 = f32[{dm},{dn}]{{1,0}} tanh(add.6)\n}}\n"
+    );
+    let da: Vec<f32> = (0..dm * dk).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let db_: Vec<f32> = (0..dk * dn).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let dc: Vec<f32> = (0..dn).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let dal = lit_f32(&da, &[dm, dk])?;
+    let dbl = lit_f32(&db_, &[dk, dn])?;
+    let dcl = lit_f32(&dc, &[dn])?;
+    let dot_packed = InterpExecutable::from_text_simd(
+        &dot_text,
+        threads,
+        FuseMode::Full,
+        true,
+        env::verify_mode(),
+        true,
+    )?;
+    let dot_scalar = InterpExecutable::from_text_simd(
+        &dot_text,
+        threads,
+        FuseMode::Full,
+        true,
+        env::verify_mode(),
+        false,
+    )?;
+    let mut db = Bencher::new();
+    db.bench("packed", 1, 12, 1.0, || dot_packed.run(&[&dal, &dbl, &dcl]).unwrap());
+    db.bench("scalar", 1, 12, 1.0, || dot_scalar.run(&[&dal, &dbl, &dcl]).unwrap());
+    let dot_flops = 2.0 * dm as f64 * dk as f64 * dn as f64;
+    let dot_gflops = dot_flops / db.get("packed").unwrap().mean_s() / 1e9;
+    let dot_gflops_scalar = dot_flops / db.get("scalar").unwrap().mean_s() / 1e9;
+    println!(
+        "packed dot microbench f32[{dm},{dk}]x[{dk},{dn}] + bias/tanh epilogue: \
+         {dot_gflops:.2} GFLOP/s packed (lanes=8) vs {dot_gflops_scalar:.2} scalar"
+    );
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("interp_engines".to_string()));
     root.insert("threads".to_string(), Json::Num(threads as f64));
     root.insert("cores".to_string(), Json::Num(cores as f64));
+    root.insert("dot_gflops".to_string(), Json::Num(dot_gflops));
+    root.insert("dot_gflops_scalar".to_string(), Json::Num(dot_gflops_scalar));
     root.insert("sweep".to_string(), Json::Arr(sweep));
     let root = Json::Obj(root);
     std::fs::write("BENCH_interp.json", root.render())?;
@@ -856,14 +942,14 @@ fn print_interp_ref_delta(current: &Json) {
     let Some(cur_sweep) = current.get("sweep").and_then(|s| s.as_arr()) else { return };
     for e in cur_sweep {
         let Some(name) = e.get("artifact").and_then(|v| v.as_str()) else { continue };
-        for key in ["plan1_s", "planN_s"] {
+        for key in ["plan1_s", "planN_s", "simd_off_s"] {
             let (Some(now), Some(then)) =
                 (e.get(key).and_then(|v| v.as_f64()), row(&reference, name, key))
             else {
                 continue;
             };
             if then > 0.0 {
-                println!("  {name:<24} {key:<8} {:+.1}%", (now - then) / then * 100.0);
+                println!("  {name:<24} {key:<10} {:+.1}%", (now - then) / then * 100.0);
             }
         }
     }

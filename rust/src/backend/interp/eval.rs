@@ -23,6 +23,12 @@
 //! row-major from the init value; `scatter` applies updates row-major
 //! over the updates array — the same order as the serial host baselines,
 //! which is what makes the scatter artifacts bitwise-reproducible.
+//! The walker always hands `exec_instr` a [`Par::serial`] budget, whose
+//! `simd` flag is off: the reference runs the plain unpacked `dot` and
+//! scalar lane loops, so the vectorized/packed plan paths (which keep
+//! per-element source order — see [`super::fusion`] and
+//! [`super::kernels`]) are checked against it, never the other way
+//! around.
 
 use anyhow::{bail, Context, Result};
 

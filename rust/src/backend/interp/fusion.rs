@@ -24,16 +24,31 @@
 //!
 //! **Consumer-side fusion** builds on the same bytecode through
 //! [`FusedCtx`]: a prepared, `Sync` evaluation context whose
-//! [`FusedCtx::eval_block`] computes an arbitrary element range, with one
-//! kernel input optionally supplied as a *hot block* ([`BlockSlice`]) by
-//! the calling kernel — how `dot`/`gather` stream their freshly-computed
-//! rows through an epilogue chain and how `reduce` folds a prologue
-//! chain per block without ever materializing its input
-//! ([`super::kernels`]). The same mechanism powers **in-place fused
-//! outputs** ([`run_fused_in_place`]): a dying same-shape input buffer is
+//! [`FusedCtx::eval_block`] computes an arbitrary element range, with
+//! any number of kernel inputs supplied as *hot blocks* ([`BlockSlice`])
+//! by the calling kernel — how `dot`/`gather` stream their
+//! freshly-computed rows through an epilogue chain (several dots may
+//! stream into one chain), how `reduce` folds a prologue chain per
+//! block without ever materializing its input ([`super::kernels`]), and
+//! how a reduce's own epilogue chain consumes the folded value. The
+//! same mechanism powers **in-place fused outputs**
+//! ([`run_fused_in_place`]): a dying same-shape input buffer is
 //! re-presented as the hot block while the finished block overwrites it
 //! — safe because block `[lo, hi)` is written only after every read of
 //! `[lo, hi)`, and later blocks never read earlier elements.
+//!
+//! **Lane vectorization:** when a kernel is compiled with
+//! [`FusedKernel::lanes`] = 8 (the `POLYGLOT_INTERP_SIMD` default), the
+//! f32/i32 `Bin`/`Un` opcodes run explicit [`LANES`]-wide chunked
+//! kernels (fixed-size array views the optimizer turns into SIMD; no
+//! intrinsics, no unsafe) with a scalar remainder tail. Per element the
+//! chunked body applies the *same* scalar function in the *same*
+//! operand order, so results stay bitwise identical to the scalar loop
+//! — there is no reassociation here. `Cmp`/`Sel`/`Cvt` and pred lanes
+//! keep the scalar path outright, and `Splat`/`Tile`/`Rep` were already
+//! bulk fills.
+
+use std::cell::Cell;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -44,6 +59,10 @@ use super::value::{Data, Tensor, Ty};
 /// Elements processed per block: big enough to amortize dispatch, small
 /// enough that a whole stack of lanes stays in L1/L2.
 pub const BLOCK: usize = 1024;
+
+/// Chunk width of the vectorized lane loops (`f32x8`-style: eight-lane
+/// fixed-size array bodies the optimizer lowers to SIMD).
+pub const LANES: usize = 8;
 
 /// One postfix bytecode instruction of a fused kernel.
 #[derive(Clone, Debug)]
@@ -79,6 +98,10 @@ pub struct FusedKernel {
     /// Trailing-dim length of the (rank-2) chain shape — the period for
     /// `Tile`/`Rep` leaves. 0 when the chain has no such leaf.
     pub inner: usize,
+    /// Lane width of the f32/i32 `Bin`/`Un` loops: [`LANES`] (chunked
+    /// vectorized bodies) or 1 (plain scalar, the
+    /// `POLYGLOT_INTERP_SIMD=off` pin). Bitwise identical either way.
+    pub lanes: u8,
     /// HLO opcodes folded into this kernel, postfix order (diagnostics
     /// and fuser tests).
     pub ops: Vec<&'static str>,
@@ -207,14 +230,16 @@ pub fn rep_node(comp: &Computation, i: usize) -> bool {
 /// marked `inlined` fold into the kernel). Returns the kernel plus the
 /// positions of the external operands, in kernel-input order.
 ///
-/// `hot` names an inlined *producer* node (`dot`/`gather`) whose value
-/// the executing kernel supplies per block: recursion stops there and a
-/// plain `Load` of that external input is emitted.
+/// `hots` names inlined *producer* nodes (`dot`/`gather`/`reduce`)
+/// whose values the executing kernel supplies per block: recursion
+/// stops there and a plain `Load` of that external input is emitted.
+/// `lanes` is recorded as the kernel's lane width (the SIMD knob).
 pub fn compile(
     comp: &Computation,
     root: usize,
     inlined: &[bool],
-    hot: Option<usize>,
+    hots: &[usize],
+    lanes: u8,
 ) -> Result<(FusedKernel, Vec<usize>)> {
     let mut prog = Vec::new();
     let mut ops = Vec::new();
@@ -225,7 +250,7 @@ pub fn compile(
     let mut cc = Emitter {
         comp,
         inlined,
-        hot,
+        hots,
         inner,
         prog: &mut prog,
         ops: &mut ops,
@@ -246,6 +271,7 @@ pub fn compile(
         n_inputs: ext.len(),
         out_ty,
         inner: if uses_inner { inner } else { 0 },
+        lanes,
         ops,
     };
     Ok((k, ext))
@@ -254,7 +280,7 @@ pub fn compile(
 struct Emitter<'a> {
     comp: &'a Computation,
     inlined: &'a [bool],
-    hot: Option<usize>,
+    hots: &'a [usize],
     inner: usize,
     prog: &'a mut Vec<EInstr>,
     ops: &'a mut Vec<&'static str>,
@@ -278,7 +304,7 @@ impl Emitter<'_> {
         let (out_ty, _) = ins.shape.arr()?;
         // Hot producer leaf: its block is supplied by the executing
         // kernel; emit a plain load of the external input.
-        if self.hot == Some(i) {
+        if self.hots.contains(&i) {
             let k = self.ext_index(i);
             self.prog.push(EInstr::Load(k));
             self.tys.push(out_ty);
@@ -486,6 +512,132 @@ impl Scratch {
             Lane::P(v) => self.p.push(v),
         }
     }
+
+    /// Borrow a pooled `f32` buffer for caller-managed block temporaries
+    /// (packed dot panels, hot row blocks); hand it back with
+    /// [`Scratch::put_f`] so the capacity survives to the next call.
+    pub fn lease_f(&mut self) -> Vec<f32> {
+        self.f.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer taken with [`Scratch::lease_f`] to the pool.
+    pub fn put_f(&mut self, v: Vec<f32>) {
+        self.f.push(v);
+    }
+}
+
+thread_local! {
+    static TL_SCRATCH: Cell<Option<Scratch>> = const { Cell::new(None) };
+}
+
+/// Run `f` with this thread's persistent [`Scratch`]: lane and block
+/// buffers warmed up by one kernel invocation are reused by the next on
+/// the same (pool worker) thread instead of reallocated per call. A
+/// re-entrant call sees a fresh cold scratch rather than aliasing the
+/// outer one; the outer scratch is checked back in when its call ends.
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    TL_SCRATCH.with(|cell| {
+        let mut s = cell.take().unwrap_or_default();
+        let r = f(&mut s);
+        cell.set(Some(s));
+        r
+    })
+}
+
+// ------------------------------------------------- vectorized lane kernels
+
+/// `x[t] = f(x[t], y[t])` over [`LANES`]-wide fixed-size chunks with a
+/// scalar remainder tail. The array views give the optimizer
+/// straight-line 8-lane bodies to turn into SIMD; per element this is
+/// the same function in the same operand order as the scalar loop, so
+/// the result is bitwise identical.
+#[inline]
+fn vmap2<T: Copy, F: Fn(T, T) -> T>(x: &mut [T], y: &[T], f: F) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut xc = x.chunks_exact_mut(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xa, ya) in (&mut xc).zip(&mut yc) {
+        let a: &mut [T; LANES] = xa.try_into().expect("chunk width");
+        let b: &[T; LANES] = ya.try_into().expect("chunk width");
+        for l in 0..LANES {
+            a[l] = f(a[l], b[l]);
+        }
+    }
+    for (a, &b) in xc.into_remainder().iter_mut().zip(yc.remainder()) {
+        *a = f(*a, b);
+    }
+}
+
+/// `x[t] = f(x[t])` over [`LANES`]-wide chunks with a scalar tail.
+#[inline]
+fn vmap1<T: Copy, F: Fn(T) -> T>(x: &mut [T], f: F) {
+    let mut xc = x.chunks_exact_mut(LANES);
+    for xa in &mut xc {
+        let a: &mut [T; LANES] = xa.try_into().expect("chunk width");
+        for l in 0..LANES {
+            a[l] = f(a[l]);
+        }
+    }
+    for a in xc.into_remainder() {
+        *a = f(*a);
+    }
+}
+
+/// Per-opcode vectorized f32 binary kernels. Each arm monomorphizes
+/// [`vmap2`] over the very expression `eval::bin_f32` applies, so the
+/// chunked path cannot drift from the scalar table.
+fn vbin_f32(op: BinOp, x: &mut [f32], y: &[f32]) -> Result<()> {
+    match op {
+        BinOp::Add => vmap2(x, y, |a, b| a + b),
+        BinOp::Sub => vmap2(x, y, |a, b| a - b),
+        BinOp::Mul => vmap2(x, y, |a, b| a * b),
+        BinOp::Div => vmap2(x, y, |a, b| a / b),
+        BinOp::Max => vmap2(x, y, f32::max),
+        BinOp::Min => vmap2(x, y, f32::min),
+        // Not defined on f32 — surface the scalar table's own error.
+        BinOp::And | BinOp::Or => {
+            bin_f32(op)?;
+        }
+    }
+    Ok(())
+}
+
+/// Per-opcode vectorized i32 binary kernels (wrapping, like the scalar
+/// table). `Div` keeps the exact scalar loop: its divide-by-zero guard
+/// is a data-dependent branch the chunked body would only obscure.
+fn vbin_i32(op: BinOp, x: &mut [i32], y: &[i32]) -> Result<()> {
+    match op {
+        BinOp::Add => vmap2(x, y, |a, b| a.wrapping_add(b)),
+        BinOp::Sub => vmap2(x, y, |a, b| a.wrapping_sub(b)),
+        BinOp::Mul => vmap2(x, y, |a, b| a.wrapping_mul(b)),
+        BinOp::Max => vmap2(x, y, i32::max),
+        BinOp::Min => vmap2(x, y, i32::min),
+        BinOp::Div => {
+            let f = bin_i32(op)?;
+            for (a, &b) in x.iter_mut().zip(y) {
+                *a = f(*a, b);
+            }
+        }
+        BinOp::And | BinOp::Or => {
+            bin_i32(op)?;
+        }
+    }
+    Ok(())
+}
+
+/// Vectorized f32 unary kernels. The transcendentals stay on the scalar
+/// table — they call libm either way, and keeping one source means the
+/// SIMD knob cannot change a single bit of their output.
+fn vun_f32(op: UnOp, x: &mut [f32]) {
+    match op {
+        UnOp::Neg => vmap1(x, |a| -a),
+        UnOp::Tanh | UnOp::Exp | UnOp::Log => {
+            let f = un_f32(op);
+            for v in x.iter_mut() {
+                *v = f(*v);
+            }
+        }
+    }
 }
 
 #[derive(Clone, Copy)]
@@ -517,7 +669,9 @@ pub struct FusedCtx<'k, 't> {
     k: &'k FusedKernel,
     inputs: Vec<Option<&'t Tensor>>,
     scalars: Vec<Option<Scalar>>,
-    hot: Option<u16>,
+    /// Kernel-input positions supplied per block by the caller, sorted
+    /// ascending; `eval_block`'s hot slices are indexed by position here.
+    hots: Vec<u16>,
     n: usize,
 }
 
@@ -530,14 +684,14 @@ const _: () = {
 };
 
 impl<'k, 't> FusedCtx<'k, 't> {
-    /// Validate `inputs` (one per kernel input; `None` only at the `hot`
-    /// position) against the kernel's roles for a virtual element count
+    /// Validate `inputs` (one per kernel input; `None` only at the `hots`
+    /// positions) against the kernel's roles for a virtual element count
     /// of `n`.
     pub fn new(
         k: &'k FusedKernel,
         inputs: Vec<Option<&'t Tensor>>,
         n: usize,
-        hot: Option<u16>,
+        hots: &[u16],
     ) -> Result<FusedCtx<'k, 't>> {
         if inputs.len() != k.n_inputs {
             bail!("fused kernel wants {} inputs, got {}", k.n_inputs, inputs.len());
@@ -560,9 +714,12 @@ impl<'k, 't> FusedCtx<'k, 't> {
                 _ => {}
             }
         }
+        let mut hots = hots.to_vec();
+        hots.sort_unstable();
+        hots.dedup();
         let mut scalars: Vec<Option<Scalar>> = vec![None; k.n_inputs];
         for (i, t) in inputs.iter().enumerate() {
-            if hot == Some(i as u16) {
+            if hots.contains(&(i as u16)) {
                 if roles[i] != Role::Load {
                     bail!("fused hot input {i} must be a plain load");
                 }
@@ -597,7 +754,7 @@ impl<'k, 't> FusedCtx<'k, 't> {
                 });
             }
         }
-        Ok(FusedCtx { k, inputs, scalars, hot, n })
+        Ok(FusedCtx { k, inputs, scalars, hots, n })
     }
 
     pub fn out_ty(&self) -> Ty {
@@ -608,31 +765,30 @@ impl<'k, 't> FusedCtx<'k, 't> {
         self.n
     }
 
-    /// Evaluate elements `[lo, hi)` of the chain, reading the hot input
-    /// (if any) from `hot` (indexed relative to `lo`). The result lane
-    /// holds `hi - lo` elements; recycle it via [`Scratch::recycle`].
+    /// Evaluate elements `[lo, hi)` of the chain, reading the hot inputs
+    /// from `hots` (one block per hot position, in the ctx's sorted hot
+    /// order, each indexed relative to `lo`). The result lane holds
+    /// `hi - lo` elements; recycle it via [`Scratch::recycle`].
     pub fn eval_block(
         &self,
         lo: usize,
         hi: usize,
-        hot: Option<BlockSlice>,
+        hots: &[BlockSlice],
         s: &mut Scratch,
     ) -> Result<Lane> {
         if hi > self.n || lo > hi {
             bail!("fused block [{lo}, {hi}) out of range 0..{}", self.n);
         }
-        if let Some(b) = &hot {
-            if self.hot.is_none() {
-                bail!("fused: hot block passed to a kernel without a hot input");
-            }
+        if hots.len() != self.hots.len() {
+            bail!("fused: {} hot blocks for {} hot inputs", hots.len(), self.hots.len());
+        }
+        for b in hots {
             if b.len() != hi - lo {
                 bail!("fused: hot block has {} elements, want {}", b.len(), hi - lo);
             }
-        } else if self.hot.is_some() {
-            bail!("fused: kernel expects a hot block");
         }
         for e in &self.k.prog {
-            self.step(e, lo, hi, hot, s)?;
+            self.step(e, lo, hi, hots, s)?;
         }
         let r = s.stack.pop().ok_or_else(|| anyhow!("fused: empty result stack"))?;
         if !s.stack.is_empty() {
@@ -651,14 +807,14 @@ impl<'k, 't> FusedCtx<'k, 't> {
         e: &EInstr,
         lo: usize,
         hi: usize,
-        hot: Option<BlockSlice>,
+        hots: &[BlockSlice],
         s: &mut Scratch,
     ) -> Result<()> {
         let len = hi - lo;
         match e {
             EInstr::Load(i) => {
-                if self.hot == Some(*i) {
-                    let lane = match hot.expect("checked in eval_block") {
+                if let Some(j) = self.hots.iter().position(|h| h == i) {
+                    let lane = match hots[j] {
                         BlockSlice::F(v) => {
                             let mut b = s.take_f();
                             b.clear();
@@ -773,17 +929,26 @@ impl<'k, 't> FusedCtx<'k, 't> {
                 let b = s.stack.pop().ok_or_else(|| anyhow!("fused: bin underflow"))?;
                 let a =
                     s.stack.last_mut().ok_or_else(|| anyhow!("fused: bin underflow"))?;
+                let wide = self.k.lanes as usize >= LANES;
                 match (a, &b) {
                     (Lane::F(x), Lane::F(y)) => {
-                        let f = bin_f32(*op)?;
-                        for (xa, &yb) in x.iter_mut().zip(y.iter()) {
-                            *xa = f(*xa, yb);
+                        if wide {
+                            vbin_f32(*op, x, y)?;
+                        } else {
+                            let f = bin_f32(*op)?;
+                            for (xa, &yb) in x.iter_mut().zip(y.iter()) {
+                                *xa = f(*xa, yb);
+                            }
                         }
                     }
                     (Lane::I(x), Lane::I(y)) => {
-                        let f = bin_i32(*op)?;
-                        for (xa, &yb) in x.iter_mut().zip(y.iter()) {
-                            *xa = f(*xa, yb);
+                        if wide {
+                            vbin_i32(*op, x, y)?;
+                        } else {
+                            let f = bin_i32(*op)?;
+                            for (xa, &yb) in x.iter_mut().zip(y.iter()) {
+                                *xa = f(*xa, yb);
+                            }
                         }
                     }
                     (Lane::P(x), Lane::P(y)) => {
@@ -857,9 +1022,13 @@ impl<'k, 't> FusedCtx<'k, 't> {
                     s.stack.last_mut().ok_or_else(|| anyhow!("fused: un underflow"))?;
                 match (a, op) {
                     (Lane::F(x), _) => {
-                        let f = un_f32(*op);
-                        for v in x.iter_mut() {
-                            *v = f(*v);
+                        if self.k.lanes as usize >= LANES {
+                            vun_f32(*op, x);
+                        } else {
+                            let f = un_f32(*op);
+                            for v in x.iter_mut() {
+                                *v = f(*v);
+                            }
                         }
                     }
                     (Lane::I(x), UnOp::Neg) => {
@@ -942,17 +1111,19 @@ pub fn run_fused(k: &FusedKernel, inputs: &[&Tensor], out_dims: &[usize]) -> Res
     if let Some(t) = fast_single_op(k, inputs, out_dims)? {
         return Ok(t);
     }
-    let ctx = FusedCtx::new(k, inputs.iter().map(|t| Some(*t)).collect(), n, None)?;
-    let mut s = Scratch::new();
+    let ctx = FusedCtx::new(k, inputs.iter().map(|t| Some(*t)).collect(), n, &[])?;
     let mut sink = OutSink::new(k.out_ty, n);
-    let mut lo = 0usize;
-    while lo < n {
-        let hi = (lo + BLOCK).min(n);
-        let lane = ctx.eval_block(lo, hi, None, &mut s)?;
-        sink.push(&lane)?;
-        s.recycle(lane);
-        lo = hi;
-    }
+    with_scratch(|s| -> Result<()> {
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + BLOCK).min(n);
+            let lane = ctx.eval_block(lo, hi, &[], s)?;
+            sink.push(&lane)?;
+            s.recycle(lane);
+            lo = hi;
+        }
+        Ok(())
+    })?;
     sink.finish(out_dims)
 }
 
@@ -981,49 +1152,57 @@ pub fn run_fused_in_place(
     if reuse.elements() != n || reuse.data.ty() != k.out_ty {
         bail!("fused in-place reuse: size or dtype mismatch");
     }
-    let ctx = FusedCtx::new(k, inputs, n, Some(pos))?;
-    let mut s = Scratch::new();
+    let ctx = FusedCtx::new(k, inputs, n, &[pos])?;
     match reuse.data {
         Data::F32(arc) => {
             let mut buf = std::sync::Arc::try_unwrap(arc)
                 .map_err(|_| anyhow!("fused in-place reuse of shared storage"))?;
-            let mut lo = 0usize;
-            while lo < n {
-                let hi = (lo + BLOCK).min(n);
-                let lane = ctx.eval_block(lo, hi, Some(BlockSlice::F(&buf[lo..hi])), &mut s)?;
-                let Lane::F(v) = &lane else { bail!("fused in-place: lane type") };
-                buf[lo..hi].copy_from_slice(v);
-                s.recycle(lane);
-                lo = hi;
-            }
+            with_scratch(|s| -> Result<()> {
+                let mut lo = 0usize;
+                while lo < n {
+                    let hi = (lo + BLOCK).min(n);
+                    let lane = ctx.eval_block(lo, hi, &[BlockSlice::F(&buf[lo..hi])], s)?;
+                    let Lane::F(v) = &lane else { bail!("fused in-place: lane type") };
+                    buf[lo..hi].copy_from_slice(v);
+                    s.recycle(lane);
+                    lo = hi;
+                }
+                Ok(())
+            })?;
             Ok(Tensor::f32(buf, out_dims.to_vec()))
         }
         Data::I32(arc) => {
             let mut buf = std::sync::Arc::try_unwrap(arc)
                 .map_err(|_| anyhow!("fused in-place reuse of shared storage"))?;
-            let mut lo = 0usize;
-            while lo < n {
-                let hi = (lo + BLOCK).min(n);
-                let lane = ctx.eval_block(lo, hi, Some(BlockSlice::I(&buf[lo..hi])), &mut s)?;
-                let Lane::I(v) = &lane else { bail!("fused in-place: lane type") };
-                buf[lo..hi].copy_from_slice(v);
-                s.recycle(lane);
-                lo = hi;
-            }
+            with_scratch(|s| -> Result<()> {
+                let mut lo = 0usize;
+                while lo < n {
+                    let hi = (lo + BLOCK).min(n);
+                    let lane = ctx.eval_block(lo, hi, &[BlockSlice::I(&buf[lo..hi])], s)?;
+                    let Lane::I(v) = &lane else { bail!("fused in-place: lane type") };
+                    buf[lo..hi].copy_from_slice(v);
+                    s.recycle(lane);
+                    lo = hi;
+                }
+                Ok(())
+            })?;
             Ok(Tensor::i32(buf, out_dims.to_vec()))
         }
         Data::Pred(arc) => {
             let mut buf = std::sync::Arc::try_unwrap(arc)
                 .map_err(|_| anyhow!("fused in-place reuse of shared storage"))?;
-            let mut lo = 0usize;
-            while lo < n {
-                let hi = (lo + BLOCK).min(n);
-                let lane = ctx.eval_block(lo, hi, Some(BlockSlice::P(&buf[lo..hi])), &mut s)?;
-                let Lane::P(v) = &lane else { bail!("fused in-place: lane type") };
-                buf[lo..hi].copy_from_slice(v);
-                s.recycle(lane);
-                lo = hi;
-            }
+            with_scratch(|s| -> Result<()> {
+                let mut lo = 0usize;
+                while lo < n {
+                    let hi = (lo + BLOCK).min(n);
+                    let lane = ctx.eval_block(lo, hi, &[BlockSlice::P(&buf[lo..hi])], s)?;
+                    let Lane::P(v) = &lane else { bail!("fused in-place: lane type") };
+                    buf[lo..hi].copy_from_slice(v);
+                    s.recycle(lane);
+                    lo = hi;
+                }
+                Ok(())
+            })?;
             Ok(Tensor::pred(buf, out_dims.to_vec()))
         }
     }
@@ -1170,7 +1349,7 @@ mod tests {
     }
 
     fn kernel(prog: Vec<EInstr>, n_inputs: usize, out_ty: Ty, inner: usize) -> FusedKernel {
-        FusedKernel { prog, n_inputs, out_ty, inner, ops: vec![] }
+        FusedKernel { prog, n_inputs, out_ty, inner, lanes: LANES as u8, ops: vec![] }
     }
 
     #[test]
@@ -1271,10 +1450,10 @@ mod tests {
         }
         // The modular index math must hold at arbitrary (non-row-aligned)
         // block offsets too: evaluate an unaligned sub-range directly.
-        let ctx = FusedCtx::new(&k, vec![Some(&tx), Some(&tb), Some(&tc)], n, None).unwrap();
+        let ctx = FusedCtx::new(&k, vec![Some(&tx), Some(&tb), Some(&tc)], n, &[]).unwrap();
         let mut s = Scratch::new();
         let (lo, hi) = (3usize, n - 2);
-        let lane = ctx.eval_block(lo, hi, None, &mut s).unwrap();
+        let lane = ctx.eval_block(lo, hi, &[], &mut s).unwrap();
         let Lane::F(v) = &lane else { panic!("lane type") };
         for (t, &got) in v.iter().enumerate() {
             let i = lo + t;
@@ -1294,16 +1473,141 @@ mod tests {
             0,
         );
         let tc = Tensor::f32(c.clone(), vec![n]);
-        let ctx = FusedCtx::new(&k, vec![None, Some(&tc)], n, Some(0)).unwrap();
+        let ctx = FusedCtx::new(&k, vec![None, Some(&tc)], n, &[0]).unwrap();
         let mut s = Scratch::new();
         let hot: Vec<f32> = (0..4).map(|i| i as f32).collect();
-        let lane = ctx.eval_block(2, 6, Some(BlockSlice::F(&hot)), &mut s).unwrap();
+        let lane = ctx.eval_block(2, 6, &[BlockSlice::F(&hot)], &mut s).unwrap();
         let Lane::F(v) = &lane else { panic!("lane type") };
         for t in 0..4 {
             assert_eq!(v[t], hot[t] + c[2 + t]);
         }
         // A missing hot block is an error, not a silent misread.
-        assert!(ctx.eval_block(2, 6, None, &mut s).is_err());
+        assert!(ctx.eval_block(2, 6, &[], &mut s).is_err());
+    }
+
+    #[test]
+    fn multi_hot_blocks_feed_the_marked_inputs() {
+        // out = h0 - h1 + c, with two hot inputs supplied per block.
+        let n = 12usize;
+        let c = f32s(n, 0.7);
+        let k = kernel(
+            vec![
+                EInstr::Load(0),
+                EInstr::Load(1),
+                EInstr::Bin(BinOp::Sub),
+                EInstr::Load(2),
+                EInstr::Bin(BinOp::Add),
+            ],
+            3,
+            Ty::F32,
+            0,
+        );
+        let tc = Tensor::f32(c.clone(), vec![n]);
+        let ctx = FusedCtx::new(&k, vec![None, None, Some(&tc)], n, &[0, 1]).unwrap();
+        let mut s = Scratch::new();
+        let h0: Vec<f32> = (0..5).map(|i| 10.0 + i as f32).collect();
+        let h1: Vec<f32> = (0..5).map(|i| 0.5 * i as f32).collect();
+        let lane = ctx
+            .eval_block(4, 9, &[BlockSlice::F(&h0), BlockSlice::F(&h1)], &mut s)
+            .unwrap();
+        let Lane::F(v) = &lane else { panic!("lane type") };
+        for t in 0..5 {
+            assert_eq!(v[t], h0[t] - h1[t] + c[4 + t]);
+        }
+        // Wrong hot-block count is an error, not a silent misread.
+        assert!(ctx.eval_block(4, 9, &[BlockSlice::F(&h0)], &mut s).is_err());
+    }
+
+    #[test]
+    fn vector_lanes_match_scalar_lanes_bitwise_with_tail() {
+        // n deliberately not a multiple of LANES: chunked body + tail.
+        let n = LANES * 5 + 3;
+        let a = f32s(n, 0.4);
+        let b: Vec<f32> = f32s(n, 3.3).iter().map(|v| v + 1.5).collect();
+        let prog = vec![
+            EInstr::Load(0),
+            EInstr::Load(1),
+            EInstr::Bin(BinOp::Max),
+            EInstr::Un(UnOp::Neg),
+            EInstr::Load(1),
+            EInstr::Bin(BinOp::Div),
+        ];
+        let ta = Tensor::f32(a.clone(), vec![n]);
+        let tb = Tensor::f32(b.clone(), vec![n]);
+        let wide = kernel(prog.clone(), 2, Ty::F32, 0);
+        let mut narrow = kernel(prog, 2, Ty::F32, 0);
+        narrow.lanes = 1;
+        let got = run_fused(&wide, &[&ta, &tb], &[n]).unwrap();
+        let want = run_fused(&narrow, &[&ta, &tb], &[n]).unwrap();
+        assert_eq!(got.f().unwrap(), want.f().unwrap());
+        for ((&o, &x), &y) in got.f().unwrap().iter().zip(&a).zip(&b) {
+            assert_eq!(o, -(x.max(y)) / y);
+        }
+    }
+
+    #[test]
+    fn vector_i32_lanes_match_scalar_wrapping() {
+        let n = 29usize; // 3 chunks + 5-element tail
+        let a: Vec<i32> = (0..n as i32).map(|i| i.wrapping_mul(0x7ead_beef)).collect();
+        let b: Vec<i32> = (0..n as i32).map(|i| i.wrapping_mul(0x1234_5677).wrapping_add(7)).collect();
+        let prog = vec![
+            EInstr::Load(0),
+            EInstr::Load(1),
+            EInstr::Bin(BinOp::Mul),
+            EInstr::Load(1),
+            EInstr::Bin(BinOp::Add),
+        ];
+        let ta = Tensor::i32(a.clone(), vec![n]);
+        let tb = Tensor::i32(b.clone(), vec![n]);
+        let wide = kernel(prog.clone(), 2, Ty::S32, 0);
+        let mut narrow = kernel(prog, 2, Ty::S32, 0);
+        narrow.lanes = 1;
+        let got = run_fused(&wide, &[&ta, &tb], &[n]).unwrap();
+        let want = run_fused(&narrow, &[&ta, &tb], &[n]).unwrap();
+        assert_eq!(got.i().unwrap(), want.i().unwrap());
+        for ((&o, &x), &y) in got.i().unwrap().iter().zip(&a).zip(&b) {
+            assert_eq!(o, x.wrapping_mul(y).wrapping_add(y));
+        }
+    }
+
+    #[test]
+    fn tile_rep_periods_straddling_chunks_match_scalar() {
+        // inner = 5 is coprime with LANES = 8, so every chunk crosses a
+        // tile/rep period boundary somewhere.
+        let (m, inner) = (9usize, 5usize);
+        let n = m * inner;
+        let x = f32s(n, 0.6);
+        let bias = f32s(inner, 1.9);
+        let col = f32s(m, 2.8);
+        let prog = vec![
+            EInstr::Load(0),
+            EInstr::Tile(1),
+            EInstr::Bin(BinOp::Add),
+            EInstr::Rep(2),
+            EInstr::Bin(BinOp::Mul),
+        ];
+        let tx = Tensor::f32(x.clone(), vec![m, inner]);
+        let tb = Tensor::f32(bias.clone(), vec![inner]);
+        let tc = Tensor::f32(col.clone(), vec![m]);
+        let wide = kernel(prog.clone(), 3, Ty::F32, inner);
+        let mut narrow = kernel(prog, 3, Ty::F32, inner);
+        narrow.lanes = 1;
+        let got = run_fused(&wide, &[&tx, &tb, &tc], &[m, inner]).unwrap();
+        let want = run_fused(&narrow, &[&tx, &tb, &tc], &[m, inner]).unwrap();
+        assert_eq!(got.f().unwrap(), want.f().unwrap());
+        for i in 0..n {
+            assert_eq!(got.f().unwrap()[i], (x[i] + bias[i % inner]) * col[i / inner]);
+        }
+        // Same equality on an unaligned sub-range.
+        let wctx = FusedCtx::new(&wide, vec![Some(&tx), Some(&tb), Some(&tc)], n, &[]).unwrap();
+        let nctx =
+            FusedCtx::new(&narrow, vec![Some(&tx), Some(&tb), Some(&tc)], n, &[]).unwrap();
+        let mut s = Scratch::new();
+        let (lo, hi) = (7usize, n - 3);
+        let wl = wctx.eval_block(lo, hi, &[], &mut s).unwrap();
+        let nl = nctx.eval_block(lo, hi, &[], &mut s).unwrap();
+        let (Lane::F(wv), Lane::F(nv)) = (&wl, &nl) else { panic!("lane type") };
+        assert_eq!(wv, nv);
     }
 
     #[test]

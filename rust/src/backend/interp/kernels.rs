@@ -37,6 +37,7 @@
 // raw pointer; each unsafe block documents its SAFETY argument.
 #![allow(unsafe_code)]
 
+use std::borrow::Cow;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
@@ -46,7 +47,8 @@ use crate::grad::sharded::scatter_add_sharded;
 use crate::grad::ShardPlan;
 use crate::util::threadpool::ThreadPool;
 
-use super::fusion::{BlockSlice, FusedCtx, Lane, OutSink, Scratch, BLOCK};
+use super::eval::{cast_i32_f32, cast_pred_f32};
+use super::fusion::{with_scratch, BlockSlice, FusedCtx, Lane, OutSink, BLOCK, LANES};
 use super::parser::{BinOp, GatherDims, Module, Op, ScatterDims};
 use super::value::{next_index, strides, Data, Tensor, Ty};
 
@@ -60,12 +62,18 @@ pub type GenericCombine<'a> = &'a dyn Fn(usize, f32, f32) -> Result<f32>;
 pub struct Par<'a> {
     pub threads: usize,
     pub pool: Option<&'a ThreadPool>,
+    /// `POLYGLOT_INTERP_SIMD`: take the cache-blocked packed `dot` path
+    /// (operands repacked contiguous once per call, [`LANES`]-wide axpy
+    /// rows). Per-output-element k-order is unchanged, so packed ==
+    /// unpacked bitwise; the knob exists for A/B benching and bisection.
+    pub simd: bool,
 }
 
 impl Par<'_> {
-    /// Single-threaded execution (the reference evaluator's mode).
+    /// Single-threaded execution (the reference evaluator's mode): one
+    /// thread, no pool, plain unpacked kernels.
     pub fn serial() -> Par<'static> {
-        Par { threads: 1, pool: None }
+        Par { threads: 1, pool: None, simd: false }
     }
 
     /// The pool, iff parallel execution is allowed and `work` crosses the
@@ -336,6 +344,14 @@ pub fn dynamic_update_slice(mut base: Tensor, upd: &Tensor, starts: &[i64]) -> R
 /// Rank-2 matmul with one contracting dim per side. Output rows split
 /// across threads above the flop threshold; per-element accumulation
 /// order is the k-loop either way, so parallel == serial bitwise.
+///
+/// Under `par.simd` both operands are repacked contiguous once per call
+/// — LHS to row-major `[m, k]`, RHS to `[k, n]` — so every output row
+/// streams a sequential A panel against sequential B rows with a
+/// [`LANES`]-wide axpy ([`dot_rows_packed`]); the panels are shared by
+/// all worker threads and leased from the thread-local fusion scratch.
+/// Each `out[i, j]` still accumulates in increasing k, so the packed
+/// path is bitwise equal to the unpacked one.
 pub fn dot(a: &Tensor, b: &Tensor, lc: usize, rc: usize, par: Par) -> Result<Tensor> {
     if a.dims.len() != 2 || b.dims.len() != 2 {
         bail!("dot: only rank-2 operands supported ({:?} x {:?})", a.dims, b.dims);
@@ -350,6 +366,33 @@ pub fn dot(a: &Tensor, b: &Tensor, lc: usize, rc: usize, par: Par) -> Result<Ten
     let bf = b.f()?;
     let mut out = vec![0f32; m * n];
     let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    if par.simd {
+        let (ap, bp) = pack_panels(af, bf, lc, rc, (m, n, k));
+        if let Some(pool) = par.grab(flops, DOT_PAR_MIN_FLOPS) {
+            let t = par.threads.min(m).max(1);
+            if t > 1 {
+                let chunk = m.div_ceil(t);
+                let wp = SendPtr(out.as_mut_ptr());
+                pool.scope_run(t, &|ti| {
+                    let lo = ti * chunk;
+                    let hi = ((ti + 1) * chunk).min(m);
+                    if lo >= hi {
+                        return;
+                    }
+                    // SAFETY: output rows [lo, hi) belong to task ti alone.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(wp.0.add(lo * n), (hi - lo) * n)
+                    };
+                    dot_rows_packed(&ap, &bp, (n, k), lo, hi, dst);
+                });
+                put_panels(ap, bp);
+                return Ok(Tensor::f32(out, vec![m, n]));
+            }
+        }
+        dot_rows_packed(&ap, &bp, (n, k), 0, m, &mut out);
+        put_panels(ap, bp);
+        return Ok(Tensor::f32(out, vec![m, n]));
+    }
     if let Some(pool) = par.grab(flops, DOT_PAR_MIN_FLOPS) {
         let t = par.threads.min(m).max(1);
         if t > 1 {
@@ -398,6 +441,94 @@ fn dot_rows(
                 for (j, o) in row.iter_mut().enumerate() {
                     *o += av * bf[j * k + kk];
                 }
+            }
+        }
+    }
+}
+
+/// `dst = src^T` for a row-major `r × c` source: `dst[j*r + i] =
+/// src[i*c + j]`. How the packed dot normalizes a column-contracted
+/// operand into the streaming layout.
+fn transpose_into(src: &[f32], r: usize, c: usize, dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.resize(r * c, 0.0);
+    for i in 0..r {
+        let row = &src[i * c..(i + 1) * c];
+        for (j, &v) in row.iter().enumerate() {
+            dst[j * r + i] = v;
+        }
+    }
+}
+
+/// Normalize both dot operands to the streaming layout — LHS row-major
+/// `[m, k]`, RHS `[k, n]` — copying only the side whose contracting dim
+/// needs flipping. Buffers are leased from the thread-local fusion
+/// scratch pool; return them with [`put_panels`].
+fn pack_panels<'s>(
+    af: &'s [f32],
+    bf: &'s [f32],
+    lc: usize,
+    rc: usize,
+    (m, n, k): (usize, usize, usize),
+) -> (Cow<'s, [f32]>, Cow<'s, [f32]>) {
+    let ap = if lc == 1 {
+        Cow::Borrowed(af)
+    } else {
+        let mut v = with_scratch(|s| s.lease_f());
+        transpose_into(af, k, m, &mut v);
+        Cow::Owned(v)
+    };
+    let bp = if rc == 0 {
+        Cow::Borrowed(bf)
+    } else {
+        let mut v = with_scratch(|s| s.lease_f());
+        transpose_into(bf, n, k, &mut v);
+        Cow::Owned(v)
+    };
+    (ap, bp)
+}
+
+/// Return any owned pack buffers to the thread-local scratch pool.
+fn put_panels(ap: Cow<'_, [f32]>, bp: Cow<'_, [f32]>) {
+    with_scratch(|s| {
+        if let Cow::Owned(v) = ap {
+            s.put_f(v);
+        }
+        if let Cow::Owned(v) = bp {
+            s.put_f(v);
+        }
+    });
+}
+
+/// Output rows [lo, hi) of a pre-packed (`[m, k] × [k, n]`, both
+/// row-major) matmul: for each k the row accumulates a [`LANES`]-wide
+/// chunked axpy over contiguous B rows, scalar remainder tail. The
+/// accumulation per output element is in increasing k — the same order
+/// as [`dot_rows`] — so packed == unpacked bitwise.
+fn dot_rows_packed(
+    ap: &[f32],
+    bp: &[f32],
+    (n, k): (usize, usize),
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    for i in lo..hi {
+        let row = &mut out[(i - lo) * n..(i - lo + 1) * n];
+        let arow = &ap[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &bp[kk * n..(kk + 1) * n];
+            let mut rc_ = row.chunks_exact_mut(LANES);
+            let mut bc = brow.chunks_exact(LANES);
+            for (ra, ba) in (&mut rc_).zip(&mut bc) {
+                let r: &mut [f32; LANES] = ra.try_into().expect("chunk width");
+                let b: &[f32; LANES] = ba.try_into().expect("chunk width");
+                for l in 0..LANES {
+                    r[l] += av * b[l];
+                }
+            }
+            for (r, &b) in rc_.into_remainder().iter_mut().zip(bc.remainder()) {
+                *r += av * b;
             }
         }
     }
@@ -565,39 +696,127 @@ fn take_rows(src: &[f32], v: usize, d: usize, ix: &[i32], lo: usize, hi: usize, 
 
 // ------------------------------------------------------- consumer fusion
 
-/// Rank-2 matmul whose output rows stream through a fused epilogue chain
-/// (`ctx`, hot input = the dot's output block) while they are still hot —
-/// the bias-add/tanh pattern never materializes the raw dot result.
-/// Row blocks split across threads exactly like [`dot`]; per-element
-/// accumulation and epilogue order are block-independent, so parallel ==
-/// serial bitwise.
-pub fn dot_fused(
-    a: &Tensor,
-    b: &Tensor,
+/// One streamed matmul feeding a fused epilogue chain: the operand pair,
+/// contracting dims, and whether an absorbed rank-2 `convert` promotes
+/// that side to f32 upfront (`cva`/`cvb` — the planner's dot input-side
+/// prologue fusion).
+pub struct DotArg<'a> {
+    pub a: &'a Tensor,
+    pub b: &'a Tensor,
+    pub lc: usize,
+    pub rc: usize,
+    pub cva: bool,
+    pub cvb: bool,
+}
+
+/// One producer's operands resolved to f32 views (absorbed converts
+/// applied, panels packed under `simd`).
+struct ProdView<'a> {
+    a: Cow<'a, [f32]>,
+    b: Cow<'a, [f32]>,
     lc: usize,
     rc: usize,
+    k: usize,
+}
+
+/// Resolve one dot operand to an f32 view. `cv` applies the absorbed
+/// `convert` upfront with the same scalar casts as the tree walk —
+/// converting the whole (small, reused-across-rows) operand once is
+/// bitwise identical to converting element-wise inside the chain.
+fn f32_cast_view<'a>(t: &'a Tensor, cv: bool) -> Result<Cow<'a, [f32]>> {
+    if !cv {
+        return Ok(Cow::Borrowed(t.f()?));
+    }
+    Ok(match &t.data {
+        Data::F32(v) => Cow::Borrowed(v.as_slice()),
+        Data::I32(v) => Cow::Owned(v.iter().map(|&x| cast_i32_f32(x)).collect()),
+        Data::Pred(v) => Cow::Owned(v.iter().map(|&b| cast_pred_f32(b)).collect()),
+    })
+}
+
+/// Rank-2 matmuls whose output rows stream through a fused epilogue
+/// chain (`ctx`) while they are still hot — the bias-add/tanh pattern
+/// never materializes a raw dot result. Several producers may feed one
+/// chain (`add(dot, dot)` grad patterns): each computes the same
+/// `block`-row output block in turn, then the epilogue consumes all the
+/// hot blocks at once (hot slices in the ctx's sorted hot order, which
+/// is how the planner orders `prods`). Row blocks split across threads
+/// exactly like [`dot`]; per-element accumulation and epilogue order
+/// are block-independent, so parallel == serial bitwise, and under
+/// `par.simd` each producer's panels pack once per call.
+pub fn dot_fused(
+    prods: &[DotArg],
     ctx: &FusedCtx,
+    block: usize,
     out_dims: &[usize],
     par: Par,
 ) -> Result<Tensor> {
-    if a.dims.len() != 2 || b.dims.len() != 2 {
-        bail!("fused dot: only rank-2 operands supported ({:?} x {:?})", a.dims, b.dims);
+    if out_dims.len() != 2 {
+        bail!("fused dot: epilogue output {:?} is not rank-2", out_dims);
     }
-    let k = a.dims[lc];
-    if b.dims[rc] != k {
-        bail!("fused dot: contracting {k} vs {}", b.dims[rc]);
+    if prods.is_empty() {
+        bail!("fused dot: no streamed producers");
     }
-    let m = a.dims[1 - lc];
-    let n = b.dims[1 - rc];
-    if out_dims.len() != 2 || out_dims[0] != m || out_dims[1] != n {
-        bail!("fused dot: epilogue shape {:?} vs dot [{m}, {n}]", out_dims);
+    let (m, n) = (out_dims[0], out_dims[1]);
+    let mut views = Vec::with_capacity(prods.len());
+    let mut flops = 0usize;
+    for p in prods {
+        if p.a.dims.len() != 2 || p.b.dims.len() != 2 {
+            bail!(
+                "fused dot: only rank-2 operands supported ({:?} x {:?})",
+                p.a.dims,
+                p.b.dims
+            );
+        }
+        let k = p.a.dims[p.lc];
+        if p.b.dims[p.rc] != k {
+            bail!("fused dot: contracting {k} vs {}", p.b.dims[p.rc]);
+        }
+        if p.a.dims[1 - p.lc] != m || p.b.dims[1 - p.rc] != n {
+            bail!(
+                "fused dot: producer [{}, {}] vs epilogue shape {:?}",
+                p.a.dims[1 - p.lc],
+                p.b.dims[1 - p.rc],
+                out_dims
+            );
+        }
+        let af = f32_cast_view(p.a, p.cva)?;
+        let bf = f32_cast_view(p.b, p.cvb)?;
+        let (mut lc, mut rc) = (p.lc, p.rc);
+        // Under the SIMD knob normalize to the streaming layout ([m, k]
+        // × [k, n]) once per call: only a side whose contracting dim is
+        // flipped pays a copy, and the panels are shared by every row
+        // block and worker thread.
+        let (af, bf) = if par.simd {
+            let ap = if lc == 1 {
+                af
+            } else {
+                let mut v = Vec::new();
+                transpose_into(&af, k, m, &mut v);
+                Cow::Owned(v)
+            };
+            let bp = if rc == 0 {
+                bf
+            } else {
+                let mut v = Vec::new();
+                transpose_into(&bf, n, k, &mut v);
+                Cow::Owned(v)
+            };
+            (lc, rc) = (1, 0);
+            (ap, bp)
+        } else {
+            (af, bf)
+        };
+        flops = flops.saturating_add(2usize.saturating_mul(m * n).saturating_mul(k));
+        views.push(ProdView { a: af, b: bf, lc, rc, k });
     }
-    let af = a.f()?;
-    let bf = b.f()?;
+    let block = block.max(1);
     let total = m * n;
+    let epi = |lo: usize, hi: usize, dst: &mut [f32]| -> Result<()> {
+        dot_epilogue_rows(&views, par.simd, (m, n), block, ctx, lo, hi, dst)
+    };
     if ctx.out_ty() == Ty::F32 {
         let mut out = vec![0f32; total];
-        let flops = 2usize.saturating_mul(total).saturating_mul(k);
         if let Some(pool) = par.grab(flops, DOT_PAR_MIN_FLOPS) {
             let t = par.threads.min(m).max(1);
             if t > 1 {
@@ -614,8 +833,7 @@ pub fn dot_fused(
                     let dst = unsafe {
                         std::slice::from_raw_parts_mut(wp.0.add(lo * n), (hi - lo) * n)
                     };
-                    if let Err(e) = dot_epilogue_rows(af, bf, lc, rc, (m, n, k), ctx, lo, hi, dst)
-                    {
+                    if let Err(e) = epi(lo, hi, dst) {
                         let mut g = err.lock().unwrap();
                         if g.is_none() {
                             *g = Some(e);
@@ -628,60 +846,81 @@ pub fn dot_fused(
                 return Ok(Tensor::f32(out, out_dims.to_vec()));
             }
         }
-        dot_epilogue_rows(af, bf, lc, rc, (m, n, k), ctx, 0, m, &mut out)?;
+        epi(0, m, &mut out)?;
         return Ok(Tensor::f32(out, out_dims.to_vec()));
     }
     // Non-f32 epilogue output (convert chains): serial blocked pass.
     let mut sink = OutSink::new(ctx.out_ty(), total);
-    let mut scratch = Scratch::new();
-    let rows_per_block = (BLOCK / n.max(1)).max(1);
-    let mut buf = vec![0f32; rows_per_block * n];
-    let mut r0 = 0usize;
-    while r0 < m {
-        let r1 = (r0 + rows_per_block).min(m);
-        let len = (r1 - r0) * n;
-        buf[..len].fill(0.0);
-        dot_rows(af, bf, lc, rc, (m, n, k), r0, r1, &mut buf[..len]);
-        let lane =
-            ctx.eval_block(r0 * n, r1 * n, Some(BlockSlice::F(&buf[..len])), &mut scratch)?;
-        sink.push(&lane)?;
-        scratch.recycle(lane);
-        r0 = r1;
-    }
+    with_scratch(|scratch| -> Result<()> {
+        let mut bufs: Vec<Vec<f32>> = views.iter().map(|_| scratch.lease_f()).collect();
+        let mut r0 = 0usize;
+        while r0 < m {
+            let r1 = (r0 + block).min(m);
+            let len = (r1 - r0) * n;
+            for (v, buf) in views.iter().zip(&mut bufs) {
+                buf.clear();
+                buf.resize(len, 0.0);
+                if par.simd {
+                    dot_rows_packed(&v.a, &v.b, (n, v.k), r0, r1, buf);
+                } else {
+                    dot_rows(&v.a, &v.b, v.lc, v.rc, (m, n, v.k), r0, r1, buf);
+                }
+            }
+            let hots: Vec<BlockSlice> = bufs.iter().map(|b| BlockSlice::F(&b[..len])).collect();
+            let lane = ctx.eval_block(r0 * n, r1 * n, &hots, scratch)?;
+            sink.push(&lane)?;
+            scratch.recycle(lane);
+            r0 = r1;
+        }
+        for buf in bufs {
+            scratch.put_f(buf);
+        }
+        Ok(())
+    })?;
     sink.finish(out_dims)
 }
 
-/// Rows `[lo, hi)`: matmul a block of output rows into a scratch buffer,
-/// run the epilogue on it while hot, write the finished block to `dst`.
-#[allow(clippy::too_many_arguments)]
+/// Rows `[lo, hi)`: matmul a `block`-row output block per producer into
+/// reused scratch buffers, run the epilogue over the hot blocks, write
+/// the finished rows to `dst`. Block temporaries and lane buffers both
+/// come from the worker's thread-local [`super::fusion::Scratch`].
 fn dot_epilogue_rows(
-    af: &[f32],
-    bf: &[f32],
-    lc: usize,
-    rc: usize,
-    (m, n, k): (usize, usize, usize),
+    views: &[ProdView],
+    simd: bool,
+    (m, n): (usize, usize),
+    block: usize,
     ctx: &FusedCtx,
     lo: usize,
     hi: usize,
     dst: &mut [f32],
 ) -> Result<()> {
-    let rows_per_block = (BLOCK / n.max(1)).max(1);
-    let mut scratch = Scratch::new();
-    let mut buf = vec![0f32; rows_per_block * n];
-    let mut r0 = lo;
-    while r0 < hi {
-        let r1 = (r0 + rows_per_block).min(hi);
-        let len = (r1 - r0) * n;
-        buf[..len].fill(0.0);
-        dot_rows(af, bf, lc, rc, (m, n, k), r0, r1, &mut buf[..len]);
-        let lane =
-            ctx.eval_block(r0 * n, r1 * n, Some(BlockSlice::F(&buf[..len])), &mut scratch)?;
-        let Lane::F(v) = &lane else { bail!("fused dot epilogue: lane type mismatch") };
-        dst[(r0 - lo) * n..(r1 - lo) * n].copy_from_slice(v);
-        scratch.recycle(lane);
-        r0 = r1;
-    }
-    Ok(())
+    with_scratch(|scratch| -> Result<()> {
+        let mut bufs: Vec<Vec<f32>> = views.iter().map(|_| scratch.lease_f()).collect();
+        let mut r0 = lo;
+        while r0 < hi {
+            let r1 = (r0 + block).min(hi);
+            let len = (r1 - r0) * n;
+            for (v, buf) in views.iter().zip(&mut bufs) {
+                buf.clear();
+                buf.resize(len, 0.0);
+                if simd {
+                    dot_rows_packed(&v.a, &v.b, (n, v.k), r0, r1, buf);
+                } else {
+                    dot_rows(&v.a, &v.b, v.lc, v.rc, (m, n, v.k), r0, r1, buf);
+                }
+            }
+            let hots: Vec<BlockSlice> = bufs.iter().map(|b| BlockSlice::F(&b[..len])).collect();
+            let lane = ctx.eval_block(r0 * n, r1 * n, &hots, scratch)?;
+            let Lane::F(v) = &lane else { bail!("fused dot epilogue: lane type mismatch") };
+            dst[(r0 - lo) * n..(r1 - lo) * n].copy_from_slice(v);
+            scratch.recycle(lane);
+            r0 = r1;
+        }
+        for buf in bufs {
+            scratch.put_f(buf);
+        }
+        Ok(())
+    })
 }
 
 /// Row-take gather (`out[r] = operand[clamp(ix[r])]`) whose gathered
@@ -740,20 +979,24 @@ pub fn gather_rows_fused(
         return Ok(Tensor::f32(out, out_dims.to_vec()));
     }
     let mut sink = OutSink::new(ctx.out_ty(), total);
-    let mut scratch = Scratch::new();
-    let rows_per_block = (BLOCK / d.max(1)).max(1);
-    let mut buf = vec![0f32; rows_per_block * d];
-    let mut r0 = 0usize;
-    while r0 < rows {
-        let r1 = (r0 + rows_per_block).min(rows);
-        let len = (r1 - r0) * d;
-        take_rows(src, v, d, ix, r0, r1, &mut buf[..len]);
-        let lane =
-            ctx.eval_block(r0 * d, r1 * d, Some(BlockSlice::F(&buf[..len])), &mut scratch)?;
-        sink.push(&lane)?;
-        scratch.recycle(lane);
-        r0 = r1;
-    }
+    with_scratch(|scratch| -> Result<()> {
+        let rows_per_block = (BLOCK / d.max(1)).max(1);
+        let mut buf = scratch.lease_f();
+        buf.clear();
+        buf.resize(rows_per_block * d, 0.0);
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let r1 = (r0 + rows_per_block).min(rows);
+            let len = (r1 - r0) * d;
+            take_rows(src, v, d, ix, r0, r1, &mut buf[..len]);
+            let lane = ctx.eval_block(r0 * d, r1 * d, &[BlockSlice::F(&buf[..len])], scratch)?;
+            sink.push(&lane)?;
+            scratch.recycle(lane);
+            r0 = r1;
+        }
+        scratch.put_f(buf);
+        Ok(())
+    })?;
     sink.finish(out_dims)
 }
 
@@ -768,22 +1011,25 @@ fn gather_epilogue_rows(
     hi: usize,
     dst: &mut [f32],
 ) -> Result<()> {
-    let rows_per_block = (BLOCK / d.max(1)).max(1);
-    let mut scratch = Scratch::new();
-    let mut buf = vec![0f32; rows_per_block * d];
-    let mut r0 = lo;
-    while r0 < hi {
-        let r1 = (r0 + rows_per_block).min(hi);
-        let len = (r1 - r0) * d;
-        take_rows(src, v, d, ix, r0, r1, &mut buf[..len]);
-        let lane =
-            ctx.eval_block(r0 * d, r1 * d, Some(BlockSlice::F(&buf[..len])), &mut scratch)?;
-        let Lane::F(vv) = &lane else { bail!("fused gather epilogue: lane type mismatch") };
-        dst[(r0 - lo) * d..(r1 - lo) * d].copy_from_slice(vv);
-        scratch.recycle(lane);
-        r0 = r1;
-    }
-    Ok(())
+    with_scratch(|scratch| -> Result<()> {
+        let rows_per_block = (BLOCK / d.max(1)).max(1);
+        let mut buf = scratch.lease_f();
+        buf.clear();
+        buf.resize(rows_per_block * d, 0.0);
+        let mut r0 = lo;
+        while r0 < hi {
+            let r1 = (r0 + rows_per_block).min(hi);
+            let len = (r1 - r0) * d;
+            take_rows(src, v, d, ix, r0, r1, &mut buf[..len]);
+            let lane = ctx.eval_block(r0 * d, r1 * d, &[BlockSlice::F(&buf[..len])], scratch)?;
+            let Lane::F(vv) = &lane else { bail!("fused gather epilogue: lane type mismatch") };
+            dst[(r0 - lo) * d..(r1 - lo) * d].copy_from_slice(vv);
+            scratch.recycle(lane);
+            r0 = r1;
+        }
+        scratch.put_f(buf);
+        Ok(())
+    })
 }
 
 /// Trailing-dims reduce whose input is a fused prologue chain evaluated
@@ -875,25 +1121,26 @@ fn fold_fused<T: Copy + Send + Sync>(
         return Ok(vec![init; outer]);
     }
     let fold_range = |lo: usize, hi: usize, dst: &mut [T]| -> Result<()> {
-        let mut scratch = Scratch::new();
-        let ob = (BLOCK / inner).max(1);
-        let mut o0 = lo;
-        while o0 < hi {
-            let o1 = (o0 + ob).min(hi);
-            let lane = ctx.eval_block(o0 * inner, o1 * inner, None, &mut scratch)?;
-            let vals = get(&lane)?;
-            for o in o0..o1 {
-                let run = &vals[(o - o0) * inner..(o - o0 + 1) * inner];
-                let mut acc = init;
-                for &x in run {
-                    acc = f(acc, x);
+        with_scratch(|scratch| -> Result<()> {
+            let ob = (BLOCK / inner).max(1);
+            let mut o0 = lo;
+            while o0 < hi {
+                let o1 = (o0 + ob).min(hi);
+                let lane = ctx.eval_block(o0 * inner, o1 * inner, &[], scratch)?;
+                let vals = get(&lane)?;
+                for o in o0..o1 {
+                    let run = &vals[(o - o0) * inner..(o - o0 + 1) * inner];
+                    let mut acc = init;
+                    for &x in run {
+                        acc = f(acc, x);
+                    }
+                    dst[o - lo] = acc;
                 }
-                dst[o - lo] = acc;
+                scratch.recycle(lane);
+                o0 = o1;
             }
-            scratch.recycle(lane);
-            o0 = o1;
-        }
-        Ok(())
+            Ok(())
+        })
     };
     let mut out = vec![init; outer];
     if let Some(pool) = par.grab(outer * inner, REDUCE_PAR_MIN_ELEMS) {
@@ -1320,7 +1567,15 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn par_over(pool: &ThreadPool) -> Par<'_> {
-        Par { threads: pool.threads(), pool: Some(pool) }
+        Par { threads: pool.threads(), pool: Some(pool), simd: false }
+    }
+
+    fn par_simd(pool: &ThreadPool) -> Par<'_> {
+        Par { threads: pool.threads(), pool: Some(pool), simd: true }
+    }
+
+    fn serial_simd() -> Par<'static> {
+        Par { threads: 1, pool: None, simd: true }
     }
 
     #[test]
@@ -1353,6 +1608,12 @@ mod tests {
             let s = dot(&ta, &tb, lc, rc, Par::serial()).unwrap();
             let p = dot(&ta, &tb, lc, rc, par_over(&pool)).unwrap();
             assert_eq!(s.f().unwrap(), p.f().unwrap(), "lc={lc} rc={rc}");
+            // The cache-blocked packed path preserves per-element k-order,
+            // so it must be bitwise too — serial and threaded.
+            let ps = dot(&ta, &tb, lc, rc, serial_simd()).unwrap();
+            assert_eq!(s.f().unwrap(), ps.f().unwrap(), "packed serial lc={lc} rc={rc}");
+            let pp = dot(&ta, &tb, lc, rc, par_simd(&pool)).unwrap();
+            assert_eq!(s.f().unwrap(), pp.f().unwrap(), "packed parallel lc={lc} rc={rc}");
         }
     }
 
@@ -1381,7 +1642,7 @@ mod tests {
     use super::super::parser::UnOp;
 
     fn epi_kernel(prog: Vec<EInstr>, n_inputs: usize, inner: usize) -> FusedKernel {
-        FusedKernel { prog, n_inputs, out_ty: Ty::F32, inner, ops: vec![] }
+        FusedKernel { prog, n_inputs, out_ty: Ty::F32, inner, lanes: LANES as u8, ops: vec![] }
     }
 
     #[test]
@@ -1413,13 +1674,65 @@ mod tests {
             .enumerate()
             .map(|(i, &x)| (x + bias[i % n]).tanh())
             .collect();
-        let ctx = FusedCtx::new(&kern, vec![None, Some(&tbias)], m * n, Some(0)).unwrap();
-        let serial = dot_fused(&ta, &tb, 1, 0, &ctx, &[m, n], Par::serial()).unwrap();
+        let ctx = FusedCtx::new(&kern, vec![None, Some(&tbias)], m * n, &[0]).unwrap();
+        let block = (BLOCK / n.max(1)).max(1);
+        let prods = [DotArg { a: &ta, b: &tb, lc: 1, rc: 0, cva: false, cvb: false }];
+        let serial = dot_fused(&prods, &ctx, block, &[m, n], Par::serial()).unwrap();
         assert_eq!(serial.f().unwrap(), &want[..]);
         assert!(2 * m * n * k >= DOT_PAR_MIN_FLOPS, "case must cross the parallel gate");
         let pool = ThreadPool::new(4);
-        let par = dot_fused(&ta, &tb, 1, 0, &ctx, &[m, n], par_over(&pool)).unwrap();
+        let par = dot_fused(&prods, &ctx, block, &[m, n], par_over(&pool)).unwrap();
         assert_eq!(par.f().unwrap(), serial.f().unwrap(), "parallel must be bitwise");
+        // Packed serial and packed parallel legs stay bitwise as well.
+        let ps = dot_fused(&prods, &ctx, block, &[m, n], serial_simd()).unwrap();
+        assert_eq!(ps.f().unwrap(), serial.f().unwrap(), "packed must be bitwise");
+        let pp = dot_fused(&prods, &ctx, block, &[m, n], par_simd(&pool)).unwrap();
+        assert_eq!(pp.f().unwrap(), serial.f().unwrap(), "packed parallel must be bitwise");
+    }
+
+    #[test]
+    fn dot_fused_streams_multiple_producers_and_converted_operands() {
+        // tanh(dot(a, b) + dot(c, e)) with e an absorbed s32 convert.
+        let mut rng = Rng::new(51);
+        let (m, k, n) = (24usize, 16usize, 12usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let c: Vec<f32> = (0..m * k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let ei: Vec<i32> = (0..k * n).map(|_| rng.below(7) as i32 - 3).collect();
+        let ta = Tensor::f32(a, vec![m, k]);
+        let tb = Tensor::f32(b, vec![k, n]);
+        let tc = Tensor::f32(c, vec![m, k]);
+        let te = Tensor::i32(ei.clone(), vec![k, n]);
+        let kern = epi_kernel(
+            vec![
+                EInstr::Load(0),
+                EInstr::Load(1),
+                EInstr::Bin(BinOp::Add),
+                EInstr::Un(UnOp::Tanh),
+            ],
+            2,
+            0,
+        );
+        let ctx = FusedCtx::new(&kern, vec![None, None], m * n, &[0, 1]).unwrap();
+        let ef = Tensor::f32(ei.iter().map(|&x| x as f32).collect(), vec![k, n]);
+        let d1 = dot(&ta, &tb, 1, 0, Par::serial()).unwrap();
+        let d2 = dot(&tc, &ef, 1, 0, Par::serial()).unwrap();
+        let want: Vec<f32> = d1
+            .f()
+            .unwrap()
+            .iter()
+            .zip(d2.f().unwrap())
+            .map(|(&x, &y)| (x + y).tanh())
+            .collect();
+        let block = (BLOCK / n.max(1)).max(1);
+        let prods = [
+            DotArg { a: &ta, b: &tb, lc: 1, rc: 0, cva: false, cvb: false },
+            DotArg { a: &tc, b: &te, lc: 1, rc: 0, cva: false, cvb: true },
+        ];
+        for par in [Par::serial(), serial_simd()] {
+            let got = dot_fused(&prods, &ctx, block, &[m, n], par).unwrap();
+            assert_eq!(got.f().unwrap(), &want[..]);
+        }
     }
 
     #[test]
@@ -1432,7 +1745,7 @@ mod tests {
         let indices = Tensor::i32(ix.clone(), vec![rows, 1]);
         // negate(gathered rows) — simplest epilogue.
         let kern = epi_kernel(vec![EInstr::Load(0), EInstr::Un(UnOp::Neg)], 1, d);
-        let ctx = FusedCtx::new(&kern, vec![None], rows * d, Some(0)).unwrap();
+        let ctx = FusedCtx::new(&kern, vec![None], rows * d, &[0]).unwrap();
         let serial = gather_rows_fused(&operand, &indices, &ctx, &[rows, d], Par::serial())
             .unwrap();
         for (r, &i) in ix.iter().enumerate() {
@@ -1457,7 +1770,7 @@ mod tests {
         let init = Tensor::f32(vec![0.0], vec![]);
         // reduce-add of exp(x) — the softmax denominator pattern.
         let kern = epi_kernel(vec![EInstr::Load(0), EInstr::Un(UnOp::Exp)], 1, 0);
-        let ctx = FusedCtx::new(&kern, vec![Some(&tx)], outer * inner, None).unwrap();
+        let ctx = FusedCtx::new(&kern, vec![Some(&tx)], outer * inner, &[]).unwrap();
         let serial = reduce_fused(
             &ctx,
             Ty::F32,

@@ -3,12 +3,15 @@
 //!
 //! `Backend::compile` parses the HLO text grammar the committed
 //! artifacts use (`parser`) and **lowers it once** (`plan`): elementwise
-//! chains fuse into single-pass bytecode kernels (`fusion`), every
-//! materialized value gets a slot in a liveness-planned arena with
-//! precomputed move-into-last-consumer flags, and heavy ops are bound to
-//! the shared kernel library (`kernels`) — `dot` / `reduce` / `gather` /
-//! `scatter` with row-blocked parallel paths over the crate thread pool,
-//! gated by `POLYGLOT_INTERP_THREADS` and per-op size thresholds.
+//! chains fuse into single-pass bytecode kernels (`fusion`) whose lane
+//! loops run 8-wide chunked (`POLYGLOT_INTERP_SIMD`, default on; `off`
+//! pins every kernel scalar), every materialized value gets a slot in a
+//! liveness-planned arena with precomputed move-into-last-consumer
+//! flags, and heavy ops are bound to the shared kernel library
+//! (`kernels`) — `dot` / `reduce` / `gather` / `scatter` with
+//! row-blocked parallel paths over the crate thread pool, gated by
+//! `POLYGLOT_INTERP_THREADS` and per-op size thresholds; under SIMD the
+//! dot packs both operand panels contiguous and streams cache-blocked.
 //! Execution replays the cached plan — serially for dependency chains,
 //! or through the plan-level parallel scheduler (`sched`, gated by
 //! `POLYGLOT_INTERP_SCHED`, default on) when a computation's step
@@ -106,6 +109,9 @@ pub struct InterpExecutable {
     module: Module,
     plan: plan::Plan,
     threads: usize,
+    /// Whether kernels were compiled 8-lane (and the dot packs panels);
+    /// baked into every [`Par`] this executable hands out.
+    simd: bool,
     /// Worker pool, spawned lazily on the first dispatch that actually
     /// crosses a kernel's parallel threshold (or schedules steps). Sized
     /// `threads - 1`: scoped joins *help* run queued work, so the
@@ -170,15 +176,9 @@ impl InterpExecutable {
         Self::from_text_verify(text, threads, mode, sched, crate::util::env::verify_mode())
     }
 
-    /// Full control: thread budget + fusion mode + scheduler toggle +
-    /// verifier mode, independent of every env knob (the E12 `sched_off`
-    /// leg, the scheduler stress tests, and `plan_lint`'s sweep).
-    ///
-    /// When `vmode` is not [`verify::VerifyMode::Off`], the compiled
-    /// plan (and its step graphs, when the scheduler is on) run through
-    /// the three-pass static checker in [`verify`]; a verdict with
-    /// errors — or, under `Strict`, warnings — fails compilation with
-    /// the full finding report.
+    /// Thread budget + fusion mode + scheduler toggle + verifier mode.
+    /// The kernel lane width still follows `POLYGLOT_INTERP_SIMD` — pin
+    /// it with [`InterpExecutable::from_text_simd`].
     pub fn from_text_verify(
         text: &str,
         threads: usize,
@@ -186,8 +186,34 @@ impl InterpExecutable {
         sched: bool,
         vmode: verify::VerifyMode,
     ) -> Result<InterpExecutable> {
+        Self::from_text_simd(text, threads, mode, sched, vmode, crate::util::env::simd())
+    }
+
+    /// Full control: thread budget + fusion mode + scheduler toggle +
+    /// verifier mode + SIMD toggle, independent of every env knob (the
+    /// E12 `sched_off`/`simd_off` legs, the scheduler stress tests, and
+    /// `plan_lint`'s sweep).
+    ///
+    /// When `vmode` is not [`verify::VerifyMode::Off`], the compiled
+    /// plan (and its step graphs, when the scheduler is on) run through
+    /// the three-pass static checker in [`verify`]; a verdict with
+    /// errors — or, under `Strict`, warnings — fails compilation with
+    /// the full finding report.
+    ///
+    /// `simd` picks the lane width every fused kernel is compiled with
+    /// (8-wide chunked loops + the packed cache-blocked dot when on,
+    /// scalar loops + the unpacked dot when off); results must agree to
+    /// bitwise on non-reassociating ops and 1e-6 on dot/reduce folds.
+    pub fn from_text_simd(
+        text: &str,
+        threads: usize,
+        mode: plan::FuseMode,
+        sched: bool,
+        vmode: verify::VerifyMode,
+        simd: bool,
+    ) -> Result<InterpExecutable> {
         let module = parser::parse_module(text)?;
-        let plan = plan::compile(&module, mode)?;
+        let plan = plan::compile_cfg(&module, plan::Config::new(mode, simd))?;
         let sched = sched.then(|| sched::SchedPlan::build(&plan));
         let verify = if vmode.enabled() {
             let verdict = verify::verify(&module, &plan, sched.as_ref());
@@ -200,6 +226,7 @@ impl InterpExecutable {
             module,
             plan,
             threads: threads.max(1),
+            simd,
             pool: OnceCell::new(),
             sched,
             verify,
@@ -219,9 +246,10 @@ impl InterpExecutable {
                 // threads - 1 workers + the helping dispatcher = threads
                 // concurrent runners; nested fan-outs only enqueue.
                 pool: Some(self.pool.get_or_init(|| ThreadPool::new(self.threads - 1))),
+                simd: self.simd,
             }
         } else {
-            Par::serial()
+            Par { threads: 1, pool: None, simd: self.simd }
         }
     }
 
@@ -369,9 +397,11 @@ mod tests {
     use crate::runtime::{lit_f32, lit_i32};
 
     /// Run `text` through every engine configuration — compiled plan at
-    /// every fusion level, 1/2/8 threads, scheduler on and off, plus the
-    /// tree-walking reference — asserting all outputs are bitwise
-    /// identical, then return the fully-fused single-thread outputs.
+    /// every fusion level, 1/2/8 threads, scheduler on and off, SIMD on
+    /// and off, plus the tree-walking reference — asserting all outputs
+    /// are bitwise identical, then return the fully-fused single-thread
+    /// outputs. (These small modules exercise no reassociating fold, so
+    /// the SIMD legs are held to the same bitwise bar.)
     fn run_all(text: &str, inputs: &[&Literal]) -> Vec<Literal> {
         use super::plan::FuseMode;
         let reference = InterpExecutable::from_text_threads(text, 1)
@@ -379,17 +409,28 @@ mod tests {
             .run_treewalk(inputs)
             .unwrap();
         let mut fused1 = None;
-        for (threads, mode, sched) in [
-            (1usize, FuseMode::Full, true),
-            (2, FuseMode::Full, true),
-            (8, FuseMode::Full, true),
-            (8, FuseMode::Full, false),
-            (1, FuseMode::Chains, true),
-            (8, FuseMode::Chains, true),
-            (1, FuseMode::Off, true),
-            (8, FuseMode::Off, false),
+        for (threads, mode, sched, simd) in [
+            (1usize, FuseMode::Full, true, true),
+            (2, FuseMode::Full, true, true),
+            (8, FuseMode::Full, true, true),
+            (8, FuseMode::Full, false, true),
+            (1, FuseMode::Full, true, false),
+            (8, FuseMode::Full, true, false),
+            (1, FuseMode::Chains, true, true),
+            (8, FuseMode::Chains, true, true),
+            (8, FuseMode::Chains, true, false),
+            (1, FuseMode::Off, true, true),
+            (8, FuseMode::Off, false, true),
         ] {
-            let exe = InterpExecutable::from_text_sched(text, threads, mode, sched).unwrap();
+            let exe = InterpExecutable::from_text_simd(
+                text,
+                threads,
+                mode,
+                sched,
+                crate::util::env::verify_mode(),
+                simd,
+            )
+            .unwrap();
             let got = exe.run(inputs).unwrap();
             assert_eq!(got.len(), reference.len(), "t={threads} mode={mode:?}");
             for (g, w) in got.iter().zip(&reference) {
@@ -397,17 +438,17 @@ mod tests {
                     assert_eq!(
                         gf,
                         w.to_vec::<f32>().unwrap(),
-                        "plan (t={threads}, mode={mode:?}) diverged from tree-walk"
+                        "plan (t={threads}, mode={mode:?}, simd={simd}) diverged from tree-walk"
                     );
                 } else {
                     assert_eq!(
                         g.to_vec::<i32>().unwrap(),
                         w.to_vec::<i32>().unwrap(),
-                        "plan (t={threads}, mode={mode:?}) diverged from tree-walk"
+                        "plan (t={threads}, mode={mode:?}, simd={simd}) diverged from tree-walk"
                     );
                 }
             }
-            if threads == 1 && mode == FuseMode::Full {
+            if threads == 1 && mode == FuseMode::Full && simd {
                 fused1 = Some(got);
             }
         }

@@ -15,11 +15,17 @@
 //! * **Consumer-side fusion** ([`FuseMode::Full`]) — the chain around a
 //!   heavy op folds *into* that op's loop: a trailing-dims `reduce`
 //!   whose single-use input is a fusable chain evaluates the chain per
-//!   block inside the fold ([`Kind::FusedReduce`]); a single-use rank-2
-//!   `dot` or row-take `gather` feeding a chain streams its output rows
+//!   block inside the fold ([`Kind::FusedReduce`]), and a single-use
+//!   reduce feeding an elementwise chain runs that chain as a fold
+//!   *epilogue* (the loss `divide`); single-use rank-2 `dot`s or a
+//!   row-take `gather` feeding a chain stream their output rows
 //!   through the chain while hot ([`Kind::FusedDot`],
-//!   [`Kind::FusedGather`]). The producing/consumed intermediate is
-//!   never materialized.
+//!   [`Kind::FusedGather`]) — one chain can absorb *several* dot
+//!   producers, each a separate hot input. A dot side fed by a
+//!   single-use rank-2 `transpose` or s32/pred→f32 `convert` absorbs
+//!   that prologue into the packed-dot kernel (the contracting index
+//!   flips / the cast happens while packing). The producing/consumed
+//!   intermediate is never materialized.
 //! * **Exact liveness** — non-fused values live in a slot arena
 //!   (`n_slots` ≤ instruction count); each step's operand list carries a
 //!   precomputed *move* flag set at the slot's last read. A moved value
@@ -42,7 +48,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::eval;
 use super::sched;
-use super::fusion::{self, EInstr, FusedKernel};
+use super::fusion::{self, EInstr, FusedKernel, BLOCK, LANES};
 use super::kernels::{self, Combiner, Par};
 use super::parser::{BinOp, Computation, GatherDims, Module, Op, Shape};
 use super::value::{Tensor, Ty, Value};
@@ -59,6 +65,35 @@ pub enum FuseMode {
     Full,
 }
 
+/// Full compile-time configuration. `fuse` picks the fusion level;
+/// `simd` picks the lane width every emitted kernel carries (8-wide
+/// chunked loops and the packed dot when on, scalar loops and the
+/// unpacked dot when off — the `POLYGLOT_INTERP_SIMD` knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Config {
+    pub fuse: FuseMode,
+    pub simd: bool,
+}
+
+impl Config {
+    pub fn new(fuse: FuseMode, simd: bool) -> Config {
+        Config { fuse, simd }
+    }
+}
+
+/// One streamed dot producer of a [`Kind::FusedDot`] step: which kernel
+/// input it feeds (`hot`), the contracting dims after any absorbed
+/// transpose flipped them, and whether an absorbed `convert` means the
+/// lhs/rhs operand is cast to f32 while packing (`cva`/`cvb`).
+#[derive(Clone, Copy, Debug)]
+pub struct DotProd {
+    pub hot: u16,
+    pub lc: usize,
+    pub rc: usize,
+    pub cva: bool,
+    pub cvb: bool,
+}
+
 /// What a scheduled step executes.
 pub enum Kind {
     /// The single instruction at `Step::instr`.
@@ -68,11 +103,23 @@ pub enum Kind {
     /// A trailing-dims reduce folding its fused input chain per block —
     /// the chain's output is never materialized. `outer`/`inner` are the
     /// fold geometry of the virtual input; `ty`/`bin` the validated
-    /// element type and combiner.
-    FusedReduce { kernel: FusedKernel, ty: Ty, bin: BinOp, outer: usize, inner: usize },
-    /// An elementwise chain whose `hot` kernel input is produced by a
-    /// rank-2 dot, streamed per output-row block.
-    FusedDot { kernel: FusedKernel, hot: u16, lc: usize, rc: usize },
+    /// element type and combiner. `ri` is the folded reduce instruction;
+    /// with an `epi`logue chain the step anchors at that chain's root
+    /// (`Step::instr`) and streams the folded value through the
+    /// epilogue kernel as its hot input `epi.1`.
+    FusedReduce {
+        kernel: FusedKernel,
+        ty: Ty,
+        bin: BinOp,
+        outer: usize,
+        inner: usize,
+        ri: usize,
+        epi: Option<(FusedKernel, u16)>,
+    },
+    /// An elementwise chain whose hot kernel inputs are produced by
+    /// rank-2 dots, streamed per output-row block of `block` rows (the
+    /// cache-blocked panel geometry).
+    FusedDot { kernel: FusedKernel, prods: Vec<DotProd>, block: usize },
     /// An elementwise chain whose `hot` kernel input is produced by a
     /// row-take gather, streamed per gathered-row block.
     FusedGather { kernel: FusedKernel, hot: u16 },
@@ -225,14 +272,21 @@ fn label_of(op: &Op) -> OpLabel {
 
 // ----------------------------------------------------------------- compile
 
-/// Lower a parsed module at the given fusion level. [`FuseMode::Off`]
-/// keeps one step per instruction (the planned-but-unfused configuration
-/// the equivalence tests and E12 compare against).
+/// Lower a parsed module at the given fusion level with SIMD lanes on
+/// (the historical signature; tests and callers that don't care about
+/// the lane knob keep using it). [`FuseMode::Off`] keeps one step per
+/// instruction (the planned-but-unfused configuration the equivalence
+/// tests and E12 compare against).
 pub fn compile(m: &Module, mode: FuseMode) -> Result<Plan> {
+    compile_cfg(m, Config { fuse: mode, simd: true })
+}
+
+/// Lower a parsed module under a full [`Config`].
+pub fn compile_cfg(m: &Module, cfg: Config) -> Result<Plan> {
     let comps = m
         .comps
         .iter()
-        .map(|c| compile_comp(m, c, mode).with_context(|| format!("planning {:?}", c.name)))
+        .map(|c| compile_comp(m, c, cfg).with_context(|| format!("planning {:?}", c.name)))
         .collect::<Result<Vec<_>>>()?;
     Ok(Plan { comps, entry: m.entry })
 }
@@ -246,6 +300,132 @@ fn fold_supported(ty: Ty, b: BinOp) -> bool {
             | (Ty::S32, BinOp::Add | BinOp::Max | BinOp::Min)
             | (Ty::Pred, BinOp::And | BinOp::Or)
     )
+}
+
+/// Does reduce instruction `r` qualify for the blocked fold fast path:
+/// trailing-dims reduction, supported dtype/combiner, scalar init of the
+/// fold dtype? Returns `(fold dtype, combiner, outer, inner)`.
+fn reduce_fold_info(m: &Module, comp: &Computation, r: usize) -> Option<(Ty, BinOp, usize, usize)> {
+    let Op::Reduce { dims: rdims, to_apply } = &comp.instrs[r].op else { return None };
+    let &[x, init] = comp.instrs[r].operands.as_slice() else { return None };
+    if x == init {
+        return None;
+    }
+    let Shape::Arr(xty, xdims) = &comp.instrs[x].shape else { return None };
+    let nr = rdims.len();
+    if nr == 0 || nr > xdims.len() {
+        return None;
+    }
+    let split = xdims.len() - nr;
+    let mut sorted = rdims.clone();
+    sorted.sort_unstable();
+    if !sorted.iter().copied().eq(split..xdims.len()) {
+        return None;
+    }
+    let Combiner::Bin(b) = kernels::classify_combiner(m, *to_apply) else {
+        return None;
+    };
+    if !fold_supported(*xty, b) {
+        return None;
+    }
+    let Shape::Arr(ity, idims) = &comp.instrs[init].shape else { return None };
+    if ity != xty || idims.iter().product::<usize>() != 1 {
+        return None;
+    }
+    Some((*xty, b, xdims[..split].iter().product(), xdims[split..].iter().product()))
+}
+
+/// What a dot side looks like after absorbing its single-use
+/// `transpose`/`convert` prologue: the effective operand instruction,
+/// the contracting index for that side (flipped once per absorbed
+/// transpose), whether the operand is cast to f32 while packing, and
+/// the prologue instructions to inline on commit.
+struct DotSide {
+    src: usize,
+    c: usize,
+    cv: bool,
+    taken: Vec<usize>,
+}
+
+/// One dot's absorption analysis (both sides). Present iff the dot is
+/// the rank-2 f32 contraction the fused/packed kernel handles, with
+/// `taken` prologue nodes to inline if (and only if) the dot actually
+/// lowers to a [`Kind::FusedDot`] step.
+struct DotAbsorb {
+    a: DotSide,
+    b: DotSide,
+}
+
+impl DotAbsorb {
+    fn taken(&self) -> impl Iterator<Item = usize> + '_ {
+        self.a.taken.iter().chain(self.b.taken.iter()).copied()
+    }
+}
+
+/// Walk one dot operand inward through absorbable single-use prologue
+/// ops. Each rank-2 `[1,0]` transpose flips the side's contracting
+/// index; at most one s32/pred→f32 `convert` marks the side as
+/// cast-while-packing. Stops at multi-use, root, already-inlined
+/// sources, or any other op.
+fn absorb_dot_side(comp: &Computation, inlined: &[bool], mut o: usize, mut c: usize) -> DotSide {
+    let mut cv = false;
+    let mut taken = Vec::new();
+    loop {
+        if comp.uses[o] != 1 || o == comp.root || inlined[o] {
+            break;
+        }
+        let ins = &comp.instrs[o];
+        let src = match &ins.op {
+            Op::Transpose { perm } if perm.as_slice() == [1, 0] => {
+                let src = ins.operands[0];
+                let Shape::Arr(_, sd) = &comp.instrs[src].shape else { break };
+                if sd.len() != 2 || inlined[src] {
+                    break;
+                }
+                c = 1 - c;
+                src
+            }
+            Op::Convert if !cv => {
+                let Shape::Arr(oty, od) = &ins.shape else { break };
+                if *oty != Ty::F32 {
+                    break;
+                }
+                let src = ins.operands[0];
+                let Shape::Arr(sty, sd) = &comp.instrs[src].shape else { break };
+                if sd != od || !matches!(sty, Ty::S32 | Ty::Pred) || inlined[src] {
+                    break;
+                }
+                cv = true;
+                src
+            }
+            _ => break,
+        };
+        taken.push(o);
+        o = src;
+    }
+    DotSide { src: o, c, cv, taken }
+}
+
+/// Absorption analysis for dot `d` (see [`DotAbsorb`]): `Some` when the
+/// dot — with any prologue folded — is a rank-2 contraction the packed
+/// kernel executes; `None` keeps it a plain `Single` step.
+fn absorb_dot(comp: &Computation, inlined: &[bool], d: usize) -> Option<DotAbsorb> {
+    let ins = &comp.instrs[d];
+    let Op::Dot { lc, rc } = &ins.op else { return None };
+    let Shape::Arr(Ty::F32, od) = &ins.shape else { return None };
+    if od.len() != 2 || ins.operands.len() != 2 || *lc >= 2 || *rc >= 2 {
+        return None;
+    }
+    let a = absorb_dot_side(comp, inlined, ins.operands[0], *lc);
+    let b = absorb_dot_side(comp, inlined, ins.operands[1], *rc);
+    let side_ok = |s: &DotSide| match &comp.instrs[s.src].shape {
+        Shape::Arr(ty, d) => d.len() == 2 && (*ty == Ty::F32 || s.cv),
+        Shape::Tuple(_) => false,
+    };
+    if !side_ok(&a) || !side_ok(&b) {
+        return None;
+    }
+    Some(DotAbsorb { a, b })
 }
 
 /// Is instruction `p` the row-take gather the fast path (and thus the
@@ -270,10 +450,12 @@ fn gather_row_take(comp: &Computation, p: usize, g: &GatherDims) -> bool {
             || (id.len() == 2 && id[0] == out[0] && id[1] == 1))
 }
 
-fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPlan> {
+fn compile_comp(m: &Module, comp: &Computation, cfg: Config) -> Result<CompPlan> {
     let n = comp.instrs.len();
-    let fuse = mode != FuseMode::Off;
-    let full = mode == FuseMode::Full;
+    let fuse = cfg.fuse != FuseMode::Off;
+    let full = cfg.fuse == FuseMode::Full;
+    // Lane width baked into every emitted kernel (the SIMD knob).
+    let lanes: u8 = if cfg.simd { LANES as u8 } else { 1 };
 
     // 1. Decide the inline set: a value folds into its consumer when it
     //    is elementwise-fusable (or a fusable broadcast leaf), has
@@ -281,10 +463,19 @@ fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPl
     //    share an index space. Multi-use values, reshapes — any
     //    non-elementwise consumer — are chain boundaries.
     let mut inlined = vec![false; n];
-    // Chain root -> the dot/gather producer folded into its kernel.
-    let mut producer_of_root = vec![usize::MAX; n];
+    // Chain root -> the dot producers folded into its kernel.
+    let mut dots_of_root: Vec<Vec<usize>> = vec![Vec::new(); n];
+    // Chain root -> the gather producer folded into its kernel.
+    let mut gather_of_root = vec![usize::MAX; n];
+    // Chain root -> the reduce whose fold feeds the chain (epilogue).
+    let mut reduce_epi = vec![usize::MAX; n];
     // Reduce steps whose input chain evaluates inside the fold loop.
     let mut reduce_prologue = vec![false; n];
+    // Per-dot absorption analysis (committed only for FusedDot lowerings).
+    let mut dot_absorb: Vec<Option<DotAbsorb>> = (0..n).map(|_| None).collect();
+    // Dots that lower to a standalone FusedDot (identity epilogue) just
+    // to pick up their absorbed transpose/convert prologue.
+    let mut standalone_dot = vec![false; n];
     if fuse {
         let fusable: Vec<bool> = (0..n).map(|i| fusion::fusable_node(comp, i)).collect();
         let leaf_ok = |i: usize| {
@@ -318,35 +509,11 @@ fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPl
         //     input — the chain becomes the fold loop's prologue.
         if full {
             for r in 0..n {
-                let Op::Reduce { dims: rdims, to_apply } = &comp.instrs[r].op else {
-                    continue;
-                };
-                let &[x, init] = comp.instrs[r].operands.as_slice() else { continue };
-                if x == init || comp.uses[x] != 1 || x == comp.root || inlined[x] {
+                if reduce_fold_info(m, comp, r).is_none() {
                     continue;
                 }
-                if !leaf_ok(x) {
-                    continue;
-                }
-                let Shape::Arr(xty, xdims) = &comp.instrs[x].shape else { continue };
-                let nr = rdims.len();
-                if nr == 0 || nr > xdims.len() {
-                    continue;
-                }
-                let split = xdims.len() - nr;
-                let mut sorted = rdims.clone();
-                sorted.sort_unstable();
-                if !sorted.iter().copied().eq(split..xdims.len()) {
-                    continue;
-                }
-                let Combiner::Bin(b) = kernels::classify_combiner(m, *to_apply) else {
-                    continue;
-                };
-                if !fold_supported(*xty, b) {
-                    continue;
-                }
-                let Shape::Arr(ity, idims) = &comp.instrs[init].shape else { continue };
-                if ity != xty || idims.iter().product::<usize>() != 1 {
+                let x = comp.instrs[r].operands[0];
+                if comp.uses[x] != 1 || x == comp.root || inlined[x] || !leaf_ok(x) {
                     continue;
                 }
                 inlined[x] = true;
@@ -354,11 +521,53 @@ fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPl
             }
         }
 
-        // 1c. Producer folding: a single-use rank-2 f32 dot or row-take
-        //     gather whose consumer chain ends at an elementwise root
-        //     (not a reduce prologue) becomes that kernel's hot input.
-        //     One producer per chain root.
+        // 1c. Reduce epilogues: a single-use fold-qualifying reduce
+        //     feeding an elementwise chain of its own output shape (the
+        //     loss `divide`) folds into the consumer step — the fold
+        //     runs first, then the chain streams over the folded value.
+        //     One reduce per chain root.
         if full {
+            for r in 0..n {
+                if reduce_fold_info(m, comp, r).is_none() {
+                    continue;
+                }
+                if comp.uses[r] != 1 || r == comp.root {
+                    continue;
+                }
+                let c = comp.consumer[r];
+                if c == usize::MAX || !fusable[c] {
+                    continue;
+                }
+                let (Shape::Arr(_, rd), Shape::Arr(_, cd)) =
+                    (&comp.instrs[r].shape, &comp.instrs[c].shape)
+                else {
+                    continue;
+                };
+                if rd != cd {
+                    continue;
+                }
+                let mut root = c;
+                while inlined[root] {
+                    root = comp.consumer[root];
+                }
+                if !fusable[root] || reduce_epi[root] != usize::MAX {
+                    continue;
+                }
+                inlined[r] = true;
+                reduce_epi[root] = r;
+            }
+        }
+
+        // 1d. Producer folding: single-use rank-2 f32 dots (any number)
+        //     or one row-take gather whose consumer chain ends at an
+        //     elementwise root become that kernel's hot inputs. Dot
+        //     sides absorb their transpose/convert prologues
+        //     ([`absorb_dot`]); a dot with an absorbable prologue that
+        //     no chain claims still lowers to a standalone packed step.
+        if full {
+            for d in 0..n {
+                dot_absorb[d] = absorb_dot(comp, &inlined, d);
+            }
             for p in 0..n {
                 if inlined[p] || comp.uses[p] != 1 || p == comp.root {
                     continue;
@@ -375,15 +584,9 @@ fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPl
                 if pdims != cdims || *pty != Ty::F32 || pdims.len() != 2 {
                     continue;
                 }
+                let is_dot = matches!(&comp.instrs[p].op, Op::Dot { .. });
                 let eligible = match &comp.instrs[p].op {
-                    Op::Dot { .. } => {
-                        let ops = &comp.instrs[p].operands;
-                        ops.len() == 2
-                            && ops.iter().all(|&o| {
-                                matches!(&comp.instrs[o].shape,
-                                         Shape::Arr(Ty::F32, d) if d.len() == 2)
-                            })
-                    }
+                    Op::Dot { .. } => dot_absorb[p].is_some(),
                     Op::Gather(g) => gather_row_take(comp, p, g),
                     _ => false,
                 };
@@ -394,11 +597,46 @@ fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPl
                 while inlined[root] {
                     root = comp.consumer[root];
                 }
-                if !fusable[root] || producer_of_root[root] != usize::MAX {
+                if !fusable[root] || reduce_epi[root] != usize::MAX {
                     continue;
                 }
-                inlined[p] = true;
-                producer_of_root[root] = p;
+                if is_dot {
+                    dots_of_root[root].push(p);
+                } else if gather_of_root[root] == usize::MAX && dots_of_root[root].is_empty() {
+                    gather_of_root[root] = p;
+                }
+            }
+            // Commit: dots win over a gather at the same root (the
+            // FusedGather kind streams exactly one hot input).
+            for root in 0..n {
+                if !dots_of_root[root].is_empty() {
+                    gather_of_root[root] = usize::MAX;
+                    for &p in &dots_of_root[root] {
+                        inlined[p] = true;
+                        for t in dot_absorb[p].as_ref().map(|a| a.taken().collect::<Vec<_>>()).unwrap_or_default() {
+                            inlined[t] = true;
+                        }
+                    }
+                } else if gather_of_root[root] != usize::MAX {
+                    inlined[gather_of_root[root]] = true;
+                }
+            }
+            // Standalone absorbed dots: not folded into any chain, but
+            // a prologue was absorbable — lower as FusedDot with an
+            // identity epilogue so the packed kernel eats the
+            // transpose/convert.
+            for d in 0..n {
+                if inlined[d] {
+                    continue;
+                }
+                let Some(ab) = &dot_absorb[d] else { continue };
+                if ab.a.taken.is_empty() && ab.b.taken.is_empty() {
+                    continue;
+                }
+                standalone_dot[d] = true;
+                for t in ab.taken().collect::<Vec<_>>() {
+                    inlined[t] = true;
+                }
             }
         }
     }
@@ -414,6 +652,31 @@ fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPl
     }
 
     // 3. Emit the schedule.
+    // A reduce fold's prologue kernel: the inlined input chain when one
+    // exists, the identity load otherwise (epilogue-only folds).
+    let fold_prologue = |r: usize| -> Result<(FusedKernel, Vec<usize>, Ty, BinOp, usize, usize)> {
+        let rins = &comp.instrs[r];
+        let x = rins.operands[0];
+        let Some((xty, bin, outer, inner)) = reduce_fold_info(m, comp, r) else {
+            bail!("planned fused reduce on unqualified {}", rins.name);
+        };
+        let (kernel, ext) = if inlined[x] {
+            fusion::compile(comp, x, &inlined, &[], lanes)
+                .with_context(|| format!("fusing reduce prologue of {}", rins.name))?
+        } else {
+            let k = FusedKernel {
+                prog: vec![EInstr::Load(0)],
+                n_inputs: 1,
+                out_ty: xty,
+                inner: 0,
+                lanes,
+                ops: Vec::new(),
+            };
+            (k, vec![x])
+        };
+        Ok((kernel, ext, xty, bin, outer, inner))
+    };
+    let dot_block = |od: &[usize]| (BLOCK / od.get(1).copied().unwrap_or(1).max(1)).max(1);
     let mut steps: Vec<Step> = Vec::with_capacity(n_slots);
     for i in 0..n {
         if inlined[i] {
@@ -422,34 +685,106 @@ fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPl
         let ins = &comp.instrs[i];
         let has_inlined = ins.operands.iter().any(|&o| inlined[o]);
         let (kind, args, label) = if reduce_prologue[i] {
-            let Op::Reduce { dims: rdims, to_apply } = &ins.op else {
-                bail!("planned reduce prologue on non-reduce {}", ins.name);
-            };
-            let x = ins.operands[0];
+            // The reduce itself survived (no epilogue claimed it): the
+            // step anchors at the reduce and folds its inlined chain.
             let init = ins.operands[1];
-            let (kernel, ext) = fusion::compile(comp, x, &inlined, None)
-                .with_context(|| format!("fusing reduce prologue of {}", ins.name))?;
-            let (xty, xdims) = comp.instrs[x].shape.arr()?;
-            let split = xdims.len() - rdims.len();
-            let outer: usize = xdims[..split].iter().product();
-            let inner: usize = xdims[split..].iter().product();
-            let Combiner::Bin(bin) = kernels::classify_combiner(m, *to_apply) else {
-                bail!("planned reduce prologue with non-binary combiner");
-            };
+            let (kernel, ext, xty, bin, outer, inner) = fold_prologue(i)?;
             let mut args: Vec<(usize, bool)> =
                 ext.iter().map(|&o| (slot_of[o], false)).collect();
             args.push((slot_of[init], false));
             (
-                Kind::FusedReduce { kernel, ty: xty, bin, outer, inner },
+                Kind::FusedReduce { kernel, ty: xty, bin, outer, inner, ri: i, epi: None },
                 args,
                 OpLabel::FusedReduce,
             )
+        } else if standalone_dot[i] {
+            // A dot that only absorbed its transpose/convert prologue:
+            // packed kernel with the identity epilogue.
+            let ab = dot_absorb[i].as_ref().expect("standalone dot lost its analysis");
+            let kernel = FusedKernel {
+                prog: vec![EInstr::Load(0)],
+                n_inputs: 1,
+                out_ty: Ty::F32,
+                inner: 0,
+                lanes,
+                ops: Vec::new(),
+            };
+            let prods = vec![DotProd { hot: 0, lc: ab.a.c, rc: ab.b.c, cva: ab.a.cv, cvb: ab.b.cv }];
+            let args = vec![(slot_of[ab.a.src], false), (slot_of[ab.b.src], false)];
+            let (_, od) = ins.shape.arr()?;
+            (Kind::FusedDot { kernel, prods, block: dot_block(od) }, args, OpLabel::FusedDot)
         } else if has_inlined {
-            let p = producer_of_root[i];
-            let hot_node = if p == usize::MAX { None } else { Some(p) };
-            let (kernel, ext) = fusion::compile(comp, i, &inlined, hot_node)
-                .with_context(|| format!("fusing chain rooted at {}", ins.name))?;
-            if let Some(p) = hot_node {
+            if reduce_epi[i] != usize::MAX {
+                // Chain root fed by a folded reduce: prologue kernel +
+                // epilogue kernel with the folded value hot.
+                let r = reduce_epi[i];
+                let init = comp.instrs[r].operands[1];
+                let (kernel, ext, xty, bin, outer, inner) = fold_prologue(r)?;
+                let (ek, eext) = fusion::compile(comp, i, &inlined, &[r], lanes)
+                    .with_context(|| format!("fusing reduce epilogue rooted at {}", ins.name))?;
+                let eh = eext
+                    .iter()
+                    .position(|&o| o == r)
+                    .context("reduce missing from epilogue kernel inputs")?
+                    as u16;
+                let mut args: Vec<(usize, bool)> =
+                    ext.iter().map(|&o| (slot_of[o], false)).collect();
+                args.push((slot_of[init], false));
+                args.extend(eext.iter().filter(|&&o| o != r).map(|&o| (slot_of[o], false)));
+                (
+                    Kind::FusedReduce {
+                        kernel,
+                        ty: xty,
+                        bin,
+                        outer,
+                        inner,
+                        ri: r,
+                        epi: Some((ek, eh)),
+                    },
+                    args,
+                    OpLabel::FusedReduce,
+                )
+            } else if !dots_of_root[i].is_empty() {
+                let dots = &dots_of_root[i];
+                let (kernel, ext) = fusion::compile(comp, i, &inlined, dots, lanes)
+                    .with_context(|| format!("fusing chain rooted at {}", ins.name))?;
+                let mut prods: Vec<(DotProd, usize)> = Vec::with_capacity(dots.len());
+                for &p in dots {
+                    let hot = ext
+                        .iter()
+                        .position(|&o| o == p)
+                        .context("producer missing from fused kernel inputs")?
+                        as u16;
+                    let ab = dot_absorb[p].as_ref().expect("folded dot lost its analysis");
+                    prods.push((
+                        DotProd { hot, lc: ab.a.c, rc: ab.b.c, cva: ab.a.cv, cvb: ab.b.cv },
+                        p,
+                    ));
+                }
+                // The executor and verifier index hot blocks by
+                // ascending kernel-input position.
+                prods.sort_by_key(|(d, _)| d.hot);
+                let mut args: Vec<(usize, bool)> = ext
+                    .iter()
+                    .filter(|&&o| !dots.contains(&o))
+                    .map(|&o| (slot_of[o], false))
+                    .collect();
+                for (_, p) in &prods {
+                    let ab = dot_absorb[*p].as_ref().expect("folded dot lost its analysis");
+                    args.push((slot_of[ab.a.src], false));
+                    args.push((slot_of[ab.b.src], false));
+                }
+                let prods: Vec<DotProd> = prods.into_iter().map(|(d, _)| d).collect();
+                let (_, od) = ins.shape.arr()?;
+                (
+                    Kind::FusedDot { kernel, prods, block: dot_block(od) },
+                    args,
+                    OpLabel::FusedDot,
+                )
+            } else if gather_of_root[i] != usize::MAX {
+                let p = gather_of_root[i];
+                let (kernel, ext) = fusion::compile(comp, i, &inlined, &[p], lanes)
+                    .with_context(|| format!("fusing chain rooted at {}", ins.name))?;
                 let hot = ext
                     .iter()
                     .position(|&o| o == p)
@@ -460,20 +795,13 @@ fn compile_comp(m: &Module, comp: &Computation, mode: FuseMode) -> Result<CompPl
                     .filter(|&&o| o != p)
                     .map(|&o| (slot_of[o], false))
                     .collect();
-                let pins = &comp.instrs[p];
-                for &o in &pins.operands {
+                for &o in &comp.instrs[p].operands {
                     args.push((slot_of[o], false));
                 }
-                let (kind, label) = match &pins.op {
-                    Op::Dot { lc, rc } => (
-                        Kind::FusedDot { kernel, hot, lc: *lc, rc: *rc },
-                        OpLabel::FusedDot,
-                    ),
-                    Op::Gather(_) => (Kind::FusedGather { kernel, hot }, OpLabel::FusedGather),
-                    other => bail!("unsupported fused producer {other:?}"),
-                };
-                (kind, args, label)
+                (Kind::FusedGather { kernel, hot }, args, OpLabel::FusedGather)
             } else {
+                let (kernel, ext) = fusion::compile(comp, i, &inlined, &[], lanes)
+                    .with_context(|| format!("fusing chain rooted at {}", ins.name))?;
                 let args: Vec<(usize, bool)> =
                     ext.iter().map(|&o| (slot_of[o], false)).collect();
                 (Kind::Fused(kernel), args, OpLabel::Fused)
@@ -699,30 +1027,70 @@ impl Exec<'_> {
                     vals.iter().map(|v| v.arr()).collect::<Result<_>>()?;
                 Ok(Value::Arr(fusion::run_fused(kernel, &inputs, out_dims)?))
             }
-            Kind::FusedReduce { kernel, ty, bin, outer, inner } => {
+            Kind::FusedReduce { kernel, ty, bin, outer, inner, ri: _, epi } => {
                 let (_, out_dims) = ins.shape.arr()?;
                 let n_ext = kernel.n_inputs;
-                if vals.len() != n_ext + 1 {
-                    bail!("fused reduce: {} operands for {} inputs + init", vals.len(), n_ext);
+                let epi_ext = epi.as_ref().map_or(0, |(ek, _)| ek.n_inputs - 1);
+                if vals.len() != n_ext + 1 + epi_ext {
+                    bail!(
+                        "fused reduce: {} operands for {} inputs + init + {} epilogue inputs",
+                        vals.len(),
+                        n_ext,
+                        epi_ext
+                    );
                 }
-                let init = vals.last().ok_or_else(|| anyhow!("fused reduce init"))?.arr()?;
+                let init = vals[n_ext].arr()?;
                 let inputs: Vec<Option<&Tensor>> =
                     vals[..n_ext].iter().map(|v| v.arr().map(Some)).collect::<Result<_>>()?;
-                let ctx = fusion::FusedCtx::new(kernel, inputs, outer * inner, None)?;
-                Ok(Value::Arr(kernels::reduce_fused(
+                let ctx = fusion::FusedCtx::new(kernel, inputs, outer * inner, &[])?;
+                // With an epilogue the chain's dims equal the reduce's
+                // output dims (elementwise), so out_dims serves both the
+                // fold and the chain pass.
+                let folded = kernels::reduce_fused(
                     &ctx, *ty, *bin, *outer, *inner, init, out_dims, self.par,
-                )?))
-            }
-            Kind::FusedDot { kernel, hot, lc, rc } => {
-                let (_, out_dims) = ins.shape.arr()?;
-                let n_other = kernel.n_inputs - 1;
-                if vals.len() != n_other + 2 {
-                    bail!("fused dot: {} operands for {} inputs", vals.len(), n_other + 2);
+                )?;
+                let Some((ek, eh)) = epi else { return Ok(Value::Arr(folded)) };
+                let mut einputs: Vec<&Tensor> = Vec::with_capacity(ek.n_inputs);
+                let mut it = vals[n_ext + 1..].iter();
+                for k in 0..ek.n_inputs {
+                    if k == *eh as usize {
+                        einputs.push(&folded);
+                    } else {
+                        let v =
+                            it.next().ok_or_else(|| anyhow!("fused reduce: missing epilogue input"))?;
+                        einputs.push(v.arr()?);
+                    }
                 }
-                let a = vals[n_other].arr()?;
-                let b = vals[n_other + 1].arr()?;
-                let ctx = hot_ctx(kernel, &vals[..n_other], *hot, out_dims)?;
-                Ok(Value::Arr(kernels::dot_fused(a, b, *lc, *rc, &ctx, out_dims, self.par)?))
+                Ok(Value::Arr(fusion::run_fused(ek, &einputs, out_dims)?))
+            }
+            Kind::FusedDot { kernel, prods, block } => {
+                let (_, out_dims) = ins.shape.arr()?;
+                let n_other = kernel.n_inputs - prods.len();
+                if vals.len() != n_other + 2 * prods.len() {
+                    bail!(
+                        "fused dot: {} operands for {} epilogue inputs + {} dot operand pairs",
+                        vals.len(),
+                        n_other,
+                        prods.len()
+                    );
+                }
+                let hots: Vec<u16> = prods.iter().map(|p| p.hot).collect();
+                let ctx = hot_ctx(kernel, &vals[..n_other], &hots, out_dims)?;
+                let dot_args: Vec<kernels::DotArg> = prods
+                    .iter()
+                    .enumerate()
+                    .map(|(j, p)| {
+                        Ok(kernels::DotArg {
+                            a: vals[n_other + 2 * j].arr()?,
+                            b: vals[n_other + 2 * j + 1].arr()?,
+                            lc: p.lc,
+                            rc: p.rc,
+                            cva: p.cva,
+                            cvb: p.cvb,
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(Value::Arr(kernels::dot_fused(&dot_args, &ctx, *block, out_dims, self.par)?))
             }
             Kind::FusedGather { kernel, hot } => {
                 let (_, out_dims) = ins.shape.arr()?;
@@ -732,7 +1100,7 @@ impl Exec<'_> {
                 }
                 let operand = vals[n_other].arr()?;
                 let indices = vals[n_other + 1].arr()?;
-                let ctx = hot_ctx(kernel, &vals[..n_other], *hot, out_dims)?;
+                let ctx = hot_ctx(kernel, &vals[..n_other], &[*hot], out_dims)?;
                 Ok(Value::Arr(kernels::gather_rows_fused(
                     operand, indices, &ctx, out_dims, self.par,
                 )?))
@@ -765,13 +1133,13 @@ impl Exec<'_> {
 fn hot_ctx<'k, 't>(
     kernel: &'k FusedKernel,
     others: &'t [Value],
-    hot: u16,
+    hots: &[u16],
     out_dims: &[usize],
 ) -> Result<fusion::FusedCtx<'k, 't>> {
     let mut inputs: Vec<Option<&Tensor>> = Vec::with_capacity(kernel.n_inputs);
     let mut it = others.iter();
     for i in 0..kernel.n_inputs {
-        if i == hot as usize {
+        if hots.contains(&(i as u16)) {
             inputs.push(None);
         } else {
             let v = it.next().ok_or_else(|| anyhow!("fused producer: missing input"))?;
@@ -779,7 +1147,7 @@ fn hot_ctx<'k, 't>(
         }
     }
     let n: usize = out_dims.iter().product();
-    fusion::FusedCtx::new(kernel, inputs, n, Some(hot))
+    fusion::FusedCtx::new(kernel, inputs, n, hots)
 }
 
 #[cfg(test)]
@@ -1074,15 +1442,159 @@ ENTRY e.8 {
             .iter()
             .find(|s| matches!(s.kind, Kind::FusedDot { .. }))
             .expect("the forward hidden layer must fuse into one dot step");
-        let Kind::FusedDot { kernel, hot, lc, rc } = &step.kind else { unreachable!() };
+        let Kind::FusedDot { kernel, prods, block } = &step.kind else { unreachable!() };
         assert_eq!(kernel.ops, vec!["broadcast", "add", "tanh"]);
-        assert_eq!((*lc, *rc), (1, 0));
-        assert_eq!(*hot, 0, "the dot output is the first kernel input");
+        assert_eq!(prods.len(), 1, "one dot producer feeds the epilogue");
+        assert_eq!((prods[0].lc, prods[0].rc), (1, 0));
+        assert!(!prods[0].cva && !prods[0].cvb);
+        assert_eq!(prods[0].hot, 0, "the dot output is the first kernel input");
+        assert_eq!(*block, (BLOCK / 5).max(1), "row block sized to keep the hot panel in cache");
         assert_eq!(kernel.inner, 5, "bias tile period is the output width");
         // args: bias slot then the dot's two operand slots.
         assert_eq!(step.args.len(), 3);
         // 3 params + 1 fused-dot step; dot/broadcast/add got no slots.
         assert_eq!(cp.steps.len(), 4);
+        assert_plan_invariants(&p);
+    }
+
+    #[test]
+    fn reduce_epilogue_folds_the_loss_divide() {
+        // exp -> reduce-sum -> divide-by-batch: both the prologue chain
+        // and the scalar-splat epilogue fold into one FusedReduce step.
+        let text = "HloModule m
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY e.12 {
+  Arg_0.5 = f32[4,8]{1,0} parameter(0)
+  exponential.6 = f32[4,8]{1,0} exponential(Arg_0.5)
+  constant.7 = f32[] constant(0)
+  reduce.8 = f32[4]{0} reduce(exponential.6, constant.7), dimensions={1}, to_apply=region_0.1
+  constant.9 = f32[] constant(8)
+  broadcast.10 = f32[4]{0} broadcast(constant.9), dimensions={}
+  ROOT divide.11 = f32[4]{0} divide(reduce.8, broadcast.10)
+}
+";
+        let m = parse_module(text).unwrap();
+        let p = compile(&m, FuseMode::Full).unwrap();
+        let cp = &p.comps[p.entry];
+        let step = cp
+            .steps
+            .iter()
+            .find(|s| matches!(s.kind, Kind::FusedReduce { .. }))
+            .expect("the mean must fuse fold + divide into one step");
+        let Kind::FusedReduce { kernel, ri, epi, .. } = &step.kind else { unreachable!() };
+        assert_eq!(kernel.ops, vec!["exponential"]);
+        let (ek, eh) = epi.as_ref().expect("divide chain must ride as the epilogue");
+        assert!(ek.ops.contains(&"divide".to_string()), "{:?}", ek.ops);
+        assert!((*eh as usize) < ek.n_inputs);
+        // The step anchors at the chain root; ri points back at the reduce.
+        assert!(matches!(m.comps[m.entry].instrs[step.instr].op, Op::Divide));
+        assert!(matches!(m.comps[m.entry].instrs[*ri].op, Op::Reduce { .. }));
+        // args: exp's source + init + divide's non-reduce inputs (the
+        // splat constant): fewer steps than the unfused plan.
+        let off = compile(&m, FuseMode::Off).unwrap();
+        assert!(p.step_count() < off.step_count());
+        assert_plan_invariants(&p);
+        use crate::backend::interp::verify::{verify, VerifyMode};
+        let v = verify(&m, &p, None);
+        assert!(v.findings.is_empty(), "{}", v.report());
+        v.gate(VerifyMode::Strict).unwrap();
+    }
+
+    #[test]
+    fn dot_absorbs_input_transpose_and_convert() {
+        // transpose feeding the lhs flips the contracting index instead
+        // of materializing; an s32->f32 convert on the rhs becomes a
+        // cast-while-packing flag.
+        let text = "HloModule m
+ENTRY e.6 {
+  Arg_0.1 = f32[3,4]{1,0} parameter(0)
+  transpose.2 = f32[4,3]{1,0} transpose(Arg_0.1), dimensions={1,0}
+  Arg_1.3 = s32[3,5]{1,0} parameter(1)
+  convert.4 = f32[3,5]{1,0} convert(Arg_1.3)
+  ROOT dot.5 = f32[4,5]{1,0} dot(transpose.2, convert.4), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+";
+        let m = parse_module(text).unwrap();
+        let p = compile(&m, FuseMode::Full).unwrap();
+        let cp = &p.comps[p.entry];
+        let step = cp
+            .steps
+            .iter()
+            .find(|s| matches!(s.kind, Kind::FusedDot { .. }))
+            .expect("a dot with absorbable prologues must plan as FusedDot");
+        let Kind::FusedDot { kernel, prods, .. } = &step.kind else { unreachable!() };
+        // Identity epilogue: the dot itself is the root.
+        assert_eq!(kernel.n_inputs, 1);
+        assert_eq!(prods.len(), 1);
+        // lhs contracting dim 1 flipped to 0 by the absorbed transpose.
+        assert_eq!((prods[0].lc, prods[0].rc), (0, 0));
+        assert!(!prods[0].cva && prods[0].cvb, "rhs convert absorbed as cast-while-pack");
+        // args: the transpose *source* and the convert *source*.
+        assert_eq!(step.args.len(), 2);
+        // transpose and convert got no steps: 2 params + 1 dot step.
+        assert_eq!(cp.steps.len(), 3);
+        assert_plan_invariants(&p);
+        use crate::backend::interp::verify::{verify, VerifyMode};
+        let v = verify(&m, &p, None);
+        assert!(v.findings.is_empty(), "{}", v.report());
+        v.gate(VerifyMode::Strict).unwrap();
+    }
+
+    #[test]
+    fn two_dots_fuse_into_one_epilogue_step() {
+        // add(dot, dot): both single-use producers stream into the same
+        // consumer kernel as separate hot inputs.
+        let text = "HloModule m
+ENTRY e.8 {
+  Arg_0.1 = f32[4,3]{1,0} parameter(0)
+  Arg_1.2 = f32[3,5]{1,0} parameter(1)
+  Arg_2.3 = f32[4,6]{1,0} parameter(2)
+  Arg_3.4 = f32[6,5]{1,0} parameter(3)
+  dot.5 = f32[4,5]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  dot.6 = f32[4,5]{1,0} dot(Arg_2.3, Arg_3.4), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT add.7 = f32[4,5]{1,0} add(dot.5, dot.6)
+}
+";
+        let m = parse_module(text).unwrap();
+        let p = compile(&m, FuseMode::Full).unwrap();
+        let cp = &p.comps[p.entry];
+        let step = cp
+            .steps
+            .iter()
+            .find(|s| matches!(s.kind, Kind::FusedDot { .. }))
+            .expect("both dots must fuse into the add");
+        let Kind::FusedDot { kernel, prods, .. } = &step.kind else { unreachable!() };
+        assert_eq!(kernel.ops, vec!["add"]);
+        assert_eq!(prods.len(), 2);
+        assert!(prods[0].hot < prods[1].hot, "hot indices strictly increasing");
+        assert_eq!(kernel.n_inputs, 2, "both kernel inputs are hot");
+        // args: two operand pairs, no epilogue externals.
+        assert_eq!(step.args.len(), 4);
+        // 4 params + 1 fused step.
+        assert_eq!(cp.steps.len(), 5);
+        assert_plan_invariants(&p);
+        use crate::backend::interp::verify::{verify, VerifyMode};
+        let v = verify(&m, &p, None);
+        assert!(v.findings.is_empty(), "{}", v.report());
+        v.gate(VerifyMode::Strict).unwrap();
+    }
+
+    #[test]
+    fn simd_off_compiles_scalar_kernels() {
+        let m = parse_module(CHAIN).unwrap();
+        let p = compile_cfg(&m, Config::new(FuseMode::Full, false)).unwrap();
+        for k in fused_steps(&p) {
+            assert_eq!(k.lanes, 1, "simd=off must pin every kernel to scalar lanes");
+        }
+        let p = compile_cfg(&m, Config::new(FuseMode::Full, true)).unwrap();
+        for k in fused_steps(&p) {
+            assert_eq!(k.lanes as usize, LANES);
+        }
         assert_plan_invariants(&p);
     }
 

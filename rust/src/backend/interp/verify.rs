@@ -44,9 +44,9 @@ use std::fmt;
 
 use anyhow::{bail, Result};
 
-use super::fusion::{EInstr, FusedKernel};
+use super::fusion::{EInstr, FusedKernel, BLOCK};
 use super::parser::{BinOp, Computation, Module, Op, Shape, UnOp};
-use super::plan::{CompPlan, Kind, Plan, Step};
+use super::plan::{CompPlan, DotProd, Kind, Plan, Step};
 use super::sched::{SchedPlan, StepGraph};
 use super::value::Ty;
 
@@ -386,11 +386,26 @@ fn check_shapes(ck: &mut Checker, m: &Module, comp: &Computation, cp: &CompPlan,
         match &step.kind {
             Kind::Single => check_single(ck, m, comp, cp, si, step, ins, specs),
             Kind::Fused(kernel) => check_fused(ck, comp, cp, si, step, ins, kernel, specs),
-            Kind::FusedReduce { kernel, ty, bin, outer, inner } => {
-                check_fused_reduce(ck, m, comp, si, step, ins, kernel, *ty, *bin, *outer, *inner, specs)
+            Kind::FusedReduce { kernel, ty, bin, outer, inner, ri, epi } => {
+                check_fused_reduce(
+                    ck,
+                    m,
+                    comp,
+                    si,
+                    step,
+                    ins,
+                    kernel,
+                    *ty,
+                    *bin,
+                    *outer,
+                    *inner,
+                    *ri,
+                    epi.as_ref(),
+                    specs,
+                )
             }
-            Kind::FusedDot { kernel, hot, lc, rc } => {
-                check_fused_dot(ck, comp, si, step, ins, kernel, *hot, *lc, *rc, specs)
+            Kind::FusedDot { kernel, prods, block } => {
+                check_fused_dot(ck, comp, si, step, ins, kernel, prods, *block, specs)
             }
             Kind::FusedGather { kernel, hot } => {
                 check_fused_gather(ck, comp, si, step, ins, kernel, *hot, specs)
@@ -816,8 +831,10 @@ impl KRole {
 /// role-dependent sizes for a virtual element count `n` with trailing
 /// dimension `trailing` (block-offset validity: `Tile`/`Rep` need the
 /// kernel period to equal the chain's trailing dim or their modular
-/// index math is wrong at some offset). Returns the derived roles for
-/// the caller's in-place audit.
+/// index math is wrong at some offset). `hots` names the inputs the
+/// executing kernel streams per block (with the lane dtype each one
+/// carries) — they have no tensor backing and must be plain loads.
+/// Returns the derived roles for the caller's in-place audit.
 #[allow(clippy::too_many_arguments)]
 fn check_kernel(
     ck: &mut Checker,
@@ -826,8 +843,7 @@ fn check_kernel(
     k: &FusedKernel,
     inputs: &[Option<KInput>],
     slots: &[Option<usize>],
-    hot: Option<u16>,
-    hot_ty: Ty,
+    hots: &[(u16, Ty)],
     n: usize,
     trailing: usize,
     declared_out: Ty,
@@ -836,6 +852,17 @@ fn check_kernel(
     let mut roles = vec![KRole::Unused; k.n_inputs];
     let mut stack: Vec<Ty> = Vec::new();
     let slot_of = |i: usize| slots.get(i).copied().flatten();
+    let hot_ty_of = |i: usize| hots.iter().find(|(h, _)| *h as usize == i).map(|&(_, t)| t);
+    // The executor picks its lane loop (8-wide chunked vs scalar) off
+    // this width; anything else means corrupted kernel metadata.
+    if !matches!(k.lanes, 1 | 8) {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("kernel lane width {} is not a supported width (1 or 8)", k.lanes),
+        );
+    }
     for (pc, e) in k.prog.iter().enumerate() {
         // Input-referencing instructions: bind the role, push the lane.
         if let EInstr::Load(i) | EInstr::Splat(i) | EInstr::Tile(i) | EInstr::Rep(i) = e {
@@ -866,7 +893,11 @@ fn check_kernel(
             roles[idx] = role;
             let ty = match &inputs[idx] {
                 Some(ki) => ki.ty,
-                None => hot_ty,
+                // No backing: a streamed hot input carries its declared
+                // lane dtype. (A None that is not hot is flagged below;
+                // keep the stack simulation going with the kernel's own
+                // output dtype.)
+                None => hot_ty_of(idx).unwrap_or(k.out_ty),
             };
             stack.push(ty);
             continue;
@@ -950,7 +981,7 @@ fn check_kernel(
         ck.warn(cname, Some(si), None, format!("kernel declares period {} but uses no tile/rep leaf", k.inner));
     }
     for (idx, role) in roles.iter().enumerate() {
-        if hot == Some(idx as u16) {
+        if hot_ty_of(idx).is_some() {
             if *role != KRole::Load {
                 ck.error(cname, Some(si), None, format!("hot input {idx} must be a plain load, is {}", role.name()));
             }
@@ -1044,7 +1075,7 @@ fn check_fused(
     let n: usize = od.iter().product();
     let trailing = if od.len() == 2 { od[1] } else { 0 };
     let Some((inputs, slots)) = gather_inputs(ck, cname, si, specs, &step.args) else { return };
-    let roles = check_kernel(ck, cname, si, kernel, &inputs, &slots, None, *oty, n, trailing, *oty);
+    let roles = check_kernel(ck, cname, si, kernel, &inputs, &slots, &[], n, trailing, *oty);
 
     // In-place output reuse: the target must be this step's dying, pure
     // Load input with the output's dtype and element count — and never
@@ -1095,23 +1126,49 @@ fn check_fused_reduce(
     bin: BinOp,
     outer: usize,
     inner: usize,
+    ri: usize,
+    epi: Option<&(FusedKernel, u16)>,
     specs: &[SlotSpec],
 ) {
     let cname = comp.name.as_str();
-    let Op::Reduce { dims: rdims, to_apply } = &ins.op else {
-        ck.error(cname, Some(si), None, format!("fused-reduce step on non-reduce {:?}", ins.name));
+    // With an epilogue the step is anchored at the epilogue chain's root
+    // and `ri` names the folded reduce; without one they coincide.
+    if epi.is_none() && ri != step.instr {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("fused-reduce without epilogue anchors instr {} but folds reduce {ri}", step.instr),
+        );
+    }
+    let Some(rins) = comp.instrs.get(ri) else {
+        ck.error(cname, Some(si), None, format!("fused-reduce instruction index {ri} out of range"));
+        return;
+    };
+    let Op::Reduce { dims: rdims, to_apply } = &rins.op else {
+        ck.error(cname, Some(si), None, format!("fused-reduce step on non-reduce {:?}", rins.name));
         return;
     };
     let Shape::Arr(oty, od) = &ins.shape else {
         ck.error(cname, Some(si), None, "reduce output is a tuple".into());
         return;
     };
-    let (Some((xty, xd)), Some((ity, idd))) = (operand_arr(comp, ins, 0), operand_arr(comp, ins, 1))
+    let Shape::Arr(rty, rod) = &rins.shape else {
+        ck.error(cname, Some(si), None, "reduce output is a tuple".into());
+        return;
+    };
+    let (Some((xty, xd)), Some((ity, idd))) =
+        (operand_arr(comp, rins, 0), operand_arr(comp, rins, 1))
     else {
         ck.error(cname, Some(si), None, "reduce operands are not arrays".into());
         return;
     };
-    if ty != xty || *oty != xty || ity != xty {
+    // Fold-side dtypes must agree; the step *output* dtype only has to
+    // match when no epilogue re-types the folded value (a `Cvt` in the
+    // epilogue chain legitimately changes it — check_kernel covers that
+    // path below).
+    let out_mismatch = epi.is_none() && *oty != xty;
+    if ty != xty || *rty != xty || ity != xty || out_mismatch {
         ck.error(
             cname,
             Some(si),
@@ -1146,8 +1203,18 @@ fn check_fused_reduce(
             format!("fused-reduce geometry {outer}x{inner}, input {xd:?} wants {want_outer}x{want_inner}"),
         );
     }
-    if od.as_slice() != &xd[..split] {
-        ck.error(cname, Some(si), None, format!("fused-reduce output {od:?}, want {:?}", &xd[..split]));
+    if rod.as_slice() != &xd[..split] {
+        ck.error(cname, Some(si), None, format!("fused-reduce output {rod:?}, want {:?}", &xd[..split]));
+    }
+    // An epilogue chain is elementwise over the folded value, so its
+    // (= the step's) dims must be exactly the reduce's output dims.
+    if od != rod {
+        ck.error(
+            cname,
+            Some(si),
+            None,
+            format!("fused-reduce epilogue output {od:?} disagrees with reduce output {rod:?}"),
+        );
     }
     if !fold_ok(xty, bin) {
         ck.error(cname, Some(si), None, format!("{bin:?} fold is unsupported on {}", xty.name()));
@@ -1155,17 +1222,23 @@ fn check_fused_reduce(
     if let Err(e) = combiner_matches(m, *to_apply, bin) {
         ck.error(cname, Some(si), None, e);
     }
-    if step.args.len() != kernel.n_inputs + 1 {
+    let epi_ext = epi.map_or(0, |(ek, _)| ek.n_inputs.saturating_sub(1));
+    if step.args.len() != kernel.n_inputs + 1 + epi_ext {
         ck.error(
             cname,
             Some(si),
             None,
-            format!("{} args for a {}-input kernel plus init", step.args.len(), kernel.n_inputs),
+            format!(
+                "{} args for a {}-input kernel plus init plus {epi_ext} epilogue inputs",
+                step.args.len(),
+                kernel.n_inputs
+            ),
         );
         return;
     }
-    // Last arg is the init scalar; the rest back the prologue chain over
-    // the virtual input of outer*inner elements.
+    // After the prologue inputs comes the init scalar; any epilogue
+    // inputs follow. The prologue chain runs over the virtual input of
+    // outer*inner elements.
     let (init_slot, _) = step.args[kernel.n_inputs];
     match arr_spec(specs, init_slot) {
         Some((t, d)) if t == xty && d.iter().product::<usize>() == 1 => {}
@@ -1177,12 +1250,40 @@ fn check_fused_reduce(
     else {
         return;
     };
-    check_kernel(ck, cname, si, kernel, &inputs, &slots, None, xty, n, trailing, xty);
+    check_kernel(ck, cname, si, kernel, &inputs, &slots, &[], n, trailing, xty);
+    // The epilogue chain streams the folded value as its hot input and
+    // runs over the reduce's output element count.
+    if let Some((ek, eh)) = epi {
+        if ek.n_inputs == 0 || (*eh as usize) >= ek.n_inputs {
+            ck.error(
+                cname,
+                Some(si),
+                None,
+                format!("epilogue hot input {eh} out of range for {} inputs", ek.n_inputs),
+            );
+            return;
+        }
+        let en: usize = rod.iter().product();
+        let etrailing = if rod.len() == 2 { rod[1] } else { 0 };
+        let Some((einputs, eslots)) = producer_inputs(
+            ck,
+            cname,
+            si,
+            specs,
+            &step.args[kernel.n_inputs + 1..],
+            ek.n_inputs,
+            &[*eh],
+        ) else {
+            return;
+        };
+        check_kernel(ck, cname, si, ek, &einputs, &eslots, &[(*eh, xty)], en, etrailing, *oty);
+    }
 }
 
-/// Kernel inputs for a producer fusion (`FusedDot`/`FusedGather`): the
-/// hot input has no slot; kernel input `k != hot` is backed by arg
-/// `k - (k > hot)`.
+/// Kernel inputs for a producer fusion (`FusedDot`/`FusedGather`/a
+/// reduce epilogue): streamed hot inputs have no slot; a non-hot kernel
+/// input `k` is backed by arg `k - (number of hots below k)` of the
+/// given arg span.
 #[allow(clippy::too_many_arguments)]
 fn producer_inputs(
     ck: &mut Checker,
@@ -1191,17 +1292,21 @@ fn producer_inputs(
     specs: &[SlotSpec],
     args: &[(usize, bool)],
     n_inputs: usize,
-    hot: usize,
+    hots: &[u16],
 ) -> Option<(Vec<Option<KInput>>, Vec<Option<usize>>)> {
     let mut inputs = Vec::with_capacity(n_inputs);
     let mut slots = Vec::with_capacity(n_inputs);
     for k in 0..n_inputs {
-        if k == hot {
+        if hots.contains(&(k as u16)) {
             inputs.push(None);
             slots.push(None);
             continue;
         }
-        let (a, _) = args[k - usize::from(k > hot)];
+        let skip = hots.iter().filter(|&&h| (h as usize) < k).count();
+        let Some(&(a, _)) = args.get(k - skip) else {
+            ck.error(cname, Some(si), None, format!("kernel input {k} has no backing arg"));
+            return None;
+        };
         let Some((ty, dims)) = arr_spec(specs, a) else {
             ck.error(cname, Some(si), Some(a), "kernel input slot is undefined or a tuple".into());
             return None;
@@ -1220,9 +1325,8 @@ fn check_fused_dot(
     step: &Step,
     ins: &super::parser::Instr,
     kernel: &FusedKernel,
-    hot: u16,
-    lc: usize,
-    rc: usize,
+    prods: &[DotProd],
+    block: usize,
     specs: &[SlotSpec],
 ) {
     let cname = comp.name.as_str();
@@ -1230,60 +1334,108 @@ fn check_fused_dot(
         ck.error(cname, Some(si), None, "fused-dot output is a tuple".into());
         return;
     };
-    if kernel.n_inputs == 0 || (hot as usize) >= kernel.n_inputs {
-        ck.error(cname, Some(si), None, format!("hot input {hot} out of range for {} inputs", kernel.n_inputs));
-        return;
-    }
-    let n_other = kernel.n_inputs - 1;
-    if step.args.len() != n_other + 2 {
+    if prods.is_empty() || prods.len() > kernel.n_inputs {
         ck.error(
             cname,
             Some(si),
             None,
-            format!("{} args, want {} epilogue inputs + 2 dot operands", step.args.len(), n_other),
+            format!("{} streamed dots for a {}-input kernel", prods.len(), kernel.n_inputs),
         );
         return;
     }
-    // The streamed producer: a rank-2 f32 x rank-2 f32 contraction whose
-    // output shape is the chain shape.
-    let (a_slot, _) = step.args[n_other];
-    let (b_slot, _) = step.args[n_other + 1];
-    let (Some((ta, da)), Some((tb, db))) = (arr_spec(specs, a_slot), arr_spec(specs, b_slot)) else {
-        ck.error(cname, Some(si), None, "dot operand slots are undefined or tuples".into());
-        return;
-    };
-    if ta != Ty::F32 || tb != Ty::F32 || da.len() != 2 || db.len() != 2 {
-        ck.error(cname, Some(si), None, "fused dot needs rank-2 f32 operands".into());
+    if !prods.windows(2).all(|w| w[0].hot < w[1].hot) {
+        ck.error(cname, Some(si), None, "fused-dot hot inputs are not strictly increasing".into());
         return;
     }
-    if lc >= 2 || rc >= 2 {
-        ck.error(cname, Some(si), None, format!("dot contracting dims ({lc},{rc}) out of range"));
-        return;
+    for p in prods {
+        if (p.hot as usize) >= kernel.n_inputs {
+            ck.error(
+                cname,
+                Some(si),
+                None,
+                format!("hot input {} out of range for {} inputs", p.hot, kernel.n_inputs),
+            );
+            return;
+        }
     }
-    if da[lc] != db[rc] {
+    let n_other = kernel.n_inputs - prods.len();
+    if step.args.len() != n_other + 2 * prods.len() {
         ck.error(
             cname,
             Some(si),
             None,
-            format!("dot contraction mismatch: lhs dim {lc}={}, rhs dim {rc}={}", da[lc], db[rc]),
+            format!(
+                "{} args, want {} epilogue inputs + {} dot operand pairs",
+                step.args.len(),
+                n_other,
+                prods.len()
+            ),
         );
+        return;
     }
-    if od.len() != 2 || od.as_slice() != [da[1 - lc], db[1 - rc]] {
+    if od.len() != 2 {
+        ck.error(cname, Some(si), None, format!("fused-dot chain output {od:?} is not rank-2"));
+        return;
+    }
+    // Each streamed producer: a rank-2 contraction whose output shape is
+    // the chain shape. Operands are f32 unless an absorbed `convert`
+    // feeds the side (then the kernel casts while packing/streaming).
+    for (j, p) in prods.iter().enumerate() {
+        let (a_slot, _) = step.args[n_other + 2 * j];
+        let (b_slot, _) = step.args[n_other + 2 * j + 1];
+        let (Some((ta, da)), Some((tb, db))) = (arr_spec(specs, a_slot), arr_spec(specs, b_slot))
+        else {
+            ck.error(cname, Some(si), None, "dot operand slots are undefined or tuples".into());
+            return;
+        };
+        if (ta != Ty::F32 && !p.cva) || (tb != Ty::F32 && !p.cvb) || da.len() != 2 || db.len() != 2 {
+            ck.error(cname, Some(si), None, "fused dot needs rank-2 f32 operands".into());
+            return;
+        }
+        if p.lc >= 2 || p.rc >= 2 {
+            ck.error(cname, Some(si), None, format!("dot contracting dims ({},{}) out of range", p.lc, p.rc));
+            return;
+        }
+        if da[p.lc] != db[p.rc] {
+            ck.error(
+                cname,
+                Some(si),
+                None,
+                format!("dot contraction mismatch: lhs dim {}={}, rhs dim {}={}", p.lc, da[p.lc], p.rc, db[p.rc]),
+            );
+        }
+        if od.as_slice() != [da[1 - p.lc], db[1 - p.rc]] {
+            ck.error(
+                cname,
+                Some(si),
+                None,
+                format!("fused-dot chain output {od:?}, dot produces [{}, {}]", da[1 - p.lc], db[1 - p.rc]),
+            );
+        }
+    }
+    // Cache-blocked streaming geometry: the executor walks the output in
+    // row panels of `block` rows so the B×K panel and the hot block stay
+    // cache-resident; re-derive the row count from the chain's trailing
+    // dim and BLOCK.
+    let want_block = (BLOCK / od[1].max(1)).max(1);
+    if block != want_block {
         ck.error(
             cname,
             Some(si),
             None,
-            format!("fused-dot chain output {od:?}, dot produces [{}, {}]", da[1 - lc], db[1 - rc]),
+            format!("fused-dot panel geometry: {block} rows per block, BLOCK/{} wants {want_block}", od[1]),
         );
     }
     let n: usize = od.iter().product();
-    let trailing = if od.len() == 2 { od[1] } else { 0 };
+    let trailing = od[1];
+    let hots: Vec<u16> = prods.iter().map(|p| p.hot).collect();
     let Some((inputs, slots)) =
-        producer_inputs(ck, cname, si, specs, &step.args, kernel.n_inputs, hot as usize)
+        producer_inputs(ck, cname, si, specs, &step.args[..n_other], kernel.n_inputs, &hots)
     else {
         return;
     };
-    check_kernel(ck, cname, si, kernel, &inputs, &slots, Some(hot), Ty::F32, n, trailing, *oty);
+    let hot_tys: Vec<(u16, Ty)> = prods.iter().map(|p| (p.hot, Ty::F32)).collect();
+    check_kernel(ck, cname, si, kernel, &inputs, &slots, &hot_tys, n, trailing, *oty);
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1348,11 +1500,11 @@ fn check_fused_gather(
     let n: usize = od.iter().product();
     let trailing = if od.len() == 2 { od[1] } else { 0 };
     let Some((inputs, slots)) =
-        producer_inputs(ck, cname, si, specs, &step.args, kernel.n_inputs, hot as usize)
+        producer_inputs(ck, cname, si, specs, &step.args[..n_other], kernel.n_inputs, &[hot])
     else {
         return;
     };
-    check_kernel(ck, cname, si, kernel, &inputs, &slots, Some(hot), Ty::F32, n, trailing, *oty);
+    check_kernel(ck, cname, si, kernel, &inputs, &slots, &[(hot, Ty::F32)], n, trailing, *oty);
 }
 
 // -------------------------------------------------------- pass 2: liveness

@@ -1,21 +1,23 @@
 //! `plan_lint` — the CI correctness gate over the static plan verifier.
 //!
 //! Sweeps every committed HLO artifact through the full compile matrix —
-//! {off, chains, full} fusion × scheduler {on, off} — and runs each
-//! compiled plan through the three-pass checker in
-//! `backend::interp::verify` (bytecode abstract interpretation, liveness
-//! soundness, happens-before race audit). Any error fails the gate; with
-//! `--strict` (the CI configuration) warnings fail it too, so the
-//! committed artifact set is provably clean, not just clean-enough.
+//! {off, chains, full} fusion × scheduler {on, off} × SIMD {on, off} —
+//! and runs each compiled plan through the three-pass checker in
+//! `backend::interp::verify` (bytecode abstract interpretation including
+//! lane-width/panel-geometry audits, liveness soundness, happens-before
+//! race audit). Any error fails the gate; with `--strict` (the CI
+//! configuration) warnings fail it too, so the committed artifact set is
+//! provably clean, not just clean-enough.
 //!
 //! ```text
 //! plan_lint [DIR] [--strict] [--json PLAN_LINT.json]
 //! ```
 //!
-//! `DIR` defaults to `artifacts` (run from `rust/`, as CI does). The JSON
-//! report mirrors the console table — one row per (artifact, fuse, sched)
-//! configuration with its step/pair counts and every finding — and is
-//! uploaded by the `plan-lint` CI job next to the bench JSON.
+//! `DIR` defaults to `artifacts` (run from `rust/`, as CI does). The
+//! JSON report mirrors the console table — one row per (artifact, fuse,
+//! sched, simd) configuration with its step/pair counts and every
+//! finding — and is uploaded by the `plan-lint` CI job next to the
+//! bench JSON.
 //!
 //! Exit status: 0 = all plans verified clean, 1 = at least one finding
 //! failed the gate, 2 = bad invocation / unreadable artifacts.
@@ -91,6 +93,7 @@ struct Row {
     artifact: String,
     fuse: &'static str,
     sched: bool,
+    simd: bool,
     steps: usize,
     pairs: usize,
     errors: usize,
@@ -112,38 +115,42 @@ fn lint(files: &[std::path::PathBuf], strict: bool) -> Result<(Vec<Row>, u32), S
         let module = parser::parse_module(&text)
             .map_err(|e| format!("{name}: parse failed: {e}"))?;
         for mode in [FuseMode::Off, FuseMode::Chains, FuseMode::Full] {
-            let compiled = plan::compile(&module, mode)
-                .map_err(|e| format!("{name} [{}]: plan failed: {e}", fuse_name(mode)))?;
-            for sched in [true, false] {
-                let sp = sched.then(|| SchedPlan::build(&compiled));
-                let v = verify(&module, &compiled, sp.as_ref());
-                let pass = v.gate(gate).is_ok();
-                if !pass {
-                    failures += 1;
-                }
-                let tag = format!(
-                    "{name} [fuse={} sched={}]",
-                    fuse_name(mode),
-                    if sched { "on" } else { "off" }
-                );
-                if pass {
-                    println!("  ok   {tag:<48} {}", v.summary());
-                } else {
-                    println!("  FAIL {tag}");
-                    for line in v.report().lines() {
-                        println!("       {line}");
+            for simd in [true, false] {
+                let compiled = plan::compile_cfg(&module, plan::Config::new(mode, simd))
+                    .map_err(|e| format!("{name} [{}]: plan failed: {e}", fuse_name(mode)))?;
+                for sched in [true, false] {
+                    let sp = sched.then(|| SchedPlan::build(&compiled));
+                    let v = verify(&module, &compiled, sp.as_ref());
+                    let pass = v.gate(gate).is_ok();
+                    if !pass {
+                        failures += 1;
                     }
+                    let tag = format!(
+                        "{name} [fuse={} sched={} simd={}]",
+                        fuse_name(mode),
+                        if sched { "on" } else { "off" },
+                        if simd { "on" } else { "off" }
+                    );
+                    if pass {
+                        println!("  ok   {tag:<56} {}", v.summary());
+                    } else {
+                        println!("  FAIL {tag}");
+                        for line in v.report().lines() {
+                            println!("       {line}");
+                        }
+                    }
+                    rows.push(Row {
+                        artifact: name.clone(),
+                        fuse: fuse_name(mode),
+                        sched,
+                        simd,
+                        steps: v.steps,
+                        pairs: v.pairs,
+                        errors: v.errors(),
+                        warnings: v.warnings(),
+                        findings: v.findings.iter().map(|f| f.to_string()).collect(),
+                    });
                 }
-                rows.push(Row {
-                    artifact: name.clone(),
-                    fuse: fuse_name(mode),
-                    sched,
-                    steps: v.steps,
-                    pairs: v.pairs,
-                    errors: v.errors(),
-                    warnings: v.warnings(),
-                    findings: v.findings.iter().map(|f| f.to_string()).collect(),
-                });
             }
         }
     }
@@ -158,6 +165,7 @@ fn report_json(rows: &[Row], strict: bool, failures: u32) -> Json {
             m.insert("artifact".to_string(), Json::Str(r.artifact.clone()));
             m.insert("fuse".to_string(), Json::Str(r.fuse.to_string()));
             m.insert("sched".to_string(), Json::Bool(r.sched));
+            m.insert("simd".to_string(), Json::Bool(r.simd));
             m.insert("steps".to_string(), Json::Num(r.steps as f64));
             m.insert("ordered_pairs".to_string(), Json::Num(r.pairs as f64));
             m.insert("errors".to_string(), Json::Num(r.errors as f64));
@@ -194,7 +202,7 @@ fn main() -> ExitCode {
         }
     };
     println!(
-        "plan_lint: {} artifacts x {{off,chains,full}} x sched {{on,off}}{}",
+        "plan_lint: {} artifacts x {{off,chains,full}} x sched {{on,off}} x simd {{on,off}}{}",
         files.len(),
         if args.strict { " (strict: warnings gate)" } else { "" }
     );

@@ -20,6 +20,7 @@
 //! |---------------------------|---------------------|--------------|---------------|
 //! | `POLYGLOT_INTERP_FUSE`    | `off\|chains\|full` | `full`       | `off`         |
 //! | `POLYGLOT_INTERP_SCHED`   | `on\|off`           | `on`         | `off`         |
+//! | `POLYGLOT_INTERP_SIMD`    | `on\|off`           | `on`         | `off`         |
 //! | `POLYGLOT_INTERP_THREADS` | `0\|1\|2\|…`        | `0` (cores)  | `0` (cores)   |
 //! | `POLYGLOT_INTERP_PROFILE` | `on\|off`           | `off`        | `off`         |
 //! | `POLYGLOT_INTERP_VERIFY`  | `on\|off\|strict`   | `on` (debug builds), `off` (release) | `on` |
@@ -37,6 +38,7 @@ use crate::backend::interp::verify::VerifyMode;
 /// Variable names, so call sites and error messages never drift.
 pub const FUSE: &str = "POLYGLOT_INTERP_FUSE";
 pub const SCHED: &str = "POLYGLOT_INTERP_SCHED";
+pub const SIMD: &str = "POLYGLOT_INTERP_SIMD";
 pub const THREADS: &str = "POLYGLOT_INTERP_THREADS";
 pub const PROFILE: &str = "POLYGLOT_INTERP_PROFILE";
 pub const VERIFY: &str = "POLYGLOT_INTERP_VERIFY";
@@ -50,6 +52,34 @@ fn warn(name: &str, raw: &str, expected: &str, took: &str) {
     eprintln!("[env] {name}={raw:?} unrecognized (expected {expected}); {took}");
 }
 
+/// Shared parser for the small enumerated knobs: match the trimmed,
+/// lowercased raw value against `table`; unset or empty takes `default`;
+/// anything else warns with `expected`/`took` and returns `fallback` —
+/// per the module contract, the safest reading for that knob, never
+/// silently the value being bisected back on.
+fn enum_knob<T: Copy>(
+    name: &str,
+    raw: Option<&str>,
+    table: &[(&str, T)],
+    default: T,
+    fallback: T,
+    expected: &str,
+    took: &str,
+) -> T {
+    let Some(raw) = raw else { return default };
+    let t = raw.trim().to_ascii_lowercase();
+    if t.is_empty() {
+        return default;
+    }
+    match table.iter().find(|(k, _)| *k == t) {
+        Some(&(_, v)) => v,
+        None => {
+            warn(name, &t, expected, took);
+            fallback
+        }
+    }
+}
+
 /// `POLYGLOT_INTERP_FUSE=off|chains|full` pins the fusion level so a
 /// fusion regression can be bisected (`off` = one step per instruction,
 /// `chains` = elementwise chains only, `full` = consumer-side fusion —
@@ -60,16 +90,20 @@ pub fn fuse_mode() -> FuseMode {
 }
 
 pub fn parse_fuse_mode(raw: Option<&str>) -> FuseMode {
-    let Some(raw) = raw else { return FuseMode::Full };
-    match raw.trim().to_ascii_lowercase().as_str() {
-        "off" | "0" => FuseMode::Off,
-        "chains" => FuseMode::Chains,
-        "" | "full" => FuseMode::Full,
-        other => {
-            warn(FUSE, other, "off|chains|full", "compiling with fusion OFF");
-            FuseMode::Off
-        }
-    }
+    enum_knob(
+        FUSE,
+        raw,
+        &[
+            ("off", FuseMode::Off),
+            ("0", FuseMode::Off),
+            ("chains", FuseMode::Chains),
+            ("full", FuseMode::Full),
+        ],
+        FuseMode::Full,
+        FuseMode::Off,
+        "off|chains|full",
+        "compiling with fusion OFF",
+    )
 }
 
 /// `POLYGLOT_INTERP_SCHED=on|off` toggles the plan-level parallel
@@ -81,15 +115,37 @@ pub fn sched() -> bool {
 }
 
 pub fn parse_sched(raw: Option<&str>) -> bool {
-    let Some(raw) = raw else { return true };
-    match raw.trim().to_ascii_lowercase().as_str() {
-        "off" | "0" => false,
-        "" | "on" | "1" => true,
-        other => {
-            warn(SCHED, other, "on|off", "scheduler OFF");
-            false
-        }
-    }
+    enum_knob(
+        SCHED,
+        raw,
+        &[("off", false), ("0", false), ("on", true), ("1", true)],
+        true,
+        false,
+        "on|off",
+        "scheduler OFF",
+    )
+}
+
+/// `POLYGLOT_INTERP_SIMD=on|off` pins the kernel lane width the planner
+/// bakes into every fused kernel (default **on**: 8-wide chunked lane
+/// loops plus the packed cache-blocked dot; `off` compiles every kernel
+/// scalar and keeps the unpacked dot). A numerics bisection sets this
+/// `off`, so a typo must not re-enable vector code: unrecognized →
+/// SIMD OFF.
+pub fn simd() -> bool {
+    parse_simd(var(SIMD).as_deref())
+}
+
+pub fn parse_simd(raw: Option<&str>) -> bool {
+    enum_knob(
+        SIMD,
+        raw,
+        &[("off", false), ("0", false), ("on", true), ("1", true)],
+        true,
+        false,
+        "on|off",
+        "SIMD OFF",
+    )
 }
 
 /// Interpreter thread budget: `POLYGLOT_INTERP_THREADS` (0 or unset =
@@ -119,15 +175,15 @@ pub fn profile() -> bool {
 }
 
 pub fn parse_profile(raw: Option<&str>) -> bool {
-    let Some(raw) = raw else { return false };
-    match raw.trim().to_ascii_lowercase().as_str() {
-        "1" | "true" | "on" => true,
-        "" | "0" | "false" | "off" => false,
-        other => {
-            warn(PROFILE, other, "on|off", "profiling OFF");
-            false
-        }
-    }
+    enum_knob(
+        PROFILE,
+        raw,
+        &[("1", true), ("true", true), ("on", true), ("0", false), ("false", false), ("off", false)],
+        false,
+        false,
+        "on|off",
+        "profiling OFF",
+    )
 }
 
 /// `POLYGLOT_INTERP_VERIFY=on|off|strict` gates the static plan
@@ -143,17 +199,22 @@ pub fn verify_mode() -> VerifyMode {
 
 pub fn parse_verify_mode(raw: Option<&str>) -> VerifyMode {
     let default = if cfg!(debug_assertions) { VerifyMode::On } else { VerifyMode::Off };
-    let Some(raw) = raw else { return default };
-    match raw.trim().to_ascii_lowercase().as_str() {
-        "off" | "0" => VerifyMode::Off,
-        "on" | "1" | "true" => VerifyMode::On,
-        "strict" => VerifyMode::Strict,
-        "" => default,
-        other => {
-            warn(VERIFY, other, "on|off|strict", "verifier ON");
-            VerifyMode::On
-        }
-    }
+    enum_knob(
+        VERIFY,
+        raw,
+        &[
+            ("off", VerifyMode::Off),
+            ("0", VerifyMode::Off),
+            ("on", VerifyMode::On),
+            ("1", VerifyMode::On),
+            ("true", VerifyMode::On),
+            ("strict", VerifyMode::Strict),
+        ],
+        default,
+        VerifyMode::On,
+        "on|off|strict",
+        "verifier ON",
+    )
 }
 
 /// The backend pin: `POLYGLOT_BACKEND=pjrt|interp`. `None` means "no
@@ -214,6 +275,25 @@ mod tests {
     fn sched_typo_disables_scheduler() {
         assert!(!parse_sched(Some("onn")));
         assert!(!parse_sched(Some("enabled")));
+    }
+
+    #[test]
+    fn simd_accepts_documented_values() {
+        assert!(parse_simd(None));
+        assert!(parse_simd(Some("")));
+        assert!(parse_simd(Some("on")));
+        assert!(parse_simd(Some("1")));
+        assert!(!parse_simd(Some("off")));
+        assert!(!parse_simd(Some("0")));
+        assert!(!parse_simd(Some(" OFF ")));
+    }
+
+    #[test]
+    fn simd_typo_disables_vector_code() {
+        // A numerics bisection runs with SIMD off; a typo must not
+        // silently hand the vector kernels back.
+        assert!(!parse_simd(Some("onn")));
+        assert!(!parse_simd(Some("avx")));
     }
 
     #[test]

@@ -5,14 +5,16 @@
 //! reproduce it on the committed artifacts:
 //!
 //! * **Scatter artifacts** (`scatter_native_r*`, `scatter_rows_r*`):
-//!   bitwise identical across fused/unfused, threads {1, 2, 8} and step
-//!   scheduler on/off, and bitwise identical to the *host* serial baseline
-//!   (`baselines::scatter::scatter_add_serial`) — the same contract the
-//!   `grad` subsystem proves in `tests/grad_equivalence.rs`, now holding
-//!   through the interpreter's parallel scatter path too.
+//!   bitwise identical across fused/unfused, threads {1, 2, 8}, step
+//!   scheduler on/off and SIMD on/off, and bitwise identical to the
+//!   *host* serial baseline (`baselines::scatter::scatter_add_serial`)
+//!   — the same contract the `grad` subsystem proves in
+//!   `tests/grad_equivalence.rs`, now holding through the interpreter's
+//!   parallel scatter path too.
 //! * **Train-step artifacts** (dot/reduce/gather-heavy, while loops):
 //!   within 1e-6 of the tree-walk per output element at every thread
-//!   count (in practice bitwise: no parallel path reassociates).
+//!   count and lane width (the packed dot and the vectorized lane loops
+//!   keep per-element accumulation order, so in practice bitwise).
 
 use std::path::PathBuf;
 
@@ -27,23 +29,47 @@ use xla::Literal;
 
 /// The full engine matrix the acceptance contract names:
 /// {fused(full), fused(chains), unfused} × threads {1, 2, 8} × step
-/// scheduler {on, off}. The scheduler legs pin `sched` explicitly via
-/// `from_text_sched`, so this matrix holds regardless of the
-/// `POLYGLOT_INTERP_SCHED` env CI additionally sweeps.
-const CONFIGS: [(usize, FuseMode, bool); 12] = [
-    (1, FuseMode::Full, true),
-    (2, FuseMode::Full, true),
-    (8, FuseMode::Full, true),
-    (2, FuseMode::Full, false),
-    (8, FuseMode::Full, false),
-    (1, FuseMode::Chains, true),
-    (2, FuseMode::Chains, true),
-    (8, FuseMode::Chains, true),
-    (8, FuseMode::Chains, false),
-    (1, FuseMode::Off, true),
-    (2, FuseMode::Off, false),
-    (8, FuseMode::Off, true),
+/// scheduler {on, off} × SIMD {on, off}. The scheduler and SIMD legs
+/// pin their knobs explicitly via `from_text_simd`, so this matrix
+/// holds regardless of the `POLYGLOT_INTERP_SCHED` /
+/// `POLYGLOT_INTERP_SIMD` envs CI additionally sweeps. The SIMD-off
+/// legs hold scalar kernels and the unpacked dot to the same bars —
+/// bitwise on scatter artifacts, 1e-6 on the reassociation-permitted
+/// train-step outputs.
+const CONFIGS: [(usize, FuseMode, bool, bool); 18] = [
+    (1, FuseMode::Full, true, true),
+    (2, FuseMode::Full, true, true),
+    (8, FuseMode::Full, true, true),
+    (2, FuseMode::Full, false, true),
+    (8, FuseMode::Full, false, true),
+    (1, FuseMode::Full, true, false),
+    (8, FuseMode::Full, true, false),
+    (2, FuseMode::Full, false, false),
+    (1, FuseMode::Chains, true, true),
+    (2, FuseMode::Chains, true, true),
+    (8, FuseMode::Chains, true, true),
+    (8, FuseMode::Chains, true, false),
+    (8, FuseMode::Chains, false, true),
+    (1, FuseMode::Off, true, true),
+    (1, FuseMode::Off, true, false),
+    (2, FuseMode::Off, false, true),
+    (8, FuseMode::Off, true, true),
+    (8, FuseMode::Off, false, false),
 ];
+
+/// Compile with every knob pinned (the verifier still follows its env
+/// default, as before this matrix grew the SIMD axis).
+fn build(text: &str, threads: usize, mode: FuseMode, sched: bool, simd: bool) -> InterpExecutable {
+    InterpExecutable::from_text_simd(
+        text,
+        threads,
+        mode,
+        sched,
+        polyglot_gpu::util::env::verify_mode(),
+        simd,
+    )
+    .unwrap()
+}
 
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -90,15 +116,14 @@ fn scatter_artifacts_bitwise_across_threads_and_fusion() {
             let ref_w = reference[0].to_vec::<f32>().unwrap();
             assert_eq!(ref_w, golden, "{name}: tree-walk vs host serial baseline");
 
-            for (threads, mode, sched) in CONFIGS {
-                let exe =
-                    InterpExecutable::from_text_sched(&text, threads, mode, sched).unwrap();
+            for (threads, mode, sched, simd) in CONFIGS {
+                let exe = build(&text, threads, mode, sched, simd);
                 let got = exe.run(&[&wl, &il, &yl]).unwrap();
                 let got_w = got[0].to_vec::<f32>().unwrap();
                 assert_eq!(
                     got_w, ref_w,
-                    "{name}: plan (threads={threads}, mode={mode:?}, sched={sched}) \
-                     not bitwise-identical"
+                    "{name}: plan (threads={threads}, mode={mode:?}, sched={sched}, \
+                     simd={simd}) not bitwise-identical"
                 );
             }
         }
@@ -117,8 +142,8 @@ fn train_step_artifacts_match_treewalk_across_threads() {
         let text = artifact_text(&manifest, name);
         let reference =
             InterpExecutable::from_text_threads(&text, 1).unwrap().run_treewalk(&refs).unwrap();
-        for (threads, mode, sched) in CONFIGS {
-            let exe = InterpExecutable::from_text_sched(&text, threads, mode, sched).unwrap();
+        for (threads, mode, sched, simd) in CONFIGS {
+            let exe = build(&text, threads, mode, sched, simd);
             let got = exe.run(&refs).unwrap();
             assert_eq!(got.len(), reference.len(), "{name}: output arity");
             for (o, (g, w)) in got.iter().zip(&reference).enumerate() {
@@ -128,8 +153,8 @@ fn train_step_artifacts_match_treewalk_across_threads() {
                 for (j, (x, y)) in gv.iter().zip(&wv).enumerate() {
                     assert!(
                         (x - y).abs() <= 1e-6,
-                        "{name} (threads={threads}, mode={mode:?}, sched={sched}) \
-                         output {o}[{j}]: {x} vs {y}"
+                        "{name} (threads={threads}, mode={mode:?}, sched={sched}, \
+                         simd={simd}) output {o}[{j}]: {x} vs {y}"
                     );
                 }
             }

@@ -2,13 +2,15 @@
 //! class into an otherwise-clean compiled plan and assert the verifier
 //! rejects it with a diagnostic naming the offending step or slot.
 //!
-//! Defect classes (per ISSUE 7):
+//! Defect classes (per ISSUE 7, extended by ISSUE 8):
 //!   1. flip a move flag          -> liveness pass (read-after-move,
 //!      double-move, root-move, or a leak warning under strict)
 //!   2. corrupt a bytecode operand -> abstract-interpretation pass
 //!   3. drop a step-graph edge     -> happens-before race audit (and
 //!      graph-integrity when the predecessor counts are left stale)
 //!   4. retarget an in-place slot  -> in-place audit
+//!   5. corrupt lane-width metadata -> kernel audit (lanes must be 1|8)
+//!   6. corrupt fused-dot panel geometry -> cache-block audit
 //!
 //! Each class runs over every committed artifact it applies to (the
 //! sweep asserts it applied to at least four) plus synthetic modules, so
@@ -41,6 +43,20 @@ ENTRY e.5 {
 }
 ";
 
+/// A dot->bias->tanh forward layer: always plans a `FusedDot` step at
+/// Full, so the panel-geometry mutation has a guaranteed target.
+const SYNTH_DOT: &str = "HloModule m
+ENTRY e.8 {
+  Arg_0.1 = f32[4,3]{1,0} parameter(0)
+  Arg_1.2 = f32[3,5]{1,0} parameter(1)
+  dot.3 = f32[4,5]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  Arg_2.4 = f32[5]{0} parameter(2)
+  broadcast.5 = f32[4,5]{1,0} broadcast(Arg_2.4), dimensions={1}
+  add.6 = f32[4,5]{1,0} add(dot.3, broadcast.5)
+  ROOT tanh.7 = f32[4,5]{1,0} tanh(add.6)
+}
+";
+
 /// Every committed artifact plus the synthetic modules, parsed.
 fn corpus() -> Vec<(String, Module)> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -62,6 +78,7 @@ fn corpus() -> Vec<(String, Module)> {
         .collect();
     out.push(("synthetic:chain".to_string(), parse_module(SYNTH_CHAIN).unwrap()));
     out.push(("synthetic:diamond".to_string(), parse_module(SYNTH_DIAMOND).unwrap()));
+    out.push(("synthetic:dot".to_string(), parse_module(SYNTH_DOT).unwrap()));
     out
 }
 
@@ -253,6 +270,65 @@ fn retargeted_in_place_slots_are_rejected() {
     st.args[j].1 = false; // donor no longer dies at this step
     let v = verify(&m, &p, Some(&SchedPlan::build(&p)));
     assert_caught("synthetic:chain", "in-place donor kept alive", &v);
+}
+
+#[test]
+fn corrupted_lane_width_metadata_is_rejected() {
+    // The SIMD contract is baked into each kernel as `lanes`; the
+    // executor sizes its recycled lane buffers from it. Anything but the
+    // two compiled widths (1 = scalar, 8 = chunked) is a plan defect.
+    let mut applied = 0usize;
+    for (name, m) in corpus() {
+        let mut p = compile_clean(&name, &m, FuseMode::Full);
+        let cp = &mut p.comps[p.entry];
+        let Some(k) = cp.steps.iter_mut().find_map(|st| kernel_mut(&mut st.kind)) else {
+            continue; // nothing fused in this artifact
+        };
+        k.lanes = 5;
+        applied += 1;
+        let v = verify(&m, &p, Some(&SchedPlan::build(&p)));
+        assert_caught(&name, "corrupted lane width", &v);
+        assert!(
+            v.findings
+                .iter()
+                .any(|f| f.severity == Severity::Error && f.message.contains("lane width")),
+            "{name}: expected a lane-width error\n{}",
+            v.report()
+        );
+    }
+    assert!(applied >= 4, "lane-width corruption applied to only {applied} modules");
+}
+
+#[test]
+fn corrupted_panel_geometry_is_rejected() {
+    // A fused dot streams its epilogue over output-row blocks sized
+    // BLOCK / out_cols; an executor walking a different block size than
+    // the verifier re-derives would mis-tile the hot panel.
+    let mut applied = 0usize;
+    for (name, m) in corpus() {
+        let mut p = compile_clean(&name, &m, FuseMode::Full);
+        let cp = &mut p.comps[p.entry];
+        let Some(block) = cp.steps.iter_mut().find_map(|st| match &mut st.kind {
+            Kind::FusedDot { block, .. } => Some(block),
+            _ => None,
+        }) else {
+            continue; // no fused dot planned in this artifact
+        };
+        *block += 7;
+        applied += 1;
+        let v = verify(&m, &p, Some(&SchedPlan::build(&p)));
+        assert_caught(&name, "corrupted panel geometry", &v);
+        assert!(
+            v.findings
+                .iter()
+                .any(|f| f.severity == Severity::Error && f.message.contains("panel geometry")),
+            "{name}: expected a panel-geometry error\n{}",
+            v.report()
+        );
+    }
+    // synthetic:dot guarantees at least one FusedDot target; the
+    // forward/loss artifacts normally add more.
+    assert!(applied >= 1, "panel-geometry corruption applied to {applied} modules");
 }
 
 #[test]
