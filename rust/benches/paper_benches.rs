@@ -955,6 +955,236 @@ fn print_interp_ref_delta(current: &Json) {
     }
 }
 
+// --- E13: serving path — concurrent closed-loop load generator --------------
+
+/// One closed-loop client: SCORE requests back-to-back (a Zipf-sampled
+/// NN query every 16th iteration to exercise the embedding hot cache),
+/// each waiting for its reply before sending the next. Returns the
+/// per-request SCORE latencies (µs) and the NN request count.
+fn serve_client(
+    addr: &str,
+    window: usize,
+    vocab: &polyglot_gpu::text::Vocab,
+    zipf: &polyglot_gpu::corpus::Zipf,
+    stop: &std::sync::atomic::AtomicBool,
+    barrier: &std::sync::Barrier,
+    seed: u64,
+) -> (Vec<u64>, u64) {
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::atomic::Ordering;
+    use std::time::Instant;
+
+    let mut rng = Rng::new(seed);
+    let mut lat = Vec::new();
+    let mut nn = 0u64;
+    let stream = match std::net::TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => {
+            barrier.wait();
+            return (lat, nn);
+        }
+    };
+    stream.set_nodelay(true).ok();
+    let Ok(mut w) = stream.try_clone() else {
+        barrier.wait();
+        return (lat, nn);
+    };
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    barrier.wait();
+    let mut i = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        let is_nn = i % 16 == 15;
+        let req = if is_nn {
+            format!("NN {} 4", vocab.word(zipf.sample(&mut rng) as u32))
+        } else {
+            let ids: Vec<String> =
+                (0..window).map(|_| zipf.sample(&mut rng).to_string()).collect();
+            format!("SCORE {}", ids.join(" "))
+        };
+        let t0 = Instant::now();
+        if writeln!(w, "{req}").is_err() {
+            break;
+        }
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(n) if n > 0 => {}
+            _ => break,
+        }
+        if is_nn {
+            nn += 1;
+        } else {
+            lat.push(t0.elapsed().as_micros() as u64);
+        }
+        i += 1;
+    }
+    let _ = writeln!(w, "QUIT");
+    (lat, nn)
+}
+
+/// Percentile (0.0..=1.0) of an already-sorted latency sample, in µs.
+fn percentile_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+fn e13() -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Barrier};
+    use std::time::Instant;
+
+    use polyglot_gpu::corpus::{generator, CorpusSpec, Zipf};
+    use polyglot_gpu::server::Server;
+    use polyglot_gpu::text::Vocab;
+
+    println!("\n=== E13 — serving path: closed-loop load generator ===");
+
+    // The served model: random params at the artifact dims, a generated
+    // vocab, and a Zipf hot cache sized to cover 80% of query mass —
+    // the same frequency model the clients below sample from.
+    let corpus = generator::generate(&CorpusSpec {
+        languages: 2,
+        tokens_per_language: 20_000,
+        lexicon: 2_000,
+        ..CorpusSpec::default()
+    });
+    let vocab = Vocab::build(corpus.sentences.iter().map(|s| s.as_slice()), 1, 20480);
+    let params = polyglot_gpu::baselines::model_ref::ModelParams::init(20480, 64, 5, 32, 0xe13);
+    let window = params.window;
+    let zipf = Arc::new(Zipf::classic(vocab.len()));
+    let hot_rows = zipf.head_len(0.8);
+
+    let mut cfg = base_cfg();
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.hot_rows = hot_rows;
+    let server = Server::start(
+        &cfg.server,
+        Path::new(&cfg.runtime.artifacts_dir).to_path_buf(),
+        vocab.clone(),
+        params,
+    )?;
+    println!(
+        "serving on {} (max_batch {}, max_wait {}ms, hot rows {hot_rows} of {} = 80% of \
+         Zipf query mass)",
+        server.addr,
+        cfg.server.max_batch,
+        cfg.server.max_wait_ms,
+        vocab.len()
+    );
+
+    let vocab = Arc::new(vocab);
+    let mut t =
+        Table::new(&["clients", "score req/s", "p50", "p99", "nn req/s", "score reqs"]);
+    let mut sweep: Vec<Json> = Vec::new();
+    let mut rps_by_level: Vec<(usize, f64)> = Vec::new();
+    for &clients in &[1usize, 8, 64, 512] {
+        let stop = Arc::new(AtomicBool::new(false));
+        // All clients connect before the measurement window opens.
+        let barrier = Arc::new(Barrier::new(clients + 1));
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let addr = server.addr.clone();
+            let (vocab, zipf) = (Arc::clone(&vocab), Arc::clone(&zipf));
+            let (stop, barrier) = (Arc::clone(&stop), Arc::clone(&barrier));
+            handles.push(std::thread::spawn(move || {
+                serve_client(&addr, window, &vocab, &zipf, &stop, &barrier, 0xe1300 + c as u64)
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(1200));
+        stop.store(true, Ordering::Relaxed);
+        let mut lats: Vec<u64> = Vec::new();
+        let mut nn_total = 0u64;
+        for h in handles {
+            let (mut l, nn) = h.join().unwrap();
+            lats.append(&mut l);
+            nn_total += nn;
+        }
+        // Includes the drain of in-flight requests, which are counted too.
+        let secs = t0.elapsed().as_secs_f64();
+        lats.sort_unstable();
+        let rps = lats.len() as f64 / secs;
+        let p50 = percentile_us(&lats, 0.50);
+        let p99 = percentile_us(&lats, 0.99);
+        t.row(&[
+            clients.to_string(),
+            format!("{rps:.0}"),
+            fmt::dur(Duration::from_micros(p50)),
+            fmt::dur(Duration::from_micros(p99)),
+            format!("{:.0}", nn_total as f64 / secs),
+            lats.len().to_string(),
+        ]);
+        let mut m = BTreeMap::new();
+        m.insert("clients".to_string(), Json::Num(clients as f64));
+        m.insert("score_reqs".to_string(), Json::Num(lats.len() as f64));
+        m.insert("nn_reqs".to_string(), Json::Num(nn_total as f64));
+        m.insert("seconds".to_string(), Json::Num(secs));
+        m.insert("throughput_rps".to_string(), Json::Num(rps));
+        m.insert("p50_us".to_string(), Json::Num(p50 as f64));
+        m.insert("p99_us".to_string(), Json::Num(p99 as f64));
+        sweep.push(Json::Obj(m));
+        rps_by_level.push((clients, rps));
+    }
+    println!("{}", t.render());
+
+    let (hits, misses) = server.cache_counters();
+    let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+    let occupancy = server.stats().occupancy_histogram();
+    let occ_str: Vec<String> = occupancy
+        .iter()
+        .filter(|&&(_, c)| c > 0)
+        .map(|&(edge, c)| format!("<={edge}:{c}"))
+        .collect();
+    println!("batch occupancy (dispatches by coalesced size): {}", occ_str.join(" "));
+    println!(
+        "embedding hot cache: {hits} hits / {misses} misses ({:.0}% hit rate)",
+        hit_rate * 100.0
+    );
+    let rps_of = |c: usize| {
+        rps_by_level.iter().find(|&&(l, _)| l == c).map(|&(_, r)| r).unwrap_or(0.0)
+    };
+    let scaling = rps_of(64) / rps_of(1).max(1e-9);
+    println!(
+        "shape check: 64-client throughput >= 3x single-client ({scaling:.1}x) {}",
+        ok(scaling >= 3.0)
+    );
+
+    let threads = polyglot_gpu::grad::resolve_threads(0);
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serve".to_string()));
+    root.insert("threads".to_string(), Json::Num(threads as f64));
+    root.insert("max_batch".to_string(), Json::Num(cfg.server.max_batch as f64));
+    root.insert("max_wait_ms".to_string(), Json::Num(cfg.server.max_wait_ms as f64));
+    root.insert("hot_rows".to_string(), Json::Num(hot_rows as f64));
+    root.insert("cache_hits".to_string(), Json::Num(hits as f64));
+    root.insert("cache_misses".to_string(), Json::Num(misses as f64));
+    root.insert("cache_hit_rate".to_string(), Json::Num(hit_rate));
+    root.insert(
+        "occupancy".to_string(),
+        Json::Arr(
+            occupancy
+                .iter()
+                .map(|&(edge, c)| {
+                    let mut o = BTreeMap::new();
+                    o.insert("batch_le".to_string(), Json::Num(edge as f64));
+                    o.insert("dispatches".to_string(), Json::Num(c as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    root.insert("scaling_64_vs_1".to_string(), Json::Num(scaling));
+    root.insert("sweep".to_string(), Json::Arr(sweep));
+    std::fs::write("BENCH_serve.json", Json::Obj(root).render())?;
+    println!("wrote BENCH_serve.json");
+    server.stop();
+    Ok(())
+}
+
 fn ok(cond: bool) -> &'static str {
     if cond {
         "[ok]"
@@ -1016,6 +1246,9 @@ fn main() -> Result<()> {
     }
     if want("e12") || want("interp") {
         e12()?;
+    }
+    if want("e13") || want("serve") {
+        e13()?;
     }
     println!("\nall selected benches complete.");
     Ok(())

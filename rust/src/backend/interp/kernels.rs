@@ -694,6 +694,38 @@ fn take_rows(src: &[f32], v: usize, d: usize, ix: &[i32], lo: usize, hi: usize, 
     }
 }
 
+/// Table view for the fused row take: a plain f32 table, or an s32
+/// table behind an absorbed `convert` prologue (the planner's gather
+/// input-side fusion) — the cast to f32 happens while copying the row.
+#[derive(Clone, Copy)]
+enum RowSrc<'a> {
+    F(&'a [f32]),
+    I(&'a [i32]),
+}
+
+fn take_rows_from(
+    src: RowSrc<'_>,
+    v: usize,
+    d: usize,
+    ix: &[i32],
+    lo: usize,
+    hi: usize,
+    dst: &mut [f32],
+) {
+    match src {
+        RowSrc::F(s) => take_rows(s, v, d, ix, lo, hi, dst),
+        RowSrc::I(s) => {
+            for r in lo..hi {
+                let row = clamp_start(ix[r] as i64, v, 1);
+                let out = &mut dst[(r - lo) * d..(r - lo + 1) * d];
+                for (o, &x) in out.iter_mut().zip(&s[row * d..(row + 1) * d]) {
+                    *o = x as f32;
+                }
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------- consumer fusion
 
 /// One streamed matmul feeding a fused epilogue chain: the operand pair,
@@ -939,7 +971,11 @@ pub fn gather_rows_fused(
     }
     let (rows, d) = (out_dims[0], out_dims[1]);
     let v = operand.dims[0];
-    let src = operand.f()?;
+    let src = match &operand.data {
+        Data::F32(s) => RowSrc::F(s.as_slice()),
+        Data::I32(s) => RowSrc::I(s.as_slice()),
+        Data::Pred(_) => bail!("fused gather: pred table is not a row-take target"),
+    };
     let Some(ix) = linear_row_indices(indices, 1, rows) else {
         bail!("fused gather: indices are not linear row ids");
     };
@@ -988,7 +1024,7 @@ pub fn gather_rows_fused(
         while r0 < rows {
             let r1 = (r0 + rows_per_block).min(rows);
             let len = (r1 - r0) * d;
-            take_rows(src, v, d, ix, r0, r1, &mut buf[..len]);
+            take_rows_from(src, v, d, ix, r0, r1, &mut buf[..len]);
             let lane = ctx.eval_block(r0 * d, r1 * d, &[BlockSlice::F(&buf[..len])], scratch)?;
             sink.push(&lane)?;
             scratch.recycle(lane);
@@ -1002,7 +1038,7 @@ pub fn gather_rows_fused(
 
 #[allow(clippy::too_many_arguments)]
 fn gather_epilogue_rows(
-    src: &[f32],
+    src: RowSrc<'_>,
     v: usize,
     d: usize,
     ix: &[i32],
@@ -1020,7 +1056,7 @@ fn gather_epilogue_rows(
         while r0 < hi {
             let r1 = (r0 + rows_per_block).min(hi);
             let len = (r1 - r0) * d;
-            take_rows(src, v, d, ix, r0, r1, &mut buf[..len]);
+            take_rows_from(src, v, d, ix, r0, r1, &mut buf[..len]);
             let lane = ctx.eval_block(r0 * d, r1 * d, &[BlockSlice::F(&buf[..len])], scratch)?;
             let Lane::F(vv) = &lane else { bail!("fused gather epilogue: lane type mismatch") };
             dst[(r0 - lo) * d..(r1 - lo) * d].copy_from_slice(vv);
@@ -1759,6 +1795,31 @@ mod tests {
         let par = gather_rows_fused(&operand, &indices, &ctx, &[rows, d], par_over(&pool))
             .unwrap();
         assert_eq!(par.f().unwrap(), serial.f().unwrap(), "parallel must be bitwise");
+    }
+
+    #[test]
+    fn gather_rows_fused_casting_take_matches_convert_then_take() {
+        // An s32 table behind an absorbed convert: the casting row take
+        // must be bitwise-identical to converting the whole table first.
+        let mut rng = Rng::new(37);
+        let (v, d, rows) = (64usize, 16usize, 1200usize);
+        let wi: Vec<i32> = (0..v * d).map(|_| rng.below(2001) as i32 - 1000).collect();
+        let int_table = Tensor::i32(wi.clone(), vec![v, d]);
+        let f32_table = Tensor::f32(wi.iter().map(|&x| x as f32).collect(), vec![v, d]);
+        let ix: Vec<i32> = (0..rows).map(|_| rng.below(v as u64) as i32).collect();
+        let indices = Tensor::i32(ix, vec![rows]);
+        let kern = epi_kernel(vec![EInstr::Load(0), EInstr::Un(UnOp::Neg)], 1, d);
+        let ctx = FusedCtx::new(&kern, vec![None], rows * d, &[0]).unwrap();
+        let want =
+            gather_rows_fused(&f32_table, &indices, &ctx, &[rows, d], Par::serial()).unwrap();
+        let got =
+            gather_rows_fused(&int_table, &indices, &ctx, &[rows, d], Par::serial()).unwrap();
+        assert_eq!(got.f().unwrap(), want.f().unwrap());
+        assert!(rows * d >= GATHER_PAR_MIN_ELEMS);
+        let pool = ThreadPool::new(4);
+        let par =
+            gather_rows_fused(&int_table, &indices, &ctx, &[rows, d], par_over(&pool)).unwrap();
+        assert_eq!(par.f().unwrap(), want.f().unwrap(), "parallel casting take must be bitwise");
     }
 
     #[test]

@@ -46,13 +46,13 @@ pub mod sched;
 pub mod value;
 pub mod verify;
 
-use std::cell::{Cell, OnceCell};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool;
 
 use super::{Backend, Buffer, Compiled};
 use crate::runtime::manifest::ArtifactSpec;
@@ -112,13 +112,6 @@ pub struct InterpExecutable {
     /// Whether kernels were compiled 8-lane (and the dot packs panels);
     /// baked into every [`Par`] this executable hands out.
     simd: bool,
-    /// Worker pool, spawned lazily on the first dispatch that actually
-    /// crosses a kernel's parallel threshold (or schedules steps). Sized
-    /// `threads - 1`: scoped joins *help* run queued work, so the
-    /// dispatching thread is the remaining runner — total concurrency
-    /// stays exactly `threads` even when step scheduling and kernel row
-    /// blocking nest on the same pool.
-    pool: OnceCell<ThreadPool>,
     /// Step dependency graphs (one per computation), present iff the
     /// plan-level scheduler is enabled for this executable.
     sched: Option<sched::SchedPlan>,
@@ -127,7 +120,7 @@ pub struct InterpExecutable {
     /// was not `off` at compile. A verdict with errors never gets here —
     /// compilation fails instead.
     verify: Option<verify::Verdict>,
-    profile: Cell<bool>,
+    profile: AtomicBool,
     stats: plan::StepStats,
 }
 
@@ -227,10 +220,9 @@ impl InterpExecutable {
             plan,
             threads: threads.max(1),
             simd,
-            pool: OnceCell::new(),
             sched,
             verify,
-            profile: Cell::new(crate::util::env::profile()),
+            profile: AtomicBool::new(crate::util::env::profile()),
             stats: plan::StepStats::default(),
         })
     }
@@ -243,9 +235,14 @@ impl InterpExecutable {
         if self.threads > 1 {
             Par {
                 threads: self.threads,
-                // threads - 1 workers + the helping dispatcher = threads
-                // concurrent runners; nested fan-outs only enqueue.
-                pool: Some(self.pool.get_or_init(|| ThreadPool::new(self.threads - 1))),
+                // The one process-wide pool: step scheduling, kernel row
+                // blocking, the sharded scatter, and server batch
+                // executions all queue here. `threads` only sets this
+                // executable's chunk counts — results are bitwise-
+                // independent of how many workers actually run them —
+                // so sharing the pool across executables (the serving
+                // path runs several concurrently) cannot change outputs.
+                pool: Some(threadpool::shared()),
                 simd: self.simd,
             }
         } else {
@@ -263,7 +260,7 @@ impl InterpExecutable {
             m: &self.module,
             plan: &self.plan,
             par: self.par(),
-            stats: self.profile.get().then_some(&self.stats),
+            stats: self.profile.load(Ordering::Relaxed).then_some(&self.stats),
             sched: self.sched.as_ref(),
         };
         decompose(exec.eval_entry(args)?)
@@ -296,7 +293,7 @@ impl InterpExecutable {
     }
 
     pub fn set_profiling(&self, on: bool) {
-        self.profile.set(on);
+        self.profile.store(on, Ordering::Relaxed);
     }
 
     /// Is the plan-level scheduler enabled (and does any computation's

@@ -24,8 +24,12 @@
 //!   producers, each a separate hot input. A dot side fed by a
 //!   single-use rank-2 `transpose` or s32/pred→f32 `convert` absorbs
 //!   that prologue into the packed-dot kernel (the contracting index
-//!   flips / the cast happens while packing). The producing/consumed
-//!   intermediate is never materialized.
+//!   flips / the cast happens while packing); likewise a gather whose
+//!   table sits behind a single-use s32→f32 `convert` (the cast folds
+//!   into the row take) or whose indices sit behind a single-use flat
+//!   `reshape` (`[r]`↔`[r,1]`, a no-op for row addressing) absorbs
+//!   those prologues into the [`Kind::FusedGather`] step. The
+//!   producing/consumed intermediate is never materialized.
 //! * **Exact liveness** — non-fused values live in a slot arena
 //!   (`n_slots` ≤ instruction count); each step's operand list carries a
 //!   precomputed *move* flag set at the slot's last read. A moved value
@@ -121,8 +125,11 @@ pub enum Kind {
     /// cache-blocked panel geometry).
     FusedDot { kernel: FusedKernel, prods: Vec<DotProd>, block: usize },
     /// An elementwise chain whose `hot` kernel input is produced by a
-    /// row-take gather, streamed per gathered-row block.
-    FusedGather { kernel: FusedKernel, hot: u16 },
+    /// row-take gather, streamed per gathered-row block. `cast` means an
+    /// absorbed s32→f32 `convert` prologue left the table s32 — rows are
+    /// promoted to f32 while being taken (the full converted table never
+    /// materializes).
+    FusedGather { kernel: FusedKernel, hot: u16, cast: bool },
 }
 
 /// One scheduled step of a compiled computation.
@@ -450,6 +457,73 @@ fn gather_row_take(comp: &Computation, p: usize, g: &GatherDims) -> bool {
             || (id.len() == 2 && id[0] == out[0] && id[1] == 1))
 }
 
+/// Absorbed prologues of a row-take gather (the gather analogue of
+/// [`DotAbsorb`]): `table`/`indices` are the effective operand
+/// instructions once single-use prologues fold into the row take, `cast`
+/// flags an absorbed s32→f32 table `convert` (rows promote to f32 while
+/// being taken), `taken` lists the absorbed prologue instructions.
+struct GatherAbsorb {
+    table: usize,
+    indices: usize,
+    cast: bool,
+    taken: Vec<usize>,
+}
+
+/// Absorption analysis for gather `p`: `Some` when the gather is the
+/// row-take pattern the fused kernel executes; prologues fold when
+/// present. Two absorb: a single-use s32→f32 `convert` feeding the
+/// table (the embedding-store-as-integers idiom — the cast happens per
+/// taken row instead of materializing a converted table), and a
+/// single-use flat `reshape` feeding the indices ([r] ↔ [r,1] — the
+/// kernel reads a flat id stream either way, so the copy is pure waste).
+fn absorb_gather(comp: &Computation, inlined: &[bool], p: usize, g: &GatherDims) -> Option<GatherAbsorb> {
+    if !gather_row_take(comp, p, g) {
+        return None;
+    }
+    let ins = &comp.instrs[p];
+    let mut ab = GatherAbsorb {
+        table: ins.operands[0],
+        indices: ins.operands[1],
+        cast: false,
+        taken: Vec::new(),
+    };
+    let single_use = |i: usize| comp.uses[i] == 1 && i != comp.root && !inlined[i];
+    let t = ab.table;
+    if matches!(comp.instrs[t].op, Op::Convert) && single_use(t) {
+        let src = comp.instrs[t].operands[0];
+        if !inlined[src] {
+            if let (Shape::Arr(Ty::F32, td), Shape::Arr(Ty::S32, sd)) =
+                (&comp.instrs[t].shape, &comp.instrs[src].shape)
+            {
+                if sd == td {
+                    ab.taken.push(t);
+                    ab.table = src;
+                    ab.cast = true;
+                }
+            }
+        }
+    }
+    let ix = ab.indices;
+    if matches!(comp.instrs[ix].op, Op::Reshape) && single_use(ix) {
+        let src = comp.instrs[ix].operands[0];
+        if !inlined[src] {
+            if let (Shape::Arr(Ty::S32, id), Shape::Arr(Ty::S32, sd)) =
+                (&comp.instrs[ix].shape, &comp.instrs[src].shape)
+            {
+                let flat = |d: &[usize]| d.len() == 1 || (d.len() == 2 && d[1] == 1);
+                if flat(id)
+                    && flat(sd)
+                    && id.iter().product::<usize>() == sd.iter().product::<usize>()
+                {
+                    ab.taken.push(ix);
+                    ab.indices = src;
+                }
+            }
+        }
+    }
+    Some(ab)
+}
+
 fn compile_comp(m: &Module, comp: &Computation, cfg: Config) -> Result<CompPlan> {
     let n = comp.instrs.len();
     let fuse = cfg.fuse != FuseMode::Off;
@@ -473,9 +547,14 @@ fn compile_comp(m: &Module, comp: &Computation, cfg: Config) -> Result<CompPlan>
     let mut reduce_prologue = vec![false; n];
     // Per-dot absorption analysis (committed only for FusedDot lowerings).
     let mut dot_absorb: Vec<Option<DotAbsorb>> = (0..n).map(|_| None).collect();
+    // Per-gather absorption analysis (committed for FusedGather lowerings).
+    let mut gather_absorb: Vec<Option<GatherAbsorb>> = (0..n).map(|_| None).collect();
     // Dots that lower to a standalone FusedDot (identity epilogue) just
     // to pick up their absorbed transpose/convert prologue.
     let mut standalone_dot = vec![false; n];
+    // Gathers likewise: standalone FusedGather (identity epilogue) just
+    // to pick up an absorbed convert/reshape prologue.
+    let mut standalone_gather = vec![false; n];
     if fuse {
         let fusable: Vec<bool> = (0..n).map(|i| fusion::fusable_node(comp, i)).collect();
         let leaf_ok = |i: usize| {
@@ -567,6 +646,9 @@ fn compile_comp(m: &Module, comp: &Computation, cfg: Config) -> Result<CompPlan>
         if full {
             for d in 0..n {
                 dot_absorb[d] = absorb_dot(comp, &inlined, d);
+                if let Op::Gather(g) = &comp.instrs[d].op {
+                    gather_absorb[d] = absorb_gather(comp, &inlined, d, g);
+                }
             }
             for p in 0..n {
                 if inlined[p] || comp.uses[p] != 1 || p == comp.root {
@@ -587,7 +669,7 @@ fn compile_comp(m: &Module, comp: &Computation, cfg: Config) -> Result<CompPlan>
                 let is_dot = matches!(&comp.instrs[p].op, Op::Dot { .. });
                 let eligible = match &comp.instrs[p].op {
                     Op::Dot { .. } => dot_absorb[p].is_some(),
-                    Op::Gather(g) => gather_row_take(comp, p, g),
+                    Op::Gather(_) => gather_absorb[p].is_some(),
                     _ => false,
                 };
                 if !eligible {
@@ -618,7 +700,15 @@ fn compile_comp(m: &Module, comp: &Computation, cfg: Config) -> Result<CompPlan>
                         }
                     }
                 } else if gather_of_root[root] != usize::MAX {
-                    inlined[gather_of_root[root]] = true;
+                    let p = gather_of_root[root];
+                    inlined[p] = true;
+                    for t in gather_absorb[p]
+                        .as_ref()
+                        .map(|a| a.taken.clone())
+                        .unwrap_or_default()
+                    {
+                        inlined[t] = true;
+                    }
                 }
             }
             // Standalone absorbed dots: not folded into any chain, but
@@ -635,6 +725,23 @@ fn compile_comp(m: &Module, comp: &Computation, cfg: Config) -> Result<CompPlan>
                 }
                 standalone_dot[d] = true;
                 for t in ab.taken().collect::<Vec<_>>() {
+                    inlined[t] = true;
+                }
+            }
+            // Standalone absorbed gathers, same deal: no chain claimed
+            // the gather, but a convert/reshape prologue is absorbable —
+            // lower as FusedGather with an identity epilogue so the
+            // prologue never materializes.
+            for p in 0..n {
+                if inlined[p] {
+                    continue;
+                }
+                let Some(ab) = &gather_absorb[p] else { continue };
+                if ab.taken.is_empty() {
+                    continue;
+                }
+                standalone_gather[p] = true;
+                for &t in &ab.taken {
                     inlined[t] = true;
                 }
             }
@@ -713,6 +820,24 @@ fn compile_comp(m: &Module, comp: &Computation, cfg: Config) -> Result<CompPlan>
             let args = vec![(slot_of[ab.a.src], false), (slot_of[ab.b.src], false)];
             let (_, od) = ins.shape.arr()?;
             (Kind::FusedDot { kernel, prods, block: dot_block(od) }, args, OpLabel::FusedDot)
+        } else if standalone_gather[i] {
+            // A gather that only absorbed its convert/reshape prologue:
+            // row-take kernel with the identity epilogue.
+            let ab = gather_absorb[i].as_ref().expect("standalone gather lost its analysis");
+            let kernel = FusedKernel {
+                prog: vec![EInstr::Load(0)],
+                n_inputs: 1,
+                out_ty: Ty::F32,
+                inner: 0,
+                lanes,
+                ops: Vec::new(),
+            };
+            let args = vec![(slot_of[ab.table], false), (slot_of[ab.indices], false)];
+            (
+                Kind::FusedGather { kernel, hot: 0, cast: ab.cast },
+                args,
+                OpLabel::FusedGather,
+            )
         } else if has_inlined {
             if reduce_epi[i] != usize::MAX {
                 // Chain root fed by a folded reduce: prologue kernel +
@@ -790,15 +915,15 @@ fn compile_comp(m: &Module, comp: &Computation, cfg: Config) -> Result<CompPlan>
                     .position(|&o| o == p)
                     .context("producer missing from fused kernel inputs")?
                     as u16;
+                let ab = gather_absorb[p].as_ref().expect("folded gather lost its analysis");
                 let mut args: Vec<(usize, bool)> = ext
                     .iter()
                     .filter(|&&o| o != p)
                     .map(|&o| (slot_of[o], false))
                     .collect();
-                for &o in &comp.instrs[p].operands {
-                    args.push((slot_of[o], false));
-                }
-                (Kind::FusedGather { kernel, hot }, args, OpLabel::FusedGather)
+                args.push((slot_of[ab.table], false));
+                args.push((slot_of[ab.indices], false));
+                (Kind::FusedGather { kernel, hot, cast: ab.cast }, args, OpLabel::FusedGather)
             } else {
                 let (kernel, ext) = fusion::compile(comp, i, &inlined, &[], lanes)
                     .with_context(|| format!("fusing chain rooted at {}", ins.name))?;
@@ -1092,7 +1217,7 @@ impl Exec<'_> {
                     .collect::<Result<_>>()?;
                 Ok(Value::Arr(kernels::dot_fused(&dot_args, &ctx, *block, out_dims, self.par)?))
             }
-            Kind::FusedGather { kernel, hot } => {
+            Kind::FusedGather { kernel, hot, cast } => {
                 let (_, out_dims) = ins.shape.arr()?;
                 let n_other = kernel.n_inputs - 1;
                 if vals.len() != n_other + 2 {
@@ -1100,6 +1225,9 @@ impl Exec<'_> {
                 }
                 let operand = vals[n_other].arr()?;
                 let indices = vals[n_other + 1].arr()?;
+                if *cast != matches!(operand.data, super::value::Data::I32(_)) {
+                    bail!("fused gather: cast={} but table dtype disagrees", cast);
+                }
                 let ctx = hot_ctx(kernel, &vals[..n_other], &[*hot], out_dims)?;
                 Ok(Value::Arr(kernels::gather_rows_fused(
                     operand, indices, &ctx, out_dims, self.par,
@@ -1615,10 +1743,72 @@ ENTRY e.5 {
             .iter()
             .find(|s| matches!(s.kind, Kind::FusedGather { .. }))
             .expect("row-take gather must fuse into its consumer");
-        let Kind::FusedGather { kernel, hot } = &step.kind else { unreachable!() };
+        let Kind::FusedGather { kernel, hot, cast } = &step.kind else { unreachable!() };
         assert_eq!(kernel.ops, vec!["negate"]);
         assert_eq!(*hot, 0);
+        assert!(!*cast, "plain f32 table needs no casting take");
         assert_eq!(step.args.len(), 2, "operand + indices slots");
+        assert_plan_invariants(&p);
+    }
+
+    #[test]
+    fn gather_prologues_absorb_convert_and_reshape() {
+        // Single-use s32->f32 convert feeding the gather table plus a
+        // single-use [3]->[3,1] reshape feeding the indices: both fold
+        // into the FusedGather step, so the full plan is exactly one
+        // step shorter per absorbed prologue relative to FuseMode::Off.
+        let text = "HloModule m
+ENTRY e.7 {
+  Arg_0.1 = s32[6,4]{1,0} parameter(0)
+  Arg_1.2 = s32[3]{0} parameter(1)
+  convert.3 = f32[6,4]{1,0} convert(Arg_0.1)
+  reshape.4 = s32[3,1]{1,0} reshape(Arg_1.2)
+  gather.5 = f32[3,4]{1,0} gather(convert.3, reshape.4), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,4}
+  ROOT negate.6 = f32[3,4]{1,0} negate(gather.5)
+}
+";
+        let (_, off) = entry_plan(text, FuseMode::Off);
+        let (_, p) = entry_plan(text, FuseMode::Full);
+        let cp = &p.comps[p.entry];
+        let step = cp
+            .steps
+            .iter()
+            .find(|s| matches!(s.kind, Kind::FusedGather { .. }))
+            .expect("absorbed gather must lower as FusedGather");
+        let Kind::FusedGather { kernel, hot, cast } = &step.kind else { unreachable!() };
+        assert_eq!(kernel.ops, vec!["negate"]);
+        assert_eq!(*hot, 0);
+        assert!(*cast, "s32 table behind a single-use convert must set cast");
+        assert_eq!(step.args.len(), 2, "raw table + raw indices slots");
+        // Off-plan keeps convert + reshape + gather + negate as separate
+        // steps (plus the two parameters); full-plan folds all four into
+        // the one FusedGather.
+        assert_eq!(off.comps[off.entry].steps.len(), 6);
+        assert_eq!(cp.steps.len(), 3, "prologues and epilogue all absorbed");
+        assert_plan_invariants(&p);
+    }
+
+    #[test]
+    fn standalone_gather_absorbs_prologue_without_epilogue() {
+        // The gather IS the root: no chain claims it, but the convert
+        // prologue is still absorbable via the identity-kernel lowering.
+        let text = "HloModule m
+ENTRY e.8 {
+  Arg_0.1 = s32[6,4]{1,0} parameter(0)
+  Arg_1.2 = s32[3,1]{1,0} parameter(1)
+  convert.3 = f32[6,4]{1,0} convert(Arg_0.1)
+  ROOT gather.4 = f32[3,4]{1,0} gather(convert.3, Arg_1.2), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,4}
+}
+";
+        let (_, p) = entry_plan(text, FuseMode::Full);
+        let cp = &p.comps[p.entry];
+        assert_eq!(cp.steps.len(), 3, "convert folded into the gather step");
+        let Kind::FusedGather { kernel, hot, cast } = &cp.steps.last().unwrap().kind else {
+            panic!("root gather with absorbable prologue must lower as FusedGather")
+        };
+        assert!(kernel.ops.is_empty(), "identity epilogue");
+        assert_eq!(*hot, 0);
+        assert!(*cast);
         assert_plan_invariants(&p);
     }
 

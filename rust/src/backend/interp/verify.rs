@@ -407,8 +407,8 @@ fn check_shapes(ck: &mut Checker, m: &Module, comp: &Computation, cp: &CompPlan,
             Kind::FusedDot { kernel, prods, block } => {
                 check_fused_dot(ck, comp, si, step, ins, kernel, prods, *block, specs)
             }
-            Kind::FusedGather { kernel, hot } => {
-                check_fused_gather(ck, comp, si, step, ins, kernel, *hot, specs)
+            Kind::FusedGather { kernel, hot, cast } => {
+                check_fused_gather(ck, comp, si, step, ins, kernel, *hot, *cast, specs)
             }
         }
     }
@@ -1447,6 +1447,7 @@ fn check_fused_gather(
     ins: &super::parser::Instr,
     kernel: &FusedKernel,
     hot: u16,
+    cast: bool,
     specs: &[SlotSpec],
 ) {
     let cname = comp.name.as_str();
@@ -1468,16 +1469,30 @@ fn check_fused_gather(
         );
         return;
     }
-    // The streamed producer: a row-take gather — f32 [v, d] table, one
-    // s32 row id per output row, full-width rows.
+    // The streamed producer: a row-take gather — [v, d] table (f32, or
+    // s32 behind an absorbed `convert` prologue when `cast` — the rows
+    // are promoted to f32 while being taken), one s32 row id per output
+    // row, full-width rows. An absorbed indices `reshape` may have
+    // swapped [r] for [r,1] or back; both are the same flat id stream.
     let (t_slot, _) = step.args[n_other];
     let (i_slot, _) = step.args[n_other + 1];
     let (Some((tt, td)), Some((ti, id))) = (arr_spec(specs, t_slot), arr_spec(specs, i_slot)) else {
         ck.error(cname, Some(si), None, "gather operand slots are undefined or tuples".into());
         return;
     };
-    if tt != Ty::F32 || td.len() != 2 {
-        ck.error(cname, Some(si), Some(t_slot), "fused gather table must be a rank-2 f32 array".into());
+    let want_tt = if cast { Ty::S32 } else { Ty::F32 };
+    if tt != want_tt || td.len() != 2 {
+        ck.error(
+            cname,
+            Some(si),
+            Some(t_slot),
+            format!(
+                "fused gather table must be a rank-2 {} array (cast={cast}), got rank-{} {}",
+                want_tt.name(),
+                td.len(),
+                tt.name()
+            ),
+        );
         return;
     }
     let rows = match (ti, id) {

@@ -27,8 +27,11 @@ use xla::Literal;
 
 use crate::runtime::manifest::ArtifactSpec;
 
-/// A compiled artifact, ready to execute.
-pub trait Compiled {
+/// A compiled artifact, ready to execute. `Send + Sync` is part of the
+/// contract: the serving path shares one compiled plan across every
+/// request-handling thread, so execution state must be interior-mutable
+/// in a thread-safe way (atomics / locks, not `Cell`/`RefCell`).
+pub trait Compiled: Send + Sync {
     /// Execute with host literals. Returns the decomposed outputs: the
     /// tuple elements for tupled roots, a single-element vec otherwise.
     fn execute(&self, inputs: &[&Literal]) -> Result<Vec<Literal>>;
@@ -77,7 +80,7 @@ pub trait Compiled {
 }
 
 /// An execution backend: compiles artifacts into [`Compiled`] handles.
-pub trait Backend {
+pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
     fn compile(&self, spec: &ArtifactSpec) -> Result<Box<dyn Compiled>>;
 }

@@ -20,6 +20,12 @@
 //!   shared runners makes a hard vectorization-ratio gate flaky, and the
 //!   interp-equivalence matrix already gates SIMD *correctness*. A
 //!   reference without these fields (pre-SIMD snapshot) stays valid.
+//! * **serving fields**: if E13's `BENCH_serve.json` is present
+//!   (`--serve`), its per-concurrency throughput/latency, cache hit
+//!   rate, and 64-vs-1 scaling are printed as context only. Load-gen
+//!   numbers on shared runners swing far beyond any honest tolerance,
+//!   so they never gate and need no reference snapshot; a missing or
+//!   unparseable serve file is noted and skipped.
 //!
 //! `--refresh` rewrites the reference from the current JSON instead of
 //! comparing: drops the `provisional` flag, records the runner's core
@@ -29,7 +35,7 @@
 //!
 //! ```text
 //! bench_check [--current BENCH_interp.json] [--reference BENCH_interp.ref.json]
-//!             [--tolerance 0.25] [--refresh]
+//!             [--tolerance 0.25] [--serve BENCH_serve.json] [--refresh]
 //! ```
 //!
 //! Exit status: 0 = gate passed (or refresh written), 1 = regression,
@@ -44,6 +50,7 @@ struct Args {
     current: String,
     reference: String,
     tolerance: f64,
+    serve: String,
     refresh: bool,
 }
 
@@ -52,6 +59,7 @@ fn parse_args() -> Result<Args, String> {
         current: "BENCH_interp.json".to_string(),
         reference: "BENCH_interp.ref.json".to_string(),
         tolerance: 0.25,
+        serve: "BENCH_serve.json".to_string(),
         refresh: false,
     };
     let mut it = std::env::args().skip(1);
@@ -65,10 +73,11 @@ fn parse_args() -> Result<Args, String> {
                 args.tolerance =
                     v.parse().map_err(|_| format!("--tolerance {v:?} is not a number"))?;
             }
+            "--serve" => args.serve = take("--serve")?,
             "--refresh" => args.refresh = true,
             "--help" | "-h" => {
                 return Err("usage: bench_check [--current F] [--reference F] \
-                            [--tolerance 0.25] [--refresh]"
+                            [--tolerance 0.25] [--serve F] [--refresh]"
                     .to_string())
             }
             other => return Err(format!("unknown argument {other:?} (see --help)")),
@@ -134,6 +143,41 @@ fn refresh(current: &Json, reference_path: &str) -> Result<(), String> {
         .map_err(|e| format!("cannot write {reference_path}: {e}"))?;
     println!("refreshed {reference_path} from current run (provisional flag dropped)");
     Ok(())
+}
+
+/// Context-only rendering of E13's serving bench: one line per
+/// concurrency level plus the cache hit rate and 64-vs-1 scaling.
+/// Serving numbers never gate (load-gen results on shared runners swing
+/// far beyond any honest tolerance), so this returns lines to print,
+/// not failures to count; a malformed document yields no lines.
+fn serve_context(j: &Json) -> Vec<String> {
+    let mut lines = Vec::new();
+    if let Some(sweep) = j.get("sweep").and_then(|s| s.as_arr()) {
+        for e in sweep {
+            let (Some(clients), Some(rps)) = (
+                e.get("clients").and_then(|v| v.as_f64()),
+                e.get("throughput_rps").and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            let p50 = e.get("p50_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let p99 = e.get("p99_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            lines.push(format!(
+                "  ok serve clients={clients:<4.0} {rps:7.0} req/s  p50 {p50:.0}us  \
+                 p99 {p99:.0}us (context)"
+            ));
+        }
+    }
+    if let Some(rate) = j.get("cache_hit_rate").and_then(|v| v.as_f64()) {
+        lines.push(format!(
+            "  ok serve embedding hot-cache hit rate {:.0}% (context)",
+            rate * 100.0
+        ));
+    }
+    if let Some(s) = j.get("scaling_64_vs_1").and_then(|v| v.as_f64()) {
+        lines.push(format!("  ok serve 64-client vs 1-client scaling {s:.1}x (context)"));
+    }
+    lines
 }
 
 fn check(current: &Json, reference: &Json, tolerance: f64) -> u32 {
@@ -251,6 +295,14 @@ fn main() -> ExitCode {
         }
     };
     let failures = check(&current, &reference, args.tolerance);
+    match load(&args.serve) {
+        Ok(serve) => {
+            for line in serve_context(&serve) {
+                println!("{line}");
+            }
+        }
+        Err(_) => println!("(no {} in the working dir; serving context skipped)", args.serve),
+    }
     if failures > 0 {
         eprintln!("bench_check: {failures} failure(s)");
         ExitCode::FAILURE
@@ -323,6 +375,53 @@ mod tests {
             e.insert("simd_speedup".into(), Json::Num(0.5));
         }
         assert_eq!(check(&current, &reference, 0.25), 0);
+    }
+
+    fn serve_doc() -> Json {
+        let mut level = BTreeMap::new();
+        level.insert("clients".into(), Json::Num(64.0));
+        level.insert("throughput_rps".into(), Json::Num(1234.0));
+        level.insert("p50_us".into(), Json::Num(800.0));
+        level.insert("p99_us".into(), Json::Num(4200.0));
+        let mut m = BTreeMap::new();
+        m.insert("bench".into(), Json::Str("serve".into()));
+        m.insert("sweep".into(), Json::Arr(vec![Json::Obj(level)]));
+        m.insert("cache_hit_rate".into(), Json::Num(0.87));
+        m.insert("scaling_64_vs_1".into(), Json::Num(5.2));
+        Json::Obj(m)
+    }
+
+    #[test]
+    fn serve_fields_are_context_only() {
+        // The serving bench renders context lines but contributes zero
+        // failures — it has no gate and no reference snapshot.
+        let lines = serve_context(&serve_doc());
+        assert_eq!(lines.len(), 3);
+        assert!(lines.iter().all(|l| l.contains("(context)")), "{lines:?}");
+        assert!(lines.iter().all(|l| !l.contains("FAIL")), "{lines:?}");
+        assert!(lines[0].contains("clients=64"), "{}", lines[0]);
+        assert!(lines[1].contains("87%"), "{}", lines[1]);
+        assert!(lines[2].contains("5.2x"), "{}", lines[2]);
+    }
+
+    #[test]
+    fn malformed_serve_doc_yields_no_lines() {
+        assert!(serve_context(&Json::Num(3.0)).is_empty());
+        let mut m = BTreeMap::new();
+        m.insert("sweep".into(), Json::Str("not an array".into()));
+        assert!(serve_context(&Json::Obj(m)).is_empty());
+    }
+
+    #[test]
+    fn serve_doc_does_not_perturb_the_interp_gate() {
+        // An interp reference checked against an interp current run
+        // yields the same verdict whether or not a serve doc exists —
+        // the serve path is additive context, outside check() entirely.
+        let reference = sweep_doc(8, 0.010, false);
+        let current = sweep_doc(8, 0.012, false);
+        let before = check(&current, &reference, 0.25);
+        let _ = serve_context(&serve_doc());
+        assert_eq!(check(&current, &reference, 0.25), before);
     }
 
     #[test]

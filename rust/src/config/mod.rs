@@ -205,11 +205,20 @@ pub struct ServerCfg {
     pub max_batch: usize,
     pub max_wait_ms: u64,
     pub threads: usize,
+    /// Embedding-store hot cache size in rows (0 = no cache). The
+    /// `POLYGLOT_SERVE_HOT_ROWS` knob overrides this at server start.
+    pub hot_rows: usize,
 }
 
 impl Default for ServerCfg {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7878".into(), max_batch: 32, max_wait_ms: 5, threads: 4 }
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            max_batch: 32,
+            max_wait_ms: 5,
+            threads: 4,
+            hot_rows: 1024,
+        }
     }
 }
 
@@ -307,6 +316,7 @@ impl Config {
                 self.server.max_wait_ms = v.as_i64().context("expected int")? as u64
             }
             "server.threads" => self.server.threads = usize_of(v)?,
+            "server.hot_rows" => self.server.hot_rows = usize_of(v)?,
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -367,6 +377,7 @@ mod tests {
 
             [server]
             addr = "127.0.0.1:9999"
+            hot_rows = 64
         "#;
         let map = toml::parse(doc).unwrap();
         let cfg = Config::from_map(&map).unwrap();
@@ -374,6 +385,7 @@ mod tests {
         assert_eq!(cfg.training.backend, Backend::Cpu);
         assert_eq!(cfg.training.batch, 64);
         assert_eq!(cfg.server.addr, "127.0.0.1:9999");
+        assert_eq!(cfg.server.hot_rows, 64);
         // untouched values keep defaults
         assert_eq!(cfg.model.window, 5);
     }

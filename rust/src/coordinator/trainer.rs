@@ -32,7 +32,7 @@
 //! steps per dispatch (`train_multi_opt_*`) to amortize the tuple-literal
 //! round-trip.
 
-use std::rc::Rc;
+use std::sync::Arc;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -58,9 +58,9 @@ pub enum ModelSize {
 /// Artifact execution state (runs on the runtime's selected backend).
 struct ArtifactEngine {
     params: Vec<Literal>, // e, w1, b1, w2, b2
-    step_exe: Rc<Executable>,
-    row_exe: Option<Rc<Executable>>,   // gpu-naive per-row scatter
-    multi_exe: Option<Rc<Executable>>, // fused K-step artifact
+    step_exe: Arc<Executable>,
+    row_exe: Option<Arc<Executable>>,   // gpu-naive per-row scatter
+    multi_exe: Option<Arc<Executable>>, // fused K-step artifact
 }
 
 /// Pure-Rust execution state (the `host` backend).

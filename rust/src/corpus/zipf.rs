@@ -50,6 +50,18 @@ impl Zipf {
         let lo = if k == 0 { 0.0 } else { self.cdf[k - 1] };
         (self.cdf[k] - lo) / total
     }
+
+    /// Smallest prefix of ranks (the Zipf head) whose cumulative mass
+    /// reaches `target_mass` — how the serving embedding store sizes its
+    /// hot-row cache: caching that many frequency-ranked rows makes the
+    /// expected hit rate under Zipfian lookups at least `target_mass`.
+    pub fn head_len(&self, target_mass: f64) -> usize {
+        let total = *self.cdf.last().unwrap();
+        let want = target_mass.clamp(0.0, 1.0) * total;
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&want).unwrap()) {
+            Ok(k) | Err(k) => (k + 1).min(self.cdf.len()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -88,6 +100,22 @@ mod tests {
                 z.pmf(k)
             );
         }
+    }
+
+    #[test]
+    fn head_len_covers_target_mass() {
+        let z = Zipf::classic(1000);
+        for target in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            let k = z.head_len(target);
+            assert!(k >= 1 && k <= 1000);
+            let mass: f64 = (0..k).map(|r| z.pmf(r)).sum();
+            assert!(mass + 1e-12 >= target, "head_len({target}) = {k} carries only {mass}");
+            if k > 1 {
+                let less: f64 = (0..k - 1).map(|r| z.pmf(r)).sum();
+                assert!(less < target, "head_len({target}) = {k} is not minimal");
+            }
+        }
+        assert_eq!(z.head_len(1.0), 1000);
     }
 
     #[test]

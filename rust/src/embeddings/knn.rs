@@ -39,6 +39,33 @@ pub fn top_k(
     scored
 }
 
+/// Streaming variant of [`top_k`] for stores whose rows are not one
+/// resident slice (the paged embedding store): `fetch` fills the row
+/// buffer for each index in turn, and the scan keeps scoring order
+/// identical to [`top_k`] (same traversal, same comparator), so the two
+/// agree exactly on resident data.
+pub fn top_k_rows<E>(
+    n: usize,
+    dim: usize,
+    query: &[f32],
+    k: usize,
+    exclude: &[usize],
+    mut fetch: impl FnMut(usize, &mut [f32]) -> Result<(), E>,
+) -> Result<Vec<(usize, f32)>, E> {
+    let mut row = vec![0.0f32; dim];
+    let mut scored: Vec<(usize, f32)> = Vec::with_capacity(n);
+    for i in 0..n {
+        if exclude.contains(&i) {
+            continue;
+        }
+        fetch(i, &mut row)?;
+        scored.push((i, cosine(&row, query)));
+    }
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    scored.truncate(k);
+    Ok(scored)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,6 +88,18 @@ mod tests {
         let all = top_k(&m, 2, &[1.0, 0.0], 10, &[]);
         assert_eq!(all.len(), 4);
         assert_eq!(all[0].0, 0);
+    }
+
+    #[test]
+    fn streaming_scan_matches_slice_scan() {
+        let m = vec![1.0, 0.0, 0.9, 0.1, 0.0, 1.0, 1.0, 0.05];
+        let want = top_k(&m, 2, &[1.0, 0.0], 3, &[2]);
+        let got = top_k_rows(4, 2, &[1.0, 0.0], 3, &[2], |i, buf: &mut [f32]| {
+            buf.copy_from_slice(&m[i * 2..(i + 1) * 2]);
+            Ok::<(), std::convert::Infallible>(())
+        })
+        .unwrap();
+        assert_eq!(got, want);
     }
 
     #[test]

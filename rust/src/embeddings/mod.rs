@@ -4,5 +4,5 @@
 pub mod knn;
 pub mod store;
 
-pub use knn::{cosine, top_k};
+pub use knn::{cosine, top_k, top_k_rows};
 pub use store::EmbeddingStore;

@@ -1,59 +1,217 @@
-//! Word-keyed view over a trained embedding matrix + vocabulary.
+//! Word-keyed view over a trained embedding matrix + vocabulary, with a
+//! Zipf-aware serving layout.
+//!
+//! Rows live in one of two backings: **resident** (the whole `[vocab,
+//! dim]` matrix in memory — the training-path store) or **paged**
+//! (rows read from the checkpoint file by offset, so a serving process
+//! never materializes a table it mostly won't touch). Either way the
+//! store keeps a contiguous **hot cache** of the first `hot_rows`
+//! frequency-ranked rows: vocabulary ids are assigned in descending
+//! count order, so under the Zipfian lookup distribution the corpus
+//! module models, caching the id-prefix head captures most lookups —
+//! [`crate::corpus::zipf::Zipf::head_len`] turns a target hit-rate mass
+//! into the row count. Hit/miss counters are atomic; handler threads
+//! share one store behind an `Arc`.
 
-use anyhow::{bail, Result};
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
 
 use crate::baselines::model_ref::ModelParams;
 use crate::text::vocab::Vocab;
 
-use super::knn::top_k;
+use super::knn::top_k_rows;
+
+/// Byte offset of the first `e`-matrix f32 in a `PGCK` v1 checkpoint:
+/// 4-byte magic + 5 little-endian u32 header words + the u64 tensor
+/// length that precedes the raw rows.
+const PGCK_E_OFFSET: u64 = 4 + 5 * 4 + 8;
+
+enum Backing {
+    Resident(Vec<f32>),
+    /// Rows paged from `file` starting at byte `base` (row `r` spans
+    /// `base + r·dim·4 ..`), one positioned read per cold lookup.
+    Paged { file: File, base: u64 },
+}
 
 pub struct EmbeddingStore {
     pub vocab: Vocab,
     pub dim: usize,
-    e: Vec<f32>,
+    rows: usize,
+    backing: Backing,
+    /// First `hot.len()/dim` rows, resident and contiguous regardless of
+    /// backing — the Zipf head.
+    hot: Vec<f32>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl EmbeddingStore {
     pub fn new(vocab: Vocab, e: Vec<f32>, dim: usize) -> Result<EmbeddingStore> {
-        if e.len() % dim != 0 {
+        if dim == 0 || e.len() % dim != 0 {
             bail!("embedding matrix not divisible by dim");
         }
         if vocab.len() > e.len() / dim {
             bail!("vocab ({}) larger than embedding rows ({})", vocab.len(), e.len() / dim);
         }
-        Ok(EmbeddingStore { vocab, dim, e })
+        let rows = e.len() / dim;
+        Ok(EmbeddingStore {
+            vocab,
+            dim,
+            rows,
+            backing: Backing::Resident(e),
+            hot: Vec::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
     }
 
     pub fn from_params(vocab: Vocab, p: &ModelParams) -> Result<EmbeddingStore> {
         EmbeddingStore::new(vocab, p.e.clone(), p.dim)
     }
 
-    pub fn vector(&self, word: &str) -> &[f32] {
-        let id = self.vocab.id(word) as usize;
-        &self.e[id * self.dim..(id + 1) * self.dim]
+    /// Open a `PGCK` checkpoint and page embedding rows from it on
+    /// demand instead of loading the matrix. Only the header is read
+    /// eagerly (plus the hot cache once [`Self::warm`] runs).
+    pub fn paged(vocab: Vocab, checkpoint: &Path) -> Result<EmbeddingStore> {
+        let mut file = File::open(checkpoint)
+            .with_context(|| format!("opening {}", checkpoint.display()))?;
+        let mut header = [0u8; PGCK_E_OFFSET as usize];
+        file.read_exact(&mut header).context("reading checkpoint header")?;
+        if &header[..4] != b"PGCK" {
+            bail!("{} is not a polyglot checkpoint", checkpoint.display());
+        }
+        let word = |i: usize| {
+            u32::from_le_bytes([header[4 + i * 4], header[5 + i * 4], header[6 + i * 4], header[7 + i * 4]])
+        };
+        let (version, rows, dim) = (word(0), word(1) as usize, word(2) as usize);
+        if version != 1 {
+            bail!("checkpoint version {version} unsupported");
+        }
+        let elems = u64::from_le_bytes(header[24..32].try_into().unwrap()) as usize;
+        if dim == 0 || elems != rows * dim {
+            bail!("checkpoint e tensor is {elems} elements, expected {rows}x{dim}");
+        }
+        if vocab.len() > rows {
+            bail!("vocab ({}) larger than embedding rows ({rows})", vocab.len());
+        }
+        Ok(EmbeddingStore {
+            vocab,
+            dim,
+            rows,
+            backing: Backing::Paged { file, base: PGCK_E_OFFSET },
+            hot: Vec::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
     }
 
-    pub fn vector_by_id(&self, id: u32) -> &[f32] {
-        let id = id as usize;
-        &self.e[id * self.dim..(id + 1) * self.dim]
+    /// Populate the hot cache with the first `hot_rows` rows (clamped
+    /// to the table). Resets the hit/miss counters so rates measure the
+    /// warmed configuration.
+    pub fn warm(&mut self, hot_rows: usize) -> Result<()> {
+        let n = hot_rows.min(self.rows);
+        let mut hot = vec![0.0f32; n * self.dim];
+        for r in 0..n {
+            let (lo, hi) = (r * self.dim, (r + 1) * self.dim);
+            self.read_row(r, &mut hot[lo..hi])?;
+        }
+        self.hot = hot;
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        Ok(())
     }
 
-    pub fn matrix(&self) -> &[f32] {
-        &self.e
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn hot_rows(&self) -> usize {
+        self.hot.len() / self.dim
+    }
+
+    /// (hits, misses) since the last [`Self::warm`].
+    pub fn cache_counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Cold read straight from the backing, no cache, no accounting.
+    fn read_row(&self, id: usize, dst: &mut [f32]) -> Result<()> {
+        match &self.backing {
+            Backing::Resident(e) => {
+                dst.copy_from_slice(&e[id * self.dim..(id + 1) * self.dim]);
+                Ok(())
+            }
+            Backing::Paged { file, base } => {
+                let mut bytes = vec![0u8; self.dim * 4];
+                read_at(file, base + (id * self.dim * 4) as u64, &mut bytes)
+                    .with_context(|| format!("paging embedding row {id}"))?;
+                for (x, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Fill `dst` with row `id`, serving the Zipf head from the hot
+    /// cache (and counting hit/miss either way).
+    pub fn fetch(&self, id: usize, dst: &mut [f32]) -> Result<()> {
+        if id >= self.rows {
+            bail!("embedding row {id} out of range {}", self.rows);
+        }
+        if (id + 1) * self.dim <= self.hot.len() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            dst.copy_from_slice(&self.hot[id * self.dim..(id + 1) * self.dim]);
+            return Ok(());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.read_row(id, dst)
+    }
+
+    pub fn vector(&self, word: &str) -> Vec<f32> {
+        self.vector_by_id(self.vocab.id(word))
+    }
+
+    pub fn vector_by_id(&self, id: u32) -> Vec<f32> {
+        let mut row = vec![0.0f32; self.dim];
+        self.fetch(id as usize, &mut row).expect("embedding row read");
+        row
     }
 
     /// Nearest neighbours of `word` among vocabulary entries (excluding
-    /// itself and the specials).
+    /// itself and the specials). Streams rows through [`Self::fetch`],
+    /// so the Zipf head is served from cache on every backing.
     pub fn neighbors(&self, word: &str, k: usize) -> Vec<(String, f32)> {
         let id = self.vocab.id(word) as usize;
-        let q = self.vector(word);
-        // restrict scan to actual vocab rows
-        let rows = &self.e[..self.vocab.len() * self.dim];
-        top_k(rows, self.dim, q, k, &[0, 1, id])
-            .into_iter()
-            .map(|(i, s)| (self.vocab.word(i as u32).to_string(), s))
-            .collect()
+        let q = self.vector_by_id(id as u32);
+        top_k_rows(self.vocab.len(), self.dim, &q, k, &[0, 1, id], |r, buf: &mut [f32]| {
+            self.fetch(r, buf)
+        })
+        .expect("embedding row read")
+        .into_iter()
+        .map(|(i, s)| (self.vocab.word(i as u32).to_string(), s))
+        .collect()
     }
+}
+
+/// Positioned read: `pread` on unix (no seek state shared across
+/// threads), a seek+read fallback elsewhere (single-threaded use only).
+#[cfg(unix)]
+fn read_at(file: &File, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset)
+}
+
+#[cfg(not(unix))]
+fn read_at(file: &File, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = file;
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(buf)
 }
 
 #[cfg(test)]
@@ -98,5 +256,44 @@ mod tests {
         let vocab = Vocab::build(sents.iter().map(|s| s.as_slice()), 1, 10);
         assert!(EmbeddingStore::new(vocab.clone(), vec![0.0; 7], 2).is_err());
         assert!(EmbeddingStore::new(vocab, vec![0.0; 2], 2).is_err());
+    }
+
+    #[test]
+    fn hot_cache_serves_head_and_counts() {
+        let mut s = store();
+        s.warm(3).unwrap();
+        assert_eq!(s.hot_rows(), 3);
+        let mut row = [0.0f32; 2];
+        s.fetch(2, &mut row).unwrap(); // head -> hit
+        assert_eq!(row, [1.0, 0.0]);
+        s.fetch(5, &mut row).unwrap(); // tail -> miss
+        assert_eq!(row, [-1.0, 0.0]);
+        assert_eq!(s.cache_counters(), (1, 1));
+        assert!(s.fetch(6, &mut row).is_err(), "out-of-range id must error");
+    }
+
+    #[test]
+    fn paged_store_matches_resident() {
+        let p = ModelParams::init(40, 8, 3, 4, 17);
+        let dir = std::env::temp_dir().join(format!("pg-paged-{}", std::process::id()));
+        let path = dir.join("model.pgck");
+        crate::coordinator::checkpoint::save(&path, &p).unwrap();
+        let sents: Vec<Vec<String>> = vec![
+            ["aa", "bb", "cc", "dd"].iter().map(|s| s.to_string()).collect(),
+        ];
+        let vocab = Vocab::build(sents.iter().map(|s| s.as_slice()), 1, 100);
+        let resident = EmbeddingStore::new(vocab.clone(), p.e.clone(), p.dim).unwrap();
+        let mut paged = EmbeddingStore::paged(vocab, &path).unwrap();
+        assert_eq!(paged.rows(), 40);
+        for id in [0u32, 1, 3, 39] {
+            assert_eq!(paged.vector_by_id(id), resident.vector_by_id(id), "row {id}");
+        }
+        // Warm the head: the same bits must now come from the cache.
+        paged.warm(4).unwrap();
+        assert_eq!(paged.vector_by_id(3), resident.vector_by_id(3));
+        assert_eq!(paged.neighbors("aa", 2), resident.neighbors("aa", 2));
+        let (hits, misses) = paged.cache_counters();
+        assert!(hits >= 1 && misses >= 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

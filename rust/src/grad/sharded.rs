@@ -18,7 +18,7 @@
 #![allow(unsafe_code)]
 
 use crate::config::{GradCfg, GradMode};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{self, ThreadPool};
 
 use super::plan::ShardPlan;
 
@@ -37,9 +37,14 @@ struct SendPtr(*mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
-/// Persistent worker pool + strategy policy for scatter-add workloads.
+/// Strategy policy for scatter-add workloads over the process-wide
+/// shared pool. The engine used to own a private pool; scatter fan-outs
+/// now queue on [`threadpool::shared`] alongside interpreter steps and
+/// server batch executions, so nesting any of them stays within one
+/// fixed worker set. `threads` still controls the shard count (and with
+/// it the owner-computes row partition), so results are unchanged.
 pub struct ScatterEngine {
-    pool: ThreadPool,
+    pool: &'static ThreadPool,
     threads: usize,
     mode: GradMode,
     crossover_rows: usize,
@@ -50,7 +55,7 @@ impl ScatterEngine {
     pub fn new(cfg: &GradCfg) -> ScatterEngine {
         let threads = resolve_threads(cfg.threads);
         ScatterEngine {
-            pool: ThreadPool::new(threads.max(1)),
+            pool: threadpool::shared(),
             threads,
             mode: cfg.mode,
             crossover_rows: cfg.crossover_rows,
@@ -62,9 +67,10 @@ impl ScatterEngine {
         self.threads
     }
 
-    /// The engine's pool — shared with the host trainer's gradient fan-out.
+    /// The engine's pool (the process-wide shared pool) — also used by
+    /// the host trainer's gradient fan-out.
     pub fn pool(&self) -> &ThreadPool {
-        &self.pool
+        self.pool
     }
 
     /// Would a stream of `updates` rows run sharded-parallel under the
@@ -85,7 +91,7 @@ impl ScatterEngine {
     pub fn scatter_add(&self, w: &mut [f32], d: usize, idx: &[i32], y: &[f32]) {
         if self.use_sharded(idx.len()) {
             let plan = ShardPlan::build(idx, self.threads, self.hot_rows);
-            scatter_add_sharded(w, d, idx, y, &plan, &self.pool);
+            scatter_add_sharded(w, d, idx, y, &plan, self.pool);
         } else {
             crate::baselines::scatter::scatter_add_serial(w, d, idx, y);
         }

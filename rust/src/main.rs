@@ -272,11 +272,21 @@ fn cmd_serve(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()>
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
         let st = server.stats();
+        let (hits, misses) = server.cache_counters();
+        let lookups = (hits + misses).max(1);
+        let occupied: Vec<String> = st
+            .occupancy_histogram()
+            .into_iter()
+            .filter(|&(_, c)| c > 0)
+            .map(|(edge, c)| format!("<={edge}:{c}"))
+            .collect();
         println!(
-            "[serve] {} requests, {} batches, mean latency {}",
+            "[serve] {} requests, {} batches, mean latency {}, hot-cache {:.0}% ({hits}/{lookups}), occupancy {}",
             st.requests.load(std::sync::atomic::Ordering::Relaxed),
             st.batches.load(std::sync::atomic::Ordering::Relaxed),
             fmt::dur(st.mean_latency()),
+            100.0 * hits as f64 / lookups as f64,
+            if occupied.is_empty() { "-".to_string() } else { occupied.join(" ") },
         );
     }
 }

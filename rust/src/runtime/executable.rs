@@ -2,6 +2,7 @@
 //! agnostic handle over [`Compiled`] that adds spec validation and
 //! dispatch accounting.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -14,13 +15,16 @@ use super::manifest::ArtifactSpec;
 
 /// Compiled artifact + spec. Execution validates inputs against the spec
 /// (cheap — element counts and dtypes only; set `check: false` on the hot
-/// path once a pairing is proven).
+/// path once a pairing is proven). Dispatch accounting is atomic so one
+/// `Arc<Executable>` can be driven from many request threads at once —
+/// the serving fast path shares each compiled plan instead of funneling
+/// through an owner thread.
 pub struct Executable {
     pub spec: ArtifactSpec,
     compiled: Box<dyn Compiled>,
     pub check: bool,
-    calls: std::cell::Cell<u64>,
-    total: std::cell::Cell<Duration>,
+    calls: AtomicU64,
+    total_nanos: AtomicU64,
 }
 
 impl Executable {
@@ -32,9 +36,14 @@ impl Executable {
             spec,
             compiled,
             check: true,
-            calls: std::cell::Cell::new(0),
-            total: std::cell::Cell::new(Duration::ZERO),
+            calls: AtomicU64::new(0),
+            total_nanos: AtomicU64::new(0),
         })
+    }
+
+    fn account(&self, dt: Duration) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.total_nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
     }
 
     /// Execute with literal inputs; returns the decomposed output tuple.
@@ -59,9 +68,7 @@ impl Executable {
             .compiled
             .execute(inputs)
             .with_context(|| format!("executing {:?}", self.spec.name))?;
-        let dt = t0.elapsed();
-        self.calls.set(self.calls.get() + 1);
-        self.total.set(self.total.get() + dt);
+        self.account(t0.elapsed());
         if tuple.len() != self.spec.outputs.len() {
             bail!(
                 "artifact {:?}: {} outputs, spec says {}",
@@ -95,9 +102,7 @@ impl Executable {
             .compiled
             .execute_buffers(args)
             .with_context(|| format!("executing (buffers) {:?}", self.spec.name))?;
-        let dt = t0.elapsed();
-        self.calls.set(self.calls.get() + 1);
-        self.total.set(self.total.get() + dt);
+        self.account(t0.elapsed());
         Ok(out)
     }
 
@@ -124,11 +129,11 @@ impl Executable {
     }
 
     pub fn calls(&self) -> u64 {
-        self.calls.get()
+        self.calls.load(Ordering::Relaxed)
     }
 
     pub fn total_time(&self) -> Duration {
-        self.total.get()
+        Duration::from_nanos(self.total_nanos.load(Ordering::Relaxed))
     }
 
     pub fn name(&self) -> &str {

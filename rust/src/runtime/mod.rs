@@ -15,7 +15,8 @@ pub mod manifest;
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -27,15 +28,19 @@ use crate::backend::Backend;
 
 struct CacheEntry {
     fingerprint: u64,
-    exe: Rc<Executable>,
+    exe: Arc<Executable>,
 }
 
 /// The runtime: one execution backend + lazily compiled artifact cache.
+/// The cache sits behind a mutex and hands out `Arc<Executable>`s, so
+/// one runtime (and every compiled plan it owns) can be shared across
+/// request threads — the serving path loads each `forward_b{B}` once
+/// and executes it concurrently.
 pub struct Runtime {
     backend: Box<dyn Backend>,
     pub manifest: Manifest,
-    cache: std::cell::RefCell<HashMap<String, CacheEntry>>,
-    profile_ops: std::cell::Cell<bool>,
+    cache: Mutex<HashMap<String, CacheEntry>>,
+    profile_ops: AtomicBool,
 }
 
 impl Runtime {
@@ -54,7 +59,7 @@ impl Runtime {
             backend,
             manifest,
             cache: Default::default(),
-            profile_ops: std::cell::Cell::new(false),
+            profile_ops: AtomicBool::new(false),
         })
     }
 
@@ -66,28 +71,32 @@ impl Runtime {
     /// Fetch (compiling on first use) an executable by artifact name.
     /// A cached executable is revalidated against the artifact file's
     /// fingerprint and recompiled if the file changed underneath us.
-    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
         let spec = self.manifest.find(name)?.clone();
         let fingerprint = file_fingerprint(&spec.file)
             .with_context(|| format!("fingerprinting artifact {name:?}"))?;
-        if let Some(e) = self.cache.borrow().get(name) {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
             if e.fingerprint == fingerprint {
-                return Ok(Rc::clone(&e.exe));
+                return Ok(Arc::clone(&e.exe));
             }
         }
-        let exe = Rc::new(Executable::compile(self.backend.as_ref(), spec)?);
-        if self.profile_ops.get() {
+        // Compile outside the lock (compilation is slow; two racing
+        // loaders at worst compile twice, last insert wins, both get a
+        // valid executable).
+        let exe = Arc::new(Executable::compile(self.backend.as_ref(), spec)?);
+        if self.profile_ops.load(Ordering::Relaxed) {
             exe.set_op_profiling(true);
         }
         self.cache
-            .borrow_mut()
-            .insert(name.to_string(), CacheEntry { fingerprint, exe: Rc::clone(&exe) });
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), CacheEntry { fingerprint, exe: Arc::clone(&exe) });
         Ok(exe)
     }
 
     /// Number of compiled executables resident.
     pub fn loaded(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 
     /// Probe that this runtime can actually *execute* artifacts by
@@ -113,7 +122,8 @@ impl Runtime {
     /// profiler's Table-1-style report.
     pub fn dispatch_stats(&self) -> Vec<(String, u64, std::time::Duration)> {
         self.cache
-            .borrow()
+            .lock()
+            .unwrap()
             .values()
             .map(|e| (e.exe.name().to_string(), e.exe.calls(), e.exe.total_time()))
             .collect()
@@ -123,8 +133,8 @@ impl Runtime {
     /// current and future (only backends with sub-dispatch visibility —
     /// the interpreter — record anything).
     pub fn set_op_profiling(&self, on: bool) {
-        self.profile_ops.set(on);
-        for e in self.cache.borrow().values() {
+        self.profile_ops.store(on, Ordering::Relaxed);
+        for e in self.cache.lock().unwrap().values() {
             e.exe.set_op_profiling(on);
         }
     }
@@ -134,7 +144,7 @@ impl Runtime {
     /// fused-kernel costs instead of raw HLO counts.
     pub fn plan_op_stats(&self) -> Vec<(String, u64, std::time::Duration)> {
         let mut acc: HashMap<String, (u64, std::time::Duration)> = HashMap::new();
-        for e in self.cache.borrow().values() {
+        for e in self.cache.lock().unwrap().values() {
             for (label, calls, total) in e.exe.op_stats() {
                 let entry = acc.entry(label).or_default();
                 entry.0 += calls;
@@ -155,7 +165,8 @@ impl Runtime {
     pub fn sched_reports(&self) -> Vec<(String, String)> {
         let mut rows: Vec<(String, String)> = self
             .cache
-            .borrow()
+            .lock()
+            .unwrap()
             .values()
             .filter_map(|e| e.exe.sched_report().map(|r| (e.exe.name().to_string(), r)))
             .collect();
@@ -171,7 +182,8 @@ impl Runtime {
     pub fn verify_reports(&self) -> Vec<(String, String)> {
         let mut rows: Vec<(String, String)> = self
             .cache
-            .borrow()
+            .lock()
+            .unwrap()
             .values()
             .filter_map(|e| e.exe.verify_report().map(|r| (e.exe.name().to_string(), r)))
             .collect();
@@ -186,7 +198,8 @@ impl Runtime {
     pub fn fusion_coverage(&self) -> Vec<(String, u64, u64)> {
         let mut rows: Vec<(String, u64, u64)> = self
             .cache
-            .borrow()
+            .lock()
+            .unwrap()
             .values()
             .filter_map(|e| {
                 e.exe.fusion_summary().map(|(f, t)| (e.exe.name().to_string(), f, t))
@@ -280,13 +293,13 @@ mod tests {
         assert_eq!(to_vec_f32(&a.run(&[&x]).unwrap()[0]).unwrap(), vec![6.0, 8.0]);
         // Unchanged file: the very same executable comes back.
         let b = rt.load("tiny").unwrap();
-        assert!(Rc::ptr_eq(&a, &b));
+        assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(rt.loaded(), 1);
 
         // Rewrite the artifact: same name, new semantics.
         std::fs::write(dir.join("tiny.hlo.txt"), squarer).unwrap();
         let c = rt.load("tiny").unwrap();
-        assert!(!Rc::ptr_eq(&a, &c), "stale executable served after file change");
+        assert!(!Arc::ptr_eq(&a, &c), "stale executable served after file change");
         assert_eq!(to_vec_f32(&c.run(&[&x]).unwrap()[0]).unwrap(), vec![9.0, 16.0]);
         assert_eq!(rt.loaded(), 1);
         std::fs::remove_dir_all(&dir).ok();

@@ -1,21 +1,34 @@
-//! Dynamic request batching for the scoring path.
+//! Deadline-based micro-batching for the scoring path.
 //!
-//! Concurrent SCORE requests are coalesced into one dispatch: the executor
-//! waits up to `max_wait_ms` for up to `max_batch` requests, executes, and
-//! fans the scores back out. Classic dynamic batching — latency is bounded
-//! by the wait budget, throughput grows with concurrency.
+//! Concurrent SCORE requests are coalesced into one dispatch. The wait
+//! budget is a **per-batch deadline armed by the first queued request**:
+//! a request enqueued at `t` is dispatched no later than `t +
+//! max_wait_ms`, no matter how many stragglers trickle in behind it —
+//! each later arrival only shrinks the remaining wait, never re-arms
+//! it. (The previous loop re-armed the deadline from "now" on entry, so
+//! a steady trickle could hold the first request hostage for a full
+//! extra budget.)
+//!
+//! Batch sizing is adaptive: the executor compiles **every** committed
+//! `forward_b{B}` artifact once at startup and shares the compiled
+//! plans across dispatches (`Compiled` backends are `Sync`, so the
+//! executables are plain `Arc`s); each coalesced set then runs on the
+//! smallest plan that covers it, padding the remainder with PAD rows
+//! instead of always paying the largest batch.
 //!
 //! Two scoring engines sit behind the same batching loop:
 //!
 //! * **Artifact** — pads the batch to a `forward_b{B}` artifact and
 //!   executes it (one dispatch per coalesced batch) on the runtime's
-//!   selected backend — PJRT or the HLO interpreter.
+//!   selected backend — PJRT or the HLO interpreter, whose kernels fan
+//!   out on the process-wide shared worker pool.
 //! * **Host** — `baselines::RefModel` scoring on the checkpoint
 //!   parameters. Selected automatically when no artifacts directory is
 //!   present, so `polyglot serve` works even without `make artifacts`.
 
 use std::path::Path;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -30,28 +43,32 @@ use super::protocol::Response;
 pub struct ScoreRequest {
     pub window: Vec<i32>,
     pub reply: Sender<Response>,
+    /// When the request entered the queue — the deadline anchor.
+    pub enqueued: Instant,
 }
 
 enum Scorer {
     Artifact {
-        // SAFETY of lifetime: exe borrows backend state inside rt; keep
-        // rt boxed alongside for the executor's lifetime.
+        /// Keeps the backend that compiled the plans alive.
         _rt: Box<Runtime>,
-        exe: std::rc::Rc<Executable>,
+        /// `(batch, executable)` per committed forward artifact,
+        /// ascending by batch — the adaptive-size ladder.
+        plans: Vec<(usize, Arc<Executable>)>,
         params: Vec<xla::Literal>,
     },
     Host {
         params: ModelParams,
         /// Reusable forward-pass scratch (RefModel exists to avoid
-        /// per-call allocation; keep one for the serving hot path).
-        model: RefModel,
+        /// per-call allocation); a lock, not a thread-owner, so the
+        /// executor can be driven from any thread.
+        model: Mutex<RefModel>,
     },
 }
 
 pub struct BatchExecutor {
     scorer: Scorer,
-    /// Batch the backing engine executes (artifact batch for the artifact
-    /// scorer; the configured max for the host engine).
+    /// Largest batch one dispatch can take (the biggest artifact batch
+    /// for the artifact scorer; the configured max for the host engine).
     pub artifact_batch: usize,
     window: usize,
     max_batch: usize,
@@ -61,55 +78,64 @@ pub struct BatchExecutor {
 impl BatchExecutor {
     pub fn new(artifacts_dir: &Path, cfg: &ServerCfg, params: ModelParams) -> Result<Self> {
         let window = params.window;
-        match Self::try_artifact(artifacts_dir, cfg, &params) {
+        let max_wait = Duration::from_millis(
+            crate::util::env::serve_max_wait_ms().unwrap_or(cfg.max_wait_ms),
+        );
+        let max_batch = crate::util::env::serve_max_batch().unwrap_or(cfg.max_batch).max(1);
+        match Self::try_artifact(artifacts_dir, &params) {
             Ok((scorer, artifact_batch)) => Ok(BatchExecutor {
                 scorer,
                 artifact_batch,
                 window,
-                max_batch: cfg.max_batch.min(artifact_batch).max(1),
-                max_wait: Duration::from_millis(cfg.max_wait_ms),
+                max_batch: max_batch.min(artifact_batch),
+                max_wait,
             }),
             Err(e) => {
                 eprintln!(
                     "[server] artifact scoring unavailable ({e:#}); serving with the host model"
                 );
-                let model = RefModel::new(&params);
+                let model = Mutex::new(RefModel::new(&params));
                 Ok(BatchExecutor {
                     scorer: Scorer::Host { params, model },
-                    artifact_batch: cfg.max_batch.max(1),
+                    artifact_batch: max_batch,
                     window,
-                    max_batch: cfg.max_batch.max(1),
-                    max_wait: Duration::from_millis(cfg.max_wait_ms),
+                    max_batch,
+                    max_wait,
                 })
             }
         }
     }
 
-    fn try_artifact(
-        artifacts_dir: &Path,
-        cfg: &ServerCfg,
-        params: &ModelParams,
-    ) -> Result<(Scorer, usize)> {
+    fn try_artifact(artifacts_dir: &Path, params: &ModelParams) -> Result<(Scorer, usize)> {
         let rt = Box::new(Runtime::new(artifacts_dir)?);
-        // pick the smallest forward artifact that covers max_batch
+        // Compile every forward batch once; dispatches pick from the
+        // ladder per-batch instead of padding everything to one size.
         let mut batches = rt.manifest.batches_for("forward", None);
         batches.sort_unstable();
-        let artifact_batch = batches
-            .iter()
-            .copied()
-            .find(|&b| b >= cfg.max_batch)
-            .or_else(|| batches.last().copied())
-            .context("no forward artifacts in manifest")?;
-        let name = format!("forward_b{artifact_batch}");
-        let exe = rt.load(&name)?;
+        let mut plans = Vec::with_capacity(batches.len());
+        for &b in &batches {
+            let exe = rt.load(&format!("forward_b{b}"))?;
+            plans.push((b, exe));
+        }
+        let largest = plans.last().map(|&(b, _)| b).context("no forward artifacts in manifest")?;
         let lits = upload_params(params)?;
-        Ok((Scorer::Artifact { _rt: rt, exe, params: lits }, artifact_batch))
+        Ok((Scorer::Artifact { _rt: rt, plans, params: lits }, largest))
     }
 
-    /// Collect up to `max_batch` requests (waiting at most `max_wait` after
-    /// the first), execute one dispatch, reply. Returns the number of
-    /// requests served (0 on idle timeout).
-    pub fn run_once(&mut self, rx: &Receiver<ScoreRequest>) -> Result<usize> {
+    /// Does this executor coalesce (artifact scorer) or answer
+    /// per-request (host scorer)?
+    fn coalesces(&self) -> bool {
+        matches!(self.scorer, Scorer::Artifact { .. })
+    }
+
+    pub fn max_wait(&self) -> Duration {
+        self.max_wait
+    }
+
+    /// Collect up to `max_batch` requests, waiting until the *first*
+    /// request's deadline (`enqueued + max_wait`), execute one dispatch,
+    /// reply. Returns the number of requests served (0 on idle timeout).
+    pub fn run_once(&self, rx: &Receiver<ScoreRequest>) -> Result<usize> {
         // block briefly for the first request so the loop can poll stop flags
         let first = match rx.recv_timeout(Duration::from_millis(20)) {
             Ok(r) => r,
@@ -120,26 +146,21 @@ impl BatchExecutor {
         // Coalescing only pays when it amortizes a device dispatch; the
         // host scorer answers per-request, so it skips the wait instead of
         // taxing every lone request with max_wait_ms of latency.
-        if matches!(self.scorer, Scorer::Artifact { .. }) {
-            let deadline = Instant::now() + self.max_wait;
-            while reqs.len() < self.max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => reqs.push(r),
-                    Err(_) => break,
-                }
-            }
+        if self.coalesces() {
+            collect_until_deadline(rx, &mut reqs, self.max_batch, self.max_wait);
         }
         let n = reqs.len();
-        match &mut self.scorer {
-            Scorer::Artifact { exe, params, .. } => {
+        match &self.scorer {
+            Scorer::Artifact { plans, params, .. } => {
+                // Smallest committed batch covering the coalesced set;
                 // XLA's gather clamps out-of-range ids, so the padded
-                // batch dispatch is safe as-is.
-                let b = self.artifact_batch;
-                let mut flat = vec![0i32; b * self.window]; // PAD = 0 padding
+                // batch dispatch is safe as-is (PAD = 0 rows).
+                let (b, exe) = plans
+                    .iter()
+                    .find(|&&(b, _)| b >= n)
+                    .unwrap_or(plans.last().expect("plan ladder is non-empty"));
+                let b = *b;
+                let mut flat = vec![0i32; b * self.window];
                 for (i, r) in reqs.iter().enumerate() {
                     flat[i * self.window..(i + 1) * self.window].copy_from_slice(&r.window);
                 }
@@ -155,8 +176,9 @@ impl BatchExecutor {
                 // The host model indexes the embedding table directly, so
                 // ids must be validated here (the protocol layer only
                 // rejects negatives) — a bad request answers ERR instead
-                // of panicking the executor thread.
+                // of panicking the batcher thread.
                 let vocab = params.vocab as i32;
+                let mut model = model.lock().unwrap();
                 for r in reqs {
                     let resp = if r.window.iter().any(|&i| i < 0 || i >= vocab) {
                         Response::Error(format!("window id out of range 0..{vocab}"))
@@ -168,5 +190,118 @@ impl BatchExecutor {
             }
         }
         Ok(n)
+    }
+}
+
+/// Fill `reqs` (already holding the first request) until it reaches
+/// `max_batch` or the first request's deadline (`enqueued + max_wait`)
+/// lapses. Every `recv_timeout` waits only the *remaining* budget, so
+/// stragglers shrink the window instead of re-arming it.
+fn collect_until_deadline(
+    rx: &Receiver<ScoreRequest>,
+    reqs: &mut Vec<ScoreRequest>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    let deadline = reqs[0].enqueued + max_wait;
+    while reqs.len() < max_batch {
+        let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+            break;
+        };
+        match rx.recv_timeout(remaining) {
+            Ok(r) => reqs.push(r),
+            Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(window: Vec<i32>) -> (ScoreRequest, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (ScoreRequest { window, reply: tx, enqueued: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn executor_is_send_and_sync() {
+        // Shared-plan serving hangs the executor behind an Arc and
+        // drives it from whichever thread runs the batching loop.
+        fn assert_sync<T: Send + Sync>() {}
+        assert_sync::<BatchExecutor>();
+    }
+
+    #[test]
+    fn slow_trickle_still_flushes_at_max_wait() {
+        // Feed one request every few ms, far slower than max_batch would
+        // fill: the batch must flush once the FIRST request's deadline
+        // lapses, not keep re-arming on every arrival.
+        let (tx, rx) = mpsc::channel::<ScoreRequest>();
+        let (first, _first_rx) = req(vec![1, 2, 3]);
+        let armed = first.enqueued;
+        let feeder = std::thread::spawn(move || {
+            let mut keep = Vec::new();
+            for _ in 0..200 {
+                let (r, reply_rx) = req(vec![4, 5, 6]);
+                keep.push(reply_rx);
+                if tx.send(r).is_err() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            keep
+        });
+        let max_wait = Duration::from_millis(40);
+        let mut reqs = vec![first];
+        collect_until_deadline(&rx, &mut reqs, 1000, max_wait);
+        let waited = armed.elapsed();
+        drop(rx);
+        let _ = feeder.join();
+        assert!(
+            waited >= max_wait - Duration::from_millis(5),
+            "flushed after {waited:?}, well before the {max_wait:?} deadline"
+        );
+        // The old bug: each arrival re-armed a fresh max_wait, so a 2ms
+        // trickle held the batch open ~200 sends × 2ms. Generous bound
+        // for loaded CI machines, far below the pathological hold.
+        assert!(
+            waited < Duration::from_millis(250),
+            "deadline re-armed: first request waited {waited:?}"
+        );
+        assert!(
+            reqs.len() < 1000,
+            "a slow trickle must flush on deadline, not on batch fill"
+        );
+    }
+
+    #[test]
+    fn full_batch_flushes_before_deadline() {
+        let (tx, rx) = mpsc::channel::<ScoreRequest>();
+        let (first, _r0) = req(vec![0]);
+        let mut keep = Vec::new();
+        for _ in 0..7 {
+            let (r, rrx) = req(vec![0]);
+            keep.push(rrx);
+            tx.send(r).unwrap();
+        }
+        let t0 = Instant::now();
+        let mut reqs = vec![first];
+        collect_until_deadline(&rx, &mut reqs, 8, Duration::from_secs(5));
+        assert_eq!(reqs.len(), 8);
+        assert!(t0.elapsed() < Duration::from_secs(1), "full batch must not wait the deadline");
+    }
+
+    #[test]
+    fn lapsed_deadline_dispatches_immediately() {
+        let (_tx, rx) = mpsc::channel::<ScoreRequest>();
+        let (mut first, _r0) = req(vec![0]);
+        first.enqueued = Instant::now() - Duration::from_secs(1);
+        let t0 = Instant::now();
+        let mut reqs = vec![first];
+        collect_until_deadline(&rx, &mut reqs, 8, Duration::from_millis(50));
+        assert_eq!(reqs.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(40), "lapsed deadline must not wait");
     }
 }

@@ -1,12 +1,20 @@
 //! Embedding/scoring server: the serving-path example of the runtime.
 //!
-//! A line-oriented TCP protocol (`protocol`), a dynamic batcher that
-//! coalesces concurrent score requests into one artifact dispatch
-//! (`batcher`), and the listener/executor wiring (`Server`). Runtime
-//! handles are not `Send`, so a single *executor thread* owns the
-//! `Runtime` and the embedding store; connection handler threads parse
-//! requests and rendezvous with the executor over channels — the same
-//! single-device-owner design vLLM-style routers use per GPU worker.
+//! A line-oriented TCP protocol (`protocol`), a deadline-based
+//! micro-batcher that coalesces concurrent score requests into one
+//! artifact dispatch (`batcher`), and the listener wiring (`Server`).
+//!
+//! Concurrency model: compiled plans are shared (`Compiled` backends
+//! are `Sync`), so there is no single executor thread owning the
+//! runtime anymore. Each connection gets its own handler thread —
+//! handlers block on socket IO, so they must never occupy compute
+//! workers — and answers nearest-neighbour queries directly from the
+//! shared embedding store (whose Zipf-head hot cache makes the common
+//! lookups memory-resident). Score requests flow to one batching loop
+//! that executes the shared plan; the execution's kernel fan-out runs
+//! on the process-wide worker pool (`util::threadpool::shared`), the
+//! same pool the gradient scatter and interpreter use, so serving under
+//! load never oversubscribes the machine.
 
 pub mod batcher;
 pub mod protocol;
@@ -23,10 +31,13 @@ use crate::baselines::model_ref::ModelParams;
 use crate::config::ServerCfg;
 use crate::embeddings::EmbeddingStore;
 use crate::text::Vocab;
-use crate::util::threadpool::ThreadPool;
 
 use batcher::{BatchExecutor, ScoreRequest};
 use protocol::{parse_request, Request, Response};
+
+/// Batch-occupancy histogram buckets: dispatches of `1`, `2`, `3-4`,
+/// `5-8`, … requests (power-of-two upper edges), last bucket open.
+pub const OCCUPANCY_BUCKETS: usize = 10;
 
 /// Shared server statistics.
 #[derive(Default)]
@@ -34,6 +45,9 @@ pub struct ServerStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub total_latency_us: AtomicU64,
+    /// Dispatch counts by coalesced-batch size bucket (see
+    /// [`OCCUPANCY_BUCKETS`]).
+    pub occupancy: [AtomicU64; OCCUPANCY_BUCKETS],
 }
 
 impl ServerStats {
@@ -41,18 +55,39 @@ impl ServerStats {
         let n = self.requests.load(Ordering::Relaxed).max(1);
         Duration::from_micros(self.total_latency_us.load(Ordering::Relaxed) / n)
     }
+
+    /// Bucket index for a dispatch that served `n` requests.
+    pub fn occupancy_bucket(n: usize) -> usize {
+        let n = n.max(1);
+        let b = (usize::BITS - (n - 1).leading_zeros()) as usize; // ceil(log2 n)
+        b.min(OCCUPANCY_BUCKETS - 1)
+    }
+
+    pub fn record_batch(&self, served: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.occupancy[Self::occupancy_bucket(served)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(bucket upper edge, dispatch count)` rows, zeros included.
+    pub fn occupancy_histogram(&self) -> Vec<(usize, u64)> {
+        (0..OCCUPANCY_BUCKETS)
+            .map(|b| (1usize << b, self.occupancy[b].load(Ordering::Relaxed)))
+            .collect()
+    }
 }
 
 pub struct Server {
     pub addr: String,
     stats: Arc<ServerStats>,
+    store: Arc<EmbeddingStore>,
     stop: Arc<AtomicBool>,
     listener_thread: Option<std::thread::JoinHandle<()>>,
+    batcher_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start serving. The executor thread owns the runtime; handler
-    /// threads come from a pool of `cfg.threads`.
+    /// Start serving: compile the shared plans, warm the embedding
+    /// store's Zipf-head cache, spawn the batching loop and listener.
     pub fn start(
         cfg: &ServerCfg,
         artifacts_dir: std::path::PathBuf,
@@ -65,94 +100,97 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
-
-        // Executor thread: owns Runtime + store, consumes score requests.
-        let (score_tx, score_rx) = mpsc::channel::<ScoreRequest>();
-        let (nn_tx, nn_rx) = mpsc::channel::<(String, usize, mpsc::Sender<Response>)>();
-        let exec_cfg = cfg.clone();
-        let exec_stats = Arc::clone(&stats);
-        let exec_stop = Arc::clone(&stop);
         let window = params.window;
-        std::thread::Builder::new()
-            .name("artifact-executor".into())
+
+        let mut store = EmbeddingStore::from_params(vocab, &params)
+            .context("building embedding store")?;
+        let hot = crate::util::env::serve_hot_rows().unwrap_or(cfg.hot_rows);
+        store.warm(hot).context("warming embedding hot cache")?;
+        let store = Arc::new(store);
+
+        let exec = Arc::new(
+            BatchExecutor::new(&artifacts_dir, cfg, params)
+                .context("building batch executor")?,
+        );
+
+        // Batching loop: collects deadline-bounded micro-batches and
+        // runs the shared plan; the interpreter's kernels fan out on
+        // the process-wide pool from inside `run`.
+        let (score_tx, score_rx) = mpsc::channel::<ScoreRequest>();
+        let b_exec = Arc::clone(&exec);
+        let b_stats = Arc::clone(&stats);
+        let b_stop = Arc::clone(&stop);
+        let batcher_thread = std::thread::Builder::new()
+            .name("batcher".into())
             .spawn(move || {
-                let store = match EmbeddingStore::from_params(vocab, &params) {
-                    Ok(s) => s,
-                    Err(e) => {
-                        eprintln!("executor: {e}");
-                        return;
-                    }
-                };
-                let mut exec = match BatchExecutor::new(
-                    &artifacts_dir,
-                    &exec_cfg,
-                    params,
-                ) {
-                    Ok(x) => x,
-                    Err(e) => {
-                        eprintln!("executor: {e:#}");
-                        return;
-                    }
-                };
-                while !exec_stop.load(Ordering::Relaxed) {
-                    // NN requests are cheap; drain them first.
-                    while let Ok((word, k, reply)) = nn_rx.try_recv() {
-                        let neighbors = store.neighbors(&word, k);
-                        let _ = reply.send(Response::Neighbors(neighbors));
-                    }
-                    match exec.run_once(&score_rx) {
-                        Ok(served) => {
-                            if served > 0 {
-                                exec_stats.batches.fetch_add(1, Ordering::Relaxed);
-                            }
-                        }
-                        Err(e) => eprintln!("executor batch error: {e:#}"),
+                while !b_stop.load(Ordering::Relaxed) {
+                    match b_exec.run_once(&score_rx) {
+                        Ok(0) => {}
+                        Ok(served) => b_stats.record_batch(served),
+                        Err(e) => eprintln!("batcher error: {e:#}"),
                     }
                 }
             })
-            .expect("spawn executor");
+            .expect("spawn batcher");
 
-        // Listener thread + handler pool.
-        let pool = ThreadPool::new(cfg.threads);
+        // Listener: one OS thread per connection. Handlers block on
+        // socket reads, so they get real threads, never compute-pool
+        // workers (parking a blocked handler on the shared pool would
+        // starve the kernels scoring its own request).
         let l_stop = Arc::clone(&stop);
         let l_stats = Arc::clone(&stats);
+        let l_store = Arc::clone(&store);
         let listener_thread = std::thread::Builder::new()
             .name("listener".into())
-            .spawn(move || {
-                let _pool = pool; // keep workers alive
-                loop {
-                    if l_stop.load(Ordering::Relaxed) {
-                        return;
+            .spawn(move || loop {
+                if l_stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = score_tx.clone();
+                        let st = Arc::clone(&l_stats);
+                        let store = Arc::clone(&l_store);
+                        std::thread::Builder::new()
+                            .name("conn".into())
+                            .spawn(move || {
+                                let _ = handle_conn(stream, tx, store, st, window);
+                            })
+                            .ok();
                     }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let tx = score_tx.clone();
-                            let nx = nn_tx.clone();
-                            let st = Arc::clone(&l_stats);
-                            let window = window;
-                            _pool.execute(move || {
-                                let _ = handle_conn(stream, tx, nx, st, window);
-                            });
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(1));
-                        }
-                        Err(_) => return,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
                     }
+                    Err(_) => return,
                 }
             })
             .expect("spawn listener");
 
-        Ok(Server { addr, stats, stop, listener_thread: Some(listener_thread) })
+        Ok(Server {
+            addr,
+            stats,
+            store,
+            stop,
+            listener_thread: Some(listener_thread),
+            batcher_thread: Some(batcher_thread),
+        })
     }
 
     pub fn stats(&self) -> &ServerStats {
         &self.stats
     }
 
+    /// Embedding hot-cache (hits, misses) since startup.
+    pub fn cache_counters(&self) -> (u64, u64) {
+        self.store.cache_counters()
+    }
+
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.batcher_thread.take() {
             let _ = t.join();
         }
     }
@@ -161,7 +199,7 @@ impl Server {
 fn handle_conn(
     stream: TcpStream,
     score_tx: mpsc::Sender<ScoreRequest>,
-    nn_tx: mpsc::Sender<(String, usize, mpsc::Sender<Response>)>,
+    store: Arc<EmbeddingStore>,
     stats: Arc<ServerStats>,
     window: usize,
 ) -> Result<()> {
@@ -177,17 +215,17 @@ fn handle_conn(
             Ok(Request::Score(window_ids)) => {
                 let (reply_tx, reply_rx) = mpsc::channel();
                 score_tx
-                    .send(ScoreRequest { window: window_ids, reply: reply_tx })
-                    .map_err(|_| anyhow::anyhow!("executor gone"))?;
-                reply_rx.recv().unwrap_or(Response::Error("executor dropped".into()))
+                    .send(ScoreRequest {
+                        window: window_ids,
+                        reply: reply_tx,
+                        enqueued: Instant::now(),
+                    })
+                    .map_err(|_| anyhow::anyhow!("batcher gone"))?;
+                reply_rx.recv().unwrap_or(Response::Error("batcher dropped".into()))
             }
-            Ok(Request::Neighbors(word, k)) => {
-                let (reply_tx, reply_rx) = mpsc::channel();
-                nn_tx
-                    .send((word, k, reply_tx))
-                    .map_err(|_| anyhow::anyhow!("executor gone"))?;
-                reply_rx.recv().unwrap_or(Response::Error("executor dropped".into()))
-            }
+            // NN queries never cross a channel: the store is shared and
+            // its hot path is the resident Zipf head.
+            Ok(Request::Neighbors(word, k)) => Response::Neighbors(store.neighbors(&word, k)),
             Ok(Request::Quit) => break,
         };
         stats.requests.fetch_add(1, Ordering::Relaxed);
@@ -197,4 +235,28 @@ fn handle_conn(
         writeln!(writer, "{}", resp.render())?;
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_buckets_cover_powers_of_two() {
+        assert_eq!(ServerStats::occupancy_bucket(1), 0);
+        assert_eq!(ServerStats::occupancy_bucket(2), 1);
+        assert_eq!(ServerStats::occupancy_bucket(3), 2);
+        assert_eq!(ServerStats::occupancy_bucket(4), 2);
+        assert_eq!(ServerStats::occupancy_bucket(5), 3);
+        assert_eq!(ServerStats::occupancy_bucket(8), 3);
+        assert_eq!(ServerStats::occupancy_bucket(512), 9);
+        assert_eq!(ServerStats::occupancy_bucket(100_000), OCCUPANCY_BUCKETS - 1);
+        let s = ServerStats::default();
+        s.record_batch(6);
+        s.record_batch(1);
+        let h = s.occupancy_histogram();
+        assert_eq!(h[0], (1, 1));
+        assert_eq!(h[3], (8, 1));
+        assert_eq!(s.batches.load(Ordering::Relaxed), 2);
+    }
 }

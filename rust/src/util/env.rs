@@ -25,6 +25,13 @@
 //! | `POLYGLOT_INTERP_PROFILE` | `on\|off`           | `off`        | `off`         |
 //! | `POLYGLOT_INTERP_VERIFY`  | `on\|off\|strict`   | `on` (debug builds), `off` (release) | `on` |
 //! | `POLYGLOT_BACKEND`        | `pjrt\|interp`      | probe        | hard error    |
+//! | `POLYGLOT_SERVE_MAX_BATCH` | `1\|2\|…`          | config value | config value  |
+//! | `POLYGLOT_SERVE_MAX_WAIT_MS` | `0\|1\|…`        | config value | config value  |
+//! | `POLYGLOT_SERVE_HOT_ROWS` | `0\|1\|…`           | config value | config value  |
+//!
+//! The three serving knobs override the corresponding `server.*` config
+//! fields at server start (`None` = no override), so a load test can
+//! sweep batching policy without editing the config file.
 //!
 //! `POLYGLOT_BACKEND` is the one knob where a typo is a hard error
 //! rather than a fallback: the caller asked for a *specific* backend and
@@ -43,6 +50,9 @@ pub const THREADS: &str = "POLYGLOT_INTERP_THREADS";
 pub const PROFILE: &str = "POLYGLOT_INTERP_PROFILE";
 pub const VERIFY: &str = "POLYGLOT_INTERP_VERIFY";
 pub const BACKEND: &str = "POLYGLOT_BACKEND";
+pub const SERVE_MAX_BATCH: &str = "POLYGLOT_SERVE_MAX_BATCH";
+pub const SERVE_MAX_WAIT_MS: &str = "POLYGLOT_SERVE_MAX_WAIT_MS";
+pub const SERVE_HOT_ROWS: &str = "POLYGLOT_SERVE_HOT_ROWS";
 
 fn var(name: &str) -> Option<String> {
     std::env::var(name).ok()
@@ -217,6 +227,59 @@ pub fn parse_verify_mode(raw: Option<&str>) -> VerifyMode {
     )
 }
 
+/// Shared parser for the serving overrides: unset/empty → `None` (keep
+/// the config value); a number → that override; garbage warns and keeps
+/// the config value (the safest reading — never a surprise policy).
+fn count_override(name: &str, raw: Option<&str>, min: usize) -> Option<usize> {
+    let raw = raw?;
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return None;
+    }
+    match trimmed.parse::<usize>() {
+        Ok(n) if n >= min => Some(n),
+        Ok(_) => {
+            warn(name, trimmed, &format!("an integer >= {min}"), "keeping the config value");
+            None
+        }
+        Err(_) => {
+            warn(name, trimmed, &format!("an integer >= {min}"), "keeping the config value");
+            None
+        }
+    }
+}
+
+/// `POLYGLOT_SERVE_MAX_BATCH=n` caps the micro-batcher's coalesced
+/// batch size (≥ 1; overrides `server.max_batch`).
+pub fn serve_max_batch() -> Option<usize> {
+    parse_serve_max_batch(var(SERVE_MAX_BATCH).as_deref())
+}
+
+pub fn parse_serve_max_batch(raw: Option<&str>) -> Option<usize> {
+    count_override(SERVE_MAX_BATCH, raw, 1)
+}
+
+/// `POLYGLOT_SERVE_MAX_WAIT_MS=n` sets the batch deadline: how long the
+/// batcher holds the *first* queued request while coalescing more
+/// (overrides `server.max_wait_ms`; 0 = dispatch immediately).
+pub fn serve_max_wait_ms() -> Option<u64> {
+    parse_serve_max_wait_ms(var(SERVE_MAX_WAIT_MS).as_deref())
+}
+
+pub fn parse_serve_max_wait_ms(raw: Option<&str>) -> Option<u64> {
+    count_override(SERVE_MAX_WAIT_MS, raw, 0).map(|n| n as u64)
+}
+
+/// `POLYGLOT_SERVE_HOT_ROWS=n` pins the embedding store's hot-row cache
+/// size (overrides `server.hot_rows`; 0 = no cache — every lookup pages).
+pub fn serve_hot_rows() -> Option<usize> {
+    parse_serve_hot_rows(var(SERVE_HOT_ROWS).as_deref())
+}
+
+pub fn parse_serve_hot_rows(raw: Option<&str>) -> Option<usize> {
+    count_override(SERVE_HOT_ROWS, raw, 0)
+}
+
 /// The backend pin: `POLYGLOT_BACKEND=pjrt|interp`. `None` means "no
 /// pin — probe". Unrecognized values are a hard error (see module doc).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -342,6 +405,23 @@ mod tests {
         // Opposite polarity from the bisection knobs: when in doubt,
         // check more.
         assert_eq!(parse_verify_mode(Some("strct")), VerifyMode::On);
+    }
+
+    #[test]
+    fn serve_overrides_parse_counts_and_keep_config_on_garbage() {
+        assert_eq!(parse_serve_max_batch(None), None);
+        assert_eq!(parse_serve_max_batch(Some("")), None);
+        assert_eq!(parse_serve_max_batch(Some(" 64 ")), Some(64));
+        assert_eq!(parse_serve_max_batch(Some("0")), None, "a zero batch cap is garbage");
+        assert_eq!(parse_serve_max_batch(Some("lots")), None);
+        assert_eq!(parse_serve_max_wait_ms(None), None);
+        assert_eq!(parse_serve_max_wait_ms(Some("0")), Some(0), "0 = dispatch immediately");
+        assert_eq!(parse_serve_max_wait_ms(Some("25")), Some(25));
+        assert_eq!(parse_serve_max_wait_ms(Some("-3")), None);
+        assert_eq!(parse_serve_hot_rows(None), None);
+        assert_eq!(parse_serve_hot_rows(Some("0")), Some(0), "0 = cache off, a valid pin");
+        assert_eq!(parse_serve_hot_rows(Some("4096")), Some(4096));
+        assert_eq!(parse_serve_hot_rows(Some("all")), None);
     }
 
     #[test]

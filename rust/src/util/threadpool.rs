@@ -24,7 +24,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -302,6 +302,28 @@ impl Drop for ThreadPool {
     }
 }
 
+static SHARED: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The one process-wide persistent pool. Every compute fan-out in the
+/// crate — interpreter step scheduling, kernel row blocking, the sharded
+/// scatter, and the scoring server's batch executions — queues here, so
+/// nesting any of them inside any other neither oversubscribes the
+/// machine nor deadlocks (helping joins drain the shared queue).
+///
+/// Sized `resolve_threads(0) - 1` workers (min 1): scoped joins help run
+/// queued work, so the dispatching thread is the remaining runner and
+/// total concurrency stays at the resolved thread budget. Callers that
+/// want *less* parallelism than the machine allows express it through
+/// their chunk counts (`Par::threads`, `ShardPlan` shards), never by
+/// sizing a private pool — results are bitwise-independent of worker
+/// count by construction.
+pub fn shared() -> &'static ThreadPool {
+    SHARED.get_or_init(|| {
+        let budget = crate::grad::resolve_threads(0);
+        ThreadPool::new(budget.saturating_sub(1).max(1))
+    })
+}
+
 /// Run `f` over each index in `0..n` on up to `threads` threads, collecting
 /// results in order — a scoped parallel map.
 pub fn par_map<T: Send + 'static>(
@@ -461,5 +483,43 @@ mod tests {
     fn pool_is_sync() {
         fn assert_sync<T: Sync>() {}
         assert_sync::<ThreadPool>();
+    }
+
+    #[test]
+    fn shared_pool_survives_server_fanout_nested_in_scatter_scope() {
+        // Pool-unification contract: the scoring server's batch
+        // executions and the sharded scatter share ONE pool. The worst
+        // nesting — request fan-outs issued from *inside* a live
+        // scatter scope, each fanning out kernel row blocks of its own —
+        // must complete (helping joins) without spawning any thread
+        // beyond the fixed worker set.
+        let pool = shared();
+        let workers_before = pool.threads();
+        let counter = AtomicUsize::new(0);
+        // Outer scope: a sharded scatter's per-shard tasks.
+        pool.scope_run(8, &|_| {
+            // Nested: a server batch execution dispatched onto the same
+            // pool from within the scatter scope...
+            pool.scope_run(4, &|_| {
+                // ...whose kernels row-block on the pool again.
+                pool.scope_run(2, &|_| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 8 * 4 * 2);
+        assert_eq!(pool.threads(), workers_before, "no oversubscription");
+        // Fire-and-forget dispatches (the batcher's execution path)
+        // interleave with scoped work on the same queue.
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        while done.load(Ordering::SeqCst) < 16 {
+            std::thread::yield_now();
+        }
     }
 }

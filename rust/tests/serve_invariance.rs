@@ -1,0 +1,101 @@
+//! Batch-invariance of the serving forward path.
+//!
+//! The micro-batcher coalesces concurrent SCORE requests into one
+//! `forward_b{B}` dispatch and pads the remainder; adaptive sizing
+//! means the *same* request can execute alone in `forward_b1`, packed
+//! into `forward_b8`, or padded inside `forward_b32` depending on what
+//! else was in flight. The scores a client sees must not depend on
+//! that accident of traffic: within every engine configuration
+//! (scheduler on/off × SIMD on/off × threads {1, 2, 8}) the three
+//! shapes must agree **bitwise** — the forward network is per-row, and
+//! the interpreter's kernels keep per-element accumulation order fixed
+//! regardless of batch rows or thread count.
+
+use std::path::PathBuf;
+
+use polyglot_gpu::backend::interp::plan::FuseMode;
+use polyglot_gpu::backend::interp::InterpExecutable;
+use polyglot_gpu::runtime::{lit_i32, DType, Manifest};
+use polyglot_gpu::testkit::synth_artifact_inputs;
+use polyglot_gpu::util::rng::Rng;
+use xla::Literal;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn scores_bitwise_alone_coalesced_padded() {
+    let manifest = Manifest::load(&artifacts_dir()).unwrap();
+    let spec1 = manifest.find("forward_b1").unwrap();
+    let mut rng = Rng::new(0xba7c4);
+    let inputs = synth_artifact_inputs(spec1, &mut rng).unwrap();
+    let win_pos = spec1
+        .inputs
+        .iter()
+        .position(|t| t.dtype == DType::S32)
+        .expect("forward takes one s32 windows input");
+    let window = spec1.inputs[win_pos].shape[1];
+    let params: Vec<&Literal> = inputs
+        .iter()
+        .enumerate()
+        .filter(|&(j, _)| j != win_pos)
+        .map(|(_, l)| l)
+        .collect();
+
+    // Eight concurrent requests' worth of windows (ids < 1000, valid
+    // for the 20480-row vocab like every index-consuming test input).
+    let reqs: Vec<Vec<i32>> =
+        (0..8).map(|_| (0..window).map(|_| rng.below(1000) as i32).collect()).collect();
+
+    let texts: Vec<(usize, String)> = [1usize, 8, 32]
+        .iter()
+        .map(|&b| {
+            let spec = manifest.find(&format!("forward_b{b}")).unwrap();
+            (b, std::fs::read_to_string(&spec.file).unwrap())
+        })
+        .collect();
+
+    for sched in [true, false] {
+        for simd in [true, false] {
+            for threads in [1usize, 2, 8] {
+                let run_scores = |text: &str, b: usize, rows: &[Vec<i32>]| -> Vec<f32> {
+                    let exe = InterpExecutable::from_text_simd(
+                        text,
+                        threads,
+                        FuseMode::Full,
+                        sched,
+                        polyglot_gpu::util::env::verify_mode(),
+                        simd,
+                    )
+                    .unwrap();
+                    let mut flat = vec![0i32; b * window]; // PAD = 0 padding
+                    for (i, w) in rows.iter().enumerate() {
+                        flat[i * window..(i + 1) * window].copy_from_slice(w);
+                    }
+                    let wl = lit_i32(&flat, &[b, window]).unwrap();
+                    let mut refs = params.clone();
+                    refs.insert(win_pos, &wl);
+                    let out = exe.run(&refs).unwrap();
+                    out[0].to_vec::<f32>().unwrap()
+                };
+                let tag = format!("sched={sched}, simd={simd}, threads={threads}");
+
+                let alone: Vec<f32> =
+                    reqs.iter().map(|r| run_scores(&texts[0].1, 1, std::slice::from_ref(r))[0]).collect();
+                let coalesced = run_scores(&texts[1].1, 8, &reqs);
+                assert_eq!(
+                    &coalesced[..8],
+                    &alone[..],
+                    "{tag}: coalesced batch diverges from per-request scores"
+                );
+                let padded = run_scores(&texts[2].1, 32, &reqs);
+                assert_eq!(
+                    &padded[..8],
+                    &alone[..],
+                    "{tag}: padded batch diverges from per-request scores"
+                );
+            }
+        }
+    }
+}
