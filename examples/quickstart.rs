@@ -58,7 +58,7 @@ fn main() -> Result<()> {
         .map(|(_, w, _)| w.to_string())
         .collect();
     for w in probes {
-        let ns = store.neighbors(&w, 3);
+        let ns = store.neighbors(&w, 3)?;
         let pretty: Vec<String> =
             ns.into_iter().map(|(n, s)| format!("{n} ({s:.2})")).collect();
         println!("  {w:<14} -> {}", pretty.join(", "));

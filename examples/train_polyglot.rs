@@ -98,7 +98,7 @@ fn main() -> Result<()> {
     println!("\nnearest neighbours (reloaded checkpoint):");
     for (_, w, _) in corpus.vocab.entries().take(4) {
         let ns: Vec<String> = store
-            .neighbors(w, 3)
+            .neighbors(w, 3)?
             .into_iter()
             .map(|(n, s)| format!("{n} ({s:.2})"))
             .collect();

@@ -575,7 +575,7 @@ fn e11() -> Result<()> {
                 )
             });
             b.bench("sharded", 2, samples, rows as f64, || {
-                sharded_engine.scatter_add(&mut w_sharded, d, &idx, &y)
+                sharded_engine.scatter_add(&mut w_sharded, d, &idx, &y).unwrap()
             });
             let serial_s = b.get("serial").unwrap().mean_s();
             let sharded_s = b.get("sharded").unwrap().mean_s();
@@ -1022,6 +1022,58 @@ fn serve_client(
     (lat, nn)
 }
 
+/// Closed-loop SCORE-only client for the overload phase: sends as fast
+/// as the server answers and tallies the reply kinds. Returns
+/// `(accepted latencies µs, overloaded, timeout, err)`.
+fn overload_client(
+    addr: &str,
+    window: usize,
+    zipf: &polyglot_gpu::corpus::Zipf,
+    stop: &std::sync::atomic::AtomicBool,
+    barrier: &std::sync::Barrier,
+    seed: u64,
+) -> (Vec<u64>, u64, u64, u64) {
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::atomic::Ordering;
+    use std::time::Instant;
+
+    let mut rng = Rng::new(seed);
+    let (mut lat, mut shed, mut timeout, mut err) = (Vec::new(), 0u64, 0u64, 0u64);
+    let Ok(stream) = std::net::TcpStream::connect(addr) else {
+        barrier.wait();
+        return (lat, shed, timeout, err);
+    };
+    stream.set_nodelay(true).ok();
+    let Ok(mut w) = stream.try_clone() else {
+        barrier.wait();
+        return (lat, shed, timeout, err);
+    };
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    barrier.wait();
+    while !stop.load(Ordering::Relaxed) {
+        let ids: Vec<String> =
+            (0..window).map(|_| zipf.sample(&mut rng).to_string()).collect();
+        let t0 = Instant::now();
+        if writeln!(w, "SCORE {}", ids.join(" ")).is_err() {
+            break;
+        }
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(n) if n > 0 => {}
+            _ => break,
+        }
+        match line.split_whitespace().next() {
+            Some("SCORE") => lat.push(t0.elapsed().as_micros() as u64),
+            Some("OVERLOADED") => shed += 1,
+            Some("TIMEOUT") => timeout += 1,
+            _ => err += 1,
+        }
+    }
+    let _ = writeln!(w, "QUIT");
+    (lat, shed, timeout, err)
+}
+
 /// Percentile (0.0..=1.0) of an already-sorted latency sample, in µs.
 fn percentile_us(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
@@ -1153,6 +1205,76 @@ fn e13() -> Result<()> {
         ok(scaling >= 3.0)
     );
 
+    // Overload phase: a deliberately throttled second server (tiny
+    // admission queue, small batches, a 40ms queue deadline) under a
+    // client fleet ~4x what even the sweep's largest level offered it.
+    // The point is not throughput — it is that overload is *explicit*:
+    // shed and expired requests answer OVERLOADED/TIMEOUT immediately
+    // instead of queuing unboundedly, and the accepted tail stays
+    // bounded by the deadline. Counters come from the server's own
+    // stats; the client-side tallies cross-check them.
+    const OVERLOAD_CLIENTS: usize = 256;
+    println!(
+        "\noverload phase: {OVERLOAD_CLIENTS} clients vs queue_depth=4, max_batch=4, \
+         timeout 40ms"
+    );
+    let mut ocfg = base_cfg();
+    ocfg.server.addr = "127.0.0.1:0".into();
+    ocfg.server.hot_rows = hot_rows;
+    ocfg.server.max_batch = 4;
+    ocfg.server.max_wait_ms = 2;
+    ocfg.server.queue_depth = 4;
+    ocfg.server.timeout_ms = 40;
+    let oparams =
+        polyglot_gpu::baselines::model_ref::ModelParams::init(20480, 64, 5, 32, 0xe13);
+    let oserver = Server::start(
+        &ocfg.server,
+        Path::new(&ocfg.runtime.artifacts_dir).to_path_buf(),
+        (*vocab).clone(),
+        oparams,
+    )?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let barrier = Arc::new(Barrier::new(OVERLOAD_CLIENTS + 1));
+    let mut handles = Vec::with_capacity(OVERLOAD_CLIENTS);
+    for c in 0..OVERLOAD_CLIENTS {
+        let addr = oserver.addr.clone();
+        let zipf = Arc::clone(&zipf);
+        let (stop, barrier) = (Arc::clone(&stop), Arc::clone(&barrier));
+        handles.push(std::thread::spawn(move || {
+            overload_client(&addr, window, &zipf, &stop, &barrier, 0x0e13_0000 + c as u64)
+        }));
+    }
+    barrier.wait();
+    std::thread::sleep(Duration::from_millis(1200));
+    stop.store(true, Ordering::Relaxed);
+    let (mut accepted_lat, mut shed_seen, mut timeout_seen, mut err_seen) =
+        (Vec::new(), 0u64, 0u64, 0u64);
+    for h in handles {
+        let (mut l, sh, to, er) = h.join().unwrap();
+        accepted_lat.append(&mut l);
+        shed_seen += sh;
+        timeout_seen += to;
+        err_seen += er;
+    }
+    accepted_lat.sort_unstable();
+    let p99_accepted = percentile_us(&accepted_lat, 0.99);
+    let ost = oserver.stats();
+    let shed_srv = ost.shed.load(Ordering::Relaxed);
+    let timeouts_srv = ost.timeouts.load(Ordering::Relaxed);
+    let derrs_srv = ost.dispatch_errors.load(Ordering::Relaxed);
+    println!(
+        "accepted {} (p99 {}), shed {shed_srv} (clients saw {shed_seen}), timed out \
+         {timeouts_srv} (clients saw {timeout_seen}), dispatch errors {derrs_srv} \
+         (clients saw {err_seen} ERR)",
+        accepted_lat.len(),
+        fmt::dur(Duration::from_micros(p99_accepted)),
+    );
+    println!(
+        "shape check: overload is explicit (shed + timeouts > 0 under 4x load) {}",
+        ok(shed_srv + timeouts_srv > 0)
+    );
+    oserver.stop();
+
     let threads = polyglot_gpu::grad::resolve_threads(0);
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serve".to_string()));
@@ -1179,6 +1301,16 @@ fn e13() -> Result<()> {
     );
     root.insert("scaling_64_vs_1".to_string(), Json::Num(scaling));
     root.insert("sweep".to_string(), Json::Arr(sweep));
+    let mut ov = BTreeMap::new();
+    ov.insert("clients".to_string(), Json::Num(OVERLOAD_CLIENTS as f64));
+    ov.insert("queue_depth".to_string(), Json::Num(ocfg.server.queue_depth as f64));
+    ov.insert("timeout_ms".to_string(), Json::Num(ocfg.server.timeout_ms as f64));
+    ov.insert("accepted".to_string(), Json::Num(accepted_lat.len() as f64));
+    ov.insert("shed".to_string(), Json::Num(shed_srv as f64));
+    ov.insert("timeouts".to_string(), Json::Num(timeouts_srv as f64));
+    ov.insert("dispatch_errors".to_string(), Json::Num(derrs_srv as f64));
+    ov.insert("p99_accepted_us".to_string(), Json::Num(p99_accepted as f64));
+    root.insert("overload".to_string(), Json::Obj(ov));
     std::fs::write("BENCH_serve.json", Json::Obj(root).render())?;
     println!("wrote BENCH_serve.json");
     server.stop();

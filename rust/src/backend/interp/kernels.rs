@@ -373,7 +373,7 @@ pub fn dot(a: &Tensor, b: &Tensor, lc: usize, rc: usize, par: Par) -> Result<Ten
             if t > 1 {
                 let chunk = m.div_ceil(t);
                 let wp = SendPtr(out.as_mut_ptr());
-                pool.scope_run(t, &|ti| {
+                let scope = pool.scope_run(t, &|ti| {
                     let lo = ti * chunk;
                     let hi = ((ti + 1) * chunk).min(m);
                     if lo >= hi {
@@ -385,7 +385,9 @@ pub fn dot(a: &Tensor, b: &Tensor, lc: usize, rc: usize, par: Par) -> Result<Ten
                     };
                     dot_rows_packed(&ap, &bp, (n, k), lo, hi, dst);
                 });
+                // Return the scratch panels before surfacing any task panic.
                 put_panels(ap, bp);
+                scope?;
                 return Ok(Tensor::f32(out, vec![m, n]));
             }
         }
@@ -408,7 +410,7 @@ pub fn dot(a: &Tensor, b: &Tensor, lc: usize, rc: usize, par: Par) -> Result<Ten
                 let dst =
                     unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo * n), (hi - lo) * n) };
                 dot_rows(af, bf, lc, rc, (m, n, k), lo, hi, dst);
-            });
+            })?;
             return Ok(Tensor::f32(out, vec![m, n]));
         }
     }
@@ -628,7 +630,7 @@ pub fn gather(
                             std::slice::from_raw_parts_mut(wp.0.add(lo * d), (hi - lo) * d)
                         };
                         take(lo, hi, dst);
-                    });
+                    })?;
                     return Ok(Tensor::f32(out, out_dims.to_vec()));
                 }
             }
@@ -871,7 +873,7 @@ pub fn dot_fused(
                             *g = Some(e);
                         }
                     }
-                });
+                })?;
                 if let Some(e) = err.into_inner().unwrap() {
                     return Err(e);
                 }
@@ -1004,7 +1006,7 @@ pub fn gather_rows_fused(
                             *g = Some(e);
                         }
                     }
-                });
+                })?;
                 if let Some(e) = err.into_inner().unwrap() {
                     return Err(e);
                 }
@@ -1199,7 +1201,7 @@ fn fold_fused<T: Copy + Send + Sync>(
                         *g = Some(e);
                     }
                 }
-            });
+            })?;
             if let Some(e) = err.into_inner().unwrap() {
                 return Err(e);
             }
@@ -1286,7 +1288,7 @@ pub fn scatter(
                     match par.grab(rows, SCATTER_PAR_MIN_ROWS) {
                         Some(pool) => {
                             let plan = ShardPlan::build(ix, par.threads, 16);
-                            scatter_add_sharded(dst, d, ix, y, &plan, pool);
+                            scatter_add_sharded(dst, d, ix, y, &plan, pool)?;
                         }
                         None => scatter_add_serial(dst, d, ix, y),
                     }
@@ -1431,7 +1433,7 @@ pub fn reduce(
                     _ => None,
                 };
                 if let Some(f) = f {
-                    let data = fold_trailing(v.as_slice(), outer, inner, i0[0], f, par);
+                    let data = fold_trailing(v.as_slice(), outer, inner, i0[0], f, par)?;
                     return Ok(Tensor::f32(data, out_dims));
                 }
             }
@@ -1443,7 +1445,7 @@ pub fn reduce(
                     _ => None,
                 };
                 if let Some(f) = f {
-                    let data = fold_trailing(v.as_slice(), outer, inner, i0[0], f, par);
+                    let data = fold_trailing(v.as_slice(), outer, inner, i0[0], f, par)?;
                     return Ok(Tensor::i32(data, out_dims));
                 }
             }
@@ -1454,7 +1456,7 @@ pub fn reduce(
                     _ => None,
                 };
                 if let Some(f) = f {
-                    let data = fold_trailing(v.as_slice(), outer, inner, i0[0], f, par);
+                    let data = fold_trailing(v.as_slice(), outer, inner, i0[0], f, par)?;
                     return Ok(Tensor::pred(data, out_dims));
                 }
             }
@@ -1564,7 +1566,7 @@ fn fold_trailing<T: Copy + Send + Sync>(
     init: T,
     f: fn(T, T) -> T,
     par: Par,
-) -> Vec<T> {
+) -> Result<Vec<T>> {
     let mut out = vec![init; outer];
     let fold = |lo: usize, hi: usize, dst: &mut [T]| {
         for o in lo..hi {
@@ -1589,12 +1591,12 @@ fn fold_trailing<T: Copy + Send + Sync>(
                 // SAFETY: out[lo..hi] is task-exclusive.
                 let dst = unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo) };
                 fold(lo, hi, dst);
-            });
-            return out;
+            })?;
+            return Ok(out);
         }
     }
     fold(0, outer, &mut out);
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1658,9 +1660,11 @@ mod tests {
         let mut rng = Rng::new(3);
         let (rows, cols) = (512usize, 160usize);
         let v: Vec<f32> = (0..rows * cols).map(|_| rng.range_f32(-1.0, 1.0)).collect();
-        let outer_fold = fold_trailing(&v, rows, cols, 0.0f32, |a, b| a + b, Par::serial());
+        let outer_fold =
+            fold_trailing(&v, rows, cols, 0.0f32, |a, b| a + b, Par::serial()).unwrap();
         let pool = ThreadPool::new(8);
-        let par_fold = fold_trailing(&v, rows, cols, 0.0f32, |a, b| a + b, par_over(&pool));
+        let par_fold =
+            fold_trailing(&v, rows, cols, 0.0f32, |a, b| a + b, par_over(&pool)).unwrap();
         assert_eq!(outer_fold, par_fold, "parallel trailing reduce must be bitwise");
         // Reference: sequential accumulate per row.
         for (o, want) in outer_fold.iter().zip(v.chunks(cols).map(|c| {

@@ -230,7 +230,7 @@ pub fn run_comp(
     let profiled = exec.stats.map(|st| (st, StepTimes::new(n), Instant::now()));
     let t0 = Instant::now();
 
-    pool.scope_dyn(&g.roots, &|task, sp| {
+    let scope = pool.scope_dyn(&g.roots, &|task, sp| {
         // Continuation inlining: after finishing a step, run one
         // newly-released successor on this thread and enqueue the rest —
         // a serial chain stays on one thread with no queue round-trips.
@@ -283,7 +283,14 @@ pub fn run_comp(
         }
     });
 
-    if let Some(e) = error.into_inner().unwrap() {
+    // A panicking step surfaces through the same first-error-wins slot as
+    // a failing one; a step error already recorded there takes priority.
+    let mut first = error.into_inner().unwrap();
+    if let (Err(p), None) = (scope, &first) {
+        first =
+            Some(anyhow::Error::from(p).context(format!("step panicked (in {})", comp.name)));
+    }
+    if let Some(e) = first {
         return Err(e);
     }
     if let Some(sched) = exec.sched {

@@ -177,6 +177,22 @@ fn serve_context(j: &Json) -> Vec<String> {
     if let Some(s) = j.get("scaling_64_vs_1").and_then(|v| v.as_f64()) {
         lines.push(format!("  ok serve 64-client vs 1-client scaling {s:.1}x (context)"));
     }
+    // Overload-phase counters (shed / timeouts / accepted p99 under a
+    // deliberate 4x-overload run). Context only, like every serving
+    // number: the counts depend on runner speed, and the chaos suite
+    // already gates the shedding *behavior*.
+    if let Some(ov) = j.get("overload") {
+        let n = |k: &str| ov.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        lines.push(format!(
+            "  ok serve overload: accepted {:.0} (p99 {:.0}us), shed {:.0}, timeouts \
+             {:.0}, dispatch errors {:.0} (context)",
+            n("accepted"),
+            n("p99_accepted_us"),
+            n("shed"),
+            n("timeouts"),
+            n("dispatch_errors"),
+        ));
+    }
     lines
 }
 
@@ -388,6 +404,13 @@ mod tests {
         m.insert("sweep".into(), Json::Arr(vec![Json::Obj(level)]));
         m.insert("cache_hit_rate".into(), Json::Num(0.87));
         m.insert("scaling_64_vs_1".into(), Json::Num(5.2));
+        let mut ov = BTreeMap::new();
+        ov.insert("accepted".into(), Json::Num(900.0));
+        ov.insert("p99_accepted_us".into(), Json::Num(38_000.0));
+        ov.insert("shed".into(), Json::Num(4200.0));
+        ov.insert("timeouts".into(), Json::Num(310.0));
+        ov.insert("dispatch_errors".into(), Json::Num(0.0));
+        m.insert("overload".into(), Json::Obj(ov));
         Json::Obj(m)
     }
 
@@ -396,12 +419,29 @@ mod tests {
         // The serving bench renders context lines but contributes zero
         // failures — it has no gate and no reference snapshot.
         let lines = serve_context(&serve_doc());
-        assert_eq!(lines.len(), 3);
+        assert_eq!(lines.len(), 4);
         assert!(lines.iter().all(|l| l.contains("(context)")), "{lines:?}");
         assert!(lines.iter().all(|l| !l.contains("FAIL")), "{lines:?}");
         assert!(lines[0].contains("clients=64"), "{}", lines[0]);
         assert!(lines[1].contains("87%"), "{}", lines[1]);
         assert!(lines[2].contains("5.2x"), "{}", lines[2]);
+        assert!(
+            lines[3].contains("shed 4200") && lines[3].contains("timeouts 310"),
+            "{}",
+            lines[3]
+        );
+    }
+
+    #[test]
+    fn overload_counters_never_gate() {
+        // Even absurd overload numbers produce context lines only — the
+        // interp gate's verdict is computed before and without them.
+        let reference = sweep_doc(8, 0.010, false);
+        let current = sweep_doc(8, 0.011, false);
+        assert_eq!(check(&current, &reference, 0.25), 0);
+        let lines = serve_context(&serve_doc());
+        assert!(lines.iter().any(|l| l.contains("overload")), "{lines:?}");
+        assert!(lines.iter().all(|l| !l.contains("FAIL")), "{lines:?}");
     }
 
     #[test]

@@ -208,6 +208,14 @@ pub struct ServerCfg {
     /// Embedding-store hot cache size in rows (0 = no cache). The
     /// `POLYGLOT_SERVE_HOT_ROWS` knob overrides this at server start.
     pub hot_rows: usize,
+    /// Admission queue capacity. Requests arriving while the queue is
+    /// full are shed with an immediate `OVERLOADED` reply. Overridden by
+    /// `POLYGLOT_SERVE_QUEUE`.
+    pub queue_depth: usize,
+    /// Per-request deadline in milliseconds (0 = none): a queued request
+    /// whose deadline lapses before dispatch gets `TIMEOUT` and is never
+    /// executed. Overridden by `POLYGLOT_SERVE_TIMEOUT_MS`.
+    pub timeout_ms: u64,
 }
 
 impl Default for ServerCfg {
@@ -218,6 +226,8 @@ impl Default for ServerCfg {
             max_wait_ms: 5,
             threads: 4,
             hot_rows: 1024,
+            queue_depth: 512,
+            timeout_ms: 0,
         }
     }
 }
@@ -317,6 +327,10 @@ impl Config {
             }
             "server.threads" => self.server.threads = usize_of(v)?,
             "server.hot_rows" => self.server.hot_rows = usize_of(v)?,
+            "server.queue_depth" => self.server.queue_depth = usize_of(v)?,
+            "server.timeout_ms" => {
+                self.server.timeout_ms = v.as_i64().context("expected int")? as u64
+            }
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -343,6 +357,9 @@ impl Config {
         }
         if self.server.max_batch == 0 {
             bail!("server.max_batch must be positive");
+        }
+        if self.server.queue_depth == 0 {
+            bail!("server.queue_depth must be positive");
         }
         Ok(())
     }

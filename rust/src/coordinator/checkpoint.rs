@@ -1,105 +1,424 @@
-//! Checkpoint format: a self-describing little-endian binary container for
-//! the five parameter tensors (magic `PGCK`, version, dims, then raw f32).
+//! Crash-safe checkpoint format (PGCK v2): a self-describing
+//! little-endian container for the five parameter tensors with
+//! end-to-end integrity checks and atomic replacement.
+//!
+//! Layout (v2):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic "PGCK"
+//!      4     4  version (u32 = 2)
+//!      8    16  vocab, dim, window, hidden (u32 each)
+//!     24     8  step (u64) — training step the params were captured at
+//!     32        per tensor (e, w1, b1, w2, b2):
+//!                   u64 element count, raw f32 LE bytes, u32 CRC32
+//!                   of the raw bytes
+//!   last     4  u32 CRC32 of the entire preceding file
+//! ```
+//!
+//! The `e` tensor's raw bytes therefore start at offset 40 (header 32 +
+//! its length word 8) and stay contiguous — the paged embedding store
+//! (`embeddings/store.rs`) preads rows straight out of the file.
+//!
+//! Crash safety: [`save_at_step`] serializes the whole checkpoint in
+//! memory, writes it to a hidden sibling tmp file, `sync_all`s, and
+//! atomically renames over the destination (then best-effort fsyncs the
+//! directory). A crash at any point leaves either the old complete file
+//! or a tmp file that [`latest_valid`] ignores — never a torn file at
+//! the final path. Torn or bit-flipped files are rejected by the footer
+//! CRC before any tensor is trusted.
+//!
+//! v1 files (per-f32 writes, no checksums, no step) are still loadable;
+//! they report step 0.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::baselines::model_ref::ModelParams;
+use crate::util::failpoint;
 
 const MAGIC: &[u8; 4] = b"PGCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Byte offset of the `e` tensor's raw f32 data in a v2 file.
+pub const V2_E_OFFSET: u64 = 40;
+/// Byte offset of the `e` tensor's raw f32 data in a v1 file.
+pub const V1_E_OFFSET: u64 = 32;
 
-pub fn save(path: &Path, p: &ModelParams) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).ok();
+// ------------------------------------------------------------------ CRC32
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), table built on first use.
+fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
     }
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(MAGIC)?;
-    for v in [VERSION, p.vocab as u32, p.dim as u32, p.window as u32, p.hidden as u32] {
-        f.write_all(&v.to_le_bytes())?;
+    !c
+}
+
+// ------------------------------------------------------------------- save
+
+/// Bulk-serialize one tensor: length word, raw f32 LE bytes, CRC32 of
+/// the raw bytes.
+fn push_tensor(out: &mut Vec<u8>, t: &[f32]) {
+    out.extend_from_slice(&(t.len() as u64).to_le_bytes());
+    let start = out.len();
+    out.reserve(t.len() * 4);
+    for x in t {
+        out.extend_from_slice(&x.to_le_bytes());
     }
+    let crc = crc32(&out[start..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// The full v2 byte image of a checkpoint (including footer CRC).
+fn serialize(p: &ModelParams, step: u64) -> Vec<u8> {
+    let n_elems = p.e.len() + p.w1.len() + p.b1.len() + p.w2.len() + p.b2.len();
+    let mut out = Vec::with_capacity(32 + n_elems * 4 + 5 * 12 + 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    for v in [p.vocab as u32, p.dim as u32, p.window as u32, p.hidden as u32] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&step.to_le_bytes());
     for tensor in [&p.e, &p.w1, &p.b1, &p.w2, &p.b2] {
-        f.write_all(&(tensor.len() as u64).to_le_bytes())?;
-        for x in tensor.iter() {
-            f.write_all(&x.to_le_bytes())?;
+        push_tensor(&mut out, tensor);
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Hidden sibling used for the write-then-rename dance.
+fn tmp_path(path: &Path) -> PathBuf {
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("ckpt");
+    path.with_file_name(format!(".{name}.tmp"))
+}
+
+/// Save at step 0. Kept for callers that don't track a step counter.
+pub fn save(path: &Path, p: &ModelParams) -> Result<()> {
+    save_at_step(path, p, 0)
+}
+
+/// Atomically write a v2 checkpoint: tmp file + fsync + rename. On any
+/// error the destination is untouched (at worst a `.tmp` sibling is left
+/// behind, which loaders and [`latest_valid`] ignore).
+pub fn save_at_step(path: &Path, p: &ModelParams, step: u64) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
         }
     }
-    f.flush()?;
+    let bytes = serialize(p, step);
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        // Failpoint `ckpt.write.partial`: simulate a crash mid-write —
+        // half the image reaches disk, the rename never happens.
+        if failpoint::fire("ckpt.write.partial") {
+            f.write_all(&bytes[..bytes.len() / 2])?;
+            f.sync_all()?;
+            bail!("failpoint ckpt.write.partial: crashed mid-write to {}", tmp.display());
+        }
+        f.write_all(&bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    if failpoint::fire("ckpt.rename.err") {
+        bail!("failpoint ckpt.rename.err: rename to {} failed", path.display());
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    // Make the rename itself durable (best effort; not all platforms
+    // support fsync on directories).
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
     Ok(())
 }
 
+/// Write a v1 (legacy, unchecksummed) checkpoint. Only used by tests and
+/// the compat story; new code always writes v2.
+#[doc(hidden)]
+pub fn save_v1(path: &Path, p: &ModelParams) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        }
+    }
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    for v in [1u32, p.vocab as u32, p.dim as u32, p.window as u32, p.hidden as u32] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for tensor in [&p.e, &p.w1, &p.b1, &p.w2, &p.b2] {
+        out.extend_from_slice(&(tensor.len() as u64).to_le_bytes());
+        for x in tensor.iter() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+// ------------------------------------------------------------------- load
+
+/// Cursor over the checkpoint image with field-named truncation errors.
+struct Cur<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, field: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.data.len());
+        let end = end.ok_or_else(|| {
+            anyhow!(
+                "checkpoint truncated in {field}: need {n} bytes at offset {}, file has {}",
+                self.pos,
+                self.data.len()
+            )
+        })?;
+        let s = &self.data[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self, field: &str) -> Result<u32> {
+        let b = self.take(4, field)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, field: &str) -> Result<u64> {
+        let b = self.take(8, field)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+fn read_tensor(cur: &mut Cur<'_>, expect: usize, name: &str, checked: bool) -> Result<Vec<f32>> {
+    let n = cur.u64(&format!("{name} length"))? as usize;
+    if n != expect {
+        bail!("tensor {name}: {n} elements, expected {expect}");
+    }
+    let bytes = cur.take(n * 4, &format!("{name} data"))?;
+    if checked {
+        let want = cur.u32(&format!("{name} checksum"))?;
+        let got = crc32(bytes);
+        if got != want {
+            bail!("tensor {name}: CRC mismatch (stored {want:#010x}, computed {got:#010x})");
+        }
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Load a checkpoint (v1 or v2), discarding the step counter.
 pub fn load(path: &Path) -> Result<ModelParams> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-    );
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    load_with_step(path).map(|(p, _)| p)
+}
+
+/// Load a checkpoint and the training step it was captured at (0 for v1
+/// files, which predate the step field). v2 files are verified end to
+/// end: footer CRC over the whole image first, then per-tensor CRCs and
+/// length checks — a torn or corrupt file is an `Err`, never a silently
+/// wrong model.
+pub fn load_with_step(path: &Path) -> Result<(ModelParams, u64)> {
+    let data =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut cur = Cur { data: &data, pos: 0 };
+    let magic = cur.take(4, "magic")?;
+    if magic != MAGIC {
         bail!("{} is not a polyglot checkpoint", path.display());
     }
-    let mut u32buf = [0u8; 4];
-    let mut read_u32 = |f: &mut dyn Read| -> Result<u32> {
-        f.read_exact(&mut u32buf)?;
-        Ok(u32::from_le_bytes(u32buf))
+    let version = cur.u32("version")?;
+    let checked = match version {
+        1 => false,
+        2 => true,
+        v => bail!("checkpoint version {v} unsupported"),
     };
-    let version = read_u32(&mut f)?;
-    if version != VERSION {
-        bail!("checkpoint version {version} unsupported");
-    }
-    let vocab = read_u32(&mut f)? as usize;
-    let dim = read_u32(&mut f)? as usize;
-    let window = read_u32(&mut f)? as usize;
-    let hidden = read_u32(&mut f)? as usize;
-
-    let read_tensor = |f: &mut dyn Read, expect: usize, name: &str| -> Result<Vec<f32>> {
-        let mut u64buf = [0u8; 8];
-        f.read_exact(&mut u64buf)?;
-        let n = u64::from_le_bytes(u64buf) as usize;
-        if n != expect {
-            bail!("tensor {name}: {n} elements, expected {expect}");
+    if checked {
+        // Whole-file integrity first: nothing past this point is trusted
+        // until the footer CRC over every preceding byte matches.
+        if data.len() < 36 {
+            bail!("checkpoint truncated in header: {} bytes", data.len());
         }
-        let mut bytes = vec![0u8; n * 4];
-        f.read_exact(&mut bytes)?;
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    };
+        let body = &data[..data.len() - 4];
+        let want = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+        let got = crc32(body);
+        if got != want {
+            bail!(
+                "{}: footer CRC mismatch (stored {want:#010x}, computed {got:#010x}) — torn or corrupt checkpoint",
+                path.display()
+            );
+        }
+    }
+    let vocab = cur.u32("vocab")? as usize;
+    let dim = cur.u32("dim")? as usize;
+    let window = cur.u32("window")? as usize;
+    let hidden = cur.u32("hidden")? as usize;
+    let step = if checked { cur.u64("step")? } else { 0 };
     let concat = window * dim;
-    let e = read_tensor(&mut f, vocab * dim, "e")?;
-    let w1 = read_tensor(&mut f, concat * hidden, "w1")?;
-    let b1 = read_tensor(&mut f, hidden, "b1")?;
-    let w2 = read_tensor(&mut f, hidden, "w2")?;
-    let b2 = read_tensor(&mut f, 1, "b2")?;
-    Ok(ModelParams { vocab, dim, window, hidden, e, w1, b1, w2, b2 })
+    // Validate dims before allocating tensor space: a corrupt v1 header
+    // (no CRC to catch it) must not trigger an absurd allocation.
+    let n_elems = vocab
+        .checked_mul(dim)
+        .and_then(|e| e.checked_add(concat.checked_mul(hidden)?))
+        .and_then(|e| e.checked_add(2 * hidden + 1))
+        .ok_or_else(|| anyhow!("checkpoint header dims overflow"))?;
+    let need = n_elems
+        .checked_mul(4)
+        .and_then(|b| b.checked_add(24 + 5 * 8))
+        .ok_or_else(|| anyhow!("checkpoint header dims overflow"))?;
+    if data.len() < need {
+        bail!(
+            "checkpoint truncated: header promises {n_elems} elements ({need} bytes min), file has {}",
+            data.len()
+        );
+    }
+    let e = read_tensor(&mut cur, vocab * dim, "e", checked)?;
+    let w1 = read_tensor(&mut cur, concat * hidden, "w1", checked)?;
+    let b1 = read_tensor(&mut cur, hidden, "b1", checked)?;
+    let w2 = read_tensor(&mut cur, hidden, "w2", checked)?;
+    let b2 = read_tensor(&mut cur, 1, "b2", checked)?;
+    if checked && cur.pos != data.len() - 4 {
+        bail!(
+            "checkpoint has {} trailing bytes after b2",
+            data.len() - 4 - cur.pos
+        );
+    }
+    Ok((ModelParams { vocab, dim, window, hidden, e, w1, b1, w2, b2 }, step))
+}
+
+// ----------------------------------------------------------- resume scan
+
+/// Scan `dir` for `*.pgck` files and return the newest checkpoint that
+/// loads cleanly, as `(path, params, step)`. Torn, corrupt, or foreign
+/// files are skipped with a note on stderr — a crash mid-save (tmp file
+/// left behind) or a partially transferred file never blocks resume.
+/// "Newest" means highest step, breaking ties by modification time.
+/// Returns `Ok(None)` for a missing or empty directory.
+pub fn latest_valid(dir: &Path) -> Result<Option<(PathBuf, ModelParams, u64)>> {
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(anyhow!("scanning checkpoint dir {}: {e}", dir.display()));
+        }
+    };
+    let mut candidates: Vec<(u64, std::time::SystemTime, PathBuf)> = Vec::new();
+    for entry in rd {
+        let entry = entry.with_context(|| format!("scanning {}", dir.display()))?;
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("pgck") {
+            continue;
+        }
+        // Cheap header peek for ordering; full validation happens below.
+        let step = peek_step(&path).unwrap_or(0);
+        let mtime = entry
+            .metadata()
+            .and_then(|m| m.modified())
+            .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        candidates.push((step, mtime, path));
+    }
+    candidates.sort_by(|a, b| (a.0, a.1, &a.2).cmp(&(b.0, b.1, &b.2)));
+    while let Some((_, _, path)) = candidates.pop() {
+        match load_with_step(&path) {
+            Ok((params, step)) => return Ok(Some((path, params, step))),
+            Err(e) => {
+                eprintln!("checkpoint: skipping {} ({e:#})", path.display());
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// The step field from a v2 header (None for v1/foreign/short files).
+fn peek_step(path: &Path) -> Option<u64> {
+    let mut head = [0u8; 32];
+    let mut f = std::fs::File::open(path).ok()?;
+    std::io::Read::read_exact(&mut f, &mut head).ok()?;
+    if &head[0..4] != MAGIC || u32::from_le_bytes(head[4..8].try_into().unwrap()) != 2 {
+        return None;
+    }
+    Some(u64::from_le_bytes(head[24..32].try_into().unwrap()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("pg-ckpt-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
-    fn round_trip() {
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC-32 check values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn round_trip_with_step() {
         let p = ModelParams::init(50, 4, 3, 6, 99);
-        let dir = std::env::temp_dir().join(format!("pg-ckpt-{}", std::process::id()));
+        let dir = tmp_dir("rt");
         let path = dir.join("model.pgck");
-        save(&path, &p).unwrap();
-        let q = load(&path).unwrap();
+        save_at_step(&path, &p, 1234).unwrap();
+        let (q, step) = load_with_step(&path).unwrap();
+        assert_eq!(step, 1234);
         assert_eq!(p.vocab, q.vocab);
         assert_eq!(p.e, q.e);
         assert_eq!(p.w1, q.w1);
+        assert_eq!(p.b1, q.b1);
+        assert_eq!(p.w2, q.w2);
+        assert_eq!(p.b2, q.b2);
+        // No tmp file left behind after a clean save.
+        assert!(!tmp_path(&path).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let p = ModelParams::init(30, 3, 3, 4, 7);
+        let dir = tmp_dir("v1");
+        let path = dir.join("old.pgck");
+        save_v1(&path, &p).unwrap();
+        let (q, step) = load_with_step(&path).unwrap();
+        assert_eq!(step, 0, "v1 has no step field");
+        assert_eq!(p.e, q.e);
         assert_eq!(p.b2, q.b2);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn rejects_non_checkpoint() {
-        let dir = std::env::temp_dir().join(format!("pg-ckpt-bad-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("bad");
         let path = dir.join("bad.pgck");
         std::fs::write(&path, b"NOPE....").unwrap();
         assert!(load(&path).is_err());
@@ -107,14 +426,148 @@ mod tests {
     }
 
     #[test]
-    fn rejects_truncated() {
+    fn truncation_rejected_at_every_field_boundary() {
+        // A v2 file cut at *any* prefix length must fail to load — the
+        // footer CRC guarantees it, and the error should never be a
+        // panic. Sweep every boundary and a byte into each field.
         let p = ModelParams::init(20, 2, 3, 2, 1);
-        let dir = std::env::temp_dir().join(format!("pg-ckpt-trunc-{}", std::process::id()));
+        let dir = tmp_dir("trunc");
         let path = dir.join("t.pgck");
-        save(&path, &p).unwrap();
+        save_at_step(&path, &p, 7).unwrap();
         let bytes = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(load(&path).is_err());
+        let e_bytes = p.e.len() * 4;
+        let boundaries = [
+            0usize, // empty file
+            2,      // mid-magic
+            4,      // after magic (version missing)
+            6,      // mid-version
+            8,      // after version (dims missing)
+            12, 16, 20, 24, // each dim boundary
+            28, // mid-step
+            32, // full header, e length missing
+            36, // mid e-length
+            40, // e length present, data missing
+            40 + e_bytes / 2, // mid e-data
+            40 + e_bytes, // e data complete, its CRC missing
+            40 + e_bytes + 4, // e complete, w1 length missing
+            bytes.len() - 5, // mid-footer
+            bytes.len() - 4, // footer missing entirely
+            bytes.len() - 1, // footer truncated
+        ];
+        let cut = dir.join("cut.pgck");
+        for &n in &boundaries {
+            std::fs::write(&cut, &bytes[..n]).unwrap();
+            assert!(
+                load_with_step(&cut).is_err(),
+                "truncation to {n}/{} bytes must be rejected",
+                bytes.len()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bit_flip_rejected_anywhere() {
+        let p = ModelParams::init(12, 2, 3, 2, 5);
+        let dir = tmp_dir("flip");
+        let path = dir.join("f.pgck");
+        save_at_step(&path, &p, 3).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let flipped = dir.join("flipped.pgck");
+        // Flip one bit in the header, in a tensor, and in the footer.
+        for pos in [9usize, 50, bytes.len() - 2] {
+            let mut b = bytes.clone();
+            b[pos] ^= 0x10;
+            std::fs::write(&flipped, &b).unwrap();
+            assert!(load(&flipped).is_err(), "bit flip at {pos} must be rejected");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_valid_picks_newest_and_skips_torn() {
+        let dir = tmp_dir("latest");
+        let p1 = ModelParams::init(16, 2, 3, 2, 1);
+        let p2 = ModelParams::init(16, 2, 3, 2, 2);
+        save_at_step(&dir.join("step-00000010.pgck"), &p1, 10).unwrap();
+        save_at_step(&dir.join("step-00000020.pgck"), &p2, 20).unwrap();
+        // Newest-by-step file is torn: resume must fall back to step 10.
+        let torn = std::fs::read(dir.join("step-00000020.pgck")).unwrap();
+        let mut torn30 = torn.clone();
+        torn30[24..32].copy_from_slice(&30u64.to_le_bytes());
+        std::fs::write(
+            dir.join("step-00000030.pgck"),
+            &torn30[..torn30.len() / 2],
+        )
+        .unwrap();
+        // Leftover tmp from a crashed save is ignored outright.
+        std::fs::write(dir.join(".step-00000040.pgck.tmp"), b"garbage").unwrap();
+        let (path, params, step) = latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(step, 20);
+        assert!(path.ends_with("step-00000020.pgck"));
+        assert_eq!(params.e, p2.e);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_valid_empty_or_missing_dir() {
+        let dir = tmp_dir("empty");
+        assert!(latest_valid(&dir).unwrap().is_none());
+        assert!(latest_valid(&dir.join("nope")).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failpoint_partial_write_leaves_destination_untouched() {
+        let dir = tmp_dir("fp");
+        let path = dir.join("m.pgck");
+        let p1 = ModelParams::init(16, 2, 3, 2, 1);
+        let p2 = ModelParams::init(16, 2, 3, 2, 2);
+        save_at_step(&path, &p1, 5).unwrap();
+        {
+            let _fp = failpoint::scoped("ckpt.write.partial=1");
+            let err = save_at_step(&path, &p2, 6).unwrap_err();
+            assert!(format!("{err:#}").contains("ckpt.write.partial"), "{err:#}");
+        }
+        // Old checkpoint intact; the torn image only ever hit the tmp.
+        let (q, step) = load_with_step(&path).unwrap();
+        assert_eq!(step, 5);
+        assert_eq!(q.e, p1.e);
+        let tmp = tmp_path(&path);
+        assert!(tmp.exists(), "torn tmp left behind for post-mortem");
+        assert!(load(&tmp).is_err(), "torn tmp must never load");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failpoint_rename_err_keeps_old_file() {
+        let dir = tmp_dir("fpr");
+        let path = dir.join("m.pgck");
+        let p1 = ModelParams::init(16, 2, 3, 2, 1);
+        save_at_step(&path, &p1, 5).unwrap();
+        {
+            let _fp = failpoint::scoped("ckpt.rename.err=1");
+            let p2 = ModelParams::init(16, 2, 3, 2, 2);
+            assert!(save_at_step(&path, &p2, 6).is_err());
+        }
+        assert_eq!(load_with_step(&path).unwrap().1, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn create_dir_failure_is_reported() {
+        let dir = tmp_dir("nodir");
+        // A regular file where a directory is needed: create_dir_all must
+        // fail, and save must surface it (not swallow it and then fail
+        // confusingly at File::create).
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, b"x").unwrap();
+        let p = ModelParams::init(8, 2, 3, 2, 1);
+        let err = save(&blocker.join("m.pgck"), &p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("creating checkpoint dir"),
+            "{err:#}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

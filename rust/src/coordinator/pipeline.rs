@@ -75,12 +75,20 @@ pub struct RunOptions {
     pub quiet: bool,
     /// Stream JSONL run events to this path (empty = off).
     pub event_log: String,
+    /// Directory for crash-safe checkpoints (empty = checkpointing off).
+    pub checkpoint_dir: String,
+    /// Save a checkpoint roughly every N steps (0 = final state only).
+    pub checkpoint_every: usize,
+    /// Resume from the newest *valid* checkpoint in `checkpoint_dir`
+    /// before training; torn or corrupt files are skipped by checksum.
+    pub resume: bool,
 }
 
 impl Default for RunOptions {
     fn default() -> Self {
         Self { size: ModelSize::Main, steps: 500, eval_every: 0, stop_on_converge: false,
-               quiet: false, event_log: String::new() }
+               quiet: false, event_log: String::new(), checkpoint_dir: String::new(),
+               checkpoint_every: 0, resume: false }
     }
 }
 
@@ -95,6 +103,27 @@ pub fn run_training<'rt>(
 ) -> Result<(Trainer<'rt>, TrainReport)> {
     let mut trainer = Trainer::new(rt, cfg, opts.size)?;
     let dims = trainer.dims.clone();
+
+    // Resume-from-latest-valid: scan the checkpoint dir, take the newest
+    // file whose checksums verify, and fast-forward the step counter.
+    // Torn/corrupt files (crashed saves) are skipped, not fatal.
+    let mut resume_step = 0usize;
+    if opts.resume && !opts.checkpoint_dir.is_empty() {
+        if let Some((path, params, saved_step)) =
+            super::checkpoint::latest_valid(Path::new(&opts.checkpoint_dir))?
+        {
+            trainer.set_params(&params).with_context(|| {
+                format!("restoring checkpoint {}", path.display())
+            })?;
+            resume_step = (saved_step as usize).min(opts.steps);
+            if !opts.quiet {
+                println!(
+                    "resumed from {} at step {saved_step}",
+                    path.display()
+                );
+            }
+        }
+    }
 
     let shards = split_shards(corpus.sentences.clone(), cfg.data.producers, cfg.training.seed);
     let batcher = Batcher::spawn(
@@ -151,7 +180,8 @@ pub fn run_training<'rt>(
     let mut loss_curve = Vec::new();
     let t0 = Instant::now();
     let fused = cfg.training.fused_steps.max(1);
-    let mut step = 0usize;
+    let mut step = resume_step;
+    let mut last_ckpt = resume_step;
     while step < opts.steps {
         let loss = if fused > 1 && step + fused <= opts.steps {
             let batches: Vec<_> = (0..fused)
@@ -179,6 +209,17 @@ pub fn run_training<'rt>(
                 log.step(step as u64, trainer.metrics.recent_loss(10),
                          trainer.metrics.rate())?;
             }
+        }
+
+        // Periodic crash-safe checkpoint. Fused stepping advances `step`
+        // in strides, so compare against the last save instead of testing
+        // divisibility (which a stride could jump over).
+        if !opts.checkpoint_dir.is_empty()
+            && opts.checkpoint_every > 0
+            && step - last_ckpt >= opts.checkpoint_every
+        {
+            save_checkpoint(&trainer, &opts.checkpoint_dir, step)?;
+            last_ckpt = step;
         }
 
         if let Some(eb) = &eval_batch {
@@ -213,6 +254,12 @@ pub fn run_training<'rt>(
     }
     batcher.shutdown();
 
+    // Final-state checkpoint (skipped if the periodic save already
+    // captured this exact step, or if no steps ran at all).
+    if !opts.checkpoint_dir.is_empty() && step > last_ckpt {
+        save_checkpoint(&trainer, &opts.checkpoint_dir, step)?;
+    }
+
     let rates = trainer.metrics.rate_summary();
     let report = TrainReport {
         steps: trainer.metrics.steps,
@@ -226,4 +273,13 @@ pub fn run_training<'rt>(
         converged: tracker.converged().copied(),
     };
     Ok((trainer, report))
+}
+
+/// Write a crash-safe (tmp + fsync + rename, checksummed) checkpoint of
+/// the trainer's current parameters tagged with its step counter.
+fn save_checkpoint(trainer: &Trainer<'_>, dir: &str, step: usize) -> Result<()> {
+    let params = trainer.params_host().context("downloading params to checkpoint")?;
+    let path = Path::new(dir).join(format!("step-{step:08}.pgck"));
+    super::checkpoint::save_at_step(&path, &params, step as u64)
+        .with_context(|| format!("saving checkpoint {}", path.display()))
 }

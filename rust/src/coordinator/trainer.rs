@@ -401,7 +401,7 @@ fn host_step(h: &mut HostEngine, batch: &Batch, lr: f32) -> Result<f32> {
             let out =
                 model.grads_scaled(params, &windows[lo * c..hi * c], &corrupt[lo..hi], scale);
             *slots[t].lock().unwrap() = Some(out);
-        });
+        })?;
     }
 
     let mut total = 0.0f32;
@@ -432,12 +432,12 @@ fn host_step(h: &mut HostEngine, batch: &Batch, lr: f32) -> Result<f32> {
         }
         g.e_rows.clear();
     }
-    h.scatter.scatter_add(&mut h.params.e, d, &idx, &y);
+    h.scatter.scatter_add(&mut h.params.e, d, &idx, &y)?;
 
     // Dense head: tree-reduce merge of the (now rows-free) partials, then
     // one shared-rule application.
     let merged =
-        tree_reduce(h.scatter.pool(), partials, merge_grads).expect("at least one partial");
+        tree_reduce(h.scatter.pool(), partials, merge_grads)?.expect("at least one partial");
     merged.apply_dense(&mut h.params, lr);
     Ok(total * scale)
 }

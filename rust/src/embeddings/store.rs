@@ -25,10 +25,8 @@ use crate::text::vocab::Vocab;
 
 use super::knn::top_k_rows;
 
-/// Byte offset of the first `e`-matrix f32 in a `PGCK` v1 checkpoint:
-/// 4-byte magic + 5 little-endian u32 header words + the u64 tensor
-/// length that precedes the raw rows.
-const PGCK_E_OFFSET: u64 = 4 + 5 * 4 + 8;
+use crate::coordinator::checkpoint::{V1_E_OFFSET, V2_E_OFFSET};
+use crate::util::failpoint;
 
 enum Backing {
     Resident(Vec<f32>),
@@ -73,25 +71,42 @@ impl EmbeddingStore {
         EmbeddingStore::new(vocab, p.e.clone(), p.dim)
     }
 
-    /// Open a `PGCK` checkpoint and page embedding rows from it on
-    /// demand instead of loading the matrix. Only the header is read
-    /// eagerly (plus the hot cache once [`Self::warm`] runs).
+    /// Open a `PGCK` checkpoint (v1 or v2) and page embedding rows from
+    /// it on demand instead of loading the matrix. Only the header is
+    /// read eagerly (plus the hot cache once [`Self::warm`] runs). The
+    /// v2 layout keeps the `e` tensor's raw bytes contiguous (its CRC
+    /// sits *after* the data), so positioned row reads work unchanged —
+    /// only the base offset differs.
     pub fn paged(vocab: Vocab, checkpoint: &Path) -> Result<EmbeddingStore> {
         let mut file = File::open(checkpoint)
             .with_context(|| format!("opening {}", checkpoint.display()))?;
-        let mut header = [0u8; PGCK_E_OFFSET as usize];
-        file.read_exact(&mut header).context("reading checkpoint header")?;
-        if &header[..4] != b"PGCK" {
+        let mut head = [0u8; 8];
+        file.read_exact(&mut head).context("reading checkpoint header")?;
+        if &head[..4] != b"PGCK" {
             bail!("{} is not a polyglot checkpoint", checkpoint.display());
         }
-        let word = |i: usize| {
-            u32::from_le_bytes([header[4 + i * 4], header[5 + i * 4], header[6 + i * 4], header[7 + i * 4]])
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        // Both versions: 4 u32 dims next; v2 inserts a u64 step before
+        // the e-tensor length word.
+        let (rows, dim, elems, base) = match version {
+            1 => {
+                let mut rest = [0u8; 24];
+                file.read_exact(&mut rest).context("reading v1 checkpoint header")?;
+                let rows = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                let dim = u32::from_le_bytes(rest[4..8].try_into().unwrap()) as usize;
+                let elems = u64::from_le_bytes(rest[16..24].try_into().unwrap()) as usize;
+                (rows, dim, elems, V1_E_OFFSET)
+            }
+            2 => {
+                let mut rest = [0u8; 32];
+                file.read_exact(&mut rest).context("reading v2 checkpoint header")?;
+                let rows = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                let dim = u32::from_le_bytes(rest[4..8].try_into().unwrap()) as usize;
+                let elems = u64::from_le_bytes(rest[24..32].try_into().unwrap()) as usize;
+                (rows, dim, elems, V2_E_OFFSET)
+            }
+            v => bail!("checkpoint version {v} unsupported"),
         };
-        let (version, rows, dim) = (word(0), word(1) as usize, word(2) as usize);
-        if version != 1 {
-            bail!("checkpoint version {version} unsupported");
-        }
-        let elems = u64::from_le_bytes(header[24..32].try_into().unwrap()) as usize;
         if dim == 0 || elems != rows * dim {
             bail!("checkpoint e tensor is {elems} elements, expected {rows}x{dim}");
         }
@@ -102,7 +117,7 @@ impl EmbeddingStore {
             vocab,
             dim,
             rows,
-            backing: Backing::Paged { file, base: PGCK_E_OFFSET },
+            backing: Backing::Paged { file, base },
             hot: Vec::new(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -146,6 +161,17 @@ impl EmbeddingStore {
                 Ok(())
             }
             Backing::Paged { file, base } => {
+                // Failpoint `store.pread.eio`: a cold read off the paged
+                // backing fails as if the device returned EIO. Hot-cache
+                // hits never reach this path, so the Zipf head keeps
+                // serving while the tail is dark.
+                if failpoint::fire("store.pread.eio") {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        "failpoint store.pread.eio: injected I/O error",
+                    ))
+                    .with_context(|| format!("paging embedding row {id}"));
+                }
                 let mut bytes = vec![0u8; self.dim * 4];
                 read_at(file, base + (id * self.dim * 4) as u64, &mut bytes)
                     .with_context(|| format!("paging embedding row {id}"))?;
@@ -172,29 +198,30 @@ impl EmbeddingStore {
         self.read_row(id, dst)
     }
 
-    pub fn vector(&self, word: &str) -> Vec<f32> {
+    pub fn vector(&self, word: &str) -> Result<Vec<f32>> {
         self.vector_by_id(self.vocab.id(word))
     }
 
-    pub fn vector_by_id(&self, id: u32) -> Vec<f32> {
+    pub fn vector_by_id(&self, id: u32) -> Result<Vec<f32>> {
         let mut row = vec![0.0f32; self.dim];
-        self.fetch(id as usize, &mut row).expect("embedding row read");
-        row
+        self.fetch(id as usize, &mut row)?;
+        Ok(row)
     }
 
     /// Nearest neighbours of `word` among vocabulary entries (excluding
     /// itself and the specials). Streams rows through [`Self::fetch`],
-    /// so the Zipf head is served from cache on every backing.
-    pub fn neighbors(&self, word: &str, k: usize) -> Vec<(String, f32)> {
+    /// so the Zipf head is served from cache on every backing. A failed
+    /// row read (paged backing gone bad) is an `Err`, not a crash —
+    /// serving degrades per-request.
+    pub fn neighbors(&self, word: &str, k: usize) -> Result<Vec<(String, f32)>> {
         let id = self.vocab.id(word) as usize;
-        let q = self.vector_by_id(id as u32);
-        top_k_rows(self.vocab.len(), self.dim, &q, k, &[0, 1, id], |r, buf: &mut [f32]| {
+        let q = self.vector_by_id(id as u32)?;
+        Ok(top_k_rows(self.vocab.len(), self.dim, &q, k, &[0, 1, id], |r, buf: &mut [f32]| {
             self.fetch(r, buf)
-        })
-        .expect("embedding row read")
+        })?
         .into_iter()
         .map(|(i, s)| (self.vocab.word(i as u32).to_string(), s))
-        .collect()
+        .collect())
     }
 }
 
@@ -238,7 +265,7 @@ mod tests {
     #[test]
     fn neighbors_ranked_by_cosine() {
         let s = store();
-        let n = s.neighbors("aa", 2);
+        let n = s.neighbors("aa", 2).unwrap();
         assert_eq!(n[0].0, "bb");
         assert!(n[0].1 > 0.95);
         assert_ne!(n[1].0, "aa", "self must be excluded");
@@ -247,7 +274,7 @@ mod tests {
     #[test]
     fn vector_lookup_unknown_is_unk_row() {
         let s = store();
-        assert_eq!(s.vector("zzz"), s.vector_by_id(1));
+        assert_eq!(s.vector("zzz").unwrap(), s.vector_by_id(1).unwrap());
     }
 
     #[test]
@@ -286,12 +313,16 @@ mod tests {
         let mut paged = EmbeddingStore::paged(vocab, &path).unwrap();
         assert_eq!(paged.rows(), 40);
         for id in [0u32, 1, 3, 39] {
-            assert_eq!(paged.vector_by_id(id), resident.vector_by_id(id), "row {id}");
+            assert_eq!(
+                paged.vector_by_id(id).unwrap(),
+                resident.vector_by_id(id).unwrap(),
+                "row {id}"
+            );
         }
         // Warm the head: the same bits must now come from the cache.
         paged.warm(4).unwrap();
-        assert_eq!(paged.vector_by_id(3), resident.vector_by_id(3));
-        assert_eq!(paged.neighbors("aa", 2), resident.neighbors("aa", 2));
+        assert_eq!(paged.vector_by_id(3).unwrap(), resident.vector_by_id(3).unwrap());
+        assert_eq!(paged.neighbors("aa", 2).unwrap(), resident.neighbors("aa", 2).unwrap());
         let (hits, misses) = paged.cache_counters();
         assert!(hits >= 1 && misses >= 1);
         std::fs::remove_dir_all(&dir).ok();

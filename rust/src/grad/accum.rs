@@ -11,7 +11,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::baselines::model_ref::Grads;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{PoolPanic, ThreadPool};
 
 /// Merge two partial gradient sums (`a + b`). Dense tensors add
 /// elementwise; sparse embedding rows union with per-row vector adds.
@@ -48,8 +48,14 @@ pub fn merge_grads(mut a: Grads, b: Grads) -> Grads {
 
 /// Pairwise parallel reduction over the pool: level k merges pairs of
 /// level k-1 survivors concurrently, odd elements carry over. Returns
-/// `None` for empty input. Deterministic for a fixed input order.
-pub fn tree_reduce<T, F>(pool: &ThreadPool, items: Vec<T>, merge: F) -> Option<T>
+/// `Ok(None)` for empty input; a panicking merge surfaces as `Err`
+/// (partials in flight are dropped, never half-applied). Deterministic
+/// for a fixed input order.
+pub fn tree_reduce<T, F>(
+    pool: &ThreadPool,
+    items: Vec<T>,
+    merge: F,
+) -> Result<Option<T>, PoolPanic>
 where
     T: Send,
     F: Fn(T, T) -> T + Sync,
@@ -66,7 +72,7 @@ where
             let a = src[2 * p].lock().unwrap().take().expect("pair slot a");
             let b = src[2 * p + 1].lock().unwrap().take().expect("pair slot b");
             *out[p].lock().unwrap() = Some(merge(a, b));
-        });
+        })?;
         let mut next: Vec<T> = out
             .into_iter()
             .map(|m| m.into_inner().unwrap().expect("merge result"))
@@ -76,7 +82,7 @@ where
         }
         level = next;
     }
-    level.pop()
+    Ok(level.pop())
 }
 
 #[cfg(test)]
@@ -114,7 +120,7 @@ mod tests {
         let pool = ThreadPool::new(4);
         for n in [0usize, 1, 2, 3, 7, 8, 13, 64] {
             let items: Vec<u64> = (1..=n as u64).collect();
-            let got = tree_reduce(&pool, items, |a, b| a + b);
+            let got = tree_reduce(&pool, items, |a, b| a + b).unwrap();
             if n == 0 {
                 assert!(got.is_none());
             } else {
@@ -129,8 +135,21 @@ mod tests {
         // concatenation (non-commutative) must come out identical.
         let pool = ThreadPool::new(8);
         let mk = || (0..11).map(|i| i.to_string()).collect::<Vec<String>>();
-        let a = tree_reduce(&pool, mk(), |x, y| format!("({x}{y})")).unwrap();
-        let b = tree_reduce(&pool, mk(), |x, y| format!("({x}{y})")).unwrap();
+        let a = tree_reduce(&pool, mk(), |x, y| format!("({x}{y})")).unwrap().unwrap();
+        let b = tree_reduce(&pool, mk(), |x, y| format!("({x}{y})")).unwrap().unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tree_reduce_contains_panicking_merge() {
+        let pool = ThreadPool::new(4);
+        let err = tree_reduce(&pool, vec![1u64, 2, 3, 4], |a, b| {
+            assert!(a + b != 3, "bad pair");
+            a + b
+        })
+        .unwrap_err();
+        assert!(err.payload().contains("bad pair"));
+        // the pool and the reduce both still work
+        assert_eq!(tree_reduce(&pool, vec![1u64, 2, 3, 4], |a, b| a + b).unwrap(), Some(10));
     }
 }

@@ -18,7 +18,7 @@
 #![allow(unsafe_code)]
 
 use crate::config::{GradCfg, GradMode};
-use crate::util::threadpool::{self, ThreadPool};
+use crate::util::threadpool::{self, PoolPanic, ThreadPool};
 
 use super::plan::ShardPlan;
 
@@ -87,13 +87,22 @@ impl ScatterEngine {
     }
 
     /// `w[idx[r]] += y[r]` for every update `r`, duplicates accumulated in
-    /// stream order. Dispatches serial or sharded per policy.
-    pub fn scatter_add(&self, w: &mut [f32], d: usize, idx: &[i32], y: &[f32]) {
+    /// stream order. Dispatches serial or sharded per policy. `Err` means
+    /// a shard task panicked — the weight rows that shard owned may hold
+    /// a partial update, so callers must treat the step as failed.
+    pub fn scatter_add(
+        &self,
+        w: &mut [f32],
+        d: usize,
+        idx: &[i32],
+        y: &[f32],
+    ) -> Result<(), PoolPanic> {
         if self.use_sharded(idx.len()) {
             let plan = ShardPlan::build(idx, self.threads, self.hot_rows);
-            scatter_add_sharded(w, d, idx, y, &plan, self.pool);
+            scatter_add_sharded(w, d, idx, y, &plan, self.pool)
         } else {
             crate::baselines::scatter::scatter_add_serial(w, d, idx, y);
+            Ok(())
         }
     }
 
@@ -107,7 +116,7 @@ pub fn scatter_add_sharded(
     y: &[f32],
     plan: &ShardPlan,
     pool: &ThreadPool,
-) {
+) -> Result<(), PoolPanic> {
     assert_eq!(y.len(), idx.len() * d);
     assert!(d > 0 && w.len() % d == 0);
     assert_eq!(plan.updates(), idx.len(), "plan does not cover the update stream");
@@ -134,7 +143,7 @@ pub fn scatter_add_sharded(
                 }
             }
         }
-    });
+    })
 }
 
 #[cfg(test)]
@@ -162,7 +171,7 @@ mod tests {
         let mut a = w0.clone();
         let mut b = w0;
         scatter_add_serial(&mut a, 8, &idx, &y);
-        engine.scatter_add(&mut b, 8, &idx, &y);
+        engine.scatter_add(&mut b, 8, &idx, &y).unwrap();
         assert_eq!(a, b, "sharded scatter must be bitwise-identical to serial");
     }
 
@@ -182,6 +191,6 @@ mod tests {
     fn sharded_out_of_range_panics() {
         let engine = ScatterEngine::new(&cfg(GradMode::Sharded, 2, 0));
         let mut w = vec![0.0f32; 8];
-        engine.scatter_add(&mut w, 2, &[9], &[1.0, 1.0]);
+        let _ = engine.scatter_add(&mut w, 2, &[9], &[1.0, 1.0]);
     }
 }

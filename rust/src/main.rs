@@ -48,6 +48,21 @@ fn cli() -> Cli {
                         help: "checkpoint output path",
                         default: Some("checkpoints/model.pgck"),
                     },
+                    FlagSpec {
+                        name: "checkpoint-dir",
+                        help: "crash-safe checkpoint dir (used when --checkpoint-every > 0 or --resume)",
+                        default: Some("checkpoints"),
+                    },
+                    FlagSpec {
+                        name: "checkpoint-every",
+                        help: "checkpoint every N steps (0 = final only)",
+                        default: Some("0"),
+                    },
+                    FlagSpec {
+                        name: "resume",
+                        help: "resume from newest valid checkpoint in --checkpoint-dir",
+                        default: None,
+                    },
                 ],
             },
             CommandSpec {
@@ -235,7 +250,23 @@ fn cmd_train(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()>
     };
     let corpus = coordinator::prepare_corpus(&cfg, vocab_cap)?;
     println!("[train] corpus: {} tokens, vocab {}", corpus.tokens, corpus.vocab.len());
-    let opts = RunOptions { steps: cfg.training.steps, ..RunOptions::default() };
+    // Crash-safe checkpointing is opt-in: the dir only activates when
+    // periodic saves or resume are requested (the final model still goes
+    // to --out either way).
+    let checkpoint_every = inv.get_usize("checkpoint-every")?;
+    let resume = inv.has("resume");
+    let checkpoint_dir = if checkpoint_every > 0 || resume {
+        inv.get("checkpoint-dir").unwrap().to_string()
+    } else {
+        String::new()
+    };
+    let opts = RunOptions {
+        steps: cfg.training.steps,
+        checkpoint_dir,
+        checkpoint_every,
+        resume,
+        ..RunOptions::default()
+    };
     let (trainer, report) = coordinator::run_training(rt.as_ref(), &cfg, &corpus, &opts)?;
     println!(
         "[train] done: {} steps, {} examples in {} — mean rate {:.1} ex/s (σ = {:.1}), final loss {:.4}",
@@ -280,12 +311,16 @@ fn cmd_serve(inv: &polyglot_gpu::cli::Invocation, mut cfg: Config) -> Result<()>
             .filter(|&(_, c)| c > 0)
             .map(|(edge, c)| format!("<={edge}:{c}"))
             .collect();
+        use std::sync::atomic::Ordering::Relaxed;
         println!(
-            "[serve] {} requests, {} batches, mean latency {}, hot-cache {:.0}% ({hits}/{lookups}), occupancy {}",
-            st.requests.load(std::sync::atomic::Ordering::Relaxed),
-            st.batches.load(std::sync::atomic::Ordering::Relaxed),
+            "[serve] {} requests, {} batches, mean latency {}, hot-cache {:.0}% ({hits}/{lookups}), \
+             shed {}, timeouts {}, occupancy {}",
+            st.requests.load(Relaxed),
+            st.batches.load(Relaxed),
             fmt::dur(st.mean_latency()),
             100.0 * hits as f64 / lookups as f64,
+            st.shed.load(Relaxed),
+            st.timeouts.load(Relaxed),
             if occupied.is_empty() { "-".to_string() } else { occupied.join(" ") },
         );
     }

@@ -26,6 +26,7 @@
 //!   parameters. Selected automatically when no artifacts directory is
 //!   present, so `polyglot serve` works even without `make artifacts`.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -37,6 +38,7 @@ use crate::baselines::model_ref::{ModelParams, RefModel};
 use crate::config::ServerCfg;
 use crate::coordinator::upload_params;
 use crate::runtime::{lit_i32, to_vec_f32, Executable, Runtime};
+use crate::util::failpoint;
 
 use super::protocol::Response;
 
@@ -45,6 +47,28 @@ pub struct ScoreRequest {
     pub reply: Sender<Response>,
     /// When the request entered the queue — the deadline anchor.
     pub enqueued: Instant,
+}
+
+/// What one batching-loop iteration did. All counts are requests, not
+/// batches; an idle poll returns the all-zero outcome.
+#[derive(Debug, Default)]
+pub struct DispatchOutcome {
+    /// Requests answered with a score.
+    pub served: usize,
+    /// Requests whose deadline lapsed in the queue — answered `TIMEOUT`,
+    /// never executed.
+    pub timed_out: usize,
+    /// Requests answered `ERR` because the dispatch failed or panicked.
+    pub failed: usize,
+    /// The failure message, when `failed > 0`.
+    pub error: Option<String>,
+}
+
+impl DispatchOutcome {
+    /// Nothing dequeued — the loop was idle this iteration.
+    pub fn is_idle(&self) -> bool {
+        self.served == 0 && self.timed_out == 0 && self.failed == 0
+    }
 }
 
 enum Scorer {
@@ -73,6 +97,10 @@ pub struct BatchExecutor {
     window: usize,
     max_batch: usize,
     max_wait: Duration,
+    /// Idle poll interval for the batching loop (`POLYGLOT_SERVE_IDLE_MS`).
+    idle: Duration,
+    /// Per-request queue deadline (`None` = requests never expire).
+    timeout: Option<Duration>,
 }
 
 impl BatchExecutor {
@@ -82,6 +110,9 @@ impl BatchExecutor {
             crate::util::env::serve_max_wait_ms().unwrap_or(cfg.max_wait_ms),
         );
         let max_batch = crate::util::env::serve_max_batch().unwrap_or(cfg.max_batch).max(1);
+        let idle = Duration::from_millis(crate::util::env::serve_idle_ms());
+        let timeout_ms = crate::util::env::serve_timeout_ms().unwrap_or(cfg.timeout_ms);
+        let timeout = (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms));
         match Self::try_artifact(artifacts_dir, &params) {
             Ok((scorer, artifact_batch)) => Ok(BatchExecutor {
                 scorer,
@@ -89,6 +120,8 @@ impl BatchExecutor {
                 window,
                 max_batch: max_batch.min(artifact_batch),
                 max_wait,
+                idle,
+                timeout,
             }),
             Err(e) => {
                 eprintln!(
@@ -101,6 +134,8 @@ impl BatchExecutor {
                     window,
                     max_batch,
                     max_wait,
+                    idle,
+                    timeout,
                 })
             }
         }
@@ -133,14 +168,18 @@ impl BatchExecutor {
     }
 
     /// Collect up to `max_batch` requests, waiting until the *first*
-    /// request's deadline (`enqueued + max_wait`), execute one dispatch,
-    /// reply. Returns the number of requests served (0 on idle timeout).
-    pub fn run_once(&self, rx: &Receiver<ScoreRequest>) -> Result<usize> {
+    /// request's deadline (`enqueued + max_wait`), expire requests whose
+    /// queue deadline lapsed (they answer `TIMEOUT` and are never
+    /// executed), dispatch the rest, reply. A failing or panicking
+    /// dispatch degrades that one batch to `ERR` replies — the loop, the
+    /// process, and later batches are untouched.
+    pub fn run_once(&self, rx: &Receiver<ScoreRequest>) -> DispatchOutcome {
+        let mut outcome = DispatchOutcome::default();
         // block briefly for the first request so the loop can poll stop flags
-        let first = match rx.recv_timeout(Duration::from_millis(20)) {
+        let first = match rx.recv_timeout(self.idle) {
             Ok(r) => r,
-            Err(RecvTimeoutError::Timeout) => return Ok(0),
-            Err(RecvTimeoutError::Disconnected) => return Ok(0),
+            Err(RecvTimeoutError::Timeout) => return outcome,
+            Err(RecvTimeoutError::Disconnected) => return outcome,
         };
         let mut reqs = vec![first];
         // Coalescing only pays when it amortizes a device dispatch; the
@@ -149,6 +188,66 @@ impl BatchExecutor {
         if self.coalesces() {
             collect_until_deadline(rx, &mut reqs, self.max_batch, self.max_wait);
         }
+        // Load shedding, stage two: a request that sat in the queue past
+        // its deadline answers TIMEOUT without ever being executed —
+        // under overload the server spends its cycles on requests whose
+        // clients are still waiting.
+        if let Some(t) = self.timeout {
+            let now = Instant::now();
+            reqs.retain(|r| {
+                if now.duration_since(r.enqueued) > t {
+                    let _ = r.reply.send(Response::Timeout);
+                    outcome.timed_out += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        if reqs.is_empty() {
+            return outcome;
+        }
+        // Failpoint `batcher.dispatch.sleep=sleep:<ms>`: stall the loop
+        // to pile the queue up (overload and timeout tests).
+        failpoint::fire("batcher.dispatch.sleep");
+        let n = reqs.len();
+        let result = if failpoint::fire("batcher.dispatch.err") {
+            Err(anyhow::anyhow!("failpoint batcher.dispatch.err"))
+        } else {
+            // Contain dispatch panics (including `pool.task.panic`
+            // surfacing as PoolPanic -> Err upstream, and anything that
+            // still unwinds) to this one batch.
+            catch_unwind(AssertUnwindSafe(|| {
+                if failpoint::fire("batcher.dispatch.panic") {
+                    panic!("failpoint batcher.dispatch.panic");
+                }
+                self.dispatch(&reqs)
+            }))
+            .unwrap_or_else(|p| {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                Err(anyhow::anyhow!("dispatch panicked: {msg}"))
+            })
+        };
+        match result {
+            Ok(()) => outcome.served = n,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in &reqs {
+                    let _ = r.reply.send(Response::Error(format!("dispatch failed: {msg}")));
+                }
+                outcome.failed = n;
+                outcome.error = Some(msg);
+            }
+        }
+        outcome
+    }
+
+    /// Execute one coalesced batch and send every reply.
+    fn dispatch(&self, reqs: &[ScoreRequest]) -> Result<()> {
         let n = reqs.len();
         match &self.scorer {
             Scorer::Artifact { plans, params, .. } => {
@@ -168,7 +267,7 @@ impl BatchExecutor {
                 let inputs: Vec<&xla::Literal> = params.iter().chain([&windows]).collect();
                 let out = exe.run(&inputs)?;
                 let scores = to_vec_f32(&out[0])?;
-                for (i, r) in reqs.into_iter().enumerate() {
+                for (i, r) in reqs.iter().enumerate() {
                     let _ = r.reply.send(Response::Score(scores[i]));
                 }
             }
@@ -176,9 +275,12 @@ impl BatchExecutor {
                 // The host model indexes the embedding table directly, so
                 // ids must be validated here (the protocol layer only
                 // rejects negatives) — a bad request answers ERR instead
-                // of panicking the batcher thread.
+                // of panicking the batcher thread. A poisoned lock (a
+                // previous dispatch panicked mid-score) is recovered:
+                // RefModel holds only per-call scratch, no state survives
+                // a dispatch, so the poison flag is noise here.
                 let vocab = params.vocab as i32;
-                let mut model = model.lock().unwrap();
+                let mut model = model.lock().unwrap_or_else(|p| p.into_inner());
                 for r in reqs {
                     let resp = if r.window.iter().any(|&i| i < 0 || i >= vocab) {
                         Response::Error(format!("window id out of range 0..{vocab}"))
@@ -189,7 +291,7 @@ impl BatchExecutor {
                 }
             }
         }
-        Ok(n)
+        Ok(())
     }
 }
 
@@ -291,6 +393,69 @@ mod tests {
         collect_until_deadline(&rx, &mut reqs, 8, Duration::from_secs(5));
         assert_eq!(reqs.len(), 8);
         assert!(t0.elapsed() < Duration::from_secs(1), "full batch must not wait the deadline");
+    }
+
+    fn host_executor(timeout_ms: u64) -> BatchExecutor {
+        let cfg = ServerCfg { timeout_ms, ..ServerCfg::default() };
+        let params = crate::baselines::model_ref::ModelParams::init(16, 2, 3, 2, 7);
+        // No artifacts at this path: falls back to the host scorer.
+        BatchExecutor::new(Path::new("/nonexistent-artifacts"), &cfg, params).unwrap()
+    }
+
+    #[test]
+    fn expired_requests_answer_timeout_and_never_execute() {
+        let exec = host_executor(10);
+        let (tx, rx) = mpsc::channel::<ScoreRequest>();
+        let (mut stale, stale_rx) = req(vec![1, 2, 3]);
+        stale.enqueued = Instant::now() - Duration::from_millis(500);
+        let (fresh, fresh_rx) = req(vec![1, 2, 3]);
+        tx.send(stale).unwrap();
+        tx.send(fresh).unwrap();
+        let o1 = exec.run_once(&rx);
+        let o2 = exec.run_once(&rx);
+        let (timed_out, served) = (o1.timed_out + o2.timed_out, o1.served + o2.served);
+        assert_eq!(timed_out, 1);
+        assert_eq!(served, 1);
+        assert_eq!(stale_rx.recv().unwrap(), Response::Timeout);
+        assert!(matches!(fresh_rx.recv().unwrap(), Response::Score(_)));
+    }
+
+    #[test]
+    fn dispatch_err_failpoint_degrades_one_batch() {
+        let exec = host_executor(0);
+        let (tx, rx) = mpsc::channel::<ScoreRequest>();
+        let _fp = crate::util::failpoint::scoped("batcher.dispatch.err=once");
+        let (r, reply) = req(vec![1, 2, 3]);
+        tx.send(r).unwrap();
+        let o = exec.run_once(&rx);
+        assert_eq!(o.failed, 1);
+        assert!(o.error.as_deref().unwrap().contains("batcher.dispatch.err"));
+        assert!(matches!(reply.recv().unwrap(), Response::Error(_)));
+        // The failpoint was `once`: the next request is served normally.
+        let (r, reply) = req(vec![1, 2, 3]);
+        tx.send(r).unwrap();
+        let o = exec.run_once(&rx);
+        assert_eq!(o.served, 1);
+        assert!(matches!(reply.recv().unwrap(), Response::Score(_)));
+    }
+
+    #[test]
+    fn dispatch_panic_is_contained_and_loop_recovers() {
+        let exec = host_executor(0);
+        let (tx, rx) = mpsc::channel::<ScoreRequest>();
+        let _fp = crate::util::failpoint::scoped("batcher.dispatch.panic=once");
+        let (r, reply) = req(vec![1, 2, 3]);
+        tx.send(r).unwrap();
+        let o = exec.run_once(&rx);
+        assert_eq!(o.failed, 1);
+        assert!(o.error.as_deref().unwrap().contains("panic"), "{:?}", o.error);
+        assert!(matches!(reply.recv().unwrap(), Response::Error(_)));
+        // Host-model mutex poison (if the panic hit mid-score) must not
+        // wedge the scorer: the next dispatch recovers the lock.
+        let (r, reply) = req(vec![1, 2, 3]);
+        tx.send(r).unwrap();
+        assert_eq!(exec.run_once(&rx).served, 1);
+        assert!(matches!(reply.recv().unwrap(), Response::Score(_)));
     }
 
     #[test]

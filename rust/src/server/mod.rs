@@ -45,6 +45,15 @@ pub struct ServerStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub total_latency_us: AtomicU64,
+    /// Score requests shed at admission (queue full, or server
+    /// draining) — answered `OVERLOADED` immediately, never queued.
+    pub shed: AtomicU64,
+    /// Score requests whose queue deadline lapsed before dispatch —
+    /// answered `TIMEOUT`, never executed.
+    pub timeouts: AtomicU64,
+    /// Score requests answered `ERR` because their batch's dispatch
+    /// failed or panicked.
+    pub dispatch_errors: AtomicU64,
     /// Dispatch counts by coalesced-batch size bucket (see
     /// [`OCCUPANCY_BUCKETS`]).
     pub occupancy: [AtomicU64; OCCUPANCY_BUCKETS],
@@ -113,22 +122,36 @@ impl Server {
                 .context("building batch executor")?,
         );
 
-        // Batching loop: collects deadline-bounded micro-batches and
-        // runs the shared plan; the interpreter's kernels fan out on
-        // the process-wide pool from inside `run`.
-        let (score_tx, score_rx) = mpsc::channel::<ScoreRequest>();
+        // Batching loop over a *bounded* admission queue: `try_send`
+        // from handlers sheds load the instant the queue fills instead
+        // of buffering unbounded work the server can't keep up with.
+        // On stop the loop keeps dispatching until the queue is drained
+        // (graceful shutdown: every admitted request gets an answer).
+        let queue_depth = crate::util::env::serve_queue().unwrap_or(cfg.queue_depth).max(1);
+        let (score_tx, score_rx) = mpsc::sync_channel::<ScoreRequest>(queue_depth);
         let b_exec = Arc::clone(&exec);
         let b_stats = Arc::clone(&stats);
         let b_stop = Arc::clone(&stop);
         let batcher_thread = std::thread::Builder::new()
             .name("batcher".into())
-            .spawn(move || {
-                while !b_stop.load(Ordering::Relaxed) {
-                    match b_exec.run_once(&score_rx) {
-                        Ok(0) => {}
-                        Ok(served) => b_stats.record_batch(served),
-                        Err(e) => eprintln!("batcher error: {e:#}"),
+            .spawn(move || loop {
+                let outcome = b_exec.run_once(&score_rx);
+                if outcome.served > 0 {
+                    b_stats.record_batch(outcome.served);
+                }
+                if outcome.timed_out > 0 {
+                    b_stats.timeouts.fetch_add(outcome.timed_out as u64, Ordering::Relaxed);
+                }
+                if outcome.failed > 0 {
+                    b_stats
+                        .dispatch_errors
+                        .fetch_add(outcome.failed as u64, Ordering::Relaxed);
+                    if let Some(e) = &outcome.error {
+                        eprintln!("batcher: dispatch degraded ({e})");
                     }
+                }
+                if b_stop.load(Ordering::Relaxed) && outcome.is_idle() {
+                    return;
                 }
             })
             .expect("spawn batcher");
@@ -151,10 +174,11 @@ impl Server {
                         let tx = score_tx.clone();
                         let st = Arc::clone(&l_stats);
                         let store = Arc::clone(&l_store);
+                        let conn_stop = Arc::clone(&l_stop);
                         std::thread::Builder::new()
                             .name("conn".into())
                             .spawn(move || {
-                                let _ = handle_conn(stream, tx, store, st, window);
+                                let _ = handle_conn(stream, tx, store, st, window, conn_stop);
                             })
                             .ok();
                     }
@@ -198,10 +222,11 @@ impl Server {
 
 fn handle_conn(
     stream: TcpStream,
-    score_tx: mpsc::Sender<ScoreRequest>,
+    score_tx: mpsc::SyncSender<ScoreRequest>,
     store: Arc<EmbeddingStore>,
     stats: Arc<ServerStats>,
     window: usize,
+    stop: Arc<AtomicBool>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
@@ -213,19 +238,42 @@ fn handle_conn(
             Err(msg) => Response::Error(msg),
             Ok(Request::Ping) => Response::Pong,
             Ok(Request::Score(window_ids)) => {
-                let (reply_tx, reply_rx) = mpsc::channel();
-                score_tx
-                    .send(ScoreRequest {
+                if stop.load(Ordering::Relaxed) {
+                    // Draining: queued work still completes, but no new
+                    // score work is admitted.
+                    stats.shed.fetch_add(1, Ordering::Relaxed);
+                    Response::Overloaded
+                } else {
+                    let (reply_tx, reply_rx) = mpsc::channel();
+                    let req = ScoreRequest {
                         window: window_ids,
                         reply: reply_tx,
                         enqueued: Instant::now(),
-                    })
-                    .map_err(|_| anyhow::anyhow!("batcher gone"))?;
-                reply_rx.recv().unwrap_or(Response::Error("batcher dropped".into()))
+                    };
+                    match score_tx.try_send(req) {
+                        Ok(()) => reply_rx
+                            .recv()
+                            .unwrap_or(Response::Error("batcher dropped".into())),
+                        Err(mpsc::TrySendError::Full(_)) => {
+                            // Queue full: shed immediately — an explicit
+                            // OVERLOADED beats an unbounded queue whose
+                            // tail latency nobody survives.
+                            stats.shed.fetch_add(1, Ordering::Relaxed);
+                            Response::Overloaded
+                        }
+                        Err(mpsc::TrySendError::Disconnected(_)) => {
+                            return Err(anyhow::anyhow!("batcher gone"));
+                        }
+                    }
+                }
             }
             // NN queries never cross a channel: the store is shared and
-            // its hot path is the resident Zipf head.
-            Ok(Request::Neighbors(word, k)) => Response::Neighbors(store.neighbors(&word, k)),
+            // its hot path is the resident Zipf head. A failed row read
+            // (paged backing gone bad) degrades this one request to ERR.
+            Ok(Request::Neighbors(word, k)) => match store.neighbors(&word, k) {
+                Ok(ns) => Response::Neighbors(ns),
+                Err(e) => Response::Error(format!("{e:#}")),
+            },
             Ok(Request::Quit) => break,
         };
         stats.requests.fetch_add(1, Ordering::Relaxed);

@@ -24,6 +24,10 @@ pub enum Response {
     Score(f32),
     Neighbors(Vec<(String, f32)>),
     Error(String),
+    /// Admission queue full — the request was shed before any work.
+    Overloaded,
+    /// The request's deadline lapsed before dispatch; it was never run.
+    Timeout,
 }
 
 impl Response {
@@ -37,6 +41,8 @@ impl Response {
                 format!("NN {}", body.join(" "))
             }
             Response::Error(e) => format!("ERR {e}"),
+            Response::Overloaded => "OVERLOADED".into(),
+            Response::Timeout => "TIMEOUT".into(),
         }
     }
 }
@@ -116,5 +122,7 @@ mod tests {
             "NN a:0.9000 b:0.8000"
         );
         assert!(Response::Error("boom".into()).render().starts_with("ERR"));
+        assert_eq!(Response::Overloaded.render(), "OVERLOADED");
+        assert_eq!(Response::Timeout.render(), "TIMEOUT");
     }
 }

@@ -28,10 +28,17 @@
 //! | `POLYGLOT_SERVE_MAX_BATCH` | `1\|2\|…`          | config value | config value  |
 //! | `POLYGLOT_SERVE_MAX_WAIT_MS` | `0\|1\|…`        | config value | config value  |
 //! | `POLYGLOT_SERVE_HOT_ROWS` | `0\|1\|…`           | config value | config value  |
+//! | `POLYGLOT_SERVE_IDLE_MS`  | `1\|2\|…`           | `20`         | `20`          |
+//! | `POLYGLOT_SERVE_TIMEOUT_MS` | `0\|1\|…`         | config value | config value  |
+//! | `POLYGLOT_SERVE_QUEUE`    | `1\|2\|…`           | config value | config value  |
+//! | `POLYGLOT_FAILPOINTS`     | `site=mode,…`       | disarmed     | site disarmed |
 //!
-//! The three serving knobs override the corresponding `server.*` config
+//! The serving knobs override the corresponding `server.*` config
 //! fields at server start (`None` = no override), so a load test can
 //! sweep batching policy without editing the config file.
+//! `POLYGLOT_FAILPOINTS` is parsed by [`super::failpoint`] (see its
+//! module doc for the site list and mode grammar) but shares this
+//! module's warn-don't-guess contract for malformed entries.
 //!
 //! `POLYGLOT_BACKEND` is the one knob where a typo is a hard error
 //! rather than a fallback: the caller asked for a *specific* backend and
@@ -53,12 +60,16 @@ pub const BACKEND: &str = "POLYGLOT_BACKEND";
 pub const SERVE_MAX_BATCH: &str = "POLYGLOT_SERVE_MAX_BATCH";
 pub const SERVE_MAX_WAIT_MS: &str = "POLYGLOT_SERVE_MAX_WAIT_MS";
 pub const SERVE_HOT_ROWS: &str = "POLYGLOT_SERVE_HOT_ROWS";
+pub const SERVE_IDLE_MS: &str = "POLYGLOT_SERVE_IDLE_MS";
+pub const SERVE_TIMEOUT_MS: &str = "POLYGLOT_SERVE_TIMEOUT_MS";
+pub const SERVE_QUEUE: &str = "POLYGLOT_SERVE_QUEUE";
+pub const FAILPOINTS: &str = "POLYGLOT_FAILPOINTS";
 
 fn var(name: &str) -> Option<String> {
     std::env::var(name).ok()
 }
 
-fn warn(name: &str, raw: &str, expected: &str, took: &str) {
+pub(crate) fn warn(name: &str, raw: &str, expected: &str, took: &str) {
     eprintln!("[env] {name}={raw:?} unrecognized (expected {expected}); {took}");
 }
 
@@ -280,6 +291,42 @@ pub fn parse_serve_hot_rows(raw: Option<&str>) -> Option<usize> {
     count_override(SERVE_HOT_ROWS, raw, 0)
 }
 
+/// `POLYGLOT_SERVE_IDLE_MS=n` sets the batcher's idle poll interval:
+/// how long `run_once` blocks for a first request before re-checking
+/// the stop flag (≥ 1; default 20 ms). The chaos suite tightens it so
+/// shutdown-drain tests don't serialize on the poll.
+pub fn serve_idle_ms() -> u64 {
+    parse_serve_idle_ms(var(SERVE_IDLE_MS).as_deref())
+}
+
+pub fn parse_serve_idle_ms(raw: Option<&str>) -> u64 {
+    count_override(SERVE_IDLE_MS, raw, 1).map(|n| n as u64).unwrap_or(20)
+}
+
+/// `POLYGLOT_SERVE_TIMEOUT_MS=n` sets the per-request deadline: a
+/// request still queued when `enqueued + n` ms lapse is answered
+/// `TIMEOUT` and never executed (overrides `server.timeout_ms`;
+/// 0 = deadlines off).
+pub fn serve_timeout_ms() -> Option<u64> {
+    parse_serve_timeout_ms(var(SERVE_TIMEOUT_MS).as_deref())
+}
+
+pub fn parse_serve_timeout_ms(raw: Option<&str>) -> Option<u64> {
+    count_override(SERVE_TIMEOUT_MS, raw, 0).map(|n| n as u64)
+}
+
+/// `POLYGLOT_SERVE_QUEUE=n` bounds the admission queue between the
+/// connection handlers and the batcher (≥ 1; overrides
+/// `server.queue_depth`). A full queue sheds: the request is answered
+/// `OVERLOADED` immediately instead of growing the backlog.
+pub fn serve_queue() -> Option<usize> {
+    parse_serve_queue(var(SERVE_QUEUE).as_deref())
+}
+
+pub fn parse_serve_queue(raw: Option<&str>) -> Option<usize> {
+    count_override(SERVE_QUEUE, raw, 1)
+}
+
 /// The backend pin: `POLYGLOT_BACKEND=pjrt|interp`. `None` means "no
 /// pin — probe". Unrecognized values are a hard error (see module doc).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -422,6 +469,23 @@ mod tests {
         assert_eq!(parse_serve_hot_rows(Some("0")), Some(0), "0 = cache off, a valid pin");
         assert_eq!(parse_serve_hot_rows(Some("4096")), Some(4096));
         assert_eq!(parse_serve_hot_rows(Some("all")), None);
+    }
+
+    #[test]
+    fn idle_timeout_queue_knobs_parse_and_fall_back() {
+        assert_eq!(parse_serve_idle_ms(None), 20);
+        assert_eq!(parse_serve_idle_ms(Some("")), 20);
+        assert_eq!(parse_serve_idle_ms(Some(" 2 ")), 2);
+        assert_eq!(parse_serve_idle_ms(Some("0")), 20, "a zero idle poll would spin");
+        assert_eq!(parse_serve_idle_ms(Some("soon")), 20);
+        assert_eq!(parse_serve_timeout_ms(None), None);
+        assert_eq!(parse_serve_timeout_ms(Some("0")), Some(0), "0 = deadlines off, a valid pin");
+        assert_eq!(parse_serve_timeout_ms(Some("40")), Some(40));
+        assert_eq!(parse_serve_timeout_ms(Some("-1")), None);
+        assert_eq!(parse_serve_queue(None), None);
+        assert_eq!(parse_serve_queue(Some("256")), Some(256));
+        assert_eq!(parse_serve_queue(Some("0")), None, "a zero-depth queue admits nothing");
+        assert_eq!(parse_serve_queue(Some("deep")), None);
     }
 
     #[test]

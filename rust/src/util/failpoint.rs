@@ -1,0 +1,370 @@
+//! Named failpoints: env-armed fault injection for the chaos suite.
+//!
+//! A *failpoint* is a named site in production code — a checkpoint
+//! write, a paged embedding read, a pool task — that can be armed to
+//! inject a fault (error, partial write, panic, delay) exactly where a
+//! real one would land. Sites are compiled in permanently and checked
+//! with [`fire`]; the disarmed fast path is one relaxed atomic load, no
+//! allocation, no branch into the registry, so leaving the calls in
+//! release builds costs nothing measurable.
+//!
+//! Arming comes from `POLYGLOT_FAILPOINTS` (parsed once, through the
+//! same warn-don't-guess contract as the rest of [`super::env`]) or, in
+//! tests, from [`scoped`], which installs a spec for the guard's
+//! lifetime and restores the previous one on drop. The spec grammar:
+//!
+//! ```text
+//! POLYGLOT_FAILPOINTS=site=mode[,site=mode...]
+//!
+//! mode:  1 | on | always   fire on every hit
+//!        once              fire on the first hit only
+//!        0 | off           disarmed (parsed, zero effect)
+//!        0.05              fire each hit with probability 0.05
+//!                          (deterministic per-site LCG, not wall-clock)
+//!        sleep:25          delay every hit 25 ms, never "fire"
+//! ```
+//!
+//! The crate's instrumented sites:
+//!
+//! | site                    | effect when fired                          |
+//! |-------------------------|--------------------------------------------|
+//! | `ckpt.write.partial`    | checkpoint save stops mid-tensor, leaving a torn tmp file |
+//! | `ckpt.rename.err`       | save fails after sync, before the atomic rename |
+//! | `store.pread.eio`       | paged embedding row read returns an injected EIO |
+//! | `batcher.dispatch.err`  | a batch dispatch errors; every request gets ERR |
+//! | `batcher.dispatch.panic`| a batch dispatch panics (contained by the batcher) |
+//! | `batcher.dispatch.sleep`| each dispatch is delayed (overload / timeout tests) |
+//! | `pool.task.panic`       | a scoped pool task panics at entry (scope returns Err) |
+//!
+//! What a fired site *does* lives at the site: `fire("x")` only answers
+//! "should this hit fault?" — keeping the injected behavior readable in
+//! the code it perturbs.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, OnceLock};
+use std::time::Duration;
+
+/// Arming mode of one site (see module doc for the spec grammar).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arm {
+    Off,
+    Always,
+    Once,
+    /// Fire each hit with this probability via a per-site deterministic
+    /// LCG — reproducible across runs, independent of wall clock.
+    Prob(f64),
+    /// Delay every hit by this many milliseconds; never fires.
+    SleepMs(u64),
+}
+
+struct Site {
+    name: String,
+    arm: Arm,
+    /// Hits consumed so far (drives `Once`).
+    hits: AtomicU64,
+    /// Per-site RNG state for `Prob` (seeded from the site name).
+    rng: AtomicU64,
+}
+
+struct Registry {
+    sites: Vec<Site>,
+}
+
+/// Fast disarmed gate: false ⇒ `fire` returns immediately.
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+static ENV_INIT: Once = Once::new();
+/// Serializes [`scoped`] users: the registry is process-global, so
+/// concurrent tests arming different specs would race. Guards hold this.
+static SCOPE_LOCK: Mutex<()> = Mutex::new(());
+
+fn registry() -> &'static Mutex<Registry> {
+    REGISTRY.get_or_init(|| Mutex::new(Registry { sites: Vec::new() }))
+}
+
+fn install(spec: &str) {
+    let sites: Vec<Site> = parse_spec(spec)
+        .into_iter()
+        .map(|(name, arm)| {
+            let rng = AtomicU64::new(fnv1a(&name) | 1);
+            Site { name, arm, hits: AtomicU64::new(0), rng }
+        })
+        .collect();
+    let armed = sites.iter().any(|s| s.arm != Arm::Off);
+    let mut reg = registry().lock().unwrap();
+    reg.sites = sites;
+    // Ordering: publish the sites before raising the gate so a racing
+    // `fire` never sees armed=true with an empty registry. (The mutex
+    // release already fences; the store is kept after it for clarity.)
+    drop(reg);
+    ANY_ARMED.store(armed, Ordering::SeqCst);
+}
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var(crate::util::env::FAILPOINTS) {
+            if !spec.trim().is_empty() {
+                install(&spec);
+            }
+        }
+    });
+}
+
+/// Should the failpoint named `site` fault on this hit?
+///
+/// Disarmed (the production state) this is one `Once` check plus one
+/// relaxed atomic load — zero allocations, zero registry traffic. Armed,
+/// the site's mode decides; `sleep:N` sites block here and return
+/// `false` (the delay *is* the fault).
+#[inline]
+pub fn fire(site: &str) -> bool {
+    init_from_env();
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    fire_slow(site)
+}
+
+#[cold]
+fn fire_slow(site: &str) -> bool {
+    let reg = registry().lock().unwrap();
+    let Some(s) = reg.sites.iter().find(|s| s.name == site) else {
+        return false;
+    };
+    let hit = s.hits.fetch_add(1, Ordering::Relaxed);
+    match s.arm {
+        Arm::Off => false,
+        Arm::Always => true,
+        Arm::Once => hit == 0,
+        Arm::Prob(p) => {
+            // splitmix64 step on the per-site state: deterministic for a
+            // fixed (site, hit index), independent of thread timing as
+            // long as hits are not raced (chaos tests serialize anyway).
+            let mut x = s.rng.load(Ordering::Relaxed).wrapping_add(0x9E37_79B9_7F4A_7C15);
+            s.rng.store(x, Ordering::Relaxed);
+            x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            x ^= x >> 31;
+            ((x >> 11) as f64) / ((1u64 << 53) as f64) < p
+        }
+        Arm::SleepMs(ms) => {
+            // Sleep outside the registry lock so a slow site cannot
+            // stall other sites' checks.
+            drop(reg);
+            std::thread::sleep(Duration::from_millis(ms));
+            false
+        }
+    }
+}
+
+/// Parse a `site=mode,...` spec. Unrecognized modes warn (same contract
+/// as every other `POLYGLOT_*` knob) and leave that site disarmed — a
+/// typo must never arm a *different* fault than asked for.
+pub fn parse_spec(spec: &str) -> Vec<(String, Arm)> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let Some((name, mode)) = entry.split_once('=') else {
+            crate::util::env::warn(
+                crate::util::env::FAILPOINTS,
+                entry,
+                "site=mode",
+                "ignoring this entry",
+            );
+            continue;
+        };
+        let name = name.trim().to_string();
+        if name.is_empty() {
+            crate::util::env::warn(
+                crate::util::env::FAILPOINTS,
+                entry,
+                "site=mode",
+                "ignoring this entry",
+            );
+            continue;
+        }
+        let arm = match parse_arm(mode.trim()) {
+            Some(a) => a,
+            None => {
+                crate::util::env::warn(
+                    crate::util::env::FAILPOINTS,
+                    mode.trim(),
+                    "1|on|always|once|0|off|<prob>|sleep:<ms>",
+                    &format!("leaving {name} disarmed"),
+                );
+                Arm::Off
+            }
+        };
+        out.push((name, arm));
+    }
+    out
+}
+
+fn parse_arm(mode: &str) -> Option<Arm> {
+    match mode.to_ascii_lowercase().as_str() {
+        "1" | "on" | "always" => return Some(Arm::Always),
+        "once" => return Some(Arm::Once),
+        "0" | "off" => return Some(Arm::Off),
+        _ => {}
+    }
+    if let Some(ms) = mode.strip_prefix("sleep:") {
+        return ms.parse::<u64>().ok().map(Arm::SleepMs);
+    }
+    match mode.parse::<f64>() {
+        Ok(p) if (0.0..=1.0).contains(&p) => {
+            Some(if p == 0.0 { Arm::Off } else if p == 1.0 { Arm::Always } else { Arm::Prob(p) })
+        }
+        _ => None,
+    }
+}
+
+/// Install `spec` for the guard's lifetime; the previous configuration
+/// is restored on drop. Guards serialize on a process-wide lock (the
+/// registry is global state), so scoped arming from concurrent tests
+/// queues instead of racing. Do not nest `scoped` calls on one thread —
+/// the lock is not reentrant.
+pub fn scoped(spec: &str) -> ScopedFailpoints {
+    // A panicking test body poisons the lock; the next guard's registry
+    // install fully overwrites the state, so poison carries no meaning.
+    let lock = SCOPE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    // Snapshot the current config so drop can restore it (env-armed or
+    // a previous install).
+    init_from_env();
+    let prev: Vec<(String, Arm)> = registry()
+        .lock()
+        .unwrap()
+        .sites
+        .iter()
+        .map(|s| (s.name.clone(), s.arm))
+        .collect();
+    install(spec);
+    ScopedFailpoints { prev, _lock: lock }
+}
+
+pub struct ScopedFailpoints {
+    prev: Vec<(String, Arm)>,
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for ScopedFailpoints {
+    fn drop(&mut self) {
+        let spec: Vec<String> = self
+            .prev
+            .iter()
+            .map(|(n, a)| {
+                let mode = match a {
+                    Arm::Off => "off".to_string(),
+                    Arm::Always => "always".to_string(),
+                    Arm::Once => "once".to_string(),
+                    Arm::Prob(p) => format!("{p}"),
+                    Arm::SleepMs(ms) => format!("sleep:{ms}"),
+                };
+                format!("{n}={mode}")
+            })
+            .collect();
+        install(&spec.join(","));
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_parses_documented_modes() {
+        let spec = "a=1, b=once, c=off, d=0.25, e=sleep:15, f=always, g=0";
+        let parsed = parse_spec(spec);
+        assert_eq!(parsed.len(), 7);
+        assert_eq!(parsed[0], ("a".into(), Arm::Always));
+        assert_eq!(parsed[1], ("b".into(), Arm::Once));
+        assert_eq!(parsed[2], ("c".into(), Arm::Off));
+        assert_eq!(parsed[3], ("d".into(), Arm::Prob(0.25)));
+        assert_eq!(parsed[4], ("e".into(), Arm::SleepMs(15)));
+        assert_eq!(parsed[5], ("f".into(), Arm::Always));
+        assert_eq!(parsed[6], ("g".into(), Arm::Off));
+    }
+
+    #[test]
+    fn spec_garbage_leaves_site_disarmed() {
+        // A typo must never arm a different fault than asked for.
+        let parsed = parse_spec("a=maybe, b=2.5, b=sleep:soon, =1, naked");
+        assert!(parsed.iter().all(|(_, a)| *a == Arm::Off));
+    }
+
+    #[test]
+    fn prob_edges_normalize() {
+        assert_eq!(parse_spec("a=0.0")[0].1, Arm::Off);
+        assert_eq!(parse_spec("a=1.0")[0].1, Arm::Always);
+    }
+
+    #[test]
+    fn disarmed_fire_is_false_and_scoped_arms() {
+        {
+            let _g = scoped("");
+            assert!(!fire("test.site.alpha"));
+        }
+        {
+            let _g = scoped("test.site.alpha=always");
+            assert!(fire("test.site.alpha"));
+            assert!(fire("test.site.alpha"), "always fires every hit");
+            assert!(!fire("test.site.beta"), "unknown sites never fire");
+        }
+        // restored on drop
+        let _g = scoped("");
+        assert!(!fire("test.site.alpha"));
+    }
+
+    #[test]
+    fn once_fires_exactly_once() {
+        let _g = scoped("test.site.once=once");
+        assert!(fire("test.site.once"));
+        for _ in 0..10 {
+            assert!(!fire("test.site.once"));
+        }
+    }
+
+    #[test]
+    fn prob_is_deterministic_and_roughly_calibrated() {
+        let run = || {
+            let _g = scoped("test.site.prob=0.3");
+            (0..1000).map(|_| fire("test.site.prob")).collect::<Vec<bool>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "per-site LCG must reproduce across installs");
+        let fired = a.iter().filter(|&&x| x).count();
+        assert!((200..400).contains(&fired), "p=0.3 fired {fired}/1000");
+    }
+
+    #[test]
+    fn sleep_mode_delays_without_firing() {
+        let _g = scoped("test.site.sleep=sleep:20");
+        let t0 = std::time::Instant::now();
+        assert!(!fire("test.site.sleep"));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn scoped_restores_previous_scoped_config() {
+        let _outer = scoped("test.site.restore=always");
+        assert!(fire("test.site.restore"));
+        // Inner install on the same thread would deadlock on the scope
+        // lock, so exercise restore through a nested install() directly.
+        install("test.site.restore=off");
+        assert!(!fire("test.site.restore"));
+        install("test.site.restore=always");
+        assert!(fire("test.site.restore"));
+    }
+}

@@ -7,6 +7,7 @@
 //! submodule carries its own unit tests.
 
 pub mod env;
+pub mod failpoint;
 pub mod fmt;
 pub mod json;
 pub mod rng;

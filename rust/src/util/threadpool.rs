@@ -23,11 +23,55 @@
 #![allow(unsafe_code)]
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A scoped pool task panicked. The payload is captured so callers can
+/// degrade — answer one request batch with an error, abort one training
+/// step — instead of the process dying on an assert. Converts into
+/// `anyhow::Error` (it is a `std::error::Error`), so kernel and trainer
+/// call sites just `?` it.
+#[derive(Debug)]
+pub struct PoolPanic {
+    payload: String,
+}
+
+impl PoolPanic {
+    pub fn payload(&self) -> &str {
+        &self.payload
+    }
+}
+
+impl std::fmt::Display for PoolPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pool task panicked: {}", self.payload)
+    }
+}
+
+impl std::error::Error for PoolPanic {}
+
+/// Extract a human-readable payload from `catch_unwind`'s error value
+/// (`panic!("...")` yields `&str` or `String`; anything else is opaque).
+fn panic_payload(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The `pool.task.panic` failpoint: injected at scoped-task entry so the
+/// chaos suite can prove a panic anywhere in a fan-out surfaces as a
+/// contained `Err`, not a process abort.
+fn maybe_inject_task_panic() {
+    if crate::util::failpoint::fire("pool.task.panic") {
+        panic!("failpoint pool.task.panic");
+    }
+}
 
 struct PoolState {
     queue: VecDeque<Job>,
@@ -123,13 +167,23 @@ impl ThreadPool {
     /// and runs queued jobs (its own tasks, or anyone else's) until its
     /// scope drains — which is what makes *nested* scope_run calls from
     /// pool workers safe to issue against the same pool.
-    pub fn scope_run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+    ///
+    /// A panicking task does not kill anything: the scope still drains
+    /// every task, and the first panic's payload comes back as
+    /// `Err(PoolPanic)` — fault containment for the batcher (one bad
+    /// batch answers ERR, the server keeps serving) and the trainer
+    /// (one bad step surfaces as a step error).
+    pub fn scope_run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) -> Result<(), PoolPanic> {
         if n == 0 {
-            return;
+            return Ok(());
         }
         if n == 1 {
-            f(0); // serial chain: zero dispatch overhead
-            return;
+            // Serial chain: zero dispatch overhead, same containment.
+            return std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                maybe_inject_task_panic();
+                f(0);
+            }))
+            .map_err(|e| PoolPanic { payload: panic_payload(e) });
         }
         // SAFETY: the borrowed closure is lifetime-erased so it can ride
         // the pool's 'static job queue. Soundness: every enqueued task
@@ -144,19 +198,18 @@ impl ThreadPool {
         for i in 0..n {
             let scope = Arc::clone(&scope);
             self.push(Box::new(move || {
-                let caught =
-                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f_static(i)));
-                if caught.is_err() {
-                    scope.panicked.store(true, Ordering::SeqCst);
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    maybe_inject_task_panic();
+                    f_static(i)
+                }));
+                if let Err(e) = caught {
+                    scope.record_panic(panic_payload(e));
                 }
                 scope.complete();
             }));
         }
         self.help_until(&scope, n);
-        assert!(
-            !scope.panicked.load(Ordering::SeqCst),
-            "scope_run: a pool task panicked"
-        );
+        scope.into_result()
     }
 
     /// Dynamic scoped task set: seed tasks may [`Spawner::spawn`] more
@@ -164,9 +217,13 @@ impl ThreadPool {
     /// contract and helping join as [`ThreadPool::scope_run`] — this is
     /// the plan scheduler's driver: ready steps are seeded, each finished
     /// step spawns the successors it released.
-    pub fn scope_dyn(&self, seed: &[usize], f: &(dyn Fn(usize, &Spawner) + Sync)) {
+    pub fn scope_dyn(
+        &self,
+        seed: &[usize],
+        f: &(dyn Fn(usize, &Spawner) + Sync),
+    ) -> Result<(), PoolPanic> {
         if seed.is_empty() {
-            return;
+            return Ok(());
         }
         // SAFETY: as in scope_run — no task outlives this frame because
         // the helping loop below only returns at `done == spawned`, and
@@ -199,10 +256,7 @@ impl ThreadPool {
                 break;
             }
         }
-        assert!(
-            !scope.sync.panicked.load(Ordering::SeqCst),
-            "scope_dyn: a pool task panicked"
-        );
+        scope.sync.into_result()
     }
 
     /// Help-run queued jobs until `scope.done == n`.
@@ -231,12 +285,14 @@ impl ThreadPool {
     }
 }
 
-/// Join-side state of a scoped fan-out: completion count + wakeup.
+/// Join-side state of a scoped fan-out: completion count + wakeup +
+/// the first panic's payload (first-panic-wins, like the interpreter's
+/// first-error-wins abort).
 #[derive(Default)]
 struct ScopeSync {
     done: Mutex<usize>,
     cv: Condvar,
-    panicked: AtomicBool,
+    panic: Mutex<Option<String>>,
 }
 
 impl ScopeSync {
@@ -247,6 +303,20 @@ impl ScopeSync {
         // Every completion wakes the joiner so it can resume helping —
         // a completed task may have spawned work the joiner should run.
         self.cv.notify_all();
+    }
+
+    fn record_panic(&self, payload: String) {
+        let mut slot = self.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    fn into_result(&self) -> Result<(), PoolPanic> {
+        match self.panic.lock().unwrap().take() {
+            Some(payload) => Err(PoolPanic { payload }),
+            None => Ok(()),
+        }
     }
 }
 
@@ -279,10 +349,12 @@ impl Spawner<'_> {
         self.pool.push(Box::new(move || {
             let pool = unsafe { &*pp.0 };
             let spawner = Spawner { pool, scope: &scope, f };
-            let caught =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task, &spawner)));
-            if caught.is_err() {
-                scope.sync.panicked.store(true, Ordering::SeqCst);
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                maybe_inject_task_panic();
+                f(task, &spawner)
+            }));
+            if let Err(e) = caught {
+                scope.sync.record_panic(panic_payload(e));
             }
             scope.sync.complete();
         }));
@@ -389,38 +461,51 @@ mod tests {
         let out: Vec<Mutex<u64>> = (0..64).map(|_| Mutex::new(0)).collect();
         pool.scope_run(64, &|i| {
             *out[i].lock().unwrap() = input[i] * 3;
-        });
+        })
+        .unwrap();
         for (i, m) in out.iter().enumerate() {
             assert_eq!(*m.lock().unwrap(), i as u64 * 3);
         }
     }
 
     #[test]
-    fn scope_run_reports_panicked_task_and_pool_survives() {
+    fn scope_run_returns_err_with_payload_and_pool_survives() {
         let pool = ThreadPool::new(2);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            pool.scope_run(8, &|i| {
+        let err = pool
+            .scope_run(8, &|i| {
                 assert!(i != 3, "boom");
-            });
-        }));
-        assert!(result.is_err(), "scope_run must report the panicked task");
+            })
+            .unwrap_err();
+        assert!(err.payload().contains("boom"), "payload captured: {err}");
+        assert!(err.to_string().contains("pool task panicked"));
         // the pool keeps working afterwards (workers are panic-isolated)
         let counter = AtomicUsize::new(0);
         pool.scope_run(4, &|_| {
             counter.fetch_add(1, Ordering::SeqCst);
-        });
+        })
+        .unwrap();
         assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn scope_run_single_task_panic_is_contained_too() {
+        // n == 1 takes the inline fast path; containment must be uniform.
+        let pool = ThreadPool::new(2);
+        let err = pool.scope_run(1, &|_| panic!("solo")).unwrap_err();
+        assert!(err.payload().contains("solo"));
+        pool.scope_run(1, &|_| {}).unwrap();
     }
 
     #[test]
     fn scope_run_zero_and_reuse() {
         let pool = ThreadPool::new(2);
-        pool.scope_run(0, &|_| panic!("must not run"));
+        pool.scope_run(0, &|_| panic!("must not run")).unwrap();
         let counter = AtomicUsize::new(0);
         for _ in 0..3 {
             pool.scope_run(10, &|_| {
                 counter.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         assert_eq!(counter.load(Ordering::SeqCst), 30);
     }
@@ -437,8 +522,10 @@ mod tests {
         pool.scope_run(8, &|_| {
             pool.scope_run(4, &|_| {
                 counter.fetch_add(1, Ordering::SeqCst);
-            });
-        });
+            })
+            .unwrap();
+        })
+        .unwrap();
         assert_eq!(counter.load(Ordering::SeqCst), 32);
     }
 
@@ -453,30 +540,45 @@ mod tests {
             if task % 100 < 24 {
                 sp.spawn(task + 1);
             }
-        });
+        })
+        .unwrap();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
     }
 
     #[test]
-    fn scope_dyn_reports_panicked_task() {
+    fn scope_dyn_returns_err_with_payload() {
         let pool = ThreadPool::new(2);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            pool.scope_dyn(&[0, 1, 2, 3], &|task, _| {
+        let err = pool
+            .scope_dyn(&[0, 1, 2, 3], &|task, _| {
                 assert!(task != 2, "boom");
-            });
-        }));
-        assert!(result.is_err(), "scope_dyn must report the panicked task");
+            })
+            .unwrap_err();
+        assert!(err.payload().contains("boom"), "payload captured: {err}");
         let counter = AtomicUsize::new(0);
         pool.scope_dyn(&[0], &|_, _| {
             counter.fetch_add(1, Ordering::SeqCst);
-        });
+        })
+        .unwrap();
         assert_eq!(counter.load(Ordering::SeqCst), 1);
     }
 
     #[test]
     fn scope_dyn_empty_seed_is_a_noop() {
         let pool = ThreadPool::new(2);
-        pool.scope_dyn(&[], &|_, _| panic!("must not run"));
+        pool.scope_dyn(&[], &|_, _| panic!("must not run")).unwrap();
+    }
+
+    #[test]
+    fn pool_task_panic_failpoint_surfaces_as_err_then_recovers() {
+        let pool = ThreadPool::new(2);
+        {
+            let _fp = crate::util::failpoint::scoped("pool.task.panic=once");
+            let err = pool.scope_run(4, &|_| {}).unwrap_err();
+            assert!(err.payload().contains("pool.task.panic"));
+            // `once` consumed: the very next fan-out is clean.
+            pool.scope_run(4, &|_| {}).unwrap();
+        }
+        pool.scope_run(4, &|_| {}).unwrap();
     }
 
     #[test]
@@ -504,9 +606,12 @@ mod tests {
                 // ...whose kernels row-block on the pool again.
                 pool.scope_run(2, &|_| {
                     counter.fetch_add(1, Ordering::SeqCst);
-                });
-            });
-        });
+                })
+                .unwrap();
+            })
+            .unwrap();
+        })
+        .unwrap();
         assert_eq!(counter.load(Ordering::SeqCst), 8 * 4 * 2);
         assert_eq!(pool.threads(), workers_before, "no oversubscription");
         // Fire-and-forget dispatches (the batcher's execution path)

@@ -1,0 +1,300 @@
+//! Chaos suite: drives the failpoint-instrumented fault seams end to
+//! end — crash-safe checkpointing, paged-store read errors, server
+//! overload/timeout shedding, and pool/dispatch panic containment.
+//!
+//! Every test holds a `failpoint::scoped` guard for its whole body (even
+//! phases that want everything disarmed, via `scoped("")`). The guards
+//! serialize on a process-wide lock, so tests in this file never observe
+//! each other's armed sites — crucial, because the failpoint registry is
+//! process-global and cargo runs test threads concurrently.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use polyglot_gpu::baselines::model_ref::ModelParams;
+use polyglot_gpu::config::{Backend, Config};
+use polyglot_gpu::coordinator::{
+    checkpoint, prepare_corpus, run_training, upload_params, ModelSize, RunOptions, Trainer,
+};
+use polyglot_gpu::data::Batch;
+use polyglot_gpu::embeddings::EmbeddingStore;
+use polyglot_gpu::runtime::{lit_i32, Runtime};
+use polyglot_gpu::server::Server;
+use polyglot_gpu::text::Vocab;
+use polyglot_gpu::util::failpoint;
+use polyglot_gpu::util::threadpool::ThreadPool;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pg-chaos-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn tiny_vocab() -> Vocab {
+    let sents: Vec<Vec<String>> =
+        vec![["aa", "bb", "cc", "dd"].iter().map(|s| s.to_string()).collect()];
+    Vocab::build(sents.iter().map(|s| s.as_slice()), 1, 100)
+}
+
+fn host_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.training.backend = Backend::Host;
+    cfg.training.log_every = 0;
+    cfg.data.languages = 1;
+    cfg.data.tokens_per_language = 6_000;
+    cfg
+}
+
+/// One SCORE round trip on a fresh connection; returns the raw reply line.
+fn score_once(addr: &str) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "SCORE 1 2 3 4 5").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+// ---------------------------------------------------------------- ckpt
+
+#[test]
+fn armed_partial_write_never_corrupts_the_live_checkpoint() {
+    let dir = tmp_dir("partial");
+    let path = dir.join("model.pgck");
+    let p5 = ModelParams::init(24, 4, 3, 4, 5);
+    let p9 = ModelParams::init(24, 4, 3, 4, 9);
+
+    // `once`: the first save tears mid-tensor (tmp file only — the
+    // rename never happens), the retry under the same guard succeeds.
+    let _g = failpoint::scoped("ckpt.write.partial=once");
+    checkpoint::save_at_step(&path, &p5, 5).unwrap_err();
+    assert!(!path.exists(), "torn tmp write must not produce the final file");
+
+    checkpoint::save_at_step(&path, &p5, 5).unwrap();
+    let (loaded, step) = checkpoint::load_with_step(&path).unwrap();
+    assert_eq!(step, 5);
+    assert_eq!(loaded.e, p5.e);
+
+    // A later torn overwrite leaves the previous image fully intact.
+    let _g2 = {
+        drop(_g);
+        failpoint::scoped("ckpt.write.partial=1")
+    };
+    checkpoint::save_at_step(&path, &p9, 9).unwrap_err();
+    let (loaded, step) = checkpoint::load_with_step(&path).unwrap();
+    assert_eq!(step, 5, "failed overwrite must keep the old checkpoint");
+    assert_eq!(loaded.e, p5.e);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn training_resumes_from_newest_valid_checkpoint_skipping_torn_file() {
+    let _g = failpoint::scoped(""); // isolate from other tests' arming
+    let dir = tmp_dir("resume");
+    let cfg = host_cfg();
+    let corpus = prepare_corpus(&cfg, cfg.model.vocab).unwrap();
+
+    let opts = RunOptions {
+        steps: 10,
+        quiet: true,
+        checkpoint_dir: dir.to_string_lossy().into_owned(),
+        checkpoint_every: 4,
+        ..RunOptions::default()
+    };
+    let (_tr, report) = run_training(None, &cfg, &corpus, &opts).unwrap();
+    assert_eq!(report.steps, 10);
+    for s in [4u32, 8, 10] {
+        assert!(dir.join(format!("step-{s:08}.pgck")).exists(), "missing step-{s}");
+    }
+
+    // Tear the newest file in half — a crash that somehow survived the
+    // rename. Resume must reject it by checksum and fall back to step 8.
+    let newest = dir.join("step-00000010.pgck");
+    let bytes = std::fs::read(&newest).unwrap();
+    std::fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+
+    let opts = RunOptions { steps: 14, resume: true, ..opts };
+    let (_tr, report) = run_training(None, &cfg, &corpus, &opts).unwrap();
+    assert_eq!(report.steps, 6, "resume from step 8 runs exactly 6 of 14 steps");
+
+    let (path, _params, step) = checkpoint::latest_valid(&dir).unwrap().unwrap();
+    assert_eq!(step, 14);
+    assert!(path.ends_with("step-00000014.pgck"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --------------------------------------------------------------- store
+
+#[test]
+fn paged_store_eio_darkens_the_tail_but_the_hot_head_keeps_serving() {
+    let dir = tmp_dir("eio");
+    let path = dir.join("model.pgck");
+    let p = ModelParams::init(40, 8, 3, 4, 17);
+    checkpoint::save_at_step(&path, &p, 3).unwrap();
+
+    let mut store = EmbeddingStore::paged(tiny_vocab(), &path).unwrap();
+    store.warm(4).unwrap();
+
+    let _g = failpoint::scoped("store.pread.eio=once");
+    // Cold tail row: the injected EIO degrades this one read to Err.
+    let err = store.vector_by_id(39).unwrap_err();
+    assert!(format!("{err:#}").contains("paging embedding row 39"), "{err:#}");
+    // Hot head rows never touch the backing file — still served.
+    assert_eq!(store.vector_by_id(2).unwrap(), p.e[2 * 8..3 * 8]);
+    // `once` consumed: the tail read recovers.
+    assert_eq!(store.vector_by_id(39).unwrap(), p.e[39 * 8..40 * 8]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------- pool
+
+#[test]
+fn pool_task_panic_surfaces_as_err_and_the_pool_survives() {
+    let pool = ThreadPool::new(4);
+    let _g = failpoint::scoped("pool.task.panic=once");
+    let ran = AtomicUsize::new(0);
+    let err = pool
+        .scope_run(8, &|_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap_err();
+    assert!(err.payload().contains("pool.task.panic"), "{err}");
+    // The scope still drained: exactly the injected task died at entry.
+    assert_eq!(ran.load(Ordering::Relaxed), 7);
+
+    let ran = AtomicUsize::new(0);
+    pool.scope_run(8, &|_| {
+        ran.fetch_add(1, Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(ran.load(Ordering::Relaxed), 8, "pool must be fully live after a panic");
+}
+
+#[test]
+fn training_step_contains_pool_panic_and_continues() {
+    let cfg = host_cfg();
+    let mut tr = Trainer::new(None, &cfg, ModelSize::Main).unwrap();
+    let batch = Batch { windows: vec![5; 16 * 5], corrupt: vec![9; 16], batch: 16, window: 5 };
+
+    let _g = failpoint::scoped("pool.task.panic=once");
+    let err = tr.step(&batch).unwrap_err();
+    assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+    // One bad step, not a dead trainer: the next step runs clean.
+    let loss = tr.step(&batch).unwrap();
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn interp_execution_contains_always_armed_pool_panics() {
+    let rt = Runtime::new(&PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap();
+    if rt.backend_name() != "interp" {
+        eprintln!("skipping: {} backend does not run on the crate pool", rt.backend_name());
+        return;
+    }
+    let exe = rt.load("forward_b32").unwrap();
+    let params = upload_params(&ModelParams::init(20480, 64, 5, 32, 7)).unwrap();
+    let windows = lit_i32(&vec![2i32; 32 * 5], &[32, 5]).unwrap();
+    let inputs: Vec<&xla::Literal> = params.iter().chain([&windows]).collect();
+
+    let g = failpoint::scoped("pool.task.panic=always");
+    // Containment is the property under test: with every pool task
+    // panicking, execution must return (Err when the plan fanned out,
+    // Ok if this plan happens to run serially) — never abort.
+    if let Err(e) = exe.run(&inputs) {
+        assert!(format!("{e:#}").contains("panic"), "{e:#}");
+    }
+    drop(g);
+    exe.run(&inputs).expect("disarmed run must succeed on the same executable");
+}
+
+// -------------------------------------------------------------- server
+
+fn overload_server(queue_depth: usize, timeout_ms: u64) -> Server {
+    let mut cfg = Config::default();
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.queue_depth = queue_depth;
+    cfg.server.timeout_ms = timeout_ms;
+    cfg.server.hot_rows = 8;
+    // No artifacts at this path: the executor falls back to the host
+    // scorer, which answers per-request (no coalescing) — the simplest
+    // deterministic substrate for queue-behavior tests.
+    let params = ModelParams::init(16, 4, 5, 4, 7);
+    Server::start(&cfg.server, PathBuf::from("/nonexistent-artifacts"), tiny_vocab(), params)
+        .unwrap()
+}
+
+#[test]
+fn server_sheds_overloaded_requests_and_keeps_serving() {
+    // Dispatch stalls 150ms per batch; queue holds one request. Eight
+    // simultaneous clients: the in-flight + queued ones get scores,
+    // the rest are shed with an immediate OVERLOADED.
+    let _g = failpoint::scoped("batcher.dispatch.sleep=sleep:150");
+    let server = overload_server(1, 0);
+    let addr = server.addr.clone();
+
+    let barrier = std::sync::Arc::new(Barrier::new(8));
+    let replies: Vec<String> = (0..8)
+        .map(|_| {
+            let addr = addr.clone();
+            let barrier = std::sync::Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                score_once(&addr)
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|t| t.join().unwrap())
+        .collect();
+
+    let scored = replies.iter().filter(|r| r.starts_with("SCORE")).count();
+    let shed = replies.iter().filter(|r| r.as_str() == "OVERLOADED").count();
+    assert_eq!(scored + shed, 8, "unexpected replies: {replies:?}");
+    assert!(scored >= 1, "someone must still be served: {replies:?}");
+    assert!(shed >= 1, "a full queue must shed: {replies:?}");
+    assert!(server.stats().shed.load(Ordering::Relaxed) >= shed as u64);
+    server.stop();
+}
+
+#[test]
+fn server_times_out_requests_that_went_stale_in_the_queue() {
+    let _g = failpoint::scoped("batcher.dispatch.sleep=sleep:150");
+    let server = overload_server(32, 30);
+    let addr = server.addr.clone();
+
+    // A is dequeued immediately (age ~0) and served after the 150ms
+    // stall; B enqueues behind the stall, goes stale (>30ms) in the
+    // queue, and must answer TIMEOUT without ever being executed.
+    let stream_a = TcpStream::connect(&addr).unwrap();
+    let mut writer_a = stream_a.try_clone().unwrap();
+    let mut reader_a = BufReader::new(stream_a);
+    writeln!(writer_a, "SCORE 1 2 3 4 5").unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(30));
+
+    let reply_b = score_once(&addr);
+    assert_eq!(reply_b, "TIMEOUT");
+
+    let mut line = String::new();
+    reader_a.read_line(&mut line).unwrap();
+    assert!(line.starts_with("SCORE "), "{line}");
+    assert!(server.stats().timeouts.load(Ordering::Relaxed) >= 1);
+    server.stop();
+}
+
+#[test]
+fn server_survives_a_dispatch_panic_and_counts_it() {
+    let _g = failpoint::scoped("batcher.dispatch.panic=once");
+    let server = overload_server(32, 0);
+    let addr = server.addr.clone();
+
+    let first = score_once(&addr);
+    assert!(first.starts_with("ERR") && first.contains("dispatch failed"), "{first}");
+    let second = score_once(&addr);
+    assert!(second.starts_with("SCORE "), "panicked batch must not kill the loop: {second}");
+    assert_eq!(server.stats().dispatch_errors.load(Ordering::Relaxed), 1);
+    server.stop();
+}

@@ -54,7 +54,7 @@ fn sharded_scatter_bitwise_equals_serial_across_threads() {
         let mut serial = w0.clone();
         let mut sharded = w0;
         scatter_add_serial(&mut serial, 16, &idx, &y);
-        eng.scatter_add(&mut sharded, 16, &idx, &y);
+        eng.scatter_add(&mut sharded, 16, &idx, &y).unwrap();
         assert_eq!(
             serial, sharded,
             "threads={threads}: sharded scatter not bitwise-identical"
@@ -76,7 +76,7 @@ fn property_sharded_equals_serial_on_random_shapes() {
             let mut serial = w0.clone();
             let mut sharded = w0;
             scatter_add_serial(&mut serial, d, &idx, &y);
-            engine(8).scatter_add(&mut sharded, d, &idx, &y);
+            engine(8).scatter_add(&mut sharded, d, &idx, &y).unwrap();
             serial == sharded
         },
     );
@@ -132,7 +132,7 @@ fn accumulated_gradients_match_serial_within_1e6() {
                 model.grads_scaled(&p, &windows[lo * 5..hi * 5], &corrupt[lo..hi], scale);
             partials.push(g);
         }
-        let merged = tree_reduce(&pool, partials, merge_grads).unwrap();
+        let merged = tree_reduce(&pool, partials, merge_grads).unwrap().unwrap();
 
         for (x, y) in merged.w1.iter().zip(&g_serial.w1) {
             assert!((x - y).abs() < 1e-6, "threads={threads}: w1 {x} vs {y}");

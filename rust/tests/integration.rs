@@ -117,7 +117,7 @@ fn interpreter_scatter_bitwise_equals_host_baselines() {
         let mut serial = w.clone();
         polyglot_gpu::baselines::scatter::scatter_add_serial(&mut serial, d, &idx, &y);
         let mut shard = w.clone();
-        sharded.scatter_add(&mut shard, d, &idx, &y);
+        sharded.scatter_add(&mut shard, d, &idx, &y).unwrap();
         assert!(bitwise_eq(&serial, &shard), "sharded vs serial diverge (r={rows})");
 
         for name in [format!("scatter_native_r{rows}"), format!("scatter_rows_r{rows}")] {

@@ -249,7 +249,7 @@ fn embedding_store_matches_trained_params() {
     let store = EmbeddingStore::from_params(corpus.vocab.clone(), &p).unwrap();
     let (_, word, _) = corpus.vocab.entries().next().unwrap();
     let id = corpus.vocab.id(word) as usize;
-    assert_eq!(store.vector(word), &p.e[id * 64..(id + 1) * 64]);
+    assert_eq!(store.vector(word).unwrap(), &p.e[id * 64..(id + 1) * 64]);
 }
 
 #[test]
